@@ -1,0 +1,73 @@
+//! Adaptive vs fixed speculative parameters (paper Table 4 / Fig. 6 in
+//! miniature): run the same tasks with fixed-K TS-DP and with the
+//! PPO-trained temporal scheduler, and compare success / NFE /
+//! acceptance.
+//!
+//! ```bash
+//! make artifacts scheduler && cargo run --release --example adaptive_scheduler
+//! ```
+
+use ts_dp::baselines::TsDp;
+use ts_dp::config::{DemoStyle, SpecParams, Task};
+use ts_dp::envs::make_env;
+use ts_dp::harness::episode::run_episode;
+use ts_dp::runtime::ModelRuntime;
+use ts_dp::scheduler::{SchedulerPolicy, ServingHook};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    let runtime = ModelRuntime::load(&artifacts)?;
+    let policy = SchedulerPolicy::load(&artifacts.join("scheduler_policy.json"))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `ts-dp train-scheduler` first"))?;
+
+    let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    let episodes = 3u64;
+    println!(
+        "{:<11} {:<9} {:>9} {:>9} {:>12} {:>9}",
+        "task", "config", "success", "nfe/seg", "acceptance", "drafts"
+    );
+    for task in tasks {
+        for adaptive in [false, true] {
+            let mut successes = 0;
+            let mut nfe = 0.0;
+            let mut acc = 0.0;
+            let mut drafts = 0usize;
+            let mut segs = 0usize;
+            for seed in 0..episodes {
+                let mut env = make_env(task, DemoStyle::Ph);
+                let mut generator = TsDp::new(SpecParams::fixed_default());
+                let r = if adaptive {
+                    let mut hook = ServingHook::new(policy.clone());
+                    run_episode(
+                        &runtime,
+                        env.as_mut(),
+                        &mut generator,
+                        DemoStyle::Ph,
+                        seed,
+                        Some(&mut hook),
+                    )?
+                } else {
+                    run_episode(&runtime, env.as_mut(), &mut generator, DemoStyle::Ph, seed, None)?
+                };
+                successes += r.success as u32;
+                nfe += r.nfe;
+                segs += r.segments.len();
+                acc += r.acceptance_rate();
+                drafts += r.drafts();
+            }
+            println!(
+                "{:<11} {:<9} {:>7}/{} {:>9.1} {:>11.1}% {:>9}",
+                task.name(),
+                if adaptive { "adaptive" } else { "fixed" },
+                successes,
+                episodes,
+                nfe / segs.max(1) as f64,
+                acc / episodes as f64 * 100.0,
+                drafts / episodes as usize,
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT artifacts, run one TS-DP episode on
+//! Robomimic-Lift, print the paper's headline metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ts_dp::baselines::make_generator;
+use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::envs::make_env;
+use ts_dp::harness::episode::run_episode;
+use ts_dp::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    println!("loading artifacts from {} ...", artifacts.display());
+    let runtime = ModelRuntime::load(&artifacts)?;
+
+    let mut env = make_env(Task::Lift, DemoStyle::Ph);
+    let mut generator = make_generator(Method::TsDp);
+    let result =
+        run_episode(&runtime, env.as_mut(), generator.as_mut(), DemoStyle::Ph, 0, None)?;
+
+    println!("\n=== TS-DP on Robomimic-Lift (PH) ===");
+    println!("success:            {}", result.success);
+    println!("env steps:          {}", result.steps);
+    println!("segments generated: {}", result.segments.len());
+    println!("NFE per segment:    {:.1} (vanilla DP = 100)", result.nfe_percent());
+    println!("speedup:            {:.2}x", 100.0 / result.nfe_percent().max(1e-9));
+    println!(
+        "drafts accepted:    {}/{} ({:.1}%)",
+        result.accepted(),
+        result.drafts(),
+        result.acceptance_rate() * 100.0
+    );
+    println!("segment latency:    {:.4}s", result.latency_secs());
+    println!("control frequency:  {:.2} Hz", result.frequency_hz());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! End-to-end serving driver (the repository's E2E validation run, see
+//! EXPERIMENTS.md): load the real trained model, serve batched action-
+//! segment requests from concurrent env sessions across the Robomimic
+//! tasks, and report latency / throughput / success — comparing vanilla
+//! DP serving against TS-DP serving.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_robomimic
+//! ```
+
+use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::server::{serve, ServeOptions};
+use ts_dp::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    let runtime = ModelRuntime::load(&artifacts)?;
+    let scheduler = ts_dp::scheduler::SchedulerPolicy::load(
+        &artifacts.join("scheduler_policy.json"),
+    )
+    .ok();
+    if scheduler.is_some() {
+        println!("(using trained scheduler policy)");
+    }
+
+    let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    for method in [Method::Vanilla, Method::TsDp] {
+        println!("\n=== serving with {} ===", method.label());
+        let mut total_segments = 0u64;
+        let mut total_secs = 0.0f64;
+        for task in tasks {
+            let opts = ServeOptions {
+                task,
+                style: DemoStyle::Ph,
+                method,
+                sessions: 2,
+                episodes_per_session: 1,
+                queue_capacity: 32,
+                policy: Policy::Fair,
+                scheduler: scheduler.clone(),
+                seed: 7,
+            };
+            let t0 = std::time::Instant::now();
+            let report = serve(&runtime, &opts)?;
+            let secs = t0.elapsed().as_secs_f64();
+            total_segments += report.metrics.requests;
+            total_secs += secs;
+            println!(
+                "{:<10} sessions=2 segments={:>4} success={:>3.0}% \
+                 p50={:.3}s p95={:.3}s nfe/seg={:.1} accept={:.1}% wall={:.1}s",
+                task.name(),
+                report.metrics.requests,
+                report.success_rate() * 100.0,
+                report.metrics.latency_percentile(0.5),
+                report.metrics.latency_percentile(0.95),
+                report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+                report.metrics.acceptance_rate() * 100.0,
+                secs,
+            );
+        }
+        println!(
+            "TOTAL: {:.2} segments/s over {} segments",
+            total_segments as f64 / total_secs,
+            total_segments
+        );
+    }
+    Ok(())
+}

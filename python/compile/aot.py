@@ -1,0 +1,288 @@
+"""AOT export: lower the trained models to HLO text for the Rust runtime.
+
+Python runs ONCE here (`make artifacts`); the Rust request path only ever
+touches the emitted `artifacts/*.hlo.txt`.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported executables (shapes in artifacts/manifest.json):
+  encoder.hlo.txt            obs[32]                      -> (cond[64],)
+  target_step.hlo.txt        x[8,8], t[], cond[64]        -> (eps[8,8],)
+  target_verify.hlo.txt      xs[17,8,8], ts[17], cond[64] -> (eps[17,8,8],)
+  drafter_step.hlo.txt       x[8,8], t[], cond[64]        -> (eps[8,8],)
+  drafter_rollout{K}.hlo.txt x[8,8], t0[], cond[64], noise[K,8,8]
+                                         -> (xs[K,8,8], means[K,8,8])
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import data as data_mod
+from compile import model, train
+from compile.config import (
+    ACT_DIM,
+    DIFFUSION_STEPS,
+    DRAFTER_BLOCKS,
+    EMBED_DIM,
+    HORIZON,
+    K_MAX,
+    OBS_DIM,
+    ROLLOUT_KS,
+    TARGET_BLOCKS,
+    VERIFY_BATCH,
+)
+from compile.ddpm import GOLDEN_INDICES, Schedule
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the model weights are baked into the
+    # module as constants; the default text dump elides them as `{...}`,
+    # which the Rust-side text parser would reject (or worse, mis-read).
+    return comp.as_hlo_text(True)
+
+
+def export(fn, example_args, out_path: Path) -> int:
+    """Lower `fn` at the example shapes and write HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    return len(text)
+
+
+def make_rollout_fn(drafter, sched: Schedule, k_steps: int):
+    """Fused drafter rollout: K serial draft steps in one executable.
+
+    Starting from latent `x` at (float) timestep `t0`, runs the drafter +
+    DDPM scheduler K times with the supplied noise draws, recording each
+    draft sample and its posterior mean (needed by the verification
+    stage, paper §3.2 "retain all draft-model outputs and scheduler
+    intermediates").  Timesteps below 0 are clamped (the Rust engine
+    never asks for them; clamping keeps the executable total).
+    """
+
+    def rollout(x, t0, cond, noise):
+        def body(carry, inp):
+            x_cur, t_cur = carry
+            xi = inp
+            t_clamped = jnp.maximum(t_cur, 0.0)
+            t_idx = t_clamped.astype(jnp.int32)
+            eps = model.denoise(drafter, x_cur, t_clamped, cond)
+            x0 = sched.predict_x0(x_cur, eps, t_idx)
+            mean = sched.posterior_mean(x_cur, x0, t_idx)
+            x_next = mean + sched.sigma(t_idx) * xi
+            return (x_next, t_cur - 1.0), (x_next, mean)
+
+        (_, _), (xs, means) = jax.lax.scan(body, (x, t0), noise, length=k_steps)
+        return xs, means
+
+    return rollout
+
+
+def export_all(enc, tgt, drafter, out_dir: Path) -> dict:
+    """Export every executable; returns the manifest fragment.
+
+    Kernel-backend note (EXPERIMENTS.md §Perf): the single-step modules
+    (encoder, target_step, drafter_step) lower through the Pallas L1
+    kernels. The *batched* verify and the scanned rollouts lower through
+    the test-identical jnp reference kernels instead — vmap/scan over
+    interpret-mode pallas_call lowers to a serial loop in HLO, which made
+    the batched verification slower than 17 serial steps (16.2ms vs
+    11.4ms on this host). The jnp path vmaps into single batched GEMMs.
+    """
+    sched = Schedule()
+    x_spec = jax.ShapeDtypeStruct((HORIZON, ACT_DIM), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    cond_spec = jax.ShapeDtypeStruct((EMBED_DIM,), jnp.float32)
+    obs_spec = jax.ShapeDtypeStruct((OBS_DIM,), jnp.float32)
+    xs_spec = jax.ShapeDtypeStruct((VERIFY_BATCH, HORIZON, ACT_DIM), jnp.float32)
+    ts_spec = jax.ShapeDtypeStruct((VERIFY_BATCH,), jnp.float32)
+
+    artifacts = {}
+
+    def record(name, nbytes, inputs, outputs):
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "bytes": nbytes,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+
+    t0 = time.time()
+    n = export(lambda o: (model.encode(enc, o),), [obs_spec], out_dir / "encoder.hlo.txt")
+    record("encoder", n, [["obs", [OBS_DIM]]], [["cond", [EMBED_DIM]]])
+
+    n = export(
+        lambda x, t, c: (model.denoise(tgt, x, t, c),),
+        [x_spec, t_spec, cond_spec],
+        out_dir / "target_step.hlo.txt",
+    )
+    record(
+        "target_step",
+        n,
+        [["x", [HORIZON, ACT_DIM]], ["t", []], ["cond", [EMBED_DIM]]],
+        [["eps", [HORIZON, ACT_DIM]]],
+    )
+
+    model.use_pallas(False)  # batched export: jnp backend (see docstring)
+    n = export(
+        lambda xs, ts, c: (model.denoise_batch(tgt, xs, ts, c),),
+        [xs_spec, ts_spec, cond_spec],
+        out_dir / "target_verify.hlo.txt",
+    )
+    model.use_pallas(True)
+    record(
+        "target_verify",
+        n,
+        [
+            ["xs", [VERIFY_BATCH, HORIZON, ACT_DIM]],
+            ["ts", [VERIFY_BATCH]],
+            ["cond", [EMBED_DIM]],
+        ],
+        [["eps", [VERIFY_BATCH, HORIZON, ACT_DIM]]],
+    )
+
+    n = export(
+        lambda x, t, c: (model.denoise(drafter, x, t, c),),
+        [x_spec, t_spec, cond_spec],
+        out_dir / "drafter_step.hlo.txt",
+    )
+    record(
+        "drafter_step",
+        n,
+        [["x", [HORIZON, ACT_DIM]], ["t", []], ["cond", [EMBED_DIM]]],
+        [["eps", [HORIZON, ACT_DIM]]],
+    )
+
+    model.use_pallas(False)  # scanned rollouts: jnp backend (see docstring)
+    for k in ROLLOUT_KS:
+        noise_spec = jax.ShapeDtypeStruct((k, HORIZON, ACT_DIM), jnp.float32)
+        fn = make_rollout_fn(drafter, sched, k)
+        n = export(
+            fn,
+            [x_spec, t_spec, cond_spec, noise_spec],
+            out_dir / f"drafter_rollout{k}.hlo.txt",
+        )
+        record(
+            f"drafter_rollout{k}",
+            n,
+            [
+                ["x", [HORIZON, ACT_DIM]],
+                ["t0", []],
+                ["cond", [EMBED_DIM]],
+                ["noise", [k, HORIZON, ACT_DIM]],
+            ],
+            [["xs", [k, HORIZON, ACT_DIM]], ["means", [k, HORIZON, ACT_DIM]]],
+        )
+    model.use_pallas(True)
+
+    print(f"exported {len(artifacts)} HLO modules in {time.time()-t0:.1f}s")
+    return artifacts
+
+
+def write_golden_io(enc, tgt, drafter, out_dir: Path):
+    """Golden input/output vectors for the Rust runtime parity test.
+
+    Deterministic inputs -> expected outputs of each executable, so
+    `rust/tests/runtime_integration.rs` can assert that the compiled HLO
+    reproduces the JAX numerics through the PJRT C API.
+    """
+    obs = jnp.sin(jnp.arange(OBS_DIM, dtype=jnp.float32) * 0.37)
+    cond = model.encode(enc, obs)
+    x = jnp.cos(jnp.arange(HORIZON * ACT_DIM, dtype=jnp.float32) * 0.13).reshape(
+        HORIZON, ACT_DIM
+    )
+    t = 42.0
+    eps_t = model.denoise(tgt, x, t, cond)
+    eps_d = model.denoise(drafter, x, t, cond)
+    golden = {
+        "obs": [float(v) for v in obs],
+        "cond": [float(v) for v in cond],
+        "x": [float(v) for v in jnp.ravel(x)],
+        "t": t,
+        "eps_target": [float(v) for v in jnp.ravel(eps_t)],
+        "eps_drafter": [float(v) for v in jnp.ravel(eps_d)],
+    }
+    (out_dir / "golden_io.json").write_text(json.dumps(golden))
+
+
+def write_ddpm_golden(out_dir: Path):
+    """Schedule golden values for the Rust parity test."""
+    s = Schedule()
+    golden = {
+        "indices": list(GOLDEN_INDICES),
+        "betas": [float(s.betas[i]) for i in GOLDEN_INDICES],
+        "alpha_bars": [float(s.alpha_bars[i]) for i in GOLDEN_INDICES],
+        "sigmas": [float(s.sigmas[i]) for i in GOLDEN_INDICES],
+    }
+    (out_dir / "ddpm_golden.json").write_text(json.dumps(golden, indent=2))
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--demos", default=None, help="demo dir (default <out>/demos)")
+    p.add_argument("--steps", type=int, default=3000, help="training steps per stage")
+    p.add_argument("--batch", type=int, default=256)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--retrain", action="store_true", help="ignore cached weights")
+    args = p.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    demo_dir = Path(args.demos) if args.demos else out_dir / "demos"
+    weights_path = out_dir / "weights.npz"
+
+    history = {"target": [], "drafter": []}
+    if weights_path.exists() and not args.retrain:
+        print(f"loading cached weights from {weights_path}")
+        enc, tgt, drafter = train.load_weights(weights_path)
+    else:
+        print(f"training from demos at {demo_dir}")
+        obs, act = data_mod.load_all(demo_dir)
+        print(f"corpus: {obs.shape[0]} windows")
+        enc, tgt, history["target"] = train.train_target(
+            obs, act, seed=args.seed, steps=args.steps, batch=args.batch
+        )
+        drafter, history["drafter"] = train.distill_drafter(
+            enc, tgt, obs, act, seed=args.seed, steps=args.steps, batch=args.batch
+        )
+        train.save_weights(weights_path, enc, tgt, drafter)
+
+    artifacts = export_all(enc, tgt, drafter, out_dir)
+    write_ddpm_golden(out_dir)
+    write_golden_io(enc, tgt, drafter, out_dir)
+
+    manifest = {
+        "obs_dim": OBS_DIM,
+        "act_dim": ACT_DIM,
+        "horizon": HORIZON,
+        "embed_dim": EMBED_DIM,
+        "diffusion_steps": DIFFUSION_STEPS,
+        "k_max": K_MAX,
+        "verify_batch": VERIFY_BATCH,
+        "target_blocks": TARGET_BLOCKS,
+        "drafter_blocks": DRAFTER_BLOCKS,
+        "rollout_ks": list(ROLLOUT_KS),
+        "train_loss": history,
+        "artifacts": artifacts,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared shape constants for the compile pipeline.
+
+These mirror `rust/src/config/mod.rs`; the Rust runtime cross-checks them
+against `artifacts/manifest.json` when loading, so a drift fails loudly.
+"""
+
+# Observation vector length fed to the encoder (task one-hot + style flag
+# + arm state + task features, padded).
+OBS_DIM = 32
+# Per-step action dimensionality (padded).
+ACT_DIM = 8
+# Action-segment horizon predicted per denoising episode.
+HORIZON = 8
+# Observation-embedding width produced by the encoder.
+EMBED_DIM = 64
+# Number of DDPM denoising steps of the base policy.
+DIFFUSION_STEPS = 100
+# Maximum draft horizon K per speculative round.
+K_MAX = 16
+# Batch of the verification executable (bootstrap + K_MAX drafts).
+VERIFY_BATCH = K_MAX + 1
+# Transformer depth of the target denoiser / the drafter.
+TARGET_BLOCKS = 8
+DRAFTER_BLOCKS = 1
+# Attention heads (EMBED_DIM must divide evenly).
+NUM_HEADS = 4
+# Hidden width of the per-block MLP.
+MLP_HIDDEN = 128
+# Fused drafter-rollout artifact variants exported by aot.py.
+ROLLOUT_KS = (4, 8, 16)

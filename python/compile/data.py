@@ -1,0 +1,62 @@
+"""Load the Rust-generated demonstration datasets.
+
+The Rust demo generator (`ts-dp gen-demos`) writes `<stem>.json` metadata
+plus `<stem>.bin` row-major little-endian f32 payloads — trivially
+readable with numpy.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from compile.config import ACT_DIM, HORIZON, OBS_DIM
+
+TASKS = (
+    "lift",
+    "can",
+    "square",
+    "transport",
+    "tool_hang",
+    "push_t",
+    "block_push",
+    "kitchen",
+)
+STYLES = ("ph", "mh")
+
+
+def load_tensor(stem: Path) -> np.ndarray:
+    """Read one Rust tensor file pair."""
+    meta = json.loads(stem.with_suffix(".json").read_text())
+    if meta["dtype"] != "f32":
+        raise ValueError(f"unsupported dtype {meta['dtype']} at {stem}")
+    data = np.fromfile(stem.with_suffix(".bin"), dtype="<f4")
+    return data.reshape(meta["shape"])
+
+
+def load_dataset(demo_dir: Path, task: str, style: str):
+    """(obs[N, OBS_DIM], act[N, HORIZON, ACT_DIM]) for one dataset."""
+    obs = load_tensor(demo_dir / f"{task}_{style}_obs")
+    act = load_tensor(demo_dir / f"{task}_{style}_act")
+    assert obs.shape[1] == OBS_DIM, obs.shape
+    assert act.shape[1:] == (HORIZON, ACT_DIM), act.shape
+    assert obs.shape[0] == act.shape[0]
+    return obs, act
+
+
+def load_all(demo_dir: Path):
+    """Pool every (task, style) dataset into one training corpus.
+
+    The paper trains per-task DPs; we train a single multi-task model
+    conditioned on the task one-hot + style flag baked into the
+    observation vector (DESIGN.md §2) so a single artifact set serves all
+    benchmarks.
+    """
+    demo_dir = Path(demo_dir)
+    obs_all, act_all = [], []
+    for task in TASKS:
+        for style in STYLES:
+            obs, act = load_dataset(demo_dir, task, style)
+            obs_all.append(obs)
+            act_all.append(act)
+    return np.concatenate(obs_all), np.concatenate(act_all)

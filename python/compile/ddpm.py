@@ -1,0 +1,106 @@
+"""DDPM cosine schedule and posterior, the JAX twin of
+`rust/src/diffusion/schedule.rs`.
+
+Both sides are checked against the same golden values
+(`python/tests/test_ddpm.py` and `rust/tests/ddpm_parity.rs`), because the
+Rust request path recomputes posterior means/sigmas from the ε outputs of
+the AOT executables and any drift would silently corrupt the
+Metropolis–Hastings acceptance test.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.config import DIFFUSION_STEPS
+
+# Clip range for the predicted clean sample (Diffusion Policy's
+# clip_sample=True with actions normalized to [-1, 1]).
+CLIP = 1.0
+
+
+def cosine_betas(n: int = DIFFUSION_STEPS) -> np.ndarray:
+    """squaredcos_cap_v2 beta schedule (float64 accumulation, f32 out)."""
+    def alpha_bar(u):
+        return np.cos((u + 0.008) / 1.008 * np.pi / 2) ** 2
+
+    betas = []
+    for t in range(n):
+        a0 = alpha_bar(t / n)
+        a1 = alpha_bar((t + 1) / n)
+        betas.append(min(1.0 - a1 / a0, 0.999))
+    return np.asarray(betas, dtype=np.float32)
+
+
+class Schedule:
+    """Precomputed schedule quantities (numpy, converted lazily to jnp)."""
+
+    def __init__(self, n: int = DIFFUSION_STEPS):
+        self.n = n
+        self.betas = cosine_betas(n)
+        self.alphas = (1.0 - self.betas).astype(np.float32)
+        # f32 cumprod to match the Rust side bit-for-bit-ish.
+        alpha_bars = np.empty(n, dtype=np.float32)
+        prod = np.float32(1.0)
+        for t in range(n):
+            prod = np.float32(prod * self.alphas[t])
+            alpha_bars[t] = prod
+        self.alpha_bars = alpha_bars
+        self.alpha_bars_prev = np.concatenate(
+            [np.ones(1, dtype=np.float32), alpha_bars[:-1]]
+        )
+        var = self.betas * (1.0 - self.alpha_bars_prev) / (1.0 - self.alpha_bars)
+        var[0] = 0.0
+        self.sigmas = np.sqrt(np.maximum(var, 0.0)).astype(np.float32)
+
+    # ---- jnp ops (gather by possibly-traced integer index) ----
+
+    def add_noise(self, x0, eps, t):
+        """Forward noising x_t = sqrt(ab_t) x0 + sqrt(1-ab_t) eps."""
+        ab = jnp.asarray(self.alpha_bars)[t]
+        return jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * eps
+
+    def predict_x0(self, x_t, eps, t):
+        """Clipped clean-sample prediction from an ε output."""
+        ab = jnp.asarray(self.alpha_bars)[t]
+        x0 = (x_t - jnp.sqrt(1.0 - ab) * eps) / jnp.sqrt(ab)
+        return jnp.clip(x0, -CLIP, CLIP)
+
+    def posterior_mean(self, x_t, x0, t):
+        """Mean of q(x_{t-1} | x_t, x0)."""
+        ab = jnp.asarray(self.alpha_bars)[t]
+        ab_prev = jnp.asarray(self.alpha_bars_prev)[t]
+        beta = jnp.asarray(self.betas)[t]
+        alpha = jnp.asarray(self.alphas)[t]
+        c0 = jnp.sqrt(ab_prev) * beta / (1.0 - ab)
+        ct = jnp.sqrt(alpha) * (1.0 - ab_prev) / (1.0 - ab)
+        return c0 * x0 + ct * x_t
+
+    def sigma(self, t):
+        """Posterior standard deviation σ_t."""
+        return jnp.asarray(self.sigmas)[t]
+
+    def step(self, x_t, eps, t, xi):
+        """One reverse step; returns (x_{t-1}, posterior mean)."""
+        x0 = self.predict_x0(x_t, eps, t)
+        mean = self.posterior_mean(x_t, x0, t)
+        return mean + self.sigma(t) * xi, mean
+
+
+# Golden values shared with rust/tests/ddpm_parity.rs (indices 0, 1, 50,
+# 98, 99 of the 100-step schedule). Regenerate with:
+#   python -c "from compile.ddpm import print_golden; print_golden()"
+GOLDEN_INDICES = (0, 1, 50, 98, 99)
+
+
+def print_golden():
+    """Print schedule values for embedding in parity tests."""
+    s = Schedule()
+    for t in GOLDEN_INDICES:
+        print(
+            f"t={t}: beta={s.betas[t]:.9f} alpha_bar={s.alpha_bars[t]:.9f} "
+            f"sigma={s.sigmas[t]:.9f}"
+        )
+
+
+if __name__ == "__main__":
+    print_golden()

@@ -1,0 +1,103 @@
+"""Pallas L1 kernels: fused attention, transformer MLP and LayerNorm.
+
+These are the compute hot-spots of the denoiser block. The paper's models
+run on A100s (cuDNN attention over threadblocks/shared memory); per the
+hardware-adaptation note in DESIGN.md we re-express them for the TPU
+execution model instead of porting CUDA mechanics:
+
+* **VMEM tiling via BlockSpec** — one grid step per attention head; the
+  whole (seq × head_dim) tile for that head lives in VMEM (at our sizes,
+  8×16 f32 = 512 B/operand, far under the ~16 MiB VMEM budget), replacing
+  the GPU's shared-memory staging.
+* **MXU-shaped matmuls** — scores and the weighted sum are expressed as
+  single `jnp.dot`s per head so Mosaic can map them onto the 128×128
+  systolic array; the softmax stays in VPU registers between them.
+* **interpret=True always** — the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+  pipeline serializes. Real-TPU performance is *estimated* from the
+  BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One head per grid step: softmax(q kᵀ / √d) v, fully in VMEM."""
+    q = q_ref[0]  # block is [1, seq, head_dim]; drop the head dim
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.dot(q, k.T) * scale  # MXU matmul 1
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(w, v)  # MXU matmul 2
+
+
+def attention(q, k, v):
+    """Fused multi-head attention.
+
+    Args:
+      q, k, v: [num_heads, seq, head_dim]
+    Returns:
+      [num_heads, seq, head_dim]
+    """
+    num_heads, seq, head_dim = q.shape
+    spec = pl.BlockSpec((1, seq, head_dim), lambda h: (h, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(num_heads,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((num_heads, seq, head_dim), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """Fused position-wise MLP with tanh-approx GELU."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...]
+    g = 0.5 * h * (1.0 + jnp.tanh(0.7978845608 * (h + 0.044715 * h * h * h)))
+    o_ref[...] = jnp.dot(g, w2_ref[...]) + b2_ref[...]
+
+
+def transformer_mlp(x, w1, b1, w2, b2):
+    """Fused MLP block. x: [seq, dim] -> [seq, dim].
+
+    A single VMEM tile holds x, both weight matrices and the
+    intermediates (dim=64, hidden=128 -> ~64 KiB), so no grid is needed;
+    both matmuls feed the MXU back-to-back with the GELU in between.
+    """
+    seq, dim = x.shape
+    return pl.pallas_call(
+        _mlp_kernel,
+        out_shape=jax.ShapeDtypeStruct((seq, dim), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + 1e-5) * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta):
+    """Fused LayerNorm over the last axis. x: [seq, dim]."""
+    return pl.pallas_call(
+        _layernorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def vmem_footprint_bytes(num_heads: int, seq: int, head_dim: int) -> int:
+    """Estimated VMEM bytes per attention grid step (perf reporting)."""
+    tile = seq * head_dim * 4  # f32
+    scores = seq * seq * 4
+    # q, k, v, out tiles + score/weight intermediates.
+    return 4 * tile + 2 * scores

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `python/tests/test_kernel.py` sweeps
+shapes/dtypes with hypothesis and asserts the Pallas implementations match
+these to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Multi-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: [num_heads, seq, head_dim]
+    Returns:
+      [num_heads, seq, head_dim]
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(jnp.float32(dh))
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hst,htd->hsd", weights, v)
+
+
+def transformer_mlp_ref(x, w1, b1, w2, b2):
+    """Position-wise MLP with GELU: x @ w1 + b1 -> gelu -> @ w2 + b2.
+
+    Args:
+      x: [seq, dim]; w1: [dim, hidden]; b1: [hidden];
+      w2: [hidden, dim]; b2: [dim]
+    Returns:
+      [seq, dim]
+    """
+    h = x @ w1 + b1
+    # tanh-approx GELU (matches the Pallas kernel).
+    g = 0.5 * h * (1.0 + jnp.tanh(0.7978845608 * (h + 0.044715 * h**3)))
+    return g @ w2 + b2
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis. x: [seq, dim]."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,220 @@
+"""L2: the Diffusion Policy denoiser and its distilled drafter in JAX.
+
+Architecture (sized to train in minutes on CPU while preserving the
+paper's 8:1 target:drafter cost ratio):
+
+* **Encoder** — MLP obs[32] -> cond[64]; shared by target and drafter
+  ("the draft model shares the same encoder and scheduler with the
+  target", paper 3.2).
+* **Denoiser** — transformer over the HORIZON action tokens: per-token
+  input projection + learned positional embedding + sinusoidal timestep
+  embedding + conditioning embedding, then N pre-LN blocks
+  (attention -> MLP, both as Pallas kernels), final LN + linear head
+  predicting epsilon. Target: 8 blocks. Drafter: 1 block.
+
+All parameters live in plain dicts (pytree), all functions are pure.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.config import (
+    ACT_DIM,
+    DRAFTER_BLOCKS,
+    EMBED_DIM,
+    HORIZON,
+    MLP_HIDDEN,
+    NUM_HEADS,
+    OBS_DIM,
+    TARGET_BLOCKS,
+)
+from compile.kernels import attention as pallas_kernels
+from compile.kernels import ref as ref_kernels
+
+HEAD_DIM = EMBED_DIM // NUM_HEADS
+
+# Kernel backend switch. The Pallas interpret-mode kernels do not define a
+# VJP, so training runs on the pure-jnp reference implementations (the
+# kernel test suite asserts the two are numerically identical); inference
+# and AOT export use the Pallas kernels.
+_USE_PALLAS = True
+
+
+def use_pallas(enabled: bool):
+    """Select the kernel backend (True = Pallas L1 kernels)."""
+    global _USE_PALLAS
+    _USE_PALLAS = enabled
+
+
+def _attention(q, k, v):
+    if _USE_PALLAS:
+        return pallas_kernels.attention(q, k, v)
+    return ref_kernels.attention_ref(q, k, v)
+
+
+def _layernorm(x, g, b):
+    if _USE_PALLAS:
+        return pallas_kernels.layernorm(x, g, b)
+    return ref_kernels.layernorm_ref(x, g, b)
+
+
+def _transformer_mlp(x, w1, b1, w2, b2):
+    if _USE_PALLAS:
+        return pallas_kernels.transformer_mlp(x, w1, b1, w2, b2)
+    return ref_kernels.transformer_mlp_ref(x, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _linear_init(key, fan_in, fan_out):
+    scale = 1.0 / math.sqrt(fan_in)
+    return {
+        "w": jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -scale, scale),
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def _block_init(key):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_g": jnp.ones((EMBED_DIM,)),
+        "ln1_b": jnp.zeros((EMBED_DIM,)),
+        "qkv": _linear_init(ks[0], EMBED_DIM, 3 * EMBED_DIM),
+        "proj": _linear_init(ks[1], EMBED_DIM, EMBED_DIM),
+        "ln2_g": jnp.ones((EMBED_DIM,)),
+        "ln2_b": jnp.zeros((EMBED_DIM,)),
+        "mlp1": _linear_init(ks[2], EMBED_DIM, MLP_HIDDEN),
+        "mlp2": _linear_init(ks[3], MLP_HIDDEN, EMBED_DIM),
+    }
+
+
+def init_encoder(key):
+    """Observation encoder parameters."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "l1": _linear_init(k1, OBS_DIM, EMBED_DIM),
+        "l2": _linear_init(k2, EMBED_DIM, EMBED_DIM),
+    }
+
+
+def init_denoiser(key, num_blocks):
+    """Denoiser parameters with the given transformer depth."""
+    ks = jax.random.split(key, num_blocks + 5)
+    return {
+        "in_proj": _linear_init(ks[0], ACT_DIM, EMBED_DIM),
+        "pos": 0.02 * jax.random.normal(ks[1], (HORIZON, EMBED_DIM)),
+        "t_mlp1": _linear_init(ks[2], EMBED_DIM, EMBED_DIM),
+        "t_mlp2": _linear_init(ks[3], EMBED_DIM, EMBED_DIM),
+        "blocks": [_block_init(ks[4 + i]) for i in range(num_blocks)],
+        "ln_f_g": jnp.ones((EMBED_DIM,)),
+        "ln_f_b": jnp.zeros((EMBED_DIM,)),
+        "head": _linear_init(ks[4 + num_blocks], EMBED_DIM, ACT_DIM),
+    }
+
+
+def init_all(seed: int = 0):
+    """(encoder, target, drafter) parameter pytrees."""
+    k = jax.random.PRNGKey(seed)
+    ke, kt, kd = jax.random.split(k, 3)
+    return init_encoder(ke), init_denoiser(kt, TARGET_BLOCKS), init_denoiser(
+        kd, DRAFTER_BLOCKS
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def encode(enc, obs):
+    """obs[OBS_DIM] -> cond[EMBED_DIM]."""
+    h = jnp.tanh(_linear(enc["l1"], obs))
+    return _linear(enc["l2"], h)
+
+
+def _timestep_embedding(t):
+    """Sinusoidal embedding of a (float) diffusion timestep."""
+    half = EMBED_DIM // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def _block_forward(p, h):
+    """One pre-LN transformer block over h[HORIZON, EMBED_DIM]."""
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"])
+    qkv = _linear(p["qkv"], x)  # [seq, 3*dim]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    # [seq, dim] -> [heads, seq, head_dim]
+    def heads(z):
+        return z.reshape(HORIZON, NUM_HEADS, HEAD_DIM).transpose(1, 0, 2)
+    o = _attention(heads(q), heads(k), heads(v))  # Pallas L1 kernel
+    o = o.transpose(1, 0, 2).reshape(HORIZON, EMBED_DIM)
+    h = h + _linear(p["proj"], o)
+    x = _layernorm(h, p["ln2_g"], p["ln2_b"])
+    h = h + _transformer_mlp(
+        x, p["mlp1"]["w"], p["mlp1"]["b"], p["mlp2"]["w"], p["mlp2"]["b"]
+    )  # Pallas L1 kernel
+    return h
+
+
+def denoise(params, x, t, cond):
+    """Predict epsilon.
+
+    Args:
+      params: denoiser pytree (target or drafter).
+      x: noisy action segment [HORIZON, ACT_DIM].
+      t: diffusion timestep (float scalar; integer-valued).
+      cond: observation embedding [EMBED_DIM].
+    Returns:
+      eps prediction [HORIZON, ACT_DIM].
+    """
+    temb = _timestep_embedding(t)
+    temb = _linear(params["t_mlp2"], jnp.tanh(_linear(params["t_mlp1"], temb)))
+    h = _linear(params["in_proj"], x) + params["pos"] + temb + cond
+    for blk in params["blocks"]:
+        h = _block_forward(blk, h)
+    h = _layernorm(h, params["ln_f_g"], params["ln_f_b"])
+    return _linear(params["head"], h)
+
+
+def denoise_batch(params, xs, ts, cond):
+    """Batched verification pass: xs[B, H, A], ts[B] -> eps[B, H, A].
+
+    One conditioning vector is shared across the batch — this is the
+    paper's parallel verification of all drafted steps in a single
+    target forward pass.
+    """
+    return jax.vmap(lambda x, t: denoise(params, x, t, cond))(xs, ts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter (de)serialization — flat f32 vector, for caching to disk.
+# ---------------------------------------------------------------------------
+
+def flatten_params(tree):
+    """Pytree -> (flat f32 vector, treedef-with-shapes)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    flat = np.concatenate([np.asarray(l, np.float32).ravel() for l in leaves])
+    return flat, (treedef, shapes)
+
+
+def unflatten_params(flat, spec):
+    """Inverse of flatten_params."""
+    treedef, shapes = spec
+    leaves = []
+    i = 0
+    for shp in shapes:
+        n = int(np.prod(shp)) if shp else 1
+        leaves.append(jnp.asarray(flat[i : i + n].reshape(shp)))
+        i += n
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,61 @@
+"""DDPM schedule correctness + golden values shared with the Rust side.
+
+The golden numbers below are duplicated in `rust/tests/ddpm_parity.rs`;
+if either implementation drifts, one of the two suites fails.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.config import DIFFUSION_STEPS
+from compile.ddpm import GOLDEN_INDICES, Schedule
+
+# index -> (beta, alpha_bar, sigma); regenerate with `python -m compile.ddpm`.
+# Duplicated in rust/tests/ddpm_parity.rs.
+GOLDEN = {
+    0: (0.000631282, 0.999368727, 0.0),
+    1: (0.001116937, 0.998252511, 0.020087026),
+    50: (0.031546339, 0.478264421, 0.174941048),
+    98: (0.749939263, 0.000242857, 0.865674794),
+    99: (0.999000013, 0.000000243, 0.999378622),
+}
+
+
+def test_golden_values():
+    s = Schedule()
+    assert set(GOLDEN) == set(GOLDEN_INDICES)
+    for t, (beta, ab, sigma) in GOLDEN.items():
+        np.testing.assert_allclose(s.betas[t], beta, rtol=1e-5, atol=1e-9)
+        np.testing.assert_allclose(s.alpha_bars[t], ab, rtol=1e-5, atol=1e-9)
+        np.testing.assert_allclose(s.sigmas[t], sigma, rtol=1e-5, atol=1e-9)
+
+
+def test_schedule_shapes_and_monotonicity():
+    s = Schedule()
+    assert len(s.betas) == DIFFUSION_STEPS
+    assert np.all(s.betas > 0) and np.all(s.betas <= 0.999)
+    assert np.all(np.diff(s.alpha_bars) < 0)
+    assert s.sigmas[0] == 0.0
+    assert np.all(s.sigmas[1:] > 0)
+
+
+def test_add_noise_then_predict_x0_roundtrip():
+    s = Schedule()
+    x0 = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)) * 0.5).astype(
+        jnp.float32
+    )
+    eps = jnp.asarray(np.random.default_rng(1).normal(size=(8, 8))).astype(jnp.float32)
+    for t in [0, 10, 50, 99]:
+        x_t = s.add_noise(x0, eps, t)
+        rec = s.predict_x0(x_t, eps, t)
+        np.testing.assert_allclose(rec, np.clip(x0, -1, 1), rtol=2e-3, atol=2e-3)
+
+
+def test_reverse_step_at_t0_is_deterministic():
+    s = Schedule()
+    x = jnp.ones((4,)) * 0.3
+    eps = jnp.ones((4,)) * 0.1
+    a, mean_a = s.step(x, eps, 0, jnp.ones(4) * 5)
+    b, mean_b = s.step(x, eps, 0, jnp.zeros(4))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(mean_a, mean_b)

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal for the kernels that the AOT executables are
+built from.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (
+    attention,
+    layernorm,
+    transformer_mlp,
+    vmem_footprint_bytes,
+)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    heads=st.integers(1, 8),
+    seq=st.integers(1, 32),
+    head_dim=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(heads, seq, head_dim, seed):
+    q = rand(seed, (heads, seq, head_dim), jnp.float32)
+    k = rand(seed + 1, (heads, seq, head_dim), jnp.float32)
+    v = rand(seed + 2, (heads, seq, head_dim), jnp.float32)
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.attention_ref(q, k, v), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seq=st.integers(1, 32),
+    dim=st.sampled_from([8, 16, 64]),
+    hidden=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_mlp_matches_ref(seq, dim, hidden, seed):
+    x = rand(seed, (seq, dim), jnp.float32)
+    w1 = rand(seed + 1, (dim, hidden), jnp.float32, 0.2)
+    b1 = rand(seed + 2, (hidden,), jnp.float32, 0.1)
+    w2 = rand(seed + 3, (hidden, dim), jnp.float32, 0.2)
+    b2 = rand(seed + 4, (dim,), jnp.float32, 0.1)
+    np.testing.assert_allclose(
+        transformer_mlp(x, w1, b1, w2, b2),
+        ref.transformer_mlp_ref(x, w1, b1, w2, b2),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seq=st.integers(1, 32),
+    dim=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(seq, dim, seed):
+    x = rand(seed, (seq, dim), jnp.float32, 3.0)
+    g = rand(seed + 1, (dim,), jnp.float32)
+    b = rand(seed + 2, (dim,), jnp.float32)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_softmax_rows_are_convex_combinations():
+    # Output rows must lie inside the convex hull of v rows: with constant
+    # v the output equals v exactly.
+    q = rand(0, (2, 8, 16), jnp.float32)
+    k = rand(1, (2, 8, 16), jnp.float32)
+    v = jnp.ones((2, 8, 16))
+    np.testing.assert_allclose(attention(q, k, v), v, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_is_permutation_equivariant_in_keys():
+    # Permuting (k, v) jointly must not change the output.
+    q = rand(3, (1, 8, 16), jnp.float32)
+    k = rand(4, (1, 8, 16), jnp.float32)
+    v = rand(5, (1, 8, 16), jnp.float32)
+    perm = np.array([3, 1, 4, 0, 7, 5, 2, 6])
+    out1 = attention(q, k, v)
+    out2 = attention(q, k[:, perm], v[:, perm])
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_numerical_stability_large_logits():
+    # Softmax must be max-subtracted: huge q/k magnitudes stay finite.
+    q = 100.0 * rand(6, (1, 4, 8), jnp.float32)
+    k = 100.0 * rand(7, (1, 4, 8), jnp.float32)
+    v = rand(8, (1, 4, 8), jnp.float32)
+    out = attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_layernorm_output_is_normalized():
+    x = rand(9, (8, 64), jnp.float32, 5.0)
+    out = layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(out).mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out).std(axis=-1), 1.0, atol=1e-3)
+
+
+def test_vmem_footprint_is_small():
+    # The per-head tile must fit comfortably in TPU VMEM (~16 MiB).
+    assert vmem_footprint_bytes(4, 8, 16) < 1 << 14
+    assert vmem_footprint_bytes(16, 128, 128) < 1 << 21
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_kernels_under_jit(dtype):
+    # The kernels must lower inside jit (the AOT path jits everything).
+    q = rand(10, (4, 8, 16), dtype)
+
+    @jax.jit
+    def f(q):
+        return attention(q, q, q)
+
+    np.testing.assert_allclose(f(q), ref.attention_ref(q, q, q), rtol=1e-5, atol=1e-5)

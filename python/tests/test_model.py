@@ -1,0 +1,127 @@
+"""L2 model tests: shapes, interfaces, backend equivalence, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, train
+from compile.config import (
+    ACT_DIM,
+    DRAFTER_BLOCKS,
+    EMBED_DIM,
+    HORIZON,
+    OBS_DIM,
+    TARGET_BLOCKS,
+    VERIFY_BATCH,
+)
+
+
+def setup_function(_):
+    # Each test selects its own backend; default to Pallas.
+    model.use_pallas(True)
+
+
+def test_shapes():
+    enc, tgt, drf = model.init_all(0)
+    cond = model.encode(enc, jnp.zeros(OBS_DIM))
+    assert cond.shape == (EMBED_DIM,)
+    eps = model.denoise(tgt, jnp.zeros((HORIZON, ACT_DIM)), 50.0, cond)
+    assert eps.shape == (HORIZON, ACT_DIM)
+    eb = model.denoise_batch(
+        tgt, jnp.zeros((VERIFY_BATCH, HORIZON, ACT_DIM)), jnp.zeros(VERIFY_BATCH), cond
+    )
+    assert eb.shape == (VERIFY_BATCH, HORIZON, ACT_DIM)
+
+
+def test_target_and_drafter_share_interface():
+    # The drafter must be a drop-in replacement (same I/O contract, paper
+    # 3.2), differing only in depth.
+    enc, tgt, drf = model.init_all(0)
+    assert len(tgt["blocks"]) == TARGET_BLOCKS
+    assert len(drf["blocks"]) == DRAFTER_BLOCKS
+    cond = model.encode(enc, jnp.ones(OBS_DIM))
+    x = jnp.ones((HORIZON, ACT_DIM)) * 0.1
+    et = model.denoise(tgt, x, 10.0, cond)
+    ed = model.denoise(drf, x, 10.0, cond)
+    assert et.shape == ed.shape
+
+
+def test_pallas_and_ref_backends_agree():
+    enc, tgt, _ = model.init_all(3)
+    cond = model.encode(enc, jnp.arange(OBS_DIM, dtype=jnp.float32) / OBS_DIM)
+    x = jax.random.normal(jax.random.PRNGKey(0), (HORIZON, ACT_DIM))
+    model.use_pallas(True)
+    e1 = model.denoise(tgt, x, 42.0, cond)
+    model.use_pallas(False)
+    e2 = model.denoise(tgt, x, 42.0, cond)
+    np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-5)
+
+
+def test_batch_matches_single():
+    enc, tgt, _ = model.init_all(1)
+    cond = model.encode(enc, jnp.ones(OBS_DIM) * 0.2)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (VERIFY_BATCH, HORIZON, ACT_DIM))
+    ts = jnp.arange(VERIFY_BATCH, dtype=jnp.float32)
+    batched = model.denoise_batch(tgt, xs, ts, cond)
+    for i in [0, 5, VERIFY_BATCH - 1]:
+        single = model.denoise(tgt, xs[i], ts[i], cond)
+        np.testing.assert_allclose(batched[i], single, rtol=1e-5, atol=1e-6)
+
+
+def test_timestep_conditioning_matters():
+    enc, tgt, _ = model.init_all(2)
+    cond = model.encode(enc, jnp.zeros(OBS_DIM))
+    x = jax.random.normal(jax.random.PRNGKey(2), (HORIZON, ACT_DIM))
+    e1 = model.denoise(tgt, x, 1.0, cond)
+    e2 = model.denoise(tgt, x, 99.0, cond)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_observation_conditioning_matters():
+    enc, tgt, _ = model.init_all(2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (HORIZON, ACT_DIM))
+    c1 = model.encode(enc, jnp.zeros(OBS_DIM))
+    c2 = model.encode(enc, jnp.ones(OBS_DIM))
+    e1 = model.denoise(tgt, x, 10.0, c1)
+    e2 = model.denoise(tgt, x, 10.0, c2)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_param_flatten_roundtrip():
+    _, tgt, _ = model.init_all(4)
+    flat, spec = model.flatten_params(tgt)
+    tgt2 = model.unflatten_params(flat, spec)
+    assert jax.tree.all(jax.tree.map(lambda a, b: bool(jnp.allclose(a, b)), tgt, tgt2))
+
+
+def test_training_reduces_loss_quickly():
+    # Tiny synthetic corpus: the action is a linear function of obs; a
+    # few dozen steps must cut the ε-loss substantially.
+    rng = np.random.default_rng(0)
+    obs = rng.normal(size=(512, OBS_DIM)).astype(np.float32)
+    act = np.tanh(obs[:, :ACT_DIM])[:, None, :].repeat(HORIZON, axis=1)
+    _, _, hist = train.train_target(obs, act, steps=61, batch=64, log_every=30)
+    assert hist[-1] < hist[0] * 0.7, hist
+
+
+def test_distillation_pulls_drafter_toward_target():
+    rng = np.random.default_rng(1)
+    obs = rng.normal(size=(256, OBS_DIM)).astype(np.float32)
+    act = np.tanh(obs[:, :ACT_DIM])[:, None, :].repeat(HORIZON, axis=1)
+    enc, tgt, _ = train.train_target(obs, act, steps=31, batch=64, log_every=30)
+    drafter, hist = train.distill_drafter(
+        enc, tgt, obs, act, steps=61, batch=64, log_every=30
+    )
+    assert hist[-1] < hist[0], hist
+    # Distilled drafter must approximate the target better than an
+    # untrained drafter on fresh inputs.
+    model.use_pallas(False)
+    _, _, fresh = model.init_all(99)
+    cond = model.encode(enc, jnp.asarray(obs[0]))
+    x = jax.random.normal(jax.random.PRNGKey(5), (HORIZON, ACT_DIM))
+    et = model.denoise(tgt, x, 50.0, cond)
+    e_distilled = model.denoise(drafter, x, 50.0, cond)
+    e_fresh = model.denoise(fresh, x, 50.0, cond)
+    d_distilled = float(jnp.mean((e_distilled - et) ** 2))
+    d_fresh = float(jnp.mean((e_fresh - et) ** 2))
+    assert d_distilled < d_fresh, (d_distilled, d_fresh)

@@ -1,0 +1,69 @@
+//! Runtime micro-benchmarks: per-call PJRT dispatch and the fused-vs-
+//! serial drafter rollout — the L3 perf pass's primary probes (see
+//! EXPERIMENTS.md §Perf).
+
+use ts_dp::config::{DIFFUSION_STEPS, OBS_DIM, VERIFY_BATCH};
+use ts_dp::runtime::executable::SEG;
+use ts_dp::runtime::ModelRuntime;
+use ts_dp::util::benchtool::bench;
+use ts_dp::util::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping runtime bench");
+        return;
+    }
+    let t_load = std::time::Instant::now();
+    let rt = ModelRuntime::load(&dir).expect("loading artifacts");
+    println!("artifact load+compile: {:.2}s", t_load.elapsed().as_secs_f64());
+
+    let mut rng = Rng::seed_from_u64(0);
+    let obs = rng.normal_vec(OBS_DIM);
+    let cond = rt.encode(&obs).unwrap();
+    let x = rng.normal_vec(SEG);
+
+    println!("\n== per-call dispatch ==");
+    bench("encoder", 3, 50, || {
+        rt.encode(&obs).unwrap();
+    });
+    bench("target_step (1 NFE)", 3, 50, || {
+        rt.target_step(&x, 50, &cond).unwrap();
+    });
+    let mut xs = Vec::new();
+    let mut ts = Vec::new();
+    for b in 0..VERIFY_BATCH {
+        xs.extend(rng.normal_vec(SEG));
+        ts.push((b % DIFFUSION_STEPS) as f32);
+    }
+    bench("target_verify (17 candidates, 1 NFE)", 3, 50, || {
+        rt.target_verify(&xs, &ts, &cond).unwrap();
+    });
+    bench("drafter_step (1/8 NFE)", 3, 50, || {
+        rt.drafter_step(&x, 50, &cond).unwrap();
+    });
+
+    println!("\n== fused vs serial drafter rollout ==");
+    for k in rt.rollout_ks() {
+        let noise = rng.normal_vec(k * SEG);
+        bench(&format!("fused rollout K={k} (1 call)"), 3, 30, || {
+            rt.drafter_rollout(k, &x, 60, &cond, &noise).unwrap();
+        });
+        bench(&format!("serial rollout K={k} ({k} calls)"), 3, 30, || {
+            let mut cur = x.clone();
+            for j in 0..k {
+                cur = rt.drafter_step(&cur, 60 - j, &cond).unwrap();
+            }
+        });
+    }
+
+    println!("\n== verification economics ==");
+    bench("17 serial target steps (17 NFE)", 1, 10, || {
+        for b in 0..VERIFY_BATCH {
+            rt.target_step(&xs[b * SEG..(b + 1) * SEG], ts[b] as usize, &cond).unwrap();
+        }
+    });
+    bench("1 batched verify (1 NFE)", 1, 10, || {
+        rt.target_verify(&xs, &ts, &cond).unwrap();
+    });
+}

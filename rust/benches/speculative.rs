@@ -1,0 +1,88 @@
+//! Segment-level benchmarks: one action-segment generation per method —
+//! the wall-clock counterpart of the paper's Table 5 (frequency/latency)
+//! — plus the speculative engine's round structure.
+
+use ts_dp::baselines::make_generator;
+use ts_dp::config::{DemoStyle, Method, Task, EXEC_STEPS, OBS_DIM};
+use ts_dp::envs::make_env;
+use ts_dp::runtime::ModelRuntime;
+use ts_dp::speculative::SegmentTrace;
+use ts_dp::util::benchtool::bench;
+use ts_dp::util::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping bench");
+        return;
+    }
+    let rt = ModelRuntime::load(&dir).expect("loading artifacts");
+    let mut rng = Rng::seed_from_u64(1);
+    let mut env = make_env(Task::Lift, DemoStyle::Ph);
+    env.reset(&mut rng);
+    let obs = env.observe();
+    let cond = rt.encode(&obs).unwrap();
+
+    println!("== segment generation (Table 5 wall-clock counterpart) ==");
+    let mut summary = Vec::new();
+    for method in Method::ALL {
+        let mut generator = make_generator(method);
+        let mut nfe_total = 0.0;
+        let mut n = 0usize;
+        let r = bench(&format!("segment [{}]", method.label()), 2, 12, || {
+            let mut trace = SegmentTrace::default();
+            generator.generate(&rt, &cond, &mut rng, &mut trace).unwrap();
+            nfe_total += trace.nfe;
+            n += 1;
+        });
+        summary.push((method, r.mean_secs, nfe_total / n as f64));
+    }
+
+    println!("\n== implied control frequency (Hz, {} actions/segment) ==", EXEC_STEPS);
+    let vanilla = summary
+        .iter()
+        .find(|(m, _, _)| *m == Method::Vanilla)
+        .map(|(_, s, _)| *s)
+        .unwrap_or(1.0);
+    for (method, secs, nfe) in &summary {
+        println!(
+            "{:<22} {:>7.2} Hz   latency {:.4}s   nfe {:>5.1}   wall speedup {:>5.2}x   nfe speedup {:>5.2}x",
+            method.label(),
+            EXEC_STEPS as f64 / secs,
+            secs,
+            nfe,
+            vanilla / secs,
+            100.0 / nfe.max(1e-9),
+        );
+    }
+
+    // Sanity: conditioning from a fresh obs costs one encoder call.
+    let _ = obs.len().min(OBS_DIM);
+
+    println!("\n== latency under load (open-loop Poisson arrivals, TS-DP) ==");
+    let pool = ts_dp::coordinator::workload::record_observation_pool(
+        Task::Lift,
+        DemoStyle::Ph,
+        32,
+        5,
+    );
+    let sweep = ts_dp::coordinator::workload::load_sweep(
+        &rt,
+        Method::TsDp,
+        &pool,
+        &[1.0, 5.0, 20.0, 100.0],
+        24,
+        6,
+    )
+    .unwrap();
+    println!(
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
+    );
+    for p in sweep {
+        println!(
+            "{:>12.1} {:>12.2} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
+            p.offered_rate, p.goodput, p.p50, p.p95, p.p99, p.nfe
+        );
+    }
+}

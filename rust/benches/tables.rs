@@ -1,0 +1,62 @@
+//! End-to-end table regeneration bench: reruns every paper table with a
+//! reduced episode budget and prints them (the full-budget runs go
+//! through `ts-dp table --id N --episodes 25`).
+//!
+//! `cargo bench --bench tables` is the "one command reproduces the
+//! evaluation section" entry point.
+
+use ts_dp::config::{DemoStyle, Task};
+use ts_dp::harness::tables;
+use ts_dp::runtime::ModelRuntime;
+use ts_dp::scheduler::SchedulerPolicy;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping tables bench");
+        return;
+    }
+    let episodes: usize = std::env::var("TSDP_TABLE_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let den = ModelRuntime::load(&dir).expect("loading artifacts");
+    let scheduler = SchedulerPolicy::load(&dir.join("scheduler_policy.json")).ok();
+    if scheduler.is_none() {
+        eprintln!("(no scheduler policy found; TS-DP rows use fixed parameters)");
+    }
+    let opts = [
+        tables::EvalOpts {
+            episodes,
+            seed: 0,
+            scheduler: scheduler.clone(),
+            fixed_params: None,
+        },
+        tables::EvalOpts {
+            episodes,
+            seed: 0x5eed_0002,
+            scheduler: scheduler.clone(),
+            fixed_params: None,
+        },
+    ];
+
+    let t0 = std::time::Instant::now();
+    let ph_tasks = [
+        Task::Lift,
+        Task::Can,
+        Task::Square,
+        Task::Transport,
+        Task::ToolHang,
+        Task::PushT,
+    ];
+    println!("{}", tables::success_table(&den, DemoStyle::Ph, &ph_tasks, &opts).unwrap());
+    let mh_tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    println!("{}", tables::success_table(&den, DemoStyle::Mh, &mh_tasks, &opts).unwrap());
+    println!("{}", tables::multistage_table(&den, &opts).unwrap());
+    println!("{}", tables::ablation_table(&den, scheduler, episodes, 0).unwrap());
+    println!("{}", tables::latency_table(&den, episodes, 0).unwrap());
+    for s in ["s1", "s2", "s3"] {
+        println!("{}", tables::supplement_table(&den, s, &opts).unwrap());
+    }
+    println!("(all tables regenerated in {:.1}s with {episodes} episodes/cell)", t0.elapsed().as_secs_f64());
+}

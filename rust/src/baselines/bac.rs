@@ -1,0 +1,154 @@
+//! BAC: Block-wise Adaptive Caching (Ji et al. 2025) — paper baseline
+//! [15], the strongest lossy competitor (Tables 1–3: ~3.4–3.6× with
+//! near-baseline success).
+//!
+//! BAC selectively refreshes upstream transformer blocks to bound error
+//! propagation. With monolithic executables the reproduced mechanism is
+//! adaptive ε caching (DESIGN.md §2): the refresh interval grows while
+//! measured ε drift is small and shrinks when drift spikes — the same
+//! error-controlled reuse policy, which is what produces BAC's
+//! "fast but nearly lossless" profile.
+
+use crate::config::{Method, ACT_DIM, DIFFUSION_STEPS, HORIZON};
+use crate::diffusion::DdpmSchedule;
+use crate::policy::Denoiser;
+use crate::speculative::SegmentTrace;
+use crate::util::Rng;
+use anyhow::Result;
+
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// Adaptive ε-caching generator.
+pub struct BacCache {
+    sched: DdpmSchedule,
+    /// Minimum / maximum reuse interval.
+    pub min_interval: usize,
+    /// Maximum reuse interval.
+    pub max_interval: usize,
+    /// Relative drift above which the interval halves.
+    pub drift_high: f32,
+    /// Relative drift below which the interval grows by one.
+    pub drift_low: f32,
+}
+
+impl BacCache {
+    /// BAC-style generator with the defaults used in the benchmarks.
+    pub fn new() -> Self {
+        Self {
+            sched: DdpmSchedule::cosine(DIFFUSION_STEPS),
+            min_interval: 1,
+            max_interval: 6,
+            drift_high: 0.9,
+            drift_low: 0.45,
+        }
+    }
+}
+
+impl Default for BacCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl super::Generator for BacCache {
+    fn generate(
+        &mut self,
+        den: &dyn Denoiser,
+        cond: &[f32],
+        rng: &mut Rng,
+        trace: &mut SegmentTrace,
+    ) -> Result<Vec<f32>> {
+        let start = std::time::Instant::now();
+        let nfe0 = den.nfe().nfe();
+        let mut x = rng.normal_vec(SEG);
+        let mut t = DIFFUSION_STEPS - 1;
+        let mut interval = 2usize;
+        let mut prev_eps: Option<Vec<f32>> = None;
+        loop {
+            let eps = den.target_step(&x, t, cond)?;
+            // Adapt the interval from the drift between consecutive fresh
+            // evaluations (error-propagation control).
+            if let Some(prev) = &prev_eps {
+                let drift = rel_dist(&eps, prev);
+                if drift > self.drift_high {
+                    interval = (interval / 2).max(self.min_interval);
+                } else if drift < self.drift_low {
+                    interval = (interval + 1).min(self.max_interval);
+                }
+            }
+            prev_eps = Some(eps.clone());
+            if t == 0 {
+                let (x0, _) = self.sched.step(0, &x, &eps, &vec![0.0; SEG]);
+                trace.nfe = den.nfe().nfe() - nfe0;
+                trace.wall_secs = start.elapsed().as_secs_f64();
+                return Ok(x0);
+            }
+            // Reuse the fresh ε for `interval` steps.
+            let window = interval.min(t + 1);
+            for j in 0..window {
+                let tj = t - j;
+                let xi = if tj > 0 { rng.normal_vec(SEG) } else { vec![0.0; SEG] };
+                let (next, _) = self.sched.step(tj, &x, &eps, &xi);
+                x = next;
+                if tj == 0 {
+                    trace.nfe = den.nfe().nfe() - nfe0;
+                    trace.wall_secs = start.elapsed().as_secs_f64();
+                    return Ok(x);
+                }
+            }
+            t -= window;
+        }
+    }
+
+    fn method(&self) -> Method {
+        Method::Bac
+    }
+}
+
+use crate::baselines::speca::rel_dist;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_util::run_mock;
+    use crate::baselines::Generator;
+
+    #[test]
+    fn adaptive_caching_cuts_nfe() {
+        let mut g = BacCache::new();
+        let (_, trace, _) = run_mock(&mut g, 0.0, 0);
+        assert!(trace.nfe < 55.0, "nfe {}", trace.nfe);
+        assert!(trace.nfe >= 15.0, "interval is bounded: {}", trace.nfe);
+    }
+
+    #[test]
+    fn stays_near_the_clean_action() {
+        // BAC's drift control keeps the output near-lossless on a smooth
+        // model (the paper's selling point).
+        let mut g = BacCache::new();
+        let (seg, _, err) = run_mock(&mut g, 0.0, 1);
+        assert_eq!(seg.len(), SEG);
+        assert!(err < 0.5, "err {err}");
+    }
+
+    #[test]
+    fn interval_shrinks_under_drift() {
+        // A drift-heavy model (bias only affects drafter, so instead make
+        // the check structural): drift_high halving is exercised by
+        // construction when eps changes fast near the end of denoising.
+        let mut g = BacCache::new();
+        let (_, trace_smooth, _) = run_mock(&mut g, 0.0, 2);
+        // More aggressive bounds -> fewer NFE.
+        let mut loose = BacCache::new();
+        loose.drift_high = 10.0;
+        loose.drift_low = 9.0;
+        loose.max_interval = 10;
+        let (_, trace_loose, _) = run_mock(&mut loose, 0.0, 2);
+        assert!(
+            trace_loose.nfe <= trace_smooth.nfe,
+            "{} vs {}",
+            trace_loose.nfe,
+            trace_smooth.nfe
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Unaccelerated Diffusion Policy: full serial DDPM reverse process.
+
+use crate::config::{Method, ACT_DIM, DIFFUSION_STEPS, HORIZON};
+use crate::diffusion::DdpmSchedule;
+use crate::policy::Denoiser;
+use crate::speculative::SegmentTrace;
+use crate::util::Rng;
+use anyhow::Result;
+
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// The paper's base model: one target evaluation per denoising step
+/// (100 NFE per action segment).
+pub struct VanillaDp {
+    sched: DdpmSchedule,
+}
+
+impl VanillaDp {
+    /// New vanilla generator.
+    pub fn new() -> Self {
+        Self { sched: DdpmSchedule::cosine(DIFFUSION_STEPS) }
+    }
+}
+
+impl Default for VanillaDp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl super::Generator for VanillaDp {
+    fn generate(
+        &mut self,
+        den: &dyn Denoiser,
+        cond: &[f32],
+        rng: &mut Rng,
+        trace: &mut SegmentTrace,
+    ) -> Result<Vec<f32>> {
+        let start = std::time::Instant::now();
+        let nfe0 = den.nfe().nfe();
+        let mut x = rng.normal_vec(SEG);
+        for t in (0..DIFFUSION_STEPS).rev() {
+            let eps = den.target_step(&x, t, cond)?;
+            let xi = if t > 0 { rng.normal_vec(SEG) } else { vec![0.0; SEG] };
+            let (next, _) = self.sched.step(t, &x, &eps, &xi);
+            x = next;
+        }
+        trace.nfe = den.nfe().nfe() - nfe0;
+        trace.wall_secs = start.elapsed().as_secs_f64();
+        Ok(x)
+    }
+
+    fn method(&self) -> Method {
+        Method::Vanilla
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_util::run_mock;
+    use crate::baselines::Generator;
+
+    #[test]
+    fn vanilla_costs_exactly_diffusion_steps() {
+        let mut g = VanillaDp::new();
+        let (_, trace, err) = run_mock(&mut g, 0.0, 0);
+        assert_eq!(trace.nfe, DIFFUSION_STEPS as f64);
+        assert!(err < 0.15, "converges to the clean action: {err}");
+    }
+
+    #[test]
+    fn vanilla_ignores_drafter_bias() {
+        // The drafter is never called, so even a broken drafter does not
+        // affect vanilla DP.
+        let mut g = VanillaDp::new();
+        let (_, _, err) = run_mock(&mut g, 100.0, 1);
+        assert!(err < 0.15, "err {err}");
+    }
+}

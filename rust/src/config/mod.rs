@@ -1,0 +1,168 @@
+//! Typed configuration for the whole stack.
+//!
+//! The shape constants here are the single source of truth on the Rust
+//! side; the Python compile pipeline reads the same values from
+//! `artifacts/manifest.json` at export time, and `runtime::artifact`
+//! cross-checks the manifest against these constants when loading, so a
+//! drifted artifact set fails loudly instead of mis-executing.
+
+mod serving;
+mod speculative;
+
+pub use serving::{Method, ServingConfig};
+pub use speculative::{SpecParams, StageParams};
+
+/// Padded observation vector length fed to the encoder.
+pub const OBS_DIM: usize = 32;
+/// Padded per-step action dimensionality.
+pub const ACT_DIM: usize = 8;
+/// Action-segment horizon predicted per denoising episode.
+pub const HORIZON: usize = 8;
+/// Number of action steps actually executed per predicted segment
+/// (receding-horizon execution, as in Diffusion Policy).
+pub const EXEC_STEPS: usize = 4;
+/// Observation-embedding width produced by the encoder.
+pub const EMBED_DIM: usize = 64;
+/// Number of DDPM denoising steps of the base policy.
+pub const DIFFUSION_STEPS: usize = 100;
+/// Maximum draft horizon K the drafter may roll out in one round.
+pub const K_MAX: usize = 16;
+/// Batch size of the batched verification executable (K_MAX + 1: the
+/// bootstrap candidate plus up to K_MAX drafts).
+pub const VERIFY_BATCH: usize = K_MAX + 1;
+/// Number of transformer blocks in the target denoiser.
+pub const TARGET_BLOCKS: usize = 8;
+/// Number of transformer blocks in the drafter.
+pub const DRAFTER_BLOCKS: usize = 1;
+/// NFE cost of one drafter evaluation, in units of one target evaluation
+/// (paper §4: "each drafter evaluation is counted as 1/8 NFE").
+pub const DRAFTER_NFE: f64 = DRAFTER_BLOCKS as f64 / TARGET_BLOCKS as f64;
+
+/// The embodied benchmark tasks (Robomimic five + Push-T + Block Push +
+/// Kitchen).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Robomimic Lift: grasp a cube and raise it.
+    Lift,
+    /// Robomimic Can: pick a can and place it in the target bin.
+    Can,
+    /// Robomimic Square: fine-tolerance nut-on-peg insertion.
+    Square,
+    /// Robomimic Transport: long-horizon two-stage transfer.
+    Transport,
+    /// Robomimic Tool-Hang: hardest; two sequential fine insertions.
+    ToolHang,
+    /// Push-T: push a T-block to a target pose (coverage metric).
+    PushT,
+    /// Multimodal Block Pushing: two blocks into two zones (p1/p2).
+    BlockPush,
+    /// Franka Kitchen: four sequential sub-goals (p1..p4).
+    Kitchen,
+}
+
+impl Task {
+    /// All tasks, in the paper's table order.
+    pub const ALL: [Task; 8] = [
+        Task::Lift,
+        Task::Can,
+        Task::Square,
+        Task::Transport,
+        Task::ToolHang,
+        Task::PushT,
+        Task::BlockPush,
+        Task::Kitchen,
+    ];
+
+    /// Index into the one-hot task prefix of the observation vector.
+    pub fn index(self) -> usize {
+        Task::ALL.iter().position(|t| *t == self).unwrap()
+    }
+
+    /// Stable lowercase name (matches CLI arguments and file stems).
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Lift => "lift",
+            Task::Can => "can",
+            Task::Square => "square",
+            Task::Transport => "transport",
+            Task::ToolHang => "tool_hang",
+            Task::PushT => "push_t",
+            Task::BlockPush => "block_push",
+            Task::Kitchen => "kitchen",
+        }
+    }
+
+    /// Parse a CLI/task-file name.
+    pub fn parse(s: &str) -> Option<Task> {
+        Task::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// Whether the task's outcome is a continuous score (coverage /
+    /// progress) rather than binary success — selects between the
+    /// discrete and continuous final reward of Eq. 12–13.
+    pub fn continuous_outcome(self) -> bool {
+        matches!(self, Task::PushT | Task::BlockPush | Task::Kitchen)
+    }
+}
+
+/// Demonstration style: Proficient-Human vs Mixed-Human.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DemoStyle {
+    /// Clean scripted expert (paper: proficient human).
+    Ph,
+    /// Mixture of clean and perturbed/suboptimal experts (mixed human).
+    Mh,
+}
+
+impl DemoStyle {
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DemoStyle::Ph => "ph",
+            DemoStyle::Mh => "mh",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ph" => Some(DemoStyle::Ph),
+            "mh" => Some(DemoStyle::Mh),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_roundtrip() {
+        for t in Task::ALL {
+            assert_eq!(Task::parse(t.name()), Some(t));
+        }
+        assert_eq!(Task::parse("nope"), None);
+    }
+
+    #[test]
+    fn task_indices_are_dense() {
+        for (i, t) in Task::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+        }
+    }
+
+    #[test]
+    fn verify_batch_covers_bootstrap_plus_kmax() {
+        assert_eq!(VERIFY_BATCH, K_MAX + 1);
+        assert!(OBS_DIM > Task::ALL.len(), "one-hot prefix must fit");
+    }
+
+    #[test]
+    fn style_roundtrip() {
+        for s in [DemoStyle::Ph, DemoStyle::Mh] {
+            assert_eq!(DemoStyle::parse(s.name()), Some(s));
+        }
+        assert_eq!(DemoStyle::parse("zz"), None);
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving-layer configuration for the L3 coordinator.
+
+use crate::util::json::{Json, JsonError};
+use std::path::PathBuf;
+
+/// Configuration for the coordinator / server loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Directory holding the AOT artifacts (`*.hlo.txt` + manifest).
+    pub artifacts_dir: PathBuf,
+    /// Maximum number of concurrent env sessions served.
+    pub max_sessions: usize,
+    /// Queue capacity before backpressure rejects new segment requests.
+    pub queue_capacity: usize,
+    /// Whether the PPO scheduler drives SpecParams (false = fixed).
+    pub adaptive_scheduler: bool,
+    /// Path to a trained scheduler policy (JSON), if adaptive.
+    pub scheduler_policy: Option<PathBuf>,
+    /// Scheduler decision interval Δt in env steps (Eq. 15).
+    pub decision_interval: usize,
+    /// Engine used for denoising.
+    pub method: Method,
+}
+
+/// Which action-generation method the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Unaccelerated Diffusion Policy (serial full denoising).
+    Vanilla,
+    /// TS-DP speculative decoding (this paper).
+    TsDp,
+    /// Frozen Target Draft (De Bortoli et al. 2025) baseline.
+    FrozenTarget,
+    /// SpeCa-style speculative caching baseline.
+    Speca,
+    /// BAC-style block-wise adaptive caching baseline.
+    Bac,
+}
+
+impl Method {
+    /// All methods, table order.
+    pub const ALL: [Method; 5] =
+        [Method::Vanilla, Method::FrozenTarget, Method::Speca, Method::Bac, Method::TsDp];
+
+    /// Stable lowercase name (CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::TsDp => "ts_dp",
+            Method::FrozenTarget => "frozen_target",
+            Method::Speca => "speca",
+            Method::Bac => "bac",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Human-readable label used in regenerated tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::Vanilla => "Diffusion Policy",
+            Method::TsDp => "TS-DP",
+            Method::FrozenTarget => "Frozen Target Draft",
+            Method::Speca => "SpeCa",
+            Method::Bac => "BAC",
+        }
+    }
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            max_sessions: 8,
+            queue_capacity: 64,
+            adaptive_scheduler: true,
+            scheduler_policy: Some(PathBuf::from("artifacts/scheduler_policy.json")),
+            decision_interval: 4,
+            method: Method::TsDp,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
+            ("max_sessions", Json::Num(self.max_sessions as f64)),
+            ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+            ("adaptive_scheduler", Json::Bool(self.adaptive_scheduler)),
+            (
+                "scheduler_policy",
+                match &self.scheduler_policy {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("decision_interval", Json::Num(self.decision_interval as f64)),
+            ("method", Json::Str(self.method.name().into())),
+        ])
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            artifacts_dir: PathBuf::from(v.get("artifacts_dir")?.as_str()?),
+            max_sessions: v.get("max_sessions")?.as_usize()?,
+            queue_capacity: v.get("queue_capacity")?.as_usize()?,
+            adaptive_scheduler: v.get("adaptive_scheduler")?.as_bool()?,
+            scheduler_policy: v
+                .get_opt("scheduler_policy")
+                .map(|p| Ok::<_, JsonError>(PathBuf::from(p.as_str()?)))
+                .transpose()?,
+            decision_interval: v.get("decision_interval")?.as_usize()?,
+            method: Method::parse(v.get("method")?.as_str()?)
+                .ok_or_else(|| JsonError::Access("unknown method".into()))?,
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(Self::from_json(&Json::load(path)?)?)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.to_json().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn method_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = TempDir::new("serving_config");
+        let p = dir.path().join("serving.json");
+        let c = ServingConfig { max_sessions: 3, ..Default::default() };
+        c.save(&p).unwrap();
+        let d = ServingConfig::load(&p).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn none_policy_roundtrips() {
+        let c = ServingConfig { scheduler_policy: None, ..Default::default() };
+        let d = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(d.scheduler_policy, None);
+    }
+}

@@ -1,0 +1,160 @@
+//! Speculative-decoding parameters — the knobs the paper's scheduler tunes.
+
+use crate::config::{DIFFUSION_STEPS, K_MAX};
+use crate::util::json::{Json, JsonError};
+
+/// Per-stage draft horizon. The paper splits the 100-step denoising
+/// trajectory into three stages (early high-noise / intermediate / late
+/// low-noise, Fig. 3a) and uses a different K in each.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageParams {
+    /// Draft horizon in the early high-noise stage.
+    pub k_early: usize,
+    /// Draft horizon in the intermediate stage.
+    pub k_mid: usize,
+    /// Draft horizon in the late low-noise stage.
+    pub k_late: usize,
+}
+
+impl StageParams {
+    /// Uniform K across all stages (the fixed-K ablation of Table 4).
+    pub fn uniform(k: usize) -> Self {
+        Self { k_early: k, k_mid: k, k_late: k }
+    }
+
+    /// Draft horizon for diffusion timestep `t` (t counts down from
+    /// DIFFUSION_STEPS-1 to 0). Early = top 20% of timesteps, late =
+    /// bottom 20%, mid = the rest — matching the phase boundaries in
+    /// Fig. 3a.
+    pub fn k_for_timestep(&self, t: usize) -> usize {
+        let n = DIFFUSION_STEPS;
+        let k = if t >= n * 4 / 5 {
+            self.k_early
+        } else if t < n / 5 {
+            self.k_late
+        } else {
+            self.k_mid
+        };
+        k.clamp(1, K_MAX)
+    }
+}
+
+/// Full speculative-decoding parameter set emitted by the scheduler each
+/// decision interval (paper Fig. 2 "Decision stage": sigma scale,
+/// acceptance threshold, draft steps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecParams {
+    /// Per-stage draft horizons.
+    pub stages: StageParams,
+    /// Acceptance threshold λ ∈ (0, 1]: a draft is accepted when its MH
+    /// acceptance probability p_i ≥ λ (paper Eq. 11 discussion).
+    pub lambda: f32,
+    /// Multiplier on the DDPM per-step standard deviation used in the
+    /// acceptance test. Fig. 3b: without widening σ the acceptance
+    /// probability collapses in late denoising stages.
+    pub sigma_scale: f32,
+}
+
+impl SpecParams {
+    /// Defaults used when the scheduler is disabled (the "fixed
+    /// parameters" baseline in Fig. 6): moderate horizon, permissive
+    /// threshold, mild σ widening.
+    pub fn fixed_default() -> Self {
+        // Horizons picked from the exported fused-rollout sizes {4, 8, 16}
+        // so the drafter runs as one PJRT call per round (§Perf): the
+        // conservative early/late horizons match Fig. 3a's low-acceptance
+        // phases, the long mid horizon exploits the stable middle.
+        Self {
+            stages: StageParams { k_early: 8, k_mid: 16, k_late: 8 },
+            lambda: 0.05,
+            sigma_scale: 2.0,
+        }
+    }
+
+    /// Fixed-K ablation rows of Table 4.
+    pub fn fixed_k(k: usize) -> Self {
+        Self { stages: StageParams::uniform(k), lambda: 0.05, sigma_scale: 2.0 }
+    }
+
+    /// Clamp all fields into their valid ranges (the scheduler emits raw
+    /// squashed actions; this is the single place ranges are enforced).
+    pub fn clamped(mut self) -> Self {
+        self.stages.k_early = self.stages.k_early.clamp(1, K_MAX);
+        self.stages.k_mid = self.stages.k_mid.clamp(1, K_MAX);
+        self.stages.k_late = self.stages.k_late.clamp(1, K_MAX);
+        self.lambda = self.lambda.clamp(1e-4, 1.0);
+        self.sigma_scale = self.sigma_scale.clamp(0.5, 8.0);
+        self
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k_early", Json::Num(self.stages.k_early as f64)),
+            ("k_mid", Json::Num(self.stages.k_mid as f64)),
+            ("k_late", Json::Num(self.stages.k_late as f64)),
+            ("lambda", Json::Num(self.lambda as f64)),
+            ("sigma_scale", Json::Num(self.sigma_scale as f64)),
+        ])
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            stages: StageParams {
+                k_early: v.get("k_early")?.as_usize()?,
+                k_mid: v.get("k_mid")?.as_usize()?,
+                k_late: v.get("k_late")?.as_usize()?,
+            },
+            lambda: v.get("lambda")?.as_f32()?,
+            sigma_scale: v.get("sigma_scale")?.as_f32()?,
+        })
+    }
+}
+
+impl Default for SpecParams {
+    fn default() -> Self {
+        Self::fixed_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_boundaries() {
+        let s = StageParams { k_early: 2, k_mid: 10, k_late: 3 };
+        assert_eq!(s.k_for_timestep(99), 2);
+        assert_eq!(s.k_for_timestep(80), 2);
+        assert_eq!(s.k_for_timestep(79), 10);
+        assert_eq!(s.k_for_timestep(20), 10);
+        assert_eq!(s.k_for_timestep(19), 3);
+        assert_eq!(s.k_for_timestep(0), 3);
+    }
+
+    #[test]
+    fn k_is_always_in_range() {
+        let s = StageParams::uniform(0);
+        assert_eq!(s.k_for_timestep(50), 1);
+        let s = StageParams::uniform(999);
+        assert_eq!(s.k_for_timestep(50), K_MAX);
+    }
+
+    #[test]
+    fn clamp_enforces_ranges() {
+        let p =
+            SpecParams { stages: StageParams::uniform(99), lambda: 7.0, sigma_scale: 0.0 }
+                .clamped();
+        assert_eq!(p.stages.k_mid, K_MAX);
+        assert_eq!(p.lambda, 1.0);
+        assert_eq!(p.sigma_scale, 0.5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = SpecParams::fixed_k(10);
+        let q = SpecParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+    }
+}

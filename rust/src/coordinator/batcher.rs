@@ -1,0 +1,129 @@
+//! Request admission and dispatch policy.
+//!
+//! The engine serves one request at a time (the verify executable is
+//! already a batch across one request's candidates); the batcher's job
+//! is admission control: a bounded queue whose capacity bounds worst-
+//! case queueing latency, plus a dispatch policy choosing which session
+//! to serve next. FIFO is the default; `Fair` round-robins across
+//! sessions so one chatty session cannot starve the rest.
+
+use crate::coordinator::request::SegmentRequest;
+use std::collections::VecDeque;
+
+/// Dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Serve strictly in arrival order.
+    Fifo,
+    /// Round-robin across sessions (starvation-free under load).
+    Fair,
+}
+
+/// In-engine request buffer with a dispatch policy.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<SegmentRequest>,
+    policy: Policy,
+    last_session: Option<usize>,
+}
+
+impl Batcher {
+    /// Empty batcher.
+    pub fn new(policy: Policy) -> Self {
+        Self { queue: VecDeque::new(), policy, last_session: None }
+    }
+
+    /// Number of buffered requests.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when no requests are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request.
+    pub fn push(&mut self, req: SegmentRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Pop the next request per policy.
+    pub fn pop(&mut self) -> Option<SegmentRequest> {
+        match self.policy {
+            Policy::Fifo => self.queue.pop_front(),
+            Policy::Fair => {
+                // Prefer the first request whose session differs from the
+                // last-served one; fall back to FIFO.
+                let idx = match self.last_session {
+                    Some(last) => self
+                        .queue
+                        .iter()
+                        .position(|r| r.session != last)
+                        .unwrap_or(0),
+                    None => 0,
+                };
+                let req = self.queue.remove(idx);
+                if let Some(r) = &req {
+                    self.last_session = Some(r.session);
+                }
+                req
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(session: usize) -> SegmentRequest {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        SegmentRequest {
+            session,
+            obs: vec![],
+            params: None,
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_order() {
+        let mut b = Batcher::new(Policy::Fifo);
+        b.push(req(1));
+        b.push(req(2));
+        b.push(req(1));
+        assert_eq!(b.pop().unwrap().session, 1);
+        assert_eq!(b.pop().unwrap().session, 2);
+        assert_eq!(b.pop().unwrap().session, 1);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn fair_round_robins_sessions() {
+        let mut b = Batcher::new(Policy::Fair);
+        // Session 1 floods; session 2 submits one request.
+        b.push(req(1));
+        b.push(req(1));
+        b.push(req(1));
+        b.push(req(2));
+        assert_eq!(b.pop().unwrap().session, 1);
+        // Fair policy must serve session 2 before session 1's backlog.
+        assert_eq!(b.pop().unwrap().session, 2);
+        assert_eq!(b.pop().unwrap().session, 1);
+        assert_eq!(b.pop().unwrap().session, 1);
+    }
+
+    #[test]
+    fn len_tracks_queue() {
+        let mut b = Batcher::new(Policy::Fifo);
+        assert!(b.is_empty());
+        b.push(req(0));
+        assert_eq!(b.len(), 1);
+        b.pop();
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! `ts-dp serve` — run the serving coordinator against the real runtime.
+
+use crate::config::{DemoStyle, Method, Task};
+use crate::coordinator::batcher::Policy;
+use crate::coordinator::server::{serve, ServeOptions};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::SchedulerPolicy;
+use crate::util::cli::Args;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Entry point for `ts-dp load-sweep`: open-loop latency-under-load
+/// characterization (results feed EXPERIMENTS.md §Perf).
+pub fn cmd_load_sweep(args: &Args) -> Result<()> {
+    use crate::coordinator::workload::{load_sweep, record_observation_pool};
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
+    let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
+    let n = args.get_usize("requests", 24)?;
+    let seed = args.get_u64("seed", 0)?;
+    let rates: Vec<f64> = args
+        .get_or("rates", "1,5,20,100")
+        .split(',')
+        .map(|r| r.trim().parse::<f64>().context("bad --rates"))
+        .collect::<Result<_>>()?;
+    let den = ModelRuntime::load(&artifacts)?;
+    let pool = record_observation_pool(task, DemoStyle::Ph, 32, seed);
+    println!(
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
+    );
+    for point in load_sweep(&den, method, &pool, &rates, n, seed)? {
+        println!(
+            "{:>12.1} {:>12.2} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
+            point.offered_rate, point.goodput, point.p50, point.p95, point.p99, point.nfe
+        );
+    }
+    Ok(())
+}
+
+/// Entry point for `ts-dp serve`.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
+    let style = DemoStyle::parse(&args.get_or("style", "ph")).context("bad --style")?;
+    let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
+    let sessions = args.get_usize("sessions", 4)?;
+    let episodes = args.get_usize("episodes", 1)?;
+    let queue = args.get_usize("queue", 64)?;
+    let seed = args.get_u64("seed", 0)?;
+    let policy = match args.get_or("policy", "fair").as_str() {
+        "fifo" => Policy::Fifo,
+        "fair" => Policy::Fair,
+        other => anyhow::bail!("--policy must be fifo|fair, got '{other}'"),
+    };
+    let scheduler = if args.has_flag("adaptive") {
+        let p = PathBuf::from(
+            args.get_or("scheduler-policy", "artifacts/scheduler_policy.json"),
+        );
+        Some(SchedulerPolicy::load(&p).with_context(|| {
+            format!("loading {} (run `ts-dp train-scheduler`)", p.display())
+        })?)
+    } else {
+        None
+    };
+
+    let den = ModelRuntime::load(&artifacts)?;
+    let opts = ServeOptions {
+        task,
+        style,
+        method,
+        sessions,
+        episodes_per_session: episodes,
+        queue_capacity: queue,
+        policy,
+        scheduler,
+        seed,
+    };
+    println!(
+        "serving task={} method={} sessions={} episodes/session={}",
+        task.name(),
+        method.name(),
+        sessions,
+        episodes
+    );
+    let report = serve(&den, &opts)?;
+    println!("--- engine ---");
+    println!("{}", report.metrics.summary());
+    println!("--- sessions ---");
+    for s in &report.sessions {
+        println!(
+            "session {}: episodes={} success={}/{} score={:.2} segments={} \
+             latency={:.4}s nfe={:.0}",
+            s.session,
+            s.episodes,
+            s.successes,
+            s.episodes,
+            s.mean_score,
+            s.segments,
+            s.mean_latency,
+            s.nfe
+        );
+    }
+    println!("overall success rate: {:.1}%", report.success_rate() * 100.0);
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Server-side metrics: throughput, latency percentiles, NFE, queueing.
+
+use crate::util::stats::{percentile, OnlineStats};
+use std::time::Instant;
+
+/// Metrics accumulated by the engine thread.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    started: Instant,
+    /// Completed segment requests.
+    pub requests: u64,
+    /// Queue-delay stats (seconds).
+    pub queue_delay: OnlineStats,
+    /// Compute-time stats (seconds).
+    pub compute: OnlineStats,
+    /// All end-to-end latencies (for percentiles).
+    latencies: Vec<f64>,
+    /// All queue delays (for percentiles).
+    queue_delays: Vec<f64>,
+    /// Total NFE served.
+    pub total_nfe: f64,
+    /// Total drafts / accepted across requests.
+    pub drafts: u64,
+    /// Accepted drafts.
+    pub accepted: u64,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    /// Fresh metrics; the throughput clock starts now.
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: 0,
+            queue_delay: OnlineStats::new(),
+            compute: OnlineStats::new(),
+            latencies: Vec::new(),
+            queue_delays: Vec::new(),
+            total_nfe: 0.0,
+            drafts: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(
+        &mut self,
+        queue_delay_secs: f64,
+        compute_secs: f64,
+        nfe: f64,
+        drafts: usize,
+        accepted: usize,
+    ) {
+        self.requests += 1;
+        self.queue_delay.push(queue_delay_secs);
+        self.compute.push(compute_secs);
+        self.latencies.push(queue_delay_secs + compute_secs);
+        self.queue_delays.push(queue_delay_secs);
+        self.total_nfe += nfe;
+        self.drafts += drafts as u64;
+        self.accepted += accepted as u64;
+    }
+
+    /// Segments per second since start.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.requests as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// End-to-end latency percentile (q in [0,1]).
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        percentile(&self.latencies, q)
+    }
+
+    /// Draft acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafts == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafts as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} throughput={:.2} seg/s nfe/seg={:.1} accept={:.1}% \
+             latency p50={:.4}s p95={:.4}s p99={:.4}s queue p95={:.4}s",
+            self.requests,
+            self.throughput(),
+            self.total_nfe / self.requests.max(1) as f64,
+            self.acceptance_rate() * 100.0,
+            self.latency_percentile(0.50),
+            self.latency_percentile(0.95),
+            self.latency_percentile(0.99),
+            percentile(&self.queue_delays, 0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_percentiles() {
+        let mut m = ServerMetrics::new();
+        for i in 0..100 {
+            m.record(0.001, 0.01 + i as f64 * 0.0001, 25.0, 10, 9);
+        }
+        assert_eq!(m.requests, 100);
+        assert!((m.acceptance_rate() - 0.9).abs() < 1e-12);
+        assert!(m.latency_percentile(0.5) > 0.01);
+        assert!(m.latency_percentile(0.99) >= m.latency_percentile(0.5));
+        assert!((m.total_nfe - 2500.0).abs() < 1e-9);
+        assert!(m.throughput() > 0.0);
+        assert!(m.summary().contains("requests=100"));
+    }
+}

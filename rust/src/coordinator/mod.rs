@@ -1,0 +1,26 @@
+//! L3 serving coordinator.
+//!
+//! vLLM-router-style layout adapted to diffusion-policy serving: session
+//! drivers (one per controlled robot/env) run on worker threads and
+//! submit action-segment requests; a single **engine thread** owns the
+//! PJRT runtime (its handles are not `Send`) and serves requests through
+//! a bounded queue with backpressure. Scheduler inference (pure Rust,
+//! microseconds) runs *inside the session*, in parallel with the queue
+//! round-trip — matching the paper's "scheduler runs in parallel with
+//! the encoder, adding no extra inference latency".
+//!
+//! Cross-session *verification batching* would require a per-candidate
+//! conditioning artifact (today's `target_verify` shares one cond across
+//! the batch); this is called out in DESIGN.md §Perf as the next step.
+
+pub mod batcher;
+pub mod cli;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod session;
+pub mod workload;
+
+pub use metrics::ServerMetrics;
+pub use request::{SegmentReply, SegmentRequest};
+pub use server::{serve, ServeOptions, ServeReport};

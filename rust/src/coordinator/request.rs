@@ -1,0 +1,44 @@
+//! Request/response types between session drivers and the engine thread.
+
+use crate::config::SpecParams;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Per-segment reply from the engine.
+#[derive(Debug, Clone)]
+pub struct SegmentReply {
+    /// The clean action segment (flat HORIZON×ACT_DIM).
+    pub actions: Vec<f32>,
+    /// NFE consumed generating it.
+    pub nfe: f64,
+    /// Drafts proposed / accepted (speculative methods).
+    pub drafts: usize,
+    /// Accepted drafts.
+    pub accepted: usize,
+    /// Engine compute time (excludes queueing).
+    pub compute_secs: f64,
+}
+
+/// An action-segment request submitted by a session driver.
+pub struct SegmentRequest {
+    /// Stable session identifier (routing key).
+    pub session: usize,
+    /// Raw observation (length OBS_DIM).
+    pub obs: Vec<f32>,
+    /// Scheduler-chosen parameters, if the session runs adaptive TS-DP.
+    pub params: Option<SpecParams>,
+    /// Submission timestamp (queue-delay accounting).
+    pub submitted: Instant,
+    /// Reply channel.
+    pub reply: mpsc::SyncSender<SegmentReply>,
+}
+
+impl std::fmt::Debug for SegmentRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SegmentRequest")
+            .field("session", &self.session)
+            .field("obs_len", &self.obs.len())
+            .field("params", &self.params)
+            .finish()
+    }
+}

@@ -1,0 +1,144 @@
+//! Session driver: one controlled environment, running on a worker
+//! thread, talking to the engine over channels.
+
+use crate::config::{DemoStyle, SpecParams, Task, ACT_DIM, EXEC_STEPS, HORIZON};
+use crate::coordinator::request::{SegmentReply, SegmentRequest};
+use crate::envs::make_env;
+use crate::harness::episode::{DecisionHook, SegmentOutcome};
+use crate::scheduler::features::{features, FeatureState};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Summary of one session's episodes.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Session id.
+    pub session: usize,
+    /// Task served.
+    pub task: Task,
+    /// Episodes run.
+    pub episodes: usize,
+    /// Successful episodes.
+    pub successes: usize,
+    /// Mean score.
+    pub mean_score: f64,
+    /// Segments requested.
+    pub segments: usize,
+    /// Mean end-to-end segment latency (seconds).
+    pub mean_latency: f64,
+    /// Total NFE attributed to this session.
+    pub nfe: f64,
+}
+
+/// Configuration for one session driver.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Session id (routing key).
+    pub session: usize,
+    /// Task to control.
+    pub task: Task,
+    /// Env style.
+    pub style: DemoStyle,
+    /// Episodes to run before exiting.
+    pub episodes: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// Scheduler hook (None = fixed parameters server-side).
+    pub adaptive: Option<crate::scheduler::SchedulerPolicy>,
+}
+
+/// Run a session: submit one segment request per control round, execute
+/// EXEC_STEPS actions per reply. Returns the session report.
+pub fn run_session(
+    cfg: SessionConfig,
+    tx: mpsc::SyncSender<SegmentRequest>,
+) -> Result<SessionReport> {
+    let mut env = make_env(cfg.task, cfg.style);
+    let mut hook = cfg.adaptive.map(crate::scheduler::ServingHook::new);
+    let mut report = SessionReport {
+        session: cfg.session,
+        task: cfg.task,
+        episodes: cfg.episodes,
+        successes: 0,
+        mean_score: 0.0,
+        segments: 0,
+        mean_latency: 0.0,
+        nfe: 0.0,
+    };
+    let mut latency_sum = 0.0;
+    for ep in 0..cfg.episodes {
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ ((ep as u64 + 1) << 16));
+        env.reset(&mut rng);
+        let mut feat_state = FeatureState::default();
+        while !env.done() {
+            let obs = env.observe();
+            // Scheduler decision happens session-side (pure Rust) while
+            // the request waits in the engine queue.
+            let params: Option<SpecParams> = hook.as_mut().map(|h| {
+                let phase_frac = env.phase() as f32 / env.num_phases().max(1) as f32;
+                let feat = features(&obs, env.progress(), phase_frac, &feat_state);
+                h.decide(&feat)
+            });
+            let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentReply>(1);
+            let submitted = Instant::now();
+            tx.send(SegmentRequest {
+                session: cfg.session,
+                obs,
+                params,
+                submitted,
+                reply: reply_tx,
+            })
+            .ok()
+            .context("engine closed the request channel")?;
+            let reply = reply_rx.recv().context("engine dropped the reply")?;
+            let latency = submitted.elapsed().as_secs_f64();
+            latency_sum += latency;
+            report.segments += 1;
+            report.nfe += reply.nfe;
+
+            for i in 0..EXEC_STEPS.min(HORIZON) {
+                if env.done() {
+                    break;
+                }
+                env.step(&reply.actions[i * ACT_DIM..(i + 1) * ACT_DIM]);
+            }
+            // Feature/scheduler feedback.
+            feat_state.recent_acceptance = if reply.drafts > 0 {
+                reply.accepted as f32 / reply.drafts as f32
+            } else {
+                1.0
+            };
+            feat_state.recent_drafts = reply.drafts as f32;
+            feat_state.recent_speed = env.ee_speed();
+            if let Some(p) = params {
+                feat_state.last_params = p;
+            }
+            if let Some(h) = hook.as_mut() {
+                let meta = crate::harness::episode::SegmentMeta {
+                    env_step: env.steps(),
+                    phase: env.phase(),
+                    ee_speed: env.ee_speed(),
+                    drafts: reply.drafts,
+                    accepted: reply.accepted,
+                    nfe: reply.nfe,
+                    wall_secs: reply.compute_secs,
+                    params: params.unwrap_or_default(),
+                };
+                h.post_segment(&SegmentOutcome {
+                    meta: &meta,
+                    done: env.done(),
+                    success: env.success(),
+                    score: env.score(),
+                    task: cfg.task,
+                    t_max: env.max_steps(),
+                });
+            }
+        }
+        report.successes += env.success() as usize;
+        report.mean_score += env.score() as f64 / cfg.episodes as f64;
+    }
+    report.mean_latency = latency_sum / report.segments.max(1) as f64;
+    Ok(report)
+}

@@ -1,0 +1,157 @@
+//! Metropolis–Hastings draft acceptance (paper Eq. 10–11).
+//!
+//! A draft sample was generated as x = μ̂ + σ·ξ from the drafter's
+//! posterior; the target model's posterior at the same point has mean μ.
+//! With shared isotropic σ the log acceptance ratio reduces to
+//!
+//!   log α = −½‖d‖² − ⟨d, ξ⟩,   d = (μ̂ − μ)/σ,
+//!
+//! and p = min(1, exp(log α)). The paper accepts when p ≥ λ with λ a
+//! scheduler-tuned threshold (deterministic mode); classic speculative
+//! sampling instead draws U ~ Unif(0,1) and accepts when U ≤ p
+//! (stochastic mode). Both are provided; TS-DP uses the threshold.
+
+use crate::util::Rng;
+
+/// How the acceptance probability is turned into an accept/reject bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AcceptMode {
+    /// Accept iff p ≥ λ (paper §3.2; λ emitted by the scheduler).
+    Threshold(f32),
+    /// Accept iff U ≤ p with U ~ Unif(0,1) (classic lossless test).
+    Stochastic,
+}
+
+/// Eq. 10: log acceptance ratio for one draft.
+///
+/// `mu_draft` = drafter posterior mean μ̂, `mu_target` = target posterior
+/// mean μ, `sigma` = effective (possibly scheduler-scaled) std, `xi` = the
+/// standard-normal draw that produced the draft sample.
+pub fn log_accept_ratio(mu_draft: &[f32], mu_target: &[f32], sigma: f32, xi: &[f32]) -> f64 {
+    debug_assert_eq!(mu_draft.len(), mu_target.len());
+    debug_assert_eq!(mu_draft.len(), xi.len());
+    let sigma = sigma.max(1e-8) as f64;
+    let mut quad = 0.0f64;
+    let mut cross = 0.0f64;
+    for i in 0..mu_draft.len() {
+        let d = (mu_draft[i] as f64 - mu_target[i] as f64) / sigma;
+        quad += d * d;
+        cross += d * xi[i] as f64;
+    }
+    -0.5 * quad - cross
+}
+
+/// Eq. 11: acceptance probability p = min(1, exp(log α)).
+pub fn accept_prob(log_alpha: f64) -> f64 {
+    log_alpha.min(0.0).exp()
+}
+
+/// Full accept/reject decision. Returns `(accepted, p)`.
+pub fn accept_draft(
+    mu_draft: &[f32],
+    mu_target: &[f32],
+    sigma: f32,
+    xi: &[f32],
+    mode: AcceptMode,
+    rng: &mut Rng,
+) -> (bool, f64) {
+    let p = accept_prob(log_accept_ratio(mu_draft, mu_target, sigma, xi));
+    let accepted = match mode {
+        AcceptMode::Threshold(lambda) => p >= lambda as f64,
+        AcceptMode::Stochastic => (rng.uniform() as f64) <= p,
+    };
+    (accepted, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, check_property};
+
+    #[test]
+    fn identical_means_always_accept() {
+        let mu = vec![0.3, -0.5, 0.9];
+        let xi = vec![1.0, -2.0, 0.5];
+        let la = log_accept_ratio(&mu, &mu, 0.1, &xi);
+        assert_eq!(la, 0.0);
+        assert_eq!(accept_prob(la), 1.0);
+    }
+
+    #[test]
+    fn matches_closed_form_1d() {
+        // d = (0.2 - 0.1)/0.5 = 0.2; log α = -0.5*0.04 - 0.2*ξ.
+        let la = log_accept_ratio(&[0.2], &[0.1], 0.5, &[1.5]);
+        assert_close(la as f32, -0.5 * 0.04 - 0.2 * 1.5, 1e-5);
+    }
+
+    #[test]
+    fn threshold_mode_is_deterministic() {
+        let mut rng = Rng::seed_from_u64(0);
+        let (a1, p1) =
+            accept_draft(&[0.11], &[0.1], 1.0, &[0.0], AcceptMode::Threshold(0.5), &mut rng);
+        let (a2, p2) =
+            accept_draft(&[0.11], &[0.1], 1.0, &[0.0], AcceptMode::Threshold(0.5), &mut rng);
+        assert_eq!(a1, a2);
+        assert_eq!(p1, p2);
+        assert!(a1, "tiny mean gap, wide sigma -> p ~ 1");
+    }
+
+    #[test]
+    fn larger_sigma_raises_acceptance_of_mismatched_means() {
+        // Fig. 3b: widening σ rescues acceptance when means disagree.
+        let mu_d = vec![0.5; 8];
+        let mu_t = vec![0.0; 8];
+        let xi = vec![0.3; 8];
+        let p_narrow = accept_prob(log_accept_ratio(&mu_d, &mu_t, 0.1, &xi));
+        let p_wide = accept_prob(log_accept_ratio(&mu_d, &mu_t, 2.0, &xi));
+        assert!(p_wide > p_narrow);
+    }
+
+    #[test]
+    fn stochastic_mode_accept_rate_tracks_p() {
+        // Choose d so that with ξ = 0: p = exp(-0.5 d²) = 0.5 → d = sqrt(2 ln 2).
+        let d = (2.0 * std::f64::consts::LN_2).sqrt() as f32;
+        let mut rng = Rng::seed_from_u64(42);
+        let mut acc = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            let (a, p) = accept_draft(&[d], &[0.0], 1.0, &[0.0], AcceptMode::Stochastic, &mut rng);
+            assert_close(p as f32, 0.5, 1e-5);
+            acc += a as usize;
+        }
+        let rate = acc as f64 / n as f64;
+        assert!((rate - 0.5).abs() < 0.02, "rate={rate}");
+    }
+
+    /// p is a probability and is monotonically non-increasing in the
+    /// mean gap (with ξ = 0).
+    #[test]
+    fn prop_p_is_valid_and_monotone() {
+        check_property("p_valid_monotone", 200, |rng| {
+            let gap = rng.uniform_range(0.0, 5.0);
+            let sigma = rng.uniform_range(0.05, 4.0);
+            let xi = [0.0f32; 4];
+            let mu_t = [0.0f32; 4];
+            let mu_d = [gap; 4];
+            let p = accept_prob(log_accept_ratio(&mu_d, &mu_t, sigma, &xi));
+            assert!((0.0..=1.0).contains(&p));
+            let mu_d2 = [gap + 0.1; 4];
+            let p2 = accept_prob(log_accept_ratio(&mu_d2, &mu_t, sigma, &xi));
+            assert!(p2 <= p + 1e-12);
+        });
+    }
+
+    /// Invariance: scaling both the gap and sigma by the same factor
+    /// leaves log α unchanged (d is scale-free) when ξ = 0.
+    #[test]
+    fn prop_scale_invariance() {
+        check_property("scale_invariance", 200, |rng| {
+            let gap = rng.uniform_range(0.01, 2.0);
+            let s = rng.uniform_range(0.1, 4.0);
+            let c = rng.uniform_range(0.5, 3.0);
+            let la1 = log_accept_ratio(&[gap], &[0.0], s, &[0.0]);
+            let la2 = log_accept_ratio(&[gap * c], &[0.0], s * c, &[0.0]);
+            assert!((la1 - la2).abs() < 1e-4, "{la1} vs {la2}");
+        });
+    }
+}

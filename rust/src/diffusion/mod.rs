@@ -1,0 +1,18 @@
+//! DDPM math on the request path.
+//!
+//! Three pieces, mirroring §3.1–3.2 of the paper:
+//! - [`schedule`]: the DDPM noise schedule and posterior (the Rust twin of
+//!   `python/compile/ddpm.py`; parity is enforced by a golden-value test).
+//! - [`acceptance`]: the Metropolis–Hastings draft acceptance test
+//!   (Eq. 10–11).
+//! - [`coupling`]: reflection-maximal coupling used to correct the first
+//!   rejected draft (Eq. 4–6) so the committed sample still follows the
+//!   target distribution — this is what makes the acceleration lossless.
+
+pub mod acceptance;
+pub mod coupling;
+pub mod schedule;
+
+pub use acceptance::{accept_draft, log_accept_ratio, AcceptMode};
+pub use coupling::reflection_couple;
+pub use schedule::DdpmSchedule;

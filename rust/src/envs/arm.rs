@@ -1,0 +1,207 @@
+//! Kinematic end-effector + object core shared by the manipulation tasks.
+//!
+//! The paper's tasks run in MuJoCo; what TS-DP actually measures, though,
+//! is how *task-phase structure* (coarse fast motion vs. fine slow
+//! manipulation) interacts with speculative decoding. This core models
+//! exactly that: a velocity-controlled end-effector in a normalized
+//! [−1, 1]³ workspace, a smoothed gripper that takes several control
+//! steps to close (so grasping forces a slow fine phase), and rigid
+//! attachment of grasped objects.
+
+use crate::config::ACT_DIM;
+
+/// Maximum end-effector displacement per control step at full action
+/// magnitude (workspace units).
+pub const SPEED_CAP: f32 = 0.08;
+/// Gripper slew per step (fully open→closed takes 1/GRIPPER_SLEW steps).
+pub const GRIPPER_SLEW: f32 = 0.25;
+/// Gripper closedness above which a grasp engages.
+pub const GRASP_CLOSE: f32 = 0.7;
+/// Gripper closedness below which a held object is released.
+pub const GRASP_OPEN: f32 = 0.3;
+
+/// State of the kinematic arm and the task objects.
+#[derive(Debug, Clone)]
+pub struct ArmState {
+    /// End-effector position, each coordinate in [−1, 1].
+    pub ee: [f32; 3],
+    /// Gripper closedness in [0, 1] (0 = open).
+    pub gripper: f32,
+    /// Index into `objects` of the currently held object.
+    pub held: Option<usize>,
+    /// Object positions.
+    pub objects: Vec<[f32; 3]>,
+    /// End-effector displacement magnitude over the last step.
+    pub last_speed: f32,
+    /// Per-object grasp tolerance (distance at which a close engages).
+    pub grasp_tol: f32,
+}
+
+impl ArmState {
+    /// Arm at `ee` with the given objects.
+    pub fn new(ee: [f32; 3], objects: Vec<[f32; 3]>, grasp_tol: f32) -> Self {
+        Self { ee, gripper: 0.0, held: None, objects, last_speed: 0.0, grasp_tol }
+    }
+
+    /// Apply one action (see `envs` module docs for the layout):
+    /// dims 0..3 = ee velocity command in [−1,1], dim 3 = gripper command.
+    /// Objects with `gravity[i]` true fall to z = 0 when released.
+    pub fn step(&mut self, action: &[f32], gravity: &[bool]) {
+        debug_assert_eq!(action.len(), ACT_DIM);
+        // --- end-effector integration ---
+        let mut disp = [0.0f32; 3];
+        let mut mag2 = 0.0;
+        for i in 0..3 {
+            let a = action[i].clamp(-1.0, 1.0);
+            disp[i] = a * SPEED_CAP;
+            mag2 += disp[i] * disp[i];
+        }
+        // Cap the *vector* magnitude so diagonal moves are not faster.
+        let mag = mag2.sqrt();
+        if mag > SPEED_CAP {
+            for d in disp.iter_mut() {
+                *d *= SPEED_CAP / mag;
+            }
+        }
+        for i in 0..3 {
+            self.ee[i] = (self.ee[i] + disp[i]).clamp(-1.0, 1.0);
+        }
+        // Table plane: the end-effector cannot go below z = 0.
+        self.ee[2] = self.ee[2].max(0.0);
+        self.last_speed = (disp[0] * disp[0] + disp[1] * disp[1] + disp[2] * disp[2]).sqrt();
+
+        // --- gripper slew ---
+        let target = (action[3].clamp(-1.0, 1.0) + 1.0) / 2.0;
+        let delta = (target - self.gripper).clamp(-GRIPPER_SLEW, GRIPPER_SLEW);
+        self.gripper = (self.gripper + delta).clamp(0.0, 1.0);
+
+        // --- grasp / release ---
+        match self.held {
+            Some(idx) => {
+                if self.gripper < GRASP_OPEN {
+                    self.held = None;
+                    if gravity.get(idx).copied().unwrap_or(false) {
+                        self.objects[idx][2] = 0.0;
+                    }
+                } else {
+                    self.objects[idx] = self.ee;
+                }
+            }
+            None => {
+                if self.gripper > GRASP_CLOSE {
+                    // Grasp the nearest object within tolerance.
+                    let mut best: Option<(usize, f32)> = None;
+                    for (i, o) in self.objects.iter().enumerate() {
+                        let d = dist3(&self.ee, o);
+                        if d <= self.grasp_tol && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                            best = Some((i, d));
+                        }
+                    }
+                    if let Some((i, _)) = best {
+                        self.held = Some(i);
+                        self.objects[i] = self.ee;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Euclidean distance between two 3-vectors.
+pub fn dist3(a: &[f32; 3], b: &[f32; 3]) -> f32 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    (dx * dx + dy * dy + dz * dz).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::pack_action;
+
+    fn arm_with_cube() -> ArmState {
+        ArmState::new([0.0, 0.0, 0.5], vec![[0.3, 0.0, 0.0]], 0.06)
+    }
+
+    #[test]
+    fn ee_moves_and_is_speed_capped() {
+        let mut arm = arm_with_cube();
+        arm.step(&pack_action([1.0, 1.0, 1.0], -1.0), &[false]);
+        assert!(arm.last_speed <= SPEED_CAP + 1e-6);
+        assert!(arm.ee[0] > 0.0 && arm.ee[1] > 0.0);
+    }
+
+    #[test]
+    fn ee_stays_in_workspace() {
+        let mut arm = arm_with_cube();
+        for _ in 0..100 {
+            arm.step(&pack_action([1.0, 1.0, 1.0], -1.0), &[false]);
+        }
+        for c in arm.ee {
+            assert!(c <= 1.0);
+        }
+    }
+
+    #[test]
+    fn gripper_takes_multiple_steps_to_close() {
+        let mut arm = arm_with_cube();
+        arm.step(&pack_action([0.0; 3], 1.0), &[false]);
+        assert!(arm.gripper < GRASP_CLOSE, "one step must not fully close");
+        for _ in 0..5 {
+            arm.step(&pack_action([0.0; 3], 1.0), &[false]);
+        }
+        assert!(arm.gripper >= 0.99);
+    }
+
+    #[test]
+    fn grasp_requires_proximity() {
+        let mut arm = arm_with_cube();
+        // Close far away: nothing grasped.
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], 1.0), &[false]);
+        }
+        assert_eq!(arm.held, None);
+        // Move onto the cube while closed — grasping requires closing *at*
+        // the object, so reopen, approach, close.
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], -1.0), &[false]);
+        }
+        arm.ee = [0.3, 0.0, 0.0];
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], 1.0), &[false]);
+        }
+        assert_eq!(arm.held, Some(0));
+    }
+
+    #[test]
+    fn held_object_follows_and_releases_with_gravity() {
+        let mut arm = arm_with_cube();
+        arm.ee = [0.3, 0.0, 0.0];
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], 1.0), &[false]);
+        }
+        assert_eq!(arm.held, Some(0));
+        // Lift up.
+        for _ in 0..5 {
+            arm.step(&pack_action([0.0, 0.0, 1.0], 1.0), &[true]);
+        }
+        assert!(arm.objects[0][2] > 0.2);
+        // Release: object falls to the table.
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], -1.0), &[true]);
+        }
+        assert_eq!(arm.held, None);
+        assert_eq!(arm.objects[0][2], 0.0);
+    }
+
+    #[test]
+    fn nearest_object_is_grasped() {
+        let mut arm =
+            ArmState::new([0.0, 0.0, 0.0], vec![[0.05, 0.0, 0.0], [0.02, 0.0, 0.0]], 0.06);
+        for _ in 0..6 {
+            arm.step(&pack_action([0.0; 3], 1.0), &[false, false]);
+        }
+        assert_eq!(arm.held, Some(1));
+    }
+}

@@ -1,0 +1,217 @@
+//! Demonstration dataset generation — the stand-in for the PH/MH human
+//! demonstration corpora.
+//!
+//! For each (task, style) we roll the scripted expert and record, at
+//! every control step, the observation and the next [`HORIZON`] expert
+//! actions (the receding-horizon window Diffusion Policy trains on).
+//! Datasets are written with [`Tensor::save`] so the Python training
+//! pipeline reads them with `numpy.fromfile`.
+
+use crate::config::{DemoStyle, Task, ACT_DIM, HORIZON, OBS_DIM};
+use crate::envs::make_env;
+use crate::util::tensorio::Tensor;
+use crate::util::{json::Json, Rng};
+use anyhow::Result;
+use std::path::Path;
+
+/// One recorded demonstration episode.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    /// Observations, one per control step.
+    pub obs: Vec<Vec<f32>>,
+    /// Expert actions, one per control step.
+    pub actions: Vec<Vec<f32>>,
+    /// Whether the expert succeeded.
+    pub success: bool,
+}
+
+/// Roll the scripted expert once.
+pub fn record_episode(task: Task, style: DemoStyle, seed: u64) -> Episode {
+    let mut env = make_env(task, style);
+    let mut reset_rng = Rng::seed_from_u64(seed);
+    let mut act_rng = Rng::seed_from_u64(seed ^ 0x9e3779b97f4a7c15);
+    env.reset(&mut reset_rng);
+    let mut obs = Vec::new();
+    let mut actions = Vec::new();
+    while !env.done() {
+        obs.push(env.observe());
+        let a = env.expert_action(&mut act_rng);
+        env.step(&a);
+        actions.push(a);
+    }
+    Episode { obs, actions, success: env.success() }
+}
+
+/// Sliding-window training pairs from a set of episodes:
+/// X[i] = obs_t, Y[i] = actions_{t..t+HORIZON} (padded by repeating the
+/// last action at episode end, as Diffusion Policy does).
+pub fn to_windows(episodes: &[Episode]) -> (Tensor, Tensor) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut n = 0usize;
+    for ep in episodes {
+        let t_max = ep.actions.len();
+        for t in 0..t_max {
+            xs.extend_from_slice(&ep.obs[t]);
+            for h in 0..HORIZON {
+                let idx = (t + h).min(t_max - 1);
+                ys.extend_from_slice(&ep.actions[idx]);
+            }
+            n += 1;
+        }
+    }
+    (
+        Tensor::new(vec![n, OBS_DIM], xs).expect("obs windows"),
+        Tensor::new(vec![n, HORIZON, ACT_DIM], ys).expect("act windows"),
+    )
+}
+
+/// Summary of one generated dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSummary {
+    /// Task the dataset demonstrates.
+    pub task: Task,
+    /// Expert style.
+    pub style: DemoStyle,
+    /// Episode count.
+    pub episodes: usize,
+    /// Training windows.
+    pub windows: usize,
+    /// Expert success rate over the recorded episodes.
+    pub expert_success: f32,
+}
+
+/// Generate and save the demo dataset for one (task, style) pair.
+/// Files: `<dir>/<task>_<style>_obs.{json,bin}` and `..._act.{json,bin}`.
+pub fn generate_dataset(
+    dir: &Path,
+    task: Task,
+    style: DemoStyle,
+    n_episodes: usize,
+    seed: u64,
+) -> Result<DatasetSummary> {
+    let mut episodes = Vec::with_capacity(n_episodes);
+    let mut successes = 0usize;
+    let mut attempt = 0u64;
+    // Keep only successful demonstrations (as human demo corpora do), but
+    // cap attempts so a broken expert fails loudly.
+    while episodes.len() < n_episodes {
+        let ep = record_episode(task, style, seed.wrapping_add(attempt));
+        attempt += 1;
+        anyhow::ensure!(
+            attempt < 20 * n_episodes as u64,
+            "expert for {task:?}/{style:?} succeeds too rarely"
+        );
+        if ep.success {
+            successes += 1;
+            episodes.push(ep);
+        }
+    }
+    let (obs, act) = to_windows(&episodes);
+    let stem = format!("{}_{}", task.name(), style.name());
+    obs.save(&dir.join(format!("{stem}_obs")))?;
+    act.save(&dir.join(format!("{stem}_act")))?;
+    Ok(DatasetSummary {
+        task,
+        style,
+        episodes: episodes.len(),
+        windows: obs.rows(),
+        expert_success: successes as f32 / attempt as f32,
+    })
+}
+
+/// Generate every (task, style) dataset plus a manifest JSON.
+pub fn generate_all(dir: &Path, n_episodes: usize, seed: u64) -> Result<Vec<DatasetSummary>> {
+    std::fs::create_dir_all(dir)?;
+    let mut summaries = Vec::new();
+    for (ti, task) in Task::ALL.iter().enumerate() {
+        for (si, style) in [DemoStyle::Ph, DemoStyle::Mh].iter().enumerate() {
+            let s = generate_dataset(
+                dir,
+                *task,
+                *style,
+                n_episodes,
+                seed ^ ((ti as u64) << 32) ^ ((si as u64) << 16),
+            )?;
+            summaries.push(s);
+        }
+    }
+    let manifest = Json::Arr(
+        summaries
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("task", Json::Str(s.task.name().into())),
+                    ("style", Json::Str(s.style.name().into())),
+                    ("episodes", Json::Num(s.episodes as f64)),
+                    ("windows", Json::Num(s.windows as f64)),
+                    ("expert_success", Json::Num(s.expert_success as f64)),
+                    ("obs_dim", Json::Num(OBS_DIM as f64)),
+                    ("act_dim", Json::Num(ACT_DIM as f64)),
+                    ("horizon", Json::Num(HORIZON as f64)),
+                ])
+            })
+            .collect(),
+    );
+    manifest.save(&dir.join("demos_manifest.json"))?;
+    Ok(summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn episode_shapes_are_consistent() {
+        let ep = record_episode(Task::Lift, DemoStyle::Ph, 0);
+        assert_eq!(ep.obs.len(), ep.actions.len());
+        assert!(ep.obs.len() > 10);
+        assert!(ep.success);
+        for o in &ep.obs {
+            assert_eq!(o.len(), OBS_DIM);
+        }
+    }
+
+    #[test]
+    fn windows_pad_at_episode_end() {
+        let ep = Episode {
+            obs: vec![vec![0.0; OBS_DIM]; 3],
+            actions: vec![vec![1.0; ACT_DIM], vec![2.0; ACT_DIM], vec![3.0; ACT_DIM]],
+            success: true,
+        };
+        let (obs, act) = to_windows(&[ep]);
+        assert_eq!(obs.shape, vec![3, OBS_DIM]);
+        assert_eq!(act.shape, vec![3, HORIZON, ACT_DIM]);
+        // Window starting at t=2 must repeat action 3.
+        let w2 = act.row(2);
+        assert!(w2.iter().all(|x| *x == 3.0));
+        // Window at t=0: first three actions then padding with 3.0.
+        let w0 = act.row(0);
+        assert_eq!(w0[0], 1.0);
+        assert_eq!(w0[ACT_DIM], 2.0);
+        assert_eq!(w0[2 * ACT_DIM], 3.0);
+        assert_eq!(w0[(HORIZON - 1) * ACT_DIM], 3.0);
+    }
+
+    #[test]
+    fn dataset_generation_writes_files() {
+        let dir = TempDir::new("demo_dataset");
+        let s = generate_dataset(dir.path(), Task::Lift, DemoStyle::Ph, 3, 42).unwrap();
+        assert_eq!(s.episodes, 3);
+        assert!(s.windows > 30);
+        let obs = Tensor::load(&dir.path().join("lift_ph_obs")).unwrap();
+        let act = Tensor::load(&dir.path().join("lift_ph_act")).unwrap();
+        assert_eq!(obs.rows(), act.rows());
+        assert_eq!(obs.shape[1], OBS_DIM);
+        assert_eq!(act.shape[1..], [HORIZON, ACT_DIM]);
+    }
+
+    #[test]
+    fn demos_are_seed_reproducible() {
+        let a = record_episode(Task::Can, DemoStyle::Mh, 7);
+        let b = record_episode(Task::Can, DemoStyle::Mh, 7);
+        assert_eq!(a.obs, b.obs);
+        assert_eq!(a.actions, b.actions);
+    }
+}

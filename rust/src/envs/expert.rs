@@ -1,0 +1,261 @@
+//! Scripted waypoint experts — the stand-in for the paper's human
+//! demonstration corpora.
+//!
+//! A task is demonstrated as a sequence of [`Leg`]s: move to a target at
+//! a per-leg speed, then dwell while holding a gripper command. Coarse
+//! legs (transport) use high speeds; fine legs (grasp, insert) use low
+//! speeds and tight tolerances — producing exactly the velocity/precision
+//! phase structure the paper's Fig. 4 analysis relies on.
+//!
+//! PH (proficient) experts execute legs cleanly. MH (mixed) experts
+//! perturb them: action noise, per-episode detour waypoints, random
+//! hesitations and a slower gain — yielding the multimodal, lower-quality
+//! data distribution of the Mixed-Human datasets.
+
+use crate::config::DemoStyle;
+use crate::envs::arm::{dist3, ArmState, SPEED_CAP};
+use crate::envs::pack_action;
+use crate::util::Rng;
+
+/// One expert movement segment.
+#[derive(Debug, Clone)]
+pub struct Leg {
+    /// Workspace target for the end-effector.
+    pub target: [f32; 3],
+    /// Gripper command held during the leg (−1 open, +1 close).
+    pub gripper: f32,
+    /// Distance at which the leg is considered reached.
+    pub tol: f32,
+    /// Speed fraction in (0, 1]: action magnitude commanded en route.
+    pub speed: f32,
+    /// Steps to dwell at the target (e.g. while the gripper closes).
+    pub dwell: usize,
+}
+
+impl Leg {
+    /// Coarse, fast transport leg.
+    pub fn coarse(target: [f32; 3], gripper: f32) -> Self {
+        Self { target, gripper, tol: 0.05, speed: 1.0, dwell: 0 }
+    }
+
+    /// Fine, slow manipulation leg with a dwell (grasp/insert).
+    pub fn fine(target: [f32; 3], gripper: f32, dwell: usize) -> Self {
+        Self { target, gripper, tol: 0.015, speed: 0.25, dwell }
+    }
+}
+
+/// Stateful executor of a leg sequence.
+#[derive(Debug, Clone)]
+pub struct ExpertDriver {
+    legs: Vec<Leg>,
+    current: usize,
+    dwelled: usize,
+    /// MH only: persistent action-noise state (OU process).
+    ou: [f32; 3],
+    /// MH only: one detour waypoint inserted before a random leg.
+    detour: Option<(usize, [f32; 3])>,
+    detour_done: bool,
+}
+
+impl ExpertDriver {
+    /// Driver for a fresh episode. MH experts sample their detour here.
+    pub fn new(legs: Vec<Leg>, style: DemoStyle, rng: &mut Rng) -> Self {
+        let detour = match style {
+            DemoStyle::Ph => None,
+            DemoStyle::Mh => {
+                if legs.is_empty() || !rng.coin(0.6) {
+                    None
+                } else {
+                    let leg = rng.below(legs.len());
+                    let wp = [
+                        rng.uniform_range(-0.6, 0.6),
+                        rng.uniform_range(-0.6, 0.6),
+                        rng.uniform_range(0.1, 0.7),
+                    ];
+                    Some((leg, wp))
+                }
+            }
+        };
+        Self { legs, current: 0, dwelled: 0, ou: [0.0; 3], detour, detour_done: false }
+    }
+
+    /// Index of the leg currently being executed (clamped to the last).
+    pub fn current_leg(&self) -> usize {
+        self.current.min(self.legs.len().saturating_sub(1))
+    }
+
+    /// Whether every leg (and dwell) has completed.
+    pub fn finished(&self) -> bool {
+        self.current >= self.legs.len()
+    }
+
+    /// Replace the remaining legs (used by envs whose later targets
+    /// depend on runtime state).
+    pub fn replace_legs(&mut self, legs: Vec<Leg>) {
+        self.legs = legs;
+        self.current = 0;
+        self.dwelled = 0;
+        self.detour_done = true; // keep MH detours single-shot
+    }
+
+    /// Compute the expert action for the current arm state.
+    pub fn action(&mut self, arm: &ArmState, style: DemoStyle, rng: &mut Rng) -> Vec<f32> {
+        if self.finished() {
+            // Hold position with the final gripper command.
+            let g = self.legs.last().map(|l| l.gripper).unwrap_or(-1.0);
+            return pack_action([0.0; 3], g);
+        }
+        let leg_idx = self.current;
+        // MH detour: on the flagged leg, first visit the detour waypoint.
+        let (target, tol, speed) = match self.detour {
+            Some((di, wp)) if di == leg_idx && !self.detour_done => {
+                if dist3(&arm.ee, &wp) < 0.06 {
+                    self.detour_done = true;
+                    let l = &self.legs[leg_idx];
+                    (l.target, l.tol, l.speed)
+                } else {
+                    (wp, 0.06f32, 0.8f32)
+                }
+            }
+            _ => {
+                let l = &self.legs[leg_idx];
+                (l.target, l.tol, l.speed)
+            }
+        };
+        let leg = &self.legs[leg_idx];
+
+        let d = dist3(&arm.ee, &target);
+        let reached = d < tol;
+        let mut vel = [0.0f32; 3];
+        if !reached {
+            // Action magnitude: `speed`, decaying near the target so the
+            // step does not overshoot (dist/SPEED_CAP caps displacement).
+            let gain = match style {
+                DemoStyle::Ph => 1.0,
+                DemoStyle::Mh => 0.8,
+            };
+            let mag = speed.min(d / SPEED_CAP) * gain;
+            for i in 0..3 {
+                vel[i] = (target[i] - arm.ee[i]) / d * mag;
+            }
+        }
+
+        // MH perturbations: OU action noise + random hesitation. Noise
+        // fades near the target — even sloppy demonstrators steady their
+        // hand for fine operations — so fine legs remain completable.
+        if style == DemoStyle::Mh {
+            if rng.coin(0.05) {
+                return pack_action([0.0; 3], leg.gripper); // hesitate
+            }
+            let mut steady = (d / 0.15).min(1.0);
+            if leg.speed < 0.5 {
+                steady *= 0.5; // extra care on fine legs
+            }
+            for i in 0..3 {
+                self.ou[i] = 0.8 * self.ou[i] + 0.12 * rng.normal();
+                vel[i] += self.ou[i] * steady;
+            }
+        }
+
+        // Leg bookkeeping: reaching starts the dwell; dwell completion
+        // advances. We only advance once the gripper has also slewed to
+        // its commanded state, so grasp legs actually grasp.
+        if reached && self.detour.map(|(di, _)| di != leg_idx).unwrap_or(true) || reached && self.detour_done {
+            if self.dwelled >= leg.dwell {
+                self.current += 1;
+                self.dwelled = 0;
+            } else {
+                self.dwelled += 1;
+            }
+        }
+
+        pack_action(vel, leg.gripper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(legs: Vec<Leg>, style: DemoStyle, max_steps: usize) -> (ArmState, ExpertDriver) {
+        let mut arm = ArmState::new([0.0, 0.0, 0.0], vec![[0.5, 0.5, 0.0]], 0.05);
+        let mut rng = Rng::seed_from_u64(11);
+        let mut driver = ExpertDriver::new(legs, style, &mut rng);
+        for _ in 0..max_steps {
+            if driver.finished() {
+                break;
+            }
+            let a = driver.action(&arm, style, &mut rng);
+            arm.step(&a, &[false]);
+        }
+        (arm, driver)
+    }
+
+    #[test]
+    fn ph_expert_reaches_single_target() {
+        let (arm, driver) =
+            drive(vec![Leg::coarse([0.5, -0.3, 0.2], -1.0)], DemoStyle::Ph, 100);
+        assert!(driver.finished());
+        assert!(dist3(&arm.ee, &[0.5, -0.3, 0.2]) < 0.06);
+    }
+
+    #[test]
+    fn fine_leg_is_slower_than_coarse() {
+        let mut arm = ArmState::new([0.0; 3], vec![], 0.05);
+        let mut rng = Rng::seed_from_u64(1);
+        let mut fine =
+            ExpertDriver::new(vec![Leg::fine([0.8, 0.0, 0.0], -1.0, 0)], DemoStyle::Ph, &mut rng);
+        let a_fine = fine.action(&arm, DemoStyle::Ph, &mut rng);
+        let mut coarse = ExpertDriver::new(
+            vec![Leg::coarse([0.8, 0.0, 0.0], -1.0)],
+            DemoStyle::Ph,
+            &mut rng,
+        );
+        let a_coarse = coarse.action(&arm, DemoStyle::Ph, &mut rng);
+        let m = |a: &[f32]| (a[0] * a[0] + a[1] * a[1] + a[2] * a[2]).sqrt();
+        assert!(m(&a_fine) < m(&a_coarse) * 0.5, "{} vs {}", m(&a_fine), m(&a_coarse));
+        arm.step(&a_coarse, &[]);
+        assert!(arm.last_speed > 0.05);
+    }
+
+    #[test]
+    fn dwell_holds_position() {
+        let legs = vec![Leg { target: [0.1, 0.0, 0.0], gripper: 1.0, tol: 0.02, speed: 1.0, dwell: 6 }];
+        let (arm, driver) = drive(legs, DemoStyle::Ph, 60);
+        assert!(driver.finished());
+        assert!(arm.gripper > 0.9, "gripper must have closed during dwell");
+    }
+
+    #[test]
+    fn multi_leg_sequencing() {
+        let legs = vec![
+            Leg::coarse([0.4, 0.0, 0.0], -1.0),
+            Leg::coarse([0.4, 0.4, 0.0], -1.0),
+            Leg::coarse([0.0, 0.4, 0.3], -1.0),
+        ];
+        let (arm, driver) = drive(legs, DemoStyle::Ph, 200);
+        assert!(driver.finished());
+        assert!(dist3(&arm.ee, &[0.0, 0.4, 0.3]) < 0.08);
+    }
+
+    #[test]
+    fn mh_expert_still_reaches_but_noisier() {
+        let target = [0.5, -0.5, 0.4];
+        let (arm_ph, d_ph) = drive(vec![Leg::coarse(target, -1.0)], DemoStyle::Ph, 300);
+        let (arm_mh, d_mh) = drive(vec![Leg::coarse(target, -1.0)], DemoStyle::Mh, 300);
+        assert!(d_ph.finished() && d_mh.finished());
+        assert!(dist3(&arm_ph.ee, &target) < 0.06);
+        assert!(dist3(&arm_mh.ee, &target) < 0.1);
+    }
+
+    #[test]
+    fn finished_driver_holds_still() {
+        let (_, mut driver) = drive(vec![Leg::coarse([0.2, 0.0, 0.0], 1.0)], DemoStyle::Ph, 100);
+        assert!(driver.finished());
+        let arm = ArmState::new([0.2, 0.0, 0.0], vec![], 0.05);
+        let mut rng = Rng::seed_from_u64(3);
+        let a = driver.action(&arm, DemoStyle::Ph, &mut rng);
+        assert_eq!(&a[0..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(a[3], 1.0, "final gripper command persists");
+    }
+}

@@ -1,0 +1,188 @@
+//! Generic arm-task environment: the five Robomimic-style tasks differ
+//! only in their object layout, expert leg plan, success predicate and
+//! feature extractor, so they share this wrapper.
+
+use crate::config::{DemoStyle, Task, OBS_DIM};
+use crate::envs::arm::ArmState;
+use crate::envs::expert::{ExpertDriver, Leg};
+use crate::envs::{obs_prefix, Env, OBS_TASK_FEATURES};
+use crate::util::Rng;
+
+/// Task-specific logic plugged into [`ArmTaskEnv`].
+pub trait ArmTaskSpec: Send {
+    /// Which benchmark task this spec implements.
+    fn task(&self) -> Task;
+    /// Episode step limit.
+    fn max_steps(&self) -> usize;
+    /// Number of state-derived phases.
+    fn num_phases(&self) -> usize;
+    /// Randomized initial arm/object state; returns (arm, per-object
+    /// gravity flags).
+    fn init(&mut self, rng: &mut Rng) -> (ArmState, Vec<bool>);
+    /// Expert leg plan for the episode's initial state.
+    fn legs(&self, arm: &ArmState) -> Vec<Leg>;
+    /// Success predicate on the current state.
+    fn success(&self, arm: &ArmState) -> bool;
+    /// Continuous outcome in [0, 1]; defaults to binary success.
+    fn score(&self, arm: &ArmState) -> f32 {
+        self.success(arm) as u8 as f32
+    }
+    /// Monotone-ish progress estimate from state alone.
+    fn progress(&self, arm: &ArmState) -> f32;
+    /// State-derived phase index in [0, num_phases).
+    fn phase(&self, arm: &ArmState) -> usize;
+    /// Task-specific observation features (up to 18 slots).
+    fn features(&self, arm: &ArmState, out: &mut [f32]);
+}
+
+/// Environment wrapper around an [`ArmTaskSpec`].
+pub struct ArmTaskEnv<S: ArmTaskSpec> {
+    spec: S,
+    style: DemoStyle,
+    arm: ArmState,
+    gravity: Vec<bool>,
+    driver: ExpertDriver,
+    steps: usize,
+    succeeded_at: Option<usize>,
+}
+
+impl<S: ArmTaskSpec> ArmTaskEnv<S> {
+    /// Build; the env starts in a deterministic dummy state until the
+    /// first `reset`.
+    pub fn from_spec(mut spec: S, style: DemoStyle) -> Self {
+        let mut rng = Rng::seed_from_u64(0);
+        let (arm, gravity) = spec.init(&mut rng);
+        let legs = spec.legs(&arm);
+        let driver = ExpertDriver::new(legs, style, &mut rng);
+        Self { spec, style, arm, gravity, driver, steps: 0, succeeded_at: None }
+    }
+
+    /// Borrow the arm state (tests / figures).
+    pub fn arm(&self) -> &ArmState {
+        &self.arm
+    }
+}
+
+impl<S: ArmTaskSpec> Env for ArmTaskEnv<S> {
+    fn task(&self) -> Task {
+        self.spec.task()
+    }
+
+    fn reset(&mut self, rng: &mut Rng) {
+        let (arm, gravity) = self.spec.init(rng);
+        self.arm = arm;
+        self.gravity = gravity;
+        let legs = self.spec.legs(&self.arm);
+        self.driver = ExpertDriver::new(legs, self.style, rng);
+        self.steps = 0;
+        self.succeeded_at = None;
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        let mut obs = obs_prefix(self.task(), self.style, &self.arm);
+        let mut feats = [0.0f32; OBS_DIM - OBS_TASK_FEATURES];
+        self.spec.features(&self.arm, &mut feats);
+        obs[OBS_TASK_FEATURES..].copy_from_slice(&feats);
+        obs
+    }
+
+    fn step(&mut self, action: &[f32]) {
+        self.arm.step(action, &self.gravity);
+        self.steps += 1;
+        if self.succeeded_at.is_none() && self.spec.success(&self.arm) {
+            self.succeeded_at = Some(self.steps);
+        }
+    }
+
+    fn expert_action(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.driver.action(&self.arm, self.style, rng)
+    }
+
+    fn done(&self) -> bool {
+        // Terminate a few steps after success (so the last action segment
+        // is recorded), or at the step limit.
+        match self.succeeded_at {
+            Some(at) => self.steps >= at + 2,
+            None => self.steps >= self.spec.max_steps(),
+        }
+    }
+
+    fn success(&self) -> bool {
+        self.succeeded_at.is_some() || self.spec.success(&self.arm)
+    }
+
+    fn score(&self) -> f32 {
+        if self.succeeded_at.is_some() {
+            1.0f32.max(self.spec.score(&self.arm))
+        } else {
+            self.spec.score(&self.arm)
+        }
+    }
+
+    fn progress(&self) -> f32 {
+        if self.success() {
+            1.0
+        } else {
+            self.spec.progress(&self.arm).clamp(0.0, 1.0)
+        }
+    }
+
+    fn phase(&self) -> usize {
+        self.spec.phase(&self.arm).min(self.spec.num_phases() - 1)
+    }
+
+    fn num_phases(&self) -> usize {
+        self.spec.num_phases()
+    }
+
+    fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn max_steps(&self) -> usize {
+        self.spec.max_steps()
+    }
+
+    fn ee_speed(&self) -> f32 {
+        self.arm.last_speed
+    }
+}
+
+/// Shared helper: phase of a single pick-and-place motion.
+/// 0 = approach, 1 = grasp (near, not held), 2 = transport (held),
+/// 3 = place (held, near goal).
+pub fn pick_place_phase(arm: &ArmState, obj: usize, goal: &[f32; 3]) -> usize {
+    use crate::envs::arm::dist3;
+    match arm.held {
+        None => {
+            if dist3(&arm.ee, &arm.objects[obj]) > 0.12 {
+                0
+            } else {
+                1
+            }
+        }
+        Some(_) => {
+            if dist3(&arm.ee, goal) > 0.15 {
+                2
+            } else {
+                3
+            }
+        }
+    }
+}
+
+/// Shared helper: progress of a single pick-and-place motion, combining
+/// approach distance, grasp and goal distance.
+pub fn pick_place_progress(arm: &ArmState, obj: usize, goal: &[f32; 3]) -> f32 {
+    use crate::envs::arm::dist3;
+    match arm.held {
+        None => {
+            let d = dist3(&arm.ee, &arm.objects[obj]);
+            0.3 * (1.0 - (d / 1.5).min(1.0))
+        }
+        Some(_) => {
+            let d = dist3(&arm.objects[obj], goal);
+            0.4 + 0.6 * (1.0 - (d / 1.5).min(1.0))
+        }
+    }
+}

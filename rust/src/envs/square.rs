@@ -1,0 +1,117 @@
+//! Robomimic **Square**: pick a square nut and thread it onto a peg — a
+//! fine-tolerance insertion (paper Table 1: notably harder than Can).
+
+use crate::config::{DemoStyle, Task};
+use crate::envs::arm::ArmState;
+use crate::envs::expert::Leg;
+use crate::envs::pickplace::{pick_place_phase, pick_place_progress, ArmTaskEnv, ArmTaskSpec};
+use crate::util::Rng;
+
+/// Horizontal tolerance for the nut to count as on the peg.
+pub const PEG_TOL: f32 = 0.05;
+
+/// Task spec (see [`SquareEnv`]).
+pub struct SquareSpec {
+    peg: [f32; 3],
+}
+
+/// The Square environment.
+pub type SquareEnv = ArmTaskEnv<SquareSpec>;
+
+impl SquareEnv {
+    /// New Square env with the given demo style.
+    pub fn new(style: DemoStyle) -> Self {
+        ArmTaskEnv::from_spec(SquareSpec { peg: [0.0; 3] }, style)
+    }
+}
+
+impl ArmTaskSpec for SquareSpec {
+    fn task(&self) -> Task {
+        Task::Square
+    }
+
+    fn max_steps(&self) -> usize {
+        210
+    }
+
+    fn num_phases(&self) -> usize {
+        4 // approach, grasp, transport, insert
+    }
+
+    fn init(&mut self, rng: &mut Rng) -> (ArmState, Vec<bool>) {
+        let nut = [rng.uniform_range(-0.6, -0.1), rng.uniform_range(-0.5, 0.5), 0.0];
+        self.peg = [rng.uniform_range(0.3, 0.6), rng.uniform_range(-0.4, 0.4), 0.0];
+        let ee = [0.0, 0.0, 0.5];
+        (ArmState::new(ee, vec![nut], 0.04), vec![true])
+    }
+
+    fn legs(&self, arm: &ArmState) -> Vec<Leg> {
+        let n = arm.objects[0];
+        let p = self.peg;
+        vec![
+            Leg::coarse([n[0], n[1], 0.12], -1.0),
+            Leg::fine([n[0], n[1], 0.0], 1.0, 6),
+            Leg::coarse([n[0], n[1], 0.3], 1.0),
+            Leg::coarse([p[0], p[1], 0.3], 1.0),
+            // Slow descent onto the peg with a tight tolerance and long
+            // dwell: the paper's "fine, low-speed" phase.
+            Leg { target: [p[0], p[1], 0.03], gripper: 1.0, tol: 0.01, speed: 0.15, dwell: 4 },
+            Leg::fine([p[0], p[1], 0.03], -1.0, 4),
+        ]
+    }
+
+    fn success(&self, arm: &ArmState) -> bool {
+        let n = arm.objects[0];
+        arm.held.is_none()
+            && ((n[0] - self.peg[0]).powi(2) + (n[1] - self.peg[1]).powi(2)).sqrt() < PEG_TOL
+            && n[2] < 0.1
+    }
+
+    fn progress(&self, arm: &ArmState) -> f32 {
+        pick_place_progress(arm, 0, &self.peg)
+    }
+
+    fn phase(&self, arm: &ArmState) -> usize {
+        pick_place_phase(arm, 0, &self.peg)
+    }
+
+    fn features(&self, arm: &ArmState, out: &mut [f32]) {
+        let n = arm.objects[0];
+        out[0] = n[0];
+        out[1] = n[1];
+        out[2] = n[2];
+        out[3] = n[0] - arm.ee[0];
+        out[4] = n[1] - arm.ee[1];
+        out[5] = n[2] - arm.ee[2];
+        out[6] = self.peg[0];
+        out[7] = self.peg[1];
+        out[8] = self.peg[0] - n[0];
+        out[9] = self.peg[1] - n[1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::Env;
+
+    #[test]
+    fn expert_inserts_nut() {
+        let mut env = SquareEnv::new(DemoStyle::Ph);
+        let mut rng = Rng::seed_from_u64(0);
+        for seed in 0..3 {
+            let mut r = Rng::seed_from_u64(100 + seed);
+            env.reset(&mut r);
+            while !env.done() {
+                let a = env.expert_action(&mut rng);
+                env.step(&a);
+            }
+            assert!(env.success(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn insertion_tolerance_is_tight() {
+        assert!(PEG_TOL < super::super::can::BIN_TOL);
+    }
+}

@@ -1,0 +1,154 @@
+//! Robomimic **Transport**: long-horizon two-stage transfer. The paper's
+//! version is a dual-arm handover; kinematically we model the same
+//! structure — pick from zone A, drop at a handover point, re-grasp, then
+//! carry to zone B — which doubles the number of fine phases and makes it
+//! the longest Robomimic-style episode (paper Table 2: hardest MH task).
+
+use crate::config::{DemoStyle, Task};
+use crate::envs::arm::{dist3, ArmState};
+use crate::envs::expert::Leg;
+use crate::envs::pickplace::{ArmTaskEnv, ArmTaskSpec};
+use crate::util::Rng;
+
+/// Horizontal tolerance for the payload to count as inside zone B.
+pub const ZONE_TOL: f32 = 0.12;
+/// The fixed handover point between the two stages.
+pub const HANDOVER: [f32; 3] = [0.0, 0.0, 0.0];
+
+/// Task spec (see [`TransportEnv`]).
+pub struct TransportSpec {
+    zone_b: [f32; 3],
+}
+
+/// The Transport environment.
+pub type TransportEnv = ArmTaskEnv<TransportSpec>;
+
+impl TransportEnv {
+    /// New Transport env with the given demo style.
+    pub fn new(style: DemoStyle) -> Self {
+        ArmTaskEnv::from_spec(TransportSpec { zone_b: [0.0; 3] }, style)
+    }
+}
+
+impl ArmTaskSpec for TransportSpec {
+    fn task(&self) -> Task {
+        Task::Transport
+    }
+
+    fn max_steps(&self) -> usize {
+        260
+    }
+
+    fn num_phases(&self) -> usize {
+        5 // approach, grasp, to-handover, re-grasp, to-goal
+    }
+
+    fn init(&mut self, rng: &mut Rng) -> (ArmState, Vec<bool>) {
+        let payload = [rng.uniform_range(-0.8, -0.5), rng.uniform_range(-0.5, 0.5), 0.0];
+        self.zone_b = [rng.uniform_range(0.5, 0.8), rng.uniform_range(-0.4, 0.4), 0.0];
+        let ee = [-0.3, 0.0, 0.5];
+        (ArmState::new(ee, vec![payload], 0.05), vec![true])
+    }
+
+    fn legs(&self, arm: &ArmState) -> Vec<Leg> {
+        let p = arm.objects[0];
+        let h = HANDOVER;
+        let b = self.zone_b;
+        vec![
+            // Stage 1: pick and carry to the handover point.
+            Leg::coarse([p[0], p[1], 0.15], -1.0),
+            Leg::fine([p[0], p[1], 0.0], 1.0, 6),
+            Leg::coarse([p[0], p[1], 0.35], 1.0),
+            Leg::coarse([h[0], h[1], 0.35], 1.0),
+            Leg::fine([h[0], h[1], 0.05], 1.0, 1),
+            Leg::fine([h[0], h[1], 0.05], -1.0, 4), // drop (gravity -> z=0)
+            // Stage 2: re-grasp at the handover point and carry to B.
+            Leg::coarse([h[0], h[1], 0.15], -1.0),
+            Leg::fine([h[0], h[1], 0.0], 1.0, 6),
+            Leg::coarse([h[0], h[1], 0.35], 1.0),
+            Leg::coarse([b[0], b[1], 0.35], 1.0),
+            Leg::fine([b[0], b[1], 0.06], 1.0, 1),
+            Leg::fine([b[0], b[1], 0.06], -1.0, 4),
+        ]
+    }
+
+    fn success(&self, arm: &ArmState) -> bool {
+        let p = arm.objects[0];
+        arm.held.is_none()
+            && ((p[0] - self.zone_b[0]).powi(2) + (p[1] - self.zone_b[1]).powi(2)).sqrt()
+                < ZONE_TOL
+            && p[2] < 0.15
+    }
+
+    fn progress(&self, arm: &ArmState) -> f32 {
+        // Two-stage progress: payload's journey A → handover → B.
+        let p = arm.objects[0];
+        let total = dist3(&[-0.65, 0.0, 0.0], &HANDOVER) + dist3(&HANDOVER, &self.zone_b);
+        let remaining = if p[0] < HANDOVER[0] - 0.05 {
+            dist3(&p, &HANDOVER) + dist3(&HANDOVER, &self.zone_b)
+        } else {
+            dist3(&p, &self.zone_b)
+        };
+        (1.0 - remaining / total.max(1e-3)).clamp(0.0, 1.0)
+    }
+
+    fn phase(&self, arm: &ArmState) -> usize {
+        let p = arm.objects[0];
+        let before_handover = p[0] < HANDOVER[0] - 0.05;
+        match (arm.held, before_handover) {
+            (None, true) if dist3(&arm.ee, &p) > 0.12 => 0,
+            (None, true) => 1,
+            (Some(_), true) => 2,
+            (None, false) => 3,
+            (Some(_), false) => 4,
+        }
+    }
+
+    fn features(&self, arm: &ArmState, out: &mut [f32]) {
+        let p = arm.objects[0];
+        out[0] = p[0];
+        out[1] = p[1];
+        out[2] = p[2];
+        out[3] = p[0] - arm.ee[0];
+        out[4] = p[1] - arm.ee[1];
+        out[5] = p[2] - arm.ee[2];
+        out[6] = self.zone_b[0];
+        out[7] = self.zone_b[1];
+        out[8] = HANDOVER[0] - p[0];
+        out[9] = HANDOVER[1] - p[1];
+        out[10] = self.zone_b[0] - p[0];
+        out[11] = self.zone_b[1] - p[1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::Env;
+
+    #[test]
+    fn expert_completes_both_stages() {
+        let mut env = TransportEnv::new(DemoStyle::Ph);
+        let mut rng = Rng::seed_from_u64(0);
+        for seed in 0..3 {
+            let mut r = Rng::seed_from_u64(40 + seed);
+            env.reset(&mut r);
+            let mut saw_drop = false;
+            while !env.done() {
+                let a = env.expert_action(&mut rng);
+                env.step(&a);
+                if env.phase() == 3 {
+                    saw_drop = true;
+                }
+            }
+            assert!(env.success(), "seed {seed}");
+            assert!(saw_drop, "handover stage must occur (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn longest_episode_budget() {
+        let env = TransportEnv::new(DemoStyle::Ph);
+        assert!(env.max_steps() >= 180);
+    }
+}

@@ -1,0 +1,141 @@
+//! CLI entry points for episodes, tables and figures.
+
+use crate::baselines::make_generator;
+use crate::config::{DemoStyle, Method, Task};
+use crate::envs::make_env;
+use crate::harness::episode::run_episode;
+use crate::harness::{figures, tables};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::{SchedulerPolicy, ServingHook};
+use crate::util::cli::Args;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+fn load_runtime(args: &Args) -> Result<ModelRuntime> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    ModelRuntime::load(&dir)
+        .with_context(|| format!("loading artifacts from {} (run `make artifacts`)", dir.display()))
+}
+
+fn load_scheduler(args: &Args) -> Option<SchedulerPolicy> {
+    let path = PathBuf::from(
+        args.get_or("scheduler-policy", "artifacts/scheduler_policy.json"),
+    );
+    SchedulerPolicy::load(&path).ok()
+}
+
+/// `ts-dp episode --task T --style ph|mh [--method M] [--adaptive]`.
+pub fn cmd_episode(args: &Args) -> Result<()> {
+    let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
+    let style = DemoStyle::parse(&args.get_or("style", "ph")).context("bad --style")?;
+    let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
+    let seed = args.get_u64("seed", 0)?;
+    let den = load_runtime(args)?;
+    let mut env = make_env(task, style);
+    let mut generator = make_generator(method);
+    let result = if args.has_flag("adaptive") && method == Method::TsDp {
+        let policy = load_scheduler(args)
+            .context("--adaptive needs a trained scheduler policy (run train-scheduler)")?;
+        let mut hook = ServingHook::new(policy);
+        run_episode(&den, env.as_mut(), generator.as_mut(), style, seed, Some(&mut hook))?
+    } else {
+        run_episode(&den, env.as_mut(), generator.as_mut(), style, seed, None)?
+    };
+    println!("task={} style={} method={}", task.name(), style.name(), method.name());
+    println!("success={} score={:.2} steps={}", result.success, result.score, result.steps);
+    println!(
+        "segments={} nfe/segment={:.1} speed_x={:.2}",
+        result.segments.len(),
+        result.nfe_percent(),
+        100.0 / result.nfe_percent().max(1e-9)
+    );
+    println!(
+        "drafts={} accepted={} acceptance={:.1}%",
+        result.drafts(),
+        result.accepted(),
+        result.acceptance_rate() * 100.0
+    );
+    println!(
+        "latency={:.4}s/segment frequency={:.2}Hz",
+        result.latency_secs(),
+        result.frequency_hz()
+    );
+    Ok(())
+}
+
+/// `ts-dp table --id 1|2|3|4|5|s1|s2|s3`.
+pub fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "1");
+    let episodes = args.get_usize("episodes", 10)?;
+    let seed = args.get_u64("seed", 0)?;
+    let den = load_runtime(args)?;
+    let scheduler = load_scheduler(args);
+    let opts = [
+        tables::EvalOpts {
+            episodes,
+            seed,
+            scheduler: scheduler.clone(),
+            fixed_params: None,
+        },
+        tables::EvalOpts {
+            episodes,
+            seed: seed ^ 0x5eed_0002,
+            scheduler: scheduler.clone(),
+            fixed_params: None,
+        },
+    ];
+    let text = match id.as_str() {
+        "1" => {
+            let tasks = [
+                Task::Lift,
+                Task::Can,
+                Task::Square,
+                Task::Transport,
+                Task::ToolHang,
+                Task::PushT,
+            ];
+            tables::success_table(&den, DemoStyle::Ph, &tasks, &opts)?
+        }
+        "2" => {
+            let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+            tables::success_table(&den, DemoStyle::Mh, &tasks, &opts)?
+        }
+        "3" => tables::multistage_table(&den, &opts)?,
+        "4" => tables::ablation_table(&den, scheduler, episodes, seed)?,
+        "5" => tables::latency_table(&den, episodes, seed)?,
+        s @ ("s1" | "s2" | "s3") => tables::supplement_table(&den, s, &opts)?,
+        other => anyhow::bail!("unknown table id '{other}'"),
+    };
+    println!("{text}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, text)?;
+        println!("(written to {out})");
+    }
+    Ok(())
+}
+
+/// `ts-dp figure --id 3|4|5|6 [--out-dir DIR]`.
+pub fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "3");
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results/figures"));
+    std::fs::create_dir_all(&out_dir)?;
+    let episodes = args.get_usize("episodes", 3)?;
+    let seed = args.get_u64("seed", 0)?;
+    let den = load_runtime(args)?;
+    match id.as_str() {
+        "3" => figures::figure3(&den, &out_dir, episodes, seed)?,
+        "4" => figures::figure4(&den, &out_dir, seed)?,
+        "5" => {
+            let policy = load_scheduler(args)
+                .context("figure 5 needs a trained scheduler policy")?;
+            figures::figure5(&den, &policy, &out_dir, seed)?;
+        }
+        "6" => {
+            let policy = load_scheduler(args);
+            figures::figure6(&den, policy.as_ref(), &out_dir, seed)?;
+        }
+        other => anyhow::bail!("unknown figure id '{other}'"),
+    }
+    println!("wrote figure {id} CSVs to {}", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,330 @@
+//! Episode runner: the closed loop of environment ↔ policy ↔ speculative
+//! engine, with optional per-segment scheduler decisions.
+//!
+//! This is the paper's Fig. 2 loop: each control round encodes the
+//! observation, (optionally) asks the scheduler for speculative
+//! parameters, generates an action segment by (speculative) denoising,
+//! and executes the first EXEC_STEPS actions in the environment.
+
+use crate::baselines::Generator;
+use crate::config::{DemoStyle, Method, SpecParams, Task, ACT_DIM, EXEC_STEPS, HORIZON};
+use crate::envs::Env;
+use crate::policy::Denoiser;
+use crate::scheduler::features::{features, FeatureState};
+use crate::speculative::SegmentTrace;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Per-segment metadata (figures + scheduler feedback).
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    /// Env step index at which the segment was generated.
+    pub env_step: usize,
+    /// Env phase at generation time.
+    pub phase: usize,
+    /// Mean end-effector speed over the executed steps.
+    pub ee_speed: f32,
+    /// Drafts proposed during the segment.
+    pub drafts: usize,
+    /// Drafts accepted.
+    pub accepted: usize,
+    /// NFE consumed.
+    pub nfe: f64,
+    /// Wall-clock seconds for denoising this segment.
+    pub wall_secs: f64,
+    /// Parameters in force (scheduler output or fixed).
+    pub params: SpecParams,
+}
+
+/// Outcome bundle passed to [`DecisionHook::post_segment`].
+#[derive(Debug, Clone)]
+pub struct SegmentOutcome<'a> {
+    /// The segment's metadata.
+    pub meta: &'a SegmentMeta,
+    /// Episode finished with this segment.
+    pub done: bool,
+    /// Success at this point.
+    pub success: bool,
+    /// Continuous score at this point.
+    pub score: f32,
+    /// Task identity.
+    pub task: Task,
+    /// Env step limit (Eq. 15's T_max).
+    pub t_max: usize,
+}
+
+/// Scheduler integration point: decide parameters before each segment,
+/// observe the outcome after.
+pub trait DecisionHook {
+    /// Parameters for the upcoming segment.
+    fn decide(&mut self, feat: &[f32]) -> SpecParams;
+    /// Outcome feedback (reward computation for PPO, bookkeeping for
+    /// serving).
+    fn post_segment(&mut self, outcome: &SegmentOutcome<'_>);
+}
+
+/// Result of one full episode.
+#[derive(Debug, Clone)]
+pub struct EpisodeResult {
+    /// Task identity.
+    pub task: Task,
+    /// Demo style the env was configured with.
+    pub style: DemoStyle,
+    /// Generation method.
+    pub method: Method,
+    /// Binary success.
+    pub success: bool,
+    /// Continuous score in [0, 1].
+    pub score: f32,
+    /// Env steps taken.
+    pub steps: usize,
+    /// Total NFE across segments.
+    pub nfe: f64,
+    /// Total denoising wall-clock (seconds).
+    pub wall_secs: f64,
+    /// Per-segment metadata.
+    pub segments: Vec<SegmentMeta>,
+    /// Full speculative traces (per segment; empty rounds for baselines
+    /// that do not speculate).
+    pub traces: Vec<SegmentTrace>,
+}
+
+impl EpisodeResult {
+    /// Total drafts over the episode.
+    pub fn drafts(&self) -> usize {
+        self.segments.iter().map(|s| s.drafts).sum()
+    }
+
+    /// Total accepted drafts.
+    pub fn accepted(&self) -> usize {
+        self.segments.iter().map(|s| s.accepted).sum()
+    }
+
+    /// Draft acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        let d = self.drafts();
+        if d == 0 {
+            0.0
+        } else {
+            self.accepted() as f64 / d as f64
+        }
+    }
+
+    /// Mean NFE per segment, as a percentage of vanilla DP's 100.
+    pub fn nfe_percent(&self) -> f64 {
+        if self.segments.is_empty() {
+            return 0.0;
+        }
+        self.nfe / self.segments.len() as f64
+    }
+
+    /// Control frequency in Hz implied by the mean segment latency and
+    /// EXEC_STEPS actions per segment (paper Table 5).
+    pub fn frequency_hz(&self) -> f64 {
+        if self.segments.is_empty() || self.wall_secs == 0.0 {
+            return 0.0;
+        }
+        let per_segment = self.wall_secs / self.segments.len() as f64;
+        EXEC_STEPS as f64 / per_segment
+    }
+
+    /// Mean per-segment denoising latency (seconds).
+    pub fn latency_secs(&self) -> f64 {
+        if self.segments.is_empty() {
+            return 0.0;
+        }
+        self.wall_secs / self.segments.len() as f64
+    }
+}
+
+/// Run one episode.
+pub fn run_episode(
+    den: &dyn Denoiser,
+    env: &mut dyn Env,
+    generator: &mut dyn Generator,
+    style: DemoStyle,
+    seed: u64,
+    mut hook: Option<&mut dyn DecisionHook>,
+) -> Result<EpisodeResult> {
+    let mut env_rng = Rng::seed_from_u64(seed);
+    let mut gen_rng = Rng::seed_from_u64(seed ^ 0xd1f7_05ab_c93e_4410);
+    env.reset(&mut env_rng);
+
+    let mut feat_state = FeatureState::default();
+    let mut segments: Vec<SegmentMeta> = Vec::new();
+    let mut traces: Vec<SegmentTrace> = Vec::new();
+    let mut total_nfe = 0.0;
+    let mut total_wall = 0.0;
+
+    while !env.done() {
+        let obs = env.observe();
+        let cond = den.encode(&obs)?;
+
+        // Scheduler decision (runs "in parallel with the encoder" in the
+        // paper; structurally it costs microseconds of pure Rust here).
+        let params = match hook.as_deref_mut() {
+            Some(h) => {
+                let phase_frac = env.phase() as f32 / env.num_phases().max(1) as f32;
+                let feat = features(&obs, env.progress(), phase_frac, &feat_state);
+                let p = h.decide(&feat);
+                generator.set_params(p);
+                p
+            }
+            None => SpecParams::fixed_default(),
+        };
+
+        let mut trace = SegmentTrace::default();
+        let segment = generator.generate(den, &cond, &mut gen_rng, &mut trace)?;
+
+        // Execute the first EXEC_STEPS actions (receding horizon).
+        let env_step = env.steps();
+        let phase = env.phase();
+        let mut speed_sum = 0.0f32;
+        let mut executed = 0usize;
+        for i in 0..EXEC_STEPS.min(HORIZON) {
+            if env.done() {
+                break;
+            }
+            env.step(&segment[i * ACT_DIM..(i + 1) * ACT_DIM]);
+            speed_sum += env.ee_speed();
+            executed += 1;
+        }
+
+        let meta = SegmentMeta {
+            env_step,
+            phase,
+            ee_speed: if executed > 0 { speed_sum / executed as f32 } else { 0.0 },
+            drafts: trace.drafts(),
+            accepted: trace.accepted(),
+            nfe: trace.nfe,
+            wall_secs: trace.wall_secs,
+            params,
+        };
+        total_nfe += trace.nfe;
+        total_wall += trace.wall_secs;
+
+        // Feature-state update for the next decision.
+        feat_state.recent_acceptance = if meta.drafts > 0 {
+            meta.accepted as f32 / meta.drafts as f32
+        } else {
+            1.0
+        };
+        feat_state.recent_drafts = meta.drafts as f32;
+        feat_state.recent_speed = meta.ee_speed;
+        feat_state.last_params = params;
+
+        if let Some(h) = hook.as_deref_mut() {
+            let outcome = SegmentOutcome {
+                meta: &meta,
+                done: env.done(),
+                success: env.success(),
+                score: env.score(),
+                task: env.task(),
+                t_max: env.max_steps(),
+            };
+            h.post_segment(&outcome);
+        }
+        segments.push(meta);
+        traces.push(trace);
+    }
+
+    Ok(EpisodeResult {
+        task: env.task(),
+        style,
+        method: generator.method(),
+        success: env.success(),
+        score: env.score(),
+        steps: env.steps(),
+        nfe: total_nfe,
+        wall_secs: total_wall,
+        segments,
+        traces,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::make_generator;
+    use crate::envs::make_env;
+    use crate::policy::mock::MockDenoiser;
+
+    fn run(task: Task, method: Method, seed: u64) -> EpisodeResult {
+        let den = MockDenoiser::with_bias(0.05);
+        let mut env = make_env(task, DemoStyle::Ph);
+        let mut generator = make_generator(method);
+        run_episode(&den, env.as_mut(), generator.as_mut(), DemoStyle::Ph, seed, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn episode_terminates_and_accounts_nfe() {
+        let r = run(Task::Lift, Method::TsDp, 0);
+        assert!(r.steps > 0 && r.steps <= 102);
+        assert!(!r.segments.is_empty());
+        assert!(r.nfe > 0.0);
+        let sum: f64 = r.segments.iter().map(|s| s.nfe).sum();
+        assert!((sum - r.nfe).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vanilla_nfe_is_100_per_segment() {
+        let r = run(Task::Lift, Method::Vanilla, 1);
+        assert!((r.nfe_percent() - 100.0).abs() < 1e-9);
+        assert_eq!(r.drafts(), 0);
+    }
+
+    #[test]
+    fn ts_dp_nfe_is_far_below_vanilla() {
+        let r = run(Task::Lift, Method::TsDp, 2);
+        assert!(r.nfe_percent() < 50.0, "{}", r.nfe_percent());
+        assert!(r.acceptance_rate() > 0.5, "{}", r.acceptance_rate());
+    }
+
+    #[test]
+    fn hook_is_invoked_per_segment() {
+        struct CountHook {
+            decides: usize,
+            posts: usize,
+        }
+        impl DecisionHook for CountHook {
+            fn decide(&mut self, feat: &[f32]) -> SpecParams {
+                assert_eq!(feat.len(), crate::scheduler::features::FEAT_DIM);
+                self.decides += 1;
+                SpecParams::fixed_k(4)
+            }
+            fn post_segment(&mut self, outcome: &SegmentOutcome<'_>) {
+                assert_eq!(outcome.meta.params, SpecParams::fixed_k(4));
+                self.posts += 1;
+            }
+        }
+        let den = MockDenoiser::with_bias(0.0);
+        let mut env = make_env(Task::PushT, DemoStyle::Ph);
+        let mut generator = make_generator(Method::TsDp);
+        let mut hook = CountHook { decides: 0, posts: 0 };
+        let r = run_episode(
+            &den,
+            env.as_mut(),
+            generator.as_mut(),
+            DemoStyle::Ph,
+            3,
+            Some(&mut hook),
+        )
+        .unwrap();
+        assert_eq!(hook.decides, r.segments.len());
+        assert_eq!(hook.posts, r.segments.len());
+        // The hook's fixed_k(4) must actually reach the engine.
+        for s in &r.segments {
+            assert_eq!(s.params, SpecParams::fixed_k(4));
+        }
+    }
+
+    #[test]
+    fn frequency_and_latency_are_consistent() {
+        let r = run(Task::Lift, Method::TsDp, 4);
+        let hz = r.frequency_hz();
+        let lat = r.latency_secs();
+        assert!(hz > 0.0 && lat > 0.0);
+        assert!((hz - EXEC_STEPS as f64 / lat).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Figure regeneration: CSV series matching the paper's figures.
+
+use crate::baselines::{make_generator, TsDp};
+use crate::config::{DemoStyle, Method, SpecParams, Task, DIFFUSION_STEPS};
+use crate::envs::make_env;
+use crate::harness::episode::run_episode;
+use crate::policy::Denoiser;
+use crate::scheduler::{SchedulerPolicy, ServingHook};
+use crate::util::tensorio::write_csv;
+use anyhow::Result;
+use std::path::Path;
+
+/// Fig. 3: acceptance probability vs denoising timestep.
+/// (a) across draft-horizon settings, (b) across sigma scales — showing
+/// the early/late collapse and the σ rescue.
+pub fn figure3(den: &dyn Denoiser, out_dir: &Path, episodes: usize, seed: u64) -> Result<()> {
+    let configs: Vec<(String, SpecParams)> = vec![
+        ("k4_ss2".into(), SpecParams { stages: crate::config::StageParams::uniform(4), lambda: 0.05, sigma_scale: 2.0 }),
+        ("k8_ss2".into(), SpecParams::fixed_k(8)),
+        ("k16_ss2".into(), SpecParams { stages: crate::config::StageParams::uniform(16), lambda: 0.05, sigma_scale: 2.0 }),
+        ("k8_ss1".into(), SpecParams { stages: crate::config::StageParams::uniform(8), lambda: 0.05, sigma_scale: 1.0 }),
+        ("k8_ss4".into(), SpecParams { stages: crate::config::StageParams::uniform(8), lambda: 0.05, sigma_scale: 4.0 }),
+    ];
+    let mut header: Vec<&str> = vec!["t"];
+    for (name, _) in &configs {
+        header.push(name.as_str());
+    }
+    // Collect mean acceptance probability per timestep per config.
+    let mut series: Vec<Vec<(f64, usize)>> = vec![vec![(0.0, 0); DIFFUSION_STEPS]; configs.len()];
+    for (ci, (_, params)) in configs.iter().enumerate() {
+        for ep in 0..episodes {
+            let mut env = make_env(Task::Can, DemoStyle::Ph);
+            let mut generator = TsDp::new(*params);
+            let r = run_episode(
+                den,
+                env.as_mut(),
+                &mut generator,
+                DemoStyle::Ph,
+                seed ^ (ep as u64 + 1),
+                None,
+            )?;
+            for trace in &r.traces {
+                for round in &trace.rounds {
+                    for (j, p) in round.probs.iter().enumerate() {
+                        let t = round.t_start - j;
+                        series[ci][t].0 += p;
+                        series[ci][t].1 += 1;
+                    }
+                }
+            }
+        }
+    }
+    let rows: Vec<Vec<f32>> = (0..DIFFUSION_STEPS)
+        .map(|t| {
+            let mut row = vec![t as f32];
+            for s in &series {
+                let (sum, n) = s[t];
+                row.push(if n > 0 { (sum / n as f64) as f32 } else { f32::NAN });
+            }
+            row
+        })
+        .collect();
+    write_csv(&out_dir.join("fig3_acceptance_vs_timestep.csv"), &header, &rows)
+}
+
+/// Fig. 4: accepted drafts vs end-effector velocity along one Can-PH
+/// episode.
+pub fn figure4(den: &dyn Denoiser, out_dir: &Path, seed: u64) -> Result<()> {
+    let mut env = make_env(Task::Can, DemoStyle::Ph);
+    // Discriminative acceptance settings (strict λ, unscaled σ): with the
+    // serving defaults the distilled drafter is accepted near-uniformly,
+    // which would flatten the velocity correlation this figure probes.
+    let mut generator = TsDp::new(SpecParams {
+        stages: crate::config::StageParams::uniform(8),
+        lambda: 0.4,
+        sigma_scale: 1.0,
+    });
+    let r = run_episode(den, env.as_mut(), &mut generator, DemoStyle::Ph, seed, None)?;
+    let rows: Vec<Vec<f32>> = r
+        .segments
+        .iter()
+        .map(|s| {
+            vec![
+                s.env_step as f32,
+                s.accepted as f32,
+                s.drafts as f32,
+                s.ee_speed,
+                s.phase as f32,
+            ]
+        })
+        .collect();
+    write_csv(
+        &out_dir.join("fig4_velocity_vs_accepted.csv"),
+        &["env_step", "accepted", "drafts", "ee_speed", "phase"],
+        &rows,
+    )
+}
+
+/// Fig. 5: temporal variation of the scheduled parameters over an
+/// episode.
+pub fn figure5(
+    den: &dyn Denoiser,
+    policy: &SchedulerPolicy,
+    out_dir: &Path,
+    seed: u64,
+) -> Result<()> {
+    let mut env = make_env(Task::Can, DemoStyle::Ph);
+    let mut generator = TsDp::new(SpecParams::fixed_default());
+    let mut hook = ServingHook::new(policy.clone());
+    let r = run_episode(
+        den,
+        env.as_mut(),
+        &mut generator,
+        DemoStyle::Ph,
+        seed,
+        Some(&mut hook),
+    )?;
+    let rows: Vec<Vec<f32>> = r
+        .segments
+        .iter()
+        .map(|s| {
+            vec![
+                s.env_step as f32,
+                s.params.stages.k_early as f32,
+                s.params.stages.k_mid as f32,
+                s.params.stages.k_late as f32,
+                s.params.lambda,
+                s.params.sigma_scale,
+                s.ee_speed,
+            ]
+        })
+        .collect();
+    write_csv(
+        &out_dir.join("fig5_scheduled_params.csv"),
+        &["env_step", "k_early", "k_mid", "k_late", "lambda", "sigma_scale", "ee_speed"],
+        &rows,
+    )
+}
+
+/// Fig. 6 / Supp. Fig. 1: acceptance rate and draft count, scheduled vs
+/// fixed, per task.
+pub fn figure6(
+    den: &dyn Denoiser,
+    policy: Option<&SchedulerPolicy>,
+    out_dir: &Path,
+    seed: u64,
+) -> Result<()> {
+    let tasks =
+        [Task::Lift, Task::Can, Task::Square, Task::Transport, Task::ToolHang, Task::PushT];
+    for task in tasks {
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        // Fixed-parameter run.
+        let mut env = make_env(task, DemoStyle::Ph);
+        let mut generator = make_generator(Method::TsDp);
+        let fixed =
+            run_episode(den, env.as_mut(), generator.as_mut(), DemoStyle::Ph, seed, None)?;
+        // Scheduled run (same seed => same env layout).
+        let scheduled = match policy {
+            Some(p) => {
+                let mut env = make_env(task, DemoStyle::Ph);
+                let mut generator = TsDp::new(SpecParams::fixed_default());
+                let mut hook = ServingHook::new(p.clone());
+                Some(run_episode(
+                    den,
+                    env.as_mut(),
+                    &mut generator,
+                    DemoStyle::Ph,
+                    seed,
+                    Some(&mut hook),
+                )?)
+            }
+            None => None,
+        };
+        let n = fixed
+            .segments
+            .len()
+            .max(scheduled.as_ref().map(|s| s.segments.len()).unwrap_or(0));
+        for i in 0..n {
+            let f = fixed.segments.get(i);
+            let s = scheduled.as_ref().and_then(|r| r.segments.get(i));
+            let rate = |m: Option<&crate::harness::episode::SegmentMeta>| -> f32 {
+                m.map(|m| {
+                    if m.drafts > 0 {
+                        m.accepted as f32 / m.drafts as f32
+                    } else {
+                        f32::NAN
+                    }
+                })
+                .unwrap_or(f32::NAN)
+            };
+            rows.push(vec![
+                i as f32,
+                rate(f),
+                f.map(|m| m.drafts as f32).unwrap_or(f32::NAN),
+                rate(s),
+                s.map(|m| m.drafts as f32).unwrap_or(f32::NAN),
+            ]);
+        }
+        write_csv(
+            &out_dir.join(format!("fig6_{}.csv", task.name())),
+            &["segment", "fixed_accept_rate", "fixed_drafts", "sched_accept_rate", "sched_drafts"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::mock::MockDenoiser;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn figures_3_and_4_write_csvs() {
+        let den = MockDenoiser::with_bias_fn(|t| if t > 80 || t < 20 { 0.3 } else { 0.05 });
+        let dir = TempDir::new("figs");
+        figure3(&den, dir.path(), 1, 0).unwrap();
+        figure4(&den, dir.path(), 0).unwrap();
+        let f3 = std::fs::read_to_string(dir.path().join("fig3_acceptance_vs_timestep.csv"))
+            .unwrap();
+        assert!(f3.lines().count() == DIFFUSION_STEPS + 1);
+        let f4 =
+            std::fs::read_to_string(dir.path().join("fig4_velocity_vs_accepted.csv")).unwrap();
+        assert!(f4.lines().count() > 2);
+    }
+
+    #[test]
+    fn figures_5_and_6_write_csvs() {
+        let den = MockDenoiser::with_bias(0.1);
+        let dir = TempDir::new("figs56");
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        let policy = SchedulerPolicy::init(&mut rng);
+        figure5(&den, &policy, dir.path(), 1).unwrap();
+        figure6(&den, Some(&policy), dir.path(), 1).unwrap();
+        assert!(dir.path().join("fig5_scheduled_params.csv").exists());
+        assert!(dir.path().join("fig6_lift.csv").exists());
+        assert!(dir.path().join("fig6_push_t.csv").exists());
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harness: episode runner, table/figure regeneration, CLI.
+
+pub mod cli;
+pub mod episode;
+pub mod figures;
+pub mod tables;
+
+pub use episode::{run_episode, DecisionHook, EpisodeResult, SegmentMeta, SegmentOutcome};

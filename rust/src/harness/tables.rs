@@ -1,0 +1,378 @@
+//! Table regeneration: one function per table in the paper's evaluation.
+//!
+//! Paired "a / b" numbers in the paper are two evaluation protocols; we
+//! reproduce the pairing with two independent seed groups.
+
+use crate::baselines::make_generator;
+use crate::config::{DemoStyle, Method, SpecParams, Task};
+use crate::envs::make_env;
+use crate::harness::episode::{run_episode, EpisodeResult};
+use crate::policy::Denoiser;
+use crate::scheduler::{SchedulerPolicy, ServingHook};
+use anyhow::Result;
+
+/// Aggregated statistics for one (method, task, style, seed-group) cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Success rate in percent.
+    pub success_pct: f64,
+    /// Mean continuous score in percent (coverage tasks).
+    pub score_pct: f64,
+    /// Mean NFE per segment (vanilla = 100).
+    pub nfe_pct: f64,
+    /// NFE-based speedup over vanilla DP.
+    pub speedup: f64,
+    /// Mean drafts per segment.
+    pub drafts: f64,
+    /// Draft acceptance rate in percent.
+    pub acceptance_pct: f64,
+    /// Mean per-segment denoising latency (seconds).
+    pub latency_secs: f64,
+    /// Control frequency (Hz).
+    pub freq_hz: f64,
+    /// Multi-stage sub-scores: fraction of episodes reaching >= x stages
+    /// (Kitchen p1..p4 / BlockPush p1..p2).
+    pub stage_pct: Vec<f64>,
+}
+
+/// Evaluation options for a cell.
+#[derive(Debug, Clone)]
+pub struct EvalOpts {
+    /// Episodes per cell.
+    pub episodes: usize,
+    /// Base seed of this seed group.
+    pub seed: u64,
+    /// Trained scheduler policy (None = fixed parameters).
+    pub scheduler: Option<SchedulerPolicy>,
+    /// Override for TS-DP's fixed parameters (Table 4 ablations).
+    pub fixed_params: Option<SpecParams>,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        Self { episodes: 10, seed: 0, scheduler: None, fixed_params: None }
+    }
+}
+
+/// Run all episodes for one cell and aggregate.
+pub fn eval_cell(
+    den: &dyn Denoiser,
+    task: Task,
+    style: DemoStyle,
+    method: Method,
+    opts: &EvalOpts,
+) -> Result<Cell> {
+    let mut results: Vec<EpisodeResult> = Vec::with_capacity(opts.episodes);
+    for ep in 0..opts.episodes {
+        let mut env = make_env(task, style);
+        let mut generator = make_generator(method);
+        if let (Method::TsDp, Some(p)) = (method, opts.fixed_params) {
+            generator.set_params(p);
+        }
+        let seed = opts.seed ^ ((ep as u64 + 1) << 8) ^ (task.index() as u64) << 40;
+        let result = match (&opts.scheduler, method) {
+            (Some(policy), Method::TsDp) => {
+                let mut hook = ServingHook::new(policy.clone());
+                run_episode(den, env.as_mut(), generator.as_mut(), style, seed, Some(&mut hook))?
+            }
+            _ => run_episode(den, env.as_mut(), generator.as_mut(), style, seed, None)?,
+        };
+        results.push(result);
+    }
+    Ok(aggregate(task, &results))
+}
+
+/// Number of stage metrics a task reports (Kitchen 4, BlockPush 2).
+pub fn stage_count(task: Task) -> usize {
+    match task {
+        Task::Kitchen => 4,
+        Task::BlockPush => 2,
+        _ => 0,
+    }
+}
+
+fn aggregate(task: Task, results: &[EpisodeResult]) -> Cell {
+    let n = results.len().max(1) as f64;
+    let success = results.iter().filter(|r| r.success).count() as f64 / n;
+    let score = results.iter().map(|r| r.score as f64).sum::<f64>() / n;
+    let nfe = results.iter().map(|r| r.nfe_percent()).sum::<f64>() / n;
+    let drafts = results
+        .iter()
+        .map(|r| r.drafts() as f64 / r.segments.len().max(1) as f64)
+        .sum::<f64>()
+        / n;
+    let acc = results.iter().map(|r| r.acceptance_rate()).sum::<f64>() / n;
+    let latency = results.iter().map(|r| r.latency_secs()).sum::<f64>() / n;
+    let freq = results.iter().map(|r| r.frequency_hz()).sum::<f64>() / n;
+    // Stage fractions from the continuous score: score >= x/stages.
+    let stages = stage_count(task);
+    let stage_pct = (1..=stages)
+        .map(|x| {
+            let threshold = x as f32 / stages as f32 - 1e-4;
+            results.iter().filter(|r| r.score >= threshold).count() as f64 / n * 100.0
+        })
+        .collect();
+    Cell {
+        success_pct: success * 100.0,
+        score_pct: score * 100.0,
+        nfe_pct: nfe,
+        speedup: if nfe > 0.0 { 100.0 / nfe } else { 0.0 },
+        drafts,
+        acceptance_pct: acc * 100.0,
+        latency_secs: latency,
+        freq_hz: freq,
+        stage_pct,
+    }
+}
+
+/// Format a paired "a / b" cell.
+pub fn paired(a: f64, b: f64, width: usize, decimals: usize) -> String {
+    format!("{:>w$.d$} / {:<w$.d$}", a, b, w = width, d = decimals)
+}
+
+/// Tables 1 & 2: per-task success + NFE + speed for every method.
+pub fn success_table(
+    den: &dyn Denoiser,
+    style: DemoStyle,
+    tasks: &[Task],
+    opts: &[EvalOpts; 2],
+) -> Result<String> {
+    let mut out = String::new();
+    let title = match style {
+        DemoStyle::Ph => "Table 1 — Proficient Human (PH)",
+        DemoStyle::Mh => "Table 2 — Mixed Human (MH)",
+    };
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{:<22}", "Method"));
+    for t in tasks {
+        out.push_str(&format!("{:>16}", t.name()));
+    }
+    out.push_str(&format!("{:>16}{:>16}{:>14}\n", "AVG", "NFE(%)", "Speed x"));
+    for method in Method::ALL {
+        out.push_str(&format!("{:<22}", method.label()));
+        // Evaluate each (task, group) cell exactly once.
+        let mut cells: Vec<[Cell; 2]> = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let a = eval_cell(den, *t, style, method, &opts[0])?;
+            let b = eval_cell(den, *t, style, method, &opts[1])?;
+            cells.push([a, b]);
+        }
+        let mut avg = [0.0f64; 2];
+        let mut nfe = [0.0f64; 2];
+        for (t, c) in tasks.iter().zip(&cells) {
+            let val = |cell: &Cell| {
+                if t.continuous_outcome() {
+                    cell.score_pct
+                } else {
+                    cell.success_pct
+                }
+            };
+            out.push_str(&format!("{:>16}", paired(val(&c[0]), val(&c[1]), 5, 0)));
+            for g in 0..2 {
+                avg[g] += val(&c[g]) / tasks.len() as f64;
+                nfe[g] += c[g].nfe_pct / tasks.len() as f64;
+            }
+        }
+        out.push_str(&format!("{:>16}", paired(avg[0], avg[1], 5, 0)));
+        out.push_str(&format!("{:>16}", paired(nfe[0], nfe[1], 5, 0)));
+        let sp = |n: f64| if n > 0.0 { 100.0 / n } else { 0.0 };
+        out.push_str(&format!("{:>14}\n", paired(sp(nfe[0]), sp(nfe[1]), 4, 2)));
+    }
+    Ok(out)
+}
+
+/// Table 3: multi-stage Kitchen + BlockPush with per-stage success.
+pub fn multistage_table(den: &dyn Denoiser, opts: &[EvalOpts; 2]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Table 3 — Multi-stage (Kitchen & Block Push)\n");
+    out.push_str(&format!(
+        "{:<22}{:>14}{:>14}{:>14}{:>14}{:>14}{:>14}{:>14}{:>12}\n",
+        "Method", "BP_p1", "BP_p2", "Kit_p1", "Kit_p2", "Kit_p3", "Kit_p4", "NFE(%)", "Speed x"
+    ));
+    for method in Method::ALL {
+        out.push_str(&format!("{:<22}", method.label()));
+        let mut cells = Vec::new();
+        for o in opts {
+            let bp = eval_cell(den, Task::BlockPush, DemoStyle::Ph, method, o)?;
+            let kit = eval_cell(den, Task::Kitchen, DemoStyle::Ph, method, o)?;
+            cells.push((bp, kit));
+        }
+        for stage in 0..2 {
+            out.push_str(&format!(
+                "{:>14}",
+                paired(cells[0].0.stage_pct[stage], cells[1].0.stage_pct[stage], 4, 0)
+            ));
+        }
+        for stage in 0..4 {
+            out.push_str(&format!(
+                "{:>14}",
+                paired(cells[0].1.stage_pct[stage], cells[1].1.stage_pct[stage], 4, 0)
+            ));
+        }
+        let nfe: Vec<f64> =
+            cells.iter().map(|(bp, kit)| (bp.nfe_pct + kit.nfe_pct) / 2.0).collect();
+        out.push_str(&format!("{:>14}", paired(nfe[0], nfe[1], 4, 0)));
+        let sp = |n: f64| if n > 0.0 { 100.0 / n } else { 0.0 };
+        out.push_str(&format!("{:>12}\n", paired(sp(nfe[0]), sp(nfe[1]), 4, 2)));
+    }
+    Ok(out)
+}
+
+/// Table 4: fixed-K ablation vs the adaptive scheduler.
+pub fn ablation_table(
+    den: &dyn Denoiser,
+    scheduler: Option<SchedulerPolicy>,
+    episodes: usize,
+    seed: u64,
+) -> Result<String> {
+    let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    let mut out = String::new();
+    out.push_str("Table 4 — Fixed K vs adaptive scheduler (PH)\n");
+    out.push_str(&format!(
+        "{:<10}{:>8}{:>8}{:>8}{:>11}{:>8}{:>10}\n",
+        "Config", "Lift", "Can", "Square", "Transport", "AVG", "Speed x"
+    ));
+    let run_row = |label: &str,
+                       params: Option<SpecParams>,
+                       sched: Option<SchedulerPolicy>|
+     -> Result<String> {
+        let opts = EvalOpts { episodes, seed, scheduler: sched, fixed_params: params };
+        let mut row = format!("{:<10}", label);
+        let mut avg = 0.0;
+        let mut nfe = 0.0;
+        for t in tasks {
+            let cell = eval_cell(den, t, DemoStyle::Ph, Method::TsDp, &opts)?;
+            row.push_str(&format!("{:>8.0}", cell.success_pct));
+            avg += cell.success_pct / tasks.len() as f64;
+            nfe += cell.nfe_pct / tasks.len() as f64;
+        }
+        row.push_str(&format!("{:>8.0}{:>10.2}\n", avg, 100.0 / nfe.max(1e-9)));
+        Ok(row)
+    };
+    // The paper sweeps K in {10, 25, 40}; our verify batch caps K at
+    // K_MAX=16, so the sweep is rescaled to {4, 10, 16} — same
+    // conservative/moderate/aggressive trade-off axis (DESIGN.md §2).
+    for k in [4usize, 10, crate::config::K_MAX] {
+        out.push_str(&run_row(&format!("K={k}"), Some(SpecParams::fixed_k(k)), None)?);
+    }
+    out.push_str(&run_row("TS-DP", None, scheduler)?);
+    Ok(out)
+}
+
+/// Table 5: frequency / latency.
+pub fn latency_table(den: &dyn Denoiser, episodes: usize, seed: u64) -> Result<String> {
+    let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    let mut out = String::new();
+    out.push_str("Table 5 — Frequency (Hz) / Latency (s)\n");
+    out.push_str(&format!("{:<22}", "Method"));
+    for t in tasks {
+        out.push_str(&format!("{:>20}", t.name()));
+    }
+    out.push_str(&format!("{:>20}\n", "AVG"));
+    for method in [Method::Vanilla, Method::TsDp] {
+        out.push_str(&format!("{:<22}", method.label()));
+        let mut freq_avg = 0.0;
+        let mut lat_avg = 0.0;
+        for t in tasks {
+            let opts = EvalOpts { episodes, seed, ..Default::default() };
+            let cell = eval_cell(den, t, DemoStyle::Ph, method, &opts)?;
+            out.push_str(&format!(
+                "{:>12.2} / {:<5.3}",
+                cell.freq_hz, cell.latency_secs
+            ));
+            freq_avg += cell.freq_hz / tasks.len() as f64;
+            lat_avg += cell.latency_secs / tasks.len() as f64;
+        }
+        out.push_str(&format!("{:>12.2} / {:<5.3}\n", freq_avg, lat_avg));
+    }
+    Ok(out)
+}
+
+/// Supplement tables S1–S3: NFE / speed / draft count / acceptance rate
+/// per task.
+pub fn supplement_table(
+    den: &dyn Denoiser,
+    which: &str,
+    opts: &[EvalOpts; 2],
+) -> Result<String> {
+    let (title, tasks, style): (&str, Vec<Task>, DemoStyle) = match which {
+        "s1" => (
+            "Supp. Table 1 — PH metrics",
+            vec![Task::Lift, Task::Can, Task::Square, Task::Transport, Task::ToolHang, Task::PushT],
+            DemoStyle::Ph,
+        ),
+        "s2" => (
+            "Supp. Table 2 — MH metrics",
+            vec![Task::Lift, Task::Can, Task::Square, Task::Transport],
+            DemoStyle::Mh,
+        ),
+        "s3" => (
+            "Supp. Table 3 — multi-stage metrics",
+            vec![Task::BlockPush, Task::Kitchen],
+            DemoStyle::Ph,
+        ),
+        other => anyhow::bail!("unknown supplement table '{other}'"),
+    };
+    let mut out = format!("{title} (TS-DP)\n{:<18}", "Metric");
+    for t in &tasks {
+        out.push_str(&format!("{:>18}", t.name()));
+    }
+    out.push_str(&format!("{:>18}\n", "AVG"));
+    let mut cells: Vec<[Cell; 2]> = Vec::new();
+    for t in &tasks {
+        let a = eval_cell(den, *t, style, Method::TsDp, &opts[0])?;
+        let b = eval_cell(den, *t, style, Method::TsDp, &opts[1])?;
+        cells.push([a, b]);
+    }
+    let metric = |out: &mut String, name: &str, f: &dyn Fn(&Cell) -> f64, dec: usize| {
+        out.push_str(&format!("{:<18}", name));
+        let mut avg = [0.0f64; 2];
+        for c in &cells {
+            out.push_str(&format!("{:>18}", paired(f(&c[0]), f(&c[1]), 6, dec)));
+            avg[0] += f(&c[0]) / cells.len() as f64;
+            avg[1] += f(&c[1]) / cells.len() as f64;
+        }
+        out.push_str(&format!("{:>18}\n", paired(avg[0], avg[1], 6, dec)));
+    };
+    metric(&mut out, "NFE", &|c| c.nfe_pct, 1);
+    metric(&mut out, "Speed (x)", &|c| c.speedup, 2);
+    metric(&mut out, "Draft count", &|c| c.drafts, 1);
+    metric(&mut out, "Acceptance (%)", &|c| c.acceptance_pct, 1);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::mock::MockDenoiser;
+
+    #[test]
+    fn eval_cell_reports_consistent_metrics() {
+        let den = MockDenoiser::with_bias(0.05);
+        let opts = EvalOpts { episodes: 2, ..Default::default() };
+        let cell = eval_cell(&den, Task::Lift, DemoStyle::Ph, Method::TsDp, &opts).unwrap();
+        assert!(cell.nfe_pct > 0.0 && cell.nfe_pct < 100.0);
+        assert!((cell.speedup - 100.0 / cell.nfe_pct).abs() < 1e-9);
+        assert!(cell.acceptance_pct >= 0.0 && cell.acceptance_pct <= 100.0);
+    }
+
+    #[test]
+    fn stage_metrics_for_multistage_tasks() {
+        let den = MockDenoiser::with_bias(0.05);
+        let opts = EvalOpts { episodes: 2, ..Default::default() };
+        let cell =
+            eval_cell(&den, Task::Kitchen, DemoStyle::Ph, Method::Vanilla, &opts).unwrap();
+        assert_eq!(cell.stage_pct.len(), 4);
+        // p1 >= p2 >= p3 >= p4 by construction.
+        for w in cell.stage_pct.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "{:?}", cell.stage_pct);
+        }
+    }
+
+    #[test]
+    fn paired_formatting() {
+        let s = paired(85.0, 80.0, 5, 0);
+        assert!(s.contains('/'));
+        assert!(s.contains("85"));
+    }
+}

@@ -1,0 +1,21 @@
+//! TS-DP: Temporal-aware Reinforcement-based Speculative Diffusion Policy.
+//!
+//! Reproduction of "TS-DP: Reinforcement Speculative Decoding For Temporal
+//! Adaptive Diffusion Policy Acceleration" as a three-layer Rust + JAX +
+//! Pallas serving stack. Python is build-time only (model authoring + AOT
+//! lowering to HLO text); the request path is entirely Rust, executing the
+//! AOT artifacts through the PJRT CPU client.
+
+#![warn(missing_docs)]
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod diffusion;
+pub mod envs;
+pub mod harness;
+pub mod policy;
+pub mod runtime;
+pub mod scheduler;
+pub mod speculative;
+pub mod util;

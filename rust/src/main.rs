@@ -1,0 +1,92 @@
+//! `ts-dp` — the L3 coordinator CLI.
+//!
+//! Subcommands (see `ts-dp help`):
+//! * `gen-demos`       — generate PH/MH demonstration datasets (build path)
+//! * `serve`           — run the serving coordinator over env sessions
+//! * `episode`         — run a single policy episode and print metrics
+//! * `train-scheduler` — PPO-train the temporal scheduler
+//! * `table`           — regenerate a paper table (1..5, s1..s3)
+//! * `figure`          — regenerate a paper figure (3..6) as CSV
+
+use anyhow::{bail, Result};
+use ts_dp::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let result = match cmd.as_str() {
+        "gen-demos" => cmd_gen_demos(&args),
+        "episode" => ts_dp::harness::cli::cmd_episode(&args),
+        "train-scheduler" => ts_dp::scheduler::cli::cmd_train(&args),
+        "table" => ts_dp::harness::cli::cmd_table(&args),
+        "figure" => ts_dp::harness::cli::cmd_figure(&args),
+        "serve" => ts_dp::coordinator::cli::cmd_serve(&args),
+        "load-sweep" => ts_dp::coordinator::cli::cmd_load_sweep(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "ts-dp — Temporal-aware Reinforcement Speculative Decoding for Diffusion Policy
+
+USAGE: ts-dp <command> [options]
+
+COMMANDS:
+  gen-demos        --out DIR [--episodes N] [--seed S]
+  serve            --task T --style ph|mh [--method M] [--sessions N] [--episodes N]
+  load-sweep       --task T [--method M] [--rates 1,5,20] [--requests N]
+  episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
+  train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
+  table            --id 1|2|3|4|5|s1|s2|s3 [--episodes N] [--out FILE]
+  figure           --id 3|4|5|6 [--out-dir DIR]
+
+Common options:
+  --artifacts DIR  artifact directory (default: artifacts)
+  --seed S         base RNG seed (default: 0)"
+    );
+}
+
+/// Build-path command: generate every (task, style) demo dataset.
+fn cmd_gen_demos(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "artifacts/demos");
+    let episodes = args.get_usize("episodes", 40)?;
+    let seed = args.get_u64("seed", 0)?;
+    let dir = std::path::PathBuf::from(&out);
+    if episodes == 0 {
+        bail!("--episodes must be positive");
+    }
+    let summaries = ts_dp::envs::demo::generate_all(&dir, episodes, seed)?;
+    println!(
+        "{:<12} {:<6} {:>9} {:>9} {:>15}",
+        "task", "style", "episodes", "windows", "expert_success"
+    );
+    for s in &summaries {
+        println!(
+            "{:<12} {:<6} {:>9} {:>9} {:>14.1}%",
+            s.task.name(),
+            s.style.name(),
+            s.episodes,
+            s.windows,
+            s.expert_success * 100.0
+        );
+    }
+    println!("wrote {} datasets to {}", summaries.len(), dir.display());
+    Ok(())
+}

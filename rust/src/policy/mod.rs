@@ -1,0 +1,79 @@
+//! The `Denoiser` abstraction: what the speculative engine needs from a
+//! diffusion policy.
+//!
+//! The production implementation is [`crate::runtime::ModelRuntime`]
+//! (PJRT executables); tests and the PPO scheduler's training loop can
+//! also run against [`mock::MockDenoiser`], an analytic target/drafter
+//! pair with a controllable disagreement — so every algorithmic property
+//! of the engine is testable without artifacts.
+
+pub mod mock;
+
+use crate::runtime::{ModelRuntime, NfeCounter};
+use anyhow::Result;
+
+/// Model evaluations used by the denoising engines.
+///
+/// All tensors are flat row-major `f32` slices; shapes are fixed by
+/// `crate::config` (x: HORIZON×ACT_DIM, cond: EMBED_DIM).
+pub trait Denoiser {
+    /// Observation encoder: obs[OBS_DIM] → cond[EMBED_DIM].
+    fn encode(&self, obs: &[f32]) -> Result<Vec<f32>>;
+    /// Target ε-prediction at one latent/timestep. Costs 1 NFE.
+    fn target_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>>;
+    /// Batched target ε-prediction over VERIFY_BATCH candidates in one
+    /// parallel forward pass. Costs 1 NFE.
+    fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> Result<Vec<f32>>;
+    /// Drafter ε-prediction. Costs 1/8 NFE.
+    fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>>;
+    /// Fused K-step drafter rollout, if an artifact exists for `k`:
+    /// returns (draft samples, posterior means), each k×SEG. Costs k/8
+    /// NFE. Implementations without fused support return Ok(None).
+    fn drafter_rollout(
+        &self,
+        k: usize,
+        x: &[f32],
+        t0: usize,
+        cond: &[f32],
+        noise: &[f32],
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+    /// NFE accounting.
+    fn nfe(&self) -> &NfeCounter;
+}
+
+impl Denoiser for ModelRuntime {
+    fn encode(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        ModelRuntime::encode(self, obs)
+    }
+
+    fn target_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        ModelRuntime::target_step(self, x, t, cond)
+    }
+
+    fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        ModelRuntime::target_verify(self, xs, ts, cond)
+    }
+
+    fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        ModelRuntime::drafter_step(self, x, t, cond)
+    }
+
+    fn drafter_rollout(
+        &self,
+        k: usize,
+        x: &[f32],
+        t0: usize,
+        cond: &[f32],
+        noise: &[f32],
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        if self.rollout_ks().contains(&k) {
+            ModelRuntime::drafter_rollout(self, k, x, t0, cond, noise).map(Some)
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn nfe(&self) -> &NfeCounter {
+        &self.nfe
+    }
+}

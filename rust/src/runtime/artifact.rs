@@ -1,0 +1,148 @@
+//! Artifact manifest: discovery + validation of the AOT export.
+//!
+//! `aot.py` writes `manifest.json` describing every exported HLO module
+//! and the shape constants it was built with. Loading cross-checks those
+//! constants against `crate::config` so a drifted artifact set fails at
+//! startup, not with silently-wrong numerics mid-episode.
+
+use crate::config::{
+    ACT_DIM, DIFFUSION_STEPS, EMBED_DIM, HORIZON, K_MAX, OBS_DIM, VERIFY_BATCH,
+};
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed and validated artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// Fused rollout lengths available (`drafter_rollout<K>.hlo.txt`).
+    pub rollout_ks: Vec<usize>,
+    /// Names of all exported modules.
+    pub modules: Vec<String>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate it against the compiled-in
+    /// shape constants.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let v = Json::load(&path)
+            .with_context(|| format!("loading manifest {} (run `make artifacts`)", path.display()))?;
+
+        let check = |key: &str, expect: usize| -> Result<()> {
+            let got = v.get(key)?.as_usize()?;
+            ensure!(got == expect, "manifest {key} = {got}, binary expects {expect}");
+            Ok(())
+        };
+        check("obs_dim", OBS_DIM)?;
+        check("act_dim", ACT_DIM)?;
+        check("horizon", HORIZON)?;
+        check("embed_dim", EMBED_DIM)?;
+        check("diffusion_steps", DIFFUSION_STEPS)?;
+        check("k_max", K_MAX)?;
+        check("verify_batch", VERIFY_BATCH)?;
+
+        let rollout_ks = v.get("rollout_ks")?.as_usize_vec()?;
+        ensure!(!rollout_ks.is_empty(), "manifest lists no rollout variants");
+        for k in &rollout_ks {
+            ensure!(*k <= K_MAX, "rollout K {k} exceeds K_MAX {K_MAX}");
+        }
+
+        let arts = v.get("artifacts")?;
+        let mut modules = Vec::new();
+        match arts {
+            Json::Obj(m) => {
+                for (name, meta) in m {
+                    let file = meta.get("file")?.as_str()?;
+                    let p = dir.join(file);
+                    ensure!(p.exists(), "artifact file missing: {}", p.display());
+                    modules.push(name.clone());
+                }
+            }
+            _ => bail!("manifest 'artifacts' must be an object"),
+        }
+        for required in ["encoder", "target_step", "target_verify", "drafter_step"] {
+            ensure!(
+                modules.iter().any(|m| m == required),
+                "manifest missing required module '{required}'"
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), rollout_ks, modules })
+    }
+
+    /// Path of a module's HLO text file.
+    pub fn module_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Largest exported fused-rollout K that is ≤ `k`, if any.
+    pub fn best_rollout_k(&self, k: usize) -> Option<usize> {
+        self.rollout_ks.iter().copied().filter(|r| *r <= k).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    fn write_manifest(dir: &Path, obs_dim: usize) {
+        let json = format!(
+            r#"{{
+  "obs_dim": {obs_dim}, "act_dim": 8, "horizon": 8, "embed_dim": 64,
+  "diffusion_steps": 100, "k_max": 16, "verify_batch": 17,
+  "target_blocks": 8, "drafter_blocks": 1,
+  "rollout_ks": [4, 8, 16],
+  "artifacts": {{
+    "encoder": {{"file": "encoder.hlo.txt"}},
+    "target_step": {{"file": "target_step.hlo.txt"}},
+    "target_verify": {{"file": "target_verify.hlo.txt"}},
+    "drafter_step": {{"file": "drafter_step.hlo.txt"}}
+  }}
+}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        for f in ["encoder", "target_step", "target_verify", "drafter_step"] {
+            std::fs::write(dir.join(format!("{f}.hlo.txt")), "HloModule x").unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_manifest_loads() {
+        let dir = TempDir::new("manifest_ok");
+        write_manifest(dir.path(), OBS_DIM);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.rollout_ks, vec![4, 8, 16]);
+        assert!(m.module_path("encoder").exists());
+    }
+
+    #[test]
+    fn shape_drift_is_rejected() {
+        let dir = TempDir::new("manifest_drift");
+        write_manifest(dir.path(), OBS_DIM + 1);
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("obs_dim"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_rejected() {
+        let dir = TempDir::new("manifest_missing");
+        write_manifest(dir.path(), OBS_DIM);
+        std::fs::remove_file(dir.path().join("target_verify.hlo.txt")).unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn best_rollout_k_picks_largest_fitting() {
+        let dir = TempDir::new("manifest_rollk");
+        write_manifest(dir.path(), OBS_DIM);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.best_rollout_k(16), Some(16));
+        assert_eq!(m.best_rollout_k(10), Some(8));
+        assert_eq!(m.best_rollout_k(4), Some(4));
+        assert_eq!(m.best_rollout_k(3), None);
+    }
+}

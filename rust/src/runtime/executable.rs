@@ -1,0 +1,183 @@
+//! Typed wrappers over the compiled PJRT executables.
+//!
+//! One `ModelRuntime` owns the PJRT CPU client and every compiled module.
+//! PJRT handles are not `Send` (raw C pointers), so the coordinator runs
+//! one engine thread that owns the runtime and serves denoising requests
+//! over channels — which is also the natural place to batch verification
+//! across sessions.
+
+use crate::config::{ACT_DIM, DIFFUSION_STEPS, EMBED_DIM, HORIZON, OBS_DIM, VERIFY_BATCH};
+use crate::runtime::{Manifest, NfeCounter};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flattened segment size (HORIZON × ACT_DIM).
+pub const SEG: usize = HORIZON * ACT_DIM;
+
+/// Owns the PJRT client and all compiled executables.
+pub struct ModelRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    encoder: xla::PjRtLoadedExecutable,
+    target_step: xla::PjRtLoadedExecutable,
+    target_verify: xla::PjRtLoadedExecutable,
+    drafter_step: xla::PjRtLoadedExecutable,
+    rollouts: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// NFE accounting (paper's evaluation metric).
+    pub nfe: NfeCounter,
+    /// The validated manifest this runtime was loaded from.
+    pub manifest: Manifest,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact under `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let encoder = compile(&client, &manifest.module_path("encoder"))?;
+        let target_step = compile(&client, &manifest.module_path("target_step"))?;
+        let target_verify = compile(&client, &manifest.module_path("target_verify"))?;
+        let drafter_step = compile(&client, &manifest.module_path("drafter_step"))?;
+        let mut rollouts = BTreeMap::new();
+        for k in &manifest.rollout_ks {
+            let exe = compile(&client, &manifest.module_path(&format!("drafter_rollout{k}")))?;
+            rollouts.insert(*k, exe);
+        }
+        Ok(Self {
+            client,
+            encoder,
+            target_step,
+            target_verify,
+            drafter_step,
+            rollouts,
+            nfe: NfeCounter::new(),
+            manifest,
+        })
+    }
+
+    fn run1(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+        expect_len: usize,
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        ensure!(v.len() == expect_len, "output len {} != expected {expect_len}", v.len());
+        Ok(v)
+    }
+
+    fn run2(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+        expect_len: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let (a, b) = result.to_tuple2()?;
+        let va = a.to_vec::<f32>()?;
+        let vb = b.to_vec::<f32>()?;
+        ensure!(va.len() == expect_len && vb.len() == expect_len, "rollout output shape");
+        Ok((va, vb))
+    }
+
+    fn seg_literal(x: &[f32]) -> Result<xla::Literal> {
+        ensure!(x.len() == SEG, "segment len {} != {SEG}", x.len());
+        Ok(xla::Literal::vec1(x).reshape(&[HORIZON as i64, ACT_DIM as i64])?)
+    }
+
+    fn cond_literal(cond: &[f32]) -> Result<xla::Literal> {
+        ensure!(cond.len() == EMBED_DIM, "cond len {} != {EMBED_DIM}", cond.len());
+        Ok(xla::Literal::vec1(cond))
+    }
+
+    /// Run the observation encoder: obs[OBS_DIM] → cond[EMBED_DIM].
+    pub fn encode(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        ensure!(obs.len() == OBS_DIM, "obs len {} != {OBS_DIM}", obs.len());
+        Self::run1(&self.encoder, &[xla::Literal::vec1(obs)], EMBED_DIM)
+    }
+
+    /// One target denoiser evaluation: ε̂(x, t, cond). Counts 1 NFE.
+    pub fn target_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        ensure!(t < DIFFUSION_STEPS, "t {t} out of range");
+        self.nfe.count_target();
+        Self::run1(
+            &self.target_step,
+            &[Self::seg_literal(x)?, xla::Literal::scalar(t as f32), Self::cond_literal(cond)?],
+            SEG,
+        )
+    }
+
+    /// Batched parallel verification: ε̂ for VERIFY_BATCH candidates in a
+    /// single target forward pass. Counts 1 NFE (paper §3.2).
+    pub fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        ensure!(xs.len() == VERIFY_BATCH * SEG, "xs len {}", xs.len());
+        ensure!(ts.len() == VERIFY_BATCH, "ts len {}", ts.len());
+        self.nfe.count_target();
+        let xs_lit = xla::Literal::vec1(xs).reshape(&[
+            VERIFY_BATCH as i64,
+            HORIZON as i64,
+            ACT_DIM as i64,
+        ])?;
+        Self::run1(
+            &self.target_verify,
+            &[xs_lit, xla::Literal::vec1(ts), Self::cond_literal(cond)?],
+            VERIFY_BATCH * SEG,
+        )
+    }
+
+    /// One drafter evaluation. Counts 1/8 NFE.
+    pub fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        ensure!(t < DIFFUSION_STEPS, "t {t} out of range");
+        self.nfe.count_drafter(1);
+        Self::run1(
+            &self.drafter_step,
+            &[Self::seg_literal(x)?, xla::Literal::scalar(t as f32), Self::cond_literal(cond)?],
+            SEG,
+        )
+    }
+
+    /// Fused K-step drafter rollout (one executable call instead of K):
+    /// returns (draft samples [K×SEG], posterior means [K×SEG]).
+    /// Counts K drafter evaluations. `noise` supplies the K standard
+    /// normal draws (retained by the caller for the acceptance test).
+    pub fn drafter_rollout(
+        &self,
+        k: usize,
+        x: &[f32],
+        t0: usize,
+        cond: &[f32],
+        noise: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .rollouts
+            .get(&k)
+            .ok_or_else(|| anyhow::anyhow!("no fused rollout artifact for K={k}"))?;
+        ensure!(noise.len() == k * SEG, "noise len {} != {}", noise.len(), k * SEG);
+        self.nfe.count_drafter(k);
+        let noise_lit =
+            xla::Literal::vec1(noise).reshape(&[k as i64, HORIZON as i64, ACT_DIM as i64])?;
+        Self::run2(
+            exe,
+            &[
+                Self::seg_literal(x)?,
+                xla::Literal::scalar(t0 as f32),
+                Self::cond_literal(cond)?,
+                noise_lit,
+            ],
+            k * SEG,
+        )
+    }
+
+    /// Available fused rollout lengths.
+    pub fn rollout_ks(&self) -> Vec<usize> {
+        self.rollouts.keys().copied().collect()
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT artifacts from the request path.
+//!
+//! `python/compile/aot.py` lowers the trained models to HLO **text**; this
+//! module compiles each module once on the PJRT CPU client
+//! (`xla::PjRtClient`) and exposes typed call wrappers with built-in NFE
+//! accounting. Python never appears past this point.
+
+pub mod artifact;
+pub mod executable;
+pub mod nfe;
+
+pub use artifact::Manifest;
+pub use executable::ModelRuntime;
+pub use nfe::NfeCounter;

@@ -1,0 +1,109 @@
+//! NFE (Number of Function Evaluations) accounting.
+//!
+//! Paper §4, Evaluation Metrics: "Since the DP consists of 8 Transformer
+//! blocks while the drafter contains only one, each drafter evaluation is
+//! counted as 1/8 NFE and each target model evaluation as 1 NFE." A
+//! batched verification pass is a single parallel target forward, i.e.
+//! 1 NFE — this is what makes speculative decoding profitable.
+//!
+//! Counts are kept in integer units of 1/8 NFE so accumulation is exact.
+
+use crate::config::{DRAFTER_BLOCKS, TARGET_BLOCKS};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Integer NFE units per target evaluation.
+const TARGET_UNITS: u64 = TARGET_BLOCKS as u64;
+/// Integer NFE units per drafter evaluation.
+const DRAFTER_UNITS: u64 = DRAFTER_BLOCKS as u64;
+
+/// Thread-safe NFE accumulator (units of 1/TARGET_BLOCKS NFE).
+#[derive(Debug, Default)]
+pub struct NfeCounter {
+    units: AtomicU64,
+    target_calls: AtomicU64,
+    drafter_calls: AtomicU64,
+}
+
+impl NfeCounter {
+    /// Zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one target evaluation (single or batched-parallel — both
+    /// are one forward pass of the 8-block model).
+    pub fn count_target(&self) {
+        self.units.fetch_add(TARGET_UNITS, Ordering::Relaxed);
+        self.target_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` serial drafter evaluations.
+    pub fn count_drafter(&self, n: usize) {
+        self.units.fetch_add(DRAFTER_UNITS * n as u64, Ordering::Relaxed);
+        self.drafter_calls.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Total NFE.
+    pub fn nfe(&self) -> f64 {
+        self.units.load(Ordering::Relaxed) as f64 / TARGET_UNITS as f64
+    }
+
+    /// Number of target forward passes.
+    pub fn target_calls(&self) -> u64 {
+        self.target_calls.load(Ordering::Relaxed)
+    }
+
+    /// Number of drafter forward passes.
+    pub fn drafter_calls(&self) -> u64 {
+        self.drafter_calls.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero.
+    pub fn reset(&self) {
+        self.units.store(0, Ordering::Relaxed);
+        self.target_calls.store(0, Ordering::Relaxed);
+        self.drafter_calls.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot (nfe, target_calls, drafter_calls).
+    pub fn snapshot(&self) -> (f64, u64, u64) {
+        (self.nfe(), self.target_calls(), self.drafter_calls())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_accounting() {
+        let c = NfeCounter::new();
+        c.count_target();
+        assert_eq!(c.nfe(), 1.0);
+        c.count_drafter(8);
+        assert_eq!(c.nfe(), 2.0, "8 drafter evals == 1 target eval");
+        assert_eq!(c.target_calls(), 1);
+        assert_eq!(c.drafter_calls(), 8);
+    }
+
+    #[test]
+    fn speculative_round_is_cheaper_than_serial() {
+        // K=10 drafts + 1 batched verification vs 10 serial target steps.
+        let spec = NfeCounter::new();
+        spec.count_drafter(10);
+        spec.count_target();
+        let serial = NfeCounter::new();
+        for _ in 0..10 {
+            serial.count_target();
+        }
+        assert!(spec.nfe() < serial.nfe() * 0.25, "{} vs {}", spec.nfe(), serial.nfe());
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let c = NfeCounter::new();
+        c.count_target();
+        c.reset();
+        assert_eq!(c.snapshot(), (0.0, 0, 0));
+    }
+}

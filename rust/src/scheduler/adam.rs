@@ -1,0 +1,87 @@
+//! Adam optimizer for the hand-rolled MLPs.
+
+use crate::scheduler::nn::{Mlp, MlpGrads};
+
+/// Adam state for one MLP.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    t: u64,
+    m: Vec<(Vec<f32>, Vec<f32>)>,
+    v: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Adam {
+    /// Adam with the standard moment coefficients.
+    pub fn new(mlp: &Mlp, lr: f32) -> Self {
+        let zeros: Vec<(Vec<f32>, Vec<f32>)> = mlp
+            .layers
+            .iter()
+            .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+            .collect();
+        Self { lr, b1: 0.9, b2: 0.999, eps: 1e-8, t: 0, m: zeros.clone(), v: zeros }
+    }
+
+    /// Apply one update in place.
+    pub fn step(&mut self, mlp: &mut Mlp, grads: &MlpGrads) {
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t as i32);
+        let bc2 = 1.0 - self.b2.powi(self.t as i32);
+        for (li, layer) in mlp.layers.iter_mut().enumerate() {
+            let (gw, gb) = &grads.layers[li];
+            let (mw, mb) = &mut self.m[li];
+            let (vw, vb) = &mut self.v[li];
+            for i in 0..layer.w.len() {
+                mw[i] = self.b1 * mw[i] + (1.0 - self.b1) * gw[i];
+                vw[i] = self.b2 * vw[i] + (1.0 - self.b2) * gw[i] * gw[i];
+                layer.w[i] -= self.lr * (mw[i] / bc1) / ((vw[i] / bc2).sqrt() + self.eps);
+            }
+            for i in 0..layer.b.len() {
+                mb[i] = self.b1 * mb[i] + (1.0 - self.b1) * gb[i];
+                vb[i] = self.b2 * vb[i] + (1.0 - self.b2) * gb[i] * gb[i];
+                layer.b[i] -= self.lr * (mb[i] / bc1) / ((vb[i] / bc2).sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Adam must drive a small regression problem to low loss.
+    #[test]
+    fn adam_fits_a_linear_map() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut mlp = Mlp::init(&[3, 16, 2], &mut rng);
+        let mut opt = Adam::new(&mlp, 5e-3);
+        // Ground truth: a small linear map (inside the tanh linear range).
+        let f = |x: &[f32]| [0.3 * x[0] + 0.6 * x[1], -0.3 * x[2]];
+        for _ in 0..500 {
+            let mut grads = MlpGrads::zeros(&mlp);
+            for _ in 0..16 {
+                let x: Vec<f32> = rng.normal_vec(3);
+                let y = f(&x);
+                let (out, cache) = mlp.forward(&x);
+                let dout: Vec<f32> =
+                    out.iter().zip(y).map(|(o, t)| 2.0 * (o - t) / 16.0).collect();
+                grads.add(&mlp.backward(&cache, &dout));
+            }
+            opt.step(&mut mlp, &grads);
+        }
+        // Evaluate on a held-out set.
+        let mut eval = 0.0f32;
+        for _ in 0..200 {
+            let x: Vec<f32> = rng.normal_vec(3);
+            let y = f(&x);
+            let out = mlp.infer(&x);
+            eval += out.iter().zip(y).map(|(o, t)| (o - t) * (o - t)).sum::<f32>();
+        }
+        eval /= 200.0;
+        assert!(eval < 0.02, "held-out loss {eval}");
+    }
+}

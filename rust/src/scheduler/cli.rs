@@ -1,0 +1,55 @@
+//! `ts-dp train-scheduler` — PPO-train the temporal scheduler against the
+//! real AOT model runtime and save the policy JSON.
+
+use crate::config::{DemoStyle, Task};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::train::{train, TrainConfig};
+use crate::util::cli::Args;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Entry point for `ts-dp train-scheduler`.
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let out = PathBuf::from(args.get_or("out", "artifacts/scheduler_policy.json"));
+    let iters = args.get_usize("iters", 15)?;
+    let episodes = args.get_usize("episodes", 8)?;
+    let seed = args.get_u64("seed", 0)?;
+    let style = DemoStyle::parse(&args.get_or("style", "ph"))
+        .context("--style must be ph|mh")?;
+    let tasks: Vec<Task> = match args.get("tasks") {
+        None => vec![Task::Lift, Task::Can, Task::Square, Task::Transport],
+        Some(spec) => spec
+            .split(',')
+            .map(|s| Task::parse(s.trim()).with_context(|| format!("unknown task '{s}'")))
+            .collect::<Result<_>>()?,
+    };
+
+    let den = ModelRuntime::load(&artifacts)?;
+    let cfg = TrainConfig {
+        iters,
+        episodes_per_iter: episodes,
+        tasks,
+        style,
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "{:<5} {:>10} {:>9} {:>9} {:>11} {:>9}",
+        "iter", "return", "success", "nfe/seg", "acceptance", "clipfrac"
+    );
+    let (policy, _stats) = train(&den, &cfg, |s| {
+        println!(
+            "{:<5} {:>10.3} {:>8.0}% {:>9.1} {:>10.1}% {:>9.3}",
+            s.iter,
+            s.mean_return,
+            s.success_rate * 100.0,
+            s.mean_nfe,
+            s.mean_acceptance * 100.0,
+            s.update.clip_frac
+        );
+    })?;
+    policy.save(&out)?;
+    println!("saved scheduler policy to {}", out.display());
+    Ok(())
+}

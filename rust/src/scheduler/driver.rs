@@ -1,0 +1,50 @@
+//! Serving-time scheduler hook: deterministic policy inference per
+//! segment (the paper's "Decision stage", Fig. 2 ①).
+
+use crate::config::SpecParams;
+use crate::harness::episode::{DecisionHook, SegmentOutcome};
+use crate::scheduler::policy::SchedulerPolicy;
+
+/// Wraps a trained policy for inference inside the episode loop.
+pub struct ServingHook {
+    policy: SchedulerPolicy,
+    /// Parameter trace (for Fig. 5); one entry per decision.
+    pub decisions: Vec<SpecParams>,
+}
+
+impl ServingHook {
+    /// New hook around a trained policy.
+    pub fn new(policy: SchedulerPolicy) -> Self {
+        Self { policy, decisions: Vec::new() }
+    }
+}
+
+impl DecisionHook for ServingHook {
+    fn decide(&mut self, feat: &[f32]) -> SpecParams {
+        let raw = self.policy.act_mean(feat);
+        let p = SchedulerPolicy::params_from_raw(&raw);
+        self.decisions.push(p);
+        p
+    }
+
+    fn post_segment(&mut self, _outcome: &SegmentOutcome<'_>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::features::FEAT_DIM;
+    use crate::util::Rng;
+
+    #[test]
+    fn serving_hook_is_deterministic_and_records_decisions() {
+        let mut rng = Rng::seed_from_u64(0);
+        let policy = SchedulerPolicy::init(&mut rng);
+        let mut hook = ServingHook::new(policy);
+        let feat = vec![0.5; FEAT_DIM];
+        let p1 = hook.decide(&feat);
+        let p2 = hook.decide(&feat);
+        assert_eq!(p1, p2);
+        assert_eq!(hook.decisions.len(), 2);
+    }
+}

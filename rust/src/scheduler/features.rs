@@ -1,0 +1,83 @@
+//! Scheduler observation features (paper §3.3: "the object states
+//! returned by the embodied environment, the embodied actions generated
+//! by DP, and the current task progress", plus the speculative-decoding
+//! feedback the process reward is computed from).
+
+use crate::config::{SpecParams, K_MAX, OBS_DIM};
+
+/// Feature vector length fed to the PPO policy/value nets.
+pub const FEAT_DIM: usize = OBS_DIM + 10;
+
+/// Rolling state the feature extractor keeps between decisions.
+#[derive(Debug, Clone)]
+pub struct FeatureState {
+    /// Acceptance rate of the most recent segment.
+    pub recent_acceptance: f32,
+    /// Draft count of the most recent segment (normalized later).
+    pub recent_drafts: f32,
+    /// Parameters chosen at the previous decision.
+    pub last_params: SpecParams,
+    /// Mean |ee velocity| over the executed steps of the last segment.
+    pub recent_speed: f32,
+}
+
+impl Default for FeatureState {
+    fn default() -> Self {
+        Self {
+            recent_acceptance: 1.0,
+            recent_drafts: 0.0,
+            last_params: SpecParams::fixed_default(),
+            recent_speed: 0.0,
+        }
+    }
+}
+
+/// Assemble the policy input.
+///
+/// * `obs` — raw environment observation (length OBS_DIM)
+/// * `progress` — task progress in [0, 1]
+/// * `phase_frac` — phase index / num_phases
+pub fn features(obs: &[f32], progress: f32, phase_frac: f32, st: &FeatureState) -> Vec<f32> {
+    debug_assert_eq!(obs.len(), OBS_DIM);
+    let mut f = Vec::with_capacity(FEAT_DIM);
+    f.extend_from_slice(obs);
+    f.push(progress);
+    f.push(phase_frac);
+    f.push(st.recent_speed * 12.0); // speeds are ~0..0.08; rescale to ~O(1)
+    f.push(st.recent_acceptance);
+    f.push(st.recent_drafts / 120.0); // typical drafts/segment is ~20..120
+    f.push(st.last_params.stages.k_early as f32 / K_MAX as f32);
+    f.push(st.last_params.stages.k_mid as f32 / K_MAX as f32);
+    f.push(st.last_params.stages.k_late as f32 / K_MAX as f32);
+    f.push(st.last_params.lambda);
+    f.push(st.last_params.sigma_scale / 8.0);
+    debug_assert_eq!(f.len(), FEAT_DIM);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_vector_has_declared_length_and_is_bounded() {
+        let obs = vec![0.5; OBS_DIM];
+        let st = FeatureState::default();
+        let f = features(&obs, 0.7, 0.25, &st);
+        assert_eq!(f.len(), FEAT_DIM);
+        for v in &f {
+            assert!(v.is_finite() && v.abs() <= 12.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn recent_stats_flow_through() {
+        let obs = vec![0.0; OBS_DIM];
+        let mut st = FeatureState::default();
+        st.recent_acceptance = 0.42;
+        st.recent_drafts = 60.0;
+        let f = features(&obs, 0.0, 0.0, &st);
+        assert!((f[OBS_DIM + 3] - 0.42).abs() < 1e-6);
+        assert!((f[OBS_DIM + 4] - 0.5).abs() < 1e-6);
+    }
+}

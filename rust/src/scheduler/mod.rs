@@ -1,0 +1,16 @@
+//! The temporal-complexity-aware speculative decoding scheduler
+//! (paper §3.3): a PPO-trained policy that adapts the draft horizons,
+//! acceptance threshold and sigma scale to the task phase.
+
+pub mod adam;
+pub mod cli;
+pub mod driver;
+pub mod features;
+pub mod nn;
+pub mod policy;
+pub mod ppo;
+pub mod reward;
+pub mod train;
+
+pub use driver::ServingHook;
+pub use policy::SchedulerPolicy;

@@ -1,0 +1,329 @@
+//! Minimal MLP with manual backprop — the neural substrate for the PPO
+//! scheduler (no autograd crates exist in this environment, and the nets
+//! are MLP-scale, so hand-rolled forward/backward with a finite-
+//! difference gradient check is the right tool).
+
+use crate::util::Rng;
+
+/// Fully-connected layer (row-major weights `[out][in]`).
+#[derive(Debug, Clone)]
+pub struct Linear {
+    /// Weights, `out_dim * in_dim`.
+    pub w: Vec<f32>,
+    /// Biases, `out_dim`.
+    pub b: Vec<f32>,
+    /// Input size.
+    pub in_dim: usize,
+    /// Output size.
+    pub out_dim: usize,
+}
+
+impl Linear {
+    /// Xavier-uniform initialization.
+    pub fn init(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        let scale = (6.0 / (in_dim + out_dim) as f32).sqrt();
+        let w = (0..in_dim * out_dim).map(|_| rng.uniform_range(-scale, scale)).collect();
+        Self { w, b: vec![0.0; out_dim], in_dim, out_dim }
+    }
+
+    /// y = W x + b.
+    pub fn forward(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(y.len(), self.out_dim);
+        for o in 0..self.out_dim {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            y[o] = self.b[o] + row.iter().zip(x).map(|(w, v)| w * v).sum::<f32>();
+        }
+    }
+}
+
+/// MLP with tanh hidden activations and a linear output layer.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    /// Layers, in order.
+    pub layers: Vec<Linear>,
+}
+
+/// Per-call activation cache for backprop.
+pub struct MlpCache {
+    /// Input and each layer's post-activation output.
+    acts: Vec<Vec<f32>>,
+}
+
+/// Gradients with the same layout as [`Mlp`].
+#[derive(Debug, Clone)]
+pub struct MlpGrads {
+    /// (dW, db) per layer.
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl MlpGrads {
+    /// Zero gradients matching `mlp`.
+    pub fn zeros(mlp: &Mlp) -> Self {
+        Self {
+            layers: mlp
+                .layers
+                .iter()
+                .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+                .collect(),
+        }
+    }
+
+    /// Scale all gradients (e.g. 1/batch).
+    pub fn scale(&mut self, s: f32) {
+        for (dw, db) in &mut self.layers {
+            for g in dw.iter_mut() {
+                *g *= s;
+            }
+            for g in db.iter_mut() {
+                *g *= s;
+            }
+        }
+    }
+
+    /// Accumulate another gradient set.
+    pub fn add(&mut self, other: &MlpGrads) {
+        for (mine, theirs) in self.layers.iter_mut().zip(&other.layers) {
+            for (g, o) in mine.0.iter_mut().zip(&theirs.0) {
+                *g += o;
+            }
+            for (g, o) in mine.1.iter_mut().zip(&theirs.1) {
+                *g += o;
+            }
+        }
+    }
+
+    /// Global L2 norm (for gradient clipping).
+    pub fn norm(&self) -> f32 {
+        let mut s = 0.0f32;
+        for (dw, db) in &self.layers {
+            s += dw.iter().map(|g| g * g).sum::<f32>();
+            s += db.iter().map(|g| g * g).sum::<f32>();
+        }
+        s.sqrt()
+    }
+}
+
+impl Mlp {
+    /// MLP with the given sizes, e.g. `[in, 64, 64, out]`.
+    pub fn init(sizes: &[usize], rng: &mut Rng) -> Self {
+        let layers =
+            sizes.windows(2).map(|w| Linear::init(w[0], w[1], rng)).collect();
+        Self { layers }
+    }
+
+    /// Input dimensionality.
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    /// Output dimensionality.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Forward pass; returns the output and the cache for backprop.
+    pub fn forward(&self, x: &[f32]) -> (Vec<f32>, MlpCache) {
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.to_vec());
+        let n = self.layers.len();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let mut y = vec![0.0; layer.out_dim];
+            layer.forward(acts.last().unwrap(), &mut y);
+            if i + 1 < n {
+                for v in y.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            acts.push(y);
+        }
+        (acts.last().unwrap().clone(), MlpCache { acts })
+    }
+
+    /// Inference-only forward (no cache allocation beyond scratch).
+    pub fn infer(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.layers.len();
+        let mut cur = x.to_vec();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let mut y = vec![0.0; layer.out_dim];
+            layer.forward(&cur, &mut y);
+            if i + 1 < n {
+                for v in y.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            cur = y;
+        }
+        cur
+    }
+
+    /// Backward pass from d(loss)/d(output); returns parameter grads.
+    pub fn backward(&self, cache: &MlpCache, dout: &[f32]) -> MlpGrads {
+        let mut grads = MlpGrads::zeros(self);
+        let n = self.layers.len();
+        let mut delta = dout.to_vec();
+        for i in (0..n).rev() {
+            let layer = &self.layers[i];
+            let x = &cache.acts[i];
+            // For hidden layers the cached activation is tanh(z); apply
+            // the activation derivative (1 - a^2) to the incoming delta.
+            if i + 1 < n {
+                let a = &cache.acts[i + 1];
+                for (d, av) in delta.iter_mut().zip(a) {
+                    *d *= 1.0 - av * av;
+                }
+            }
+            let (dw, db) = &mut grads.layers[i];
+            for o in 0..layer.out_dim {
+                db[o] += delta[o];
+                let row = &mut dw[o * layer.in_dim..(o + 1) * layer.in_dim];
+                for (rj, xj) in row.iter_mut().zip(x) {
+                    *rj += delta[o] * xj;
+                }
+            }
+            if i > 0 {
+                let mut dx = vec![0.0; layer.in_dim];
+                for o in 0..layer.out_dim {
+                    let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                    for (dxj, wj) in dx.iter_mut().zip(row) {
+                        *dxj += delta[o] * wj;
+                    }
+                }
+                delta = dx;
+            }
+        }
+        grads
+    }
+
+    /// Flatten all parameters (for save/load).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.extend_from_slice(&l.w);
+            out.extend_from_slice(&l.b);
+        }
+        out
+    }
+
+    /// Load parameters from a flat vector (shape from `self`).
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        let mut i = 0;
+        for l in &mut self.layers {
+            let nw = l.w.len();
+            l.w.copy_from_slice(&flat[i..i + nw]);
+            i += nw;
+            let nb = l.b.len();
+            l.b.copy_from_slice(&flat[i..i + nb]);
+            i += nb;
+        }
+        assert_eq!(i, flat.len(), "flat parameter size mismatch");
+    }
+
+    /// Layer sizes, e.g. `[in, h1, ..., out]`.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![self.layers[0].in_dim];
+        s.extend(self.layers.iter().map(|l| l.out_dim));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_close;
+
+    #[test]
+    fn forward_matches_manual_single_layer() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mlp = Mlp::init(&[2, 1], &mut rng);
+        let l = &mlp.layers[0];
+        let x = [0.3f32, -0.7];
+        let (y, _) = mlp.forward(&x);
+        assert_close(y[0], l.b[0] + l.w[0] * x[0] + l.w[1] * x[1], 1e-6);
+    }
+
+    #[test]
+    fn infer_equals_forward() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mlp = Mlp::init(&[5, 16, 3], &mut rng);
+        let x: Vec<f32> = rng.normal_vec(5);
+        let (y, _) = mlp.forward(&x);
+        assert_eq!(y, mlp.infer(&x));
+    }
+
+    /// Finite-difference gradient check: the heart of the substrate.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut mlp = Mlp::init(&[4, 8, 8, 2], &mut rng);
+        let x: Vec<f32> = rng.normal_vec(4);
+        // Loss = sum(out * coef) for fixed coef -> dout = coef.
+        let coef = [0.7f32, -1.3];
+        let loss = |m: &Mlp| -> f32 {
+            let y = m.infer(&x);
+            y[0] * coef[0] + y[1] * coef[1]
+        };
+        let (_, cache) = mlp.forward(&x);
+        let grads = mlp.backward(&cache, &coef);
+        let eps = 1e-3f32;
+        // Spot-check a spread of parameters in every layer.
+        for li in 0..mlp.layers.len() {
+            let nw = mlp.layers[li].w.len();
+            for pi in [0, nw / 2, nw - 1] {
+                let orig = mlp.layers[li].w[pi];
+                mlp.layers[li].w[pi] = orig + eps;
+                let lp = loss(&mlp);
+                mlp.layers[li].w[pi] = orig - eps;
+                let lm = loss(&mlp);
+                mlp.layers[li].w[pi] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads.layers[li].0[pi];
+                assert!(
+                    (fd - an).abs() < 2e-2 * fd.abs().max(an.abs()).max(0.1),
+                    "layer {li} w[{pi}]: fd {fd} vs analytic {an}"
+                );
+            }
+            // And one bias.
+            let orig = mlp.layers[li].b[0];
+            mlp.layers[li].b[0] = orig + eps;
+            let lp = loss(&mlp);
+            mlp.layers[li].b[0] = orig - eps;
+            let lm = loss(&mlp);
+            mlp.layers[li].b[0] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grads.layers[li].1[0];
+            assert!(
+                (fd - an).abs() < 2e-2 * fd.abs().max(an.abs()).max(0.1),
+                "layer {li} b[0]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mlp = Mlp::init(&[3, 7, 2], &mut rng);
+        let flat = mlp.flatten();
+        let mut other = Mlp::init(&[3, 7, 2], &mut rng);
+        other.unflatten(&flat);
+        let x: Vec<f32> = rng.normal_vec(3);
+        assert_eq!(mlp.infer(&x), other.infer(&x));
+        assert_eq!(mlp.sizes(), vec![3, 7, 2]);
+    }
+
+    #[test]
+    fn grads_utils() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mlp = Mlp::init(&[2, 3], &mut rng);
+        let (_, cache) = mlp.forward(&[1.0, 2.0]);
+        let g1 = mlp.backward(&cache, &[1.0, 0.0, 0.0]);
+        let mut acc = MlpGrads::zeros(&mlp);
+        acc.add(&g1);
+        acc.add(&g1);
+        acc.scale(0.5);
+        for (a, b) in acc.layers[0].0.iter().zip(&g1.layers[0].0) {
+            assert_close(*a, *b, 1e-6);
+        }
+        assert!(acc.norm() > 0.0);
+    }
+}

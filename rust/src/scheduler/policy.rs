@@ -1,0 +1,186 @@
+//! The PPO scheduler policy: a Gaussian MLP over speculative parameters.
+//!
+//! Action space (paper §3.3): sigma scale, acceptance threshold λ, and
+//! the three per-stage draft horizons — 5 continuous dimensions, squashed
+//! from raw policy outputs into their valid ranges.
+
+use crate::config::{SpecParams, StageParams, K_MAX};
+use crate::scheduler::features::FEAT_DIM;
+use crate::scheduler::nn::Mlp;
+use crate::util::json::Json;
+use crate::util::math::sigmoid;
+use crate::util::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Number of action dimensions.
+pub const ACT_N: usize = 5;
+const LOG_2PI: f32 = 1.837877;
+
+/// Gaussian policy + value function.
+#[derive(Debug, Clone)]
+pub struct SchedulerPolicy {
+    /// Mean network: FEAT_DIM → ACT_N.
+    pub pi: Mlp,
+    /// State-independent log standard deviations.
+    pub log_std: Vec<f32>,
+    /// Value network: FEAT_DIM → 1.
+    pub value: Mlp,
+}
+
+impl SchedulerPolicy {
+    /// Fresh policy with 2×64 hidden layers (both heads).
+    pub fn init(rng: &mut Rng) -> Self {
+        Self {
+            pi: Mlp::init(&[FEAT_DIM, 64, 64, ACT_N], rng),
+            log_std: vec![-0.5; ACT_N],
+            value: Mlp::init(&[FEAT_DIM, 64, 64, 1], rng),
+        }
+    }
+
+    /// Sample a raw action; returns (raw, log-prob).
+    pub fn act(&self, feat: &[f32], rng: &mut Rng) -> (Vec<f32>, f64) {
+        let mean = self.pi.infer(feat);
+        let mut raw = Vec::with_capacity(ACT_N);
+        for i in 0..ACT_N {
+            raw.push(mean[i] + self.log_std[i].exp() * rng.normal());
+        }
+        let lp = self.log_prob(&mean, &raw);
+        (raw, lp)
+    }
+
+    /// Deterministic (mean) action for serving.
+    pub fn act_mean(&self, feat: &[f32]) -> Vec<f32> {
+        self.pi.infer(feat)
+    }
+
+    /// log π(raw | mean) under the current log_std.
+    pub fn log_prob(&self, mean: &[f32], raw: &[f32]) -> f64 {
+        let mut lp = 0.0f64;
+        for i in 0..ACT_N {
+            let s = self.log_std[i].exp();
+            let z = (raw[i] - mean[i]) / s;
+            lp += (-0.5 * z * z - self.log_std[i] - 0.5 * LOG_2PI) as f64;
+        }
+        lp
+    }
+
+    /// State value estimate.
+    pub fn value_of(&self, feat: &[f32]) -> f32 {
+        self.value.infer(feat)[0]
+    }
+
+    /// Squash raw actions into valid speculative parameters.
+    pub fn params_from_raw(raw: &[f32]) -> SpecParams {
+        let k = |a: f32| 1 + ((K_MAX - 1) as f32 * sigmoid(a)).round() as usize;
+        SpecParams {
+            stages: StageParams {
+                k_early: k(raw[0]),
+                k_mid: k(raw[1]),
+                k_late: k(raw[2]),
+            },
+            // λ in [1e-3, 0.8] on a log scale (small λ = permissive).
+            lambda: (1e-3f32.ln() + (0.8f32.ln() - 1e-3f32.ln()) * sigmoid(raw[3])).exp(),
+            // σ scale in [0.5, 8].
+            sigma_scale: 0.5 + 7.5 * sigmoid(raw[4]),
+        }
+        .clamped()
+    }
+
+    /// Serialize to JSON (architecture + flat weights).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pi_sizes", Json::usizes(self.pi.sizes())),
+            ("pi", Json::nums(self.pi.flatten().into_iter().map(|x| x as f64))),
+            ("log_std", Json::nums(self.log_std.iter().map(|x| *x as f64))),
+            ("value_sizes", Json::usizes(self.value.sizes())),
+            ("value", Json::nums(self.value.flatten().into_iter().map(|x| x as f64))),
+        ])
+    }
+
+    /// Deserialize.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut rng = Rng::seed_from_u64(0);
+        let pi_sizes = v.get("pi_sizes")?.as_usize_vec()?;
+        let value_sizes = v.get("value_sizes")?.as_usize_vec()?;
+        let mut pi = Mlp::init(&pi_sizes, &mut rng);
+        pi.unflatten(&v.get("pi")?.as_f32_vec()?);
+        let mut value = Mlp::init(&value_sizes, &mut rng);
+        value.unflatten(&v.get("value")?.as_f32_vec()?);
+        let log_std = v.get("log_std")?.as_f32_vec()?;
+        anyhow::ensure!(log_std.len() == ACT_N);
+        Ok(Self { pi, log_std, value })
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().save(path)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn params_squash_into_valid_ranges() {
+        for raw in [[-10.0f32; 5], [0.0; 5], [10.0; 5]] {
+            let p = SchedulerPolicy::params_from_raw(&raw);
+            assert!(p.stages.k_early >= 1 && p.stages.k_early <= K_MAX);
+            assert!(p.lambda >= 1e-4 && p.lambda <= 1.0);
+            assert!(p.sigma_scale >= 0.5 && p.sigma_scale <= 8.0);
+        }
+        // Extremes actually reach the range edges.
+        let lo = SchedulerPolicy::params_from_raw(&[-10.0; 5]);
+        let hi = SchedulerPolicy::params_from_raw(&[10.0; 5]);
+        assert_eq!(lo.stages.k_mid, 1);
+        assert_eq!(hi.stages.k_mid, K_MAX);
+        assert!(lo.sigma_scale < 0.6 && hi.sigma_scale > 7.9);
+        assert!(lo.lambda < 2e-3 && hi.lambda > 0.7);
+    }
+
+    #[test]
+    fn log_prob_is_maximal_at_the_mean() {
+        let mut rng = Rng::seed_from_u64(0);
+        let p = SchedulerPolicy::init(&mut rng);
+        let feat = vec![0.1; FEAT_DIM];
+        let mean = p.act_mean(&feat);
+        let lp_mean = p.log_prob(&mean, &mean);
+        let mut off = mean.clone();
+        off[0] += 1.0;
+        assert!(p.log_prob(&mean, &off) < lp_mean);
+    }
+
+    #[test]
+    fn sampling_respects_log_std() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut p = SchedulerPolicy::init(&mut rng);
+        p.log_std = vec![-5.0; ACT_N]; // nearly deterministic
+        let feat = vec![0.2; FEAT_DIM];
+        let mean = p.act_mean(&feat);
+        let (raw, lp) = p.act(&feat, &mut rng);
+        for i in 0..ACT_N {
+            assert!((raw[i] - mean[i]).abs() < 0.1);
+        }
+        assert!(lp.is_finite());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = SchedulerPolicy::init(&mut rng);
+        let dir = TempDir::new("sched_policy");
+        let path = dir.path().join("policy.json");
+        p.save(&path).unwrap();
+        let q = SchedulerPolicy::load(&path).unwrap();
+        let feat = vec![0.3; FEAT_DIM];
+        assert_eq!(p.act_mean(&feat), q.act_mean(&feat));
+        assert_eq!(p.value_of(&feat), q.value_of(&feat));
+    }
+}

@@ -1,0 +1,104 @@
+//! Scheduler reward (paper Eq. 12–15): sparse final outcome + dense
+//! efficiency shaping.
+
+use crate::config::Task;
+
+/// Final-reward magnitude R_final (Eq. 12–13).
+pub const R_FINAL: f64 = 10.0;
+
+/// Eq. 12: discrete final reward ±R_final on success/failure.
+pub fn final_reward_discrete(success: bool) -> f64 {
+    if success {
+        R_FINAL
+    } else {
+        -R_FINAL
+    }
+}
+
+/// Eq. 13: continuous final reward 2·R_final·r_max − R_final, with
+/// r_max the continuous outcome (coverage / sub-goal fraction) in [0,1].
+pub fn final_reward_continuous(r_max: f32) -> f64 {
+    2.0 * R_FINAL * r_max as f64 - R_FINAL
+}
+
+/// Dispatch on the task's outcome type (paper: "completion-based tasks
+/// and binary success–failure tasks").
+pub fn final_reward(task: Task, success: bool, score: f32) -> f64 {
+    if task.continuous_outcome() {
+        final_reward_continuous(score)
+    } else {
+        final_reward_discrete(success)
+    }
+}
+
+/// Eq. 15: process-reward scale λ = (R_final/4) / N_expected with
+/// N_expected = ceil(T_max / Δt).
+pub fn process_scale(t_max: usize, decision_interval: usize) -> f64 {
+    let n_expected = t_max.div_ceil(decision_interval.max(1)).max(1);
+    (R_FINAL / 4.0) / n_expected as f64
+}
+
+/// Eq. 14: per-decision process reward
+/// (n_accept/n_draft + n_accept/n_diffusion) · λ.
+pub fn process_reward(
+    n_accept: usize,
+    n_draft: usize,
+    n_diffusion: usize,
+    scale: f64,
+) -> f64 {
+    if n_draft == 0 {
+        return 0.0;
+    }
+    let a = n_accept as f64 / n_draft as f64;
+    let b = n_accept as f64 / n_diffusion.max(1) as f64;
+    (a + b) * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discrete_final_is_symmetric() {
+        assert_eq!(final_reward_discrete(true), R_FINAL);
+        assert_eq!(final_reward_discrete(false), -R_FINAL);
+    }
+
+    #[test]
+    fn continuous_final_spans_the_same_range() {
+        assert_eq!(final_reward_continuous(1.0), R_FINAL);
+        assert_eq!(final_reward_continuous(0.0), -R_FINAL);
+        assert_eq!(final_reward_continuous(0.5), 0.0);
+    }
+
+    #[test]
+    fn task_dispatch() {
+        assert_eq!(final_reward(Task::Lift, true, 0.2), R_FINAL);
+        assert_eq!(final_reward(Task::PushT, false, 0.75), final_reward_continuous(0.75));
+    }
+
+    /// Accumulated process reward over an episode is capped at ~R_final/4
+    /// times the max per-step value (paper: "constrains the accumulated
+    /// process reward to one-fourth of the final reward").
+    #[test]
+    fn accumulated_process_reward_is_bounded() {
+        let t_max = 200;
+        let dt = 4;
+        let scale = process_scale(t_max, dt);
+        let n_decisions = t_max / dt;
+        // Per-decision reward is at most (1 + 1) * scale ~ 2*scale; with
+        // realistic n_accept <= n_diffusion the (a+b) term stays <= 2.
+        let per = process_reward(100, 100, 100, scale);
+        let total = per * n_decisions as f64;
+        assert!(total <= 2.0 * R_FINAL / 4.0 + 1e-9, "total {total}");
+        // And for the typical regime (accept ~= draft, accept << diffusion
+        // steps) it is close to R_final/4.
+        let per_typ = process_reward(90, 100, 100, scale);
+        assert!(per_typ > 0.0);
+    }
+
+    #[test]
+    fn zero_drafts_zero_reward() {
+        assert_eq!(process_reward(0, 0, 100, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! PPO training loop for the temporal scheduler.
+//!
+//! Markov modeling per paper §3.3: each *scheduler decision* (one action
+//! segment = Δt env steps) is one RL step. Rewards: dense process reward
+//! (Eq. 14–15) per decision plus the sparse final reward (Eq. 12–13) on
+//! the last decision of the episode.
+
+use crate::baselines::TsDp;
+use crate::config::{DemoStyle, SpecParams, Task, DIFFUSION_STEPS, EXEC_STEPS};
+use crate::envs::make_env;
+use crate::harness::episode::{run_episode, DecisionHook, SegmentOutcome};
+use crate::policy::Denoiser;
+use crate::scheduler::policy::SchedulerPolicy;
+use crate::scheduler::ppo::{update, PpoConfig, Transition, UpdateStats};
+use crate::scheduler::reward;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// PPO iterations.
+    pub iters: usize,
+    /// Episodes collected per iteration.
+    pub episodes_per_iter: usize,
+    /// Tasks to cycle through (paper Table 4 trains on the Robomimic 4).
+    pub tasks: Vec<Task>,
+    /// Demo style of the envs.
+    pub style: DemoStyle,
+    /// Base seed.
+    pub seed: u64,
+    /// PPO hyperparameters.
+    pub ppo: PpoConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            iters: 20,
+            episodes_per_iter: 8,
+            tasks: vec![Task::Lift, Task::Can, Task::Square, Task::Transport],
+            style: DemoStyle::Ph,
+            seed: 0,
+            ppo: PpoConfig::default(),
+        }
+    }
+}
+
+/// Per-iteration training statistics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    /// Iteration index.
+    pub iter: usize,
+    /// Mean episode return (process + final rewards).
+    pub mean_return: f64,
+    /// Success rate over the iteration's episodes.
+    pub success_rate: f64,
+    /// Mean NFE per segment.
+    pub mean_nfe: f64,
+    /// Mean draft acceptance rate.
+    pub mean_acceptance: f64,
+    /// PPO update stats.
+    pub update: UpdateStats,
+}
+
+/// Collection hook: samples the stochastic policy and records
+/// transitions with Eq. 14/12–13 rewards.
+struct CollectHook<'a> {
+    policy: &'a SchedulerPolicy,
+    rng: Rng,
+    transitions: Vec<Transition>,
+    pending: Option<Transition>,
+    episode_return: f64,
+}
+
+impl<'a> CollectHook<'a> {
+    fn new(policy: &'a SchedulerPolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            rng: Rng::seed_from_u64(seed),
+            transitions: Vec::new(),
+            pending: None,
+            episode_return: 0.0,
+        }
+    }
+
+    fn flush(&mut self) {
+        if let Some(t) = self.pending.take() {
+            self.transitions.push(t);
+        }
+    }
+}
+
+impl DecisionHook for CollectHook<'_> {
+    fn decide(&mut self, feat: &[f32]) -> SpecParams {
+        self.flush();
+        let (raw, logp) = self.policy.act(feat, &mut self.rng);
+        let value = self.policy.value_of(feat);
+        let params = SchedulerPolicy::params_from_raw(&raw);
+        self.pending = Some(Transition {
+            feat: feat.to_vec(),
+            raw,
+            logp,
+            value,
+            reward: 0.0,
+            done: false,
+        });
+        params
+    }
+
+    fn post_segment(&mut self, outcome: &SegmentOutcome<'_>) {
+        let t = self.pending.as_mut().expect("post_segment without decide");
+        let scale = reward::process_scale(outcome.t_max, EXEC_STEPS);
+        t.reward = reward::process_reward(
+            outcome.meta.accepted,
+            outcome.meta.drafts,
+            DIFFUSION_STEPS,
+            scale,
+        );
+        if outcome.done {
+            t.reward += reward::final_reward(outcome.task, outcome.success, outcome.score);
+            t.done = true;
+        }
+        self.episode_return += t.reward;
+    }
+}
+
+/// Train a scheduler policy against a denoiser (real runtime or mock).
+/// Returns the policy and per-iteration stats.
+pub fn train(
+    den: &dyn Denoiser,
+    cfg: &TrainConfig,
+    mut progress: impl FnMut(&IterStats),
+) -> Result<(SchedulerPolicy, Vec<IterStats>)> {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut policy = SchedulerPolicy::init(&mut rng);
+    let mut all_stats = Vec::with_capacity(cfg.iters);
+
+    for iter in 0..cfg.iters {
+        let mut buf: Vec<Transition> = Vec::new();
+        let mut returns = 0.0;
+        let mut successes = 0usize;
+        let mut nfe_sum = 0.0;
+        let mut nfe_segments = 0usize;
+        let mut acc_sum = 0.0;
+        for ep in 0..cfg.episodes_per_iter {
+            let task = cfg.tasks[ep % cfg.tasks.len()];
+            let mut env = make_env(task, cfg.style);
+            let mut generator = TsDp::new(SpecParams::fixed_default());
+            let ep_seed = cfg.seed ^ ((iter as u64) << 24) ^ (ep as u64 + 1);
+            let mut hook = CollectHook::new(&policy, ep_seed ^ 0xabcd);
+            let result = run_episode(
+                den,
+                env.as_mut(),
+                &mut generator,
+                cfg.style,
+                ep_seed,
+                Some(&mut hook),
+            )?;
+            hook.flush();
+            // Safety: mark the episode's last transition done even if the
+            // env hit its step limit mid-segment.
+            if let Some(last) = hook.transitions.last_mut() {
+                last.done = true;
+            }
+            returns += hook.episode_return;
+            successes += result.success as usize;
+            nfe_sum += result.nfe;
+            nfe_segments += result.segments.len();
+            acc_sum += result.acceptance_rate();
+            buf.extend(hook.transitions);
+        }
+        let stats_update = update(&mut policy, &buf, &cfg.ppo, &mut rng);
+        let stats = IterStats {
+            iter,
+            mean_return: returns / cfg.episodes_per_iter as f64,
+            success_rate: successes as f64 / cfg.episodes_per_iter as f64,
+            mean_nfe: nfe_sum / nfe_segments.max(1) as f64,
+            mean_acceptance: acc_sum / cfg.episodes_per_iter as f64,
+            update: stats_update,
+        };
+        progress(&stats);
+        all_stats.push(stats);
+    }
+    Ok((policy, all_stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::mock::MockDenoiser;
+
+    /// Short PPO run against the mock: must complete, produce finite
+    /// stats, and the collected return should not collapse.
+    #[test]
+    fn short_training_run_completes() {
+        // Phase-dependent drafter quality: worse at high noise — gives
+        // the scheduler something to adapt to.
+        let den = MockDenoiser::with_bias_fn(|t| if t > 80 { 0.4 } else { 0.05 });
+        let cfg = TrainConfig {
+            iters: 2,
+            episodes_per_iter: 2,
+            tasks: vec![Task::Lift],
+            ..Default::default()
+        };
+        let (policy, stats) = train(&den, &cfg, |_| {}).unwrap();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert!(s.mean_return.is_finite());
+            assert!(s.mean_nfe > 0.0);
+        }
+        // Policy remains valid.
+        let feat = vec![0.0; crate::scheduler::features::FEAT_DIM];
+        let p = SchedulerPolicy::params_from_raw(&policy.act_mean(&feat));
+        assert!(p.stages.k_mid >= 1);
+    }
+
+    /// The process reward must favor configurations that accept more
+    /// drafts: two hand-rolled transitions confirm reward ordering.
+    #[test]
+    fn reward_prefers_higher_acceptance() {
+        let scale = reward::process_scale(100, EXEC_STEPS);
+        let good = reward::process_reward(90, 100, DIFFUSION_STEPS, scale);
+        let bad = reward::process_reward(10, 100, DIFFUSION_STEPS, scale);
+        assert!(good > bad);
+    }
+}

@@ -1,0 +1,354 @@
+//! The TS-DP speculative decoding engine (paper §3.2, Algorithm 1).
+//!
+//! One *round* at diffusion level t:
+//!
+//! 1. **Draft** — the drafter rolls out k = K(t) serial denoising steps
+//!    from the current latent, recording each sample, its posterior mean
+//!    μ̂_j, and the noise draw ξ_j (k/8 NFE). Uses the fused rollout
+//!    artifact when one exists for k, else serial drafter calls.
+//! 2. **Verify** — the target evaluates all k draft *input* states in a
+//!    single batched forward pass (1 NFE) giving target means μ_j.
+//! 3. **Accept** — scan drafts in order with the MH test (Eq. 10–11,
+//!    σ widened by the scheduler's sigma_scale, threshold λ); commit the
+//!    accepted prefix; correct the first rejection by reflection-maximal
+//!    coupling (Eq. 4–6) so the committed sample is exactly
+//!    target-distributed — no extra target call.
+//!
+//! Rounds repeat until t = 0; the final step is a single target call.
+
+use crate::config::{SpecParams, ACT_DIM, DIFFUSION_STEPS, HORIZON, VERIFY_BATCH};
+use crate::diffusion::{acceptance, coupling, DdpmSchedule};
+use crate::policy::Denoiser;
+use crate::speculative::trace::{RoundRecord, SegmentTrace};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Flattened segment size.
+pub const SEG: usize = HORIZON * ACT_DIM;
+
+/// Speculative decoding engine over any [`Denoiser`].
+pub struct SpecEngine {
+    sched: DdpmSchedule,
+    /// Use the classic stochastic accept test (U ≤ p) instead of the
+    /// paper's deterministic threshold p ≥ λ. Ablation knob: the
+    /// stochastic test is the textbook lossless rule; the threshold is
+    /// what the scheduler tunes (§3.2).
+    pub stochastic_accept: bool,
+}
+
+impl Default for SpecEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpecEngine {
+    /// Engine with the standard cosine schedule.
+    pub fn new() -> Self {
+        Self { sched: DdpmSchedule::cosine(DIFFUSION_STEPS), stochastic_accept: false }
+    }
+
+    /// Engine using the classic stochastic acceptance test (ablation).
+    pub fn stochastic() -> Self {
+        Self { stochastic_accept: true, ..Self::new() }
+    }
+
+    /// Borrow the schedule (shared with baselines / tests).
+    pub fn schedule(&self) -> &DdpmSchedule {
+        &self.sched
+    }
+
+    /// Generate one action segment by speculative denoising.
+    ///
+    /// `params` may be updated per-round by the scheduler through
+    /// `param_fn` (passed the current timestep); pass `|_| params` for
+    /// fixed parameters.
+    pub fn generate_segment(
+        &self,
+        den: &dyn Denoiser,
+        cond: &[f32],
+        mut param_fn: impl FnMut(usize) -> SpecParams,
+        rng: &mut Rng,
+        trace: &mut SegmentTrace,
+    ) -> Result<Vec<f32>> {
+        let start = std::time::Instant::now();
+        let nfe0 = den.nfe().nfe();
+        let mut x: Vec<f32> = rng.normal_vec(SEG);
+        let mut t = DIFFUSION_STEPS - 1;
+        while t > 0 {
+            let params = param_fn(t).clamped();
+            let k = params.stages.k_for_timestep(t).min(t);
+            let round = self.speculative_round(den, cond, &mut x, t, k, &params, rng)?;
+            t -= round.committed;
+            trace.rounds.push(round);
+        }
+        // Final deterministic step at t = 0.
+        let eps = den.target_step(&x, 0, cond)?;
+        let xi = vec![0.0f32; SEG];
+        let (x0, _) = self.sched.step(0, &x, &eps, &xi);
+        trace.nfe = den.nfe().nfe() - nfe0;
+        trace.wall_secs = start.elapsed().as_secs_f64();
+        Ok(x0)
+    }
+
+    /// One draft + verify + accept round; mutates `x` to the committed
+    /// latent and returns the round record (committed ≥ 1).
+    fn speculative_round(
+        &self,
+        den: &dyn Denoiser,
+        cond: &[f32],
+        x: &mut Vec<f32>,
+        t: usize,
+        k: usize,
+        params: &SpecParams,
+        rng: &mut Rng,
+    ) -> Result<RoundRecord> {
+        debug_assert!(k >= 1 && k <= t);
+        // --- 1. draft rollout ---
+        // states[j] = input latent of draft j (level t-j); samples[j] =
+        // its output (level t-j-1); means[j] = drafter posterior mean.
+        let noise: Vec<f32> = rng.normal_vec(k * SEG);
+        let mut states: Vec<Vec<f32>> = Vec::with_capacity(k + 1);
+        states.push(x.clone());
+        let (samples_flat, means_flat) = match den.drafter_rollout(k, x, t, cond, &noise)? {
+            Some(fused) => fused,
+            None => {
+                // Serial fallback: k drafter_step calls.
+                let mut samples = Vec::with_capacity(k * SEG);
+                let mut means = Vec::with_capacity(k * SEG);
+                let mut cur = x.clone();
+                for j in 0..k {
+                    let tj = t - j;
+                    let eps = den.drafter_step(&cur, tj, cond)?;
+                    let xi = &noise[j * SEG..(j + 1) * SEG];
+                    let (next, mean) = self.sched.step(tj, &cur, &eps, xi);
+                    samples.extend_from_slice(&next);
+                    means.extend_from_slice(&mean);
+                    cur = next;
+                }
+                (samples, means)
+            }
+        };
+        for j in 0..k.saturating_sub(1) {
+            states.push(samples_flat[j * SEG..(j + 1) * SEG].to_vec());
+        }
+
+        // --- 2. batched verification (single target forward) ---
+        let mut xs = Vec::with_capacity(VERIFY_BATCH * SEG);
+        let mut ts = Vec::with_capacity(VERIFY_BATCH);
+        for j in 0..VERIFY_BATCH {
+            let jj = j.min(k - 1); // pad with the last real state
+            xs.extend_from_slice(&states[jj]);
+            ts.push((t - jj) as f32);
+        }
+        let eps_t = den.target_verify(&xs, &ts, cond)?;
+
+        // --- 3. scan, accept, correct ---
+        let mut probs = Vec::with_capacity(k);
+        let mut accepted = 0usize;
+        let mut coupled = None;
+        let mut committed = 0usize;
+        for j in 0..k {
+            let tj = t - j;
+            let state = &states[j];
+            let sample = &samples_flat[j * SEG..(j + 1) * SEG];
+            let mu_d = &means_flat[j * SEG..(j + 1) * SEG];
+            // Target posterior mean at the same state.
+            let eps_j = &eps_t[j * SEG..(j + 1) * SEG];
+            let mut x0 = vec![0.0f32; SEG];
+            self.sched.predict_x0(tj, state, eps_j, &mut x0);
+            let mut mu_t = vec![0.0f32; SEG];
+            self.sched.posterior_mean(tj, state, &x0, &mut mu_t);
+
+            let sigma = self.sched.sigmas[tj];
+            let sigma_eff = (sigma * params.sigma_scale).max(1e-6);
+            let xi = &noise[j * SEG..(j + 1) * SEG];
+            let mode = if self.stochastic_accept {
+                acceptance::AcceptMode::Stochastic
+            } else {
+                acceptance::AcceptMode::Threshold(params.lambda)
+            };
+            let (ok, p) = acceptance::accept_draft(mu_d, &mu_t, sigma_eff, xi, mode, rng);
+            probs.push(p);
+            if ok {
+                accepted += 1;
+                committed = j + 1;
+                *x = sample.to_vec();
+            } else {
+                // Reflection-maximal coupling with the *sampling* σ so the
+                // corrected sample is exactly N(μ_t, σ²) (lossless).
+                let result = coupling::reflection_couple(sample, mu_d, &mu_t, sigma, rng);
+                coupled = Some(result.coupled);
+                *x = result.sample;
+                committed = j + 1;
+                break;
+            }
+        }
+        Ok(RoundRecord {
+            t_start: t,
+            k,
+            accepted,
+            committed,
+            probs,
+            coupled,
+            params: *params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OBS_DIM;
+    use crate::policy::mock::MockDenoiser;
+
+    fn gen(bias: f32, params: SpecParams, seed: u64) -> (Vec<f32>, SegmentTrace, f64) {
+        let m = MockDenoiser::with_bias(bias);
+        let cond = Denoiser::encode(&m, &vec![0.25; OBS_DIM]).unwrap();
+        let engine = SpecEngine::new();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut trace = SegmentTrace::default();
+        let seg = engine
+            .generate_segment(&m, &cond, |_| params, &mut rng, &mut trace)
+            .unwrap();
+        let nfe = trace.nfe;
+        (seg, trace, nfe)
+    }
+
+    #[test]
+    fn perfect_drafter_accepts_everything() {
+        let (_, trace, _) = gen(0.0, SpecParams::fixed_k(8), 0);
+        assert!(trace.acceptance_rate() > 0.999, "rate {}", trace.acceptance_rate());
+    }
+
+    #[test]
+    fn hopeless_drafter_rejects_mostly_but_still_terminates() {
+        // Note: even an absurdly-biased drafter is accepted at very high
+        // noise levels (the posterior mean barely depends on x̂0 there and
+        // x̂0 is clipped), so the floor is not exactly 0 — this matches
+        // the paper's Fig. 3a phase structure. Use a strict λ and no σ
+        // widening to make rejection bite.
+        let mut p = SpecParams::fixed_k(8);
+        p.lambda = 0.5;
+        p.sigma_scale = 1.0;
+        let (seg, trace, nfe) = gen(100.0, p, 1);
+        assert!(trace.acceptance_rate() < 0.15, "rate {}", trace.acceptance_rate());
+        assert_eq!(seg.len(), SEG);
+        // Rejection-dominated: NFE worse than vanilla (verification pays
+        // for nothing), and rejected rounds commit exactly 1 step via a
+        // reflected (not coupled) correction.
+        assert!(nfe > 100.0, "nfe {nfe}");
+        let reflected = trace.rounds.iter().filter(|r| r.coupled == Some(false)).count();
+        assert!(reflected > trace.rounds.len() / 2);
+    }
+
+    #[test]
+    fn nfe_is_far_below_vanilla_for_good_drafter() {
+        let (_, _, nfe) = gen(0.0, SpecParams::fixed_k(16), 2);
+        // Vanilla = 100 NFE. Perfect drafter with K=16:
+        // ceil(99/16) rounds x (1 + 16/8) + final ~ 22 NFE.
+        assert!(nfe < 35.0, "nfe {nfe}");
+    }
+
+    #[test]
+    fn rounds_cover_all_timesteps_exactly() {
+        let (_, trace, _) = gen(0.05, SpecParams::fixed_k(10), 3);
+        let total: usize = trace.rounds.iter().map(|r| r.committed).sum();
+        assert_eq!(total, DIFFUSION_STEPS - 1, "rounds must cover t=99..1");
+        // Rounds are contiguous: t_start decreases by committed.
+        let mut t = DIFFUSION_STEPS - 1;
+        for r in &trace.rounds {
+            assert_eq!(r.t_start, t);
+            t -= r.committed;
+        }
+        assert_eq!(t, 0);
+    }
+
+    #[test]
+    fn losslessness_segment_distribution_matches_vanilla() {
+        // With a *perfect* drafter the speculative segment must have the
+        // same distribution as vanilla DP. Both converge to the mock's
+        // clean action, so compare against that analytic ground truth.
+        let m = MockDenoiser::with_bias(0.0);
+        let cond = Denoiser::encode(&m, &vec![0.4; OBS_DIM]).unwrap();
+        let clean = MockDenoiser::clean_action(&cond);
+        let (seg, _, _) = gen(0.0, SpecParams::fixed_k(12), 4);
+        let max_err =
+            seg.iter().zip(&clean).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 0.15, "max err {max_err}");
+    }
+
+    #[test]
+    fn moderate_bias_gives_intermediate_acceptance() {
+        let mut p = SpecParams::fixed_k(8);
+        p.lambda = 0.3;
+        p.sigma_scale = 1.0;
+        let (_, trace, nfe) = gen(0.35, p, 5);
+        let rate = trace.acceptance_rate();
+        assert!(rate > 0.2 && rate < 0.9, "rate {rate}");
+        assert!(nfe < 100.0, "still cheaper than vanilla: {nfe}");
+    }
+
+    #[test]
+    fn lambda_one_rejects_imperfect_drafts() {
+        let mut p = SpecParams::fixed_k(8);
+        p.lambda = 1.0;
+        let (_, trace, _) = gen(0.2, p, 6);
+        assert!(trace.acceptance_rate() < 0.2, "rate {}", trace.acceptance_rate());
+    }
+
+    #[test]
+    fn sigma_scale_rescues_acceptance() {
+        let mut narrow = SpecParams::fixed_k(8);
+        narrow.sigma_scale = 0.5;
+        let mut wide = SpecParams::fixed_k(8);
+        wide.sigma_scale = 8.0;
+        let (_, tr_narrow, _) = gen(0.3, narrow, 7);
+        let (_, tr_wide, _) = gen(0.3, wide, 7);
+        assert!(
+            tr_wide.acceptance_rate() > tr_narrow.acceptance_rate(),
+            "{} vs {}",
+            tr_wide.acceptance_rate(),
+            tr_narrow.acceptance_rate()
+        );
+    }
+
+    #[test]
+    fn stage_dependent_k_is_respected() {
+        let params = SpecParams {
+            stages: crate::config::StageParams { k_early: 2, k_mid: 9, k_late: 3 },
+            lambda: 0.05,
+            sigma_scale: 2.0,
+        };
+        let (_, trace, _) = gen(0.0, params, 8);
+        for r in &trace.rounds {
+            let expect = params.stages.k_for_timestep(r.t_start).min(r.t_start);
+            assert_eq!(r.k, expect, "round at t={}", r.t_start);
+        }
+    }
+
+    #[test]
+    fn stochastic_accept_mode_is_lossless_and_less_permissive() {
+        // Classic U <= p acceptance: rejects with prob 1-p even above the
+        // threshold, so acceptance <= the permissive-threshold variant.
+        let m = MockDenoiser::with_bias(0.2);
+        let cond = Denoiser::encode(&m, &vec![0.25; OBS_DIM]).unwrap();
+        let run = |engine: SpecEngine, seed| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut tr = SegmentTrace::default();
+            let p = SpecParams::fixed_k(8);
+            engine.generate_segment(&m, &cond, |_| p, &mut rng, &mut tr).unwrap();
+            tr.acceptance_rate()
+        };
+        let det = run(SpecEngine::new(), 9);
+        let sto = run(SpecEngine::stochastic(), 9);
+        assert!(sto <= det + 0.05, "stochastic {sto} vs threshold {det}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _, _) = gen(0.1, SpecParams::fixed_k(8), 42);
+        let (b, _, _) = gen(0.1, SpecParams::fixed_k(8), 42);
+        assert_eq!(a, b);
+    }
+}

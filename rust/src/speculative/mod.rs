@@ -1,0 +1,7 @@
+//! TS-DP speculative decoding engine (paper §3.2).
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::SpecEngine;
+pub use trace::{RoundRecord, SegmentTrace};

@@ -1,0 +1,129 @@
+//! Per-round / per-segment records of the speculative decoding process.
+//!
+//! The bench harness reads these to regenerate the paper's figures
+//! (Fig. 3: acceptance vs timestep, Fig. 4: accepted drafts vs velocity,
+//! Fig. 5: scheduled parameters over time, Fig. 6: acceptance/draft count
+//! with vs without the scheduler) and the supplement's draft-count /
+//! acceptance-rate tables.
+
+use crate::config::SpecParams;
+
+/// One speculative round (draft rollout + batched verification).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// Diffusion timestep the round started at.
+    pub t_start: usize,
+    /// Number of drafts rolled out.
+    pub k: usize,
+    /// Drafts accepted (prefix length before first rejection).
+    pub accepted: usize,
+    /// Timesteps advanced (accepted + 1 if a rejection was corrected).
+    pub committed: usize,
+    /// MH acceptance probability of each draft, in rollout order.
+    pub probs: Vec<f64>,
+    /// Whether the corrected sample coupled (kept the draft) rather than
+    /// reflected; None when every draft was accepted.
+    pub coupled: Option<bool>,
+    /// Speculative parameters in force during the round.
+    pub params: SpecParams,
+}
+
+/// Full record of one action-segment generation.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentTrace {
+    /// All speculative rounds, in order.
+    pub rounds: Vec<RoundRecord>,
+    /// NFE consumed by this segment.
+    pub nfe: f64,
+    /// Wall-clock seconds for this segment.
+    pub wall_secs: f64,
+}
+
+impl SegmentTrace {
+    /// Total drafts proposed.
+    pub fn drafts(&self) -> usize {
+        self.rounds.iter().map(|r| r.k).sum()
+    }
+
+    /// Total drafts accepted.
+    pub fn accepted(&self) -> usize {
+        self.rounds.iter().map(|r| r.accepted).sum()
+    }
+
+    /// Draft acceptance rate in [0, 1] (0 when no drafts were proposed).
+    pub fn acceptance_rate(&self) -> f64 {
+        let d = self.drafts();
+        if d == 0 {
+            0.0
+        } else {
+            self.accepted() as f64 / d as f64
+        }
+    }
+
+    /// Mean acceptance probability at a given diffusion timestep across
+    /// rounds (Fig. 3 series). Returns None if the timestep was never
+    /// drafted.
+    pub fn acceptance_prob_at(&self, t: usize) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for r in &self.rounds {
+            for (j, p) in r.probs.iter().enumerate() {
+                if r.t_start - j == t {
+                    sum += p;
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(t: usize, k: usize, accepted: usize) -> RoundRecord {
+        RoundRecord {
+            t_start: t,
+            k,
+            accepted,
+            committed: accepted + 1,
+            probs: vec![0.9; k],
+            coupled: Some(false),
+            params: SpecParams::default(),
+        }
+    }
+
+    #[test]
+    fn rates_aggregate_over_rounds() {
+        let mut tr = SegmentTrace::default();
+        tr.rounds.push(round(99, 10, 8));
+        tr.rounds.push(round(90, 10, 10));
+        assert_eq!(tr.drafts(), 20);
+        assert_eq!(tr.accepted(), 18);
+        assert!((tr.acceptance_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_has_zero_rate() {
+        let tr = SegmentTrace::default();
+        assert_eq!(tr.acceptance_rate(), 0.0);
+        assert_eq!(tr.acceptance_prob_at(50), None);
+    }
+
+    #[test]
+    fn acceptance_prob_at_maps_timesteps() {
+        let mut tr = SegmentTrace::default();
+        let mut r = round(99, 3, 3);
+        r.probs = vec![0.5, 0.7, 0.9];
+        tr.rounds.push(r);
+        assert_eq!(tr.acceptance_prob_at(99), Some(0.5));
+        assert_eq!(tr.acceptance_prob_at(98), Some(0.7));
+        assert_eq!(tr.acceptance_prob_at(97), Some(0.9));
+        assert_eq!(tr.acceptance_prob_at(96), None);
+    }
+}

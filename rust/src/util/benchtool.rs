@@ -1,0 +1,82 @@
+//! Tiny benchmarking helper (no `criterion` in this offline environment):
+//! warmup + timed iterations with mean/std/min reporting, used by the
+//! `cargo bench` targets under `rust/benches/`.
+
+use crate::util::stats::OnlineStats;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Iterations timed.
+    pub iters: usize,
+    /// Mean seconds per iteration.
+    pub mean_secs: f64,
+    /// Standard deviation.
+    pub std_secs: f64,
+    /// Fastest iteration.
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    /// Render like `name  mean ± std  (min)`, with adaptive units.
+    pub fn row(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s < 1e-3 {
+                format!("{:8.1}µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:8.2}ms", s * 1e3)
+            } else {
+                format!("{s:8.3}s ")
+            }
+        }
+        format!(
+            "{:<44} {} ± {} (min {}, n={})",
+            self.name,
+            fmt(self.mean_secs),
+            fmt(self.std_secs),
+            fmt(self.min_secs),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: stats.mean(),
+        std_secs: stats.std_dev(),
+        min_secs: stats.min(),
+    };
+    println!("{}", r.row());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.mean_secs + 1e-12);
+        assert!(r.row().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (the environment has no `clap`).
+//!
+//! Grammar: `ts-dp <command> [positional...] [--flag] [--key value]...`.
+//! Flags and key/value options may be interleaved with positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (excluding argv[0] and the command).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Parsed u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Parsed f32 option with default.
+    pub fn get_f32(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    /// Whether a bare flag was passed.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_arguments() {
+        let a = parse("lift --episodes 50 --adaptive --out /tmp/x ph");
+        assert_eq!(a.positional, vec!["lift", "ph"]);
+        assert_eq!(a.get("episodes"), Some("50"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.has_flag("adaptive"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--seed=7 --mode=fast");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get("mode"), Some("fast"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--n zzz");
+        assert_eq!(a.get_usize("m", 3).unwrap(), 3);
+        assert!(a.get_usize("n", 0).is_err());
+        assert_eq!(a.get_or("x", "d"), "d");
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("--verbose");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+}

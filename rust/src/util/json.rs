@@ -1,0 +1,526 @@
+//! Minimal JSON value model, parser and printer.
+//!
+//! The offline build environment has no `serde`/`serde_json`, so the
+//! framework carries its own implementation. It covers the full JSON
+//! grammar (objects, arrays, strings with escapes, numbers, booleans,
+//! null) and is used for configs, artifact manifests, tensor metadata,
+//! scheduler policy checkpoints and experiment reports.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value. Objects use a BTreeMap so serialization is
+/// deterministic (stable diffs for checked-in configs and golden files).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (stored as f64, like JavaScript).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object.
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse / access error.
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    /// Syntax error with byte offset.
+    #[error("json parse error at byte {0}: {1}")]
+    Parse(usize, String),
+    /// Missing key or wrong type during typed access.
+    #[error("json access error: {0}")]
+    Access(String),
+}
+
+impl Json {
+    // ---------- constructors ----------
+
+    /// Object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Array of numbers from any float iterable.
+    pub fn nums<I: IntoIterator<Item = f64>>(xs: I) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Num).collect())
+    }
+
+    /// Array of numbers from usizes.
+    pub fn usizes<I: IntoIterator<Item = usize>>(xs: I) -> Json {
+        Json::Arr(xs.into_iter().map(|x| Json::Num(x as f64)).collect())
+    }
+
+    // ---------- typed access ----------
+
+    /// Field of an object.
+    pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
+        match self {
+            Json::Obj(m) => {
+                m.get(key).ok_or_else(|| JsonError::Access(format!("missing key '{key}'")))
+            }
+            _ => Err(JsonError::Access(format!("'{key}' on non-object"))),
+        }
+    }
+
+    /// Optional field of an object (None when absent or null).
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).filter(|v| !matches!(v, Json::Null)),
+            _ => None,
+        }
+    }
+
+    /// As f64.
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => Err(JsonError::Access(format!("expected number, got {self:?}"))),
+        }
+    }
+
+    /// As f32.
+    pub fn as_f32(&self) -> Result<f32, JsonError> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    /// As usize (must be a non-negative integer).
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(JsonError::Access(format!("expected usize, got {x}")));
+        }
+        Ok(x as usize)
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(JsonError::Access(format!("expected bool, got {self:?}"))),
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(JsonError::Access(format!("expected string, got {self:?}"))),
+        }
+    }
+
+    /// As array slice.
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => Err(JsonError::Access(format!("expected array, got {self:?}"))),
+        }
+    }
+
+    /// Array of f32.
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>, JsonError> {
+        self.as_arr()?.iter().map(|v| v.as_f32()).collect()
+    }
+
+    /// Array of usize.
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>, JsonError> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    // ---------- parsing ----------
+
+    /// Parse a JSON document.
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let bytes = s.as_bytes();
+        let mut p = Parser { b: bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            return Err(JsonError::Parse(p.i, "trailing garbage".into()));
+        }
+        Ok(v)
+    }
+
+    /// Parse a JSON file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Json> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Json::parse(&s)?)
+    }
+
+    /// Write pretty-printed JSON to a file, creating parent dirs.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, format!("{self:#}"))?;
+        Ok(())
+    }
+}
+
+// Display: `{}` = compact, `{:#}` = pretty (2-space indent).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn write_str(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+            f.write_str("\"")?;
+            for c in s.chars() {
+                match c {
+                    '"' => f.write_str("\\\"")?,
+                    '\\' => f.write_str("\\\\")?,
+                    '\n' => f.write_str("\\n")?,
+                    '\r' => f.write_str("\\r")?,
+                    '\t' => f.write_str("\\t")?,
+                    c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+                    c => write!(f, "{c}")?,
+                }
+            }
+            f.write_str("\"")
+        }
+        fn write_num(f: &mut fmt::Formatter<'_>, x: f64) -> fmt::Result {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                write!(f, "{}", x as i64)
+            } else {
+                write!(f, "{x}")
+            }
+        }
+        fn go(f: &mut fmt::Formatter<'_>, v: &Json, pretty: bool, depth: usize) -> fmt::Result {
+            let pad = |f: &mut fmt::Formatter<'_>, d: usize| -> fmt::Result {
+                if pretty {
+                    f.write_str("\n")?;
+                    for _ in 0..d {
+                        f.write_str("  ")?;
+                    }
+                }
+                Ok(())
+            };
+            match v {
+                Json::Null => f.write_str("null"),
+                Json::Bool(b) => write!(f, "{b}"),
+                Json::Num(x) => write_num(f, *x),
+                Json::Str(s) => write_str(f, s),
+                Json::Arr(items) => {
+                    f.write_str("[")?;
+                    for (i, it) in items.iter().enumerate() {
+                        if i > 0 {
+                            f.write_str(",")?;
+                            if !pretty {
+                                f.write_str(" ")?;
+                            }
+                        }
+                        pad(f, depth + 1)?;
+                        go(f, it, pretty, depth + 1)?;
+                    }
+                    if !items.is_empty() {
+                        pad(f, depth)?;
+                    }
+                    f.write_str("]")
+                }
+                Json::Obj(m) => {
+                    f.write_str("{")?;
+                    for (i, (k, it)) in m.iter().enumerate() {
+                        if i > 0 {
+                            f.write_str(",")?;
+                            if !pretty {
+                                f.write_str(" ")?;
+                            }
+                        }
+                        pad(f, depth + 1)?;
+                        write_str(f, k)?;
+                        f.write_str(": ")?;
+                        go(f, it, pretty, depth + 1)?;
+                    }
+                    if !m.is_empty() {
+                        pad(f, depth)?;
+                    }
+                    f.write_str("}")
+                }
+            }
+        }
+        go(f, self, f.alternate(), 0)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn err<T>(&self, msg: &str) -> Result<T, JsonError> {
+        Err(JsonError::Parse(self.i, msg.into()))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected '{}'", c as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        if self.i >= self.b.len() {
+            return self.err("unexpected end of input");
+        }
+        match self.b[self.i] {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => self.err(&format!("unexpected byte '{}'", c as char)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected '{word}'"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.b[self.i] == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>().map(Json::Num).or_else(|_| self.err(&format!("bad number '{s}'")))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            if self.i >= self.b.len() {
+                return self.err("unterminated string");
+            }
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    if self.i >= self.b.len() {
+                        return self.err("bad escape");
+                    }
+                    match self.b[self.i] {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'u' => {
+                            if self.i + 4 >= self.b.len() {
+                                return self.err("bad \\u escape");
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                            let code = u32::from_str_radix(hex, 16)
+                                .or_else(|_| self.err("bad \\u hex"))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        c => return self.err(&format!("bad escape '\\{}'", c as char)),
+                    }
+                    self.i += 1;
+                }
+                _ => {
+                    // Consume one UTF-8 character.
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| JsonError::Parse(self.i, "invalid utf-8".into()))?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            if self.i >= self.b.len() {
+                return self.err("unterminated array");
+            }
+            match self.b[self.i] {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return self.err("expected ',' or ']'"),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            if self.i >= self.b.len() {
+                return self.err("unterminated object");
+            }
+            match self.b[self.i] {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => return self.err("expected ',' or '}'"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_usize().unwrap(), 1);
+        assert_eq!(arr[2].get("b").unwrap().as_bool().unwrap(), false);
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let src = r#"{"shape": [2, 3], "dtype": "f32", "x": -1.25, "ok": true, "n": null}"#;
+        let v = Json::parse(src).unwrap();
+        let compact = format!("{v}");
+        let pretty = format!("{v:#}");
+        assert_eq!(Json::parse(&compact).unwrap(), v);
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_and_escapes_roundtrip() {
+        let v = Json::Str("héllo \"w\"\n\tπ".into());
+        let s = format!("{v}");
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        assert_eq!(Json::parse(r#""é""#).unwrap(), Json::Str("é".into()));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn typed_access_errors() {
+        let v = Json::parse(r#"{"a": 1.5}"#).unwrap();
+        assert!(v.get("a").unwrap().as_usize().is_err());
+        assert!(v.get("missing").is_err());
+        assert!(v.get("a").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn integers_print_without_decimal() {
+        assert_eq!(format!("{}", Json::Num(42.0)), "42");
+        assert_eq!(format!("{}", Json::Num(0.5)), "0.5");
+    }
+
+    /// Property: parse(print(v)) == v for randomly generated values.
+    #[test]
+    fn prop_roundtrip_random_values() {
+        use crate::util::Rng;
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.coin(0.5)),
+                2 => Json::Num((rng.normal() * 1e3) as f64),
+                3 => {
+                    let n = rng.below(8);
+                    Json::Str((0..n).map(|_| "aé\"\n\\x7".chars().nth(rng.below(7)).unwrap()).collect())
+                }
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..rng.below(4) {
+                        m.insert(format!("k{i}"), gen(rng, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        crate::util::testing::check_property("json_roundtrip", 300, |rng| {
+            let v = gen(rng, 3);
+            let compact = format!("{v}");
+            let pretty = format!("{v:#}");
+            assert_eq!(Json::parse(&compact).unwrap(), v, "compact: {compact}");
+            assert_eq!(Json::parse(&pretty).unwrap(), v);
+        });
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::testing::TempDir::new("json_file_roundtrip");
+        let p = dir.path().join("x.json");
+        let v = Json::obj(vec![("k", Json::nums([1.0, 2.5]))]);
+        v.save(&p).unwrap();
+        assert_eq!(Json::load(&p).unwrap(), v);
+    }
+}

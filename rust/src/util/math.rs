@@ -1,0 +1,142 @@
+//! Small vector-math helpers used by envs, the diffusion core and the
+//! scheduler's neural nets. Everything is plain `Vec<f32>` / slices — the
+//! tensors on the Rust side are tiny (action segments of 8×8), so a full
+//! ndarray dependency would be overkill.
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean distance.
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Euclidean distance.
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    dist2(a, b).sqrt()
+}
+
+/// `out += s * a`.
+pub fn add_scaled(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    for (o, x) in out.iter_mut().zip(a) {
+        *o += s * x;
+    }
+}
+
+/// Elementwise clamp into [lo, hi].
+pub fn clamp_vec(v: &mut [f32], lo: f32, hi: f32) {
+    for x in v.iter_mut() {
+        *x = x.clamp(lo, hi);
+    }
+}
+
+/// Linear interpolation.
+pub fn lerp(a: f32, b: f32, t: f32) -> f32 {
+    a + (b - a) * t
+}
+
+/// Rescale a vector in place so its norm is at most `max_norm`.
+pub fn clip_norm(v: &mut [f32], max_norm: f32) {
+    let n = norm(v);
+    if n > max_norm && n > 0.0 {
+        let s = max_norm / n;
+        for x in v.iter_mut() {
+            *x *= s;
+        }
+    }
+}
+
+/// Numerically-stable logistic sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// tanh, delegating to std (here for symmetry with [`sigmoid`]).
+pub fn tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+/// Population standard deviation (0 for slices shorter than 2).
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_close;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_close(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0, 1e-6);
+        assert_close(norm(&[3.0, 4.0]), 5.0, 1e-6);
+    }
+
+    #[test]
+    fn distances() {
+        assert_close(dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0, 1e-6);
+        assert_close(dist2(&[1.0], &[4.0]), 9.0, 1e-6);
+    }
+
+    #[test]
+    fn add_scaled_accumulates() {
+        let mut out = vec![1.0, 1.0];
+        add_scaled(&mut out, &[2.0, 4.0], 0.5);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn clip_norm_caps_magnitude() {
+        let mut v = vec![3.0, 4.0];
+        clip_norm(&mut v, 1.0);
+        assert_close(norm(&v), 1.0, 1e-6);
+        let mut w = vec![0.1, 0.0];
+        clip_norm(&mut w, 1.0);
+        assert_eq!(w, vec![0.1, 0.0]); // untouched below the cap
+    }
+
+    #[test]
+    fn sigmoid_is_stable_at_extremes() {
+        assert!(sigmoid(100.0) <= 1.0);
+        assert!(sigmoid(-100.0) >= 0.0);
+        assert_close(sigmoid(0.0), 0.5, 1e-6);
+        // symmetry
+        assert_close(sigmoid(2.0) + sigmoid(-2.0), 1.0, 1e-6);
+    }
+
+    #[test]
+    fn moments() {
+        assert_close(mean(&[1.0, 2.0, 3.0]), 2.0, 1e-6);
+        assert_close(std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]), 2.0, 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+}

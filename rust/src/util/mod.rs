@@ -1,0 +1,12 @@
+//! Small shared utilities (deterministic RNG, math helpers, tensor I/O).
+
+pub mod benchtool;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod tensorio;
+pub mod testing;
+
+pub use rng::Rng;

@@ -1,0 +1,167 @@
+//! Flat-tensor file I/O shared between the Rust demo generator and the
+//! Python training pipeline.
+//!
+//! Format: `<name>.json` holds `{"shape": [...], "dtype": "f32"}` and
+//! `<name>.bin` holds the row-major little-endian payload. Deliberately
+//! trivial so `numpy.fromfile` reads it with no dependency on either side.
+
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Row-major shape.
+    pub shape: Vec<usize>,
+    /// Row-major payload; `data.len() == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct, validating shape/len agreement.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(n == data.len(), "shape {:?} wants {} elems, got {}", shape, n, data.len());
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows of a rank-≥1 tensor (first dimension).
+    pub fn rows(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Borrow row `i` (all trailing dims flattened).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.data.len() / self.rows().max(1);
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Write `<stem>.json` + `<stem>.bin`.
+    pub fn save(&self, stem: &Path) -> Result<()> {
+        if let Some(parent) = stem.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let meta = Json::obj(vec![
+            ("shape", Json::usizes(self.shape.iter().copied())),
+            ("dtype", Json::Str("f32".into())),
+        ]);
+        std::fs::write(stem.with_extension("json"), format!("{meta:#}"))
+            .with_context(|| format!("writing {}.json", stem.display()))?;
+        let mut f = std::fs::File::create(stem.with_extension("bin"))
+            .with_context(|| format!("creating {}.bin", stem.display()))?;
+        let mut buf = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Load a tensor previously written by [`Tensor::save`] (or numpy).
+    pub fn load(stem: &Path) -> Result<Self> {
+        let meta = Json::load(&stem.with_extension("json"))
+            .with_context(|| format!("reading {}.json", stem.display()))?;
+        let shape = meta.get("shape")?.as_usize_vec()?;
+        let dtype = meta.get("dtype")?.as_str()?.to_string();
+        if dtype != "f32" {
+            bail!("unsupported dtype {dtype}");
+        }
+        let mut bytes = Vec::new();
+        std::fs::File::open(stem.with_extension("bin"))
+            .with_context(|| format!("opening {}.bin", stem.display()))?
+            .read_to_end(&mut bytes)?;
+        let n: usize = shape.iter().product();
+        ensure!(bytes.len() == n * 4, "expected {} bytes, found {}", n * 4, bytes.len());
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Tensor::new(shape, data)
+    }
+}
+
+/// Write a CSV file (header + float rows) — used by the figure harness.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f32>]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        ensure!(row.len() == header.len(), "row width {} != header {}", row.len(), header.len());
+        let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new("tensor_roundtrip");
+        let stem = dir.path().join("t");
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        t.save(&stem).unwrap();
+        let u = Tensor::load(&stem).unwrap();
+        assert_eq!(t, u);
+        assert_eq!(u.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(u.rows(), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = TempDir::new("tensor_truncated");
+        let stem = dir.path().join("t");
+        let t = Tensor::new(vec![4], vec![0.0; 4]).unwrap();
+        t.save(&stem).unwrap();
+        let bin = stem.with_extension("bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Tensor::load(&stem).is_err());
+    }
+
+    #[test]
+    fn row3d_flattens_trailing_dims() {
+        let t = Tensor::new(vec![2, 2, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = TempDir::new("csv");
+        let p = dir.path().join("out/fig.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n3,4.5\n");
+    }
+}

@@ -1,0 +1,125 @@
+//! Test support: float comparison, a tiny property-test driver and a
+//! self-cleaning temp directory (the environment has no `proptest` /
+//! `approx` / `tempfile` crates).
+
+use crate::util::Rng;
+use std::path::{Path, PathBuf};
+
+/// Assert two floats are within `eps` (absolute) or within `eps` relative
+/// to the larger magnitude.
+#[track_caller]
+pub fn assert_close(a: f32, b: f32, eps: f32) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= eps * scale,
+        "assert_close failed: {a} vs {b} (eps {eps}, scale {scale})"
+    );
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_all_close(a: &[f32], b: &[f32], eps: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for i in 0..a.len() {
+        let scale = a[i].abs().max(b[i].abs()).max(1.0);
+        assert!(
+            (a[i] - b[i]).abs() <= eps * scale,
+            "assert_all_close failed at index {i}: {} vs {} (eps {eps})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Minimal property-test driver: runs `f` `n` times with a deterministic
+/// RNG; `f` draws its own inputs and asserts its own invariants.
+pub fn check_property(name: &str, n: usize, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::seed_from_u64(0x5eed ^ name.len() as u64);
+    for case in 0..n {
+        let mut case_rng = rng.split();
+        // Panics bubble up with the case index via this closure's message.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut case_rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed on case {case}: {e:?}");
+        }
+    }
+}
+
+/// RAII temp directory under the system temp dir.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `/<tmp>/ts_dp_test_<name>_<pid>_<nonce>/`.
+    pub fn new(name: &str) -> Self {
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir()
+            .join(format!("ts_dp_test_{name}_{}_{nonce}", std::process::id()));
+        std::fs::create_dir_all(&path).expect("creating temp dir");
+        Self { path }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_assertions() {
+        assert_close(1.0, 1.0 + 1e-7, 1e-6);
+        assert_all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_assertion_fails_when_far() {
+        assert_close(1.0, 2.0, 1e-3);
+    }
+
+    #[test]
+    fn property_driver_runs_all_cases() {
+        let mut count = 0;
+        check_property("counts", 17, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad'")]
+    fn property_driver_reports_failures() {
+        check_property("bad", 10, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(false, "boom");
+        });
+    }
+
+    #[test]
+    fn tempdir_cleans_up() {
+        let p;
+        {
+            let d = TempDir::new("cleanup");
+            p = d.path().to_path_buf();
+            std::fs::write(p.join("f.txt"), "x").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+}

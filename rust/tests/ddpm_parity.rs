@@ -1,0 +1,53 @@
+//! Rust <-> JAX DDPM schedule parity.
+//!
+//! The same golden values live in `python/tests/test_ddpm.py`; both sides
+//! must match `artifacts/ddpm_golden.json` (written by aot.py) and the
+//! hardcoded constants, so any drift in either implementation fails one
+//! of the suites.
+
+use ts_dp::diffusion::DdpmSchedule;
+use ts_dp::util::json::Json;
+
+/// index -> (beta, alpha_bar, sigma); regenerate with `python -m compile.ddpm`.
+const GOLDEN: &[(usize, f32, f32, f32)] = &[
+    (0, 0.000631282, 0.999368727, 0.0),
+    (1, 0.001116937, 0.998252511, 0.020087026),
+    (50, 0.031546339, 0.478264421, 0.174941048),
+    (98, 0.749939263, 0.000242857, 0.865674794),
+    (99, 0.999000013, 0.000000243, 0.999378622),
+];
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1e-3)
+}
+
+#[test]
+fn schedule_matches_hardcoded_golden() {
+    let s = DdpmSchedule::cosine(100);
+    for &(t, beta, ab, sigma) in GOLDEN {
+        assert!(close(s.betas[t], beta), "beta[{t}]: {} vs {beta}", s.betas[t]);
+        assert!(close(s.alpha_bars[t], ab), "ab[{t}]: {} vs {ab}", s.alpha_bars[t]);
+        assert!(close(s.sigmas[t], sigma), "sigma[{t}]: {} vs {sigma}", s.sigmas[t]);
+    }
+}
+
+#[test]
+fn schedule_matches_exported_golden_file() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let path = dir.join("ddpm_golden.json");
+    if !path.exists() {
+        eprintln!("NOTE: {} missing; skipping", path.display());
+        return;
+    }
+    let g = Json::load(&path).unwrap();
+    let idx = g.get("indices").unwrap().as_usize_vec().unwrap();
+    let betas = g.get("betas").unwrap().as_f32_vec().unwrap();
+    let abs_ = g.get("alpha_bars").unwrap().as_f32_vec().unwrap();
+    let sigmas = g.get("sigmas").unwrap().as_f32_vec().unwrap();
+    let s = DdpmSchedule::cosine(100);
+    for (i, &t) in idx.iter().enumerate() {
+        assert!(close(s.betas[t], betas[i]), "beta[{t}]");
+        assert!(close(s.alpha_bars[t], abs_[i]), "alpha_bar[{t}]");
+        assert!(close(s.sigmas[t], sigmas[i]), "sigma[{t}]");
+    }
+}

@@ -1,0 +1,177 @@
+//! Runtime integration tests: load the real AOT artifacts, execute them
+//! through PJRT, and check parity with the JAX-side golden vectors.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially with a notice) when `artifacts/` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use ts_dp::config::{DIFFUSION_STEPS, EMBED_DIM, K_MAX, VERIFY_BATCH};
+use ts_dp::diffusion::DdpmSchedule;
+use ts_dp::policy::Denoiser;
+use ts_dp::runtime::ModelRuntime;
+use ts_dp::util::json::Json;
+use ts_dp::util::Rng;
+
+const SEG: usize = ts_dp::runtime::executable::SEG;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; skipping runtime integration test");
+        None
+    }
+}
+
+#[test]
+fn load_and_execute_all_modules() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("loading artifacts");
+    let mut rng = Rng::seed_from_u64(0);
+
+    let obs: Vec<f32> = rng.normal_vec(ts_dp::config::OBS_DIM);
+    let cond = rt.encode(&obs).unwrap();
+    assert_eq!(cond.len(), EMBED_DIM);
+    assert!(cond.iter().all(|v| v.is_finite()));
+
+    let x = rng.normal_vec(SEG);
+    let eps = rt.target_step(&x, 50, &cond).unwrap();
+    assert_eq!(eps.len(), SEG);
+    assert!(eps.iter().all(|v| v.is_finite()));
+
+    let eps_d = rt.drafter_step(&x, 50, &cond).unwrap();
+    assert_eq!(eps_d.len(), SEG);
+
+    let mut xs = Vec::new();
+    let mut ts = Vec::new();
+    for b in 0..VERIFY_BATCH {
+        xs.extend(rng.normal_vec(SEG));
+        ts.push((b % DIFFUSION_STEPS) as f32);
+    }
+    let eps_b = rt.target_verify(&xs, &ts, &cond).unwrap();
+    assert_eq!(eps_b.len(), VERIFY_BATCH * SEG);
+
+    for k in rt.rollout_ks() {
+        assert!(k <= K_MAX);
+        let noise = rng.normal_vec(k * SEG);
+        let (samples, means) = rt.drafter_rollout(k, &x, 60, &cond, &noise).unwrap();
+        assert_eq!(samples.len(), k * SEG);
+        assert_eq!(means.len(), k * SEG);
+        assert!(samples.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn golden_parity_with_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = Json::load(&dir.join("golden_io.json")).expect("golden_io.json");
+    let rt = ModelRuntime::load(&dir).unwrap();
+
+    let obs = golden.get("obs").unwrap().as_f32_vec().unwrap();
+    let want_cond = golden.get("cond").unwrap().as_f32_vec().unwrap();
+    let cond = rt.encode(&obs).unwrap();
+    for i in 0..EMBED_DIM {
+        assert!(
+            (cond[i] - want_cond[i]).abs() < 1e-4,
+            "cond[{i}]: rust {} vs jax {}",
+            cond[i],
+            want_cond[i]
+        );
+    }
+
+    let x = golden.get("x").unwrap().as_f32_vec().unwrap();
+    let t = golden.get("t").unwrap().as_f64().unwrap() as usize;
+    let check = |key: &str, got: Vec<f32>| {
+        let want = golden.get(key).unwrap().as_f32_vec().unwrap();
+        let max_err =
+            got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{key}: max err {max_err}");
+    };
+    check("eps_target", rt.target_step(&x, t, &cond).unwrap());
+    check("eps_drafter", rt.drafter_step(&x, t, &cond).unwrap());
+}
+
+#[test]
+fn verify_batch_matches_single_steps() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let mut rng = Rng::seed_from_u64(7);
+    let cond = rt.encode(&rng.normal_vec(ts_dp::config::OBS_DIM)).unwrap();
+    let mut xs = Vec::new();
+    let mut ts = Vec::new();
+    for b in 0..VERIFY_BATCH {
+        xs.extend(rng.normal_vec(SEG));
+        ts.push(((b * 6 + 1) % DIFFUSION_STEPS) as f32);
+    }
+    let batch = rt.target_verify(&xs, &ts, &cond).unwrap();
+    for b in [0, 8, VERIFY_BATCH - 1] {
+        let single = rt
+            .target_step(&xs[b * SEG..(b + 1) * SEG], ts[b] as usize, &cond)
+            .unwrap();
+        let max_err = batch[b * SEG..(b + 1) * SEG]
+            .iter()
+            .zip(&single)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "candidate {b}: max err {max_err}");
+    }
+}
+
+#[test]
+fn fused_rollout_matches_serial_drafting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+    let mut rng = Rng::seed_from_u64(11);
+    let cond = rt.encode(&rng.normal_vec(ts_dp::config::OBS_DIM)).unwrap();
+    let x0 = rng.normal_vec(SEG);
+    let k = 4;
+    let t0 = 70;
+    let noise = rng.normal_vec(k * SEG);
+    let (samples, means) = rt.drafter_rollout(k, &x0, t0, &cond, &noise).unwrap();
+
+    let mut x = x0;
+    for j in 0..k {
+        let t = t0 - j;
+        let eps = rt.drafter_step(&x, t, &cond).unwrap();
+        let xi = &noise[j * SEG..(j + 1) * SEG];
+        let (next, mean) = sched.step(t, &x, &eps, xi);
+        for i in 0..SEG {
+            assert!(
+                (samples[j * SEG + i] - next[i]).abs() < 2e-3,
+                "sample[{j},{i}]: fused {} vs serial {}",
+                samples[j * SEG + i],
+                next[i]
+            );
+            assert!((means[j * SEG + i] - mean[i]).abs() < 2e-3);
+        }
+        x = next;
+    }
+}
+
+#[test]
+fn end_to_end_speculative_segment_on_real_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let engine = ts_dp::speculative::SpecEngine::new();
+    let mut rng = Rng::seed_from_u64(3);
+
+    // Real observation from a real env.
+    let mut env = ts_dp::envs::make_env(
+        ts_dp::config::Task::Lift,
+        ts_dp::config::DemoStyle::Ph,
+    );
+    env.reset(&mut rng);
+    let cond = rt.encode(&env.observe()).unwrap();
+
+    let mut trace = ts_dp::speculative::SegmentTrace::default();
+    let params = ts_dp::config::SpecParams::fixed_default();
+    let seg = engine
+        .generate_segment(&rt, &cond, |_| params, &mut rng, &mut trace)
+        .unwrap();
+    assert_eq!(seg.len(), SEG);
+    assert!(seg.iter().all(|v| v.is_finite() && v.abs() <= 1.5));
+    assert!(trace.nfe < 100.0, "speculative must beat vanilla: {}", trace.nfe);
+    assert!(trace.acceptance_rate() > 0.3, "rate {}", trace.acceptance_rate());
+}
