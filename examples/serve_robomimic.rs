@@ -1,13 +1,18 @@
 //! End-to-end serving driver (the repository's E2E validation run, see
-//! EXPERIMENTS.md): load the real trained model, serve batched action-
-//! segment requests from concurrent env sessions across the Robomimic
-//! tasks, and report latency / throughput / success — comparing vanilla
-//! DP serving against TS-DP serving.
+//! EXPERIMENTS.md): load the real trained model, serve micro-batched
+//! action-segment requests from concurrent env sessions across the
+//! Robomimic tasks, and report latency / throughput / success / verify-
+//! batch occupancy — comparing vanilla DP serving against TS-DP serving.
+//!
+//! TS-DP sessions run as resumable jobs whose verify stages fuse across
+//! requests (`max_batch` in-flight jobs per engine wave); served
+//! segments are bit-identical to unbatched serving.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_robomimic
 //! ```
 
+use std::time::Duration;
 use ts_dp::config::{DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve, ServeOptions};
@@ -36,12 +41,14 @@ fn main() -> anyhow::Result<()> {
                 task,
                 style: DemoStyle::Ph,
                 method,
-                sessions: 2,
+                sessions: 4,
                 episodes_per_session: 1,
                 queue_capacity: 32,
                 policy: Policy::Fair,
                 scheduler: scheduler.clone(),
                 seed: 7,
+                max_batch: 8,
+                batch_window: Duration::from_micros(200),
             };
             let t0 = std::time::Instant::now();
             let report = serve(&runtime, &opts)?;
@@ -49,8 +56,9 @@ fn main() -> anyhow::Result<()> {
             total_segments += report.metrics.requests;
             total_secs += secs;
             println!(
-                "{:<10} sessions=2 segments={:>4} success={:>3.0}% \
-                 p50={:.3}s p95={:.3}s nfe/seg={:.1} accept={:.1}% wall={:.1}s",
+                "{:<10} sessions=4 segments={:>4} success={:>3.0}% \
+                 p50={:.3}s p95={:.3}s nfe/seg={:.1} accept={:.1}% \
+                 verify-occ={:.2} inflight-peak={} wall={:.1}s",
                 task.name(),
                 report.metrics.requests,
                 report.success_rate() * 100.0,
@@ -58,6 +66,8 @@ fn main() -> anyhow::Result<()> {
                 report.metrics.latency_percentile(0.95),
                 report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
                 report.metrics.acceptance_rate() * 100.0,
+                report.metrics.mean_verify_occupancy(),
+                report.metrics.peak_inflight,
                 secs,
             );
         }

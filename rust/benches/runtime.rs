@@ -2,7 +2,8 @@
 //! serial drafter rollout — the L3 perf pass's primary probes (see
 //! EXPERIMENTS.md §Perf).
 
-use ts_dp::config::{DIFFUSION_STEPS, OBS_DIM, VERIFY_BATCH};
+use ts_dp::config::{DIFFUSION_STEPS, EMBED_DIM, OBS_DIM, VERIFY_BATCH};
+use ts_dp::policy::Denoiser as _; // target_verify_many (trait-provided)
 use ts_dp::runtime::executable::SEG;
 use ts_dp::runtime::ModelRuntime;
 use ts_dp::util::benchtool::bench;
@@ -65,5 +66,35 @@ fn main() {
     });
     bench("1 batched verify (1 NFE)", 1, 10, || {
         rt.target_verify(&xs, &ts, &cond).unwrap();
+    });
+
+    println!("\n== cross-request fused verify (coordinator hot path) ==");
+    // 4 concurrent requests, each with its own conditioning: the serving
+    // engine issues one target_verify_many per wave instead of four
+    // separate dispatches.
+    let n_req = 4;
+    let mut many_xs = Vec::new();
+    let mut many_ts = Vec::new();
+    let mut many_conds = Vec::new();
+    for r in 0..n_req {
+        let cond_r = rt.encode(&rng.normal_vec(OBS_DIM)).unwrap();
+        many_conds.extend_from_slice(&cond_r);
+        for b in 0..VERIFY_BATCH {
+            many_xs.extend(rng.normal_vec(SEG));
+            many_ts.push(((b * 3 + r) % DIFFUSION_STEPS) as f32);
+        }
+    }
+    bench(&format!("target_verify_many ({n_req} requests, 1 call site)"), 1, 10, || {
+        rt.target_verify_many(&many_xs, &many_ts, &many_conds).unwrap();
+    });
+    bench(&format!("{n_req} separate target_verify dispatches"), 1, 10, || {
+        for r in 0..n_req {
+            rt.target_verify(
+                &many_xs[r * VERIFY_BATCH * SEG..(r + 1) * VERIFY_BATCH * SEG],
+                &many_ts[r * VERIFY_BATCH..(r + 1) * VERIFY_BATCH],
+                &many_conds[r * EMBED_DIM..(r + 1) * EMBED_DIM],
+            )
+            .unwrap();
+        }
     });
 }

@@ -20,6 +20,13 @@ pub struct ServingConfig {
     pub decision_interval: usize,
     /// Engine used for denoising.
     pub method: Method,
+    /// Maximum jobs the engine holds in flight; the verify stages of all
+    /// in-flight jobs fuse into one multi-request target call. 1
+    /// disables cross-request micro-batching.
+    pub max_batch: usize,
+    /// Batch-forming window in microseconds: how long the engine lingers
+    /// for stragglers when starting a fresh wave (0 = never wait).
+    pub batch_window_us: u64,
 }
 
 /// Which action-generation method the coordinator runs.
@@ -80,6 +87,8 @@ impl Default for ServingConfig {
             scheduler_policy: Some(PathBuf::from("artifacts/scheduler_policy.json")),
             decision_interval: 4,
             method: Method::TsDp,
+            max_batch: 8,
+            batch_window_us: 200,
         }
     }
 }
@@ -101,11 +110,14 @@ impl ServingConfig {
             ),
             ("decision_interval", Json::Num(self.decision_interval as f64)),
             ("method", Json::Str(self.method.name().into())),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("batch_window_us", Json::Num(self.batch_window_us as f64)),
         ])
     }
 
     /// Deserialize from JSON.
     pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let defaults = ServingConfig::default();
         Ok(Self {
             artifacts_dir: PathBuf::from(v.get("artifacts_dir")?.as_str()?),
             max_sessions: v.get("max_sessions")?.as_usize()?,
@@ -118,6 +130,19 @@ impl ServingConfig {
             decision_interval: v.get("decision_interval")?.as_usize()?,
             method: Method::parse(v.get("method")?.as_str()?)
                 .ok_or_else(|| JsonError::Access("unknown method".into()))?,
+            // Batching knobs postdate some config files on disk: fall
+            // back to the Default impl instead of failing the load.
+            max_batch: v
+                .get_opt("max_batch")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .unwrap_or(defaults.max_batch),
+            batch_window_us: v
+                .get_opt("batch_window_us")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .map(|w| w as u64)
+                .unwrap_or(defaults.batch_window_us),
         })
     }
 
@@ -152,6 +177,26 @@ mod tests {
         let c = ServingConfig { max_sessions: 3, ..Default::default() };
         c.save(&p).unwrap();
         let d = ServingConfig::load(&p).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn legacy_json_without_batching_knobs_defaults() {
+        // Config files written before the micro-batching engine lack
+        // max_batch / batch_window_us; loading them must still work.
+        let c = ServingConfig::default();
+        let legacy = match c.to_json() {
+            Json::Obj(pairs) => Json::Obj(
+                pairs
+                    .into_iter()
+                    .filter(|(k, _)| k != "max_batch" && k != "batch_window_us")
+                    .collect(),
+            ),
+            _ => unreachable!("to_json returns an object"),
+        };
+        let d = ServingConfig::from_json(&legacy).unwrap();
+        assert_eq!(d.max_batch, 8, "absent knob must default");
+        assert_eq!(d.batch_window_us, 200, "absent knob must default");
         assert_eq!(c, d);
     }
 

@@ -1,14 +1,16 @@
-//! Request admission and dispatch policy.
+//! Request admission and batch formation.
 //!
-//! The engine serves one request at a time (the verify executable is
-//! already a batch across one request's candidates); the batcher's job
-//! is admission control: a bounded queue whose capacity bounds worst-
-//! case queueing latency, plus a dispatch policy choosing which session
-//! to serve next. FIFO is the default; `Fair` round-robins across
-//! sessions so one chatty session cannot starve the rest.
+//! The batcher is the engine's wave former: a bounded admission queue
+//! (capacity enforced upstream by the `sync_channel`) plus a dispatch
+//! policy choosing which session joins the next micro-batch wave. FIFO
+//! serves strictly in arrival order; `Fair` keeps one queue *per
+//! session* and a round-robin cursor, so one chatty session cannot
+//! starve the rest and dispatch stays O(1) amortized under backlog (the
+//! previous implementation scanned a single `VecDeque` per pop — O(n²)
+//! across a backlog of n).
 
 use crate::coordinator::request::SegmentRequest;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,52 +24,108 @@ pub enum Policy {
 /// In-engine request buffer with a dispatch policy.
 #[derive(Debug)]
 pub struct Batcher {
-    queue: VecDeque<SegmentRequest>,
     policy: Policy,
-    last_session: Option<usize>,
+    /// Arrival-order queue (Fifo policy).
+    fifo: VecDeque<SegmentRequest>,
+    /// Per-session queues (Fair policy).
+    queues: HashMap<usize, VecDeque<SegmentRequest>>,
+    /// Round-robin session order (first-seen order; grows once per
+    /// session, never with backlog).
+    order: Vec<usize>,
+    /// Position in `order` of the last-served session; the round-robin
+    /// scan starts just after it (None before the first pop).
+    last_pos: Option<usize>,
+    /// Buffered request count across all queues.
+    len: usize,
 }
 
 impl Batcher {
     /// Empty batcher.
     pub fn new(policy: Policy) -> Self {
-        Self { queue: VecDeque::new(), policy, last_session: None }
+        Self {
+            policy,
+            fifo: VecDeque::new(),
+            queues: HashMap::new(),
+            order: Vec::new(),
+            last_pos: None,
+            len: 0,
+        }
     }
 
     /// Number of buffered requests.
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     /// True when no requests are buffered.
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
     }
 
     /// Admit a request.
     pub fn push(&mut self, req: SegmentRequest) {
-        self.queue.push_back(req);
+        self.len += 1;
+        match self.policy {
+            Policy::Fifo => self.fifo.push_back(req),
+            Policy::Fair => {
+                if !self.queues.contains_key(&req.session) {
+                    self.order.push(req.session);
+                    self.queues.insert(req.session, VecDeque::new());
+                }
+                self.queues.get_mut(&req.session).expect("queue exists").push_back(req);
+            }
+        }
     }
 
     /// Pop the next request per policy.
     pub fn pop(&mut self) -> Option<SegmentRequest> {
+        self.pop_next(&|_| false)
+    }
+
+    /// Pop the next dispatchable request, skipping sessions the engine
+    /// reports as busy (already holding an in-flight job) — the batch
+    /// former's admission step.
+    ///
+    /// * `Fifo` — strictly arrival order; a busy head request blocks
+    ///   admission (head-of-line wait) rather than being overtaken, so
+    ///   FIFO ordering is never violated.
+    /// * `Fair` — round-robin cursor over per-session queues; busy or
+    ///   empty sessions are skipped in O(#sessions), independent of
+    ///   backlog depth.
+    pub fn pop_next(&mut self, is_busy: &dyn Fn(usize) -> bool) -> Option<SegmentRequest> {
         match self.policy {
-            Policy::Fifo => self.queue.pop_front(),
+            Policy::Fifo => {
+                let head = self.fifo.front()?;
+                if is_busy(head.session) {
+                    return None;
+                }
+                self.len -= 1;
+                self.fifo.pop_front()
+            }
             Policy::Fair => {
-                // Prefer the first request whose session differs from the
-                // last-served one; fall back to FIFO.
-                let idx = match self.last_session {
-                    Some(last) => self
-                        .queue
-                        .iter()
-                        .position(|r| r.session != last)
-                        .unwrap_or(0),
+                let n = self.order.len();
+                if n == 0 {
+                    return None;
+                }
+                let start = match self.last_pos {
+                    Some(p) => (p + 1) % n,
                     None => 0,
                 };
-                let req = self.queue.remove(idx);
-                if let Some(r) = &req {
-                    self.last_session = Some(r.session);
+                for step in 0..n {
+                    let idx = (start + step) % n;
+                    let session = self.order[idx];
+                    if is_busy(session) {
+                        continue;
+                    }
+                    if let Some(req) =
+                        self.queues.get_mut(&session).and_then(|q| q.pop_front())
+                    {
+                        self.last_pos = Some(idx);
+                        self.len -= 1;
+                        return Some(req);
+                    }
                 }
-                req
+                None
             }
         }
     }
@@ -125,5 +183,58 @@ mod tests {
         assert_eq!(b.len(), 1);
         b.pop();
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn fair_cycles_evenly_under_deep_backlog() {
+        // Per-session queues + cursor: dispatch cost is O(#sessions) per
+        // pop no matter how deep each session's backlog is, and the
+        // interleaving is a strict round-robin.
+        let mut b = Batcher::new(Policy::Fair);
+        for _ in 0..50 {
+            for s in 0..4 {
+                b.push(req(s));
+            }
+        }
+        assert_eq!(b.len(), 200);
+        for round in 0..50 {
+            for s in 0..4 {
+                assert_eq!(b.pop().unwrap().session, s, "round {round}");
+            }
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn busy_sessions_are_skipped_fair_but_block_fifo() {
+        let mut fair = Batcher::new(Policy::Fair);
+        fair.push(req(1));
+        fair.push(req(2));
+        assert_eq!(fair.pop_next(&|s| s == 1).unwrap().session, 2);
+        // Only session 1 left and it is busy.
+        assert!(fair.pop_next(&|s| s == 1).is_none());
+        assert_eq!(fair.len(), 1);
+        assert_eq!(fair.pop().unwrap().session, 1);
+
+        let mut fifo = Batcher::new(Policy::Fifo);
+        fifo.push(req(1));
+        fifo.push(req(2));
+        // FIFO never reorders: a busy head blocks admission entirely.
+        assert!(fifo.pop_next(&|s| s == 1).is_none());
+        assert_eq!(fifo.pop_next(&|_| false).unwrap().session, 1);
+        assert_eq!(fifo.pop().unwrap().session, 2);
+    }
+
+    #[test]
+    fn fair_handles_sessions_arriving_late() {
+        let mut b = Batcher::new(Policy::Fair);
+        b.push(req(0));
+        assert_eq!(b.pop().unwrap().session, 0);
+        // A brand-new session joins after the cursor advanced.
+        b.push(req(7));
+        b.push(req(0));
+        assert_eq!(b.pop().unwrap().session, 7);
+        assert_eq!(b.pop().unwrap().session, 0);
+        assert!(b.pop().is_none());
     }
 }

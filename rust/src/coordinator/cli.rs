@@ -48,6 +48,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let episodes = args.get_usize("episodes", 1)?;
     let queue = args.get_usize("queue", 64)?;
     let seed = args.get_u64("seed", 0)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let batch_window_us = args.get_u64("batch-window-us", 200)?;
     let policy = match args.get_or("policy", "fair").as_str() {
         "fifo" => Policy::Fifo,
         "fair" => Policy::Fair,
@@ -75,13 +77,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         policy,
         scheduler,
         seed,
+        max_batch,
+        batch_window: std::time::Duration::from_micros(batch_window_us),
     };
     println!(
-        "serving task={} method={} sessions={} episodes/session={}",
+        "serving task={} method={} sessions={} episodes/session={} max_batch={}",
         task.name(),
         method.name(),
         sessions,
-        episodes
+        episodes,
+        max_batch
     );
     let report = serve(&den, &opts)?;
     println!("--- engine ---");

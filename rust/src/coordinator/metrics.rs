@@ -1,7 +1,15 @@
-//! Server-side metrics: throughput, latency percentiles, NFE, queueing.
+//! Server-side metrics: throughput, latency percentiles, NFE, queueing,
+//! and micro-batching health (verify-batch occupancy, in-flight jobs).
+//!
+//! Latency and queue-delay percentiles come from fixed-size reservoir
+//! samples, so the metrics layer's memory is bounded no matter how many
+//! requests the engine serves.
 
-use crate::util::stats::{percentile, OnlineStats};
+use crate::util::stats::{OnlineStats, Reservoir};
 use std::time::Instant;
+
+/// Retained latency / queue-delay observations per reservoir.
+const RESERVOIR_CAP: usize = 4096;
 
 /// Metrics accumulated by the engine thread.
 #[derive(Debug)]
@@ -13,16 +21,25 @@ pub struct ServerMetrics {
     pub queue_delay: OnlineStats,
     /// Compute-time stats (seconds).
     pub compute: OnlineStats,
-    /// All end-to-end latencies (for percentiles).
-    latencies: Vec<f64>,
-    /// All queue delays (for percentiles).
-    queue_delays: Vec<f64>,
+    /// End-to-end latency reservoir (for percentiles).
+    latencies: Reservoir,
+    /// Queue-delay reservoir (for percentiles).
+    queue_delays: Reservoir,
     /// Total NFE served.
     pub total_nfe: f64,
     /// Total drafts / accepted across requests.
     pub drafts: u64,
     /// Accepted drafts.
     pub accepted: u64,
+    /// Fused verify calls issued by the engine.
+    pub verify_batches: u64,
+    /// Requests fused per verify call (batch occupancy; >1 means
+    /// cross-request fusion is engaging).
+    pub verify_occupancy: OnlineStats,
+    /// In-flight job gauge, sampled once per engine iteration.
+    pub inflight: OnlineStats,
+    /// Peak concurrent in-flight jobs.
+    pub peak_inflight: usize,
 }
 
 impl Default for ServerMetrics {
@@ -39,11 +56,15 @@ impl ServerMetrics {
             requests: 0,
             queue_delay: OnlineStats::new(),
             compute: OnlineStats::new(),
-            latencies: Vec::new(),
-            queue_delays: Vec::new(),
+            latencies: Reservoir::new(RESERVOIR_CAP),
+            queue_delays: Reservoir::new(RESERVOIR_CAP),
             total_nfe: 0.0,
             drafts: 0,
             accepted: 0,
+            verify_batches: 0,
+            verify_occupancy: OnlineStats::new(),
+            inflight: OnlineStats::new(),
+            peak_inflight: 0,
         }
     }
 
@@ -66,6 +87,29 @@ impl ServerMetrics {
         self.accepted += accepted as u64;
     }
 
+    /// Record one fused verify call covering `fused` requests.
+    pub fn record_verify_batch(&mut self, fused: usize) {
+        self.verify_batches += 1;
+        self.verify_occupancy.push(fused as f64);
+    }
+
+    /// Sample the in-flight job gauge (once per engine iteration).
+    pub fn record_inflight(&mut self, jobs: usize) {
+        self.inflight.push(jobs as f64);
+        self.peak_inflight = self.peak_inflight.max(jobs);
+    }
+
+    /// Mean requests fused per verify call (0 when no verifies ran).
+    pub fn mean_verify_occupancy(&self) -> f64 {
+        self.verify_occupancy.mean()
+    }
+
+    /// Retained latency observations (bounded by the reservoir capacity;
+    /// exposed for the memory-regression test).
+    pub fn latency_samples(&self) -> usize {
+        self.latencies.len()
+    }
+
     /// Segments per second since start.
     pub fn throughput(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64();
@@ -78,7 +122,12 @@ impl ServerMetrics {
 
     /// End-to-end latency percentile (q in [0,1]).
     pub fn latency_percentile(&self, q: f64) -> f64 {
-        percentile(&self.latencies, q)
+        self.latencies.percentile(q)
+    }
+
+    /// Queue-delay percentile (q in [0,1]).
+    pub fn queue_delay_percentile(&self, q: f64) -> f64 {
+        self.queue_delays.percentile(q)
     }
 
     /// Draft acceptance rate.
@@ -94,7 +143,8 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} throughput={:.2} seg/s nfe/seg={:.1} accept={:.1}% \
-             latency p50={:.4}s p95={:.4}s p99={:.4}s queue p95={:.4}s",
+             latency p50={:.4}s p95={:.4}s p99={:.4}s queue p95={:.4}s \
+             verify-occ={:.2} inflight mean={:.1} peak={}",
             self.requests,
             self.throughput(),
             self.total_nfe / self.requests.max(1) as f64,
@@ -102,7 +152,10 @@ impl ServerMetrics {
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
-            percentile(&self.queue_delays, 0.95),
+            self.queue_delay_percentile(0.95),
+            self.mean_verify_occupancy(),
+            self.inflight.mean(),
+            self.peak_inflight,
         )
     }
 }
@@ -124,5 +177,34 @@ mod tests {
         assert!((m.total_nfe - 2500.0).abs() < 1e-9);
         assert!(m.throughput() > 0.0);
         assert!(m.summary().contains("requests=100"));
+    }
+
+    #[test]
+    fn memory_stays_bounded_under_load() {
+        // Regression: percentile buffers must not grow per request.
+        let mut m = ServerMetrics::new();
+        for i in 0..(RESERVOIR_CAP * 10) {
+            m.record(0.001 * (i % 7) as f64, 0.01, 25.0, 8, 7);
+        }
+        assert_eq!(m.requests as usize, RESERVOIR_CAP * 10);
+        assert!(m.latency_samples() <= RESERVOIR_CAP);
+        // Percentiles still answer sensibly from the reservoir.
+        let p50 = m.latency_percentile(0.5);
+        assert!(p50 >= 0.01 && p50 <= 0.01 + 0.006 + 1e-9, "p50 {p50}");
+    }
+
+    #[test]
+    fn batching_gauges_accumulate() {
+        let mut m = ServerMetrics::new();
+        m.record_verify_batch(4);
+        m.record_verify_batch(2);
+        m.record_inflight(4);
+        m.record_inflight(6);
+        m.record_inflight(1);
+        assert_eq!(m.verify_batches, 2);
+        assert!((m.mean_verify_occupancy() - 3.0).abs() < 1e-12);
+        assert_eq!(m.peak_inflight, 6);
+        assert!((m.inflight.mean() - 11.0 / 3.0).abs() < 1e-12);
+        assert!(m.summary().contains("verify-occ"));
     }
 }

@@ -1,17 +1,40 @@
 //! L3 serving coordinator.
 //!
-//! vLLM-router-style layout adapted to diffusion-policy serving: session
-//! drivers (one per controlled robot/env) run on worker threads and
-//! submit action-segment requests; a single **engine thread** owns the
-//! PJRT runtime (its handles are not `Send`) and serves requests through
-//! a bounded queue with backpressure. Scheduler inference (pure Rust,
-//! microseconds) runs *inside the session*, in parallel with the queue
-//! round-trip — matching the paper's "scheduler runs in parallel with
-//! the encoder, adding no extra inference latency".
+//! vLLM-router-style layout adapted to diffusion-policy serving. The
+//! dataflow for one segment request:
 //!
-//! Cross-session *verification batching* would require a per-candidate
-//! conditioning artifact (today's `target_verify` shares one cond across
-//! the batch); this is called out in DESIGN.md §Perf as the next step.
+//! ```text
+//! session driver (worker thread, one per controlled robot/env)
+//!   │  SegmentRequest { obs, params, reply } over a bounded sync_channel
+//!   ▼
+//! batch former (batcher.rs)
+//!   │  per-session queues + round-robin cursor (Fair) or arrival order
+//!   │  (Fifo); the engine admits up to `max_batch` jobs, lingering
+//!   │  `batch_window` for stragglers when a fresh wave forms
+//!   ▼
+//! engine loop (server.rs, single thread — owns the non-Send runtime)
+//!   │  job table of resumable SegmentJobs (speculative::job):
+//!   │    1. draft   — each job rolls out its round's drafts (k/8 NFE)
+//!   │    2. verify  — ONE fused target_verify_many call covers every
+//!   │                 job with a round awaiting verification (1 NFE per
+//!   │                 request; fusion amortizes dispatch)
+//!   │    3. accept  — each job's MH scan + reflection coupling commits
+//!   │                 its prefix and advances (or finishes)
+//!   ▼
+//! SegmentReply { actions, nfe, … } back over the per-request channel
+//! ```
+//!
+//! Scheduler inference (pure Rust, microseconds) runs *inside the
+//! session*, in parallel with the queue round-trip — matching the
+//! paper's "scheduler runs in parallel with the encoder, adding no extra
+//! inference latency".
+//!
+//! Losslessness under batching: each session draws from its own seeded
+//! RNG stream and every verify slice is computed independently per
+//! request, so served segments are bit-identical for any `max_batch`
+//! and either dispatch policy (asserted by `tests/serve_batching.rs`).
+//! Baseline methods (vanilla, caching) have no verify stage to fuse and
+//! run as blocking single-request generations at admission.
 
 pub mod batcher;
 pub mod cli;

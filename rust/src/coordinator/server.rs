@@ -1,20 +1,32 @@
-//! The engine loop: owns the (non-`Send`) denoiser, serves session
-//! requests through the batcher, records metrics.
+//! The engine loop: owns the (non-`Send`) denoiser and a table of
+//! resumable speculative jobs, serves session requests through the
+//! batch former, fuses verify stages across requests, records metrics.
+//!
+//! TS-DP requests run as [`SegmentJob`] state machines: every engine
+//! iteration drafts each job's next round, then issues **one**
+//! multi-request `target_verify_many` call covering every job whose
+//! round is waiting on verification, then resumes each job's accept
+//! scan. Per-session RNG streams are independent, so results are
+//! bit-identical to serving the same requests one at a time
+//! (`max_batch = 1`) — batching changes wall-clock, never actions.
+//! Non-speculative baselines have no verify stage to fuse and run as
+//! blocking single-request generations at admission.
 
 use crate::baselines::{make_generator, Generator};
-use crate::config::{DemoStyle, Method, Task};
+use crate::config::{DemoStyle, Method, SpecParams, Task, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{SegmentReply, SegmentRequest};
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::policy::Denoiser;
 use crate::scheduler::SchedulerPolicy;
-use crate::speculative::SegmentTrace;
+use crate::speculative::engine::SEG;
+use crate::speculative::{SegmentJob, SegmentTrace, SpecEngine, Stage};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Serving run options.
 #[derive(Debug, Clone)]
@@ -37,6 +49,13 @@ pub struct ServeOptions {
     pub scheduler: Option<SchedulerPolicy>,
     /// Base seed.
     pub seed: u64,
+    /// Maximum jobs held in flight by the engine (verify stages of all
+    /// in-flight jobs fuse into one target call). 1 disables
+    /// cross-request batching.
+    pub max_batch: usize,
+    /// How long the engine lingers for stragglers when forming the
+    /// initial wave of a batch (zero = never wait).
+    pub batch_window: Duration,
 }
 
 impl Default for ServeOptions {
@@ -51,6 +70,8 @@ impl Default for ServeOptions {
             policy: Policy::Fair,
             scheduler: None,
             seed: 0,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
         }
     }
 }
@@ -79,14 +100,31 @@ impl ServeReport {
     }
 }
 
+/// One in-flight TS-DP request in the engine's job table.
+struct ActiveJob<'e> {
+    /// Session id (routing key; at most one job per session in flight).
+    session: usize,
+    /// Per-round speculative parameters for this segment.
+    params: SpecParams,
+    /// The resumable state machine.
+    job: SegmentJob<'e>,
+    /// Reply channel back to the session driver.
+    reply: mpsc::SyncSender<SegmentReply>,
+    /// Queue delay observed at admission (seconds).
+    queue_delay: f64,
+    /// Admission time (compute-latency clock; includes time interleaved
+    /// with other jobs — honest under batching).
+    started: Instant,
+}
+
 /// Run the serving loop: spawns session drivers, serves until they all
 /// finish, returns the aggregated report.
 pub fn serve(den: &dyn Denoiser, opts: &ServeOptions) -> Result<ServeReport> {
     let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
     let mut metrics = ServerMetrics::new();
     let mut batcher = Batcher::new(opts.policy);
-    let mut generators: HashMap<usize, Box<dyn Generator>> = HashMap::new();
-    let mut rngs: HashMap<usize, Rng> = HashMap::new();
+    let max_batch = opts.max_batch.max(1);
+    let engine = SpecEngine::new();
 
     let reports: Vec<SessionReport> = std::thread::scope(|scope| -> Result<Vec<SessionReport>> {
         let mut handles = Vec::new();
@@ -104,53 +142,206 @@ pub fn serve(den: &dyn Denoiser, opts: &ServeOptions) -> Result<ServeReport> {
         }
         drop(tx);
 
-        // Engine loop: drain the channel into the batcher, serve in
-        // policy order, until all sessions hang up.
-        let mut open = true;
-        while open || !batcher.is_empty() {
-            if batcher.is_empty() {
-                match rx.recv() {
-                    Ok(req) => batcher.push(req),
-                    Err(_) => {
-                        open = false;
-                        continue;
+        // Sessions only submit one request at a time, so a fresh wave can
+        // never collect more requests than there are sessions — don't
+        // linger for stragglers that structurally cannot arrive. (Once
+        // sessions start *finishing*, waves with fewer live sessions than
+        // this target still pay the full window once per segment; that
+        // end-game tail is bounded by batch_window and can be zeroed via
+        // the knob.)
+        let wave_target = max_batch.min(opts.sessions.max(1));
+
+        // The engine loop runs in an inner closure so that on error we
+        // still drop every buffered request and in-flight job (and their
+        // reply senders) before joining: blocked sessions then observe a
+        // hangup instead of deadlocking serve() forever.
+        let engine_result = (|| -> Result<()> {
+            // Engine state. Per-session RNG streams and (for baselines)
+            // generators persist across that session's requests.
+            let mut generators: HashMap<usize, Box<dyn Generator>> = HashMap::new();
+            let mut rngs: HashMap<usize, Rng> = HashMap::new();
+            let mut jobs: Vec<ActiveJob<'_>> = Vec::new();
+
+            let mut open = true;
+            while open || !batcher.is_empty() || !jobs.is_empty() {
+                // --- 1. ingest ------------------------------------------
+                if open && jobs.is_empty() && batcher.is_empty() {
+                    match rx.recv() {
+                        Ok(req) => batcher.push(req),
+                        Err(_) => {
+                            open = false;
+                            continue;
+                        }
+                    }
+                }
+                if open {
+                    // Opportunistically drain whatever else is queued.
+                    while let Ok(req) = rx.try_recv() {
+                        batcher.push(req);
+                    }
+                    // Wave formation: with no round in flight, linger
+                    // briefly so concurrent sessions land in the same
+                    // first wave. Never delays jobs already mid-round.
+                    if jobs.is_empty() && !opts.batch_window.is_zero() {
+                        let deadline = Instant::now() + opts.batch_window;
+                        while batcher.len() < wave_target {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            match rx.recv_timeout(deadline - now) {
+                                Ok(req) => batcher.push(req),
+                                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // --- 2. admit into the job table ------------------------
+                while jobs.len() < max_batch {
+                    let req = {
+                        let busy: Vec<usize> = jobs.iter().map(|j| j.session).collect();
+                        batcher.pop_next(&|s| busy.contains(&s))
+                    };
+                    let Some(req) = req else { break };
+                    let queue_delay = req.submitted.elapsed().as_secs_f64();
+                    let cond = den.encode(&req.obs)?;
+                    let rng = rngs
+                        .entry(req.session)
+                        .or_insert_with(|| Rng::seed_from_u64(opts.seed ^ req.session as u64));
+                    if opts.method == Method::TsDp {
+                        let params = req.params.unwrap_or_else(SpecParams::fixed_default);
+                        let job = engine.start_job(cond, rng);
+                        jobs.push(ActiveJob {
+                            session: req.session,
+                            params,
+                            job,
+                            reply: req.reply,
+                            queue_delay,
+                            started: Instant::now(),
+                        });
+                    } else {
+                        // Baselines have no resumable rounds: blocking
+                        // single-request generation, exactly as before.
+                        let t0 = Instant::now();
+                        let generator = generators
+                            .entry(req.session)
+                            .or_insert_with(|| make_generator(opts.method));
+                        if let Some(p) = req.params {
+                            generator.set_params(p);
+                        }
+                        let mut trace = SegmentTrace::default();
+                        let actions = generator.generate(den, &cond, rng, &mut trace)?;
+                        let compute = t0.elapsed().as_secs_f64();
+                        metrics.record(
+                            queue_delay,
+                            compute,
+                            trace.nfe,
+                            trace.drafts(),
+                            trace.accepted(),
+                        );
+                        // A hung-up session (env finished mid-flight) is fine.
+                        let _ = req.reply.send(SegmentReply {
+                            actions,
+                            nfe: trace.nfe,
+                            drafts: trace.drafts(),
+                            accepted: trace.accepted(),
+                            compute_secs: compute,
+                        });
+                    }
+                }
+                if !jobs.is_empty() {
+                    metrics.record_inflight(jobs.len());
+                }
+
+                // --- 3. draft every job that needs a new round ----------
+                for aj in jobs.iter_mut() {
+                    if aj.job.stage() == Stage::Draft {
+                        let rng = rngs.get_mut(&aj.session).expect("rng created at admission");
+                        aj.job.draft(den, aj.params, rng)?;
+                    }
+                }
+
+                // --- 4. fuse all pending verify stages into one call ----
+                let pending: Vec<usize> = (0..jobs.len())
+                    .filter(|&i| jobs[i].job.stage() == Stage::Verify)
+                    .collect();
+                if !pending.is_empty() {
+                    metrics.record_verify_batch(pending.len());
+                    let mut xs = Vec::with_capacity(pending.len() * VERIFY_BATCH * SEG);
+                    let mut ts = Vec::with_capacity(pending.len() * VERIFY_BATCH);
+                    let mut conds = Vec::with_capacity(pending.len() * EMBED_DIM);
+                    for &i in &pending {
+                        xs.extend_from_slice(jobs[i].job.verify_xs());
+                        ts.extend_from_slice(jobs[i].job.verify_ts());
+                        conds.extend_from_slice(jobs[i].job.cond());
+                    }
+                    let eps = den.target_verify_many(&xs, &ts, &conds)?;
+                    for (slot, &i) in pending.iter().enumerate() {
+                        let eps_i =
+                            &eps[slot * VERIFY_BATCH * SEG..(slot + 1) * VERIFY_BATCH * SEG];
+                        let rng = rngs.get_mut(&jobs[i].session).expect("rng created at admission");
+                        jobs[i].job.accept(eps_i, rng);
+                    }
+                }
+
+                // --- 5. finalize finished jobs and reply ----------------
+                let mut i = 0;
+                while i < jobs.len() {
+                    if jobs[i].job.stage() == Stage::Final {
+                        jobs[i].job.finalize(den)?;
+                    }
+                    if jobs[i].job.stage() == Stage::Done {
+                        let done = jobs.remove(i);
+                        let compute = done.started.elapsed().as_secs_f64();
+                        let (actions, rounds, nfe) = done.job.into_parts();
+                        let trace = SegmentTrace { rounds, nfe, wall_secs: compute };
+                        metrics.record(
+                            done.queue_delay,
+                            compute,
+                            nfe,
+                            trace.drafts(),
+                            trace.accepted(),
+                        );
+                        // A hung-up session (env finished mid-flight) is fine.
+                        let _ = done.reply.send(SegmentReply {
+                            actions,
+                            nfe,
+                            drafts: trace.drafts(),
+                            accepted: trace.accepted(),
+                            compute_secs: compute,
+                        });
+                    } else {
+                        i += 1;
                     }
                 }
             }
-            // Opportunistically drain whatever else is queued.
-            while let Ok(req) = rx.try_recv() {
-                batcher.push(req);
-            }
-            if let Some(req) = batcher.pop() {
-                let queue_delay = req.submitted.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let cond = den.encode(&req.obs)?;
-                let generator = generators
-                    .entry(req.session)
-                    .or_insert_with(|| make_generator(opts.method));
-                if let Some(p) = req.params {
-                    generator.set_params(p);
-                }
-                let rng = rngs
-                    .entry(req.session)
-                    .or_insert_with(|| Rng::seed_from_u64(opts.seed ^ req.session as u64));
-                let mut trace = SegmentTrace::default();
-                let actions = generator.generate(den, &cond, rng, &mut trace)?;
-                let compute = t0.elapsed().as_secs_f64();
-                metrics.record(queue_delay, compute, trace.nfe, trace.drafts(), trace.accepted());
-                // A hung-up session (env finished mid-flight) is fine.
-                let _ = req.reply.send(SegmentReply {
-                    actions,
-                    nfe: trace.nfe,
-                    drafts: trace.drafts(),
-                    accepted: trace.accepted(),
-                    compute_secs: compute,
-                });
+            Ok(())
+        })();
+
+        // Engine done (or failed). In-flight jobs were dropped with the
+        // closure; drop buffered requests and the receiver too, so any
+        // session still waiting sees a hangup rather than blocking.
+        while batcher.pop().is_some() {}
+        drop(rx);
+
+        let mut reports = Vec::new();
+        let mut session_err = None;
+        for h in handles {
+            match h.join().expect("session thread panicked") {
+                Ok(r) => reports.push(r),
+                Err(e) => session_err = Some(e),
             }
         }
-        let mut reports = Vec::new();
-        for h in handles {
-            reports.push(h.join().expect("session thread panicked")?);
+        // The engine error is the root cause; session-side errors are
+        // usually its fallout ("engine dropped the reply").
+        engine_result?;
+        if let Some(e) = session_err {
+            return Err(e);
         }
         Ok(reports)
     })?;
@@ -247,5 +438,31 @@ mod tests {
         };
         let report = serve(&den, &opts).unwrap();
         assert!(report.metrics.requests > 0);
+    }
+
+    #[test]
+    fn single_slot_engine_matches_legacy_serial_serving() {
+        // max_batch = 1 degenerates to the old one-request-at-a-time
+        // loop; it must still complete and never fuse verifies.
+        let den = MockDenoiser::with_bias(0.05);
+        let opts = ServeOptions { sessions: 3, max_batch: 1, ..Default::default() };
+        let report = serve(&den, &opts).unwrap();
+        assert!(report.metrics.requests > 0);
+        assert!(report.metrics.mean_verify_occupancy() <= 1.0 + 1e-9);
+        assert_eq!(report.metrics.peak_inflight, 1);
+    }
+
+    #[test]
+    fn batched_engine_fuses_verifies_across_sessions() {
+        let den = MockDenoiser::with_bias(0.05);
+        let opts = ServeOptions { sessions: 4, max_batch: 8, ..Default::default() };
+        let report = serve(&den, &opts).unwrap();
+        assert!(report.metrics.verify_batches > 0);
+        assert!(
+            report.metrics.mean_verify_occupancy() > 1.5,
+            "occupancy {} — cross-request fusion should engage with 4 sessions",
+            report.metrics.mean_verify_occupancy()
+        );
+        assert!(report.metrics.peak_inflight >= 2);
     }
 }

@@ -30,6 +30,23 @@ pub struct SessionReport {
     pub mean_latency: f64,
     /// Total NFE attributed to this session.
     pub nfe: f64,
+    /// FNV-1a digest of each served segment's action bits, in order.
+    /// Serving the same seeds must yield the same digests regardless of
+    /// engine batching (`max_batch`) or dispatch policy — the
+    /// losslessness contract the batching tests assert.
+    pub segment_digests: Vec<u64>,
+}
+
+/// FNV-1a over the raw bit pattern of an f32 slice (order-sensitive).
+fn fnv1a_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// Configuration for one session driver.
@@ -66,6 +83,7 @@ pub fn run_session(
         segments: 0,
         mean_latency: 0.0,
         nfe: 0.0,
+        segment_digests: Vec::new(),
     };
     let mut latency_sum = 0.0;
     for ep in 0..cfg.episodes {
@@ -97,6 +115,7 @@ pub fn run_session(
             latency_sum += latency;
             report.segments += 1;
             report.nfe += reply.nfe;
+            report.segment_digests.push(fnv1a_f32(&reply.actions));
 
             for i in 0..EXEC_STEPS.min(HORIZON) {
                 if env.done() {

@@ -111,15 +111,33 @@ impl DdpmSchedule {
     pub fn step(&self, t: usize, x_t: &[f32], eps: &[f32], xi: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let d = x_t.len();
         let mut x0 = vec![0.0; d];
-        self.predict_x0(t, x_t, eps, &mut x0);
-        let mut mean = vec![0.0; d];
-        self.posterior_mean(t, x_t, &x0, &mut mean);
-        let sigma = self.sigmas[t];
         let mut x_prev = vec![0.0; d];
-        for i in 0..d {
+        let mut mean = vec![0.0; d];
+        self.step_into(t, x_t, eps, xi, &mut x0, &mut x_prev, &mut mean);
+        (x_prev, mean)
+    }
+
+    /// Allocation-free reverse step: like [`Self::step`] but writes into
+    /// caller-owned buffers (`x0_scratch` holds the intermediate x̂0).
+    /// Used by the speculative job's draft fallback so a serial rollout
+    /// performs no per-draft heap allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_into(
+        &self,
+        t: usize,
+        x_t: &[f32],
+        eps: &[f32],
+        xi: &[f32],
+        x0_scratch: &mut [f32],
+        x_prev: &mut [f32],
+        mean: &mut [f32],
+    ) {
+        self.predict_x0(t, x_t, eps, x0_scratch);
+        self.posterior_mean(t, x_t, x0_scratch, mean);
+        let sigma = self.sigmas[t];
+        for i in 0..x_t.len() {
             x_prev[i] = mean[i] + sigma * xi[i];
         }
-        (x_prev, mean)
     }
 
     /// Forward noising: x_t = √ᾱ_t · x0 + √(1−ᾱ_t) · ε (used by tests and

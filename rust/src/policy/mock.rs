@@ -92,6 +92,29 @@ impl Denoiser for MockDenoiser {
         Ok(out)
     }
 
+    fn target_verify_many(&self, xs: &[f32], ts: &[f32], conds: &[f32]) -> Result<Vec<f32>> {
+        // Genuinely fused layout: every request's candidates evaluated in
+        // one pass over the concatenated inputs, one conditioning vector
+        // per request. Arithmetic is identical to per-request
+        // `target_verify`, so fused serving is bit-identical to serial
+        // serving; NFE stays 1 per request.
+        ensure!(conds.len() % EMBED_DIM == 0, "conds len {}", conds.len());
+        let n = conds.len() / EMBED_DIM;
+        ensure!(xs.len() == n * VERIFY_BATCH * SEG, "xs len {}", xs.len());
+        ensure!(ts.len() == n * VERIFY_BATCH, "ts len {}", ts.len());
+        let mut out = Vec::with_capacity(xs.len());
+        for r in 0..n {
+            self.nfe.count_target();
+            let cond = &conds[r * EMBED_DIM..(r + 1) * EMBED_DIM];
+            for b in 0..VERIFY_BATCH {
+                let c = r * VERIFY_BATCH + b;
+                let x = &xs[c * SEG..(c + 1) * SEG];
+                out.extend(self.eps_star(x, ts[c] as usize, cond));
+            }
+        }
+        Ok(out)
+    }
+
     fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
         self.nfe.count_drafter(1);
         let bias = (self.drafter_bias)(t);
@@ -170,6 +193,39 @@ mod tests {
             let single =
                 m.target_step(&xs[b * SEG..(b + 1) * SEG], ts[b] as usize, &cond).unwrap();
             assert_eq!(&batch[b * SEG..(b + 1) * SEG], &single[..]);
+        }
+    }
+
+    #[test]
+    fn verify_many_matches_per_request_verify() {
+        let m = MockDenoiser::with_bias(0.0);
+        let mut rng = Rng::seed_from_u64(5);
+        let conds: Vec<Vec<f32>> = (0..3)
+            .map(|i| m.encode(&vec![0.1 + 0.2 * i as f32; OBS_DIM]).unwrap())
+            .collect();
+        let mut xs = Vec::new();
+        let mut ts = Vec::new();
+        let mut flat_conds = Vec::new();
+        for cond in &conds {
+            flat_conds.extend_from_slice(cond);
+            for b in 0..VERIFY_BATCH {
+                xs.extend(rng.normal_vec(SEG));
+                ts.push((b * 3 % DIFFUSION_STEPS) as f32);
+            }
+        }
+        let fused = m.target_verify_many(&xs, &ts, &flat_conds).unwrap();
+        assert_eq!(fused.len(), 3 * VERIFY_BATCH * SEG);
+        for (r, cond) in conds.iter().enumerate() {
+            let lo = r * VERIFY_BATCH * SEG;
+            let hi = (r + 1) * VERIFY_BATCH * SEG;
+            let single = m
+                .target_verify(
+                    &xs[lo..hi],
+                    &ts[r * VERIFY_BATCH..(r + 1) * VERIFY_BATCH],
+                    cond,
+                )
+                .unwrap();
+            assert_eq!(&fused[lo..hi], &single[..], "request {r} must be bit-identical");
         }
     }
 

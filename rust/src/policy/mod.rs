@@ -9,8 +9,10 @@
 
 pub mod mock;
 
+use crate::config::{EMBED_DIM, VERIFY_BATCH};
+use crate::runtime::executable::SEG;
 use crate::runtime::{ModelRuntime, NfeCounter};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Model evaluations used by the denoising engines.
 ///
@@ -24,6 +26,40 @@ pub trait Denoiser {
     /// Batched target ε-prediction over VERIFY_BATCH candidates in one
     /// parallel forward pass. Costs 1 NFE.
     fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> Result<Vec<f32>>;
+    /// Multi-request fused verification: `n` requests' verify batches in
+    /// one call, each with its own conditioning vector.
+    ///
+    /// Layout: `xs` is n × VERIFY_BATCH × SEG, `ts` is n × VERIFY_BATCH,
+    /// `conds` is n × EMBED_DIM; the output is n × VERIFY_BATCH × SEG in
+    /// the same request order. Costs 1 NFE *per request* (each request's
+    /// share is one parallel target forward — fusing across requests
+    /// amortizes dispatch, not model evaluations), so per-request NFE
+    /// accounting is independent of how many requests share a call.
+    ///
+    /// The default implementation loops over per-request
+    /// [`Denoiser::target_verify`] calls and is bit-identical to serving
+    /// the requests one at a time; backends with a multi-conditioning
+    /// verify kernel can override it with a genuinely fused forward.
+    /// [`mock::MockDenoiser`] overrides it with a fused evaluation;
+    /// [`ModelRuntime`] uses this loop until a multi-conditioning verify
+    /// artifact is exported (its compiled `target_verify` shares one cond
+    /// across the batch).
+    fn target_verify_many(&self, xs: &[f32], ts: &[f32], conds: &[f32]) -> Result<Vec<f32>> {
+        ensure!(conds.len() % EMBED_DIM == 0, "conds len {}", conds.len());
+        let n = conds.len() / EMBED_DIM;
+        ensure!(xs.len() == n * VERIFY_BATCH * SEG, "xs len {}", xs.len());
+        ensure!(ts.len() == n * VERIFY_BATCH, "ts len {}", ts.len());
+        let mut out = Vec::with_capacity(xs.len());
+        for r in 0..n {
+            let eps = self.target_verify(
+                &xs[r * VERIFY_BATCH * SEG..(r + 1) * VERIFY_BATCH * SEG],
+                &ts[r * VERIFY_BATCH..(r + 1) * VERIFY_BATCH],
+                &conds[r * EMBED_DIM..(r + 1) * EMBED_DIM],
+            )?;
+            out.extend_from_slice(&eps);
+        }
+        Ok(out)
+    }
     /// Drafter ε-prediction. Costs 1/8 NFE.
     fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>>;
     /// Fused K-step drafter rollout, if an artifact exists for `k`:

@@ -15,11 +15,18 @@
 //!    target-distributed — no extra target call.
 //!
 //! Rounds repeat until t = 0; the final step is a single target call.
+//!
+//! The round logic itself lives in [`crate::speculative::job::SegmentJob`],
+//! a resumable state machine; `generate_segment` here is the thin
+//! single-job driver (used by the baselines table, the PPO trainer, and
+//! tests), while the serving coordinator drives many jobs concurrently
+//! and fuses their verify stages across requests.
 
-use crate::config::{SpecParams, ACT_DIM, DIFFUSION_STEPS, HORIZON, VERIFY_BATCH};
-use crate::diffusion::{acceptance, coupling, DdpmSchedule};
+use crate::config::{SpecParams, ACT_DIM, DIFFUSION_STEPS, HORIZON};
+use crate::diffusion::DdpmSchedule;
 use crate::policy::Denoiser;
-use crate::speculative::trace::{RoundRecord, SegmentTrace};
+use crate::speculative::job::{SegmentJob, Stage};
+use crate::speculative::trace::SegmentTrace;
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -58,11 +65,21 @@ impl SpecEngine {
         &self.sched
     }
 
+    /// Start a resumable job for one segment (the serving engine's entry
+    /// point; draws the initial latent from `rng`).
+    pub fn start_job(&self, cond: Vec<f32>, rng: &mut Rng) -> SegmentJob<'_> {
+        SegmentJob::new(&self.sched, self.stochastic_accept, cond, rng)
+    }
+
     /// Generate one action segment by speculative denoising.
     ///
     /// `params` may be updated per-round by the scheduler through
     /// `param_fn` (passed the current timestep); pass `|_| params` for
     /// fixed parameters.
+    ///
+    /// This drives a single [`SegmentJob`] to completion and is
+    /// bit-identical to the coordinator's micro-batched path for the same
+    /// per-request RNG stream.
     pub fn generate_segment(
         &self,
         den: &dyn Denoiser,
@@ -72,127 +89,26 @@ impl SpecEngine {
         trace: &mut SegmentTrace,
     ) -> Result<Vec<f32>> {
         let start = std::time::Instant::now();
-        let nfe0 = den.nfe().nfe();
-        let mut x: Vec<f32> = rng.normal_vec(SEG);
-        let mut t = DIFFUSION_STEPS - 1;
-        while t > 0 {
-            let params = param_fn(t).clamped();
-            let k = params.stages.k_for_timestep(t).min(t);
-            let round = self.speculative_round(den, cond, &mut x, t, k, &params, rng)?;
-            t -= round.committed;
-            trace.rounds.push(round);
-        }
-        // Final deterministic step at t = 0.
-        let eps = den.target_step(&x, 0, cond)?;
-        let xi = vec![0.0f32; SEG];
-        let (x0, _) = self.sched.step(0, &x, &eps, &xi);
-        trace.nfe = den.nfe().nfe() - nfe0;
-        trace.wall_secs = start.elapsed().as_secs_f64();
-        Ok(x0)
-    }
-
-    /// One draft + verify + accept round; mutates `x` to the committed
-    /// latent and returns the round record (committed ≥ 1).
-    fn speculative_round(
-        &self,
-        den: &dyn Denoiser,
-        cond: &[f32],
-        x: &mut Vec<f32>,
-        t: usize,
-        k: usize,
-        params: &SpecParams,
-        rng: &mut Rng,
-    ) -> Result<RoundRecord> {
-        debug_assert!(k >= 1 && k <= t);
-        // --- 1. draft rollout ---
-        // states[j] = input latent of draft j (level t-j); samples[j] =
-        // its output (level t-j-1); means[j] = drafter posterior mean.
-        let noise: Vec<f32> = rng.normal_vec(k * SEG);
-        let mut states: Vec<Vec<f32>> = Vec::with_capacity(k + 1);
-        states.push(x.clone());
-        let (samples_flat, means_flat) = match den.drafter_rollout(k, x, t, cond, &noise)? {
-            Some(fused) => fused,
-            None => {
-                // Serial fallback: k drafter_step calls.
-                let mut samples = Vec::with_capacity(k * SEG);
-                let mut means = Vec::with_capacity(k * SEG);
-                let mut cur = x.clone();
-                for j in 0..k {
-                    let tj = t - j;
-                    let eps = den.drafter_step(&cur, tj, cond)?;
-                    let xi = &noise[j * SEG..(j + 1) * SEG];
-                    let (next, mean) = self.sched.step(tj, &cur, &eps, xi);
-                    samples.extend_from_slice(&next);
-                    means.extend_from_slice(&mean);
-                    cur = next;
+        let mut job = self.start_job(cond.to_vec(), rng);
+        loop {
+            match job.stage() {
+                Stage::Draft => {
+                    let params = param_fn(job.t());
+                    job.draft(den, params, rng)?;
                 }
-                (samples, means)
-            }
-        };
-        for j in 0..k.saturating_sub(1) {
-            states.push(samples_flat[j * SEG..(j + 1) * SEG].to_vec());
-        }
-
-        // --- 2. batched verification (single target forward) ---
-        let mut xs = Vec::with_capacity(VERIFY_BATCH * SEG);
-        let mut ts = Vec::with_capacity(VERIFY_BATCH);
-        for j in 0..VERIFY_BATCH {
-            let jj = j.min(k - 1); // pad with the last real state
-            xs.extend_from_slice(&states[jj]);
-            ts.push((t - jj) as f32);
-        }
-        let eps_t = den.target_verify(&xs, &ts, cond)?;
-
-        // --- 3. scan, accept, correct ---
-        let mut probs = Vec::with_capacity(k);
-        let mut accepted = 0usize;
-        let mut coupled = None;
-        let mut committed = 0usize;
-        for j in 0..k {
-            let tj = t - j;
-            let state = &states[j];
-            let sample = &samples_flat[j * SEG..(j + 1) * SEG];
-            let mu_d = &means_flat[j * SEG..(j + 1) * SEG];
-            // Target posterior mean at the same state.
-            let eps_j = &eps_t[j * SEG..(j + 1) * SEG];
-            let mut x0 = vec![0.0f32; SEG];
-            self.sched.predict_x0(tj, state, eps_j, &mut x0);
-            let mut mu_t = vec![0.0f32; SEG];
-            self.sched.posterior_mean(tj, state, &x0, &mut mu_t);
-
-            let sigma = self.sched.sigmas[tj];
-            let sigma_eff = (sigma * params.sigma_scale).max(1e-6);
-            let xi = &noise[j * SEG..(j + 1) * SEG];
-            let mode = if self.stochastic_accept {
-                acceptance::AcceptMode::Stochastic
-            } else {
-                acceptance::AcceptMode::Threshold(params.lambda)
-            };
-            let (ok, p) = acceptance::accept_draft(mu_d, &mu_t, sigma_eff, xi, mode, rng);
-            probs.push(p);
-            if ok {
-                accepted += 1;
-                committed = j + 1;
-                *x = sample.to_vec();
-            } else {
-                // Reflection-maximal coupling with the *sampling* σ so the
-                // corrected sample is exactly N(μ_t, σ²) (lossless).
-                let result = coupling::reflection_couple(sample, mu_d, &mu_t, sigma, rng);
-                coupled = Some(result.coupled);
-                *x = result.sample;
-                committed = j + 1;
-                break;
+                Stage::Verify => {
+                    let eps = den.target_verify(job.verify_xs(), job.verify_ts(), cond)?;
+                    job.accept(&eps, rng);
+                }
+                Stage::Final => job.finalize(den)?,
+                Stage::Done => break,
             }
         }
-        Ok(RoundRecord {
-            t_start: t,
-            k,
-            accepted,
-            committed,
-            probs,
-            coupled,
-            params: *params,
-        })
+        let (segment, rounds, nfe) = job.into_parts();
+        trace.rounds.extend(rounds);
+        trace.nfe = nfe;
+        trace.wall_secs = start.elapsed().as_secs_f64();
+        Ok(segment)
     }
 }
 

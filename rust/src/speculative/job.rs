@@ -1,0 +1,445 @@
+//! Resumable per-request speculative state machine.
+//!
+//! [`SegmentJob`] decomposes one action-segment generation into explicit
+//! Draft → Verify → Accept stages so a serving engine can hold many jobs
+//! in flight and *fuse their verify stages* into one multi-request target
+//! forward (`Denoiser::target_verify_many`). The single-request driver
+//! ([`crate::speculative::SpecEngine::generate_segment`]) runs the same
+//! state machine to completion one stage at a time, so the two paths are
+//! bit-identical for a fixed per-request RNG stream — batching never
+//! changes results, only wall-clock.
+//!
+//! The job owns preallocated scratch buffers for latents, draft samples,
+//! posterior means, and noise: the accept scan performs **zero heap
+//! allocations per draft** (see `benches/speculative.rs` for the measured
+//! delta vs the per-draft `vec![0.0; SEG]` churn it replaced).
+
+use crate::config::{SpecParams, DIFFUSION_STEPS, DRAFTER_NFE, K_MAX, VERIFY_BATCH};
+use crate::diffusion::{acceptance, coupling, DdpmSchedule};
+use crate::policy::Denoiser;
+use crate::speculative::engine::SEG;
+use crate::speculative::trace::RoundRecord;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Where a job is in its current speculative round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Next action: roll out the drafter for one round.
+    Draft,
+    /// Draft done; waiting for the (possibly fused) verify forward pass.
+    Verify,
+    /// t = 0 reached; needs the final deterministic target step.
+    Final,
+    /// Segment complete; output ready.
+    Done,
+}
+
+/// One in-flight segment generation, resumable stage by stage.
+pub struct SegmentJob<'s> {
+    sched: &'s DdpmSchedule,
+    stochastic_accept: bool,
+    cond: Vec<f32>,
+    /// Current latent x_t.
+    x: Vec<f32>,
+    /// Current diffusion level (counts down to 0).
+    t: usize,
+    stage: Stage,
+
+    // --- per-round state (valid between draft() and accept()) ---
+    /// Drafts rolled out this round.
+    k: usize,
+    /// Diffusion level at the start of the current round.
+    round_t: usize,
+    /// Clamped parameters in force this round.
+    params: SpecParams,
+    /// Noise draws ξ_j, k × SEG (reused across rounds).
+    noise: Vec<f32>,
+    /// Draft *input* states, k × SEG (states[0] = x at round start).
+    states: Vec<f32>,
+    /// Draft samples, k × SEG.
+    samples: Vec<f32>,
+    /// Drafter posterior means μ̂_j, k × SEG.
+    means: Vec<f32>,
+    /// Padded verify inputs (VERIFY_BATCH × SEG) for the fused forward.
+    verify_xs: Vec<f32>,
+    /// Padded verify timesteps (VERIFY_BATCH).
+    verify_ts: Vec<f32>,
+    /// Accept-scan scratch: predicted x̂0.
+    x0_scratch: Vec<f32>,
+    /// Accept-scan scratch: target posterior mean μ_t.
+    mu_scratch: Vec<f32>,
+
+    // --- accumulated outputs ---
+    rounds: Vec<RoundRecord>,
+    nfe: f64,
+    output: Vec<f32>,
+}
+
+impl<'s> SegmentJob<'s> {
+    /// Start a job: draws the initial latent from `rng` (the first draw
+    /// of the per-request stream, exactly as the monolithic loop did).
+    pub fn new(
+        sched: &'s DdpmSchedule,
+        stochastic_accept: bool,
+        cond: Vec<f32>,
+        rng: &mut Rng,
+    ) -> Self {
+        let x = rng.normal_vec(SEG);
+        let t = DIFFUSION_STEPS - 1;
+        Self {
+            sched,
+            stochastic_accept,
+            cond,
+            x,
+            t,
+            stage: if t == 0 { Stage::Final } else { Stage::Draft },
+            k: 0,
+            round_t: t,
+            params: SpecParams::fixed_default(),
+            noise: Vec::with_capacity(K_MAX * SEG),
+            states: Vec::with_capacity(K_MAX * SEG),
+            samples: Vec::with_capacity(K_MAX * SEG),
+            means: Vec::with_capacity(K_MAX * SEG),
+            verify_xs: Vec::with_capacity(VERIFY_BATCH * SEG),
+            verify_ts: Vec::with_capacity(VERIFY_BATCH),
+            x0_scratch: vec![0.0; SEG],
+            mu_scratch: vec![0.0; SEG],
+            rounds: Vec::new(),
+            nfe: 0.0,
+            output: Vec::new(),
+        }
+    }
+
+    /// Current stage.
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    /// Current diffusion level.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Conditioning vector (one per request; the fused verify concatenates
+    /// these across jobs).
+    pub fn cond(&self) -> &[f32] {
+        &self.cond
+    }
+
+    /// Padded verify candidates (valid in [`Stage::Verify`]).
+    pub fn verify_xs(&self) -> &[f32] {
+        &self.verify_xs
+    }
+
+    /// Padded verify timesteps (valid in [`Stage::Verify`]).
+    pub fn verify_ts(&self) -> &[f32] {
+        &self.verify_ts
+    }
+
+    /// NFE consumed so far (drafter steps at 1/8, verify and final target
+    /// forwards at 1 — identical to the paper's per-request accounting
+    /// regardless of how many requests share a fused verify call).
+    pub fn nfe(&self) -> f64 {
+        self.nfe
+    }
+
+    /// Rounds recorded so far.
+    pub fn rounds(&self) -> &[RoundRecord] {
+        &self.rounds
+    }
+
+    /// Stage 1 — draft rollout for one round at the current level.
+    ///
+    /// `params` is clamped here (as the monolithic loop did per round).
+    /// Consumes exactly k×SEG normal draws from `rng`.
+    pub fn draft(&mut self, den: &dyn Denoiser, params: SpecParams, rng: &mut Rng) -> Result<()> {
+        debug_assert_eq!(self.stage, Stage::Draft);
+        let params = params.clamped();
+        let t = self.t;
+        let k = params.stages.k_for_timestep(t).min(t);
+        debug_assert!(k >= 1 && k <= t);
+        self.k = k;
+        self.round_t = t;
+        self.params = params;
+
+        // Noise draws for the round (same draw order as `normal_vec`).
+        self.noise.clear();
+        for _ in 0..k * SEG {
+            self.noise.push(rng.normal());
+        }
+
+        // Rollout: fused artifact when available, else serial drafter
+        // steps written straight into the reused sample/mean buffers.
+        match den.drafter_rollout(k, &self.x, t, &self.cond, &self.noise)? {
+            Some((samples, means)) => {
+                self.samples = samples;
+                self.means = means;
+            }
+            None => {
+                self.samples.clear();
+                self.samples.resize(k * SEG, 0.0);
+                self.means.clear();
+                self.means.resize(k * SEG, 0.0);
+                let sched = self.sched;
+                for j in 0..k {
+                    let tj = t - j;
+                    let eps = {
+                        let cur: &[f32] = if j == 0 {
+                            &self.x
+                        } else {
+                            &self.samples[(j - 1) * SEG..j * SEG]
+                        };
+                        den.drafter_step(cur, tj, &self.cond)?
+                    };
+                    let xi = &self.noise[j * SEG..(j + 1) * SEG];
+                    let (head, tail) = self.samples.split_at_mut(j * SEG);
+                    let cur: &[f32] = if j == 0 { &self.x } else { &head[(j - 1) * SEG..] };
+                    sched.step_into(
+                        tj,
+                        cur,
+                        &eps,
+                        xi,
+                        &mut self.x0_scratch,
+                        &mut tail[..SEG],
+                        &mut self.means[j * SEG..(j + 1) * SEG],
+                    );
+                }
+            }
+        }
+
+        // states[j] = input latent of draft j: x, then samples[0..k-1].
+        self.states.clear();
+        self.states.extend_from_slice(&self.x);
+        self.states.extend_from_slice(&self.samples[..k.saturating_sub(1) * SEG]);
+
+        // Padded verify inputs (pad with the last real state).
+        self.verify_xs.clear();
+        self.verify_ts.clear();
+        for j in 0..VERIFY_BATCH {
+            let jj = j.min(k - 1);
+            self.verify_xs.extend_from_slice(&self.states[jj * SEG..(jj + 1) * SEG]);
+            self.verify_ts.push((t - jj) as f32);
+        }
+
+        self.nfe += k as f64 * DRAFTER_NFE;
+        self.stage = Stage::Verify;
+        Ok(())
+    }
+
+    /// Stage 2+3 — accept scan over the verified drafts.
+    ///
+    /// `eps_t` is this job's slice of the (possibly fused) verify output,
+    /// VERIFY_BATCH × SEG. Commits the accepted prefix, corrects the first
+    /// rejection by reflection-maximal coupling, and advances `t`.
+    pub fn accept(&mut self, eps_t: &[f32], rng: &mut Rng) {
+        debug_assert_eq!(self.stage, Stage::Verify);
+        debug_assert!(eps_t.len() >= self.k * SEG);
+        let (t, k) = (self.round_t, self.k);
+        let sched = self.sched;
+        let mut probs = Vec::with_capacity(k);
+        let mut accepted = 0usize;
+        let mut coupled = None;
+        let mut committed = 0usize;
+        for j in 0..k {
+            let tj = t - j;
+            let state = &self.states[j * SEG..(j + 1) * SEG];
+            let sample = &self.samples[j * SEG..(j + 1) * SEG];
+            let mu_d = &self.means[j * SEG..(j + 1) * SEG];
+            // Target posterior mean at the same state — into scratch, no
+            // per-draft allocation.
+            let eps_j = &eps_t[j * SEG..(j + 1) * SEG];
+            sched.predict_x0(tj, state, eps_j, &mut self.x0_scratch);
+            sched.posterior_mean(tj, state, &self.x0_scratch, &mut self.mu_scratch);
+
+            let sigma = sched.sigmas[tj];
+            let sigma_eff = (sigma * self.params.sigma_scale).max(1e-6);
+            let xi = &self.noise[j * SEG..(j + 1) * SEG];
+            let mode = if self.stochastic_accept {
+                acceptance::AcceptMode::Stochastic
+            } else {
+                acceptance::AcceptMode::Threshold(self.params.lambda)
+            };
+            let (ok, p) = acceptance::accept_draft(mu_d, &self.mu_scratch, sigma_eff, xi, mode, rng);
+            probs.push(p);
+            if ok {
+                accepted += 1;
+                committed = j + 1;
+                self.x.copy_from_slice(sample);
+            } else {
+                // Reflection-maximal coupling with the *sampling* σ so the
+                // corrected sample is exactly N(μ_t, σ²) (lossless).
+                let result = coupling::reflection_couple(sample, mu_d, &self.mu_scratch, sigma, rng);
+                coupled = Some(result.coupled);
+                self.x.copy_from_slice(&result.sample);
+                committed = j + 1;
+                break;
+            }
+        }
+        self.nfe += 1.0; // one (possibly fused) target forward per request
+        self.rounds.push(RoundRecord {
+            t_start: t,
+            k,
+            accepted,
+            committed,
+            probs,
+            coupled,
+            params: self.params,
+        });
+        self.t -= committed;
+        self.stage = if self.t == 0 { Stage::Final } else { Stage::Draft };
+    }
+
+    /// Final deterministic step at t = 0 (σ_0 = 0).
+    pub fn finalize(&mut self, den: &dyn Denoiser) -> Result<()> {
+        debug_assert_eq!(self.stage, Stage::Final);
+        let eps = den.target_step(&self.x, 0, &self.cond)?;
+        self.sched.predict_x0(0, &self.x, &eps, &mut self.x0_scratch);
+        self.sched.posterior_mean(0, &self.x, &self.x0_scratch, &mut self.mu_scratch);
+        self.output.clear();
+        self.output.extend_from_slice(&self.mu_scratch);
+        self.nfe += 1.0;
+        self.stage = Stage::Done;
+        Ok(())
+    }
+
+    /// Consume the job: (segment, rounds, nfe). Valid once [`Stage::Done`].
+    pub fn into_parts(self) -> (Vec<f32>, Vec<RoundRecord>, f64) {
+        debug_assert_eq!(self.stage, Stage::Done);
+        (self.output, self.rounds, self.nfe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OBS_DIM;
+    use crate::policy::mock::MockDenoiser;
+    use crate::speculative::{SegmentTrace, SpecEngine};
+
+    /// Driving the state machine stage-by-stage must equal the engine's
+    /// one-shot driver exactly (same rng stream → same bits, same NFE).
+    #[test]
+    fn state_machine_matches_engine_driver() {
+        let m = MockDenoiser::with_bias(0.15);
+        let cond = Denoiser::encode(&m, &vec![0.3; OBS_DIM]).unwrap();
+        let params = SpecParams::fixed_k(8);
+
+        let engine = SpecEngine::new();
+        let mut rng_a = Rng::seed_from_u64(77);
+        let mut trace = SegmentTrace::default();
+        let seg_a = engine
+            .generate_segment(&m, &cond, |_| params, &mut rng_a, &mut trace)
+            .unwrap();
+
+        let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+        let mut rng_b = Rng::seed_from_u64(77);
+        let mut job = SegmentJob::new(&sched, false, cond.clone(), &mut rng_b);
+        loop {
+            match job.stage() {
+                Stage::Draft => job.draft(&m, params, &mut rng_b).unwrap(),
+                Stage::Verify => {
+                    let eps = m
+                        .target_verify(job.verify_xs(), job.verify_ts(), &cond)
+                        .unwrap();
+                    job.accept(&eps, &mut rng_b);
+                }
+                Stage::Final => job.finalize(&m).unwrap(),
+                Stage::Done => break,
+            }
+        }
+        let (seg_b, rounds, nfe) = job.into_parts();
+        assert_eq!(seg_a, seg_b, "stage-driven and one-shot segments must be bit-identical");
+        assert_eq!(trace.nfe, nfe);
+        assert_eq!(trace.rounds.len(), rounds.len());
+        for (a, b) in trace.rounds.iter().zip(&rounds) {
+            assert_eq!(a.t_start, b.t_start);
+            assert_eq!(a.committed, b.committed);
+            assert_eq!(a.accepted, b.accepted);
+        }
+    }
+
+    /// Interleaving two jobs' stages (as the micro-batching engine does)
+    /// must not change either job's output vs running it alone.
+    #[test]
+    fn interleaved_jobs_match_solo_runs() {
+        let m = MockDenoiser::with_bias(0.1);
+        let cond_a = Denoiser::encode(&m, &vec![0.2; OBS_DIM]).unwrap();
+        let cond_b = Denoiser::encode(&m, &vec![0.6; OBS_DIM]).unwrap();
+        let params = SpecParams::fixed_k(6);
+        let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+
+        let solo = |cond: &[f32], seed: u64| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut job = SegmentJob::new(&sched, false, cond.to_vec(), &mut rng);
+            loop {
+                match job.stage() {
+                    Stage::Draft => job.draft(&m, params, &mut rng).unwrap(),
+                    Stage::Verify => {
+                        let eps =
+                            m.target_verify(job.verify_xs(), job.verify_ts(), cond).unwrap();
+                        job.accept(&eps, &mut rng);
+                    }
+                    Stage::Final => job.finalize(&m).unwrap(),
+                    Stage::Done => break,
+                }
+            }
+            job.into_parts()
+        };
+        let (seg_a_solo, _, nfe_a) = solo(&cond_a, 5);
+        let (seg_b_solo, _, nfe_b) = solo(&cond_b, 9);
+
+        // Interleaved: both jobs advance one stage per "engine iteration",
+        // verifies fused through target_verify_many.
+        let mut rng_a = Rng::seed_from_u64(5);
+        let mut rng_b = Rng::seed_from_u64(9);
+        let mut job_a = SegmentJob::new(&sched, false, cond_a.clone(), &mut rng_a);
+        let mut job_b = SegmentJob::new(&sched, false, cond_b.clone(), &mut rng_b);
+        while job_a.stage() != Stage::Done || job_b.stage() != Stage::Done {
+            if job_a.stage() == Stage::Draft {
+                job_a.draft(&m, params, &mut rng_a).unwrap();
+            }
+            if job_b.stage() == Stage::Draft {
+                job_b.draft(&m, params, &mut rng_b).unwrap();
+            }
+            let a_pending = job_a.stage() == Stage::Verify;
+            let b_pending = job_b.stage() == Stage::Verify;
+            if a_pending || b_pending {
+                let mut xs = Vec::new();
+                let mut ts = Vec::new();
+                let mut conds = Vec::new();
+                if a_pending {
+                    xs.extend_from_slice(job_a.verify_xs());
+                    ts.extend_from_slice(job_a.verify_ts());
+                    conds.extend_from_slice(job_a.cond());
+                }
+                if b_pending {
+                    xs.extend_from_slice(job_b.verify_xs());
+                    ts.extend_from_slice(job_b.verify_ts());
+                    conds.extend_from_slice(job_b.cond());
+                }
+                let eps = m.target_verify_many(&xs, &ts, &conds).unwrap();
+                let mut off = 0;
+                if a_pending {
+                    job_a.accept(&eps[off..off + VERIFY_BATCH * SEG], &mut rng_a);
+                    off += VERIFY_BATCH * SEG;
+                }
+                if b_pending {
+                    job_b.accept(&eps[off..off + VERIFY_BATCH * SEG], &mut rng_b);
+                }
+            }
+            if job_a.stage() == Stage::Final {
+                job_a.finalize(&m).unwrap();
+            }
+            if job_b.stage() == Stage::Final {
+                job_b.finalize(&m).unwrap();
+            }
+        }
+        let (seg_a, _, nfe_a2) = job_a.into_parts();
+        let (seg_b, _, nfe_b2) = job_b.into_parts();
+        assert_eq!(seg_a, seg_a_solo);
+        assert_eq!(seg_b, seg_b_solo);
+        assert_eq!(nfe_a, nfe_a2);
+        assert_eq!(nfe_b, nfe_b2);
+    }
+}

@@ -1,7 +1,14 @@
 //! TS-DP speculative decoding engine (paper §3.2).
+//!
+//! [`job::SegmentJob`] is the resumable Draft → Verify → Accept state
+//! machine; [`engine::SpecEngine`] drives a single job to completion,
+//! while the serving coordinator holds many jobs in flight and fuses
+//! their verify stages across requests.
 
 pub mod engine;
+pub mod job;
 pub mod trace;
 
 pub use engine::SpecEngine;
+pub use job::{SegmentJob, Stage};
 pub use trace::{RoundRecord, SegmentTrace};

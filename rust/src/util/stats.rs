@@ -1,5 +1,7 @@
 //! Online statistics used by the metrics layer and the bench harness.
 
+use crate::util::Rng;
+
 /// Streaming mean / variance / min / max (Welford's algorithm).
 #[derive(Debug, Clone, Default)]
 pub struct OnlineStats {
@@ -83,6 +85,73 @@ impl OnlineStats {
     }
 }
 
+/// Fixed-size uniform reservoir sample (Vitter's Algorithm R) over an
+/// unbounded stream — bounds the metrics layer's memory while keeping
+/// percentile estimates accurate enough for serving dashboards.
+///
+/// Uses its own deterministic [`Rng`] stream so sampling never perturbs
+/// request-path RNG state (reproducibility of served segments is part of
+/// the speculative-decoding contract).
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    /// Empty reservoir holding at most `cap` samples.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "Reservoir capacity must be positive");
+        Self {
+            cap,
+            seen: 0,
+            samples: Vec::with_capacity(cap.min(1024)),
+            rng: Rng::seed_from_u64(0x5eed_5a3b_1e5e_0001),
+        }
+    }
+
+    /// Fold in one observation (O(1), bounded memory).
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Replace a random slot with probability cap/seen.
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total observations offered (≥ retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained sample count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when nothing has been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The retained samples (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Percentile estimate over the retained sample. `q` in [0, 1].
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+}
+
 /// Percentile (linear interpolation) of an unsorted slice. `q` in [0, 1].
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
@@ -139,6 +208,41 @@ mod tests {
         a.merge(&b);
         assert_close(a.mean(), all.mean(), 1e-12);
         assert_close(a.variance(), all.variance(), 1e-12);
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(128);
+        for i in 0..100 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.seen(), 100);
+        assert_close(r.percentile(0.5), 49.5, 1e-9);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_tracks_percentiles() {
+        // Regression: the metrics layer must not grow with request count.
+        let cap = 1024;
+        let n = 50_000u64;
+        let mut r = Reservoir::new(cap);
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), cap, "reservoir must stay at capacity");
+        assert_eq!(r.seen(), n);
+        // Uniform ramp 0..n: p50 ≈ n/2 with sampling error ~ n/(2·√cap);
+        // 10% of n is > 6σ — deterministic seed keeps this stable anyway.
+        let p50 = r.percentile(0.5);
+        assert!(
+            (p50 - n as f64 / 2.0).abs() < 0.1 * n as f64,
+            "p50 {p50} drifted from {}",
+            n / 2
+        );
+        let p95 = r.percentile(0.95);
+        assert!((p95 - 0.95 * n as f64).abs() < 0.1 * n as f64, "p95 {p95}");
+        assert!(r.percentile(0.99) >= p50);
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! Cross-request micro-batching losslessness: serving the same seeds
+//! must produce bit-identical per-session segments and NFE for any
+//! `max_batch` and either dispatch policy — speculative decoding's
+//! losslessness guarantee must survive the serving engine's batching.
+//!
+//! Runs entirely against the analytic `MockDenoiser` (no artifacts).
+
+use std::time::Duration;
+use ts_dp::config::{Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::server::{serve, ServeOptions, ServeReport};
+use ts_dp::policy::mock::MockDenoiser;
+
+fn run(max_batch: usize, policy: Policy, window_us: u64) -> ServeReport {
+    let den = MockDenoiser::with_bias(0.05);
+    let opts = ServeOptions {
+        task: Task::Lift,
+        method: Method::TsDp,
+        sessions: 4,
+        episodes_per_session: 1,
+        queue_capacity: 64,
+        policy,
+        scheduler: None,
+        seed: 1234,
+        max_batch,
+        batch_window: Duration::from_micros(window_us),
+        ..Default::default()
+    };
+    serve(&den, &opts).unwrap()
+}
+
+/// (session id, per-segment digests, total NFE) for every session,
+/// sorted by session id so reports from different runs line up.
+fn fingerprint(report: &ServeReport) -> Vec<(usize, Vec<u64>, f64)> {
+    let mut fp: Vec<_> = report
+        .sessions
+        .iter()
+        .map(|s| (s.session, s.segment_digests.clone(), s.nfe))
+        .collect();
+    fp.sort_by_key(|(s, _, _)| *s);
+    fp
+}
+
+#[test]
+fn batching_is_lossless_across_max_batch_and_policy() {
+    let baseline = fingerprint(&run(1, Policy::Fifo, 200));
+    assert_eq!(baseline.len(), 4);
+    for (_, digests, nfe) in &baseline {
+        assert!(!digests.is_empty(), "every session must serve segments");
+        assert!(*nfe > 0.0);
+    }
+    for policy in [Policy::Fifo, Policy::Fair] {
+        for max_batch in [1usize, 4, 16] {
+            let fp = fingerprint(&run(max_batch, policy, 200));
+            assert_eq!(
+                fp, baseline,
+                "serving must be bit-identical (policy {policy:?}, max_batch {max_batch})"
+            );
+        }
+    }
+}
+
+#[test]
+fn batching_survives_zero_window() {
+    // The straggler window is a latency/occupancy tradeoff only; results
+    // must not depend on it.
+    let baseline = fingerprint(&run(1, Policy::Fifo, 200));
+    let fp = fingerprint(&run(8, Policy::Fair, 0));
+    assert_eq!(fp, baseline);
+}
+
+#[test]
+fn verify_fusion_engages_under_concurrency() {
+    // Acceptance criterion: N >= 4 sessions with max_batch >= 4 must
+    // actually fuse verify stages (mean occupancy > 1.5), while
+    // max_batch = 1 must never fuse.
+    let batched = run(8, Policy::Fair, 500);
+    assert!(batched.metrics.verify_batches > 0);
+    assert!(
+        batched.metrics.mean_verify_occupancy() > 1.5,
+        "mean verify-batch occupancy {} — cross-request fusion not engaging",
+        batched.metrics.mean_verify_occupancy()
+    );
+    assert!(batched.metrics.peak_inflight >= 2);
+
+    let serial = run(1, Policy::Fifo, 200);
+    assert!(serial.metrics.mean_verify_occupancy() <= 1.0 + 1e-9);
+    assert_eq!(serial.metrics.peak_inflight, 1);
+}
+
+#[test]
+fn baseline_methods_ignore_batching_knobs() {
+    // Non-speculative methods run as blocking single-request jobs; the
+    // batching knobs must not change their results either.
+    let den = MockDenoiser::with_bias(0.0);
+    let mk = |max_batch| ServeOptions {
+        task: Task::PushT,
+        method: Method::Vanilla,
+        sessions: 2,
+        seed: 7,
+        max_batch,
+        ..Default::default()
+    };
+    let a = serve(&den, &mk(1)).unwrap();
+    let den2 = MockDenoiser::with_bias(0.0);
+    let b = serve(&den2, &mk(16)).unwrap();
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert_eq!(a.metrics.verify_batches, 0, "vanilla never issues fused verifies");
+}
