@@ -1,28 +1,36 @@
 //! End-to-end serving driver (the repository's E2E validation run, see
-//! EXPERIMENTS.md): load the real trained model, serve micro-batched
-//! action-segment requests from concurrent env sessions across the
-//! Robomimic tasks, and report latency / throughput / success / verify-
-//! batch occupancy — comparing vanilla DP serving against TS-DP serving.
+//! EXPERIMENTS.md): load the real trained model, serve a heterogeneous
+//! mixed-task workload from concurrent env sessions across a sharded
+//! fleet, and report latency / throughput / success / per-shard verify
+//! occupancy — comparing vanilla DP serving against TS-DP serving.
 //!
-//! TS-DP sessions run as resumable jobs whose verify stages fuse across
-//! requests (`max_batch` in-flight jobs per engine wave); served
-//! segments are bit-identical to unbatched serving.
+//! Every shard worker compiles and owns its **own** `ModelRuntime`
+//! replica (PJRT handles are not `Send`), built by the replica factory
+//! passed to `serve`. Sessions are routed once at admission; TS-DP
+//! sessions run as resumable jobs whose verify stages fuse across
+//! requests within a shard. Served segments are bit-identical to
+//! unsharded, unbatched serving.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_robomimic
+//! # first enable the xla dependency in rust/Cargo.toml (see its header)
+//! make artifacts && cargo run --release --features pjrt --example serve_robomimic
 //! ```
+//!
+//! (Without `--features pjrt` the binary builds mock-only and the
+//! replica factory fails with an actionable message at startup.)
 
 use std::time::Duration;
 use ts_dp::config::{DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve, ServeOptions};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::policy::Denoiser;
 use ts_dp::runtime::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
     );
-    let runtime = ModelRuntime::load(&artifacts)?;
     let scheduler = ts_dp::scheduler::SchedulerPolicy::load(
         &artifacts.join("scheduler_policy.json"),
     )
@@ -31,50 +39,71 @@ fn main() -> anyhow::Result<()> {
         println!("(using trained scheduler policy)");
     }
 
-    let tasks = [Task::Lift, Task::Can, Task::Square, Task::Transport];
+    // Heterogeneous workload: four Robomimic tasks served concurrently
+    // in ONE server run, PH and MH styles mixed. The same mix is served
+    // once with every session on vanilla DP and once on TS-DP.
+    let mix_for = |method: Method| -> Vec<SessionSpec> {
+        WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, method), 2)
+            .session(SessionSpec::new(Task::Lift, method).with_style(DemoStyle::Mh))
+            .sessions(SessionSpec::new(Task::Can, method), 2)
+            .sessions(SessionSpec::new(Task::Square, method), 2)
+            .session(SessionSpec::new(Task::Transport, method))
+            .build()
+    };
+
+    const SHARDS: usize = 2;
     for method in [Method::Vanilla, Method::TsDp] {
-        println!("\n=== serving with {} ===", method.label());
-        let mut total_segments = 0u64;
-        let mut total_secs = 0.0f64;
-        for task in tasks {
-            let opts = ServeOptions {
-                task,
-                style: DemoStyle::Ph,
-                method,
-                sessions: 4,
-                episodes_per_session: 1,
-                queue_capacity: 32,
-                policy: Policy::Fair,
-                scheduler: scheduler.clone(),
-                seed: 7,
-                max_batch: 8,
-                batch_window: Duration::from_micros(200),
-            };
-            let t0 = std::time::Instant::now();
-            let report = serve(&runtime, &opts)?;
-            let secs = t0.elapsed().as_secs_f64();
-            total_segments += report.metrics.requests;
-            total_secs += secs;
+        println!("\n=== serving mixed Robomimic fleet with {} ===", method.label());
+        let opts = ServeOptions {
+            workload: mix_for(method),
+            shards: SHARDS,
+            queue_capacity: 32,
+            policy: Policy::Fair,
+            scheduler: scheduler.clone(),
+            seed: 7,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+        };
+        let t0 = std::time::Instant::now();
+        // One runtime replica per shard, compiled on the shard's thread.
+        let report = serve(
+            &|shard| {
+                println!("  shard {shard}: compiling replica from {}", artifacts.display());
+                Ok(Box::new(ModelRuntime::load(&artifacts)?) as Box<dyn Denoiser>)
+            },
+            &opts,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!("fleet: {}", report.metrics.summary());
+        for m in &report.shard_metrics {
+            println!("  {}", m.summary());
+        }
+        for s in &report.sessions {
             println!(
-                "{:<10} sessions=4 segments={:>4} success={:>3.0}% \
-                 p50={:.3}s p95={:.3}s nfe/seg={:.1} accept={:.1}% \
-                 verify-occ={:.2} inflight-peak={} wall={:.1}s",
-                task.name(),
-                report.metrics.requests,
-                report.success_rate() * 100.0,
-                report.metrics.latency_percentile(0.5),
-                report.metrics.latency_percentile(0.95),
-                report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
-                report.metrics.acceptance_rate() * 100.0,
-                report.metrics.mean_verify_occupancy(),
-                report.metrics.peak_inflight,
-                secs,
+                "  session {:>2} [shard {}] {:<10} {:<3} segments={:>3} success={} \
+                 latency={:.3}s nfe/seg={:.1}",
+                s.session,
+                s.shard,
+                s.task.name(),
+                s.style.name(),
+                s.segments,
+                s.successes,
+                s.mean_latency,
+                s.nfe / s.segments.max(1) as f64,
             );
         }
+        // Serving throughput comes from the fleet metrics clock: each
+        // shard's clock arms at its first request, which the readiness
+        // barrier guarantees is after every replica finished compiling
+        // — so compile time is fully excluded. `wall` includes the
+        // compile windows and is reported separately.
         println!(
-            "TOTAL: {:.2} segments/s over {} segments",
-            total_segments as f64 / total_secs,
-            total_segments
+            "{}: success={:.0}% {:.2} segments/s wall={:.1}s (incl. replica compiles)",
+            method.label(),
+            report.success_rate() * 100.0,
+            report.metrics.throughput(),
+            secs
         );
     }
     Ok(())

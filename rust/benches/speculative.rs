@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use ts_dp::baselines::make_generator;
 use ts_dp::config::{DemoStyle, Method, Task, DIFFUSION_STEPS, EXEC_STEPS, OBS_DIM};
 use ts_dp::coordinator::batcher::Policy;
-use ts_dp::coordinator::server::{serve, ServeOptions};
+use ts_dp::coordinator::server::{serve_with, ServeOptions};
 use ts_dp::diffusion::DdpmSchedule;
 use ts_dp::envs::make_env;
 use ts_dp::policy::mock::MockDenoiser;
@@ -74,22 +74,18 @@ fn bench_accept_scan_scratch() {
 /// occupancy well past 1 without changing served bits (the batching
 /// integration tests assert the bit-equality; this reports the rates).
 fn bench_batched_serving() {
-    println!("== micro-batched serving (mock denoiser, 4 sessions) ==");
+    println!("== micro-batched serving (mock denoiser, 4 sessions, 1 shard) ==");
     for max_batch in [1usize, 4, 16] {
-        let den = MockDenoiser::with_bias(0.05);
         let opts = ServeOptions {
-            task: Task::Lift,
-            method: Method::TsDp,
-            sessions: 4,
-            episodes_per_session: 1,
             policy: Policy::Fair,
             seed: 3,
             max_batch,
             batch_window: Duration::from_micros(200),
-            ..Default::default()
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
         };
         let t0 = Instant::now();
-        let report = serve(&den, &opts).expect("serving");
+        let report =
+            serve_with(|_| MockDenoiser::with_bias(0.05), &opts).expect("serving");
         let secs = t0.elapsed().as_secs_f64();
         println!(
             "max_batch={:<3} {:>7.1} seg/s  verify-occ={:.2}  inflight peak={}  \
@@ -105,9 +101,58 @@ fn bench_batched_serving() {
     println!();
 }
 
+/// Fleet probe: a heterogeneous 12-session mixed-task workload served
+/// over 1 / 2 / 4 shards — each shard owns its own mock replica; the
+/// sharding tests assert bit-equality, this reports rate, per-shard
+/// occupancy, and imbalance.
+fn bench_sharded_serving() {
+    use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+    println!("== sharded mixed-task serving (mock denoiser, 12 sessions) ==");
+    let workload = || {
+        WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 4)
+            .sessions(SessionSpec::new(Task::PushT, Method::TsDp), 3)
+            .sessions(SessionSpec::new(Task::Can, Method::TsDp), 3)
+            .session(SessionSpec::new(Task::Lift, Method::Vanilla))
+            .session(SessionSpec::new(Task::PushT, Method::Speca))
+            .build()
+    };
+    for shards in [1usize, 2, 4] {
+        let opts = ServeOptions {
+            workload: workload(),
+            shards,
+            policy: Policy::Fair,
+            seed: 3,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let report =
+            serve_with(|_| MockDenoiser::with_bias(0.05), &opts).expect("serving");
+        let secs = t0.elapsed().as_secs_f64();
+        let occ: Vec<String> = report
+            .shard_metrics
+            .iter()
+            .map(|m| format!("{:.2}", m.mean_verify_occupancy()))
+            .collect();
+        println!(
+            "shards={:<2} {:>7.1} seg/s  imbalance={:.2}  shard-occ=[{}]  p95={:.4}s  wall={:.2}s",
+            shards,
+            report.metrics.requests as f64 / secs,
+            report.metrics.shard_imbalance(),
+            occ.join(" "),
+            report.metrics.latency_percentile(0.95),
+            secs,
+        );
+    }
+    println!();
+}
+
 fn main() {
     bench_accept_scan_scratch();
     bench_batched_serving();
+    bench_sharded_serving();
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -20,7 +20,11 @@ pub struct ServingConfig {
     pub decision_interval: usize,
     /// Engine used for denoising.
     pub method: Method,
-    /// Maximum jobs the engine holds in flight; the verify stages of all
+    /// Shard workers in the serving fleet; each owns its own denoiser
+    /// replica, bounded queue, and job table. 1 = the legacy
+    /// single-engine coordinator.
+    pub shards: usize,
+    /// Maximum jobs each shard holds in flight; the verify stages of all
     /// in-flight jobs fuse into one multi-request target call. 1
     /// disables cross-request micro-batching.
     pub max_batch: usize,
@@ -87,6 +91,7 @@ impl Default for ServingConfig {
             scheduler_policy: Some(PathBuf::from("artifacts/scheduler_policy.json")),
             decision_interval: 4,
             method: Method::TsDp,
+            shards: 1,
             max_batch: 8,
             batch_window_us: 200,
         }
@@ -110,6 +115,7 @@ impl ServingConfig {
             ),
             ("decision_interval", Json::Num(self.decision_interval as f64)),
             ("method", Json::Str(self.method.name().into())),
+            ("shards", Json::Num(self.shards as f64)),
             ("max_batch", Json::Num(self.max_batch as f64)),
             ("batch_window_us", Json::Num(self.batch_window_us as f64)),
         ])
@@ -130,8 +136,13 @@ impl ServingConfig {
             decision_interval: v.get("decision_interval")?.as_usize()?,
             method: Method::parse(v.get("method")?.as_str()?)
                 .ok_or_else(|| JsonError::Access("unknown method".into()))?,
-            // Batching knobs postdate some config files on disk: fall
-            // back to the Default impl instead of failing the load.
+            // Sharding/batching knobs postdate some config files on
+            // disk: fall back to the Default impl instead of failing.
+            shards: v
+                .get_opt("shards")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .unwrap_or(defaults.shards),
             max_batch: v
                 .get_opt("max_batch")
                 .map(|j| j.as_usize())
@@ -182,14 +193,17 @@ mod tests {
 
     #[test]
     fn legacy_json_without_batching_knobs_defaults() {
-        // Config files written before the micro-batching engine lack
-        // max_batch / batch_window_us; loading them must still work.
+        // Config files written before the micro-batching engine / the
+        // sharded fleet lack max_batch / batch_window_us / shards;
+        // loading them must still work.
         let c = ServingConfig::default();
         let legacy = match c.to_json() {
             Json::Obj(pairs) => Json::Obj(
                 pairs
                     .into_iter()
-                    .filter(|(k, _)| k != "max_batch" && k != "batch_window_us")
+                    .filter(|(k, _)| {
+                        k != "max_batch" && k != "batch_window_us" && k != "shards"
+                    })
                     .collect(),
             ),
             _ => unreachable!("to_json returns an object"),
@@ -197,6 +211,15 @@ mod tests {
         let d = ServingConfig::from_json(&legacy).unwrap();
         assert_eq!(d.max_batch, 8, "absent knob must default");
         assert_eq!(d.batch_window_us, 200, "absent knob must default");
+        assert_eq!(d.shards, 1, "absent knob must default");
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn shards_knob_roundtrips() {
+        let c = ServingConfig { shards: 4, ..Default::default() };
+        let d = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(d.shards, 4);
         assert_eq!(c, d);
     }
 

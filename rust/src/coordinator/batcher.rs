@@ -1,13 +1,16 @@
 //! Request admission and batch formation.
 //!
-//! The batcher is the engine's wave former: a bounded admission queue
-//! (capacity enforced upstream by the `sync_channel`) plus a dispatch
-//! policy choosing which session joins the next micro-batch wave. FIFO
-//! serves strictly in arrival order; `Fair` keeps one queue *per
-//! session* and a round-robin cursor, so one chatty session cannot
+//! Each shard worker owns one batcher: a bounded admission queue
+//! (capacity enforced upstream by the shard's `sync_channel`) plus a
+//! dispatch policy choosing which session joins the next micro-batch
+//! wave. FIFO serves strictly in arrival order; `Fair` keeps one queue
+//! *per session* and a round-robin cursor, so one chatty session cannot
 //! starve the rest and dispatch stays O(1) amortized under backlog (the
 //! previous implementation scanned a single `VecDeque` per pop — O(n²)
-//! across a backlog of n).
+//! across a backlog of n). Requests carry their session's
+//! [`crate::coordinator::workload::SessionSpec`], so a heterogeneous
+//! mix of tasks and methods flows through one queue untyped — the
+//! engine picks the generation path per request at admission.
 
 use crate::coordinator::request::SegmentRequest;
 use std::collections::{HashMap, VecDeque};
@@ -141,6 +144,7 @@ mod tests {
         let (tx, _rx) = mpsc::sync_channel(1);
         SegmentRequest {
             session,
+            spec: crate::coordinator::workload::SessionSpec::default(),
             obs: vec![],
             params: None,
             submitted: Instant::now(),

@@ -1,8 +1,11 @@
-//! `ts-dp serve` — run the serving coordinator against the real runtime.
+//! `ts-dp serve` / `ts-dp load-sweep` — drive the sharded serving fleet
+//! against the real runtime.
 
 use crate::config::{DemoStyle, Method, Task};
 use crate::coordinator::batcher::Policy;
 use crate::coordinator::server::{serve, ServeOptions};
+use crate::coordinator::workload::WorkloadMix;
+use crate::policy::Denoiser;
 use crate::runtime::ModelRuntime;
 use crate::scheduler::SchedulerPolicy;
 use crate::util::cli::Args;
@@ -10,9 +13,11 @@ use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 /// Entry point for `ts-dp load-sweep`: open-loop latency-under-load
-/// characterization (results feed EXPERIMENTS.md §Perf).
+/// characterization (results feed EXPERIMENTS.md §Perf). With `--mix`,
+/// replays a heterogeneous arrival stream and reports per-task latency
+/// percentiles alongside the fleet aggregate.
 pub fn cmd_load_sweep(args: &Args) -> Result<()> {
-    use crate::coordinator::workload::{load_sweep, record_observation_pool};
+    use crate::coordinator::workload::{mixed_load_sweep, record_mixed_pools, SessionSpec};
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
     let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
@@ -23,17 +28,50 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|r| r.trim().parse::<f64>().context("bad --rates"))
         .collect::<Result<_>>()?;
+    // Validate the arrival stream before the (potentially multi-second)
+    // model load, so flag mistakes fail fast.
+    let stream: Vec<SessionSpec> = match args.get("mix") {
+        Some(mix) => {
+            for conflicting in ["task", "method"] {
+                anyhow::ensure!(
+                    args.get(conflicting).is_none(),
+                    "--mix already encodes the arrival stream; drop --{conflicting}"
+                );
+            }
+            WorkloadMix::parse(mix)?.build()
+        }
+        None => vec![SessionSpec::new(task, method)],
+    };
     let den = ModelRuntime::load(&artifacts)?;
-    let pool = record_observation_pool(task, DemoStyle::Ph, 32, seed);
+    // One pool-recording path for both spellings: `--task lift` and
+    // `--mix "lift:ts_dp"` must produce identical pools (and therefore
+    // identical curves) for the same --seed.
+    let pools = record_mixed_pools(&stream, 32, seed);
+    let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+        pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
     println!(
         "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
         "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
     );
-    for point in load_sweep(&den, method, &pool, &rates, n, seed)? {
+    for point in mixed_load_sweep(&den, &stream, &pool_refs, &rates, n, seed)? {
+        let f = &point.fleet;
         println!(
             "{:>12.1} {:>12.2} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
-            point.offered_rate, point.goodput, point.p50, point.p95, point.p99, point.nfe
+            f.offered_rate, f.goodput, f.p50, f.p95, f.p99, f.nfe
         );
+        if point.per_task.len() > 1 {
+            for t in &point.per_task {
+                println!(
+                    "  {:<10} requests={:<4} p50={:.4}s p95={:.4}s p99={:.4}s nfe={:.1}",
+                    t.task.name(),
+                    t.requests,
+                    t.p50,
+                    t.p95,
+                    t.p99,
+                    t.nfe
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -48,6 +86,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let episodes = args.get_usize("episodes", 1)?;
     let queue = args.get_usize("queue", 64)?;
     let seed = args.get_u64("seed", 0)?;
+    let shards = args.get_usize("shards", 1)?;
     let max_batch = args.get_usize("max-batch", 8)?;
     let batch_window_us = args.get_u64("batch-window-us", 200)?;
     let policy = match args.get_or("policy", "fair").as_str() {
@@ -66,13 +105,26 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
-    let den = ModelRuntime::load(&artifacts)?;
+    // Workload: heterogeneous `--mix` spec, or the uniform legacy shape
+    // from --task/--style/--method/--sessions/--episodes. The two are
+    // mutually exclusive — rejecting the combination beats silently
+    // ignoring explicitly-passed flags.
+    let workload = match args.get("mix") {
+        Some(mix) => {
+            for conflicting in ["task", "style", "method", "sessions", "episodes"] {
+                anyhow::ensure!(
+                    args.get(conflicting).is_none(),
+                    "--mix already encodes the workload; drop --{conflicting} \
+                     (fold it into the mix entries instead)"
+                );
+            }
+            WorkloadMix::parse(mix)?.build()
+        }
+        None => WorkloadMix::uniform(task, style, method, sessions, episodes).build(),
+    };
     let opts = ServeOptions {
-        task,
-        style,
-        method,
-        sessions,
-        episodes_per_session: episodes,
+        workload,
+        shards,
         queue_capacity: queue,
         policy,
         scheduler,
@@ -80,23 +132,39 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         max_batch,
         batch_window: std::time::Duration::from_micros(batch_window_us),
     };
+    // serve() clamps the shard count to the session count; print the
+    // effective fleet shape, not the raw flag.
     println!(
-        "serving task={} method={} sessions={} episodes/session={} max_batch={}",
-        task.name(),
-        method.name(),
-        sessions,
-        episodes,
+        "serving {} sessions over {} shard(s), max_batch={} (each shard compiles its own replica)",
+        opts.workload.len(),
+        opts.effective_shards(),
         max_batch
     );
-    let report = serve(&den, &opts)?;
-    println!("--- engine ---");
+    // Each shard worker compiles and owns its own runtime replica on its
+    // own thread (PJRT handles are not Send).
+    let report = serve(
+        &|shard| {
+            let rt = ModelRuntime::load(&artifacts)
+                .with_context(|| format!("loading replica for shard {shard}"))?;
+            Ok(Box::new(rt) as Box<dyn Denoiser>)
+        },
+        &opts,
+    )?;
+    println!("--- fleet ---");
     println!("{}", report.metrics.summary());
+    println!("--- shards ---");
+    for m in &report.shard_metrics {
+        println!("{}", m.summary());
+    }
     println!("--- sessions ---");
     for s in &report.sessions {
         println!(
-            "session {}: episodes={} success={}/{} score={:.2} segments={} \
-             latency={:.4}s nfe={:.0}",
+            "session {} [shard {}]: task={} method={} episodes={} success={}/{} \
+             score={:.2} segments={} latency={:.4}s nfe={:.0}",
             s.session,
+            s.shard,
+            s.task.name(),
+            s.method.name(),
             s.episodes,
             s.successes,
             s.episodes,

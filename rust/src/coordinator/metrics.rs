@@ -1,20 +1,34 @@
 //! Server-side metrics: throughput, latency percentiles, NFE, queueing,
-//! and micro-batching health (verify-batch occupancy, in-flight jobs).
+//! micro-batching health (verify-batch occupancy, in-flight jobs), and
+//! fleet aggregation across shards.
+//!
+//! Each shard worker accumulates its own [`ServerMetrics`]; after the
+//! run, [`ServerMetrics::merge_fleet`] folds the per-shard metrics into
+//! one fleet-wide view — cross-shard latency percentiles are merged at
+//! the reservoir level ([`crate::util::stats::Reservoir::merge`]), and
+//! the fleet summary reports per-shard verify occupancy plus a shard
+//! imbalance gauge.
 //!
 //! Latency and queue-delay percentiles come from fixed-size reservoir
 //! samples, so the metrics layer's memory is bounded no matter how many
-//! requests the engine serves.
+//! requests the fleet serves.
 
 use crate::util::stats::{OnlineStats, Reservoir};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Retained latency / queue-delay observations per reservoir.
 const RESERVOIR_CAP: usize = 4096;
 
-/// Metrics accumulated by the engine thread.
-#[derive(Debug)]
+/// Metrics accumulated by one shard worker (or merged fleet-wide).
+#[derive(Debug, Clone)]
 pub struct ServerMetrics {
     started: Instant,
+    /// When serving ended (set by `stop_clock` at shard-loop exit).
+    /// `None` while still serving — `throughput` then measures to now.
+    stopped: Option<Instant>,
+    /// Shard that produced these metrics (`None` for a fleet merge).
+    pub shard: Option<usize>,
     /// Completed segment requests.
     pub requests: u64,
     /// Queue-delay stats (seconds).
@@ -40,6 +54,14 @@ pub struct ServerMetrics {
     pub inflight: OnlineStats,
     /// Peak concurrent in-flight jobs.
     pub peak_inflight: usize,
+    /// Requests served per task name (heterogeneous-workload breakdown).
+    pub task_requests: BTreeMap<&'static str, u64>,
+    /// Requests served per method name.
+    pub method_requests: BTreeMap<&'static str, u64>,
+    /// Per-shard (shard id, requests, mean verify occupancy), populated
+    /// by [`ServerMetrics::merge_fleet`]; empty on a single shard's own
+    /// metrics.
+    pub shard_breakdown: Vec<(usize, u64, f64)>,
 }
 
 impl Default for ServerMetrics {
@@ -53,6 +75,8 @@ impl ServerMetrics {
     pub fn new() -> Self {
         Self {
             started: Instant::now(),
+            stopped: None,
+            shard: None,
             requests: 0,
             queue_delay: OnlineStats::new(),
             compute: OnlineStats::new(),
@@ -65,7 +89,31 @@ impl ServerMetrics {
             verify_occupancy: OnlineStats::new(),
             inflight: OnlineStats::new(),
             peak_inflight: 0,
+            task_requests: BTreeMap::new(),
+            method_requests: BTreeMap::new(),
+            shard_breakdown: Vec::new(),
         }
+    }
+
+    /// Fresh metrics labelled with the owning shard.
+    pub fn for_shard(shard: usize) -> Self {
+        Self { shard: Some(shard), ..Self::new() }
+    }
+
+    /// Restart the throughput clock. The shard worker calls this when
+    /// its first request arrives, so reported throughput measures
+    /// serving time only — neither the (potentially long) replica
+    /// compile window nor the fleet readiness barrier.
+    pub fn restart_clock(&mut self) {
+        self.started = Instant::now();
+    }
+
+    /// Freeze the throughput clock: the shard worker calls this when
+    /// its engine loop exits, so a fast shard's seg/s is measured over
+    /// its own serving window — not until whenever `summary` happens to
+    /// be printed (possibly long after, while slower shards drain).
+    pub fn stop_clock(&mut self) {
+        self.stopped = Some(Instant::now());
     }
 
     /// Record one completed request.
@@ -87,6 +135,13 @@ impl ServerMetrics {
         self.accepted += accepted as u64;
     }
 
+    /// Attribute one completed request to its task and method (the
+    /// heterogeneous-workload breakdown reported by `summary`).
+    pub fn record_spec(&mut self, task: &'static str, method: &'static str) {
+        *self.task_requests.entry(task).or_insert(0) += 1;
+        *self.method_requests.entry(method).or_insert(0) += 1;
+    }
+
     /// Record one fused verify call covering `fused` requests.
     pub fn record_verify_batch(&mut self, fused: usize) {
         self.verify_batches += 1;
@@ -97,6 +152,65 @@ impl ServerMetrics {
     pub fn record_inflight(&mut self, jobs: usize) {
         self.inflight.push(jobs as f64);
         self.peak_inflight = self.peak_inflight.max(jobs);
+    }
+
+    /// Fold per-shard metrics into one fleet-wide view: counters sum,
+    /// online stats merge (parallel Welford), latency/queue percentiles
+    /// merge at the reservoir level, and the per-shard breakdown
+    /// (requests + verify occupancy per shard) is retained for the
+    /// summary line and the imbalance gauge.
+    pub fn merge_fleet(shards: &[ServerMetrics]) -> ServerMetrics {
+        let mut fleet = ServerMetrics::new();
+        if let Some(earliest) = shards.iter().map(|m| m.started).min() {
+            fleet.started = earliest;
+        }
+        // The fleet's serving window closes when the LAST shard stops
+        // (left open if any shard is still serving).
+        if shards.iter().all(|m| m.stopped.is_some()) {
+            fleet.stopped = shards.iter().filter_map(|m| m.stopped).max();
+        }
+        for m in shards {
+            fleet.requests += m.requests;
+            fleet.queue_delay.merge(&m.queue_delay);
+            fleet.compute.merge(&m.compute);
+            fleet.latencies.merge(&m.latencies);
+            fleet.queue_delays.merge(&m.queue_delays);
+            fleet.total_nfe += m.total_nfe;
+            fleet.drafts += m.drafts;
+            fleet.accepted += m.accepted;
+            fleet.verify_batches += m.verify_batches;
+            fleet.verify_occupancy.merge(&m.verify_occupancy);
+            fleet.inflight.merge(&m.inflight);
+            fleet.peak_inflight = fleet.peak_inflight.max(m.peak_inflight);
+            for (task, n) in &m.task_requests {
+                *fleet.task_requests.entry(task).or_insert(0) += n;
+            }
+            for (method, n) in &m.method_requests {
+                *fleet.method_requests.entry(method).or_insert(0) += n;
+            }
+            fleet.shard_breakdown.push((
+                m.shard.unwrap_or(fleet.shard_breakdown.len()),
+                m.requests,
+                m.mean_verify_occupancy(),
+            ));
+        }
+        fleet
+    }
+
+    /// Shard imbalance gauge: max over mean of per-shard request counts
+    /// (1.0 = perfectly balanced; meaningful only on a fleet merge).
+    pub fn shard_imbalance(&self) -> f64 {
+        if self.shard_breakdown.is_empty() {
+            return 1.0;
+        }
+        let max = self.shard_breakdown.iter().map(|&(_, r, _)| r).max().unwrap_or(0) as f64;
+        let mean = self.shard_breakdown.iter().map(|&(_, r, _)| r).sum::<u64>() as f64
+            / self.shard_breakdown.len() as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
     }
 
     /// Mean requests fused per verify call (0 when no verifies ran).
@@ -110,9 +224,11 @@ impl ServerMetrics {
         self.latencies.len()
     }
 
-    /// Segments per second since start.
+    /// Segments per second over the serving window (start of serving
+    /// until `stop_clock`, or until now while still serving).
     pub fn throughput(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
+        let end = self.stopped.unwrap_or_else(Instant::now);
+        let secs = end.saturating_duration_since(self.started).as_secs_f64();
         if secs > 0.0 {
             self.requests as f64 / secs
         } else {
@@ -139,9 +255,11 @@ impl ServerMetrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary. A fleet merge appends the per-shard
+    /// occupancy breakdown, the imbalance gauge, and the distinct
+    /// task/method counts of the heterogeneous workload.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} throughput={:.2} seg/s nfe/seg={:.1} accept={:.1}% \
              latency p50={:.4}s p95={:.4}s p99={:.4}s queue p95={:.4}s \
              verify-occ={:.2} inflight mean={:.1} peak={}",
@@ -156,7 +274,31 @@ impl ServerMetrics {
             self.mean_verify_occupancy(),
             self.inflight.mean(),
             self.peak_inflight,
-        )
+        );
+        if let Some(shard) = self.shard {
+            s = format!("shard={shard} {s}");
+        }
+        if !self.task_requests.is_empty() {
+            s.push_str(&format!(
+                " tasks={} methods={}",
+                self.task_requests.len(),
+                self.method_requests.len()
+            ));
+        }
+        if !self.shard_breakdown.is_empty() {
+            let occ: Vec<String> = self
+                .shard_breakdown
+                .iter()
+                .map(|&(id, _, occ)| format!("{id}:{occ:.2}"))
+                .collect();
+            s.push_str(&format!(
+                " shards={} imbalance={:.2} shard-occ=[{}]",
+                self.shard_breakdown.len(),
+                self.shard_imbalance(),
+                occ.join(" ")
+            ));
+        }
+        s
     }
 }
 
@@ -206,5 +348,47 @@ mod tests {
         assert_eq!(m.peak_inflight, 6);
         assert!((m.inflight.mean() - 11.0 / 3.0).abs() < 1e-12);
         assert!(m.summary().contains("verify-occ"));
+    }
+
+    #[test]
+    fn fleet_merge_sums_and_breaks_down_shards() {
+        let mut a = ServerMetrics::for_shard(0);
+        let mut b = ServerMetrics::for_shard(1);
+        for _ in 0..30 {
+            a.record(0.001, 0.01, 20.0, 8, 7);
+            a.record_spec("lift", "ts_dp");
+        }
+        for _ in 0..10 {
+            b.record(0.002, 0.03, 100.0, 0, 0);
+            b.record_spec("push_t", "vanilla");
+        }
+        a.record_verify_batch(4);
+        a.record_verify_batch(4);
+        b.record_verify_batch(1);
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        assert_eq!(fleet.requests, 40);
+        assert_eq!(fleet.verify_batches, 3);
+        assert!((fleet.total_nfe - (30.0 * 20.0 + 10.0 * 100.0)).abs() < 1e-9);
+        assert_eq!(fleet.task_requests["lift"], 30);
+        assert_eq!(fleet.method_requests["vanilla"], 10);
+        assert_eq!(fleet.shard_breakdown.len(), 2);
+        assert_eq!(fleet.shard_breakdown[0], (0, 30, 4.0));
+        assert_eq!(fleet.shard_breakdown[1].1, 10);
+        // imbalance = max/mean = 30/20.
+        assert!((fleet.shard_imbalance() - 1.5).abs() < 1e-12);
+        let s = fleet.summary();
+        assert!(s.contains("shard-occ=[0:4.00 1:1.00]"), "{s}");
+        assert!(s.contains("imbalance=1.50"), "{s}");
+        assert!(s.contains("tasks=2 methods=2"), "{s}");
+        // Percentiles answer from the merged reservoirs.
+        assert!(fleet.latency_percentile(0.5) > 0.0);
+        assert!(fleet.latency_percentile(0.99) >= fleet.latency_percentile(0.5));
+    }
+
+    #[test]
+    fn shard_label_appears_in_summary() {
+        let m = ServerMetrics::for_shard(3);
+        assert!(m.summary().starts_with("shard=3 "));
+        assert_eq!(ServerMetrics::new().shard, None);
     }
 }

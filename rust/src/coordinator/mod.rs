@@ -1,18 +1,27 @@
-//! L3 serving coordinator.
+//! L3 serving coordinator: a sharded, heterogeneous-workload fleet.
 //!
-//! vLLM-router-style layout adapted to diffusion-policy serving. The
-//! dataflow for one segment request:
+//! vLLM-router-style layout adapted to diffusion-policy serving. Each
+//! session is one controlled robot/env running its own
+//! [`workload::SessionSpec`] (task / demo style / method / episodes);
+//! the fleet serves many heterogeneous sessions over N shard workers,
+//! each owning its own denoiser replica. The dataflow for one segment
+//! request:
 //!
 //! ```text
-//! session driver (worker thread, one per controlled robot/env)
-//!   │  SegmentRequest { obs, params, reply } over a bounded sync_channel
+//! session drivers (one worker thread per controlled robot/env;
+//!   │            heterogeneous specs: kitchen ts_dp, push_t vanilla, …)
+//!   │  routed ONCE at admission: router.rs maps session → shard
+//!   │  (deterministic hash + least-loaded tiebreak)
 //!   ▼
-//! batch former (batcher.rs)
-//!   │  per-session queues + round-robin cursor (Fair) or arrival order
-//!   │  (Fifo); the engine admits up to `max_batch` jobs, lingering
-//!   │  `batch_window` for stragglers when a fresh wave forms
+//! per-shard bounded queues (sync_channel; backpressure per shard)
+//!   │  SegmentRequest { spec, obs, params, reply }
 //!   ▼
-//! engine loop (server.rs, single thread — owns the non-Send runtime)
+//! shard workers 0..N (server.rs; each thread owns a NON-Send denoiser
+//!   │              replica built by the ReplicaFactory on that thread)
+//!   │  batch former (batcher.rs): per-session queues + round-robin
+//!   │  cursor (Fair) or arrival order (Fifo); each shard admits up to
+//!   │  `max_batch` jobs, lingering `batch_window` for stragglers
+//!   │
 //!   │  job table of resumable SegmentJobs (speculative::job):
 //!   │    1. draft   — each job rolls out its round's drafts (k/8 NFE)
 //!   │    2. verify  — ONE fused target_verify_many call covers every
@@ -20,8 +29,13 @@
 //!   │                 request; fusion amortizes dispatch)
 //!   │    3. accept  — each job's MH scan + reflection coupling commits
 //!   │                 its prefix and advances (or finishes)
+//!   │  (baseline-method requests run as blocking single-request
+//!   │   generations at admission — no verify stage to fuse)
 //!   ▼
-//! SegmentReply { actions, nfe, … } back over the per-request channel
+//! SegmentReply { actions, nfe, shard, … } back over the per-request
+//! channel; per-shard ServerMetrics merge into one fleet view
+//! (metrics.rs: reservoir-merged percentiles, per-shard occupancy,
+//! imbalance gauge)
 //! ```
 //!
 //! Scheduler inference (pure Rust, microseconds) runs *inside the
@@ -29,21 +43,30 @@
 //! paper's "scheduler runs in parallel with the encoder, adding no extra
 //! inference latency".
 //!
-//! Losslessness under batching: each session draws from its own seeded
-//! RNG stream and every verify slice is computed independently per
-//! request, so served segments are bit-identical for any `max_batch`
-//! and either dispatch policy (asserted by `tests/serve_batching.rs`).
-//! Baseline methods (vanilla, caching) have no verify stage to fuse and
-//! run as blocking single-request generations at admission.
+//! Losslessness under sharding and batching: each session draws from its
+//! own seeded RNG stream (seeded by session id only — never by
+//! placement) and every verify slice is computed independently per
+//! request, so served segments and NFE are bit-identical for any shard
+//! count, any `max_batch`, and either dispatch policy (asserted by
+//! `tests/serve_batching.rs`). Routing and fusion buy throughput, never
+//! different actions.
+//!
+//! Failure semantics: a shard that fails drains its queue and hangs up
+//! its sessions, so one bad replica fails the whole `serve()` call with
+//! a root-cause error instead of deadlocking; session-driver errors and
+//! panics are propagated the same way.
 
 pub mod batcher;
 pub mod cli;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod server;
 pub mod session;
 pub mod workload;
 
 pub use metrics::ServerMetrics;
 pub use request::{SegmentReply, SegmentRequest};
-pub use server::{serve, ServeOptions, ServeReport};
+pub use router::Router;
+pub use server::{serve, serve_with, ReplicaFactory, ServeOptions, ServeReport};
+pub use workload::{SessionSpec, WorkloadMix};

@@ -1,6 +1,7 @@
-//! Request/response types between session drivers and the engine thread.
+//! Request/response types between session drivers and shard workers.
 
 use crate::config::SpecParams;
+use crate::coordinator::workload::SessionSpec;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -17,12 +18,18 @@ pub struct SegmentReply {
     pub accepted: usize,
     /// Engine compute time (excludes queueing).
     pub compute_secs: f64,
+    /// Shard that served the request.
+    pub shard: usize,
 }
 
 /// An action-segment request submitted by a session driver.
 pub struct SegmentRequest {
     /// Stable session identifier (routing key).
     pub session: usize,
+    /// The session's workload spec (task / style / method / episodes);
+    /// the engine picks the generation path per request from this, so
+    /// one shard serves heterogeneous sessions side by side.
+    pub spec: SessionSpec,
     /// Raw observation (length OBS_DIM).
     pub obs: Vec<f32>,
     /// Scheduler-chosen parameters, if the session runs adaptive TS-DP.
@@ -37,6 +44,7 @@ impl std::fmt::Debug for SegmentRequest {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SegmentRequest")
             .field("session", &self.session)
+            .field("spec", &self.spec)
             .field("obs_len", &self.obs.len())
             .field("params", &self.params)
             .finish()

@@ -1,0 +1,151 @@
+//! Session → shard routing.
+//!
+//! The fleet serves each session from exactly one shard worker (a shard
+//! owns its own denoiser replica, request queue, and job table), so
+//! routing happens once, at session admission. Assignment is
+//! **deterministic**: a session's preferred shard is a hash of its id,
+//! demoted to the least-loaded shard only when the preferred shard is
+//! already strictly busier than the idlest one. Determinism matters for
+//! reproducibility of *placement* (logs, metrics, tests) — results never
+//! depend on it, because per-session RNG streams make served segments
+//! bit-identical for any shard count and any routing policy.
+//!
+//! The hash + least-loaded tiebreak keeps the fleet balanced by
+//! construction: after every assignment, max and min shard load differ
+//! by at most one session.
+
+use crate::util::rng::splitmix64;
+use std::collections::HashMap;
+
+/// Session-id hash: one SplitMix64 step over the id (the same mixer
+/// [`crate::util::Rng::seed_from_u64`] expands seeds with).
+fn session_hash(session: usize) -> u64 {
+    let mut state = session as u64;
+    splitmix64(&mut state)
+}
+
+/// Deterministic session → shard router with admission-time load
+/// balancing.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Sessions assigned per shard.
+    loads: Vec<usize>,
+    /// Session id → shard id, for re-lookup.
+    table: HashMap<usize, usize>,
+}
+
+impl Router {
+    /// Router over `shards` shard workers (clamped to at least one).
+    pub fn new(shards: usize) -> Self {
+        Self { loads: vec![0; shards.max(1)], table: HashMap::new() }
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Assign a session to a shard (idempotent: re-assigning an already
+    /// routed session returns its existing shard without recounting).
+    ///
+    /// Preferred shard = `hash(session) % shards`; if that shard is
+    /// strictly busier than the least-loaded one, the session is demoted
+    /// to the lowest-id shard at minimum load.
+    pub fn assign(&mut self, session: usize) -> usize {
+        if let Some(&shard) = self.table.get(&session) {
+            return shard;
+        }
+        let n = self.loads.len();
+        let preferred = (session_hash(session) % n as u64) as usize;
+        let min_load = *self.loads.iter().min().expect("at least one shard");
+        let shard = if self.loads[preferred] > min_load {
+            self.loads.iter().position(|&l| l == min_load).expect("min exists")
+        } else {
+            preferred
+        };
+        self.loads[shard] += 1;
+        self.table.insert(session, shard);
+        shard
+    }
+
+    /// Shard a session was routed to, if assigned.
+    pub fn shard_of(&self, session: usize) -> Option<usize> {
+        self.table.get(&session).copied()
+    }
+
+    /// Sessions currently assigned to a shard.
+    pub fn load(&self, shard: usize) -> usize {
+        self.loads.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Shard imbalance after admission: max load − min load (≤ 1 by
+    /// construction for any admission order).
+    pub fn imbalance(&self) -> usize {
+        let max = self.loads.iter().max().copied().unwrap_or(0);
+        let min = self.loads.iter().min().copied().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let mut a = Router::new(4);
+        let mut b = Router::new(4);
+        for s in 0..32 {
+            assert_eq!(a.assign(s), b.assign(s), "session {s}");
+        }
+    }
+
+    #[test]
+    fn assignment_is_idempotent() {
+        let mut r = Router::new(3);
+        let first = r.assign(7);
+        assert_eq!(r.assign(7), first);
+        assert_eq!(r.load(first), 1, "re-assignment must not double-count");
+        assert_eq!(r.shard_of(7), Some(first));
+        assert_eq!(r.shard_of(8), None);
+    }
+
+    #[test]
+    fn load_stays_balanced_within_one() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            let mut r = Router::new(shards);
+            for s in 0..53 {
+                r.assign(s);
+                assert!(r.imbalance() <= 1, "{shards} shards after session {s}");
+            }
+            let total: usize = (0..shards).map(|sh| r.load(sh)).sum();
+            assert_eq!(total, 53);
+        }
+    }
+
+    #[test]
+    fn every_shard_gets_sessions_when_enough_arrive() {
+        let mut r = Router::new(4);
+        for s in 0..8 {
+            r.assign(s);
+        }
+        for shard in 0..4 {
+            assert_eq!(r.load(shard), 2, "shard {shard}");
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let mut r = Router::new(0);
+        assert_eq!(r.shards(), 1);
+        assert_eq!(r.assign(0), 0);
+    }
+
+    #[test]
+    fn hash_spreads_preferred_shards() {
+        // Not all sessions may prefer shard 0 — the hash must actually mix.
+        let prefs: std::collections::BTreeSet<u64> =
+            (0..16usize).map(|s| session_hash(s) % 4).collect();
+        assert!(prefs.len() > 1, "session hash collapsed to one shard");
+    }
+}

@@ -1,47 +1,64 @@
-//! The engine loop: owns the (non-`Send`) denoiser and a table of
-//! resumable speculative jobs, serves session requests through the
-//! batch former, fuses verify stages across requests, records metrics.
+//! The sharded serving engine: N shard workers, each owning its own
+//! denoiser replica and job table, behind a deterministic router.
 //!
-//! TS-DP requests run as [`SegmentJob`] state machines: every engine
-//! iteration drafts each job's next round, then issues **one**
-//! multi-request `target_verify_many` call covering every job whose
-//! round is waiting on verification, then resumes each job's accept
-//! scan. Per-session RNG streams are independent, so results are
-//! bit-identical to serving the same requests one at a time
-//! (`max_batch = 1`) — batching changes wall-clock, never actions.
-//! Non-speculative baselines have no verify stage to fuse and run as
-//! blocking single-request generations at admission.
+//! `serve` takes a **replica factory** (`Fn(shard_id) -> Box<dyn
+//! Denoiser>`) rather than a denoiser reference: PJRT handles are not
+//! `Send`, so each shard worker compiles and owns its backend on its own
+//! thread. Sessions are routed once at admission
+//! ([`crate::coordinator::router::Router`]: hash + least-loaded
+//! tiebreak) onto per-shard bounded queues; within a shard, TS-DP
+//! requests run as [`SegmentJob`] state machines whose verify stages
+//! fuse into **one** multi-request `target_verify_many` call per engine
+//! wave. Per-session RNG streams are independent of placement, so
+//! served segments and NFE are bit-identical for any shard count, any
+//! `max_batch`, and either dispatch policy — sharding and batching
+//! change wall-clock, never actions. Non-speculative baselines have no
+//! verify stage to fuse and run as blocking single-request generations
+//! at admission; a shard serves heterogeneous (task, style, method)
+//! sessions side by side.
+//!
+//! Failure semantics: a shard that errors drains its queue and hangs up
+//! its sessions (no deadlock); a session that errors **or panics** is
+//! reported as a failure of the whole `serve` call, with shard-side
+//! errors taking precedence as the root cause.
 
 use crate::baselines::{make_generator, Generator};
-use crate::config::{DemoStyle, Method, SpecParams, Task, EMBED_DIM, VERIFY_BATCH};
+use crate::config::{Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{SegmentReply, SegmentRequest};
+use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
+use crate::coordinator::workload::{SessionSpec, WorkloadMix};
 use crate::policy::Denoiser;
 use crate::scheduler::SchedulerPolicy;
 use crate::speculative::engine::SEG;
 use crate::speculative::{SegmentJob, SegmentTrace, SpecEngine, Stage};
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+/// Replica factory: builds the denoiser a shard worker owns. Called on
+/// the worker's own thread (the replica never crosses threads, so
+/// non-`Send` backends like `ModelRuntime` work); the factory itself is
+/// shared across workers and must be `Sync`.
+pub type ReplicaFactory<'f> = dyn Fn(usize) -> Result<Box<dyn Denoiser>> + Sync + 'f;
+
 /// Serving run options.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Task each session controls.
-    pub task: Task,
-    /// Env style.
-    pub style: DemoStyle,
-    /// Generation method.
-    pub method: Method,
-    /// Concurrent sessions.
-    pub sessions: usize,
-    /// Episodes per session.
-    pub episodes_per_session: usize,
-    /// Bounded queue capacity (backpressure bound).
+    /// Per-session workload specs (task / style / method / episodes);
+    /// one session is driven per entry. Build with
+    /// [`crate::coordinator::workload::WorkloadMix`].
+    pub workload: Vec<SessionSpec>,
+    /// Shard workers (each owns one denoiser replica + job table).
+    /// Clamped at serve time to the session count — a shard with no
+    /// routable sessions would only waste a replica compile and skew
+    /// the imbalance gauge.
+    pub shards: usize,
+    /// Bounded queue capacity per shard (backpressure bound).
     pub queue_capacity: usize,
     /// Dispatch policy.
     pub policy: Policy,
@@ -49,23 +66,27 @@ pub struct ServeOptions {
     pub scheduler: Option<SchedulerPolicy>,
     /// Base seed.
     pub seed: u64,
-    /// Maximum jobs held in flight by the engine (verify stages of all
+    /// Maximum jobs held in flight per shard (verify stages of all
     /// in-flight jobs fuse into one target call). 1 disables
     /// cross-request batching.
     pub max_batch: usize,
-    /// How long the engine lingers for stragglers when forming the
-    /// initial wave of a batch (zero = never wait).
+    /// How long a shard lingers for stragglers when forming the initial
+    /// wave of a batch (zero = never wait).
     pub batch_window: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         Self {
-            task: Task::Lift,
-            style: DemoStyle::Ph,
-            method: Method::TsDp,
-            sessions: 4,
-            episodes_per_session: 1,
+            workload: WorkloadMix::uniform(
+                crate::config::Task::Lift,
+                crate::config::DemoStyle::Ph,
+                Method::TsDp,
+                4,
+                1,
+            )
+            .build(),
+            shards: 1,
             queue_capacity: 64,
             policy: Policy::Fair,
             scheduler: None,
@@ -76,11 +97,38 @@ impl Default for ServeOptions {
     }
 }
 
+impl ServeOptions {
+    /// The shard count `serve` will actually run: the configured value
+    /// clamped to [1, session count] (an idle shard would only waste a
+    /// replica compile and skew the imbalance gauge). The single source
+    /// of truth for the clamp — the CLI banner prints this too.
+    pub fn effective_shards(&self) -> usize {
+        self.shards.max(1).min(self.workload.len().max(1))
+    }
+
+    /// Homogeneous workload shorthand (the legacy single-spec shape).
+    pub fn uniform(
+        task: crate::config::Task,
+        style: crate::config::DemoStyle,
+        method: Method,
+        sessions: usize,
+        episodes: usize,
+    ) -> Self {
+        Self {
+            workload: WorkloadMix::uniform(task, style, method, sessions, episodes).build(),
+            ..Self::default()
+        }
+    }
+}
+
 /// Full serving report.
 #[derive(Debug)]
 pub struct ServeReport {
-    /// Engine-side metrics.
+    /// Fleet-wide metrics (per-shard metrics merged; includes the
+    /// per-shard occupancy breakdown and imbalance gauge).
     pub metrics: ServerMetrics,
+    /// Per-shard metrics, indexed by shard id.
+    pub shard_metrics: Vec<ServerMetrics>,
     /// Per-session reports.
     pub sessions: Vec<SessionReport>,
 }
@@ -100,10 +148,13 @@ impl ServeReport {
     }
 }
 
-/// One in-flight TS-DP request in the engine's job table.
+/// One in-flight TS-DP request in a shard's job table.
 struct ActiveJob<'e> {
     /// Session id (routing key; at most one job per session in flight).
     session: usize,
+    /// The session's workload spec (method is TS-DP by construction;
+    /// task/style label metrics and traces).
+    spec: SessionSpec,
     /// Per-round speculative parameters for this segment.
     params: SpecParams,
     /// The resumable state machine.
@@ -117,253 +168,403 @@ struct ActiveJob<'e> {
     started: Instant,
 }
 
-/// Run the serving loop: spawns session drivers, serves until they all
-/// finish, returns the aggregated report.
-pub fn serve(den: &dyn Denoiser, opts: &ServeOptions) -> Result<ServeReport> {
-    let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
-    let mut metrics = ServerMetrics::new();
-    let mut batcher = Batcher::new(opts.policy);
+/// One shard worker's engine loop: owns the replica, a batcher, and a
+/// job table; runs until every sender to its queue hangs up. On error
+/// the caller drains the queue so blocked sessions observe a hangup.
+fn run_shard(
+    den: &dyn Denoiser,
+    rx: &mpsc::Receiver<SegmentRequest>,
+    batcher: &mut Batcher,
+    metrics: &mut ServerMetrics,
+    shard: usize,
+    assigned_sessions: usize,
+    opts: &ServeOptions,
+) -> Result<()> {
     let max_batch = opts.max_batch.max(1);
     let engine = SpecEngine::new();
 
-    let reports: Vec<SessionReport> = std::thread::scope(|scope| -> Result<Vec<SessionReport>> {
-        let mut handles = Vec::new();
-        for s in 0..opts.sessions {
-            let cfg = SessionConfig {
-                session: s,
-                task: opts.task,
-                style: opts.style,
-                episodes: opts.episodes_per_session,
-                seed: opts.seed ^ ((s as u64 + 1) << 32),
-                adaptive: if opts.method == Method::TsDp { opts.scheduler.clone() } else { None },
-            };
-            let tx = tx.clone();
-            handles.push(scope.spawn(move || run_session(cfg, tx)));
+    // A session submits one request at a time, so a fresh wave can never
+    // collect more requests than this shard has assigned sessions —
+    // don't linger for stragglers that structurally cannot arrive.
+    let wave_target = max_batch.min(assigned_sessions.max(1));
+
+    // Engine state. Per-session RNG streams and (for baselines)
+    // generators persist across that session's requests; seeds depend
+    // only on the session id, never on shard placement — the
+    // losslessness anchor of the sharded refactor.
+    let mut generators: HashMap<usize, Box<dyn Generator>> = HashMap::new();
+    let mut rngs: HashMap<usize, Rng> = HashMap::new();
+    let mut jobs: Vec<ActiveJob<'_>> = Vec::new();
+
+    // Throughput measures serving only: the clock (re)starts when this
+    // shard's first request lands, so neither this shard's replica
+    // compile nor the readiness barrier (waiting on slower shards)
+    // leaks into requests/sec. merge_fleet's earliest-start rule then
+    // yields the moment fleet-wide serving actually began.
+    let mut clock_armed = false;
+
+    let mut open = true;
+    while open || !batcher.is_empty() || !jobs.is_empty() {
+        // --- 1. ingest ------------------------------------------
+        if open && jobs.is_empty() && batcher.is_empty() {
+            match rx.recv() {
+                Ok(req) => batcher.push(req),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
         }
-        drop(tx);
-
-        // Sessions only submit one request at a time, so a fresh wave can
-        // never collect more requests than there are sessions — don't
-        // linger for stragglers that structurally cannot arrive. (Once
-        // sessions start *finishing*, waves with fewer live sessions than
-        // this target still pay the full window once per segment; that
-        // end-game tail is bounded by batch_window and can be zeroed via
-        // the knob.)
-        let wave_target = max_batch.min(opts.sessions.max(1));
-
-        // The engine loop runs in an inner closure so that on error we
-        // still drop every buffered request and in-flight job (and their
-        // reply senders) before joining: blocked sessions then observe a
-        // hangup instead of deadlocking serve() forever.
-        let engine_result = (|| -> Result<()> {
-            // Engine state. Per-session RNG streams and (for baselines)
-            // generators persist across that session's requests.
-            let mut generators: HashMap<usize, Box<dyn Generator>> = HashMap::new();
-            let mut rngs: HashMap<usize, Rng> = HashMap::new();
-            let mut jobs: Vec<ActiveJob<'_>> = Vec::new();
-
-            let mut open = true;
-            while open || !batcher.is_empty() || !jobs.is_empty() {
-                // --- 1. ingest ------------------------------------------
-                if open && jobs.is_empty() && batcher.is_empty() {
-                    match rx.recv() {
+        if open {
+            // Opportunistically drain whatever else is queued.
+            while let Ok(req) = rx.try_recv() {
+                batcher.push(req);
+            }
+            // Wave formation: with no round in flight, linger briefly so
+            // concurrent sessions land in the same first wave. Never
+            // delays jobs already mid-round.
+            if jobs.is_empty() && !opts.batch_window.is_zero() {
+                let deadline = Instant::now() + opts.batch_window;
+                while batcher.len() < wave_target {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
                         Ok(req) => batcher.push(req),
-                        Err(_) => {
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
                             open = false;
-                            continue;
+                            break;
                         }
-                    }
-                }
-                if open {
-                    // Opportunistically drain whatever else is queued.
-                    while let Ok(req) = rx.try_recv() {
-                        batcher.push(req);
-                    }
-                    // Wave formation: with no round in flight, linger
-                    // briefly so concurrent sessions land in the same
-                    // first wave. Never delays jobs already mid-round.
-                    if jobs.is_empty() && !opts.batch_window.is_zero() {
-                        let deadline = Instant::now() + opts.batch_window;
-                        while batcher.len() < wave_target {
-                            let now = Instant::now();
-                            if now >= deadline {
-                                break;
-                            }
-                            match rx.recv_timeout(deadline - now) {
-                                Ok(req) => batcher.push(req),
-                                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                    open = false;
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                }
-
-                // --- 2. admit into the job table ------------------------
-                while jobs.len() < max_batch {
-                    let req = {
-                        let busy: Vec<usize> = jobs.iter().map(|j| j.session).collect();
-                        batcher.pop_next(&|s| busy.contains(&s))
-                    };
-                    let Some(req) = req else { break };
-                    let queue_delay = req.submitted.elapsed().as_secs_f64();
-                    let cond = den.encode(&req.obs)?;
-                    let rng = rngs
-                        .entry(req.session)
-                        .or_insert_with(|| Rng::seed_from_u64(opts.seed ^ req.session as u64));
-                    if opts.method == Method::TsDp {
-                        let params = req.params.unwrap_or_else(SpecParams::fixed_default);
-                        let job = engine.start_job(cond, rng);
-                        jobs.push(ActiveJob {
-                            session: req.session,
-                            params,
-                            job,
-                            reply: req.reply,
-                            queue_delay,
-                            started: Instant::now(),
-                        });
-                    } else {
-                        // Baselines have no resumable rounds: blocking
-                        // single-request generation, exactly as before.
-                        let t0 = Instant::now();
-                        let generator = generators
-                            .entry(req.session)
-                            .or_insert_with(|| make_generator(opts.method));
-                        if let Some(p) = req.params {
-                            generator.set_params(p);
-                        }
-                        let mut trace = SegmentTrace::default();
-                        let actions = generator.generate(den, &cond, rng, &mut trace)?;
-                        let compute = t0.elapsed().as_secs_f64();
-                        metrics.record(
-                            queue_delay,
-                            compute,
-                            trace.nfe,
-                            trace.drafts(),
-                            trace.accepted(),
-                        );
-                        // A hung-up session (env finished mid-flight) is fine.
-                        let _ = req.reply.send(SegmentReply {
-                            actions,
-                            nfe: trace.nfe,
-                            drafts: trace.drafts(),
-                            accepted: trace.accepted(),
-                            compute_secs: compute,
-                        });
-                    }
-                }
-                if !jobs.is_empty() {
-                    metrics.record_inflight(jobs.len());
-                }
-
-                // --- 3. draft every job that needs a new round ----------
-                for aj in jobs.iter_mut() {
-                    if aj.job.stage() == Stage::Draft {
-                        let rng = rngs.get_mut(&aj.session).expect("rng created at admission");
-                        aj.job.draft(den, aj.params, rng)?;
-                    }
-                }
-
-                // --- 4. fuse all pending verify stages into one call ----
-                let pending: Vec<usize> = (0..jobs.len())
-                    .filter(|&i| jobs[i].job.stage() == Stage::Verify)
-                    .collect();
-                if !pending.is_empty() {
-                    metrics.record_verify_batch(pending.len());
-                    let mut xs = Vec::with_capacity(pending.len() * VERIFY_BATCH * SEG);
-                    let mut ts = Vec::with_capacity(pending.len() * VERIFY_BATCH);
-                    let mut conds = Vec::with_capacity(pending.len() * EMBED_DIM);
-                    for &i in &pending {
-                        xs.extend_from_slice(jobs[i].job.verify_xs());
-                        ts.extend_from_slice(jobs[i].job.verify_ts());
-                        conds.extend_from_slice(jobs[i].job.cond());
-                    }
-                    let eps = den.target_verify_many(&xs, &ts, &conds)?;
-                    for (slot, &i) in pending.iter().enumerate() {
-                        let eps_i =
-                            &eps[slot * VERIFY_BATCH * SEG..(slot + 1) * VERIFY_BATCH * SEG];
-                        let rng = rngs.get_mut(&jobs[i].session).expect("rng created at admission");
-                        jobs[i].job.accept(eps_i, rng);
-                    }
-                }
-
-                // --- 5. finalize finished jobs and reply ----------------
-                let mut i = 0;
-                while i < jobs.len() {
-                    if jobs[i].job.stage() == Stage::Final {
-                        jobs[i].job.finalize(den)?;
-                    }
-                    if jobs[i].job.stage() == Stage::Done {
-                        let done = jobs.remove(i);
-                        let compute = done.started.elapsed().as_secs_f64();
-                        let (actions, rounds, nfe) = done.job.into_parts();
-                        let trace = SegmentTrace { rounds, nfe, wall_secs: compute };
-                        metrics.record(
-                            done.queue_delay,
-                            compute,
-                            nfe,
-                            trace.drafts(),
-                            trace.accepted(),
-                        );
-                        // A hung-up session (env finished mid-flight) is fine.
-                        let _ = done.reply.send(SegmentReply {
-                            actions,
-                            nfe,
-                            drafts: trace.drafts(),
-                            accepted: trace.accepted(),
-                            compute_secs: compute,
-                        });
-                    } else {
-                        i += 1;
                     }
                 }
             }
-            Ok(())
-        })();
+        }
 
-        // Engine done (or failed). In-flight jobs were dropped with the
-        // closure; drop buffered requests and the receiver too, so any
-        // session still waiting sees a hangup rather than blocking.
-        while batcher.pop().is_some() {}
-        drop(rx);
+        if !clock_armed && !batcher.is_empty() {
+            metrics.restart_clock();
+            clock_armed = true;
+        }
 
-        let mut reports = Vec::new();
-        let mut session_err = None;
-        for h in handles {
-            match h.join().expect("session thread panicked") {
-                Ok(r) => reports.push(r),
-                Err(e) => session_err = Some(e),
+        // --- 2. admit into the job table ------------------------
+        while jobs.len() < max_batch {
+            let req = {
+                let busy: Vec<usize> = jobs.iter().map(|j| j.session).collect();
+                batcher.pop_next(&|s| busy.contains(&s))
+            };
+            let Some(req) = req else { break };
+            let queue_delay = req.submitted.elapsed().as_secs_f64();
+            let cond = den.encode(&req.obs)?;
+            let rng = rngs
+                .entry(req.session)
+                .or_insert_with(|| Rng::seed_from_u64(opts.seed ^ req.session as u64));
+            if req.spec.method == Method::TsDp {
+                let params = req.params.unwrap_or_else(SpecParams::fixed_default);
+                let mut job = engine.start_job(cond, rng);
+                job.set_shard(shard);
+                jobs.push(ActiveJob {
+                    session: req.session,
+                    spec: req.spec,
+                    params,
+                    job,
+                    reply: req.reply,
+                    queue_delay,
+                    started: Instant::now(),
+                });
+            } else {
+                // Baselines have no resumable rounds: blocking
+                // single-request generation at admission.
+                let t0 = Instant::now();
+                let generator = generators
+                    .entry(req.session)
+                    .or_insert_with(|| make_generator(req.spec.method));
+                if let Some(p) = req.params {
+                    generator.set_params(p);
+                }
+                let mut trace = SegmentTrace { shard, ..SegmentTrace::default() };
+                let actions = generator.generate(den, &cond, rng, &mut trace)?;
+                let compute = t0.elapsed().as_secs_f64();
+                metrics.record(
+                    queue_delay,
+                    compute,
+                    trace.nfe,
+                    trace.drafts(),
+                    trace.accepted(),
+                );
+                metrics.record_spec(req.spec.task.name(), req.spec.method.name());
+                // A hung-up session (env finished mid-flight) is fine.
+                let _ = req.reply.send(SegmentReply {
+                    actions,
+                    nfe: trace.nfe,
+                    drafts: trace.drafts(),
+                    accepted: trace.accepted(),
+                    compute_secs: compute,
+                    shard,
+                });
             }
         }
-        // The engine error is the root cause; session-side errors are
-        // usually its fallout ("engine dropped the reply").
-        engine_result?;
-        if let Some(e) = session_err {
-            return Err(e);
+        if !jobs.is_empty() {
+            metrics.record_inflight(jobs.len());
         }
-        Ok(reports)
-    })?;
 
-    Ok(ServeReport { metrics, sessions: reports })
+        // --- 3. draft every job that needs a new round ----------
+        for aj in jobs.iter_mut() {
+            if aj.job.stage() == Stage::Draft {
+                let rng = rngs.get_mut(&aj.session).expect("rng created at admission");
+                aj.job.draft(den, aj.params, rng)?;
+            }
+        }
+
+        // --- 4. fuse all pending verify stages into one call ----
+        let pending: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].job.stage() == Stage::Verify)
+            .collect();
+        if !pending.is_empty() {
+            metrics.record_verify_batch(pending.len());
+            let mut xs = Vec::with_capacity(pending.len() * VERIFY_BATCH * SEG);
+            let mut ts = Vec::with_capacity(pending.len() * VERIFY_BATCH);
+            let mut conds = Vec::with_capacity(pending.len() * EMBED_DIM);
+            for &i in &pending {
+                xs.extend_from_slice(jobs[i].job.verify_xs());
+                ts.extend_from_slice(jobs[i].job.verify_ts());
+                conds.extend_from_slice(jobs[i].job.cond());
+            }
+            let eps = den.target_verify_many(&xs, &ts, &conds)?;
+            for (slot, &i) in pending.iter().enumerate() {
+                let eps_i = &eps[slot * VERIFY_BATCH * SEG..(slot + 1) * VERIFY_BATCH * SEG];
+                let rng = rngs.get_mut(&jobs[i].session).expect("rng created at admission");
+                jobs[i].job.accept(eps_i, rng);
+            }
+        }
+
+        // --- 5. finalize finished jobs and reply ----------------
+        let mut i = 0;
+        while i < jobs.len() {
+            if jobs[i].job.stage() == Stage::Final {
+                jobs[i].job.finalize(den)?;
+            }
+            if jobs[i].job.stage() == Stage::Done {
+                let done = jobs.remove(i);
+                let compute = done.started.elapsed().as_secs_f64();
+                let job_shard = done.job.shard();
+                let (actions, rounds, nfe) = done.job.into_parts();
+                let trace =
+                    SegmentTrace { rounds, nfe, wall_secs: compute, shard: job_shard };
+                metrics.record(
+                    done.queue_delay,
+                    compute,
+                    nfe,
+                    trace.drafts(),
+                    trace.accepted(),
+                );
+                metrics.record_spec(done.spec.task.name(), done.spec.method.name());
+                // A hung-up session (env finished mid-flight) is fine.
+                // The reply's shard attribution flows job → trace →
+                // reply (the label set at admission).
+                let _ = done.reply.send(SegmentReply {
+                    actions,
+                    nfe,
+                    drafts: trace.drafts(),
+                    accepted: trace.accepted(),
+                    compute_secs: compute,
+                    shard: trace.shard,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Format a `std::thread` join panic payload into an error.
+fn panic_to_error(role: &str, idx: usize, payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic payload>".into());
+    anyhow!("{role} {idx} panicked: {msg}")
+}
+
+/// Run the serving fleet: routes one session per workload spec onto
+/// `opts.shards` shard workers (each owning a replica built by
+/// `make_replica`), serves until every session finishes, and returns the
+/// aggregated report.
+///
+/// Error semantics: the first shard error is the root cause (its
+/// sessions observe a hangup instead of deadlocking); session-driver
+/// errors *and panics* also fail the call instead of being swallowed.
+pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<ServeReport> {
+    anyhow::ensure!(!opts.workload.is_empty(), "serve() needs at least one session spec");
+    // Never run more shards than sessions: with balance-within-one
+    // routing this guarantees every worker hosts at least one session,
+    // so no replica is compiled for a shard that would sit idle.
+    let shards = opts.effective_shards();
+    let mut router = Router::new(shards);
+    let assignments: Vec<usize> =
+        (0..opts.workload.len()).map(|s| router.assign(s)).collect();
+
+    // Per-shard bounded queues (backpressure bound applies per shard).
+    let mut senders = Vec::with_capacity(shards);
+    let mut receivers = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let (shard_metrics, reports) = std::thread::scope(
+        |scope| -> Result<(Vec<ServerMetrics>, Vec<SessionReport>)> {
+            // Readiness barrier: session drivers start only after every
+            // shard's replica attempt has resolved, so queue-delay and
+            // latency percentiles measure serving — never the (possibly
+            // multi-second) replica compile window. Workers signal on
+            // both success and failure; a failed worker has already
+            // dropped its receiver, so its sessions fail fast.
+            let (ready_tx, ready_rx) = mpsc::channel::<()>();
+            let mut workers = Vec::with_capacity(shards);
+            for (shard, rx) in receivers.into_iter().enumerate() {
+                let assigned = router.load(shard);
+                let opts_ref = &*opts;
+                let ready = ready_tx.clone();
+                workers.push(scope.spawn(move || -> (ServerMetrics, Result<()>) {
+                    let mut metrics = ServerMetrics::for_shard(shard);
+                    let mut batcher = Batcher::new(opts_ref.policy);
+                    // Build the replica on this thread (non-`Send`
+                    // backends never cross threads), then run the engine
+                    // loop in an inner closure so that on error we still
+                    // drop every buffered request and in-flight job
+                    // before exiting: blocked sessions then observe a
+                    // hangup instead of deadlocking serve() forever.
+                    let replica = make_replica(shard);
+                    let _ = ready.send(());
+                    // Release the barrier sender NOW: if another worker
+                    // panics before signalling, the main thread must see
+                    // a disconnect, not block on senders parked in
+                    // long-running engine loops.
+                    drop(ready);
+                    let result = replica.and_then(|den| {
+                        run_shard(
+                            den.as_ref(),
+                            &rx,
+                            &mut batcher,
+                            &mut metrics,
+                            shard,
+                            assigned,
+                            opts_ref,
+                        )
+                    });
+                    // Shard done (or failed): freeze the serving window,
+                    // drain buffered requests, and drop the receiver so
+                    // senders see the hangup.
+                    metrics.stop_clock();
+                    while batcher.pop().is_some() {}
+                    drop(rx);
+                    (metrics, result)
+                }));
+            }
+            drop(ready_tx);
+            // Wait for all shards (a worker that panicked inside the
+            // factory drops its sender, surfacing as a recv error —
+            // don't block forever on it).
+            for _ in 0..shards {
+                if ready_rx.recv().is_err() {
+                    break;
+                }
+            }
+
+            let mut session_handles = Vec::with_capacity(opts.workload.len());
+            for (s, spec) in opts.workload.iter().enumerate() {
+                let cfg = SessionConfig {
+                    session: s,
+                    spec: *spec,
+                    shard: assignments[s],
+                    seed: opts.seed ^ ((s as u64 + 1) << 32),
+                    adaptive: if spec.method == Method::TsDp {
+                        opts.scheduler.clone()
+                    } else {
+                        None
+                    },
+                };
+                let tx = senders[assignments[s]].clone();
+                session_handles.push(scope.spawn(move || run_session(cfg, tx)));
+            }
+            // The session drivers hold clones; once they finish, each
+            // shard's queue disconnects and its worker drains out.
+            drop(senders);
+
+            let mut reports = Vec::new();
+            let mut session_err: Option<anyhow::Error> = None;
+            for (s, h) in session_handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(r)) => reports.push(r),
+                    Ok(Err(e)) => session_err = Some(e),
+                    Err(payload) => session_err = Some(panic_to_error("session", s, payload)),
+                }
+            }
+
+            let mut shard_metrics = Vec::with_capacity(shards);
+            let mut shard_err: Option<anyhow::Error> = None;
+            for (shard, h) in workers.into_iter().enumerate() {
+                match h.join() {
+                    Ok((metrics, result)) => {
+                        shard_metrics.push(metrics);
+                        if let Err(e) = result {
+                            if shard_err.is_none() {
+                                shard_err = Some(e);
+                            }
+                        }
+                    }
+                    Err(payload) => {
+                        if shard_err.is_none() {
+                            shard_err = Some(panic_to_error("shard", shard, payload));
+                        }
+                    }
+                }
+            }
+
+            // A shard error is the root cause; session-side errors are
+            // usually its fallout ("shard dropped the reply").
+            if let Some(e) = shard_err {
+                return Err(e);
+            }
+            if let Some(e) = session_err {
+                return Err(e);
+            }
+            Ok((shard_metrics, reports))
+        },
+    )?;
+
+    let metrics = ServerMetrics::merge_fleet(&shard_metrics);
+    Ok(ServeReport { metrics, shard_metrics, sessions: reports })
+}
+
+/// Convenience wrapper over [`serve`] for infallible factories: builds
+/// one concrete replica per shard from `make(shard_id)`.
+pub fn serve_with<F, D>(make: F, opts: &ServeOptions) -> Result<ServeReport>
+where
+    F: Fn(usize) -> D + Sync,
+    D: Denoiser + 'static,
+{
+    serve(&|shard| Ok(Box::new(make(shard)) as Box<dyn Denoiser>), opts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{DemoStyle, Task};
     use crate::policy::mock::MockDenoiser;
+
+    fn mock_factory(bias: f32) -> impl Fn(usize) -> MockDenoiser + Sync {
+        move |_| MockDenoiser::with_bias(bias)
+    }
 
     #[test]
     fn serves_multiple_sessions_to_completion() {
-        let den = MockDenoiser::with_bias(0.05);
-        let opts = ServeOptions {
-            sessions: 3,
-            episodes_per_session: 1,
-            task: Task::Lift,
-            ..Default::default()
-        };
-        let report = serve(&den, &opts).unwrap();
+        let opts = ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 3, 1);
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert_eq!(report.sessions.len(), 3);
         assert!(report.metrics.requests > 10);
         let session_segments: usize = report.sessions.iter().map(|s| s.segments).sum();
@@ -374,23 +575,16 @@ mod tests {
         for s in &report.sessions {
             assert!(s.mean_latency > 0.0);
             assert!(s.nfe > 0.0);
+            assert_eq!(s.shard, 0, "one shard by default");
         }
     }
 
     #[test]
     fn vanilla_serving_works_and_costs_more_nfe() {
-        let den = MockDenoiser::with_bias(0.0);
-        let spec = serve(
-            &den,
-            &ServeOptions { sessions: 2, method: Method::TsDp, ..Default::default() },
-        )
-        .unwrap();
-        let den2 = MockDenoiser::with_bias(0.0);
-        let vanilla = serve(
-            &den2,
-            &ServeOptions { sessions: 2, method: Method::Vanilla, ..Default::default() },
-        )
-        .unwrap();
+        let spec_opts = ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1);
+        let spec = serve_with(mock_factory(0.0), &spec_opts).unwrap();
+        let van_opts = ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::Vanilla, 2, 1);
+        let vanilla = serve_with(mock_factory(0.0), &van_opts).unwrap();
         let nfe_per = |r: &ServeReport| r.metrics.total_nfe / r.metrics.requests as f64;
         assert!((nfe_per(&vanilla) - 100.0).abs() < 1e-9);
         assert!(nfe_per(&spec) < 40.0, "{}", nfe_per(&spec));
@@ -398,45 +592,37 @@ mod tests {
 
     #[test]
     fn tiny_queue_capacity_still_completes() {
-        // Backpressure: capacity-1 queue with 4 sessions must not
-        // deadlock — senders block until the engine drains.
-        let den = MockDenoiser::with_bias(0.05);
+        // Backpressure: capacity-1 queues with 4 sessions must not
+        // deadlock — senders block until the shard drains.
         let opts = ServeOptions {
-            sessions: 4,
             queue_capacity: 1,
-            task: Task::Lift,
-            ..Default::default()
+            shards: 2,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
         };
-        let report = serve(&den, &opts).unwrap();
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert_eq!(report.sessions.len(), 4);
         assert!(report.metrics.requests > 0);
     }
 
     #[test]
     fn fifo_policy_also_serves() {
-        let den = MockDenoiser::with_bias(0.05);
         let opts = ServeOptions {
-            sessions: 2,
             policy: Policy::Fifo,
-            task: Task::PushT,
-            ..Default::default()
+            ..ServeOptions::uniform(Task::PushT, DemoStyle::Ph, Method::TsDp, 2, 1)
         };
-        let report = serve(&den, &opts).unwrap();
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert!(report.metrics.requests > 0);
     }
 
     #[test]
     fn adaptive_sessions_pass_params_through() {
-        let den = MockDenoiser::with_bias(0.05);
         let mut rng = Rng::seed_from_u64(0);
         let policy = SchedulerPolicy::init(&mut rng);
         let opts = ServeOptions {
-            sessions: 2,
             scheduler: Some(policy),
-            task: Task::PushT,
-            ..Default::default()
+            ..ServeOptions::uniform(Task::PushT, DemoStyle::Ph, Method::TsDp, 2, 1)
         };
-        let report = serve(&den, &opts).unwrap();
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert!(report.metrics.requests > 0);
     }
 
@@ -444,9 +630,11 @@ mod tests {
     fn single_slot_engine_matches_legacy_serial_serving() {
         // max_batch = 1 degenerates to the old one-request-at-a-time
         // loop; it must still complete and never fuse verifies.
-        let den = MockDenoiser::with_bias(0.05);
-        let opts = ServeOptions { sessions: 3, max_batch: 1, ..Default::default() };
-        let report = serve(&den, &opts).unwrap();
+        let opts = ServeOptions {
+            max_batch: 1,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 3, 1)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert!(report.metrics.requests > 0);
         assert!(report.metrics.mean_verify_occupancy() <= 1.0 + 1e-9);
         assert_eq!(report.metrics.peak_inflight, 1);
@@ -454,9 +642,11 @@ mod tests {
 
     #[test]
     fn batched_engine_fuses_verifies_across_sessions() {
-        let den = MockDenoiser::with_bias(0.05);
-        let opts = ServeOptions { sessions: 4, max_batch: 8, ..Default::default() };
-        let report = serve(&den, &opts).unwrap();
+        let opts = ServeOptions {
+            max_batch: 8,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert!(report.metrics.verify_batches > 0);
         assert!(
             report.metrics.mean_verify_occupancy() > 1.5,
@@ -464,5 +654,90 @@ mod tests {
             report.metrics.mean_verify_occupancy()
         );
         assert!(report.metrics.peak_inflight >= 2);
+    }
+
+    #[test]
+    fn sharded_fleet_reports_per_shard_metrics() {
+        let opts = ServeOptions {
+            shards: 2,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
+        assert_eq!(report.shard_metrics.len(), 2);
+        for (i, m) in report.shard_metrics.iter().enumerate() {
+            assert_eq!(m.shard, Some(i));
+            assert!(m.requests > 0, "shard {i} served nothing");
+        }
+        assert_eq!(
+            report.metrics.requests,
+            report.shard_metrics.iter().map(|m| m.requests).sum::<u64>()
+        );
+        assert_eq!(report.metrics.shard_breakdown.len(), 2);
+        // Router balance: 2 sessions per shard.
+        let mut by_shard = [0usize; 2];
+        for s in &report.sessions {
+            by_shard[s.shard] += 1;
+        }
+        assert_eq!(by_shard, [2, 2]);
+    }
+
+    #[test]
+    fn failing_replica_factory_fails_serve_without_deadlock() {
+        let opts = ServeOptions {
+            shards: 2,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
+        };
+        // Shard 1's replica fails to build; its sessions must observe a
+        // hangup and serve() must return the root-cause error promptly.
+        let factory: &ReplicaFactory<'_> = &|shard| {
+            if shard == 1 {
+                anyhow::bail!("replica compile failed on shard 1")
+            }
+            Ok(Box::new(MockDenoiser::with_bias(0.05)) as Box<dyn Denoiser>)
+        };
+        let err = serve(factory, &opts).unwrap_err();
+        assert!(err.to_string().contains("replica compile failed"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_panic_is_reported_as_error_not_abort() {
+        // A panic on a serving thread must surface as an error from
+        // serve(), not escape through join().expect() and abort the
+        // whole process (the pre-sharding coordinator did the latter for
+        // session-driver panics; sessions and shard workers now share
+        // the same panic_to_error join handling).
+        let opts = ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1);
+        struct PanickingDenoiser;
+        impl Denoiser for PanickingDenoiser {
+            fn encode(&self, _obs: &[f32]) -> Result<Vec<f32>> {
+                panic!("boom in shard worker")
+            }
+            fn target_step(&self, _: &[f32], _: usize, _: &[f32]) -> Result<Vec<f32>> {
+                unreachable!()
+            }
+            fn target_verify(&self, _: &[f32], _: &[f32], _: &[f32]) -> Result<Vec<f32>> {
+                unreachable!()
+            }
+            fn drafter_step(&self, _: &[f32], _: usize, _: &[f32]) -> Result<Vec<f32>> {
+                unreachable!()
+            }
+            fn drafter_rollout(
+                &self,
+                _: usize,
+                _: &[f32],
+                _: usize,
+                _: &[f32],
+                _: &[f32],
+            ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+                unreachable!()
+            }
+            fn nfe(&self) -> &crate::runtime::NfeCounter {
+                unreachable!()
+            }
+        }
+        let panicking: &ReplicaFactory<'_> =
+            &|_| Ok(Box::new(PanickingDenoiser) as Box<dyn Denoiser>);
+        let err = serve(panicking, &opts).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
     }
 }

@@ -1,8 +1,10 @@
 //! Session driver: one controlled environment, running on a worker
-//! thread, talking to the engine over channels.
+//! thread, talking to its assigned shard worker over channels.
 
-use crate::config::{DemoStyle, SpecParams, Task, ACT_DIM, EXEC_STEPS, HORIZON};
+use crate::config::{SpecParams, ACT_DIM, EXEC_STEPS, HORIZON};
+use crate::config::{Method, Task};
 use crate::coordinator::request::{SegmentReply, SegmentRequest};
+use crate::coordinator::workload::SessionSpec;
 use crate::envs::make_env;
 use crate::harness::episode::{DecisionHook, SegmentOutcome};
 use crate::scheduler::features::{features, FeatureState};
@@ -18,6 +20,12 @@ pub struct SessionReport {
     pub session: usize,
     /// Task served.
     pub task: Task,
+    /// Demo style of the environment.
+    pub style: crate::config::DemoStyle,
+    /// Generation method that served this session.
+    pub method: Method,
+    /// Shard the session was routed to.
+    pub shard: usize,
     /// Episodes run.
     pub episodes: usize,
     /// Successful episodes.
@@ -32,8 +40,8 @@ pub struct SessionReport {
     pub nfe: f64,
     /// FNV-1a digest of each served segment's action bits, in order.
     /// Serving the same seeds must yield the same digests regardless of
-    /// engine batching (`max_batch`) or dispatch policy — the
-    /// losslessness contract the batching tests assert.
+    /// shard count, engine batching (`max_batch`), or dispatch policy —
+    /// the losslessness contract the sharding tests assert.
     pub segment_digests: Vec<u64>,
 }
 
@@ -54,12 +62,11 @@ fn fnv1a_f32(xs: &[f32]) -> u64 {
 pub struct SessionConfig {
     /// Session id (routing key).
     pub session: usize,
-    /// Task to control.
-    pub task: Task,
-    /// Env style.
-    pub style: DemoStyle,
-    /// Episodes to run before exiting.
-    pub episodes: usize,
+    /// Workload spec: task / style / method / episodes.
+    pub spec: SessionSpec,
+    /// Shard the router assigned this session to (reporting only; the
+    /// channel the driver holds already leads to that shard).
+    pub shard: usize,
     /// Base seed.
     pub seed: u64,
     /// Scheduler hook (None = fixed parameters server-side).
@@ -72,12 +79,15 @@ pub fn run_session(
     cfg: SessionConfig,
     tx: mpsc::SyncSender<SegmentRequest>,
 ) -> Result<SessionReport> {
-    let mut env = make_env(cfg.task, cfg.style);
+    let mut env = make_env(cfg.spec.task, cfg.spec.style);
     let mut hook = cfg.adaptive.map(crate::scheduler::ServingHook::new);
     let mut report = SessionReport {
         session: cfg.session,
-        task: cfg.task,
-        episodes: cfg.episodes,
+        task: cfg.spec.task,
+        style: cfg.spec.style,
+        method: cfg.spec.method,
+        shard: cfg.shard,
+        episodes: cfg.spec.episodes,
         successes: 0,
         mean_score: 0.0,
         segments: 0,
@@ -86,14 +96,14 @@ pub fn run_session(
         segment_digests: Vec::new(),
     };
     let mut latency_sum = 0.0;
-    for ep in 0..cfg.episodes {
+    for ep in 0..cfg.spec.episodes {
         let mut rng = Rng::seed_from_u64(cfg.seed ^ ((ep as u64 + 1) << 16));
         env.reset(&mut rng);
         let mut feat_state = FeatureState::default();
         while !env.done() {
             let obs = env.observe();
             // Scheduler decision happens session-side (pure Rust) while
-            // the request waits in the engine queue.
+            // the request waits in the shard queue.
             let params: Option<SpecParams> = hook.as_mut().map(|h| {
                 let phase_frac = env.phase() as f32 / env.num_phases().max(1) as f32;
                 let feat = features(&obs, env.progress(), phase_frac, &feat_state);
@@ -103,14 +113,18 @@ pub fn run_session(
             let submitted = Instant::now();
             tx.send(SegmentRequest {
                 session: cfg.session,
+                spec: cfg.spec,
                 obs,
                 params,
                 submitted,
                 reply: reply_tx,
             })
             .ok()
-            .context("engine closed the request channel")?;
-            let reply = reply_rx.recv().context("engine dropped the reply")?;
+            .context("shard closed the request channel")?;
+            let reply = reply_rx.recv().context("shard dropped the reply")?;
+            // Placement sanity: the reply must come from the shard the
+            // router assigned this session to at admission.
+            debug_assert_eq!(reply.shard, cfg.shard, "cross-shard reply");
             let latency = submitted.elapsed().as_secs_f64();
             latency_sum += latency;
             report.segments += 1;
@@ -150,13 +164,13 @@ pub fn run_session(
                     done: env.done(),
                     success: env.success(),
                     score: env.score(),
-                    task: cfg.task,
+                    task: cfg.spec.task,
                     t_max: env.max_steps(),
                 });
             }
         }
         report.successes += env.success() as usize;
-        report.mean_score += env.score() as f64 / cfg.episodes as f64;
+        report.mean_score += env.score() as f64 / cfg.spec.episodes as f64;
     }
     report.mean_latency = latency_sum / report.segments.max(1) as f64;
     Ok(report)

@@ -1,12 +1,18 @@
-//! Open-loop workload generation: latency-under-load measurement for the
-//! serving coordinator.
+//! Serving workloads: per-session specs, heterogeneous workload mixes,
+//! and open-loop latency-under-load measurement.
 //!
-//! The closed-loop sessions in [`crate::coordinator::session`] measure
-//! end-to-end task behaviour; this module instead replays an *open-loop*
-//! request process (Poisson or uniform arrivals of pre-recorded
-//! observations) against the engine, which is how serving systems
-//! (vLLM-style) characterize saturation: offered load vs p50/p95/p99
-//! latency and goodput.
+//! Two complementary load models live here:
+//!
+//! * **Closed-loop** workloads are described by a [`SessionSpec`] per
+//!   session (task / demo style / method / episodes) assembled through
+//!   the [`WorkloadMix`] builder and served by
+//!   [`crate::coordinator::server::serve`] — many heterogeneous control
+//!   streams sharing the shard fleet.
+//! * **Open-loop** replay ([`run_load_point`] / [`run_mixed_load_point`])
+//!   drives a Poisson or uniform arrival process of pre-recorded
+//!   observations against one denoiser replica, which is how serving
+//!   systems (vLLM-style) characterize saturation: offered load vs
+//!   p50/p95/p99 latency and goodput — fleet-wide and per task.
 
 use crate::baselines::{make_generator, Generator};
 use crate::config::{DemoStyle, Method, Task, OBS_DIM};
@@ -14,8 +20,190 @@ use crate::policy::Denoiser;
 use crate::speculative::SegmentTrace;
 use crate::util::stats::percentile;
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// What one serving session runs: its environment, demonstration style,
+/// generation method, and how many episodes it drives.
+///
+/// The serving engine treats every request independently, so a single
+/// server run can mix arbitrary specs — kitchen TS-DP sessions next to
+/// push-T vanilla sessions — without any cross-talk: per-session RNG
+/// streams keep served segments bit-identical no matter what else shares
+/// the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionSpec {
+    /// Task the session controls.
+    pub task: Task,
+    /// Demonstration style of the environment.
+    pub style: DemoStyle,
+    /// Action-generation method serving this session.
+    pub method: Method,
+    /// Episodes the session runs before exiting.
+    pub episodes: usize,
+}
+
+impl SessionSpec {
+    /// Spec with the given task and method (PH style, one episode).
+    pub fn new(task: Task, method: Method) -> Self {
+        Self { task, style: DemoStyle::Ph, method, episodes: 1 }
+    }
+
+    /// Builder: set the demo style.
+    pub fn with_style(mut self, style: DemoStyle) -> Self {
+        self.style = style;
+        self
+    }
+
+    /// Builder: set the episode count.
+    pub fn with_episodes(mut self, episodes: usize) -> Self {
+        self.episodes = episodes.max(1);
+        self
+    }
+}
+
+impl Default for SessionSpec {
+    fn default() -> Self {
+        Self::new(Task::Lift, Method::TsDp)
+    }
+}
+
+/// Builder for heterogeneous closed-loop workloads (one [`SessionSpec`]
+/// per session).
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadMix {
+    specs: Vec<SessionSpec>,
+}
+
+impl WorkloadMix {
+    /// Empty mix.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one session.
+    pub fn session(mut self, spec: SessionSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Append `n` identical sessions.
+    pub fn sessions(mut self, spec: SessionSpec, n: usize) -> Self {
+        self.specs.extend(std::iter::repeat(spec).take(n));
+        self
+    }
+
+    /// Homogeneous mix: `sessions` identical sessions (the legacy
+    /// single-`(task, style, method)` serving shape).
+    pub fn uniform(
+        task: Task,
+        style: DemoStyle,
+        method: Method,
+        sessions: usize,
+        episodes: usize,
+    ) -> Self {
+        Self::new().sessions(
+            SessionSpec::new(task, method).with_style(style).with_episodes(episodes),
+            sessions,
+        )
+    }
+
+    /// One session per benchmark environment (all eight tasks, given
+    /// style), all running `method`.
+    pub fn all_tasks(style: DemoStyle, method: Method, episodes: usize) -> Self {
+        Task::ALL.iter().fold(Self::new(), |mix, &task| {
+            mix.session(SessionSpec::new(task, method).with_style(style).with_episodes(episodes))
+        })
+    }
+
+    /// One session per generation method (all five), on a fixed task.
+    pub fn all_methods(task: Task, style: DemoStyle, episodes: usize) -> Self {
+        Method::ALL.iter().fold(Self::new(), |mix, &method| {
+            mix.session(SessionSpec::new(task, method).with_style(style).with_episodes(episodes))
+        })
+    }
+
+    /// Full coverage in one server run: the paper's ten evaluation
+    /// environments (all eight kinematic tasks in PH style plus the
+    /// Lift/Can MH variants), with the five generation methods cycled
+    /// across the sessions so every baseline serves alongside TS-DP.
+    pub fn full_fleet(episodes: usize) -> Self {
+        let mut envs: Vec<(Task, DemoStyle)> =
+            Task::ALL.iter().map(|&t| (t, DemoStyle::Ph)).collect();
+        envs.push((Task::Lift, DemoStyle::Mh));
+        envs.push((Task::Can, DemoStyle::Mh));
+        envs.iter().enumerate().fold(Self::new(), |mix, (i, &(task, style))| {
+            let method = Method::ALL[i % Method::ALL.len()];
+            mix.session(SessionSpec::new(task, method).with_style(style).with_episodes(episodes))
+        })
+    }
+
+    /// Parse a mix string: comma-separated sessions of the form
+    /// `task[:method[:style[:episodes]]]`, each optionally suffixed
+    /// `*N` to repeat it N times. Defaults: `ts_dp`, `ph`, 1 episode.
+    ///
+    /// Example: `lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut mix = Self::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (spec_str, reps) = match entry.split_once('*') {
+                Some((head, n)) => {
+                    (head, n.trim().parse::<usize>().context("bad session repeat count")?)
+                }
+                None => (entry, 1),
+            };
+            let mut parts = spec_str.split(':');
+            let task = parts
+                .next()
+                .and_then(Task::parse)
+                .with_context(|| format!("unknown task in mix entry '{entry}'"))?;
+            let mut spec = SessionSpec::new(task, Method::TsDp);
+            if let Some(m) = parts.next() {
+                spec.method = Method::parse(m)
+                    .with_context(|| format!("unknown method in mix entry '{entry}'"))?;
+            }
+            if let Some(st) = parts.next() {
+                spec.style = DemoStyle::parse(st)
+                    .with_context(|| format!("unknown style in mix entry '{entry}'"))?;
+            }
+            if let Some(e) = parts.next() {
+                spec.episodes =
+                    e.parse::<usize>().context("bad episode count in mix entry")?.max(1);
+            }
+            if parts.next().is_some() {
+                bail!("too many ':' fields in mix entry '{entry}'");
+            }
+            if reps == 0 {
+                bail!("session repeat count must be positive in '{entry}'");
+            }
+            mix = mix.sessions(spec, reps);
+        }
+        if mix.specs.is_empty() {
+            bail!("workload mix '{s}' contains no sessions");
+        }
+        Ok(mix)
+    }
+
+    /// Number of sessions in the mix.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when no sessions were added.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Finish: the per-session spec list consumed by `ServeOptions`.
+    pub fn build(self) -> Vec<SessionSpec> {
+        self.specs
+    }
+}
 
 /// Arrival process shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,6 +229,33 @@ pub struct LoadPoint {
     pub p99: f64,
     /// Mean NFE per request.
     pub nfe: f64,
+}
+
+/// Per-task slice of a mixed-workload load point.
+#[derive(Debug, Clone)]
+pub struct TaskLoadPoint {
+    /// Task this slice aggregates.
+    pub task: Task,
+    /// Requests served for this task.
+    pub requests: usize,
+    /// p50 latency (seconds).
+    pub p50: f64,
+    /// p95 latency.
+    pub p95: f64,
+    /// p99 latency.
+    pub p99: f64,
+    /// Mean NFE per request of this task.
+    pub nfe: f64,
+}
+
+/// Latency-under-load for a heterogeneous arrival stream: the fleet
+/// aggregate plus per-task percentile slices.
+#[derive(Debug, Clone)]
+pub struct MixedLoadPoint {
+    /// Fleet-wide aggregate.
+    pub fleet: LoadPoint,
+    /// Per-task slices, in `Task::ALL` (task-index) order.
+    pub per_task: Vec<TaskLoadPoint>,
 }
 
 /// Pre-record a pool of observations by rolling the scripted expert (so
@@ -72,12 +287,42 @@ pub fn run_load_point(
     n_requests: usize,
     seed: u64,
 ) -> Result<LoadPoint> {
-    assert!(!pool.is_empty());
+    // The spec's task is a placeholder label (the caller's pool already
+    // fixes the conditioning distribution, and only the task-agnostic
+    // fleet aggregate is returned); it keys the single generator, which
+    // depends on the method alone here.
+    let spec = SessionSpec::new(Task::Lift, method);
+    let point = run_mixed_load_point(den, &[spec], &[(spec, pool)], arrivals, n_requests, seed)?;
+    Ok(point.fleet)
+}
+
+/// Replay a *mixed* request stream: arrival `i` draws its task/method
+/// from `stream[i % stream.len()]`, so every task and method in the mix
+/// shares one server and contends for the same service capacity.
+/// `pools` maps each distinct spec to its pre-recorded observation pool.
+///
+/// Returns the fleet aggregate plus per-task latency percentile slices —
+/// the open-loop analogue of the closed-loop fleet's per-shard metrics.
+pub fn run_mixed_load_point(
+    den: &dyn Denoiser,
+    stream: &[SessionSpec],
+    pools: &[(SessionSpec, &[Vec<f32>])],
+    arrivals: Arrivals,
+    n_requests: usize,
+    seed: u64,
+) -> Result<MixedLoadPoint> {
+    assert!(!stream.is_empty(), "mixed stream needs at least one spec");
+    for (spec, pool) in pools {
+        assert!(!pool.is_empty(), "empty observation pool for {:?}", spec.task);
+    }
     let rate = match arrivals {
         Arrivals::Poisson(r) | Arrivals::Uniform(r) => r,
     };
     let mut rng = Rng::seed_from_u64(seed);
-    let mut generator: Box<dyn Generator> = make_generator(method);
+    // One generator per distinct (task, method) pair so the caching
+    // baselines keep independent per-stream state, as they would serving
+    // distinct sessions.
+    let mut generators: BTreeMap<(usize, &'static str), Box<dyn Generator>> = BTreeMap::new();
 
     // Build the arrival timeline (seconds from start).
     let mut arrival_times = Vec::with_capacity(n_requests);
@@ -99,28 +344,95 @@ pub fn run_load_point(
     let mut server_free_at = 0.0f64;
     let mut latencies = Vec::with_capacity(n_requests);
     let mut total_nfe = 0.0;
+    let mut by_task: BTreeMap<usize, (Task, Vec<f64>, f64)> = BTreeMap::new();
+    // Per-(task, style) observation cursor: every request of a given
+    // env walks its pool in order, so repeated specs in the stream
+    // (the `*N` mix syntax) still draw distinct, phase-diverse
+    // conditioning instead of byte-identical back-to-back requests.
+    let mut obs_cursor: BTreeMap<(usize, &'static str), usize> = BTreeMap::new();
     for (i, arrive) in arrival_times.iter().enumerate() {
-        let obs = &pool[i % pool.len()];
+        let spec = stream[i % stream.len()];
+        let pool = pools
+            .iter()
+            .find(|(s, _)| s.task == spec.task && s.style == spec.style)
+            .with_context(|| format!("no observation pool for spec {spec:?}"))?
+            .1;
+        let cursor = obs_cursor.entry((spec.task.index(), spec.style.name())).or_insert(0);
+        let obs = &pool[*cursor % pool.len()];
+        *cursor += 1;
         debug_assert_eq!(obs.len(), OBS_DIM);
         let start_service = server_free_at.max(*arrive);
         let s0 = Instant::now();
         let cond = den.encode(obs)?;
+        let generator = generators
+            .entry((spec.task.index(), spec.method.name()))
+            .or_insert_with(|| make_generator(spec.method));
         let mut trace = SegmentTrace::default();
         generator.generate(den, &cond, &mut rng, &mut trace)?;
         let service = s0.elapsed().as_secs_f64();
         server_free_at = start_service + service;
-        latencies.push(server_free_at - arrive);
+        let latency = server_free_at - arrive;
+        latencies.push(latency);
         total_nfe += trace.nfe;
+        let slot = by_task
+            .entry(spec.task.index())
+            .or_insert_with(|| (spec.task, Vec::new(), 0.0));
+        slot.1.push(latency);
+        slot.2 += trace.nfe;
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
-    Ok(LoadPoint {
+    let fleet = LoadPoint {
         offered_rate: rate,
         goodput: (n_requests as f64) / wall.max(*arrival_times.last().unwrap()),
         p50: percentile(&latencies, 0.5),
         p95: percentile(&latencies, 0.95),
         p99: percentile(&latencies, 0.99),
         nfe: total_nfe / n_requests as f64,
-    })
+    };
+    let per_task = by_task
+        .into_values()
+        .map(|(task, lats, nfe)| TaskLoadPoint {
+            task,
+            requests: lats.len(),
+            p50: percentile(&lats, 0.5),
+            p95: percentile(&lats, 0.95),
+            p99: percentile(&lats, 0.99),
+            nfe: nfe / lats.len() as f64,
+        })
+        .collect();
+    Ok(MixedLoadPoint { fleet, per_task })
+}
+
+/// Record one observation pool per distinct (task, style) in the
+/// stream (specs differing only in method/episodes share a pool — the
+/// conditioning distribution depends on the env alone).
+pub fn record_mixed_pools(
+    stream: &[SessionSpec],
+    per_spec: usize,
+    seed: u64,
+) -> Vec<(SessionSpec, Vec<Vec<f32>>)> {
+    let mut pools: Vec<(SessionSpec, Vec<Vec<f32>>)> = Vec::new();
+    for &spec in stream {
+        if pools.iter().any(|(s, _)| s.task == spec.task && s.style == spec.style) {
+            continue;
+        }
+        // Distinct deterministic seed per (task, style) — required so a
+        // mixed stream doesn't hand every env the same draw sequence.
+        // The zero offsets of the first task (Lift) in PH style make
+        // its pool seed equal the raw `seed`, so the DEFAULT
+        // (`--task lift`) sweep stays bit-comparable with pre-mixed
+        // recordings; other tasks' pools intentionally diverge from the
+        // old raw-seed path in exchange for per-env independence.
+        let pool_seed = seed
+            ^ ((spec.task.index() as u64) << 24)
+            ^ (match spec.style {
+                DemoStyle::Ph => 0,
+                DemoStyle::Mh => 1 << 40,
+            });
+        let pool = record_observation_pool(spec.task, spec.style, per_spec, pool_seed);
+        pools.push((spec, pool));
+    }
+    pools
 }
 
 /// Sweep offered load and return the latency curve.
@@ -135,6 +447,23 @@ pub fn load_sweep(
     rates
         .iter()
         .map(|r| run_load_point(den, method, pool, Arrivals::Poisson(*r), n_requests, seed))
+        .collect()
+}
+
+/// Sweep offered load for a heterogeneous arrival stream.
+pub fn mixed_load_sweep(
+    den: &dyn Denoiser,
+    stream: &[SessionSpec],
+    pools: &[(SessionSpec, &[Vec<f32>])],
+    rates: &[f64],
+    n_requests: usize,
+    seed: u64,
+) -> Result<Vec<MixedLoadPoint>> {
+    rates
+        .iter()
+        .map(|r| {
+            run_mixed_load_point(den, stream, pools, Arrivals::Poisson(*r), n_requests, seed)
+        })
         .collect()
 }
 
@@ -172,5 +501,69 @@ mod tests {
             .unwrap();
         assert!((p.nfe - 100.0).abs() < 1e-9);
         assert!(p.p50 >= 0.0);
+    }
+
+    #[test]
+    fn mixed_stream_reports_per_task_slices() {
+        let den = MockDenoiser::with_bias(0.05);
+        let stream = [
+            SessionSpec::new(Task::Lift, Method::TsDp),
+            SessionSpec::new(Task::PushT, Method::Vanilla),
+            SessionSpec::new(Task::Kitchen, Method::TsDp),
+        ];
+        let pools = record_mixed_pools(&stream, 8, 5);
+        assert_eq!(pools.len(), 3);
+        let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+            pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+        let p = run_mixed_load_point(&den, &stream, &pool_refs, Arrivals::Uniform(1e6), 12, 6)
+            .unwrap();
+        assert_eq!(p.per_task.len(), 3, "one slice per distinct task");
+        let total: usize = p.per_task.iter().map(|t| t.requests).sum();
+        assert_eq!(total, 12);
+        for slice in &p.per_task {
+            assert_eq!(slice.requests, 4, "round-robin arrival mixing");
+            assert!(slice.nfe > 0.0);
+            assert!(slice.p99 >= slice.p50);
+        }
+        // Vanilla push_t must cost 100 NFE even inside a mixed stream.
+        let push_t = p.per_task.iter().find(|t| t.task == Task::PushT).unwrap();
+        assert!((push_t.nfe - 100.0).abs() < 1e-9, "nfe {}", push_t.nfe);
+    }
+
+    #[test]
+    fn workload_mix_builders_cover_envs_and_methods() {
+        assert_eq!(WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1).len(), 4);
+        assert_eq!(WorkloadMix::all_tasks(DemoStyle::Ph, Method::TsDp, 1).len(), Task::ALL.len());
+        assert_eq!(
+            WorkloadMix::all_methods(Task::Lift, DemoStyle::Ph, 1).len(),
+            Method::ALL.len()
+        );
+        let fleet = WorkloadMix::full_fleet(1).build();
+        assert_eq!(fleet.len(), 10, "ten evaluation environments");
+        let tasks: std::collections::BTreeSet<_> =
+            fleet.iter().map(|s| s.task.index()).collect();
+        assert_eq!(tasks.len(), Task::ALL.len(), "every task appears");
+        let methods: std::collections::BTreeSet<_> =
+            fleet.iter().map(|s| s.method.name()).collect();
+        assert_eq!(methods.len(), Method::ALL.len(), "every method appears");
+        assert!(fleet.iter().any(|s| s.style == DemoStyle::Mh), "MH variants present");
+    }
+
+    #[test]
+    fn mix_string_parses_with_defaults_and_repeats() {
+        let mix = WorkloadMix::parse("lift:ts_dp*4, push_t:vanilla, kitchen:ts_dp:mh:2").unwrap();
+        let specs = mix.build();
+        assert_eq!(specs.len(), 6);
+        assert!(specs[..4].iter().all(|s| s.task == Task::Lift && s.method == Method::TsDp));
+        assert_eq!(specs[4].method, Method::Vanilla);
+        assert_eq!(specs[5].style, DemoStyle::Mh);
+        assert_eq!(specs[5].episodes, 2);
+        // Bare task defaults to ts_dp / ph / 1 episode.
+        let simple = WorkloadMix::parse("square").unwrap().build();
+        assert_eq!(simple[0], SessionSpec::new(Task::Square, Method::TsDp));
+        assert!(WorkloadMix::parse("bogus_task").is_err());
+        assert!(WorkloadMix::parse("lift:bogus_method").is_err());
+        assert!(WorkloadMix::parse("").is_err());
+        assert!(WorkloadMix::parse("lift*0").is_err());
     }
 }

@@ -51,11 +51,20 @@ USAGE: ts-dp <command> [options]
 COMMANDS:
   gen-demos        --out DIR [--episodes N] [--seed S]
   serve            --task T --style ph|mh [--method M] [--sessions N] [--episodes N]
-  load-sweep       --task T [--method M] [--rates 1,5,20] [--requests N]
+                   | --mix \"lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2\"
+                   [--shards N] [--policy fair|fifo] [--max-batch N]
+                   [--batch-window-us U] [--queue N] [--adaptive]
+  load-sweep       --task T [--method M] | --mix SPEC
+                   [--rates 1,5,20] [--requests N]
   episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
   train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
   table            --id 1|2|3|4|5|s1|s2|s3 [--episodes N] [--out FILE]
   figure           --id 3|4|5|6 [--out-dir DIR]
+
+Workload mixes (--mix): comma-separated task[:method[:style[:episodes]]]
+entries, '*N' repeats a session; mutually exclusive with
+--task/--style/--method/--sessions/--episodes. --shards N serves the
+mix over N engine shards, each owning its own model replica.
 
 Common options:
   --artifacts DIR  artifact directory (default: artifacts)

@@ -2,10 +2,18 @@
 //! diffusion policy.
 //!
 //! The production implementation is [`crate::runtime::ModelRuntime`]
-//! (PJRT executables); tests and the PPO scheduler's training loop can
-//! also run against [`mock::MockDenoiser`], an analytic target/drafter
-//! pair with a controllable disagreement — so every algorithmic property
-//! of the engine is testable without artifacts.
+//! (PJRT executables, behind the `pjrt` feature); tests and the PPO
+//! scheduler's training loop can also run against
+//! [`mock::MockDenoiser`], an analytic target/drafter pair with a
+//! controllable disagreement — so every algorithmic property of the
+//! engine is testable without artifacts.
+//!
+//! Denoisers are deliberately **not** required to be `Send` (PJRT
+//! handles are raw C pointers). The sharded serving fleet therefore
+//! never moves a denoiser across threads: each shard worker builds its
+//! own replica on its own thread through a
+//! [`crate::coordinator::server::ReplicaFactory`] and owns it for the
+//! lifetime of the run.
 
 pub mod mock;
 

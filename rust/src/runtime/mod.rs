@@ -4,8 +4,18 @@
 //! module compiles each module once on the PJRT CPU client
 //! (`xla::PjRtClient`) and exposes typed call wrappers with built-in NFE
 //! accounting. Python never appears past this point.
+//!
+//! The PJRT bindings (external `xla` crate) sit behind the default-off
+//! `pjrt` cargo feature: without it the crate builds **mock-only** —
+//! `executable` is replaced by a stub whose `ModelRuntime::load` fails
+//! with an actionable message, and everything algorithmic runs against
+//! `crate::policy::mock::MockDenoiser`.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
+pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod executable;
 pub mod nfe;
 

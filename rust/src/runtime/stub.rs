@@ -1,0 +1,87 @@
+//! Mock-only stand-in for the PJRT runtime (`pjrt` feature disabled).
+//!
+//! The crate builds without the external `xla` PJRT bindings by
+//! default; every algorithmic property is testable against
+//! [`crate::policy::mock::MockDenoiser`]. This stub keeps the
+//! `ModelRuntime` surface (same method signatures as
+//! `runtime::executable`) so CLI entry points, examples, and benches
+//! compile unchanged — loading simply fails with an actionable message
+//! instead of executing artifacts. Enable the `pjrt` feature (and the
+//! `xla` dependency, see `Cargo.toml`) for real artifact execution.
+
+use crate::config::{ACT_DIM, HORIZON};
+use crate::runtime::{Manifest, NfeCounter};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Flattened segment size (HORIZON × ACT_DIM).
+pub const SEG: usize = HORIZON * ACT_DIM;
+
+const DISABLED: &str =
+    "built without the `pjrt` feature: artifact execution is unavailable \
+     (rebuild with `--features pjrt` and the `xla` dependency enabled in \
+     rust/Cargo.toml, or use the mock-backed paths)";
+
+/// Feature-gated placeholder for the PJRT runtime. Never instantiable:
+/// [`ModelRuntime::load`] always fails under this build configuration.
+pub struct ModelRuntime {
+    /// NFE accounting (paper's evaluation metric).
+    pub nfe: NfeCounter,
+    /// The validated manifest this runtime was loaded from.
+    pub manifest: Manifest,
+}
+
+impl ModelRuntime {
+    /// Always fails: artifact execution needs the `pjrt` feature.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn encode(&self, _obs: &[f32]) -> Result<Vec<f32>> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn target_step(&self, _x: &[f32], _t: usize, _cond: &[f32]) -> Result<Vec<f32>> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn target_verify(&self, _xs: &[f32], _ts: &[f32], _cond: &[f32]) -> Result<Vec<f32>> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn drafter_step(&self, _x: &[f32], _t: usize, _cond: &[f32]) -> Result<Vec<f32>> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn drafter_rollout(
+        &self,
+        _k: usize,
+        _x: &[f32],
+        _t0: usize,
+        _cond: &[f32],
+        _noise: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!(DISABLED)
+    }
+
+    /// Unreachable (no instance can exist); kept for API parity.
+    pub fn rollout_ks(&self) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = ModelRuntime::load(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+    }
+}

@@ -104,10 +104,12 @@ impl SpecEngine {
                 Stage::Done => break,
             }
         }
+        let shard = job.shard();
         let (segment, rounds, nfe) = job.into_parts();
         trace.rounds.extend(rounds);
         trace.nfe = nfe;
         trace.wall_secs = start.elapsed().as_secs_f64();
+        trace.shard = shard;
         Ok(segment)
     }
 }

@@ -39,6 +39,9 @@ pub enum Stage {
 pub struct SegmentJob<'s> {
     sched: &'s DdpmSchedule,
     stochastic_accept: bool,
+    /// Shard worker driving this job (trace plumbing; 0 outside the
+    /// sharded coordinator).
+    shard: usize,
     cond: Vec<f32>,
     /// Current latent x_t.
     x: Vec<f32>,
@@ -90,6 +93,7 @@ impl<'s> SegmentJob<'s> {
         Self {
             sched,
             stochastic_accept,
+            shard: 0,
             cond,
             x,
             t,
@@ -114,6 +118,17 @@ impl<'s> SegmentJob<'s> {
     /// Current stage.
     pub fn stage(&self) -> Stage {
         self.stage
+    }
+
+    /// Label the job with the shard worker that owns it (recorded into
+    /// the segment trace; never affects generation).
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    /// Shard worker driving this job.
+    pub fn shard(&self) -> usize {
+        self.shard
     }
 
     /// Current diffusion level.

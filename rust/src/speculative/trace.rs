@@ -37,6 +37,9 @@ pub struct SegmentTrace {
     pub nfe: f64,
     /// Wall-clock seconds for this segment.
     pub wall_secs: f64,
+    /// Shard that served the segment (0 outside the sharded coordinator;
+    /// placement is observability only — served bits never depend on it).
+    pub shard: usize,
 }
 
 impl SegmentTrace {

@@ -7,6 +7,18 @@
 //! in the paper are reported with fixed seeds, and reproducibility of the
 //! accept/reject coin flips is part of the speculative-decoding contract.
 
+/// One SplitMix64 step: advance `state` by the golden-ratio increment
+/// and return a well-mixed 64-bit output. Shared by
+/// [`Rng::seed_from_u64`] (seed expansion) and the serving router's
+/// session→shard hash — one mixer, one set of constants.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
 /// Seedable PCG-family RNG handle.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -21,13 +33,7 @@ impl Rng {
     /// Create from a 64-bit seed (SplitMix64-expanded into state/stream).
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = seed;
-        let mut next = || {
-            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-            z ^ (z >> 31)
-        };
+        let mut next = || splitmix64(&mut sm);
         let state = ((next() as u128) << 64) | next() as u128;
         let inc = (((next() as u128) << 64) | next() as u128) | 1;
         let mut rng = Self { state, inc, cached_normal: None };

@@ -115,12 +115,19 @@ impl Reservoir {
     /// Fold in one observation (O(1), bounded memory).
     pub fn push(&mut self, x: f64) {
         self.seen += 1;
-        if self.samples.len() < self.cap {
+        if self.samples.len() < self.cap && self.samples.len() as u64 == self.seen - 1 {
+            // Exact prefix: the sample still IS the stream.
             self.samples.push(x);
         } else {
-            // Replace a random slot with probability cap/seen.
+            // Replace a random slot with probability len/seen (equals
+            // the classic cap/seen while full). Gating on the retained
+            // count rather than the capacity keeps the weighting honest
+            // after a thinning `merge`, where len may sit below cap
+            // while each retained sample stands for seen/len
+            // observations — appending unconditionally there would
+            // over-weight post-merge arrivals.
             let j = (self.rng.next_u64() % self.seen) as usize;
-            if j < self.cap {
+            if j < self.samples.len() {
                 self.samples[j] = x;
             }
         }
@@ -150,6 +157,57 @@ impl Reservoir {
     pub fn percentile(&self, q: f64) -> f64 {
         percentile(&self.samples, q)
     }
+
+    /// Merge another reservoir into this one (cross-shard percentile
+    /// aggregation). Each side's retained set is already a uniform
+    /// sample of its stream, so taking from each side **in proportion
+    /// to its `seen` count** yields a uniform-ish sample of the union;
+    /// the merged size is the largest n (≤ this reservoir's capacity)
+    /// for which both sides can cover their seen-weighted share, so an
+    /// overflowed side is never over-represented relative to a side
+    /// that retained its whole stream. Deterministic: subsampling draws
+    /// from this reservoir's own RNG stream.
+    pub fn merge(&mut self, other: &Reservoir) {
+        if other.seen == 0 {
+            return;
+        }
+        if self.seen == 0 {
+            // Adopt the other stream's sample, but never exceed OUR
+            // configured capacity (the destination's memory bound).
+            self.samples = subsample(&other.samples, self.cap, &mut self.rng);
+            self.seen = other.seen;
+            return;
+        }
+        let total = (self.seen + other.seen) as u128;
+        // Largest merged size each side can serve at its seen-weight.
+        let feas_self =
+            (self.samples.len() as u128 * total / self.seen as u128).min(u64::MAX as u128);
+        let feas_other =
+            (other.samples.len() as u128 * total / other.seen as u128).min(u64::MAX as u128);
+        let n = (self.cap as u128).min(feas_self).min(feas_other) as usize;
+        let n_self =
+            (((n as u128 * self.seen as u128) / total) as usize).min(self.samples.len());
+        let n_other = (n - n_self).min(other.samples.len());
+        let mut merged = subsample(&self.samples, n_self, &mut self.rng);
+        merged.extend(subsample(&other.samples, n_other, &mut self.rng));
+        self.samples = merged;
+        self.seen += other.seen;
+    }
+}
+
+/// Uniform subsample of `n` elements via partial Fisher–Yates.
+fn subsample(xs: &[f64], n: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = n.min(xs.len());
+    if n == xs.len() {
+        return xs.to_vec();
+    }
+    let mut pool: Vec<f64> = xs.to_vec();
+    for i in 0..n {
+        let j = i + (rng.next_u64() as usize) % (pool.len() - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(n);
+    pool
 }
 
 /// Percentile (linear interpolation) of an unsorted slice. `q` in [0, 1].
@@ -243,6 +301,80 @@ mod tests {
         let p95 = r.percentile(0.95);
         assert!((p95 - 0.95 * n as f64).abs() < 0.1 * n as f64, "p95 {p95}");
         assert!(r.percentile(0.99) >= p50);
+    }
+
+    #[test]
+    fn reservoir_merge_tracks_union_percentiles() {
+        // Two disjoint uniform ramps; the merged reservoir must estimate
+        // percentiles of the union, weighted by each stream's size.
+        let mut a = Reservoir::new(512);
+        let mut b = Reservoir::new(512);
+        for i in 0..4000 {
+            a.push(i as f64); // [0, 4000)
+        }
+        for i in 0..4000 {
+            b.push(4000.0 + i as f64); // [4000, 8000)
+        }
+        a.merge(&b);
+        assert_eq!(a.seen(), 8000);
+        assert!(a.len() <= 512, "merge must respect capacity");
+        let p50 = a.percentile(0.5);
+        assert!((p50 - 4000.0).abs() < 800.0, "p50 {p50}");
+        let p95 = a.percentile(0.95);
+        assert!((p95 - 7600.0).abs() < 800.0, "p95 {p95}");
+    }
+
+    #[test]
+    fn reservoir_merge_handles_empty_sides() {
+        let mut empty = Reservoir::new(16);
+        let mut small = Reservoir::new(16);
+        for i in 0..5 {
+            small.push(i as f64);
+        }
+        empty.merge(&small);
+        assert_eq!(empty.len(), 5);
+        assert_eq!(empty.seen(), 5);
+        // Merging a bigger reservoir into an empty small one must
+        // respect the destination's capacity, not adopt the source's.
+        let mut tiny = Reservoir::new(4);
+        let mut big = Reservoir::new(64);
+        for i in 0..40 {
+            big.push(i as f64);
+        }
+        tiny.merge(&big);
+        assert_eq!(tiny.len(), 4, "destination capacity is the bound");
+        assert_eq!(tiny.seen(), 40);
+        // Seen-weighted sizing: a side that overflowed its (small) cap
+        // must not be over-represented vs. one retaining its whole
+        // stream. dst: 100 retained of 100 seen; src: 100 retained of
+        // 10_000 seen → merged take is ~1 dst sample per 100 src.
+        let mut exact = Reservoir::new(4096);
+        for i in 0..100 {
+            exact.push(i as f64); // [0, 100)
+        }
+        let mut overflowed = Reservoir::new(100);
+        for i in 0..10_000 {
+            overflowed.push(1000.0 + (i % 100) as f64); // [1000, 1100)
+        }
+        exact.merge(&overflowed);
+        assert_eq!(exact.seen(), 10_100);
+        let low = exact.samples().iter().filter(|&&x| x < 100.0).count();
+        let high = exact.samples().iter().filter(|&&x| x >= 1000.0).count();
+        assert!(high >= 50 * low.max(1), "weights {low} low vs {high} high");
+        // p50 must land inside the dominant (src) stream's range.
+        assert!(exact.percentile(0.5) >= 1000.0, "p50 {}", exact.percentile(0.5));
+        let before = small.len();
+        small.merge(&Reservoir::new(16));
+        assert_eq!(small.len(), before, "merging an empty reservoir is a no-op");
+        // Below-capacity merge concatenates exactly.
+        let mut x = Reservoir::new(64);
+        let mut y = Reservoir::new(64);
+        for i in 0..10 {
+            x.push(i as f64);
+            y.push(100.0 + i as f64);
+        }
+        x.merge(&y);
+        assert_eq!(x.len(), 20);
     }
 
     #[test]

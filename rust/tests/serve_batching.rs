@@ -1,32 +1,55 @@
-//! Cross-request micro-batching losslessness: serving the same seeds
-//! must produce bit-identical per-session segments and NFE for any
-//! `max_batch` and either dispatch policy — speculative decoding's
-//! losslessness guarantee must survive the serving engine's batching.
+//! Sharding + micro-batching losslessness: serving the same seeds must
+//! produce bit-identical per-session segments and NFE for any shard
+//! count, any `max_batch`, and either dispatch policy — speculative
+//! decoding's losslessness guarantee must survive the serving fleet's
+//! routing and batching. Also covers heterogeneous mixed-task
+//! workloads: one server run driving several tasks and methods at once.
 //!
 //! Runs entirely against the analytic `MockDenoiser` (no artifacts).
 
 use std::time::Duration;
-use ts_dp::config::{Method, Task};
+use ts_dp::config::{DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
-use ts_dp::coordinator::server::{serve, ServeOptions, ServeReport};
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
 use ts_dp::policy::mock::MockDenoiser;
 
-fn run(max_batch: usize, policy: Policy, window_us: u64) -> ServeReport {
-    let den = MockDenoiser::with_bias(0.05);
+/// Serve `workload` on a fleet of `shards` shard workers, each building
+/// its own mock replica.
+fn run_fleet(
+    workload: Vec<SessionSpec>,
+    shards: usize,
+    max_batch: usize,
+    policy: Policy,
+    window_us: u64,
+) -> ServeReport {
     let opts = ServeOptions {
-        task: Task::Lift,
-        method: Method::TsDp,
-        sessions: 4,
-        episodes_per_session: 1,
+        workload,
+        shards,
         queue_capacity: 64,
         policy,
         scheduler: None,
         seed: 1234,
         max_batch,
         batch_window: Duration::from_micros(window_us),
-        ..Default::default()
     };
-    serve(&den, &opts).unwrap()
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
+}
+
+fn uniform_workload() -> Vec<SessionSpec> {
+    WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1).build()
+}
+
+/// Heterogeneous mix: three tasks (kitchen + push_t + lift), two
+/// methods (ts_dp + vanilla), mixed styles.
+fn heterogeneous_workload() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Kitchen, Method::TsDp), 2)
+        .session(SessionSpec::new(Task::PushT, Method::TsDp).with_style(DemoStyle::Mh))
+        .session(SessionSpec::new(Task::PushT, Method::Vanilla))
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+        .session(SessionSpec::new(Task::Lift, Method::Vanilla))
+        .build()
 }
 
 /// (session id, per-segment digests, total NFE) for every session,
@@ -42,20 +65,48 @@ fn fingerprint(report: &ServeReport) -> Vec<(usize, Vec<u64>, f64)> {
 }
 
 #[test]
-fn batching_is_lossless_across_max_batch_and_policy() {
-    let baseline = fingerprint(&run(1, Policy::Fifo, 200));
+fn sharding_and_batching_are_lossless() {
+    // Acceptance criterion: serve() with shards = 4 produces
+    // bit-identical per-session segments and NFE to shards = 1, for
+    // every max_batch and both dispatch policies.
+    let baseline = fingerprint(&run_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200));
     assert_eq!(baseline.len(), 4);
     for (_, digests, nfe) in &baseline {
         assert!(!digests.is_empty(), "every session must serve segments");
         assert!(*nfe > 0.0);
     }
     for policy in [Policy::Fifo, Policy::Fair] {
-        for max_batch in [1usize, 4, 16] {
-            let fp = fingerprint(&run(max_batch, policy, 200));
-            assert_eq!(
-                fp, baseline,
-                "serving must be bit-identical (policy {policy:?}, max_batch {max_batch})"
-            );
+        for shards in [1usize, 2, 4] {
+            for max_batch in [1usize, 8] {
+                let fp =
+                    fingerprint(&run_fleet(uniform_workload(), shards, max_batch, policy, 200));
+                assert_eq!(
+                    fp, baseline,
+                    "serving must be bit-identical \
+                     (policy {policy:?}, shards {shards}, max_batch {max_batch})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_mix_is_lossless_across_shards() {
+    // Mixed-task, mixed-method, mixed-style workload: per-session
+    // streams stay independent, so the whole mix is bit-identical for
+    // any shard count and batch width.
+    let baseline = fingerprint(&run_fleet(heterogeneous_workload(), 1, 1, Policy::Fifo, 200));
+    assert_eq!(baseline.len(), 7);
+    for shards in [2usize, 4] {
+        for max_batch in [1usize, 8] {
+            let fp = fingerprint(&run_fleet(
+                heterogeneous_workload(),
+                shards,
+                max_batch,
+                Policy::Fair,
+                200,
+            ));
+            assert_eq!(fp, baseline, "shards {shards}, max_batch {max_batch}");
         }
     }
 }
@@ -64,17 +115,17 @@ fn batching_is_lossless_across_max_batch_and_policy() {
 fn batching_survives_zero_window() {
     // The straggler window is a latency/occupancy tradeoff only; results
     // must not depend on it.
-    let baseline = fingerprint(&run(1, Policy::Fifo, 200));
-    let fp = fingerprint(&run(8, Policy::Fair, 0));
+    let baseline = fingerprint(&run_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200));
+    let fp = fingerprint(&run_fleet(uniform_workload(), 2, 8, Policy::Fair, 0));
     assert_eq!(fp, baseline);
 }
 
 #[test]
 fn verify_fusion_engages_under_concurrency() {
-    // Acceptance criterion: N >= 4 sessions with max_batch >= 4 must
-    // actually fuse verify stages (mean occupancy > 1.5), while
-    // max_batch = 1 must never fuse.
-    let batched = run(8, Policy::Fair, 500);
+    // N >= 4 sessions with max_batch >= 4 on one shard must actually
+    // fuse verify stages (mean occupancy > 1.5), while max_batch = 1
+    // must never fuse.
+    let batched = run_fleet(uniform_workload(), 1, 8, Policy::Fair, 500);
     assert!(batched.metrics.verify_batches > 0);
     assert!(
         batched.metrics.mean_verify_occupancy() > 1.5,
@@ -83,27 +134,71 @@ fn verify_fusion_engages_under_concurrency() {
     );
     assert!(batched.metrics.peak_inflight >= 2);
 
-    let serial = run(1, Policy::Fifo, 200);
+    let serial = run_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200);
     assert!(serial.metrics.mean_verify_occupancy() <= 1.0 + 1e-9);
     assert_eq!(serial.metrics.peak_inflight, 1);
 }
 
 #[test]
-fn baseline_methods_ignore_batching_knobs() {
+fn mixed_fleet_fuses_on_every_shard() {
+    // Acceptance criterion: a single server run drives >= 3 distinct
+    // tasks and >= 2 methods concurrently, with per-shard verify
+    // occupancy > 1 reported in ServerMetrics::summary().
+    let workload = WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Kitchen, Method::TsDp), 3)
+        .sessions(SessionSpec::new(Task::PushT, Method::TsDp), 3)
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 3)
+        .session(SessionSpec::new(Task::Lift, Method::Vanilla))
+        .session(SessionSpec::new(Task::PushT, Method::Speca))
+        .build();
+    let report = run_fleet(workload, 2, 8, Policy::Fair, 500);
+
+    // >= 3 tasks and >= 2 methods actually served, fleet-wide.
+    assert!(report.metrics.task_requests.len() >= 3, "{:?}", report.metrics.task_requests);
+    assert!(
+        report.metrics.method_requests.len() >= 2,
+        "{:?}",
+        report.metrics.method_requests
+    );
+
+    // Per-shard verify occupancy > 1 on every shard, and it shows up in
+    // both the shard summaries and the fleet summary's breakdown.
+    assert_eq!(report.shard_metrics.len(), 2);
+    for m in &report.shard_metrics {
+        assert!(
+            m.mean_verify_occupancy() > 1.0,
+            "shard {:?} occupancy {} — fusion must engage on every shard",
+            m.shard,
+            m.mean_verify_occupancy()
+        );
+        assert!(m.summary().contains("verify-occ"), "{}", m.summary());
+    }
+    let fleet = report.metrics.summary();
+    assert!(fleet.contains("shard-occ=["), "{fleet}");
+    assert!(fleet.contains("imbalance="), "{fleet}");
+    assert!(fleet.contains("tasks="), "{fleet}");
+
+    // Sessions really were spread over both shards.
+    let shard_set: std::collections::BTreeSet<usize> =
+        report.sessions.iter().map(|s| s.shard).collect();
+    assert_eq!(shard_set.len(), 2, "router must use both shards");
+}
+
+#[test]
+fn baseline_methods_ignore_sharding_and_batching_knobs() {
     // Non-speculative methods run as blocking single-request jobs; the
-    // batching knobs must not change their results either.
-    let den = MockDenoiser::with_bias(0.0);
-    let mk = |max_batch| ServeOptions {
-        task: Task::PushT,
-        method: Method::Vanilla,
-        sessions: 2,
+    // fleet knobs must not change their results either.
+    let workload =
+        WorkloadMix::uniform(Task::PushT, DemoStyle::Ph, Method::Vanilla, 2, 1).build();
+    let mk = |shards, max_batch| ServeOptions {
+        workload: workload.clone(),
+        shards,
         seed: 7,
         max_batch,
         ..Default::default()
     };
-    let a = serve(&den, &mk(1)).unwrap();
-    let den2 = MockDenoiser::with_bias(0.0);
-    let b = serve(&den2, &mk(16)).unwrap();
+    let a = serve_with(|_| MockDenoiser::with_bias(0.0), &mk(1, 1)).unwrap();
+    let b = serve_with(|_| MockDenoiser::with_bias(0.0), &mk(2, 16)).unwrap();
     assert_eq!(fingerprint(&a), fingerprint(&b));
     assert_eq!(a.metrics.verify_batches, 0, "vanilla never issues fused verifies");
 }
