@@ -149,10 +149,63 @@ fn bench_sharded_serving() {
     println!();
 }
 
+/// Drafter-quality probe: accept rate and NFE of the mock's analytic
+/// drafter pair (two bias levels) vs the in-crate distilled Transformer
+/// drafter, untrained and after a quick distillation run — the
+/// measurement the drafter subsystem exists to move (accept rate bounds
+/// speedup). The losslessness tests assert distilled serving stays
+/// bit-identical across fleet shapes; this reports the rates.
+fn bench_drafter_accept_rates() {
+    use ts_dp::config::{SpecParams, StageParams};
+    use ts_dp::drafter::model::DrafterModel;
+    use ts_dp::drafter::train::{accept_stats, distill, DistillConfig};
+    use ts_dp::drafter::DistilledDrafter;
+
+    println!("== drafter quality: mock analytic pair vs distilled transformer ==");
+    let tasks = [Task::Lift, Task::PushT];
+    let eval = SpecParams { stages: StageParams::uniform(8), lambda: 0.3, sigma_scale: 1.0 };
+    let report = |label: &str, den: &dyn ts_dp::policy::Denoiser| {
+        let r = accept_stats(den, &tasks, DemoStyle::Ph, 3, eval, 42).expect("accept_stats");
+        println!(
+            "{label:<34} accept={:>5.1}%  nfe/seg={:>6.1}",
+            r.accept_rate * 100.0,
+            r.mean_nfe
+        );
+    };
+    report("mock drafter (bias 0.00)", &MockDenoiser::with_bias(0.0));
+    report("mock drafter (bias 0.35)", &MockDenoiser::with_bias(0.35));
+    let untrained = DistilledDrafter::new(
+        Box::new(MockDenoiser::with_bias(0.0)),
+        DrafterModel::init(&mut Rng::seed_from_u64(3)),
+    );
+    report("distilled transformer (untrained)", &untrained);
+    let cfg = DistillConfig {
+        tasks: tasks.to_vec(),
+        trajectories_per_task: 3,
+        steps: 250,
+        batch: 6,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let (model, train_report) =
+        distill(&MockDenoiser::with_bias(0.0), &cfg, |_| {}).expect("distill");
+    println!(
+        "  (distillation: {} steps in {:.2}s, final x0 mse {:.6})",
+        cfg.steps,
+        t0.elapsed().as_secs_f64(),
+        train_report.final_loss
+    );
+    let distilled =
+        DistilledDrafter::new(Box::new(MockDenoiser::with_bias(0.0)), model);
+    report("distilled transformer (trained)", &distilled);
+    println!();
+}
+
 fn main() {
     bench_accept_scan_scratch();
     bench_batched_serving();
     bench_sharded_serving();
+    bench_drafter_accept_rates();
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -1,16 +1,83 @@
 //! `ts-dp serve` / `ts-dp load-sweep` — drive the sharded serving fleet
-//! against the real runtime.
+//! against a selectable backend, with serve-time drafter swapping.
+//!
+//! Backend selection (`--backend artifacts|mock`) and drafter swapping
+//! (`--drafter CHECKPOINT`) are shared by `serve`, `load-sweep`,
+//! `episode`, and `distill-drafter`: the mock backend exercises every
+//! serving path without AOT artifacts, and a `--drafter` checkpoint
+//! wraps each replica in a [`DistilledDrafter`] so distilled drafters
+//! can be compared per run without recompiling anything.
 
 use crate::config::{DemoStyle, Method, Task};
 use crate::coordinator::batcher::Policy;
 use crate::coordinator::server::{serve, ServeOptions};
-use crate::coordinator::workload::WorkloadMix;
+use crate::coordinator::workload::{DrafterKind, WorkloadMix};
+use crate::drafter::backend::DistilledDrafter;
+use crate::drafter::model::DrafterModel;
+use crate::policy::mock::MockDenoiser;
 use crate::policy::Denoiser;
 use crate::runtime::ModelRuntime;
 use crate::scheduler::SchedulerPolicy;
 use crate::util::cli::Args;
 use anyhow::{Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+/// Which base denoiser a CLI run executes against.
+#[derive(Debug, Clone)]
+pub enum BackendChoice {
+    /// PJRT AOT artifacts from the given directory (the default).
+    Artifacts(PathBuf),
+    /// The analytic [`MockDenoiser`] with the given drafter bias —
+    /// artifact-free smoke path for every serving command.
+    Mock(f32),
+}
+
+/// Parse the shared `--backend artifacts|mock` choice (`--artifacts DIR`
+/// and `--mock-bias B` refine the two variants).
+pub fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.get_or("backend", "artifacts").as_str() {
+        "artifacts" => Ok(BackendChoice::Artifacts(artifacts)),
+        "mock" => Ok(BackendChoice::Mock(args.get_f32("mock-bias", 0.05)?)),
+        other => anyhow::bail!("--backend must be artifacts|mock, got '{other}'"),
+    }
+}
+
+impl BackendChoice {
+    /// Build one base replica (callers invoke this per shard, on the
+    /// shard worker's own thread — PJRT handles are not `Send`).
+    pub fn build(&self) -> Result<Box<dyn Denoiser>> {
+        match self {
+            BackendChoice::Artifacts(dir) => {
+                let rt = ModelRuntime::load(dir)
+                    .with_context(|| format!("loading artifacts from {}", dir.display()))?;
+                Ok(Box::new(rt) as Box<dyn Denoiser>)
+            }
+            BackendChoice::Mock(bias) => {
+                Ok(Box::new(MockDenoiser::with_bias(*bias)) as Box<dyn Denoiser>)
+            }
+        }
+    }
+}
+
+/// Load the optional distilled-drafter checkpoint named by `--drafter`.
+pub fn drafter_from_args(args: &Args) -> Result<Option<DrafterModel>> {
+    match args.get("drafter") {
+        Some(p) => Ok(Some(DrafterModel::load(Path::new(p)).with_context(|| {
+            format!("loading drafter checkpoint {p} (produce one with `ts-dp distill-drafter`)")
+        })?)),
+        None => Ok(None),
+    }
+}
+
+/// Swap a distilled drafter under `base` when a checkpoint was loaded;
+/// otherwise serve the base backend's own drafter.
+pub fn with_drafter(base: Box<dyn Denoiser>, model: &Option<DrafterModel>) -> Box<dyn Denoiser> {
+    match model {
+        Some(m) => Box::new(DistilledDrafter::new(base, m.clone())),
+        None => base,
+    }
+}
 
 /// Entry point for `ts-dp load-sweep`: open-loop latency-under-load
 /// characterization (results feed EXPERIMENTS.md §Perf). With `--mix`,
@@ -18,7 +85,6 @@ use std::path::PathBuf;
 /// percentiles alongside the fleet aggregate.
 pub fn cmd_load_sweep(args: &Args) -> Result<()> {
     use crate::coordinator::workload::{mixed_load_sweep, record_mixed_pools, SessionSpec};
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
     let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
     let n = args.get_usize("requests", 24)?;
@@ -42,7 +108,10 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
         }
         None => vec![SessionSpec::new(task, method)],
     };
-    let den = ModelRuntime::load(&artifacts)?;
+    // Backend + optional drafter swap resolve before the (potentially
+    // multi-second) model load path runs per replica.
+    let drafter = drafter_from_args(args)?;
+    let den = with_drafter(backend_choice(args)?.build()?, &drafter);
     // One pool-recording path for both spellings: `--task lift` and
     // `--mix "lift:ts_dp"` must produce identical pools (and therefore
     // identical curves) for the same --seed.
@@ -53,7 +122,7 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
         "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
         "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
     );
-    for point in mixed_load_sweep(&den, &stream, &pool_refs, &rates, n, seed)? {
+    for point in mixed_load_sweep(den.as_ref(), &stream, &pool_refs, &rates, n, seed)? {
         let f = &point.fleet;
         println!(
             "{:>12.1} {:>12.2} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
@@ -78,7 +147,6 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
 
 /// Entry point for `ts-dp serve`.
 pub fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
     let style = DemoStyle::parse(&args.get_or("style", "ph")).context("bad --style")?;
     let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
@@ -109,7 +177,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // from --task/--style/--method/--sessions/--episodes. The two are
     // mutually exclusive — rejecting the combination beats silently
     // ignoring explicitly-passed flags.
-    let workload = match args.get("mix") {
+    let mix = match args.get("mix") {
         Some(mix) => {
             for conflicting in ["task", "style", "method", "sessions", "episodes"] {
                 anyhow::ensure!(
@@ -118,10 +186,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                      (fold it into the mix entries instead)"
                 );
             }
-            WorkloadMix::parse(mix)?.build()
+            WorkloadMix::parse(mix)?
         }
-        None => WorkloadMix::uniform(task, style, method, sessions, episodes).build(),
+        None => WorkloadMix::uniform(task, style, method, sessions, episodes),
     };
+    // Drafter swap: load the checkpoint ONCE, stamp the workload's
+    // drafter identity, and wrap every shard replica below.
+    let drafter = drafter_from_args(args)?;
+    let drafter_kind =
+        if drafter.is_some() { DrafterKind::Distilled } else { DrafterKind::Base };
+    let workload = mix.drafter(drafter_kind).build();
+    let backend = backend_choice(args)?;
     let opts = ServeOptions {
         workload,
         shards,
@@ -135,18 +210,22 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // serve() clamps the shard count to the session count; print the
     // effective fleet shape, not the raw flag.
     println!(
-        "serving {} sessions over {} shard(s), max_batch={} (each shard compiles its own replica)",
+        "serving {} sessions over {} shard(s), max_batch={}, drafter={} \
+         (each shard compiles its own replica)",
         opts.workload.len(),
         opts.effective_shards(),
-        max_batch
+        max_batch,
+        drafter_kind.name(),
     );
-    // Each shard worker compiles and owns its own runtime replica on its
-    // own thread (PJRT handles are not Send).
+    // Each shard worker builds and owns its own replica on its own
+    // thread (PJRT handles are not Send); the drafter checkpoint is
+    // shared read-only and cloned into each replica's wrapper.
     let report = serve(
         &|shard| {
-            let rt = ModelRuntime::load(&artifacts)
-                .with_context(|| format!("loading replica for shard {shard}"))?;
-            Ok(Box::new(rt) as Box<dyn Denoiser>)
+            let base = backend
+                .build()
+                .with_context(|| format!("building replica for shard {shard}"))?;
+            Ok(with_drafter(base, &drafter))
         },
         &opts,
     )?;

@@ -58,6 +58,11 @@ pub struct ServerMetrics {
     pub task_requests: BTreeMap<&'static str, u64>,
     /// Requests served per method name.
     pub method_requests: BTreeMap<&'static str, u64>,
+    /// Requests served per drafter identity
+    /// ([`crate::coordinator::workload::DrafterKind`] names) — shows
+    /// which drafter backend a run was served with when comparing
+    /// `--drafter` swaps.
+    pub drafter_requests: BTreeMap<&'static str, u64>,
     /// Per-shard (shard id, requests, mean verify occupancy), populated
     /// by [`ServerMetrics::merge_fleet`]; empty on a single shard's own
     /// metrics.
@@ -91,6 +96,7 @@ impl ServerMetrics {
             peak_inflight: 0,
             task_requests: BTreeMap::new(),
             method_requests: BTreeMap::new(),
+            drafter_requests: BTreeMap::new(),
             shard_breakdown: Vec::new(),
         }
     }
@@ -135,11 +141,18 @@ impl ServerMetrics {
         self.accepted += accepted as u64;
     }
 
-    /// Attribute one completed request to its task and method (the
-    /// heterogeneous-workload breakdown reported by `summary`).
-    pub fn record_spec(&mut self, task: &'static str, method: &'static str) {
+    /// Attribute one completed request to its task, method, and drafter
+    /// identity (the heterogeneous-workload breakdown reported by
+    /// `summary`).
+    pub fn record_spec(
+        &mut self,
+        task: &'static str,
+        method: &'static str,
+        drafter: &'static str,
+    ) {
         *self.task_requests.entry(task).or_insert(0) += 1;
         *self.method_requests.entry(method).or_insert(0) += 1;
+        *self.drafter_requests.entry(drafter).or_insert(0) += 1;
     }
 
     /// Record one fused verify call covering `fused` requests.
@@ -187,6 +200,9 @@ impl ServerMetrics {
             }
             for (method, n) in &m.method_requests {
                 *fleet.method_requests.entry(method).or_insert(0) += n;
+            }
+            for (drafter, n) in &m.drafter_requests {
+                *fleet.drafter_requests.entry(drafter).or_insert(0) += n;
             }
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
@@ -284,6 +300,16 @@ impl ServerMetrics {
                 self.task_requests.len(),
                 self.method_requests.len()
             ));
+            // Drafter identity: shown whenever a non-base drafter served
+            // requests (base-only runs keep the legacy summary shape).
+            if self.drafter_requests.keys().any(|d| *d != "base") {
+                let parts: Vec<String> = self
+                    .drafter_requests
+                    .iter()
+                    .map(|(d, n)| format!("{d}:{n}"))
+                    .collect();
+                s.push_str(&format!(" drafters=[{}]", parts.join(" ")));
+            }
         }
         if !self.shard_breakdown.is_empty() {
             let occ: Vec<String> = self
@@ -356,11 +382,11 @@ mod tests {
         let mut b = ServerMetrics::for_shard(1);
         for _ in 0..30 {
             a.record(0.001, 0.01, 20.0, 8, 7);
-            a.record_spec("lift", "ts_dp");
+            a.record_spec("lift", "ts_dp", "distilled");
         }
         for _ in 0..10 {
             b.record(0.002, 0.03, 100.0, 0, 0);
-            b.record_spec("push_t", "vanilla");
+            b.record_spec("push_t", "vanilla", "base");
         }
         a.record_verify_batch(4);
         a.record_verify_batch(4);
@@ -376,13 +402,26 @@ mod tests {
         assert_eq!(fleet.shard_breakdown[1].1, 10);
         // imbalance = max/mean = 30/20.
         assert!((fleet.shard_imbalance() - 1.5).abs() < 1e-12);
+        assert_eq!(fleet.drafter_requests["distilled"], 30);
+        assert_eq!(fleet.drafter_requests["base"], 10);
         let s = fleet.summary();
         assert!(s.contains("shard-occ=[0:4.00 1:1.00]"), "{s}");
         assert!(s.contains("imbalance=1.50"), "{s}");
         assert!(s.contains("tasks=2 methods=2"), "{s}");
+        assert!(s.contains("drafters=[base:10 distilled:30]"), "{s}");
         // Percentiles answer from the merged reservoirs.
         assert!(fleet.latency_percentile(0.5) > 0.0);
         assert!(fleet.latency_percentile(0.99) >= fleet.latency_percentile(0.5));
+    }
+
+    #[test]
+    fn base_only_runs_keep_the_legacy_summary_shape() {
+        let mut m = ServerMetrics::new();
+        m.record(0.001, 0.01, 20.0, 8, 7);
+        m.record_spec("lift", "ts_dp", "base");
+        let s = m.summary();
+        assert!(s.contains("tasks=1 methods=1"), "{s}");
+        assert!(!s.contains("drafters="), "base-only must not grow the line: {s}");
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //!   ▼
 //! shard workers 0..N (server.rs; each thread owns a NON-Send denoiser
 //!   │              replica built by the ReplicaFactory on that thread)
+//!   │  drafter backend selection (cli.rs): the replica is the base
+//!   │  backend (AOT artifacts or mock) either serving its own drafter
+//!   │  head, or wrapped in drafter::DistilledDrafter when a --drafter
+//!   │  checkpoint swaps a distilled Transformer drafter in
+//!   │  (workload::DrafterKind labels the swap in specs + metrics)
+//!   │
 //!   │  batch former (batcher.rs): per-session queues + round-robin
 //!   │  cursor (Fair) or arrival order (Fifo); each shard admits up to
 //!   │  `max_batch` jobs, lingering `batch_window` for stragglers
@@ -69,4 +75,4 @@ pub use metrics::ServerMetrics;
 pub use request::{SegmentReply, SegmentRequest};
 pub use router::Router;
 pub use server::{serve, serve_with, ReplicaFactory, ServeOptions, ServeReport};
-pub use workload::{SessionSpec, WorkloadMix};
+pub use workload::{DrafterKind, SessionSpec, WorkloadMix};

@@ -146,6 +146,22 @@ impl ServeReport {
             s as f64 / e as f64
         }
     }
+
+    /// Per-session bit-identity fingerprint: `(session id, per-segment
+    /// action digests, total NFE)`, sorted by session id so reports from
+    /// different fleet shapes line up. Two serving runs with the same
+    /// seeds must produce equal fingerprints for any shard count, batch
+    /// width, or dispatch policy — the losslessness invariance asserted
+    /// by `tests/serve_batching.rs` and `tests/drafter_distill.rs`.
+    pub fn session_fingerprints(&self) -> Vec<(usize, Vec<u64>, f64)> {
+        let mut fp: Vec<_> = self
+            .sessions
+            .iter()
+            .map(|s| (s.session, s.segment_digests.clone(), s.nfe))
+            .collect();
+        fp.sort_by_key(|(s, _, _)| *s);
+        fp
+    }
 }
 
 /// One in-flight TS-DP request in a shard's job table.
@@ -292,7 +308,11 @@ fn run_shard(
                     trace.drafts(),
                     trace.accepted(),
                 );
-                metrics.record_spec(req.spec.task.name(), req.spec.method.name());
+                metrics.record_spec(
+                    req.spec.task.name(),
+                    req.spec.method.name(),
+                    req.spec.drafter.name(),
+                );
                 // A hung-up session (env finished mid-flight) is fine.
                 let _ = req.reply.send(SegmentReply {
                     actions,
@@ -358,7 +378,11 @@ fn run_shard(
                     trace.drafts(),
                     trace.accepted(),
                 );
-                metrics.record_spec(done.spec.task.name(), done.spec.method.name());
+                metrics.record_spec(
+                    done.spec.task.name(),
+                    done.spec.method.name(),
+                    done.spec.drafter.name(),
+                );
                 // A hung-up session (env finished mid-flight) is fine.
                 // The reply's shard attribution flows job → trace →
                 // reply (the label set at admission).
@@ -721,16 +745,7 @@ mod tests {
             fn drafter_step(&self, _: &[f32], _: usize, _: &[f32]) -> Result<Vec<f32>> {
                 unreachable!()
             }
-            fn drafter_rollout(
-                &self,
-                _: usize,
-                _: &[f32],
-                _: usize,
-                _: &[f32],
-                _: &[f32],
-            ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
-                unreachable!()
-            }
+            // drafter_rollout: trait default (Ok(None)).
             fn nfe(&self) -> &crate::runtime::NfeCounter {
                 unreachable!()
             }

@@ -24,6 +24,34 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Which drafter backend serves a session's speculative rounds.
+///
+/// This is **identity plumbing** for metrics and traces: the replica
+/// factory is what actually installs the drafter (one backend per
+/// serving run — the `serve --drafter` entrypoint wraps every shard
+/// replica in a [`crate::drafter::DistilledDrafter`] and stamps the
+/// workload with [`DrafterKind::Distilled`]), and the label lets
+/// summaries attribute requests when runs with different drafters are
+/// compared. Not part of the `--mix` grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DrafterKind {
+    /// The base backend's own drafter head (AOT artifact or mock pair).
+    #[default]
+    Base,
+    /// An in-crate distilled Transformer drafter checkpoint.
+    Distilled,
+}
+
+impl DrafterKind {
+    /// Stable lowercase name (metrics keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            DrafterKind::Base => "base",
+            DrafterKind::Distilled => "distilled",
+        }
+    }
+}
+
 /// What one serving session runs: its environment, demonstration style,
 /// generation method, and how many episodes it drives.
 ///
@@ -42,12 +70,21 @@ pub struct SessionSpec {
     pub method: Method,
     /// Episodes the session runs before exiting.
     pub episodes: usize,
+    /// Drafter identity label (see [`DrafterKind`]).
+    pub drafter: DrafterKind,
 }
 
 impl SessionSpec {
-    /// Spec with the given task and method (PH style, one episode).
+    /// Spec with the given task and method (PH style, one episode, base
+    /// drafter).
     pub fn new(task: Task, method: Method) -> Self {
-        Self { task, style: DemoStyle::Ph, method, episodes: 1 }
+        Self {
+            task,
+            style: DemoStyle::Ph,
+            method,
+            episodes: 1,
+            drafter: DrafterKind::Base,
+        }
     }
 
     /// Builder: set the demo style.
@@ -59,6 +96,12 @@ impl SessionSpec {
     /// Builder: set the episode count.
     pub fn with_episodes(mut self, episodes: usize) -> Self {
         self.episodes = episodes.max(1);
+        self
+    }
+
+    /// Builder: set the drafter identity label.
+    pub fn with_drafter(mut self, drafter: DrafterKind) -> Self {
+        self.drafter = drafter;
         self
     }
 }
@@ -172,8 +215,13 @@ impl WorkloadMix {
                     .with_context(|| format!("unknown style in mix entry '{entry}'"))?;
             }
             if let Some(e) = parts.next() {
-                spec.episodes =
-                    e.parse::<usize>().context("bad episode count in mix entry")?.max(1);
+                let episodes = e
+                    .parse::<usize>()
+                    .with_context(|| format!("bad episode count in mix entry '{entry}'"))?;
+                if episodes == 0 {
+                    bail!("episode count must be positive in mix entry '{entry}'");
+                }
+                spec.episodes = episodes;
             }
             if parts.next().is_some() {
                 bail!("too many ':' fields in mix entry '{entry}'");
@@ -189,6 +237,16 @@ impl WorkloadMix {
         Ok(mix)
     }
 
+    /// Label every session in the mix with a drafter identity (the
+    /// serve entrypoint applies this when `--drafter` swaps a distilled
+    /// drafter into the replicas).
+    pub fn drafter(mut self, kind: DrafterKind) -> Self {
+        for spec in &mut self.specs {
+            spec.drafter = kind;
+        }
+        self
+    }
+
     /// Number of sessions in the mix.
     pub fn len(&self) -> usize {
         self.specs.len()
@@ -202,6 +260,41 @@ impl WorkloadMix {
     /// Finish: the per-session spec list consumed by `ServeOptions`.
     pub fn build(self) -> Vec<SessionSpec> {
         self.specs
+    }
+}
+
+/// Canonical mix-string form: run-length-grouped
+/// `task:method:style:episodes[*N]` entries, comma-separated — always
+/// parseable back by [`WorkloadMix::parse`] into the same session list
+/// (drafter identity is a serve-time flag, not part of the grammar).
+impl std::fmt::Display for WorkloadMix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut i = 0;
+        let mut first = true;
+        while i < self.specs.len() {
+            let spec = self.specs[i];
+            let mut reps = 1;
+            while i + reps < self.specs.len() && self.specs[i + reps] == spec {
+                reps += 1;
+            }
+            if !first {
+                f.write_str(",")?;
+            }
+            first = false;
+            write!(
+                f,
+                "{}:{}:{}:{}",
+                spec.task.name(),
+                spec.method.name(),
+                spec.style.name(),
+                spec.episodes
+            )?;
+            if reps > 1 {
+                write!(f, "*{reps}")?;
+            }
+            i += reps;
+        }
+        Ok(())
     }
 }
 
@@ -565,5 +658,79 @@ mod tests {
         assert!(WorkloadMix::parse("lift:bogus_method").is_err());
         assert!(WorkloadMix::parse("").is_err());
         assert!(WorkloadMix::parse("lift*0").is_err());
+    }
+
+    #[test]
+    fn mix_parse_errors_are_actionable() {
+        let err = WorkloadMix::parse("lift:warp_drive").unwrap_err();
+        assert!(err.to_string().contains("unknown method"), "{err:#}");
+        let err = WorkloadMix::parse("lift*0").unwrap_err();
+        assert!(err.to_string().contains("repeat count must be positive"), "{err:#}");
+        let err = WorkloadMix::parse("lift:ts_dp:ph:0").unwrap_err();
+        assert!(err.to_string().contains("episode count must be positive"), "{err:#}");
+        let err = WorkloadMix::parse("lift:ts_dp:ph:2:9").unwrap_err();
+        assert!(err.to_string().contains("too many ':'"), "{err:#}");
+    }
+
+    #[test]
+    fn mix_display_roundtrips_through_parse() {
+        let mix = WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 4)
+            .session(SessionSpec::new(Task::PushT, Method::Vanilla))
+            .session(
+                SessionSpec::new(Task::Kitchen, Method::TsDp)
+                    .with_style(DemoStyle::Mh)
+                    .with_episodes(2),
+            );
+        let s = mix.to_string();
+        assert_eq!(s, "lift:ts_dp:ph:1*4,push_t:vanilla:ph:1,kitchen:ts_dp:mh:2");
+        let reparsed = WorkloadMix::parse(&s).unwrap();
+        assert_eq!(reparsed.build(), mix.build());
+    }
+
+    /// Property: Display always parses back to the identical spec list,
+    /// for random mixes over every task/method/style and episode/repeat
+    /// counts.
+    #[test]
+    fn prop_mix_display_parse_roundtrip() {
+        crate::util::testing::check_property("mix_roundtrip", 100, |rng| {
+            let entries = 1 + rng.below(5);
+            let mut mix = WorkloadMix::new();
+            for _ in 0..entries {
+                let task = Task::ALL[rng.below(Task::ALL.len())];
+                let method = Method::ALL[rng.below(Method::ALL.len())];
+                let style = if rng.coin(0.5) { DemoStyle::Ph } else { DemoStyle::Mh };
+                let spec = SessionSpec::new(task, method)
+                    .with_style(style)
+                    .with_episodes(1 + rng.below(3));
+                mix = mix.sessions(spec, 1 + rng.below(4));
+            }
+            let shown = mix.to_string();
+            let reparsed = WorkloadMix::parse(&shown)
+                .unwrap_or_else(|e| panic!("'{shown}' failed to reparse: {e:#}"));
+            assert_eq!(reparsed.build(), mix.build(), "mix string: {shown}");
+        });
+    }
+
+    #[test]
+    fn drafter_label_plumbs_through_builders() {
+        assert_eq!(DrafterKind::default(), DrafterKind::Base);
+        assert_eq!(DrafterKind::Base.name(), "base");
+        assert_eq!(DrafterKind::Distilled.name(), "distilled");
+        let specs = WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 3, 1)
+            .drafter(DrafterKind::Distilled)
+            .build();
+        assert!(specs.iter().all(|s| s.drafter == DrafterKind::Distilled));
+        let spec = SessionSpec::new(Task::Can, Method::TsDp);
+        assert_eq!(spec.drafter, DrafterKind::Base);
+        assert_eq!(
+            spec.with_drafter(DrafterKind::Distilled).drafter,
+            DrafterKind::Distilled
+        );
+        // Display is drafter-agnostic: the label is a serve-time flag,
+        // not part of the mix grammar.
+        let labelled = WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1)
+            .drafter(DrafterKind::Distilled);
+        assert_eq!(labelled.to_string(), "lift:ts_dp:ph:1*2");
     }
 }

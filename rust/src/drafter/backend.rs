@@ -1,0 +1,243 @@
+//! [`DistilledDrafter`]: swap a distilled Transformer drafter under any
+//! base [`Denoiser`] at serve time.
+//!
+//! Every `target_*` call (and `encode`) delegates to the wrapped base
+//! backend bit-for-bit — the verify/accept path is untouched, so the
+//! speculative engine's losslessness guarantee is preserved no matter
+//! how good or bad the drafter is; the drafter only moves the accept
+//! rate. `drafter_step` and `drafter_rollout` are served by the model:
+//! the rollout is **natively fused** (one KV-cached causal sequence per
+//! round, `Some` for every k — no per-k AOT artifact required), and NFE
+//! accounting lands on the base backend's counter at the paper's 1/8
+//! rate per drafter token.
+
+use crate::config::{ACT_DIM, DIFFUSION_STEPS, HORIZON};
+use crate::diffusion::DdpmSchedule;
+use crate::drafter::model::{eps_from_x0, DrafterModel};
+use crate::policy::Denoiser;
+use crate::runtime::NfeCounter;
+use anyhow::{ensure, Result};
+
+/// Flattened segment size.
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// A base denoiser with its drafter head replaced by a distilled
+/// Transformer drafter (see `drafter::train` for how one is produced and
+/// `ts-dp distill-drafter` / `serve --drafter` for the CLI path).
+pub struct DistilledDrafter {
+    base: Box<dyn Denoiser>,
+    model: DrafterModel,
+    sched: DdpmSchedule,
+}
+
+impl DistilledDrafter {
+    /// Wrap `base`, serving drafter calls from `model`.
+    pub fn new(base: Box<dyn Denoiser>, model: DrafterModel) -> Self {
+        Self { base, model, sched: DdpmSchedule::cosine(DIFFUSION_STEPS) }
+    }
+
+    /// The distilled model serving the drafter calls.
+    pub fn model(&self) -> &DrafterModel {
+        &self.model
+    }
+}
+
+impl Denoiser for DistilledDrafter {
+    fn encode(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        self.base.encode(obs)
+    }
+
+    fn target_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        self.base.target_step(x, t, cond)
+    }
+
+    fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        self.base.target_verify(xs, ts, cond)
+    }
+
+    fn target_verify_many(&self, xs: &[f32], ts: &[f32], conds: &[f32]) -> Result<Vec<f32>> {
+        self.base.target_verify_many(xs, ts, conds)
+    }
+
+    fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
+        ensure!(x.len() == SEG, "drafter_step x len {}", x.len());
+        self.base.nfe().count_drafter(1);
+        let x0 = self.model.infer_step(x, t, cond);
+        let mut eps = vec![0.0f32; SEG];
+        eps_from_x0(&self.sched, t, x, &x0, &mut eps);
+        Ok(eps)
+    }
+
+    fn drafter_rollout(
+        &self,
+        k: usize,
+        x: &[f32],
+        t0: usize,
+        cond: &[f32],
+        noise: &[f32],
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        ensure!(k >= 1, "drafter_rollout k must be >= 1");
+        ensure!(t0 >= k, "drafter_rollout needs t0 >= k (got t0={t0}, k={k})");
+        ensure!(x.len() == SEG, "drafter_rollout x len {}", x.len());
+        ensure!(noise.len() == k * SEG, "drafter_rollout noise len {}", noise.len());
+        let mut state = self.model.start_rollout();
+        let mut samples = vec![0.0f32; k * SEG];
+        let mut means = vec![0.0f32; k * SEG];
+        let mut cur = x.to_vec();
+        let mut eps = vec![0.0f32; SEG];
+        let mut x0_scratch = vec![0.0f32; SEG];
+        for j in 0..k {
+            let t = t0 - j;
+            let x0 = state.push(&cur, t, cond);
+            eps_from_x0(&self.sched, t, &cur, &x0, &mut eps);
+            {
+                let sample = &mut samples[j * SEG..(j + 1) * SEG];
+                // `means` and `samples` are distinct Vecs, so the two
+                // mutable row borrows never alias.
+                let mean = &mut means[j * SEG..(j + 1) * SEG];
+                self.sched.step_into(
+                    t,
+                    &cur,
+                    &eps,
+                    &noise[j * SEG..(j + 1) * SEG],
+                    &mut x0_scratch,
+                    sample,
+                    mean,
+                );
+            }
+            cur.copy_from_slice(&samples[j * SEG..(j + 1) * SEG]);
+        }
+        self.base.nfe().count_drafter(k);
+        Ok(Some((samples, means)))
+    }
+
+    fn nfe(&self) -> &NfeCounter {
+        self.base.nfe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SpecParams, OBS_DIM, VERIFY_BATCH};
+    use crate::policy::mock::MockDenoiser;
+    use crate::speculative::{SegmentTrace, SpecEngine};
+    use crate::util::Rng;
+
+    fn backend(seed: u64) -> DistilledDrafter {
+        let mut rng = Rng::seed_from_u64(seed);
+        DistilledDrafter::new(
+            Box::new(MockDenoiser::with_bias(0.0)),
+            DrafterModel::init(&mut rng),
+        )
+    }
+
+    #[test]
+    fn rollout_is_natively_fused_for_every_k() {
+        let den = backend(0);
+        let cond = den.encode(&vec![0.2; OBS_DIM]).unwrap();
+        let mut rng = Rng::seed_from_u64(1);
+        let x = rng.normal_vec(SEG);
+        for k in [1usize, 4, 16] {
+            let noise = rng.normal_vec(k * SEG);
+            let out = den.drafter_rollout(k, &x, 60, &cond, &noise).unwrap();
+            let (samples, means) = out.expect("distilled drafter must fuse every k");
+            assert_eq!(samples.len(), k * SEG);
+            assert_eq!(means.len(), k * SEG);
+            for v in samples.iter().chain(means.iter()) {
+                assert!(v.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn rollout_first_step_matches_drafter_step() {
+        // Token 0 of a rollout has no context, so it must agree bitwise
+        // with the single-step drafter call through the same DDPM step.
+        let den = backend(2);
+        let cond = den.encode(&vec![0.4; OBS_DIM]).unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        let x = rng.normal_vec(SEG);
+        let t0 = 50;
+        let noise = rng.normal_vec(4 * SEG);
+        let (_, means) = den.drafter_rollout(4, &x, t0, &cond, &noise).unwrap().unwrap();
+        let eps = den.drafter_step(&x, t0, &cond).unwrap();
+        let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+        let mut x0 = vec![0.0; SEG];
+        let mut mu = vec![0.0; SEG];
+        sched.predict_x0(t0, &x, &eps, &mut x0);
+        sched.posterior_mean(t0, &x, &x0, &mut mu);
+        assert_eq!(&means[..SEG], &mu[..]);
+    }
+
+    #[test]
+    fn target_calls_delegate_bit_identically() {
+        let den = backend(4);
+        let reference = MockDenoiser::with_bias(0.0);
+        let cond = den.encode(&vec![0.1; OBS_DIM]).unwrap();
+        assert_eq!(cond, reference.encode(&vec![0.1; OBS_DIM]).unwrap());
+        let mut rng = Rng::seed_from_u64(5);
+        let x = rng.normal_vec(SEG);
+        assert_eq!(
+            den.target_step(&x, 30, &cond).unwrap(),
+            reference.target_step(&x, 30, &cond).unwrap()
+        );
+        let mut xs = Vec::new();
+        let mut ts = Vec::new();
+        for b in 0..VERIFY_BATCH {
+            xs.extend(rng.normal_vec(SEG));
+            ts.push((b * 3 % DIFFUSION_STEPS) as f32);
+        }
+        assert_eq!(
+            den.target_verify(&xs, &ts, &cond).unwrap(),
+            reference.target_verify(&xs, &ts, &cond).unwrap()
+        );
+    }
+
+    #[test]
+    fn nfe_accounting_is_one_eighth_per_drafter_token() {
+        let den = backend(6);
+        let cond = den.encode(&vec![0.3; OBS_DIM]).unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let x = rng.normal_vec(SEG);
+        let noise = rng.normal_vec(4 * SEG);
+        den.drafter_rollout(4, &x, 60, &cond, &noise).unwrap();
+        assert_eq!(den.nfe().nfe(), 0.5, "k=4 rollout costs 4/8 NFE");
+        den.drafter_step(&x, 60, &cond).unwrap();
+        assert_eq!(den.nfe().nfe(), 0.625);
+        den.target_step(&x, 60, &cond).unwrap();
+        assert_eq!(den.nfe().nfe(), 1.625, "target delegation shares the counter");
+    }
+
+    #[test]
+    fn rollout_shape_errors_are_loud() {
+        let den = backend(8);
+        let cond = den.encode(&vec![0.0; OBS_DIM]).unwrap();
+        let x = vec![0.0f32; SEG];
+        assert!(den.drafter_rollout(4, &x, 60, &cond, &[0.0; 7]).is_err());
+        assert!(den.drafter_rollout(8, &x, 4, &cond, &vec![0.0; 8 * SEG]).is_err());
+    }
+
+    #[test]
+    fn engine_terminates_with_an_untrained_drafter() {
+        // An untrained drafter is just a bad drafter: the engine must
+        // still terminate losslessly (rejections correct by coupling).
+        let den = backend(10);
+        let cond = den.encode(&vec![0.25; OBS_DIM]).unwrap();
+        let engine = SpecEngine::new();
+        let mut rng = Rng::seed_from_u64(11);
+        let mut trace = SegmentTrace::default();
+        let seg = engine
+            .generate_segment(&den, &cond, |_| SpecParams::fixed_k(8), &mut rng, &mut trace)
+            .unwrap();
+        assert_eq!(seg.len(), SEG);
+        assert!(seg.iter().all(|v| v.is_finite()));
+        assert!(trace.nfe > 0.0);
+        // The mock's final deterministic target step lands on the
+        // analytic clean action regardless of drafter quality.
+        let clean = MockDenoiser::clean_action(&cond);
+        let err =
+            seg.iter().zip(&clean).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(err < 0.15, "max err {err}");
+    }
+}

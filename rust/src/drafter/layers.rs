@@ -1,0 +1,259 @@
+//! Dependency-free layer primitives for the drafter Transformer.
+//!
+//! The PPO scheduler's substrate (`scheduler::nn`) only needed plain MLP
+//! layers; the drafter adds what a causal-attention block needs on top of
+//! the same hand-rolled forward/backward style: [`LayerNorm`] with full
+//! backprop, a free-function backward for the shared
+//! [`crate::scheduler::nn::Linear`] layer (the MLP couples its backward
+//! to the whole-net cache; attention needs per-layer control), and
+//! sinusoidal timestep features. Everything is finite-difference checked
+//! in the tests below — the same discipline `scheduler::nn` uses.
+
+use crate::config::DIFFUSION_STEPS;
+use crate::scheduler::nn::Linear;
+
+/// Numerical floor inside LayerNorm's inverse standard deviation.
+const LN_EPS: f32 = 1e-5;
+
+/// Number of sinusoidal timestep features fed to the drafter.
+pub const TIME_FEATS: usize = 8;
+
+/// LayerNorm with learnable gain/bias over a fixed feature width.
+#[derive(Debug, Clone)]
+pub struct LayerNorm {
+    /// Per-dimension gain γ.
+    pub gamma: Vec<f32>,
+    /// Per-dimension bias β.
+    pub beta: Vec<f32>,
+}
+
+impl LayerNorm {
+    /// Identity-initialized LayerNorm over `dim` features (γ = 1, β = 0).
+    pub fn new(dim: usize) -> Self {
+        Self { gamma: vec![1.0; dim], beta: vec![0.0; dim] }
+    }
+
+    /// y = γ·(x − μ)/√(σ² + ε) + β. Returns `(mean, rstd)`, which the
+    /// backward pass needs alongside the raw input.
+    pub fn forward(&self, x: &[f32], y: &mut [f32]) -> (f32, f32) {
+        debug_assert_eq!(x.len(), self.gamma.len());
+        debug_assert_eq!(y.len(), self.gamma.len());
+        let n = x.len() as f32;
+        let mean = x.iter().sum::<f32>() / n;
+        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for i in 0..x.len() {
+            y[i] = self.gamma[i] * (x[i] - mean) * rstd + self.beta[i];
+        }
+        (mean, rstd)
+    }
+
+    /// Backward pass: accumulates dγ/dβ and **adds** dL/dx into `dx`
+    /// (callers sum contributions from residual branches).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward(
+        &self,
+        x: &[f32],
+        mean: f32,
+        rstd: f32,
+        dy: &[f32],
+        dgamma: &mut [f32],
+        dbeta: &mut [f32],
+        dx: &mut [f32],
+    ) {
+        let n = x.len();
+        let nf = n as f32;
+        let mut m1 = 0.0f32; // mean of dxhat
+        let mut m2 = 0.0f32; // mean of dxhat * xhat
+        for i in 0..n {
+            let xhat = (x[i] - mean) * rstd;
+            let dxh = dy[i] * self.gamma[i];
+            dgamma[i] += dy[i] * xhat;
+            dbeta[i] += dy[i];
+            m1 += dxh;
+            m2 += dxh * xhat;
+        }
+        m1 /= nf;
+        m2 /= nf;
+        for i in 0..n {
+            let xhat = (x[i] - mean) * rstd;
+            let dxh = dy[i] * self.gamma[i];
+            dx[i] += rstd * (dxh - m1 - xhat * m2);
+        }
+    }
+}
+
+/// Backward of `y = W x + b` for a shared [`Linear`]: accumulates dW/db
+/// and (when `dx` is given) **adds** dL/dx into it.
+pub fn linear_backward(
+    l: &Linear,
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+) {
+    debug_assert_eq!(x.len(), l.in_dim);
+    debug_assert_eq!(dy.len(), l.out_dim);
+    for o in 0..l.out_dim {
+        db[o] += dy[o];
+        let row = &mut dw[o * l.in_dim..(o + 1) * l.in_dim];
+        for (g, xv) in row.iter_mut().zip(x) {
+            *g += dy[o] * xv;
+        }
+    }
+    if let Some(dx) = dx {
+        for o in 0..l.out_dim {
+            let row = &l.w[o * l.in_dim..(o + 1) * l.in_dim];
+            for (dxi, wv) in dx.iter_mut().zip(row) {
+                *dxi += dy[o] * wv;
+            }
+        }
+    }
+}
+
+/// Sinusoidal features of a diffusion timestep: sin/cos pairs at
+/// doubling frequencies of u = t/(T−1) — smooth, bounded in [−1, 1],
+/// and distinct for every step of the schedule.
+pub fn time_features(t: usize) -> [f32; TIME_FEATS] {
+    let u = t as f32 / (DIFFUSION_STEPS - 1) as f32;
+    let mut out = [0.0f32; TIME_FEATS];
+    for i in 0..TIME_FEATS / 2 {
+        let freq = (1usize << i) as f32 * std::f32::consts::PI;
+        out[2 * i] = (freq * u).sin();
+        out[2 * i + 1] = (freq * u).cos();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_close;
+    use crate::util::Rng;
+
+    #[test]
+    fn layernorm_normalizes_before_gain() {
+        let ln = LayerNorm::new(16);
+        let mut rng = Rng::seed_from_u64(0);
+        let x: Vec<f32> = rng.normal_vec(16).iter().map(|v| 3.0 * v + 2.0).collect();
+        let mut y = vec![0.0; 16];
+        ln.forward(&x, &mut y);
+        let mean = y.iter().sum::<f32>() / 16.0;
+        let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+        assert_close(mean, 0.0, 1e-5);
+        assert_close(var, 1.0, 1e-3);
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_differences() {
+        let dim = 8;
+        let mut rng = Rng::seed_from_u64(1);
+        let mut ln = LayerNorm::new(dim);
+        for g in ln.gamma.iter_mut() {
+            *g = 1.0 + 0.3 * rng.normal();
+        }
+        let x: Vec<f32> = rng.normal_vec(dim);
+        let coef: Vec<f32> = rng.normal_vec(dim); // loss = Σ coef·y
+        let loss = |ln: &LayerNorm, x: &[f32]| -> f32 {
+            let mut y = vec![0.0; dim];
+            ln.forward(x, &mut y);
+            y.iter().zip(coef.iter()).map(|(a, b)| a * b).sum()
+        };
+        let mut y = vec![0.0; dim];
+        let (mean, rstd) = ln.forward(&x, &mut y);
+        let mut dgamma = vec![0.0; dim];
+        let mut dbeta = vec![0.0; dim];
+        let mut dx = vec![0.0; dim];
+        ln.backward(&x, mean, rstd, &coef, &mut dgamma, &mut dbeta, &mut dx);
+        let eps = 1e-3f32;
+        for i in 0..dim {
+            // dx
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&ln, &xp) - loss(&ln, &xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 2e-2 * fd.abs().max(dx[i].abs()).max(0.1),
+                "dx[{i}]: fd {fd} vs analytic {}",
+                dx[i]
+            );
+            // dgamma
+            let orig = ln.gamma[i];
+            ln.gamma[i] = orig + eps;
+            let lp = loss(&ln, &x);
+            ln.gamma[i] = orig - eps;
+            let lm = loss(&ln, &x);
+            ln.gamma[i] = orig;
+            let fdg = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fdg - dgamma[i]).abs() < 2e-2 * fdg.abs().max(dgamma[i].abs()).max(0.1),
+                "dgamma[{i}]: fd {fdg} vs analytic {}",
+                dgamma[i]
+            );
+            // dbeta = coef exactly
+            assert_close(dbeta[i], coef[i], 1e-6);
+        }
+    }
+
+    #[test]
+    fn linear_backward_matches_finite_differences() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut l = Linear::init(5, 3, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(5);
+        let coef: Vec<f32> = rng.normal_vec(3);
+        let loss = |l: &Linear, x: &[f32]| -> f32 {
+            let mut y = vec![0.0; 3];
+            l.forward(x, &mut y);
+            y.iter().zip(coef.iter()).map(|(a, b)| a * b).sum()
+        };
+        let mut dw = vec![0.0; 15];
+        let mut db = vec![0.0; 3];
+        let mut dx = vec![0.0; 5];
+        linear_backward(&l, &x, &coef, &mut dw, &mut db, Some(&mut dx));
+        let eps = 1e-3f32;
+        for pi in [0usize, 7, 14] {
+            let orig = l.w[pi];
+            l.w[pi] = orig + eps;
+            let lp = loss(&l, &x);
+            l.w[pi] = orig - eps;
+            let lm = loss(&l, &x);
+            l.w[pi] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dw[pi]).abs() < 2e-2 * fd.abs().max(dw[pi].abs()).max(0.1),
+                "dw[{pi}]: fd {fd} vs {}",
+                dw[pi]
+            );
+        }
+        for i in 0..5 {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&l, &xp) - loss(&l, &xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 2e-2 * fd.abs().max(dx[i].abs()).max(0.1),
+                "dx[{i}]: fd {fd} vs {}",
+                dx[i]
+            );
+        }
+        for i in 0..3 {
+            assert_close(db[i], coef[i], 1e-6);
+        }
+    }
+
+    #[test]
+    fn time_features_are_bounded_and_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for t in 0..DIFFUSION_STEPS {
+            let f = time_features(t);
+            for v in f {
+                assert!(v.is_finite() && v.abs() <= 1.0 + 1e-6);
+            }
+            let key: Vec<u32> = f.iter().map(|v| v.to_bits()).collect();
+            assert!(seen.insert(key), "timestep {t} collides with an earlier one");
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! The native distilled-drafter subsystem (paper §3.1, first pillar:
+//! "distill a Transformer-based drafter to imitate the base model and
+//! replace its costly denoising calls").
+//!
+//! Before this subsystem the crate could only *consume* drafters (the
+//! mock's analytic pair, or opaque AOT artifacts); it can now *produce*
+//! them in-crate and swap them at serve time:
+//!
+//! ```text
+//! train-time                                serve-time
+//! ----------                                ----------
+//! base Denoiser ──roll env fleet──▶ (x_t, t, cond, ε_target) tuples
+//!        │                              │  (stored as target x̂0)
+//!        │                              ▼
+//!        │                  train::distill — MSE + K-step
+//!        │                  rollout-consistency windows
+//!        │                              │
+//!        │                              ▼
+//!        │                  model::DrafterModel  ──save/load──▶ JSON
+//!        │                  (1-block causal Transformer         checkpoint
+//!        │                   over denoising-step tokens)            │
+//!        ▼                                                          ▼
+//! backend::DistilledDrafter::new(base, model)  ◀── serve --drafter PATH
+//!   · target_* / encode delegate to base (losslessness untouched)
+//!   · drafter_step / natively fused drafter_rollout from the model
+//!     (Some for every k, KV-cached causal decode, k/8 NFE)
+//! ```
+//!
+//! `ts-dp distill-drafter` drives the pipeline from the CLI; the serving
+//! fleet (`serve --drafter`), the open-loop harness (`load-sweep
+//! --drafter`) and the episode evaluator (`episode --drafter`) all wrap
+//! their replicas through [`DistilledDrafter`], and
+//! [`crate::coordinator::workload::DrafterKind`] labels the swap in
+//! session specs and metrics summaries.
+
+pub mod backend;
+pub mod cli;
+pub mod layers;
+pub mod model;
+pub mod train;
+
+pub use backend::DistilledDrafter;
+pub use model::DrafterModel;
+pub use train::{
+    accept_scorecard, accept_stats, collect_trajectories, distill, train_on, DistillConfig,
+};

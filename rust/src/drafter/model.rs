@@ -1,0 +1,952 @@
+//! The distilled drafter: a tiny one-block Transformer ε-predictor.
+//!
+//! Architecture (paper §3.1: the drafter is a single Transformer block
+//! against the target's eight — hence the 1/8-NFE accounting):
+//!
+//! * **Tokens are denoising steps.** Token j of a rollout carries
+//!   `(x_{t−j}, time_features(t−j), cond)`; causal self-attention lets
+//!   step j condition on every earlier step of the *same* rollout, which
+//!   is what makes a fused K-step rollout genuinely different from K
+//!   independent single-step calls (and what the rollout-consistency
+//!   loss trains — see `drafter::train`).
+//! * **x̂0 parametrization.** The head predicts the clean sample x̂0
+//!   (tanh-bounded, matching the schedule's `clip_sample` range) rather
+//!   than ε directly; [`eps_from_x0`] converts at the [`Denoiser`]
+//!   boundary. This preconditions the regression: raw ε targets blow up
+//!   as √(1−ᾱ_t) → 0 in late denoising while x̂0 stays in [−1, 1], and
+//!   the engine's accept test only ever sees ε through `predict_x0`, so
+//!   the two parametrizations are equivalent at serve time.
+//! * **Hand-rolled backprop** in the `scheduler::nn` style (no autograd
+//!   crates exist here); gradients are finite-difference checked below.
+//!
+//! [`Denoiser`]: crate::policy::Denoiser
+
+use crate::config::{ACT_DIM, DIFFUSION_STEPS, EMBED_DIM, HORIZON};
+use crate::diffusion::DdpmSchedule;
+use crate::drafter::layers::{linear_backward, time_features, LayerNorm, TIME_FEATS};
+use crate::scheduler::nn::Linear;
+use crate::util::json::Json;
+use crate::util::math::{add_scaled, dot};
+use crate::util::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Flattened segment size (one token's latent).
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// Width of the drafter's token embedding.
+pub const D_MODEL: usize = 32;
+/// Width of the feed-forward hidden layer.
+pub const D_FF: usize = 64;
+/// Token input width: latent ‖ timestep features ‖ conditioning.
+pub const IN_DIM: usize = SEG + TIME_FEATS + EMBED_DIM;
+/// Checkpoint format tag written into every saved drafter.
+pub const CHECKPOINT_FORMAT: &str = "ts-dp-drafter-v1";
+
+/// One-block causal Transformer over denoising-step tokens.
+#[derive(Debug, Clone)]
+pub struct DrafterModel {
+    /// Token embedding: IN_DIM → D_MODEL.
+    pub w_in: Linear,
+    /// Pre-attention LayerNorm.
+    pub ln1: LayerNorm,
+    /// Query projection.
+    pub wq: Linear,
+    /// Key projection.
+    pub wk: Linear,
+    /// Value projection.
+    pub wv: Linear,
+    /// Attention output projection.
+    pub wo: Linear,
+    /// Pre-MLP LayerNorm.
+    pub ln2: LayerNorm,
+    /// Feed-forward up projection (tanh activation).
+    pub w1: Linear,
+    /// Feed-forward down projection.
+    pub w2: Linear,
+    /// Final LayerNorm before the head.
+    pub lnf: LayerNorm,
+    /// Output head: D_MODEL → SEG, tanh-squashed into the x̂0 range.
+    pub w_out: Linear,
+}
+
+/// Per-sequence activation cache for [`DrafterModel::backward_seq`].
+pub struct SeqCache {
+    inputs: Vec<Vec<f32>>,
+    e: Vec<Vec<f32>>,
+    n1: Vec<Vec<f32>>,
+    n1_stats: Vec<(f32, f32)>,
+    q: Vec<Vec<f32>>,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    attn: Vec<Vec<f32>>,
+    ctx: Vec<Vec<f32>>,
+    h: Vec<Vec<f32>>,
+    n2: Vec<Vec<f32>>,
+    n2_stats: Vec<(f32, f32)>,
+    f1: Vec<Vec<f32>>,
+    z: Vec<Vec<f32>>,
+    nf: Vec<Vec<f32>>,
+    nf_stats: Vec<(f32, f32)>,
+    y: Vec<Vec<f32>>,
+}
+
+/// Parameter gradients mirroring [`DrafterModel`]'s layout; each entry is
+/// `(d_weights_or_gamma, d_bias_or_beta)`.
+pub struct DrafterGrads {
+    /// Token embedding grads.
+    pub w_in: (Vec<f32>, Vec<f32>),
+    /// Pre-attention LayerNorm grads.
+    pub ln1: (Vec<f32>, Vec<f32>),
+    /// Query grads.
+    pub wq: (Vec<f32>, Vec<f32>),
+    /// Key grads.
+    pub wk: (Vec<f32>, Vec<f32>),
+    /// Value grads.
+    pub wv: (Vec<f32>, Vec<f32>),
+    /// Attention output grads.
+    pub wo: (Vec<f32>, Vec<f32>),
+    /// Pre-MLP LayerNorm grads.
+    pub ln2: (Vec<f32>, Vec<f32>),
+    /// Feed-forward up grads.
+    pub w1: (Vec<f32>, Vec<f32>),
+    /// Feed-forward down grads.
+    pub w2: (Vec<f32>, Vec<f32>),
+    /// Final LayerNorm grads.
+    pub lnf: (Vec<f32>, Vec<f32>),
+    /// Output head grads.
+    pub w_out: (Vec<f32>, Vec<f32>),
+}
+
+fn lin_zeros(l: &Linear) -> (Vec<f32>, Vec<f32>) {
+    (vec![0.0; l.w.len()], vec![0.0; l.b.len()])
+}
+
+fn ln_zeros(l: &LayerNorm) -> (Vec<f32>, Vec<f32>) {
+    (vec![0.0; l.gamma.len()], vec![0.0; l.beta.len()])
+}
+
+impl DrafterGrads {
+    /// Zero gradients matching `m`'s shapes.
+    pub fn zeros(m: &DrafterModel) -> Self {
+        Self {
+            w_in: lin_zeros(&m.w_in),
+            ln1: ln_zeros(&m.ln1),
+            wq: lin_zeros(&m.wq),
+            wk: lin_zeros(&m.wk),
+            wv: lin_zeros(&m.wv),
+            wo: lin_zeros(&m.wo),
+            ln2: ln_zeros(&m.ln2),
+            w1: lin_zeros(&m.w1),
+            w2: lin_zeros(&m.w2),
+            lnf: ln_zeros(&m.lnf),
+            w_out: lin_zeros(&m.w_out),
+        }
+    }
+
+    fn views(&self) -> [&[f32]; 22] {
+        [
+            &self.w_in.0,
+            &self.w_in.1,
+            &self.ln1.0,
+            &self.ln1.1,
+            &self.wq.0,
+            &self.wq.1,
+            &self.wk.0,
+            &self.wk.1,
+            &self.wv.0,
+            &self.wv.1,
+            &self.wo.0,
+            &self.wo.1,
+            &self.ln2.0,
+            &self.ln2.1,
+            &self.w1.0,
+            &self.w1.1,
+            &self.w2.0,
+            &self.w2.1,
+            &self.lnf.0,
+            &self.lnf.1,
+            &self.w_out.0,
+            &self.w_out.1,
+        ]
+    }
+
+    fn views_mut(&mut self) -> [&mut Vec<f32>; 22] {
+        [
+            &mut self.w_in.0,
+            &mut self.w_in.1,
+            &mut self.ln1.0,
+            &mut self.ln1.1,
+            &mut self.wq.0,
+            &mut self.wq.1,
+            &mut self.wk.0,
+            &mut self.wk.1,
+            &mut self.wv.0,
+            &mut self.wv.1,
+            &mut self.wo.0,
+            &mut self.wo.1,
+            &mut self.ln2.0,
+            &mut self.ln2.1,
+            &mut self.w1.0,
+            &mut self.w1.1,
+            &mut self.w2.0,
+            &mut self.w2.1,
+            &mut self.lnf.0,
+            &mut self.lnf.1,
+            &mut self.w_out.0,
+            &mut self.w_out.1,
+        ]
+    }
+
+    /// Zero every gradient in place (reuse across optimizer steps).
+    pub fn clear(&mut self) {
+        for v in self.views_mut() {
+            for g in v.iter_mut() {
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// Scale every gradient (e.g. 1/batch).
+    pub fn scale(&mut self, s: f32) {
+        for v in self.views_mut() {
+            for g in v.iter_mut() {
+                *g *= s;
+            }
+        }
+    }
+
+    /// Flatten in the canonical parameter order ([`DrafterModel::flatten`]
+    /// uses the same order, so flat Adam applies positionally).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for v in self.views() {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+}
+
+/// Numerically-stable in-place softmax over one attention row.
+fn softmax_inplace(scores: &mut [f32]) {
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    let inv = 1.0 / sum.max(1e-20);
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+}
+
+impl DrafterModel {
+    /// Xavier-initialized model.
+    pub fn init(rng: &mut Rng) -> Self {
+        Self {
+            w_in: Linear::init(IN_DIM, D_MODEL, rng),
+            ln1: LayerNorm::new(D_MODEL),
+            wq: Linear::init(D_MODEL, D_MODEL, rng),
+            wk: Linear::init(D_MODEL, D_MODEL, rng),
+            wv: Linear::init(D_MODEL, D_MODEL, rng),
+            wo: Linear::init(D_MODEL, D_MODEL, rng),
+            ln2: LayerNorm::new(D_MODEL),
+            w1: Linear::init(D_MODEL, D_FF, rng),
+            w2: Linear::init(D_FF, D_MODEL, rng),
+            lnf: LayerNorm::new(D_MODEL),
+            w_out: Linear::init(D_MODEL, SEG, rng),
+        }
+    }
+
+    /// Assemble one token's input: `x ‖ time_features(t) ‖ cond`.
+    pub fn token_input(x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), SEG);
+        debug_assert_eq!(cond.len(), EMBED_DIM);
+        let mut input = Vec::with_capacity(IN_DIM);
+        input.extend_from_slice(x);
+        input.extend_from_slice(&time_features(t));
+        input.extend_from_slice(cond);
+        input
+    }
+
+    /// Forward over a training sequence of `ts.len()` tokens (teacher-
+    /// forced latents `xs`, row-major L×SEG; `cond` shared). Returns the
+    /// flat L×SEG x̂0 predictions and the cache for [`Self::backward_seq`].
+    pub fn forward_seq(&self, xs: &[f32], ts: &[usize], cond: &[f32]) -> (Vec<f32>, SeqCache) {
+        let l = ts.len();
+        debug_assert_eq!(xs.len(), l * SEG);
+        let scale = 1.0 / (D_MODEL as f32).sqrt();
+        let mut cache = SeqCache {
+            inputs: Vec::with_capacity(l),
+            e: Vec::with_capacity(l),
+            n1: Vec::with_capacity(l),
+            n1_stats: Vec::with_capacity(l),
+            q: Vec::with_capacity(l),
+            k: Vec::with_capacity(l),
+            v: Vec::with_capacity(l),
+            attn: Vec::with_capacity(l),
+            ctx: Vec::with_capacity(l),
+            h: Vec::with_capacity(l),
+            n2: Vec::with_capacity(l),
+            n2_stats: Vec::with_capacity(l),
+            f1: Vec::with_capacity(l),
+            z: Vec::with_capacity(l),
+            nf: Vec::with_capacity(l),
+            nf_stats: Vec::with_capacity(l),
+            y: Vec::with_capacity(l),
+        };
+        let mut outputs = Vec::with_capacity(l * SEG);
+        for j in 0..l {
+            let input = Self::token_input(&xs[j * SEG..(j + 1) * SEG], ts[j], cond);
+            let mut e = vec![0.0f32; D_MODEL];
+            self.w_in.forward(&input, &mut e);
+            let mut n1 = vec![0.0f32; D_MODEL];
+            let s1 = self.ln1.forward(&e, &mut n1);
+            let mut q = vec![0.0f32; D_MODEL];
+            self.wq.forward(&n1, &mut q);
+            let mut k = vec![0.0f32; D_MODEL];
+            self.wk.forward(&n1, &mut k);
+            let mut v = vec![0.0f32; D_MODEL];
+            self.wv.forward(&n1, &mut v);
+            cache.k.push(k);
+            cache.v.push(v);
+
+            let mut attn = vec![0.0f32; j + 1];
+            for i in 0..=j {
+                attn[i] = dot(&q, &cache.k[i]) * scale;
+            }
+            softmax_inplace(&mut attn);
+            let mut ctx = vec![0.0f32; D_MODEL];
+            for i in 0..=j {
+                add_scaled(&mut ctx, &cache.v[i], attn[i]);
+            }
+            let mut o = vec![0.0f32; D_MODEL];
+            self.wo.forward(&ctx, &mut o);
+            let mut h = vec![0.0f32; D_MODEL];
+            for i in 0..D_MODEL {
+                h[i] = e[i] + o[i];
+            }
+            let mut n2 = vec![0.0f32; D_MODEL];
+            let s2 = self.ln2.forward(&h, &mut n2);
+            let mut f1 = vec![0.0f32; D_FF];
+            self.w1.forward(&n2, &mut f1);
+            for a in f1.iter_mut() {
+                *a = a.tanh();
+            }
+            let mut f2 = vec![0.0f32; D_MODEL];
+            self.w2.forward(&f1, &mut f2);
+            let mut z = vec![0.0f32; D_MODEL];
+            for i in 0..D_MODEL {
+                z[i] = h[i] + f2[i];
+            }
+            let mut nf = vec![0.0f32; D_MODEL];
+            let sf = self.lnf.forward(&z, &mut nf);
+            let mut y = vec![0.0f32; SEG];
+            self.w_out.forward(&nf, &mut y);
+            for a in y.iter_mut() {
+                *a = a.tanh();
+            }
+
+            outputs.extend_from_slice(&y);
+            cache.inputs.push(input);
+            cache.e.push(e);
+            cache.n1.push(n1);
+            cache.n1_stats.push(s1);
+            cache.q.push(q);
+            cache.attn.push(attn);
+            cache.ctx.push(ctx);
+            cache.h.push(h);
+            cache.n2.push(n2);
+            cache.n2_stats.push(s2);
+            cache.f1.push(f1);
+            cache.z.push(z);
+            cache.nf.push(nf);
+            cache.nf_stats.push(sf);
+            cache.y.push(y);
+        }
+        (outputs, cache)
+    }
+
+    /// Backward over a cached sequence: `dys` is dL/dy, flat L×SEG;
+    /// parameter gradients accumulate into `grads`.
+    pub fn backward_seq(&self, cache: &SeqCache, dys: &[f32], grads: &mut DrafterGrads) {
+        let l = cache.y.len();
+        debug_assert_eq!(dys.len(), l * SEG);
+        let scale = 1.0 / (D_MODEL as f32).sqrt();
+        let mut d_e = vec![vec![0.0f32; D_MODEL]; l];
+        let mut d_q = vec![vec![0.0f32; D_MODEL]; l];
+        let mut d_k = vec![vec![0.0f32; D_MODEL]; l];
+        let mut d_v = vec![vec![0.0f32; D_MODEL]; l];
+
+        // Phase A: everything above the attention projections. Cross-token
+        // coupling happens only through d_k / d_v, which accumulate here
+        // and are folded back in phase B once complete.
+        for j in 0..l {
+            let dy = &dys[j * SEG..(j + 1) * SEG];
+            let mut du = vec![0.0f32; SEG];
+            for i in 0..SEG {
+                let yv = cache.y[j][i];
+                du[i] = dy[i] * (1.0 - yv * yv);
+            }
+            let mut d_nf = vec![0.0f32; D_MODEL];
+            linear_backward(
+                &self.w_out,
+                &cache.nf[j],
+                &du,
+                &mut grads.w_out.0,
+                &mut grads.w_out.1,
+                Some(&mut d_nf),
+            );
+            let mut d_z = vec![0.0f32; D_MODEL];
+            let (mf, rf) = cache.nf_stats[j];
+            self.lnf.backward(
+                &cache.z[j],
+                mf,
+                rf,
+                &d_nf,
+                &mut grads.lnf.0,
+                &mut grads.lnf.1,
+                &mut d_z,
+            );
+            // z = h + f2
+            let mut d_h = d_z.clone();
+            let mut d_f1 = vec![0.0f32; D_FF];
+            linear_backward(
+                &self.w2,
+                &cache.f1[j],
+                &d_z,
+                &mut grads.w2.0,
+                &mut grads.w2.1,
+                Some(&mut d_f1),
+            );
+            let mut d_pre1 = vec![0.0f32; D_FF];
+            for i in 0..D_FF {
+                let a = cache.f1[j][i];
+                d_pre1[i] = d_f1[i] * (1.0 - a * a);
+            }
+            let mut d_n2 = vec![0.0f32; D_MODEL];
+            linear_backward(
+                &self.w1,
+                &cache.n2[j],
+                &d_pre1,
+                &mut grads.w1.0,
+                &mut grads.w1.1,
+                Some(&mut d_n2),
+            );
+            let (m2, r2) = cache.n2_stats[j];
+            self.ln2.backward(
+                &cache.h[j],
+                m2,
+                r2,
+                &d_n2,
+                &mut grads.ln2.0,
+                &mut grads.ln2.1,
+                &mut d_h,
+            );
+            // h = e + o
+            for i in 0..D_MODEL {
+                d_e[j][i] += d_h[i];
+            }
+            let mut d_ctx = vec![0.0f32; D_MODEL];
+            linear_backward(
+                &self.wo,
+                &cache.ctx[j],
+                &d_h,
+                &mut grads.wo.0,
+                &mut grads.wo.1,
+                Some(&mut d_ctx),
+            );
+            // Attention row j: ctx_j = Σ_i a_{ji} v_i over i ≤ j.
+            let a = &cache.attn[j];
+            let mut d_a = vec![0.0f32; j + 1];
+            for i in 0..=j {
+                d_a[i] = dot(&cache.v[i], &d_ctx);
+                add_scaled(&mut d_v[i], &d_ctx, a[i]);
+            }
+            let sum_da_a: f32 = (0..=j).map(|i| d_a[i] * a[i]).sum();
+            for i in 0..=j {
+                let d_score = a[i] * (d_a[i] - sum_da_a) * scale;
+                add_scaled(&mut d_q[j], &cache.k[i], d_score);
+                add_scaled(&mut d_k[i], &cache.q[j], d_score);
+            }
+        }
+
+        // Phase B: fold the completed q/k/v grads through the projections,
+        // the pre-attention LayerNorm, and the token embedding.
+        for j in 0..l {
+            let mut d_n1 = vec![0.0f32; D_MODEL];
+            linear_backward(
+                &self.wq,
+                &cache.n1[j],
+                &d_q[j],
+                &mut grads.wq.0,
+                &mut grads.wq.1,
+                Some(&mut d_n1),
+            );
+            linear_backward(
+                &self.wk,
+                &cache.n1[j],
+                &d_k[j],
+                &mut grads.wk.0,
+                &mut grads.wk.1,
+                Some(&mut d_n1),
+            );
+            linear_backward(
+                &self.wv,
+                &cache.n1[j],
+                &d_v[j],
+                &mut grads.wv.0,
+                &mut grads.wv.1,
+                Some(&mut d_n1),
+            );
+            let (m1, r1) = cache.n1_stats[j];
+            self.ln1.backward(
+                &cache.e[j],
+                m1,
+                r1,
+                &d_n1,
+                &mut grads.ln1.0,
+                &mut grads.ln1.1,
+                &mut d_e[j],
+            );
+            linear_backward(
+                &self.w_in,
+                &cache.inputs[j],
+                &d_e[j],
+                &mut grads.w_in.0,
+                &mut grads.w_in.1,
+                None,
+            );
+        }
+    }
+
+    /// Start an incremental rollout (KV-cached causal decoding) — the
+    /// fused-K-step serving path of
+    /// [`crate::drafter::backend::DistilledDrafter`].
+    pub fn start_rollout(&self) -> RolloutState<'_> {
+        RolloutState { model: self, ks: Vec::new(), vs: Vec::new() }
+    }
+
+    /// Single-step x̂0 prediction with no rollout context (sequence
+    /// length 1) — what `drafter_step` serves.
+    pub fn infer_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
+        self.start_rollout().push(x, t, cond)
+    }
+
+    fn flat_views(&self) -> [&[f32]; 22] {
+        [
+            &self.w_in.w,
+            &self.w_in.b,
+            &self.ln1.gamma,
+            &self.ln1.beta,
+            &self.wq.w,
+            &self.wq.b,
+            &self.wk.w,
+            &self.wk.b,
+            &self.wv.w,
+            &self.wv.b,
+            &self.wo.w,
+            &self.wo.b,
+            &self.ln2.gamma,
+            &self.ln2.beta,
+            &self.w1.w,
+            &self.w1.b,
+            &self.w2.w,
+            &self.w2.b,
+            &self.lnf.gamma,
+            &self.lnf.beta,
+            &self.w_out.w,
+            &self.w_out.b,
+        ]
+    }
+
+    fn flat_views_mut(&mut self) -> [&mut Vec<f32>; 22] {
+        [
+            &mut self.w_in.w,
+            &mut self.w_in.b,
+            &mut self.ln1.gamma,
+            &mut self.ln1.beta,
+            &mut self.wq.w,
+            &mut self.wq.b,
+            &mut self.wk.w,
+            &mut self.wk.b,
+            &mut self.wv.w,
+            &mut self.wv.b,
+            &mut self.wo.w,
+            &mut self.wo.b,
+            &mut self.ln2.gamma,
+            &mut self.ln2.beta,
+            &mut self.w1.w,
+            &mut self.w1.b,
+            &mut self.w2.w,
+            &mut self.w2.b,
+            &mut self.lnf.gamma,
+            &mut self.lnf.beta,
+            &mut self.w_out.w,
+            &mut self.w_out.b,
+        ]
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.flat_views().iter().map(|v| v.len()).sum()
+    }
+
+    /// Flatten all parameters in the canonical order shared with
+    /// [`DrafterGrads::flatten`].
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for v in self.flat_views() {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Load parameters from a flat vector (canonical order).
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        let mut i = 0;
+        for v in self.flat_views_mut() {
+            let n = v.len();
+            v.copy_from_slice(&flat[i..i + n]);
+            i += n;
+        }
+        assert_eq!(i, flat.len(), "flat drafter parameter size mismatch");
+    }
+
+    /// Serialize to a checkpoint (architecture dims + flat weights).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(CHECKPOINT_FORMAT.into())),
+            ("d_model", Json::Num(D_MODEL as f64)),
+            ("d_ff", Json::Num(D_FF as f64)),
+            ("time_feats", Json::Num(TIME_FEATS as f64)),
+            ("seg", Json::Num(SEG as f64)),
+            ("embed_dim", Json::Num(EMBED_DIM as f64)),
+            ("diffusion_steps", Json::Num(DIFFUSION_STEPS as f64)),
+            ("params", Json::nums(self.flatten().into_iter().map(|x| x as f64))),
+        ])
+    }
+
+    /// Deserialize, cross-checking every architecture dimension against
+    /// this build's constants so a drifted checkpoint fails loudly
+    /// instead of mis-executing (same policy as `runtime::artifact`).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let format = v.get("format")?.as_str()?.to_string();
+        ensure!(
+            format == CHECKPOINT_FORMAT,
+            "drafter checkpoint format '{format}' != '{CHECKPOINT_FORMAT}'"
+        );
+        for (key, want) in [
+            ("d_model", D_MODEL),
+            ("d_ff", D_FF),
+            ("time_feats", TIME_FEATS),
+            ("seg", SEG),
+            ("embed_dim", EMBED_DIM),
+            ("diffusion_steps", DIFFUSION_STEPS),
+        ] {
+            let got = v.get(key)?.as_usize()?;
+            ensure!(got == want, "drafter checkpoint {key}={got}, this build wants {want}");
+        }
+        let params = v.get("params")?.as_f32_vec()?;
+        let mut model = DrafterModel::init(&mut Rng::seed_from_u64(0));
+        ensure!(
+            params.len() == model.n_params(),
+            "drafter checkpoint has {} params, model wants {}",
+            params.len(),
+            model.n_params()
+        );
+        model.unflatten(&params);
+        Ok(model)
+    }
+
+    /// Save to a JSON checkpoint file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().save(path)
+    }
+
+    /// Load from a JSON checkpoint file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::load(path)?)
+            .with_context(|| format!("loading drafter checkpoint {}", path.display()))
+    }
+}
+
+/// Incremental causal decoding state: keys/values of the rollout's
+/// earlier denoising-step tokens. `push` runs one token in O(context)
+/// attention cost — the fused rollout is one growing sequence, not K
+/// independent forwards.
+pub struct RolloutState<'m> {
+    model: &'m DrafterModel,
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+}
+
+impl RolloutState<'_> {
+    /// Tokens pushed so far.
+    pub fn len(&self) -> usize {
+        self.ks.len()
+    }
+
+    /// True before the first token.
+    pub fn is_empty(&self) -> bool {
+        self.ks.is_empty()
+    }
+
+    /// Append the next denoising-step token and return its x̂0
+    /// prediction. Identical arithmetic (and arithmetic order) to
+    /// [`DrafterModel::forward_seq`], so a teacher-forced training
+    /// sequence and an incremental rollout over the same tokens are
+    /// bit-identical.
+    pub fn push(&mut self, x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
+        let m = self.model;
+        let scale = 1.0 / (D_MODEL as f32).sqrt();
+        let input = DrafterModel::token_input(x, t, cond);
+        let mut e = vec![0.0f32; D_MODEL];
+        m.w_in.forward(&input, &mut e);
+        let mut n1 = vec![0.0f32; D_MODEL];
+        m.ln1.forward(&e, &mut n1);
+        let mut q = vec![0.0f32; D_MODEL];
+        m.wq.forward(&n1, &mut q);
+        let mut k = vec![0.0f32; D_MODEL];
+        m.wk.forward(&n1, &mut k);
+        let mut v = vec![0.0f32; D_MODEL];
+        m.wv.forward(&n1, &mut v);
+        self.ks.push(k);
+        self.vs.push(v);
+        let j = self.ks.len() - 1;
+
+        let mut attn = vec![0.0f32; j + 1];
+        for i in 0..=j {
+            attn[i] = dot(&q, &self.ks[i]) * scale;
+        }
+        softmax_inplace(&mut attn);
+        let mut ctx = vec![0.0f32; D_MODEL];
+        for i in 0..=j {
+            add_scaled(&mut ctx, &self.vs[i], attn[i]);
+        }
+        let mut o = vec![0.0f32; D_MODEL];
+        m.wo.forward(&ctx, &mut o);
+        let mut h = vec![0.0f32; D_MODEL];
+        for i in 0..D_MODEL {
+            h[i] = e[i] + o[i];
+        }
+        let mut n2 = vec![0.0f32; D_MODEL];
+        m.ln2.forward(&h, &mut n2);
+        let mut f1 = vec![0.0f32; D_FF];
+        m.w1.forward(&n2, &mut f1);
+        for a in f1.iter_mut() {
+            *a = a.tanh();
+        }
+        let mut f2 = vec![0.0f32; D_MODEL];
+        m.w2.forward(&f1, &mut f2);
+        let mut z = vec![0.0f32; D_MODEL];
+        for i in 0..D_MODEL {
+            z[i] = h[i] + f2[i];
+        }
+        let mut nf = vec![0.0f32; D_MODEL];
+        m.lnf.forward(&z, &mut nf);
+        let mut y = vec![0.0f32; SEG];
+        m.w_out.forward(&nf, &mut y);
+        for a in y.iter_mut() {
+            *a = a.tanh();
+        }
+        y
+    }
+}
+
+/// Convert an x̂0 prediction into the ε the [`crate::policy::Denoiser`]
+/// contract expects: ε = (x_t − √ᾱ_t·x̂0)/√(1−ᾱ_t). Exactly inverts the
+/// schedule's `predict_x0` for |x̂0| ≤ 1 (which tanh guarantees), so the
+/// engine's accept test sees the model's x̂0 unchanged.
+pub fn eps_from_x0(sched: &DdpmSchedule, t: usize, x: &[f32], x0: &[f32], out: &mut [f32]) {
+    let ab = sched.alpha_bars[t];
+    let sa = ab.sqrt();
+    let sb = (1.0 - ab).sqrt().max(1e-4);
+    for i in 0..x.len() {
+        out[i] = (x[i] - sa * x0[i]) / sb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    fn small_inputs(l: usize, seed: u64) -> (Vec<f32>, Vec<usize>, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let xs = rng.normal_vec(l * SEG);
+        let ts: Vec<usize> = (0..l).map(|j| 60 - j).collect();
+        let cond = rng.normal_vec(EMBED_DIM);
+        (xs, ts, cond)
+    }
+
+    #[test]
+    fn rollout_state_matches_forward_seq_bitwise() {
+        let mut rng = Rng::seed_from_u64(0);
+        let model = DrafterModel::init(&mut rng);
+        let (xs, ts, cond) = small_inputs(5, 1);
+        let (seq_out, _) = model.forward_seq(&xs, &ts, &cond);
+        let mut roll = model.start_rollout();
+        for j in 0..5 {
+            let y = roll.push(&xs[j * SEG..(j + 1) * SEG], ts[j], &cond);
+            assert_eq!(&seq_out[j * SEG..(j + 1) * SEG], &y[..], "token {j}");
+        }
+        assert_eq!(roll.len(), 5);
+    }
+
+    #[test]
+    fn infer_step_is_the_context_free_first_token() {
+        let mut rng = Rng::seed_from_u64(2);
+        let model = DrafterModel::init(&mut rng);
+        let (xs, ts, cond) = small_inputs(1, 3);
+        let (seq_out, _) = model.forward_seq(&xs, &ts, &cond);
+        assert_eq!(model.infer_step(&xs, ts[0], &cond), seq_out);
+    }
+
+    #[test]
+    fn outputs_are_tanh_bounded() {
+        let mut rng = Rng::seed_from_u64(4);
+        let model = DrafterModel::init(&mut rng);
+        let (xs, ts, cond) = small_inputs(3, 5);
+        let (out, _) = model.forward_seq(&xs, &ts, &cond);
+        for v in &out {
+            assert!(v.is_finite() && v.abs() <= 1.0);
+        }
+    }
+
+    /// The heart of the substrate: analytic gradients of the full
+    /// attention block against central finite differences, for
+    /// parameters in every layer.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::seed_from_u64(6);
+        let mut model = DrafterModel::init(&mut rng);
+        let (xs, ts, cond) = small_inputs(3, 7);
+        // Loss = Σ_j Σ_i coef_{j,i} · y_{j,i} for fixed pseudo-random coef.
+        let coef: Vec<f32> = rng.normal_vec(3 * SEG);
+        let loss = |m: &DrafterModel| -> f64 {
+            let (out, _) = m.forward_seq(&xs, &ts, &cond);
+            out.iter().zip(&coef).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let (_, cache) = model.forward_seq(&xs, &ts, &cond);
+        let mut grads = DrafterGrads::zeros(&model);
+        model.backward_seq(&cache, &coef, &mut grads);
+        let eps = 2e-3f32;
+        // (param accessor, grad accessor, probe index) across all layers.
+        type P = (fn(&mut DrafterModel) -> &mut Vec<f32>, fn(&DrafterGrads) -> &Vec<f32>, usize);
+        let probes: Vec<P> = vec![
+            (|m| &mut m.w_in.w, |g| &g.w_in.0, 40),
+            (|m| &mut m.w_in.b, |g| &g.w_in.1, 3),
+            (|m| &mut m.ln1.gamma, |g| &g.ln1.0, 5),
+            (|m| &mut m.wq.w, |g| &g.wq.0, 17),
+            (|m| &mut m.wk.w, |g| &g.wk.0, 33),
+            (|m| &mut m.wv.w, |g| &g.wv.0, 51),
+            (|m| &mut m.wo.w, |g| &g.wo.0, 9),
+            (|m| &mut m.ln2.beta, |g| &g.ln2.1, 2),
+            (|m| &mut m.w1.w, |g| &g.w1.0, 70),
+            (|m| &mut m.w2.w, |g| &g.w2.0, 44),
+            (|m| &mut m.lnf.gamma, |g| &g.lnf.0, 11),
+            (|m| &mut m.w_out.w, |g| &g.w_out.0, 200),
+            (|m| &mut m.w_out.b, |g| &g.w_out.1, 30),
+        ];
+        for (pi, (param, grad, idx)) in probes.iter().enumerate() {
+            let orig = param(&mut model)[*idx];
+            param(&mut model)[*idx] = orig + eps;
+            let lp = loss(&model);
+            param(&mut model)[*idx] = orig - eps;
+            let lm = loss(&model);
+            param(&mut model)[*idx] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = grad(&grads)[*idx];
+            assert!(
+                (fd - an).abs() < 3e-2 * fd.abs().max(an.abs()).max(0.1),
+                "probe {pi} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip_preserves_outputs() {
+        let mut rng = Rng::seed_from_u64(8);
+        let model = DrafterModel::init(&mut rng);
+        let flat = model.flatten();
+        assert_eq!(flat.len(), model.n_params());
+        let mut other = DrafterModel::init(&mut rng); // different init
+        other.unflatten(&flat);
+        let (xs, ts, cond) = small_inputs(2, 9);
+        assert_eq!(
+            model.forward_seq(&xs, &ts, &cond).0,
+            other.forward_seq(&xs, &ts, &cond).0
+        );
+    }
+
+    #[test]
+    fn grads_flatten_matches_model_order() {
+        let mut rng = Rng::seed_from_u64(10);
+        let model = DrafterModel::init(&mut rng);
+        let grads = DrafterGrads::zeros(&model);
+        let gv = grads.views();
+        let mv = model.flat_views();
+        assert_eq!(gv.len(), mv.len());
+        for (g, m) in gv.iter().zip(mv.iter()) {
+            assert_eq!(g.len(), m.len(), "grad/param shape drift");
+        }
+        assert_eq!(grads.flatten().len(), model.n_params());
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bitwise() {
+        let mut rng = Rng::seed_from_u64(12);
+        let model = DrafterModel::init(&mut rng);
+        let dir = TempDir::new("drafter_ckpt");
+        let path = dir.path().join("drafter.json");
+        model.save(&path).unwrap();
+        let loaded = DrafterModel::load(&path).unwrap();
+        let (xs, ts, cond) = small_inputs(4, 13);
+        assert_eq!(
+            model.forward_seq(&xs, &ts, &cond).0,
+            loaded.forward_seq(&xs, &ts, &cond).0,
+            "JSON roundtrip must preserve every bit"
+        );
+    }
+
+    #[test]
+    fn checkpoint_dim_drift_fails_loudly() {
+        let mut rng = Rng::seed_from_u64(14);
+        let model = DrafterModel::init(&mut rng);
+        let mut j = model.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("d_model".into(), Json::Num((D_MODEL + 1) as f64));
+        }
+        let err = DrafterModel::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("d_model"), "{err:#}");
+        let mut j2 = model.to_json();
+        if let Json::Obj(m) = &mut j2 {
+            m.insert("format".into(), Json::Str("bogus".into()));
+        }
+        assert!(DrafterModel::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn eps_from_x0_inverts_predict_x0() {
+        let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+        let mut rng = Rng::seed_from_u64(16);
+        let x = rng.normal_vec(SEG);
+        let x0: Vec<f32> = rng.normal_vec(SEG).iter().map(|v| v.tanh()).collect();
+        for t in [1usize, 10, 50, 99] {
+            let mut eps = vec![0.0; SEG];
+            eps_from_x0(&sched, t, &x, &x0, &mut eps);
+            let mut rec = vec![0.0; SEG];
+            sched.predict_x0(t, &x, &eps, &mut rec);
+            for i in 0..SEG {
+                assert!(
+                    (rec[i] - x0[i]).abs() < 1e-3,
+                    "t={t} i={i}: {} vs {}",
+                    rec[i],
+                    x0[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! In-crate drafter distillation (paper §3.1: "distill a Transformer-
+//! based drafter to imitate the base model").
+//!
+//! The trainer rolls the **base target model** across the env fleet:
+//! each trajectory resets/advances a real task env (receding-horizon,
+//! like serving), runs full target-only reverse diffusion from its
+//! observation, and records every step's `(x_t, t, cond, ε_target)`
+//! tuple — stored in the x̂0 parametrization (`predict_x0` of the target
+//! ε), which is the bounded, well-conditioned form of the same target
+//! (see `drafter::model`).
+//!
+//! Training samples two kinds of batch items from those trajectories:
+//!
+//! * **single-token MSE** (sequence length 1) — the plain imitation loss
+//!   matching `drafter_step` / the context-free first token of a round;
+//! * **K-step rollout-consistency windows** — K consecutive denoising
+//!   steps of one trajectory, teacher-forced through the causal
+//!   attention, matching how the fused `drafter_rollout` is actually
+//!   served (each step attends to the round's earlier steps).
+//!
+//! Both are MSE against the target's x̂0; `single_frac` sets the mix.
+
+use crate::config::{
+    DemoStyle, SpecParams, Task, ACT_DIM, DIFFUSION_STEPS, EXEC_STEPS, HORIZON, K_MAX,
+};
+use crate::diffusion::DdpmSchedule;
+use crate::drafter::backend::DistilledDrafter;
+use crate::drafter::model::{DrafterGrads, DrafterModel};
+use crate::envs::make_env;
+use crate::policy::Denoiser;
+use crate::scheduler::adam::FlatAdam;
+use crate::speculative::{SegmentTrace, SpecEngine};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// Flattened segment size.
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// One target-only denoising trajectory collected for distillation.
+pub struct Trajectory {
+    /// Conditioning vector of the env observation that produced it.
+    pub cond: Vec<f32>,
+    /// Latent inputs x_t, row-major steps×SEG, in rollout order
+    /// (t descending from T−1 to 0).
+    pub xs: Vec<f32>,
+    /// Diffusion timesteps, descending (parallel to `xs` rows).
+    pub ts: Vec<usize>,
+    /// Distillation targets: the target model's x̂0 at each step,
+    /// row-major steps×SEG.
+    pub x0s: Vec<f32>,
+}
+
+/// Distillation hyperparameters.
+#[derive(Debug, Clone)]
+pub struct DistillConfig {
+    /// Tasks whose envs feed conditioning (the env fleet slice).
+    pub tasks: Vec<Task>,
+    /// Demo style of those envs.
+    pub style: DemoStyle,
+    /// Denoising trajectories collected per task.
+    pub trajectories_per_task: usize,
+    /// Rollout-consistency window length K (clamped to [1, K_MAX]).
+    pub window: usize,
+    /// Optimizer steps.
+    pub steps: usize,
+    /// Batch items (windows) per optimizer step.
+    pub batch: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Fraction of batch items trained as single tokens (pure MSE); the
+    /// rest are K-step rollout-consistency windows.
+    pub single_frac: f32,
+    /// Base RNG seed (collection + training).
+    pub seed: u64,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        Self {
+            tasks: vec![Task::Lift, Task::PushT],
+            style: DemoStyle::Ph,
+            trajectories_per_task: 4,
+            window: 8,
+            steps: 400,
+            batch: 8,
+            lr: 3e-3,
+            single_frac: 0.25,
+            seed: 0,
+        }
+    }
+}
+
+/// Progress report passed to the training callback.
+#[derive(Debug, Clone)]
+pub struct DistillStats {
+    /// Optimizer step (0-based).
+    pub step: usize,
+    /// Mean per-element x̂0 MSE of the step's batch.
+    pub loss: f64,
+}
+
+/// Summary of one distillation run.
+#[derive(Debug, Clone)]
+pub struct DistillReport {
+    /// Trajectories trained on.
+    pub trajectories: usize,
+    /// Optimizer steps taken.
+    pub steps: usize,
+    /// Mean batch loss of the final step.
+    pub final_loss: f64,
+}
+
+/// Roll the base denoiser across the env fleet and record target-only
+/// denoising trajectories. Each trajectory advances its env by the
+/// denoised segment's first `EXEC_STEPS` actions (receding horizon), so
+/// consecutive trajectories see the conditioning distribution the
+/// serving path sees.
+pub fn collect_trajectories(
+    den: &dyn Denoiser,
+    tasks: &[Task],
+    style: DemoStyle,
+    per_task: usize,
+    seed: u64,
+) -> Result<Vec<Trajectory>> {
+    ensure!(!tasks.is_empty(), "distillation needs at least one task env");
+    ensure!(per_task > 0, "distillation needs at least one trajectory per task");
+    let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+    let mut out = Vec::with_capacity(tasks.len() * per_task);
+    for (ti, &task) in tasks.iter().enumerate() {
+        let mut env = make_env(task, style);
+        let mut rng = Rng::seed_from_u64(seed ^ ((ti as u64 + 1) << 20));
+        env.reset(&mut rng);
+        for _ in 0..per_task {
+            if env.done() {
+                env.reset(&mut rng);
+            }
+            let cond = den.encode(&env.observe())?;
+            let mut x = rng.normal_vec(SEG);
+            let mut xs = Vec::with_capacity(DIFFUSION_STEPS * SEG);
+            let mut ts = Vec::with_capacity(DIFFUSION_STEPS);
+            let mut x0s = Vec::with_capacity(DIFFUSION_STEPS * SEG);
+            let mut x0_target = vec![0.0f32; SEG];
+            let mut x0_scratch = vec![0.0f32; SEG];
+            let mut next = vec![0.0f32; SEG];
+            let mut mean = vec![0.0f32; SEG];
+            for t in (0..DIFFUSION_STEPS).rev() {
+                let eps = den.target_step(&x, t, &cond)?;
+                sched.predict_x0(t, &x, &eps, &mut x0_target);
+                xs.extend_from_slice(&x);
+                ts.push(t);
+                x0s.extend_from_slice(&x0_target);
+                let xi = rng.normal_vec(SEG);
+                sched.step_into(t, &x, &eps, &xi, &mut x0_scratch, &mut next, &mut mean);
+                x.copy_from_slice(&next);
+            }
+            out.push(Trajectory { cond, xs, ts, x0s });
+            // Receding-horizon env advance with the denoised segment.
+            for i in 0..EXEC_STEPS.min(HORIZON) {
+                if env.done() {
+                    break;
+                }
+                env.step(&x[i * ACT_DIM..(i + 1) * ACT_DIM]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Train a drafter on pre-collected trajectories. `init` continues
+/// training an existing model (fresh optimizer state) or `None` starts
+/// from a Xavier init.
+pub fn train_on(
+    trajs: &[Trajectory],
+    cfg: &DistillConfig,
+    init: Option<DrafterModel>,
+    mut progress: impl FnMut(&DistillStats),
+) -> Result<(DrafterModel, DistillReport)> {
+    ensure!(!trajs.is_empty(), "no distillation trajectories");
+    ensure!(cfg.steps > 0, "distillation needs at least one optimizer step");
+    let window = cfg.window.clamp(1, K_MAX);
+    let batch = cfg.batch.max(1);
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xd1af_7e41);
+    let mut model = match init {
+        Some(m) => m,
+        None => DrafterModel::init(&mut rng),
+    };
+    let mut adam = FlatAdam::new(model.n_params(), cfg.lr);
+    let mut grads = DrafterGrads::zeros(&model);
+    let mut last_loss = f64::NAN;
+    for step in 0..cfg.steps {
+        grads.clear();
+        let mut loss_sum = 0.0f64;
+        for _ in 0..batch {
+            let traj = &trajs[rng.below(trajs.len())];
+            let n = traj.ts.len();
+            let l = if rng.uniform() < cfg.single_frac { 1 } else { window.min(n) };
+            let s = rng.below(n - l + 1);
+            let xs = &traj.xs[s * SEG..(s + l) * SEG];
+            let ts = &traj.ts[s..s + l];
+            let target = &traj.x0s[s * SEG..(s + l) * SEG];
+            let (ys, cache) = model.forward_seq(xs, ts, &traj.cond);
+            let mut dys = vec![0.0f32; l * SEG];
+            let inv = 1.0 / (l * SEG) as f32;
+            let mut item_loss = 0.0f64;
+            for i in 0..l * SEG {
+                let d = ys[i] - target[i];
+                item_loss += (d as f64) * (d as f64);
+                dys[i] = 2.0 * d * inv;
+            }
+            loss_sum += item_loss / (l * SEG) as f64;
+            model.backward_seq(&cache, &dys, &mut grads);
+        }
+        grads.scale(1.0 / batch as f32);
+        let mut flat = model.flatten();
+        adam.step(&mut flat, &grads.flatten());
+        model.unflatten(&flat);
+        last_loss = loss_sum / batch as f64;
+        if step % 50 == 0 || step + 1 == cfg.steps {
+            progress(&DistillStats { step, loss: last_loss });
+        }
+    }
+    let report =
+        DistillReport { trajectories: trajs.len(), steps: cfg.steps, final_loss: last_loss };
+    Ok((model, report))
+}
+
+/// Full pipeline: collect trajectories from the base denoiser, then
+/// train a fresh drafter on them.
+pub fn distill(
+    den: &dyn Denoiser,
+    cfg: &DistillConfig,
+    progress: impl FnMut(&DistillStats),
+) -> Result<(DrafterModel, DistillReport)> {
+    let trajs =
+        collect_trajectories(den, &cfg.tasks, cfg.style, cfg.trajectories_per_task, cfg.seed)?;
+    train_on(&trajs, cfg, None, progress)
+}
+
+/// Acceptance measured by actually serving: speculative segments over
+/// fresh env rollouts.
+#[derive(Debug, Clone)]
+pub struct AcceptReport {
+    /// Accepted drafts / proposed drafts across all segments.
+    pub accept_rate: f64,
+    /// Mean NFE per segment.
+    pub mean_nfe: f64,
+    /// Segments generated.
+    pub segments: usize,
+}
+
+/// Run the speculative engine against `den` over env-driven conditioning
+/// and report the measured draft accept rate and NFE — the quality
+/// metric the drafter is distilled for (drafter quality bounds accept
+/// rate, which bounds speedup).
+pub fn accept_stats(
+    den: &dyn Denoiser,
+    tasks: &[Task],
+    style: DemoStyle,
+    segments_per_task: usize,
+    params: SpecParams,
+    seed: u64,
+) -> Result<AcceptReport> {
+    ensure!(!tasks.is_empty(), "accept_stats needs at least one task");
+    let engine = SpecEngine::new();
+    let mut drafts = 0usize;
+    let mut accepted = 0usize;
+    let mut nfe = 0.0f64;
+    let mut segments = 0usize;
+    for (ti, &task) in tasks.iter().enumerate() {
+        let mut env = make_env(task, style);
+        let mut rng = Rng::seed_from_u64(seed ^ ((ti as u64 + 1) << 18));
+        env.reset(&mut rng);
+        for _ in 0..segments_per_task {
+            if env.done() {
+                env.reset(&mut rng);
+            }
+            let cond = den.encode(&env.observe())?;
+            let mut trace = SegmentTrace::default();
+            let seg = engine.generate_segment(den, &cond, |_| params, &mut rng, &mut trace)?;
+            drafts += trace.drafts();
+            accepted += trace.accepted();
+            nfe += trace.nfe;
+            segments += 1;
+            for i in 0..EXEC_STEPS.min(HORIZON) {
+                if env.done() {
+                    break;
+                }
+                env.step(&seg[i * ACT_DIM..(i + 1) * ACT_DIM]);
+            }
+        }
+    }
+    Ok(AcceptReport {
+        accept_rate: if drafts == 0 { 0.0 } else { accepted as f64 / drafts as f64 },
+        mean_nfe: nfe / segments.max(1) as f64,
+        segments,
+    })
+}
+
+/// Accept-rate scorecard: the same engine measurement over an untrained
+/// drafter and over `model`, each wrapped around its own base backend.
+/// Returns `(untrained, distilled)` reports; the CLI and the example go
+/// through this so their before/after numbers stay comparable.
+#[allow(clippy::too_many_arguments)]
+pub fn accept_scorecard(
+    untrained_base: Box<dyn Denoiser>,
+    trained_base: Box<dyn Denoiser>,
+    model: &DrafterModel,
+    tasks: &[Task],
+    style: DemoStyle,
+    segments_per_task: usize,
+    params: SpecParams,
+    seed: u64,
+) -> Result<(AcceptReport, AcceptReport)> {
+    let untrained = DistilledDrafter::new(
+        untrained_base,
+        DrafterModel::init(&mut Rng::seed_from_u64(seed ^ 0xbade)),
+    );
+    let before = accept_stats(&untrained, tasks, style, segments_per_task, params, seed)?;
+    let distilled = DistilledDrafter::new(trained_base, model.clone());
+    let after = accept_stats(&distilled, tasks, style, segments_per_task, params, seed)?;
+    Ok((before, after))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::mock::MockDenoiser;
+
+    #[test]
+    fn trajectories_cover_the_schedule_in_rollout_order() {
+        let den = MockDenoiser::with_bias(0.0);
+        let trajs =
+            collect_trajectories(&den, &[Task::Lift], DemoStyle::Ph, 2, 0).unwrap();
+        assert_eq!(trajs.len(), 2);
+        for tr in &trajs {
+            assert_eq!(tr.ts.len(), DIFFUSION_STEPS);
+            assert_eq!(tr.xs.len(), DIFFUSION_STEPS * SEG);
+            assert_eq!(tr.x0s.len(), DIFFUSION_STEPS * SEG);
+            assert_eq!(tr.ts[0], DIFFUSION_STEPS - 1);
+            for w in tr.ts.windows(2) {
+                assert_eq!(w[0], w[1] + 1, "timesteps must descend by 1");
+            }
+            // x̂0 targets live in the clipped sample range.
+            for v in &tr.x0s {
+                assert!(v.is_finite() && v.abs() <= 1.0 + 1e-6);
+            }
+        }
+        // For the mock target the x̂0 target is the analytic clean action.
+        let clean = MockDenoiser::clean_action(&trajs[0].cond);
+        let last_row = &trajs[0].x0s[(DIFFUSION_STEPS - 1) * SEG..];
+        for i in 0..SEG {
+            assert!((last_row[i] - clean[i]).abs() < 2e-2, "x0 target drifted at {i}");
+        }
+    }
+
+    #[test]
+    fn short_training_run_reduces_loss() {
+        let den = MockDenoiser::with_bias(0.0);
+        let cfg = DistillConfig {
+            tasks: vec![Task::Lift],
+            trajectories_per_task: 2,
+            window: 4,
+            steps: 60,
+            batch: 4,
+            ..Default::default()
+        };
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        let (_, report) = distill(&den, &cfg, |s| {
+            if s.step == 0 {
+                first = s.loss;
+            }
+            last = s.loss;
+        })
+        .unwrap();
+        assert!(first.is_finite() && last.is_finite());
+        assert!(last < first, "loss must drop: first {first} last {last}");
+        assert!((report.final_loss - last).abs() < 1e-12);
+        assert_eq!(report.trajectories, 2);
+    }
+
+    #[test]
+    fn continuing_training_from_a_model_is_supported() {
+        let den = MockDenoiser::with_bias(0.0);
+        let trajs =
+            collect_trajectories(&den, &[Task::Lift], DemoStyle::Ph, 1, 3).unwrap();
+        let cfg = DistillConfig { steps: 5, batch: 2, window: 3, ..Default::default() };
+        let (m1, _) = train_on(&trajs, &cfg, None, |_| {}).unwrap();
+        let flat1 = m1.flatten();
+        let (m2, _) = train_on(&trajs, &cfg, Some(m1), |_| {}).unwrap();
+        assert_ne!(flat1, m2.flatten(), "continued training must move the weights");
+    }
+
+    #[test]
+    fn accept_stats_runs_the_engine_on_env_conditioning() {
+        // The mock's own drafter pair with zero bias accepts ~everything.
+        let den = MockDenoiser::with_bias(0.0);
+        let report = accept_stats(
+            &den,
+            &[Task::Lift, Task::PushT],
+            DemoStyle::Ph,
+            1,
+            SpecParams::fixed_k(8),
+            0,
+        )
+        .unwrap();
+        assert_eq!(report.segments, 2);
+        assert!(report.accept_rate > 0.95, "rate {}", report.accept_rate);
+        assert!(report.mean_nfe < 50.0, "nfe {}", report.mean_nfe);
+    }
+}

@@ -24,24 +24,38 @@ fn load_scheduler(args: &Args) -> Option<SchedulerPolicy> {
     SchedulerPolicy::load(&path).ok()
 }
 
-/// `ts-dp episode --task T --style ph|mh [--method M] [--adaptive]`.
+/// `ts-dp episode --task T --style ph|mh [--method M] [--adaptive]
+/// [--drafter FILE] [--backend artifacts|mock]`.
 pub fn cmd_episode(args: &Args) -> Result<()> {
+    use crate::coordinator::cli::{backend_choice, drafter_from_args, with_drafter};
+    use crate::coordinator::workload::DrafterKind;
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
     let style = DemoStyle::parse(&args.get_or("style", "ph")).context("bad --style")?;
     let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
     let seed = args.get_u64("seed", 0)?;
-    let den = load_runtime(args)?;
+    // Same backend selection + drafter swap as the serving CLI: eval
+    // runs see exactly the denoiser stack `serve --drafter` serves.
+    let drafter = drafter_from_args(args)?;
+    let den = with_drafter(backend_choice(args)?.build()?, &drafter);
     let mut env = make_env(task, style);
     let mut generator = make_generator(method);
     let result = if args.has_flag("adaptive") && method == Method::TsDp {
         let policy = load_scheduler(args)
             .context("--adaptive needs a trained scheduler policy (run train-scheduler)")?;
         let mut hook = ServingHook::new(policy);
-        run_episode(&den, env.as_mut(), generator.as_mut(), style, seed, Some(&mut hook))?
+        run_episode(den.as_ref(), env.as_mut(), generator.as_mut(), style, seed, Some(&mut hook))?
     } else {
-        run_episode(&den, env.as_mut(), generator.as_mut(), style, seed, None)?
+        run_episode(den.as_ref(), env.as_mut(), generator.as_mut(), style, seed, None)?
     };
-    println!("task={} style={} method={}", task.name(), style.name(), method.name());
+    let drafter_kind =
+        if drafter.is_some() { DrafterKind::Distilled } else { DrafterKind::Base };
+    println!(
+        "task={} style={} method={} drafter={}",
+        task.name(),
+        style.name(),
+        method.name(),
+        drafter_kind.name()
+    );
     println!("success={} score={:.2} steps={}", result.success, result.score, result.steps);
     println!(
         "segments={} nfe/segment={:.1} speed_x={:.2}",

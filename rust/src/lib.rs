@@ -12,6 +12,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod diffusion;
+pub mod drafter;
 pub mod envs;
 pub mod harness;
 pub mod policy;

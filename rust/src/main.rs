@@ -5,6 +5,7 @@
 //! * `serve`           — run the serving coordinator over env sessions
 //! * `episode`         — run a single policy episode and print metrics
 //! * `train-scheduler` — PPO-train the temporal scheduler
+//! * `distill-drafter` — distill a Transformer drafter from the base model
 //! * `table`           — regenerate a paper table (1..5, s1..s3)
 //! * `figure`          — regenerate a paper figure (3..6) as CSV
 
@@ -23,6 +24,7 @@ fn main() {
         "gen-demos" => cmd_gen_demos(&args),
         "episode" => ts_dp::harness::cli::cmd_episode(&args),
         "train-scheduler" => ts_dp::scheduler::cli::cmd_train(&args),
+        "distill-drafter" => ts_dp::drafter::cli::cmd_distill(&args),
         "table" => ts_dp::harness::cli::cmd_table(&args),
         "figure" => ts_dp::harness::cli::cmd_figure(&args),
         "serve" => ts_dp::coordinator::cli::cmd_serve(&args),
@@ -54,10 +56,15 @@ COMMANDS:
                    | --mix \"lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2\"
                    [--shards N] [--policy fair|fifo] [--max-batch N]
                    [--batch-window-us U] [--queue N] [--adaptive]
+                   [--drafter FILE]
   load-sweep       --task T [--method M] | --mix SPEC
-                   [--rates 1,5,20] [--requests N]
+                   [--rates 1,5,20] [--requests N] [--drafter FILE]
   episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
+                   [--drafter FILE]
   train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
+  distill-drafter  --out FILE [--tasks a,b,c] [--style ph|mh]
+                   [--trajectories N] [--steps N] [--window K]
+                   [--batch N] [--lr F] [--single-frac F]
   table            --id 1|2|3|4|5|s1|s2|s3 [--episodes N] [--out FILE]
   figure           --id 3|4|5|6 [--out-dir DIR]
 
@@ -66,9 +73,17 @@ entries, '*N' repeats a session; mutually exclusive with
 --task/--style/--method/--sessions/--episodes. --shards N serves the
 mix over N engine shards, each owning its own model replica.
 
+Drafter swapping: `distill-drafter` trains an in-crate Transformer
+drafter against the base model and saves a JSON checkpoint;
+`--drafter FILE` on serve/load-sweep/episode swaps it under every
+replica (target verification is untouched, so results stay lossless).
+
 Common options:
-  --artifacts DIR  artifact directory (default: artifacts)
-  --seed S         base RNG seed (default: 0)"
+  --artifacts DIR       artifact directory (default: artifacts)
+  --backend artifacts|mock
+                        base denoiser: AOT artifacts (default) or the
+                        analytic mock [--mock-bias B] (artifact-free)
+  --seed S              base RNG seed (default: 0)"
     );
 }
 

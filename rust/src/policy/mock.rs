@@ -121,16 +121,8 @@ impl Denoiser for MockDenoiser {
         Ok(self.eps_star(x, t, cond).iter().map(|e| e + bias).collect())
     }
 
-    fn drafter_rollout(
-        &self,
-        _k: usize,
-        _x: &[f32],
-        _t0: usize,
-        _cond: &[f32],
-        _noise: &[f32],
-    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
-        Ok(None) // mock has no fused artifacts; engine falls back to steps
-    }
+    // drafter_rollout: trait default (Ok(None)) — the mock has no fused
+    // artifacts, so the engine falls back to serial drafter steps.
 
     fn nfe(&self) -> &NfeCounter {
         &self.nfe

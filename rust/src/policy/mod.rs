@@ -70,17 +70,26 @@ pub trait Denoiser {
     }
     /// Drafter ε-prediction. Costs 1/8 NFE.
     fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>>;
-    /// Fused K-step drafter rollout, if an artifact exists for `k`:
+    /// Fused K-step drafter rollout, if the backend supports `k`:
     /// returns (draft samples, posterior means), each k×SEG. Costs k/8
-    /// NFE. Implementations without fused support return Ok(None).
+    /// NFE.
+    ///
+    /// The default returns `Ok(None)` — "no fused support, fall back to
+    /// serial [`Denoiser::drafter_step`] calls" — so backends without
+    /// fusion (and test denoisers) need no stub. [`ModelRuntime`]
+    /// overrides it per exported artifact size;
+    /// [`crate::drafter::DistilledDrafter`] overrides it with a natively
+    /// fused KV-cached rollout that serves every `k`.
     fn drafter_rollout(
         &self,
-        k: usize,
-        x: &[f32],
-        t0: usize,
-        cond: &[f32],
-        noise: &[f32],
-    ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+        _k: usize,
+        _x: &[f32],
+        _t0: usize,
+        _cond: &[f32],
+        _noise: &[f32],
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(None)
+    }
     /// NFE accounting.
     fn nfe(&self) -> &NfeCounter;
 }

@@ -1,4 +1,7 @@
-//! Adam optimizer for the hand-rolled MLPs.
+//! Adam optimizers for the hand-rolled networks: [`Adam`] updates an
+//! [`Mlp`] through its structured gradients, [`FlatAdam`] updates any
+//! flat parameter vector (used by the drafter Transformer, whose
+//! attention/layernorm parameters don't fit the MLP layout).
 
 use crate::scheduler::nn::{Mlp, MlpGrads};
 
@@ -48,6 +51,45 @@ impl Adam {
     }
 }
 
+/// Adam over one flat parameter vector (position `i` of `grads` updates
+/// position `i` of `params`). The drafter's distillation trainer flattens
+/// its Transformer parameters through this; anything whose gradients can
+/// be laid out flat can share it.
+#[derive(Debug, Clone)]
+pub struct FlatAdam {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl FlatAdam {
+    /// Adam state for `n` parameters with the standard moment
+    /// coefficients.
+    pub fn new(n: usize, lr: f32) -> Self {
+        Self { lr, b1: 0.9, b2: 0.999, eps: 1e-8, t: 0, m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Apply one update in place. `params` and `grads` must both have
+    /// the length this state was built for.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len(), "FlatAdam param size mismatch");
+        assert_eq!(grads.len(), self.m.len(), "FlatAdam grad size mismatch");
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t as i32);
+        let bc2 = 1.0 - self.b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * grads[i];
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * grads[i] * grads[i];
+            params[i] -=
+                self.lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + self.eps);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +125,22 @@ mod tests {
         }
         eval /= 200.0;
         assert!(eval < 0.02, "held-out loss {eval}");
+    }
+
+    /// FlatAdam must drive a flat quadratic to its minimum.
+    #[test]
+    fn flat_adam_minimizes_a_quadratic() {
+        let mut rng = Rng::seed_from_u64(1);
+        let target: Vec<f32> = rng.normal_vec(40);
+        let mut params = vec![0.0f32; 40];
+        let mut opt = FlatAdam::new(40, 5e-2);
+        for _ in 0..800 {
+            let grads: Vec<f32> =
+                params.iter().zip(&target).map(|(p, t)| 2.0 * (p - t)).collect();
+            opt.step(&mut params, &grads);
+        }
+        let err: f32 =
+            params.iter().zip(&target).map(|(p, t)| (p - t).abs()).fold(0.0, f32::max);
+        assert!(err < 1e-2, "max err {err}");
     }
 }

@@ -385,4 +385,61 @@ mod tests {
         assert_close(percentile(&xs, 0.5), 2.5, 1e-9);
         assert_eq!(percentile(&[], 0.5), 0.0);
     }
+
+    /// Property: folding per-shard reservoirs with `merge` estimates the
+    /// same percentiles (within sampling tolerance) as a single
+    /// reservoir fed the concatenated sample stream — the guarantee the
+    /// fleet metrics merge relies on. Shard streams are heterogeneous
+    /// (distinct offsets, sizes straddling the capacity so the
+    /// seen-weighting matters) but **overlapping**, keeping the union's
+    /// density bounded below everywhere — reservoir percentile noise
+    /// scales with 1/density, so disjoint ranges would make any fixed
+    /// tolerance meaningless near a CDF plateau.
+    #[test]
+    fn prop_merge_matches_concatenated_stream() {
+        use crate::util::testing::check_property;
+        const CAP: usize = 2048;
+        check_property("reservoir_merge_percentiles", 25, |rng| {
+            let shards = 1 + rng.below(4);
+            let mut merged = Reservoir::new(CAP);
+            let mut single = Reservoir::new(CAP);
+            let mut all: Vec<f64> = Vec::new();
+            for _ in 0..shards {
+                // 1000..4000 samples: some shards overflow CAP, some not.
+                let n = 1000 + rng.below(3000);
+                let offset = rng.uniform_f64(); // [0, 1): ranges overlap
+                let mut shard = Reservoir::new(CAP);
+                for _ in 0..n {
+                    let x = offset + 4.0 * rng.uniform_f64();
+                    shard.push(x);
+                    single.push(x);
+                    all.push(x);
+                }
+                merged.merge(&shard);
+            }
+            assert_eq!(merged.seen(), all.len() as u64);
+            assert!(merged.len() <= CAP);
+            let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            // CDF noise ~ sqrt(q(1-q)/CAP) ≈ 1.1%, mapped through the
+            // worst-case inverse density of the overlapping mixture:
+            // well under 10% of the value range.
+            let tol = 0.1 * (hi - lo).max(1e-9);
+            for q in [0.1, 0.5, 0.9] {
+                let exact = percentile(&all, q);
+                let est = merged.percentile(q);
+                assert!(
+                    (est - exact).abs() <= tol,
+                    "q={q}: merged {est} vs exact {exact} (tol {tol})"
+                );
+                // And the merged estimate agrees with a single reservoir
+                // that saw the concatenated stream directly.
+                let direct = single.percentile(q);
+                assert!(
+                    (est - direct).abs() <= 2.0 * tol,
+                    "q={q}: merged {est} vs direct reservoir {direct}"
+                );
+            }
+        });
+    }
 }

@@ -1,0 +1,215 @@
+//! Distilled-drafter acceptance criteria, end to end against the
+//! analytic mock target (no artifacts):
+//!
+//! 1. a drafter distilled in-test reaches ≥ 70% accept rate and beats
+//!    the untrained-drafter baseline;
+//! 2. a saved checkpoint reloads and serves across shards {1, 2, 4} ×
+//!    `max_batch` {1, 8} with bit-identical per-session segments and
+//!    NFE (the `serve_batching`-style losslessness invariance, now with
+//!    the distilled drafter swapped into every replica);
+//! 3. segments served with the distilled drafter match the target-only
+//!    distribution (losslessness is preserved by construction: accepted
+//!    prefixes pass the MH test, rejections are corrected by coupling,
+//!    and `target_*` delegation is bit-for-bit).
+//!
+//! One model is trained once (`OnceLock`) and shared by all tests; if
+//! the first budget misses the accept bar, training continues from the
+//! same weights on the same trajectories rather than starting over.
+
+use std::sync::OnceLock;
+use std::time::Duration;
+use ts_dp::config::{DemoStyle, Method, SpecParams, StageParams, Task, OBS_DIM};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{DrafterKind, WorkloadMix};
+use ts_dp::drafter::model::DrafterModel;
+use ts_dp::drafter::train::{accept_stats, collect_trajectories, train_on, DistillConfig};
+use ts_dp::drafter::DistilledDrafter;
+use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::policy::Denoiser;
+use ts_dp::speculative::{SegmentTrace, SpecEngine};
+use ts_dp::util::testing::TempDir;
+use ts_dp::util::Rng;
+
+/// Evaluation setting for accept-rate comparisons: a moderately strict
+/// threshold and no σ widening, so drafter quality (not parameter
+/// permissiveness) is what the measurement resolves.
+fn eval_params() -> SpecParams {
+    SpecParams { stages: StageParams::uniform(8), lambda: 0.3, sigma_scale: 1.0 }
+}
+
+fn wrap(model: &DrafterModel) -> DistilledDrafter {
+    DistilledDrafter::new(Box::new(MockDenoiser::with_bias(0.0)), model.clone())
+}
+
+/// Accept rate of `model` serving speculative rounds over fresh env
+/// rollouts (seeded differently from training).
+fn accept_of(model: &DrafterModel) -> f64 {
+    let den = wrap(model);
+    accept_stats(&den, &[Task::Lift, Task::PushT], DemoStyle::Ph, 3, eval_params(), 0x99)
+        .unwrap()
+        .accept_rate
+}
+
+fn trained_model() -> &'static DrafterModel {
+    static TRAINED: OnceLock<DrafterModel> = OnceLock::new();
+    TRAINED.get_or_init(|| {
+        let den = MockDenoiser::with_bias(0.0);
+        let cfg = DistillConfig {
+            tasks: vec![Task::Lift, Task::PushT],
+            style: DemoStyle::Ph,
+            trajectories_per_task: 4,
+            window: 8,
+            steps: 300,
+            batch: 6,
+            lr: 3e-3,
+            single_frac: 0.25,
+            seed: 7,
+        };
+        let trajs = collect_trajectories(
+            &den,
+            &cfg.tasks,
+            cfg.style,
+            cfg.trajectories_per_task,
+            cfg.seed,
+        )
+        .unwrap();
+        let (mut model, _) = train_on(&trajs, &cfg, None, |_| {}).unwrap();
+        // Budget escalation: continue training (same data, same weights)
+        // if the first budget lands short of the acceptance bar.
+        for extra in 0..2 {
+            if accept_of(&model) >= 0.72 {
+                break;
+            }
+            let more =
+                DistillConfig { steps: 400, seed: cfg.seed + 1 + extra as u64, ..cfg.clone() };
+            model = train_on(&trajs, &more, Some(model), |_| {}).unwrap().0;
+        }
+        model
+    })
+}
+
+#[test]
+fn distilled_drafter_reaches_70pct_accept_and_beats_untrained() {
+    let untrained = DrafterModel::init(&mut Rng::seed_from_u64(0xbade));
+    let baseline = accept_of(&untrained);
+    let trained = accept_of(trained_model());
+    assert!(
+        trained >= 0.70,
+        "distilled drafter accept rate {trained:.3} below the 70% bar"
+    );
+    assert!(
+        trained > baseline + 0.05,
+        "distillation must improve accept rate: trained {trained:.3} vs untrained {baseline:.3}"
+    );
+    // Accept-rate gains must show up as NFE gains (fewer rejected rounds).
+    let nfe_trained = accept_stats(
+        &wrap(trained_model()),
+        &[Task::Lift],
+        DemoStyle::Ph,
+        3,
+        eval_params(),
+        0x51,
+    )
+    .unwrap()
+    .mean_nfe;
+    let nfe_untrained =
+        accept_stats(&wrap(&untrained), &[Task::Lift], DemoStyle::Ph, 3, eval_params(), 0x51)
+            .unwrap()
+            .mean_nfe;
+    assert!(
+        nfe_trained < nfe_untrained,
+        "distilled NFE {nfe_trained:.1} must beat untrained {nfe_untrained:.1}"
+    );
+}
+
+/// Serve `workload` with the distilled drafter swapped into every shard
+/// replica.
+fn run_distilled_fleet(model: DrafterModel, shards: usize, max_batch: usize) -> ServeReport {
+    let opts = ServeOptions {
+        workload: WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
+            .drafter(DrafterKind::Distilled)
+            .build(),
+        shards,
+        queue_capacity: 64,
+        policy: Policy::Fair,
+        scheduler: None,
+        seed: 4321,
+        max_batch,
+        batch_window: Duration::from_micros(200),
+    };
+    serve_with(
+        move |_shard| {
+            DistilledDrafter::new(Box::new(MockDenoiser::with_bias(0.0)), model.clone())
+        },
+        &opts,
+    )
+    .unwrap()
+}
+
+#[test]
+fn checkpoint_serves_bit_identically_across_shards() {
+    // distill → checkpoint → load → serve: the acceptance path of
+    // `ts-dp distill-drafter` + `serve --drafter`, minus the process
+    // boundary.
+    let dir = TempDir::new("drafter_serve");
+    let path = dir.path().join("drafter.json");
+    trained_model().save(&path).unwrap();
+    let loaded = DrafterModel::load(&path).unwrap();
+
+    // The JSON roundtrip preserves every bit of the weights.
+    let mut rng = Rng::seed_from_u64(5);
+    let x = rng.normal_vec(64);
+    let cond = rng.normal_vec(64);
+    assert_eq!(
+        trained_model().infer_step(&x, 40, &cond),
+        loaded.infer_step(&x, 40, &cond)
+    );
+
+    let baseline = run_distilled_fleet(loaded.clone(), 1, 1).session_fingerprints();
+    assert_eq!(baseline.len(), 4);
+    for (_, digests, nfe) in &baseline {
+        assert!(!digests.is_empty(), "every session must serve segments");
+        assert!(*nfe > 0.0);
+    }
+    for shards in [1usize, 2, 4] {
+        for max_batch in [1usize, 8] {
+            if (shards, max_batch) == (1, 1) {
+                continue;
+            }
+            let report = run_distilled_fleet(loaded.clone(), shards, max_batch);
+            assert_eq!(
+                report.session_fingerprints(),
+                baseline,
+                "distilled serving must be bit-identical (shards {shards}, max_batch {max_batch})"
+            );
+        }
+    }
+    // Drafter identity is attributed in the merged metrics summary.
+    let report = run_distilled_fleet(loaded, 2, 8);
+    let summary = report.metrics.summary();
+    assert!(summary.contains("drafters=[distilled:"), "{summary}");
+}
+
+#[test]
+fn distilled_segments_match_target_only_distribution() {
+    // Losslessness: accepted prefixes pass the MH test against the
+    // *target's* posterior and rejections are corrected by reflection
+    // coupling, so the served segment distribution matches target-only
+    // denoising — for the mock, both converge to the analytic clean
+    // action. Uses the permissive serving defaults.
+    let den = wrap(trained_model());
+    let cond = den.encode(&vec![0.4; OBS_DIM]).unwrap();
+    let clean = MockDenoiser::clean_action(&cond);
+    let engine = SpecEngine::new();
+    let mut rng = Rng::seed_from_u64(17);
+    let mut trace = SegmentTrace::default();
+    let params = SpecParams::fixed_default();
+    let seg = engine.generate_segment(&den, &cond, |_| params, &mut rng, &mut trace).unwrap();
+    let max_err = seg.iter().zip(&clean).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 0.15, "max err {max_err}");
+    // And the speculative path must actually be cheaper than vanilla's
+    // 100 NFE with a distilled drafter accepted this often.
+    assert!(trace.nfe < 70.0, "nfe {}", trace.nfe);
+    assert!(trace.acceptance_rate() > 0.5, "rate {}", trace.acceptance_rate());
+}

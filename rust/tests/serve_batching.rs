@@ -55,13 +55,7 @@ fn heterogeneous_workload() -> Vec<SessionSpec> {
 /// (session id, per-segment digests, total NFE) for every session,
 /// sorted by session id so reports from different runs line up.
 fn fingerprint(report: &ServeReport) -> Vec<(usize, Vec<u64>, f64)> {
-    let mut fp: Vec<_> = report
-        .sessions
-        .iter()
-        .map(|s| (s.session, s.segment_digests.clone(), s.nfe))
-        .collect();
-    fp.sort_by_key(|(s, _, _)| *s);
-    fp
+    report.session_fingerprints()
 }
 
 #[test]
