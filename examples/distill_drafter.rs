@@ -28,6 +28,7 @@ fn serve_fleet(model: DrafterModel, shards: usize) -> anyhow::Result<ServeReport
         seed: 7,
         max_batch: 8,
         batch_window: Duration::from_micros(200),
+        ..ServeOptions::default()
     };
     serve_with(
         move |_shard| {

@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             seed: 7,
             max_batch: 8,
             batch_window: Duration::from_micros(200),
+            ..ServeOptions::default()
         };
         let t0 = std::time::Instant::now();
         // One runtime replica per shard, compiled on the shard's thread.

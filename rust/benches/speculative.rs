@@ -201,10 +201,73 @@ fn bench_drafter_accept_rates() {
     println!();
 }
 
+/// Fleet-learning probe: the frozen→adapted efficiency gap. Serve a
+/// mixed workload against a phase-dependent mock drafter with (a) a
+/// deliberately poor frozen scheduler and (b) the same policy after
+/// online PPO adaptation rounds — reporting accept-rate and NFE/segment
+/// for each (tests/online_adapt.rs asserts the gap; this reports it).
+fn bench_online_adaptation() {
+    use ts_dp::config::AdaptMode;
+    use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+    use ts_dp::harness::scenarios::{misadapted_scheduler, phase_biased_mock};
+    use ts_dp::scheduler::ppo::PpoConfig;
+    use ts_dp::scheduler::{LearnerConfig, SchedulerPolicy};
+    println!("== online scheduler adaptation (mock denoiser, frozen vs adapted) ==");
+    // Same canned scenario tests/online_adapt.rs pins: a drafter that is
+    // bad in the early high-noise phase and a policy mis-adapted to it.
+    let make_mock = phase_biased_mock;
+    let mut policy = misadapted_scheduler();
+    let mix = || {
+        WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, Method::TsDp).with_episodes(2), 6)
+            .sessions(SessionSpec::new(Task::PushT, Method::TsDp).with_episodes(2), 2)
+            .build()
+    };
+    let eval = |policy: &SchedulerPolicy, label: &str| {
+        let opts = ServeOptions {
+            workload: mix(),
+            shards: 2,
+            scheduler: Some(policy.clone()),
+            seed: 777,
+            ..ServeOptions::default()
+        };
+        let report = serve_with(|_| make_mock(), &opts).expect("frozen eval");
+        println!(
+            "{label:<8} accept={:>5.1}%  nfe/seg={:>6.1}",
+            report.metrics.acceptance_rate() * 100.0,
+            report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+        );
+    };
+    eval(&policy, "frozen");
+    for round in 0..3u64 {
+        let opts = ServeOptions {
+            workload: mix(),
+            shards: 2,
+            scheduler: Some(policy.clone()),
+            seed: 0x0ada_0000 + round,
+            adapt: AdaptMode::Online,
+            learner: LearnerConfig {
+                min_batch: 96,
+                ppo: PpoConfig { pi_lr: 3e-3, v_lr: 3e-3, epochs: 6, ..Default::default() },
+                seed: round,
+                ..Default::default()
+            },
+            ..ServeOptions::default()
+        };
+        let report = serve_with(|_| make_mock(), &opts).expect("online round");
+        if let Some(adapted) = report.learner.and_then(|l| l.adapted) {
+            policy = adapted;
+        }
+    }
+    eval(&policy, "adapted");
+    println!();
+}
+
 fn main() {
     bench_accept_scan_scratch();
     bench_batched_serving();
     bench_sharded_serving();
+    bench_online_adaptation();
     bench_drafter_accept_rates();
 
     let dir = std::path::PathBuf::from("artifacts");

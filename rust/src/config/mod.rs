@@ -9,7 +9,7 @@
 mod serving;
 mod speculative;
 
-pub use serving::{Method, ServingConfig};
+pub use serving::{AdaptMode, Method, ServingConfig};
 pub use speculative::{SpecParams, StageParams};
 
 /// Padded observation vector length fed to the encoder.

@@ -31,6 +31,57 @@ pub struct ServingConfig {
     /// Batch-forming window in microseconds: how long the engine lingers
     /// for stragglers when starting a fresh wave (0 = never wait).
     pub batch_window_us: u64,
+    /// Scheduler adaptation mode: replay the checkpoint (`frozen`) or
+    /// keep PPO-adapting it from live traffic (`online`).
+    pub adapt: AdaptMode,
+    /// Minimum transitions aggregated across shards before the online
+    /// learner runs one PPO epoch.
+    pub learner_min_batch: usize,
+    /// Bounded capacity (episode batches) of each per-shard experience
+    /// buffer; full buffers shed experience rather than block serving.
+    pub learner_buffer: usize,
+    /// Checkpoint the adapted policy every N learner epochs (0 = only
+    /// when serving ends).
+    pub learner_checkpoint_every: u64,
+    /// Where the online learner writes adapted-policy checkpoints
+    /// (None = keep the adapted policy in memory only).
+    pub adapted_policy_out: Option<PathBuf>,
+}
+
+/// How the serving fleet treats the scheduler policy over time.
+///
+/// `Frozen` replays the loaded checkpoint deterministically (`act_mean`
+/// per decision) — served segments are bit-identical run to run, the
+/// contract the golden-trace and shard-invariance tests pin. `Online`
+/// keeps adapting: sessions sample the stochastic policy, per-decision
+/// transitions flow through bounded per-shard experience buffers into a
+/// background PPO learner, and epoch-versioned snapshots are published
+/// back to the fleet at segment boundaries (never mid-segment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AdaptMode {
+    /// Deterministic inference on a fixed policy checkpoint.
+    #[default]
+    Frozen,
+    /// Live on-policy adaptation from serving traffic.
+    Online,
+}
+
+impl AdaptMode {
+    /// Both modes, CLI order.
+    pub const ALL: [AdaptMode; 2] = [AdaptMode::Frozen, AdaptMode::Online];
+
+    /// Stable lowercase name (CLI / config files).
+    pub fn name(self) -> &'static str {
+        match self {
+            AdaptMode::Frozen => "frozen",
+            AdaptMode::Online => "online",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        AdaptMode::ALL.iter().copied().find(|m| m.name() == s)
+    }
 }
 
 /// Which action-generation method the coordinator runs.
@@ -94,6 +145,11 @@ impl Default for ServingConfig {
             shards: 1,
             max_batch: 8,
             batch_window_us: 200,
+            adapt: AdaptMode::Frozen,
+            learner_min_batch: 256,
+            learner_buffer: 64,
+            learner_checkpoint_every: 0,
+            adapted_policy_out: None,
         }
     }
 }
@@ -118,6 +174,17 @@ impl ServingConfig {
             ("shards", Json::Num(self.shards as f64)),
             ("max_batch", Json::Num(self.max_batch as f64)),
             ("batch_window_us", Json::Num(self.batch_window_us as f64)),
+            ("adapt", Json::Str(self.adapt.name().into())),
+            ("learner_min_batch", Json::Num(self.learner_min_batch as f64)),
+            ("learner_buffer", Json::Num(self.learner_buffer as f64)),
+            ("learner_checkpoint_every", Json::Num(self.learner_checkpoint_every as f64)),
+            (
+                "adapted_policy_out",
+                match &self.adapted_policy_out {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -154,6 +221,36 @@ impl ServingConfig {
                 .transpose()?
                 .map(|w| w as u64)
                 .unwrap_or(defaults.batch_window_us),
+            // Online-adaptation knobs postdate the sharded-serving
+            // config files; absent keys fall back to the defaults.
+            adapt: v
+                .get_opt("adapt")
+                .map(|j| {
+                    AdaptMode::parse(j.as_str()?)
+                        .ok_or_else(|| JsonError::Access("unknown adapt mode".into()))
+                })
+                .transpose()?
+                .unwrap_or(defaults.adapt),
+            learner_min_batch: v
+                .get_opt("learner_min_batch")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .unwrap_or(defaults.learner_min_batch),
+            learner_buffer: v
+                .get_opt("learner_buffer")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .unwrap_or(defaults.learner_buffer),
+            learner_checkpoint_every: v
+                .get_opt("learner_checkpoint_every")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .map(|n| n as u64)
+                .unwrap_or(defaults.learner_checkpoint_every),
+            adapted_policy_out: v
+                .get_opt("adapted_policy_out")
+                .map(|p| Ok::<_, JsonError>(PathBuf::from(p.as_str()?)))
+                .transpose()?,
         })
     }
 
@@ -228,5 +325,50 @@ mod tests {
         let c = ServingConfig { scheduler_policy: None, ..Default::default() };
         let d = ServingConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(d.scheduler_policy, None);
+    }
+
+    #[test]
+    fn adapt_mode_roundtrip() {
+        for m in AdaptMode::ALL {
+            assert_eq!(AdaptMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(AdaptMode::parse("sometimes"), None);
+        assert_eq!(AdaptMode::default(), AdaptMode::Frozen);
+    }
+
+    #[test]
+    fn online_learner_knobs_roundtrip() {
+        let c = ServingConfig {
+            adapt: AdaptMode::Online,
+            learner_min_batch: 128,
+            learner_buffer: 32,
+            learner_checkpoint_every: 5,
+            adapted_policy_out: Some(PathBuf::from("artifacts/adapted_policy.json")),
+            ..Default::default()
+        };
+        let d = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn legacy_json_without_adapt_knobs_defaults_to_frozen() {
+        // Config files written before online adaptation lack every
+        // learner knob; loading them must yield a frozen fleet.
+        let c = ServingConfig::default();
+        let legacy = match c.to_json() {
+            Json::Obj(pairs) => Json::Obj(
+                pairs
+                    .into_iter()
+                    .filter(|(k, _)| !k.starts_with("learner_") && k != "adapt")
+                    .filter(|(k, _)| k != "adapted_policy_out")
+                    .collect(),
+            ),
+            _ => unreachable!("to_json returns an object"),
+        };
+        let d = ServingConfig::from_json(&legacy).unwrap();
+        assert_eq!(d.adapt, AdaptMode::Frozen);
+        assert_eq!(d.learner_min_batch, 256);
+        assert_eq!(d.adapted_policy_out, None);
+        assert_eq!(c, d);
     }
 }

@@ -147,6 +147,7 @@ mod tests {
             spec: crate::coordinator::workload::SessionSpec::default(),
             obs: vec![],
             params: None,
+            policy_epoch: None,
             submitted: Instant::now(),
             reply: tx,
         }

@@ -8,7 +8,7 @@
 //! wraps each replica in a [`DistilledDrafter`] so distilled drafters
 //! can be compared per run without recompiling anything.
 
-use crate::config::{DemoStyle, Method, Task};
+use crate::config::{AdaptMode, DemoStyle, Method, Task};
 use crate::coordinator::batcher::Policy;
 use crate::coordinator::server::{serve, ServeOptions};
 use crate::coordinator::workload::{DrafterKind, WorkloadMix};
@@ -17,8 +17,9 @@ use crate::drafter::model::DrafterModel;
 use crate::policy::mock::MockDenoiser;
 use crate::policy::Denoiser;
 use crate::runtime::ModelRuntime;
-use crate::scheduler::SchedulerPolicy;
+use crate::scheduler::{LearnerConfig, SchedulerPolicy};
 use crate::util::cli::Args;
+use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -112,6 +113,22 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
     // multi-second) model load path runs per replica.
     let drafter = drafter_from_args(args)?;
     let den = with_drafter(backend_choice(args)?.build()?, &drafter);
+    // Optional frozen scheduler: `--scheduler-policy FILE` replays the
+    // sweep with per-request policy decisions, so a frozen checkpoint
+    // and a `serve --adapt online --adapted-policy-out` checkpoint can
+    // be compared on identical arrival streams (the frozen→adapted
+    // efficiency gap).
+    let scheduler = match args.get("scheduler-policy") {
+        Some(p) => {
+            let policy = SchedulerPolicy::load(Path::new(p))
+                .with_context(|| format!("loading scheduler policy {p} for the load sweep"))?;
+            Some(policy)
+        }
+        None => None,
+    };
+    if scheduler.is_some() {
+        println!("sweeping with scheduler-driven SpecParams (frozen inference)");
+    }
     // One pool-recording path for both spellings: `--task lift` and
     // `--mix "lift:ts_dp"` must produce identical pools (and therefore
     // identical curves) for the same --seed.
@@ -122,7 +139,9 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
         "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
         "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
     );
-    for point in mixed_load_sweep(den.as_ref(), &stream, &pool_refs, &rates, n, seed)? {
+    for point in
+        mixed_load_sweep(den.as_ref(), &stream, &pool_refs, &rates, n, seed, scheduler.as_ref())?
+    {
         let f = &point.fleet;
         println!(
             "{:>12.1} {:>12.2} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
@@ -162,15 +181,55 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "fair" => Policy::Fair,
         other => anyhow::bail!("--policy must be fifo|fair, got '{other}'"),
     };
-    let scheduler = if args.has_flag("adaptive") {
+    // Scheduler adaptation: `--adapt frozen|online` (passing --adapt
+    // implies adaptive serving; bare `--adaptive` keeps the legacy
+    // frozen behavior).
+    let adapt = AdaptMode::parse(&args.get_or("adapt", "frozen"))
+        .context("--adapt must be frozen|online")?;
+    let scheduler = if args.has_flag("adaptive") || args.get("adapt").is_some() {
         let p = PathBuf::from(
             args.get_or("scheduler-policy", "artifacts/scheduler_policy.json"),
         );
-        Some(SchedulerPolicy::load(&p).with_context(|| {
-            format!("loading {} (run `ts-dp train-scheduler`)", p.display())
-        })?)
+        // Online mode may bootstrap from a fresh policy, but ONLY when
+        // the default checkpoint is genuinely absent — an existing but
+        // corrupt/unreadable file must fail loudly, never be silently
+        // replaced by a random policy (and later overwritten via
+        // --adapted-policy-out).
+        if !p.exists() && adapt == AdaptMode::Online && args.get("scheduler-policy").is_none() {
+            println!(
+                "no checkpoint at {} — online adaptation starts from a fresh policy",
+                p.display()
+            );
+            Some(SchedulerPolicy::init(&mut Rng::seed_from_u64(seed)))
+        } else {
+            Some(SchedulerPolicy::load(&p).with_context(|| {
+                format!("loading {} (run `ts-dp train-scheduler`)", p.display())
+            })?)
+        }
     } else {
         None
+    };
+    // Learner knobs only act in online mode — passing one with a frozen
+    // fleet would be a silent no-op (no checkpoint ever written), so
+    // reject the combination outright, matching the --mix conflict
+    // handling below.
+    if adapt != AdaptMode::Online {
+        for flag in
+            ["learner-min-batch", "learner-buffer", "checkpoint-every", "adapted-policy-out"]
+        {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--{flag} only takes effect with --adapt online"
+            );
+        }
+    }
+    let learner = LearnerConfig {
+        min_batch: args.get_usize("learner-min-batch", 256)?,
+        buffer_capacity: args.get_usize("learner-buffer", 64)?,
+        checkpoint_every: args.get_u64("checkpoint-every", 0)?,
+        checkpoint: args.get("adapted-policy-out").map(PathBuf::from),
+        seed,
+        ..LearnerConfig::default()
     };
 
     // Workload: heterogeneous `--mix` spec, or the uniform legacy shape
@@ -206,16 +265,19 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         seed,
         max_batch,
         batch_window: std::time::Duration::from_micros(batch_window_us),
+        adapt,
+        learner,
     };
     // serve() clamps the shard count to the session count; print the
     // effective fleet shape, not the raw flag.
     println!(
-        "serving {} sessions over {} shard(s), max_batch={}, drafter={} \
-         (each shard compiles its own replica)",
+        "serving {} sessions over {} shard(s), max_batch={}, drafter={}, \
+         scheduler={} (each shard compiles its own replica)",
         opts.workload.len(),
         opts.effective_shards(),
         max_batch,
         drafter_kind.name(),
+        if opts.scheduler.is_some() { adapt.name() } else { "fixed" },
     );
     // Each shard worker builds and owns its own replica on its own
     // thread (PJRT handles are not Send); the drafter checkpoint is
@@ -231,6 +293,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     println!("--- fleet ---");
     println!("{}", report.metrics.summary());
+    if let Some(l) = &report.learner {
+        println!("--- online learner ---");
+        println!("{}", l.summary());
+        for e in &l.epochs {
+            println!(
+                "epoch {:>3}: transitions={:<5} reward={:>8.3} accept={:>5.1}% \
+                 clipfrac={:.3}",
+                e.epoch,
+                e.transitions,
+                e.mean_reward,
+                e.accept_rate * 100.0,
+                e.update.clip_frac
+            );
+        }
+    }
     println!("--- shards ---");
     for m in &report.shard_metrics {
         println!("{}", m.summary());

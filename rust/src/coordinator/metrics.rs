@@ -63,6 +63,13 @@ pub struct ServerMetrics {
     /// which drafter backend a run was served with when comparing
     /// `--drafter` swaps.
     pub drafter_requests: BTreeMap<&'static str, u64>,
+    /// Scheduler policy versions observed on admitted adaptive requests
+    /// (distribution across the run; online adaptation makes the mean
+    /// climb as the learner publishes epochs, frozen serving pins it
+    /// at 0).
+    pub policy_epochs: OnlineStats,
+    /// Newest policy epoch that served a request.
+    pub policy_epoch_max: u64,
     /// Per-shard (shard id, requests, mean verify occupancy), populated
     /// by [`ServerMetrics::merge_fleet`]; empty on a single shard's own
     /// metrics.
@@ -97,6 +104,8 @@ impl ServerMetrics {
             task_requests: BTreeMap::new(),
             method_requests: BTreeMap::new(),
             drafter_requests: BTreeMap::new(),
+            policy_epochs: OnlineStats::new(),
+            policy_epoch_max: 0,
             shard_breakdown: Vec::new(),
         }
     }
@@ -155,6 +164,12 @@ impl ServerMetrics {
         *self.drafter_requests.entry(drafter).or_insert(0) += 1;
     }
 
+    /// Record the policy epoch an adaptive request was decided under.
+    pub fn record_policy_epoch(&mut self, epoch: u64) {
+        self.policy_epochs.push(epoch as f64);
+        self.policy_epoch_max = self.policy_epoch_max.max(epoch);
+    }
+
     /// Record one fused verify call covering `fused` requests.
     pub fn record_verify_batch(&mut self, fused: usize) {
         self.verify_batches += 1;
@@ -204,6 +219,8 @@ impl ServerMetrics {
             for (drafter, n) in &m.drafter_requests {
                 *fleet.drafter_requests.entry(drafter).or_insert(0) += n;
             }
+            fleet.policy_epochs.merge(&m.policy_epochs);
+            fleet.policy_epoch_max = fleet.policy_epoch_max.max(m.policy_epoch_max);
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
                 m.requests,
@@ -310,6 +327,13 @@ impl ServerMetrics {
                     .collect();
                 s.push_str(&format!(" drafters=[{}]", parts.join(" ")));
             }
+        }
+        if self.policy_epochs.count() > 0 {
+            s.push_str(&format!(
+                " policy-epoch mean={:.1} max={}",
+                self.policy_epochs.mean(),
+                self.policy_epoch_max
+            ));
         }
         if !self.shard_breakdown.is_empty() {
             let occ: Vec<String> = self
@@ -429,5 +453,24 @@ mod tests {
         let m = ServerMetrics::for_shard(3);
         assert!(m.summary().starts_with("shard=3 "));
         assert_eq!(ServerMetrics::new().shard, None);
+    }
+
+    #[test]
+    fn policy_epoch_gauge_tracks_and_merges() {
+        let mut a = ServerMetrics::for_shard(0);
+        let mut b = ServerMetrics::for_shard(1);
+        for e in [0u64, 0, 1, 2] {
+            a.record_policy_epoch(e);
+        }
+        b.record_policy_epoch(5);
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        assert_eq!(fleet.policy_epoch_max, 5);
+        assert_eq!(fleet.policy_epochs.count(), 5);
+        assert!((fleet.policy_epochs.mean() - 8.0 / 5.0).abs() < 1e-12);
+        let s = fleet.summary();
+        assert!(s.contains("policy-epoch mean=1.6 max=5"), "{s}");
+        // Non-adaptive runs keep the legacy summary shape.
+        let plain = ServerMetrics::new();
+        assert!(!plain.summary().contains("policy-epoch"), "{}", plain.summary());
     }
 }

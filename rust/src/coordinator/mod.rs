@@ -49,6 +49,32 @@
 //! paper's "scheduler runs in parallel with the encoder, adding no extra
 //! inference latency".
 //!
+//! **Online scheduler adaptation** (`ServeOptions { adapt: Online, .. }`,
+//! CLI `--adapt online`): the fleet keeps the paper's *reinforcement*
+//! loop alive under live traffic instead of replaying a frozen
+//! checkpoint. The extra dataflow, alongside the request path above:
+//!
+//! ```text
+//! adaptive sessions (scheduler::ServingHook, online mode)
+//!   │  sample the stochastic policy per decision (act, not act_mean),
+//!   │  assemble one Transition per segment from the live outcome
+//!   │  (Eq. 12–15 rewards via scheduler::reward::segment_reward)
+//!   ▼
+//! per-shard BOUNDED experience buffers (scheduler::online::ExperienceHub;
+//!   │  full buffer = shed the episode batch, never block serving)
+//!   ▼
+//! background PPO learner thread (scheduler::online::run_learner)
+//!   │  aggregates cross-shard batches; one PPO epoch per `min_batch`
+//!   │  transitions; periodic + final checkpoints of the adapted policy
+//!   ▼
+//! PolicyStore publishes epoch-versioned snapshots (Arc-swapped);
+//! sessions re-read the store at their NEXT decision — a segment
+//! boundary — so in-flight speculative rounds never see a swap.
+//! Per-epoch reward/accept-rate trajectories land in
+//! ServeReport::learner; policy-version labels ride each request into
+//! ServerMetrics (`policy-epoch` gauge).
+//! ```
+//!
 //! Losslessness under sharding and batching: each session draws from its
 //! own seeded RNG stream (seeded by session id only — never by
 //! placement) and every verify slice is computed independently per
@@ -56,6 +82,18 @@
 //! count, any `max_batch`, and either dispatch policy (asserted by
 //! `tests/serve_batching.rs`). Routing and fusion buy throughput, never
 //! different actions.
+//!
+//! **Determinism contract of the two adapt modes**: `Frozen` extends the
+//! invariance above to adaptive sessions — decisions are deterministic
+//! `act_mean` inference on a never-republished snapshot, so fingerprints
+//! are bit-identical across fleet shapes *and* across runs (pinned by
+//! `tests/golden_trace.rs` and the adaptive leg of
+//! `tests/serve_batching.rs`). `Online` deliberately trades that
+//! run-to-run bit-identity for adaptation: decisions depend on
+//! exploration sampling and on learner timing. Per-segment losslessness
+//! is untouched either way — whatever parameters a segment was admitted
+//! with, its speculative rounds reproduce the target distribution
+//! exactly.
 //!
 //! Failure semantics: a shard that fails drains its queue and hangs up
 //! its sessions, so one bad replica fails the whole `serve()` call with

@@ -34,6 +34,11 @@ pub struct SegmentRequest {
     pub obs: Vec<f32>,
     /// Scheduler-chosen parameters, if the session runs adaptive TS-DP.
     pub params: Option<SpecParams>,
+    /// Policy epoch the session's scheduler decided under (None for
+    /// fixed-parameter sessions). Labels the request for the fleet's
+    /// policy-version metrics; online adaptation makes this climb as
+    /// the learner publishes new snapshots.
+    pub policy_epoch: Option<u64>,
     /// Submission timestamp (queue-delay accounting).
     pub submitted: Instant,
     /// Reply channel.
@@ -47,6 +52,7 @@ impl std::fmt::Debug for SegmentRequest {
             .field("spec", &self.spec)
             .field("obs_len", &self.obs.len())
             .field("params", &self.params)
+            .field("policy_epoch", &self.policy_epoch)
             .finish()
     }
 }

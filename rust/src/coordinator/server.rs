@@ -23,7 +23,7 @@
 //! errors taking precedence as the root cause.
 
 use crate::baselines::{make_generator, Generator};
-use crate::config::{Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
+use crate::config::{AdaptMode, Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{SegmentReply, SegmentRequest};
@@ -31,13 +31,15 @@ use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::coordinator::workload::{SessionSpec, WorkloadMix};
 use crate::policy::Denoiser;
-use crate::scheduler::SchedulerPolicy;
+use crate::scheduler::online::{run_learner, ExperienceHub, PolicyStore};
+use crate::scheduler::{LearnerConfig, LearnerReport, SchedulerPolicy, SessionScheduler};
 use crate::speculative::engine::SEG;
 use crate::speculative::{SegmentJob, SegmentTrace, SpecEngine, Stage};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Replica factory: builds the denoiser a shard worker owns. Called on
@@ -73,6 +75,15 @@ pub struct ServeOptions {
     /// How long a shard lingers for stragglers when forming the initial
     /// wave of a batch (zero = never wait).
     pub batch_window: Duration,
+    /// Scheduler adaptation mode. `Frozen` replays `scheduler`
+    /// deterministically (bit-identical fingerprints, the golden-trace
+    /// contract); `Online` spawns a background PPO learner that keeps
+    /// adapting it from live traffic via epoch-versioned snapshots.
+    /// Ignored when `scheduler` is `None`.
+    pub adapt: AdaptMode,
+    /// Online-learner knobs (min batch, buffer bound, PPO config,
+    /// checkpointing). Unused in frozen mode.
+    pub learner: LearnerConfig,
 }
 
 impl Default for ServeOptions {
@@ -93,6 +104,8 @@ impl Default for ServeOptions {
             seed: 0,
             max_batch: 8,
             batch_window: Duration::from_micros(200),
+            adapt: AdaptMode::Frozen,
+            learner: LearnerConfig::default(),
         }
     }
 }
@@ -131,6 +144,10 @@ pub struct ServeReport {
     pub shard_metrics: Vec<ServerMetrics>,
     /// Per-session reports.
     pub sessions: Vec<SessionReport>,
+    /// Online-learner report: the per-epoch reward / accept-rate
+    /// trajectory and the adapted policy (`None` unless the run served
+    /// with `adapt: Online` and a scheduler).
+    pub learner: Option<LearnerReport>,
 }
 
 impl ServeReport {
@@ -271,6 +288,9 @@ fn run_shard(
             };
             let Some(req) = req else { break };
             let queue_delay = req.submitted.elapsed().as_secs_f64();
+            if let Some(epoch) = req.policy_epoch {
+                metrics.record_policy_epoch(epoch);
+            }
             let cond = den.encode(&req.obs)?;
             let rng = rngs
                 .entry(req.session)
@@ -439,8 +459,21 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
         receivers.push(rx);
     }
 
-    let (shard_metrics, reports) = std::thread::scope(
-        |scope| -> Result<(Vec<ServerMetrics>, Vec<SessionReport>)> {
+    // Scheduler plumbing: one epoch-versioned store shared by every
+    // adaptive session. In online mode each shard also gets a bounded
+    // experience buffer draining into the background PPO learner.
+    let online = opts.adapt == AdaptMode::Online && opts.scheduler.is_some();
+    let store: Option<Arc<PolicyStore>> =
+        opts.scheduler.clone().map(|p| Arc::new(PolicyStore::new(p)));
+    let (mut hub, mut learner_rx) = if online {
+        let (h, r) = ExperienceHub::new(shards, opts.learner.buffer_capacity);
+        (Some(h), Some(r))
+    } else {
+        (None, None)
+    };
+
+    let (shard_metrics, reports, learner) = std::thread::scope(
+        |scope| -> Result<(Vec<ServerMetrics>, Vec<SessionReport>, Option<LearnerReport>)> {
             // Readiness barrier: session drivers start only after every
             // shard's replica attempt has resolved, so queue-delay and
             // latency percentiles measure serving — never the (possibly
@@ -499,25 +532,50 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 }
             }
 
+            // Background PPO learner (online mode): drains the per-shard
+            // experience buffers, publishes epoch-versioned snapshots
+            // into the shared store, and checkpoints per the config. It
+            // exits once every session's experience sink hangs up.
+            let learner_handle = if online {
+                let st = store.clone().expect("online mode implies a scheduler");
+                let rx = learner_rx.take().expect("hub built for online mode");
+                let cfg = opts.learner.clone();
+                let dropped = hub.as_ref().expect("hub built for online mode").dropped();
+                Some(scope.spawn(move || run_learner(st, rx, cfg, dropped)))
+            } else {
+                None
+            };
+
             let mut session_handles = Vec::with_capacity(opts.workload.len());
             for (s, spec) in opts.workload.iter().enumerate() {
+                let adaptive = if spec.method == Method::TsDp {
+                    store.as_ref().map(|st| SessionScheduler {
+                        store: st.clone(),
+                        mode: opts.adapt,
+                        sink: hub.as_ref().map(|h| h.sink(assignments[s], s)),
+                        // Placement-independent exploration stream, distinct
+                        // from the env / engine seeds derived below.
+                        explore_seed: opts.seed ^ ((s as u64 + 1) << 40) ^ 0x9e37_79b9,
+                    })
+                } else {
+                    None
+                };
                 let cfg = SessionConfig {
                     session: s,
                     spec: *spec,
                     shard: assignments[s],
                     seed: opts.seed ^ ((s as u64 + 1) << 32),
-                    adaptive: if spec.method == Method::TsDp {
-                        opts.scheduler.clone()
-                    } else {
-                        None
-                    },
+                    adaptive,
                 };
                 let tx = senders[assignments[s]].clone();
                 session_handles.push(scope.spawn(move || run_session(cfg, tx)));
             }
             // The session drivers hold clones; once they finish, each
-            // shard's queue disconnects and its worker drains out.
+            // shard's queue disconnects and its worker drains out. The
+            // hub's original experience senders drop here too, so the
+            // learner sees a hangup once the last session exits.
             drop(senders);
+            drop(hub.take());
 
             let mut reports = Vec::new();
             let mut session_err: Option<anyhow::Error> = None;
@@ -528,6 +586,24 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                     Err(payload) => session_err = Some(panic_to_error("session", s, payload)),
                 }
             }
+
+            // All sessions (and with them every experience sink) are
+            // gone; the learner drains its buffers and exits.
+            let mut learner_err: Option<anyhow::Error> = None;
+            let learner_report = match learner_handle {
+                Some(h) => match h.join() {
+                    Ok(Ok(r)) => Some(r),
+                    Ok(Err(e)) => {
+                        learner_err = Some(e);
+                        None
+                    }
+                    Err(payload) => {
+                        learner_err = Some(panic_to_error("learner", 0, payload));
+                        None
+                    }
+                },
+                None => None,
+            };
 
             let mut shard_metrics = Vec::with_capacity(shards);
             let mut shard_err: Option<anyhow::Error> = None;
@@ -550,19 +626,24 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
             }
 
             // A shard error is the root cause; session-side errors are
-            // usually its fallout ("shard dropped the reply").
+            // usually its fallout ("shard dropped the reply"), and a
+            // learner failure (e.g. an unwritable checkpoint path) is
+            // reported only when serving itself succeeded.
             if let Some(e) = shard_err {
                 return Err(e);
             }
             if let Some(e) = session_err {
                 return Err(e);
             }
-            Ok((shard_metrics, reports))
+            if let Some(e) = learner_err {
+                return Err(e);
+            }
+            Ok((shard_metrics, reports, learner_report))
         },
     )?;
 
     let metrics = ServerMetrics::merge_fleet(&shard_metrics);
-    Ok(ServeReport { metrics, shard_metrics, sessions: reports })
+    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner })
 }
 
 /// Convenience wrapper over [`serve`] for infallible factories: builds
@@ -648,6 +729,51 @@ mod tests {
         };
         let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert!(report.metrics.requests > 0);
+        // Frozen (the default) spawns no learner, pins epoch 0, but
+        // still labels adaptive requests with their policy version.
+        assert!(report.learner.is_none());
+        assert_eq!(report.metrics.policy_epoch_max, 0);
+        assert!(report.metrics.policy_epochs.count() > 0);
+    }
+
+    #[test]
+    fn online_adaptation_runs_the_learner_and_versions_policies() {
+        let mut rng = Rng::seed_from_u64(1);
+        let policy = SchedulerPolicy::init(&mut rng);
+        let opts = ServeOptions {
+            scheduler: Some(policy),
+            adapt: AdaptMode::Online,
+            learner: LearnerConfig { min_batch: 16, ..Default::default() },
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 2)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
+        let learner = report.learner.expect("online run must report its learner");
+        assert!(learner.transitions_seen > 0, "sessions must feed experience");
+        assert!(
+            !learner.epochs.is_empty(),
+            "8 Lift episodes must clear the 16-transition epoch threshold"
+        );
+        assert_eq!(learner.final_epoch(), learner.epochs.len() as u64);
+        assert!(learner.adapted.is_some(), "adapted policy must be returned");
+        // Every adaptive request carries a policy-version label.
+        assert!(report.metrics.policy_epochs.count() > 0);
+        assert_eq!(
+            report.metrics.policy_epochs.count(),
+            report.metrics.requests
+        );
+    }
+
+    #[test]
+    fn online_without_scheduler_is_plain_serving() {
+        // --adapt online with no policy to adapt degenerates to fixed
+        // parameters: no learner, no epoch labels.
+        let opts = ServeOptions {
+            adapt: AdaptMode::Online,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
+        assert!(report.learner.is_none());
+        assert_eq!(report.metrics.policy_epochs.count(), 0);
     }
 
     #[test]

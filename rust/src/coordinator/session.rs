@@ -69,8 +69,11 @@ pub struct SessionConfig {
     pub shard: usize,
     /// Base seed.
     pub seed: u64,
-    /// Scheduler hook (None = fixed parameters server-side).
-    pub adaptive: Option<crate::scheduler::SchedulerPolicy>,
+    /// Scheduler handle (None = fixed parameters server-side). Frozen
+    /// mode infers deterministically from the shared policy store;
+    /// online mode also samples exploration actions and feeds the
+    /// experience sink.
+    pub adaptive: Option<crate::scheduler::SessionScheduler>,
 }
 
 /// Run a session: submit one segment request per control round, execute
@@ -80,7 +83,7 @@ pub fn run_session(
     tx: mpsc::SyncSender<SegmentRequest>,
 ) -> Result<SessionReport> {
     let mut env = make_env(cfg.spec.task, cfg.spec.style);
-    let mut hook = cfg.adaptive.map(crate::scheduler::ServingHook::new);
+    let mut hook = cfg.adaptive.map(crate::scheduler::ServingHook::with_scheduler);
     let mut report = SessionReport {
         session: cfg.session,
         task: cfg.spec.task,
@@ -116,6 +119,7 @@ pub fn run_session(
                 spec: cfg.spec,
                 obs,
                 params,
+                policy_epoch: hook.as_ref().map(|h| h.last_epoch()),
                 submitted,
                 reply: reply_tx,
             })
@@ -168,6 +172,11 @@ pub fn run_session(
                     t_max: env.max_steps(),
                 });
             }
+        }
+        // Episode boundary: online hooks flush the episode's experience
+        // to the learner here (frozen hooks are a no-op).
+        if let Some(h) = hook.as_mut() {
+            h.finish_episode();
         }
         report.successes += env.success() as usize;
         report.mean_score += env.score() as f64 / cfg.spec.episodes as f64;

@@ -17,6 +17,8 @@
 use crate::baselines::{make_generator, Generator};
 use crate::config::{DemoStyle, Method, Task, OBS_DIM};
 use crate::policy::Denoiser;
+use crate::scheduler::features::{features, FeatureState};
+use crate::scheduler::SchedulerPolicy;
 use crate::speculative::SegmentTrace;
 use crate::util::stats::percentile;
 use crate::util::Rng;
@@ -385,7 +387,8 @@ pub fn run_load_point(
     // fleet aggregate is returned); it keys the single generator, which
     // depends on the method alone here.
     let spec = SessionSpec::new(Task::Lift, method);
-    let point = run_mixed_load_point(den, &[spec], &[(spec, pool)], arrivals, n_requests, seed)?;
+    let point =
+        run_mixed_load_point(den, &[spec], &[(spec, pool)], arrivals, n_requests, seed, None)?;
     Ok(point.fleet)
 }
 
@@ -393,6 +396,16 @@ pub fn run_load_point(
 /// from `stream[i % stream.len()]`, so every task and method in the mix
 /// shares one server and contends for the same service capacity.
 /// `pools` maps each distinct spec to its pre-recorded observation pool.
+///
+/// With a `scheduler`, every TS-DP request's [`crate::config::SpecParams`]
+/// are decided by deterministic policy inference (`act_mean`) instead of
+/// the fixed defaults — this is how `ts-dp load-sweep
+/// --scheduler-policy` compares a frozen checkpoint against an
+/// online-adapted one on the same arrival stream. Open-loop replay has
+/// no live env, so the features use replay proxies: the pool cursor
+/// (which walks an expert rollout in phase order) stands in for task
+/// progress, and the speculative feedback comes from the previous
+/// request's trace.
 ///
 /// Returns the fleet aggregate plus per-task latency percentile slices —
 /// the open-loop analogue of the closed-loop fleet's per-shard metrics.
@@ -403,6 +416,7 @@ pub fn run_mixed_load_point(
     arrivals: Arrivals,
     n_requests: usize,
     seed: u64,
+    scheduler: Option<&SchedulerPolicy>,
 ) -> Result<MixedLoadPoint> {
     assert!(!stream.is_empty(), "mixed stream needs at least one spec");
     for (spec, pool) in pools {
@@ -443,6 +457,8 @@ pub fn run_mixed_load_point(
     // (the `*N` mix syntax) still draw distinct, phase-diverse
     // conditioning instead of byte-identical back-to-back requests.
     let mut obs_cursor: BTreeMap<(usize, &'static str), usize> = BTreeMap::new();
+    // Per-(task, method) scheduler feature state (replay proxies).
+    let mut feat_states: BTreeMap<(usize, &'static str), FeatureState> = BTreeMap::new();
     for (i, arrive) in arrival_times.iter().enumerate() {
         let spec = stream[i % stream.len()];
         let pool = pools
@@ -451,7 +467,8 @@ pub fn run_mixed_load_point(
             .with_context(|| format!("no observation pool for spec {spec:?}"))?
             .1;
         let cursor = obs_cursor.entry((spec.task.index(), spec.style.name())).or_insert(0);
-        let obs = &pool[*cursor % pool.len()];
+        let pool_pos = *cursor % pool.len();
+        let obs = &pool[pool_pos];
         *cursor += 1;
         debug_assert_eq!(obs.len(), OBS_DIM);
         let start_service = server_free_at.max(*arrive);
@@ -460,8 +477,29 @@ pub fn run_mixed_load_point(
         let generator = generators
             .entry((spec.task.index(), spec.method.name()))
             .or_insert_with(|| make_generator(spec.method));
+        if let (Some(policy), Method::TsDp) = (scheduler, spec.method) {
+            let st = feat_states
+                .entry((spec.task.index(), spec.method.name()))
+                .or_default();
+            let progress = pool_pos as f32 / pool.len() as f32;
+            let feat = features(obs, progress, 0.0, st);
+            let params = SchedulerPolicy::params_from_raw(&policy.act_mean(&feat));
+            generator.set_params(params);
+            st.last_params = params;
+        }
         let mut trace = SegmentTrace::default();
         generator.generate(den, &cond, &mut rng, &mut trace)?;
+        if scheduler.is_some() && spec.method == Method::TsDp {
+            let st = feat_states
+                .entry((spec.task.index(), spec.method.name()))
+                .or_default();
+            st.recent_acceptance = if trace.drafts() > 0 {
+                trace.accepted() as f32 / trace.drafts() as f32
+            } else {
+                1.0
+            };
+            st.recent_drafts = trace.drafts() as f32;
+        }
         let service = s0.elapsed().as_secs_f64();
         server_free_at = start_service + service;
         let latency = server_free_at - arrive;
@@ -543,7 +581,9 @@ pub fn load_sweep(
         .collect()
 }
 
-/// Sweep offered load for a heterogeneous arrival stream.
+/// Sweep offered load for a heterogeneous arrival stream, optionally
+/// with per-request scheduler decisions (frozen inference on `scheduler`
+/// — how the frozen→adapted efficiency gap is measured open-loop).
 pub fn mixed_load_sweep(
     den: &dyn Denoiser,
     stream: &[SessionSpec],
@@ -551,11 +591,20 @@ pub fn mixed_load_sweep(
     rates: &[f64],
     n_requests: usize,
     seed: u64,
+    scheduler: Option<&SchedulerPolicy>,
 ) -> Result<Vec<MixedLoadPoint>> {
     rates
         .iter()
         .map(|r| {
-            run_mixed_load_point(den, stream, pools, Arrivals::Poisson(*r), n_requests, seed)
+            run_mixed_load_point(
+                den,
+                stream,
+                pools,
+                Arrivals::Poisson(*r),
+                n_requests,
+                seed,
+                scheduler,
+            )
         })
         .collect()
 }
@@ -608,8 +657,9 @@ mod tests {
         assert_eq!(pools.len(), 3);
         let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
             pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
-        let p = run_mixed_load_point(&den, &stream, &pool_refs, Arrivals::Uniform(1e6), 12, 6)
-            .unwrap();
+        let p =
+            run_mixed_load_point(&den, &stream, &pool_refs, Arrivals::Uniform(1e6), 12, 6, None)
+                .unwrap();
         assert_eq!(p.per_task.len(), 3, "one slice per distinct task");
         let total: usize = p.per_task.iter().map(|t| t.requests).sum();
         assert_eq!(total, 12);
@@ -621,6 +671,44 @@ mod tests {
         // Vanilla push_t must cost 100 NFE even inside a mixed stream.
         let push_t = p.per_task.iter().find(|t| t.task == Task::PushT).unwrap();
         assert!((push_t.nfe - 100.0).abs() < 1e-9, "nfe {}", push_t.nfe);
+    }
+
+    #[test]
+    fn scheduler_drives_replay_params_deterministically() {
+        // A frozen policy in the open-loop replay must (a) change the
+        // replayed SpecParams away from the fixed defaults for at least
+        // some requests, and (b) stay fully deterministic: two replays
+        // with the same seed and policy produce identical NFE.
+        let den = MockDenoiser::with_bias(0.05);
+        let stream = [SessionSpec::new(Task::Lift, Method::TsDp)];
+        let pools = record_mixed_pools(&stream, 8, 11);
+        let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+            pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+        let mut rng = Rng::seed_from_u64(42);
+        let policy = SchedulerPolicy::init(&mut rng);
+        let run = |sched: Option<&SchedulerPolicy>| {
+            run_mixed_load_point(
+                &den,
+                &stream,
+                &pool_refs,
+                Arrivals::Uniform(1e6),
+                10,
+                13,
+                sched,
+            )
+            .unwrap()
+            .fleet
+            .nfe
+        };
+        let fixed = run(None);
+        let a = run(Some(&policy));
+        let b = run(Some(&policy));
+        assert_eq!(a, b, "frozen replay must be deterministic");
+        assert!(fixed > 0.0 && a > 0.0);
+        // The policy must actually reach the generator: a fresh policy's
+        // params (different k/λ/σ) cannot replay at the fixed-default
+        // NFE, so equality here would mean set_params went dead.
+        assert_ne!(a, fixed, "scheduler decisions must change the replayed NFE");
     }
 
     #[test]

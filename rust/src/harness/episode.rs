@@ -61,6 +61,12 @@ pub trait DecisionHook {
     /// Outcome feedback (reward computation for PPO, bookkeeping for
     /// serving).
     fn post_segment(&mut self, outcome: &SegmentOutcome<'_>);
+    /// Episode boundary: the env finished (or was cut off at its step
+    /// limit). Experience-collecting hooks close out and flush the
+    /// episode's transitions here; the default is a no-op. Called by
+    /// [`run_episode`] and by the serving session driver after every
+    /// episode.
+    fn finish_episode(&mut self) {}
 }
 
 /// Result of one full episode.
@@ -226,6 +232,9 @@ pub fn run_episode(
         }
         segments.push(meta);
         traces.push(trace);
+    }
+    if let Some(h) = hook.as_deref_mut() {
+        h.finish_episode();
     }
 
     Ok(EpisodeResult {

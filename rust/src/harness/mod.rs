@@ -3,6 +3,7 @@
 pub mod cli;
 pub mod episode;
 pub mod figures;
+pub mod scenarios;
 pub mod tables;
 
 pub use episode::{run_episode, DecisionHook, EpisodeResult, SegmentMeta, SegmentOutcome};

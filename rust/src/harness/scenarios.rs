@@ -1,0 +1,51 @@
+//! Canned evaluation scenarios shared by integration tests and benches.
+//!
+//! `tests/online_adapt.rs` *asserts* the frozen→adapted improvement on
+//! this scenario and `benches/speculative.rs` *reports* it; building
+//! both from one constructor keeps the pinned test and the printed
+//! bench measuring the same thing.
+
+use crate::policy::mock::MockDenoiser;
+use crate::scheduler::SchedulerPolicy;
+use crate::util::Rng;
+
+/// Mock denoiser whose drafter disagrees strongly with the target in
+/// the early high-noise phase (t ≥ 80) and barely at all later — a
+/// phase-dependent difficulty profile with a clearly learnable optimal
+/// schedule (short early horizons, long mid/late ones).
+pub fn phase_biased_mock() -> MockDenoiser {
+    MockDenoiser::with_bias_fn(|t| if t >= 80 { 0.5 } else { 0.02 })
+}
+
+/// A scheduler policy deliberately *mis*-adapted to
+/// [`phase_biased_mock`]: long draft horizons everywhere, a strict
+/// acceptance threshold, and a narrow acceptance σ, so early drafts get
+/// rejected wholesale. Leaves headroom in every action dimension
+/// (shorten k_early, relax λ, widen σ) for the online learner to find.
+pub fn misadapted_scheduler() -> SchedulerPolicy {
+    let mut rng = Rng::seed_from_u64(0xbad0_5eed);
+    let mut p = SchedulerPolicy::init(&mut rng);
+    // Raw-action order: k_early, k_mid, k_late, lambda, sigma_scale.
+    let bias = [2.0f32, 2.0, 2.0, 2.0, -2.0];
+    for (b, v) in p.pi.layers.last_mut().unwrap().b.iter_mut().zip(bias) {
+        *b = v;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::K_MAX;
+    use crate::scheduler::features::FEAT_DIM;
+
+    #[test]
+    fn misadapted_scheduler_means_what_it_says() {
+        let p = misadapted_scheduler();
+        let params =
+            SchedulerPolicy::params_from_raw(&p.act_mean(&vec![0.1; FEAT_DIM]));
+        assert!(params.stages.k_early > K_MAX / 2, "long early horizon");
+        assert!(params.lambda > 0.1, "strict threshold");
+        assert!(params.sigma_scale < 3.0, "narrow acceptance sigma");
+    }
+}

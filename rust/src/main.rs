@@ -56,9 +56,12 @@ COMMANDS:
                    | --mix \"lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2\"
                    [--shards N] [--policy fair|fifo] [--max-batch N]
                    [--batch-window-us U] [--queue N] [--adaptive]
-                   [--drafter FILE]
+                   [--adapt frozen|online] [--learner-min-batch N]
+                   [--learner-buffer N] [--checkpoint-every N]
+                   [--adapted-policy-out FILE] [--drafter FILE]
   load-sweep       --task T [--method M] | --mix SPEC
                    [--rates 1,5,20] [--requests N] [--drafter FILE]
+                   [--scheduler-policy FILE]
   episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
                    [--drafter FILE]
   train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
@@ -77,6 +80,15 @@ Drafter swapping: `distill-drafter` trains an in-crate Transformer
 drafter against the base model and saves a JSON checkpoint;
 `--drafter FILE` on serve/load-sweep/episode swaps it under every
 replica (target verification is untouched, so results stay lossless).
+
+Online adaptation: `serve --adapt online` keeps PPO-training the
+scheduler from live traffic (a background learner publishes
+epoch-versioned policy snapshots at segment boundaries) and can
+checkpoint the adapted policy with --adapted-policy-out;
+`serve --adapt frozen` (or bare --adaptive) replays the checkpoint
+bit-identically. `load-sweep --scheduler-policy FILE` sweeps with
+scheduler-driven SpecParams, so frozen vs adapted checkpoints can be
+compared on identical arrival streams.
 
 Common options:
   --artifacts DIR       artifact directory (default: artifacts)

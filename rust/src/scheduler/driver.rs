@@ -1,40 +1,237 @@
-//! Serving-time scheduler hook: deterministic policy inference per
-//! segment (the paper's "Decision stage", Fig. 2 ①).
+//! Serving-time scheduler hook (the paper's "Decision stage", Fig. 2 ①),
+//! in two modes:
+//!
+//! * **Frozen** — deterministic `act_mean` inference on the current
+//!   policy snapshot. With nothing publishing new epochs this replays
+//!   the loaded checkpoint bit-identically run to run (the golden-trace
+//!   contract).
+//! * **Online** — the hook doubles as an *experience collector*: it
+//!   samples the stochastic policy (`act`), assembles one [`Transition`]
+//!   per decision from the live segment outcome (Eq. 12–15 rewards via
+//!   [`crate::scheduler::reward::segment_reward`]), and offers each
+//!   finished episode's transitions into its shard's bounded experience
+//!   buffer for the background PPO learner.
+//!
+//! Either way the policy snapshot is re-read per decision — a segment
+//! boundary — so a published update never lands mid-segment.
 
-use crate::config::SpecParams;
+use crate::config::{AdaptMode, SpecParams};
 use crate::harness::episode::{DecisionHook, SegmentOutcome};
+use crate::scheduler::online::{ExperienceSink, PolicyStore, SessionScheduler};
 use crate::scheduler::policy::SchedulerPolicy;
+use crate::scheduler::ppo::Transition;
+use crate::scheduler::reward::segment_reward;
+use crate::util::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
-/// Wraps a trained policy for inference inside the episode loop.
+/// Decisions retained by a hook's trace ring (Fig. 5 / debugging). The
+/// same bounded-memory discipline as the metrics reservoirs: a
+/// long-running serving session keeps the most recent
+/// `DECISION_TRACE_CAP` decisions, never an unbounded history.
+pub const DECISION_TRACE_CAP: usize = 4096;
+
+/// One recorded scheduler decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// Policy epoch the decision was made under (0 = starting policy).
+    pub epoch: u64,
+    /// The parameters chosen.
+    pub params: SpecParams,
+}
+
+/// Bounded ring of the most recent scheduler decisions.
+#[derive(Debug, Clone)]
+pub struct DecisionTrace {
+    cap: usize,
+    seen: u64,
+    ring: VecDeque<Decision>,
+}
+
+impl DecisionTrace {
+    /// Empty trace retaining at most `cap` decisions.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "DecisionTrace capacity must be positive");
+        Self { cap, seen: 0, ring: VecDeque::with_capacity(cap.min(1024)) }
+    }
+
+    /// Record one decision (O(1); evicts the oldest beyond capacity).
+    pub fn push(&mut self, d: Decision) {
+        self.seen += 1;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(d);
+    }
+
+    /// Total decisions ever recorded (≥ retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained decision count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when nothing was recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The retained decisions, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Decision> {
+        self.ring.iter()
+    }
+
+    /// The most recent decision.
+    pub fn latest(&self) -> Option<&Decision> {
+        self.ring.back()
+    }
+}
+
+/// Wraps a policy store for inference inside the episode loop, and (in
+/// online mode) collects the experience the background learner trains
+/// on.
 pub struct ServingHook {
-    policy: SchedulerPolicy,
-    /// Parameter trace (for Fig. 5); one entry per decision.
-    pub decisions: Vec<SpecParams>,
+    store: Arc<PolicyStore>,
+    mode: AdaptMode,
+    /// Exploration RNG (consumed only in online mode).
+    explore: Rng,
+    /// Experience sink into the session's shard buffer (online mode).
+    sink: Option<ExperienceSink>,
+    /// Transition awaiting its `post_segment` outcome.
+    pending: Option<Transition>,
+    /// Completed transitions of the in-progress episode.
+    staged: Vec<Transition>,
+    staged_drafts: usize,
+    staged_accepted: usize,
+    /// Policy epoch of the most recent decision.
+    last_epoch: u64,
+    /// Bounded trace of recent decisions.
+    decisions: DecisionTrace,
 }
 
 impl ServingHook {
-    /// New hook around a trained policy.
+    /// Frozen-mode hook around a private store (single-session paths:
+    /// `ts-dp episode`, tables, figures).
     pub fn new(policy: SchedulerPolicy) -> Self {
-        Self { policy, decisions: Vec::new() }
+        Self::with_scheduler(SessionScheduler::frozen(policy))
+    }
+
+    /// Hook over a (possibly fleet-shared) scheduler handle.
+    pub fn with_scheduler(sched: SessionScheduler) -> Self {
+        Self {
+            store: sched.store,
+            mode: sched.mode,
+            explore: Rng::seed_from_u64(sched.explore_seed),
+            sink: sched.sink,
+            pending: None,
+            staged: Vec::new(),
+            staged_drafts: 0,
+            staged_accepted: 0,
+            last_epoch: 0,
+            decisions: DecisionTrace::new(DECISION_TRACE_CAP),
+        }
+    }
+
+    /// Recent decisions (bounded ring, oldest first).
+    pub fn decisions(&self) -> &DecisionTrace {
+        &self.decisions
+    }
+
+    /// Policy epoch of the most recent decision (0 before any).
+    pub fn last_epoch(&self) -> u64 {
+        self.last_epoch
+    }
+
+    /// Hand the episode's staged transitions to the learner (marking
+    /// the final transition `done` if the outcome never did).
+    fn flush_episode(&mut self, force_done: bool) {
+        if let Some(t) = self.pending.take() {
+            self.staged.push(t);
+        }
+        if self.staged.is_empty() {
+            return;
+        }
+        if force_done {
+            if let Some(last) = self.staged.last_mut() {
+                last.done = true;
+            }
+        }
+        let batch = std::mem::take(&mut self.staged);
+        if let Some(sink) = &self.sink {
+            sink.offer(batch, self.staged_drafts, self.staged_accepted);
+        }
+        self.staged_drafts = 0;
+        self.staged_accepted = 0;
     }
 }
 
 impl DecisionHook for ServingHook {
     fn decide(&mut self, feat: &[f32]) -> SpecParams {
-        let raw = self.policy.act_mean(feat);
-        let p = SchedulerPolicy::params_from_raw(&raw);
-        self.decisions.push(p);
-        p
+        let snap = self.store.snapshot();
+        self.last_epoch = snap.epoch;
+        let params = match self.mode {
+            AdaptMode::Frozen => {
+                let raw = snap.policy.act_mean(feat);
+                SchedulerPolicy::params_from_raw(&raw)
+            }
+            AdaptMode::Online => {
+                // A decide without an interleaved post_segment would
+                // orphan the pending transition; keep it (reward 0)
+                // rather than mis-crediting the next outcome.
+                if let Some(t) = self.pending.take() {
+                    self.staged.push(t);
+                }
+                let (raw, logp) = snap.policy.act(feat, &mut self.explore);
+                let value = snap.policy.value_of(feat);
+                let params = SchedulerPolicy::params_from_raw(&raw);
+                self.pending = Some(Transition {
+                    feat: feat.to_vec(),
+                    raw,
+                    logp,
+                    value,
+                    reward: 0.0,
+                    done: false,
+                });
+                params
+            }
+        };
+        self.decisions.push(Decision { epoch: snap.epoch, params });
+        params
     }
 
-    fn post_segment(&mut self, _outcome: &SegmentOutcome<'_>) {}
+    fn post_segment(&mut self, outcome: &SegmentOutcome<'_>) {
+        if self.mode != AdaptMode::Online {
+            return;
+        }
+        let Some(mut t) = self.pending.take() else { return };
+        let (reward, done) = segment_reward(outcome);
+        t.reward = reward;
+        t.done = done;
+        self.staged_drafts += outcome.meta.drafts;
+        self.staged_accepted += outcome.meta.accepted;
+        self.staged.push(t);
+        if done {
+            self.flush_episode(false);
+        }
+    }
+
+    fn finish_episode(&mut self) {
+        if self.mode == AdaptMode::Online {
+            self.flush_episode(true);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Task;
+    use crate::harness::episode::SegmentMeta;
     use crate::scheduler::features::FEAT_DIM;
-    use crate::util::Rng;
+    use crate::scheduler::online::ExperienceHub;
 
     #[test]
     fn serving_hook_is_deterministic_and_records_decisions() {
@@ -45,6 +242,126 @@ mod tests {
         let p1 = hook.decide(&feat);
         let p2 = hook.decide(&feat);
         assert_eq!(p1, p2);
-        assert_eq!(hook.decisions.len(), 2);
+        assert_eq!(hook.decisions().len(), 2);
+        assert_eq!(hook.decisions().latest().unwrap().params, p2);
+        assert_eq!(hook.last_epoch(), 0);
+    }
+
+    #[test]
+    fn decision_trace_is_bounded() {
+        let mut trace = DecisionTrace::new(16);
+        let d = |k: usize| Decision { epoch: k as u64, params: SpecParams::fixed_k(1 + k % 8) };
+        for i in 0..100 {
+            trace.push(d(i));
+        }
+        assert_eq!(trace.len(), 16, "ring must stay at capacity");
+        assert_eq!(trace.seen(), 100);
+        // The retained window is the most recent 16, oldest first.
+        let epochs: Vec<u64> = trace.iter().map(|d| d.epoch).collect();
+        assert_eq!(epochs, (84..100).collect::<Vec<u64>>());
+        assert_eq!(trace.latest().unwrap().epoch, 99);
+    }
+
+    #[test]
+    fn long_serving_does_not_grow_the_hook() {
+        // Regression (satellite): a hook driven for far more decisions
+        // than DECISION_TRACE_CAP must hold at most the cap.
+        let mut rng = Rng::seed_from_u64(1);
+        let mut hook = ServingHook::new(SchedulerPolicy::init(&mut rng));
+        let feat = vec![0.1; FEAT_DIM];
+        for _ in 0..(DECISION_TRACE_CAP + 500) {
+            hook.decide(&feat);
+        }
+        assert_eq!(hook.decisions().len(), DECISION_TRACE_CAP);
+        assert_eq!(hook.decisions().seen(), (DECISION_TRACE_CAP + 500) as u64);
+    }
+
+    fn outcome(meta: &SegmentMeta, done: bool) -> SegmentOutcome<'_> {
+        SegmentOutcome {
+            meta,
+            done,
+            success: done,
+            score: 1.0,
+            task: Task::Lift,
+            t_max: 100,
+        }
+    }
+
+    #[test]
+    fn online_hook_collects_and_flushes_episodes() {
+        let mut rng = Rng::seed_from_u64(2);
+        let policy = SchedulerPolicy::init(&mut rng);
+        let (hub, receivers) = ExperienceHub::new(1, 8);
+        let sched = SessionScheduler {
+            store: Arc::new(PolicyStore::new(policy)),
+            mode: AdaptMode::Online,
+            sink: Some(hub.sink(0, 0)),
+            explore_seed: 7,
+        };
+        let mut hook = ServingHook::with_scheduler(sched);
+        let feat = vec![0.2; FEAT_DIM];
+        let meta = SegmentMeta {
+            env_step: 0,
+            phase: 0,
+            ee_speed: 0.0,
+            drafts: 10,
+            accepted: 9,
+            nfe: 12.0,
+            wall_secs: 0.0,
+            params: SpecParams::fixed_default(),
+        };
+        // Two mid-episode segments + one terminal one.
+        for _ in 0..2 {
+            hook.decide(&feat);
+            hook.post_segment(&outcome(&meta, false));
+        }
+        hook.decide(&feat);
+        hook.post_segment(&outcome(&meta, true));
+        hook.finish_episode();
+
+        let batch = receivers[0].try_recv().expect("episode batch flushed");
+        assert_eq!(batch.transitions.len(), 3);
+        assert!(batch.transitions[..2].iter().all(|t| !t.done));
+        assert!(batch.transitions[2].done);
+        assert!(batch.transitions[2].reward > batch.transitions[0].reward);
+        assert_eq!(batch.drafts, 30);
+        assert_eq!(batch.accepted, 27);
+        // Exactly one batch per episode.
+        assert!(receivers[0].try_recv().is_err());
+        // Exploration sampling: decisions vary even on identical
+        // features (stochastic policy), unlike frozen mode.
+        assert_eq!(hook.decisions().len(), 3);
+    }
+
+    #[test]
+    fn step_limit_cutoff_still_terminates_the_episode() {
+        // An env that hits its step limit mid-segment never reports
+        // done=true to post_segment; finish_episode must still mark the
+        // last transition done so GAE never bleeds across episodes.
+        let mut rng = Rng::seed_from_u64(3);
+        let (hub, receivers) = ExperienceHub::new(1, 8);
+        let sched = SessionScheduler {
+            store: Arc::new(PolicyStore::new(SchedulerPolicy::init(&mut rng))),
+            mode: AdaptMode::Online,
+            sink: Some(hub.sink(0, 0)),
+            explore_seed: 8,
+        };
+        let mut hook = ServingHook::with_scheduler(sched);
+        let feat = vec![0.3; FEAT_DIM];
+        let meta = SegmentMeta {
+            env_step: 96,
+            phase: 1,
+            ee_speed: 0.0,
+            drafts: 4,
+            accepted: 2,
+            nfe: 30.0,
+            wall_secs: 0.0,
+            params: SpecParams::fixed_default(),
+        };
+        hook.decide(&feat);
+        hook.post_segment(&outcome(&meta, false));
+        hook.finish_episode();
+        let batch = receivers[0].try_recv().unwrap();
+        assert!(batch.transitions[0].done, "cutoff episodes must close");
     }
 }

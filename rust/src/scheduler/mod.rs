@@ -7,10 +7,15 @@ pub mod cli;
 pub mod driver;
 pub mod features;
 pub mod nn;
+pub mod online;
 pub mod policy;
 pub mod ppo;
 pub mod reward;
 pub mod train;
 
 pub use driver::ServingHook;
+pub use online::{
+    EpochStats, ExperienceHub, ExperienceSink, LearnerConfig, LearnerReport, PolicyStore,
+    SessionScheduler,
+};
 pub use policy::SchedulerPolicy;

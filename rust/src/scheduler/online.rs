@@ -1,0 +1,596 @@
+//! Online scheduler adaptation (paper §3.3's *reinforcement* loop, kept
+//! alive at serving time): epoch-versioned policy snapshots, bounded
+//! per-shard experience transport, and the background PPO learner that
+//! closes the loop.
+//!
+//! Dataflow: adaptive sessions sample the stochastic policy
+//! ([`crate::scheduler::ServingHook`] in [`crate::config::AdaptMode::Online`]
+//! mode), assemble per-decision [`Transition`]s from live segment
+//! outcomes, and `offer` one episode batch at a time into their shard's
+//! bounded buffer ([`ExperienceHub`]). The learner thread drains every
+//! shard's buffer, aggregates cross-shard batches, runs one PPO epoch
+//! whenever at least `min_batch` transitions are pending, and publishes
+//! the updated policy as a new epoch through the shared [`PolicyStore`].
+//! Sessions pick up the newest snapshot at their next decision — a
+//! segment boundary — so in-flight speculative rounds always finish
+//! under the parameters they were admitted with (losslessness is
+//! per-segment; adaptation only changes *future* decisions).
+//!
+//! Overload semantics: experience transport never blocks serving. A full
+//! shard buffer sheds the episode batch (counted in
+//! [`LearnerReport::dropped_batches`]) — under heavy traffic the learner
+//! simply trains on a subsample of the stream.
+
+use crate::config::AdaptMode;
+use crate::scheduler::policy::SchedulerPolicy;
+use crate::scheduler::ppo::{update, PpoConfig, Transition, UpdateStats};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// An immutable scheduler-policy snapshot tagged with the learner epoch
+/// that produced it (epoch 0 = the policy serving started with).
+#[derive(Debug, Clone)]
+pub struct VersionedPolicy {
+    /// Learner epoch (number of PPO updates published before this one).
+    pub epoch: u64,
+    /// The policy weights at this epoch.
+    pub policy: SchedulerPolicy,
+}
+
+/// Shared store of the current policy snapshot.
+///
+/// Sessions call [`PolicyStore::snapshot`] once per scheduler decision
+/// (i.e. at a segment boundary) and hold the returned `Arc` for exactly
+/// that decision; the learner [`PolicyStore::publish`]es new epochs
+/// concurrently. Swaps are therefore observed only *between* segments —
+/// a segment's speculative rounds never see the policy change under
+/// them. In frozen mode nothing ever publishes, so the store pins
+/// epoch 0 and `snapshot` is a cheap clone of one `Arc`.
+#[derive(Debug)]
+pub struct PolicyStore {
+    current: Mutex<Arc<VersionedPolicy>>,
+}
+
+impl PolicyStore {
+    /// Store pinned at epoch 0 with the given starting policy.
+    pub fn new(policy: SchedulerPolicy) -> Self {
+        Self { current: Mutex::new(Arc::new(VersionedPolicy { epoch: 0, policy })) }
+    }
+
+    /// The current snapshot (cheap: one lock + `Arc` clone).
+    pub fn snapshot(&self) -> Arc<VersionedPolicy> {
+        self.current.lock().expect("policy store poisoned").clone()
+    }
+
+    /// Publish an updated policy as the next epoch; returns that epoch.
+    pub fn publish(&self, policy: SchedulerPolicy) -> u64 {
+        let mut cur = self.current.lock().expect("policy store poisoned");
+        let epoch = cur.epoch + 1;
+        *cur = Arc::new(VersionedPolicy { epoch, policy });
+        epoch
+    }
+
+    /// The current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+}
+
+/// One episode's worth of scheduler experience from one session, plus
+/// the speculative-decoding tallies the per-epoch accept-rate trajectory
+/// is computed from.
+#[derive(Debug, Clone)]
+pub struct ExperienceBatch {
+    /// Shard the producing session is routed to.
+    pub shard: usize,
+    /// Producing session id.
+    pub session: usize,
+    /// Per-decision transitions, episode order (last one `done`).
+    pub transitions: Vec<Transition>,
+    /// Drafts proposed over the episode.
+    pub drafts: usize,
+    /// Drafts accepted over the episode.
+    pub accepted: usize,
+}
+
+/// Per-shard bounded experience buffers: one `sync_channel` per shard,
+/// senders fanned out to that shard's sessions, receivers owned by the
+/// learner. The channel capacity is the satellite-mandated growth bound
+/// — experience memory is `shards × capacity` episode batches no matter
+/// how long the fleet serves.
+pub struct ExperienceHub {
+    senders: Vec<SyncSender<ExperienceBatch>>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl ExperienceHub {
+    /// Build the hub and hand back the learner's receiver ends.
+    pub fn new(shards: usize, capacity: usize) -> (Self, Vec<Receiver<ExperienceBatch>>) {
+        let mut senders = Vec::with_capacity(shards);
+        let mut receivers = Vec::with_capacity(shards);
+        for _ in 0..shards.max(1) {
+            let (tx, rx) = std::sync::mpsc::sync_channel(capacity.max(1));
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        (Self { senders, dropped: Arc::new(AtomicU64::new(0)) }, receivers)
+    }
+
+    /// A sink for one session routed to `shard`.
+    pub fn sink(&self, shard: usize, session: usize) -> ExperienceSink {
+        ExperienceSink {
+            shard,
+            session,
+            tx: self.senders[shard.min(self.senders.len() - 1)].clone(),
+            dropped: self.dropped.clone(),
+        }
+    }
+
+    /// Episode batches shed so far (full buffer or learner gone).
+    pub fn dropped(&self) -> Arc<AtomicU64> {
+        self.dropped.clone()
+    }
+}
+
+/// A session's handle into its shard's experience buffer. Cloneable and
+/// non-blocking: offering into a full buffer sheds the batch.
+#[derive(Debug, Clone)]
+pub struct ExperienceSink {
+    shard: usize,
+    session: usize,
+    tx: SyncSender<ExperienceBatch>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl ExperienceSink {
+    /// Offer one episode batch; never blocks the serving path.
+    pub fn offer(&self, transitions: Vec<Transition>, drafts: usize, accepted: usize) {
+        if transitions.is_empty() {
+            return;
+        }
+        let batch = ExperienceBatch {
+            shard: self.shard,
+            session: self.session,
+            transitions,
+            drafts,
+            accepted,
+        };
+        if self.tx.try_send(batch).is_err() {
+            // Full buffer (overload: shed experience, keep serving) or a
+            // learner that already exited — either way serving goes on.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Online-learner configuration (the `--learner-*` serving knobs).
+#[derive(Debug, Clone)]
+pub struct LearnerConfig {
+    /// Minimum transitions aggregated across shards before one PPO
+    /// epoch runs.
+    pub min_batch: usize,
+    /// Bounded per-shard experience-buffer capacity, in episode batches.
+    pub buffer_capacity: usize,
+    /// PPO hyperparameters for the online updates.
+    pub ppo: PpoConfig,
+    /// Learner RNG seed (minibatch shuffling).
+    pub seed: u64,
+    /// Checkpoint the adapted policy every N epochs (0 = only at exit).
+    pub checkpoint_every: u64,
+    /// Checkpoint path (None = no on-disk checkpoints).
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        Self {
+            min_batch: 256,
+            buffer_capacity: 64,
+            ppo: PpoConfig::default(),
+            seed: 0,
+            checkpoint_every: 0,
+            checkpoint: None,
+        }
+    }
+}
+
+/// One published learner epoch: the reward / accept-rate trajectory
+/// entry reported alongside the fleet metrics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    /// Epoch published by this update.
+    pub epoch: u64,
+    /// Transitions in the aggregated cross-shard batch.
+    pub transitions: usize,
+    /// Mean per-transition scheduler reward of the batch.
+    pub mean_reward: f64,
+    /// Draft accept-rate over the batch's episodes.
+    pub accept_rate: f64,
+    /// PPO update statistics.
+    pub update: UpdateStats,
+}
+
+/// What the background learner did over one serving run.
+#[derive(Debug, Clone, Default)]
+pub struct LearnerReport {
+    /// Per-epoch trajectory, in publish order.
+    pub epochs: Vec<EpochStats>,
+    /// Transitions received from sessions (pre-aggregation).
+    pub transitions_seen: usize,
+    /// Episode batches received per shard, sorted by shard id — shows
+    /// which parts of the fleet actually fed the learner (a silent
+    /// shard here means its sessions shed or produced no experience).
+    pub shard_batches: Vec<(usize, u64)>,
+    /// Distinct sessions that contributed experience.
+    pub sessions_contributing: usize,
+    /// Episode batches shed by full buffers.
+    pub dropped_batches: u64,
+    /// Checkpoints written (periodic + final).
+    pub checkpoints_written: usize,
+    /// The adapted policy at shutdown (the last published snapshot, or
+    /// the starting policy when no epoch ran).
+    pub adapted: Option<SchedulerPolicy>,
+}
+
+impl LearnerReport {
+    /// Newest published epoch (0 when no update ran).
+    pub fn final_epoch(&self) -> u64 {
+        self.epochs.last().map(|e| e.epoch).unwrap_or(0)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (first, last) = (self.epochs.first(), self.epochs.last());
+        format!(
+            "learner: epochs={} transitions={} sessions={} shards={} dropped-batches={} \
+             reward {:.3}->{:.3} accept {:.1}%->{:.1}% checkpoints={}",
+            self.epochs.len(),
+            self.transitions_seen,
+            self.sessions_contributing,
+            self.shard_batches.len(),
+            self.dropped_batches,
+            first.map(|e| e.mean_reward).unwrap_or(0.0),
+            last.map(|e| e.mean_reward).unwrap_or(0.0),
+            first.map(|e| e.accept_rate).unwrap_or(0.0) * 100.0,
+            last.map(|e| e.accept_rate).unwrap_or(0.0) * 100.0,
+            self.checkpoints_written,
+        )
+    }
+}
+
+/// Accumulated but not-yet-trained experience inside the learner loop.
+#[derive(Default)]
+struct PendingBatch {
+    transitions: Vec<Transition>,
+    drafts: usize,
+    accepted: usize,
+}
+
+impl PendingBatch {
+    fn absorb(&mut self, batch: ExperienceBatch) {
+        self.transitions.extend(batch.transitions);
+        self.drafts += batch.drafts;
+        self.accepted += batch.accepted;
+    }
+}
+
+/// Run one PPO epoch over the pending batch, publish the new snapshot,
+/// and append the trajectory entry. Clears the pending batch.
+fn train_epoch(
+    store: &PolicyStore,
+    cfg: &LearnerConfig,
+    rng: &mut Rng,
+    pending: &mut PendingBatch,
+    report: &mut LearnerReport,
+) -> Result<()> {
+    let n = pending.transitions.len();
+    debug_assert!(n > 0, "train_epoch on an empty batch");
+    let mean_reward = pending.transitions.iter().map(|t| t.reward).sum::<f64>() / n as f64;
+    let accept_rate = if pending.drafts > 0 {
+        pending.accepted as f64 / pending.drafts as f64
+    } else {
+        0.0
+    };
+    let mut policy = store.snapshot().policy.clone();
+    let stats = update(&mut policy, &pending.transitions, &cfg.ppo, rng);
+    let epoch = store.publish(policy);
+    report.epochs.push(EpochStats {
+        epoch,
+        transitions: n,
+        mean_reward,
+        accept_rate,
+        update: stats,
+    });
+    if let (Some(path), every) = (&cfg.checkpoint, cfg.checkpoint_every) {
+        if every > 0 && epoch % every == 0 {
+            store
+                .snapshot()
+                .policy
+                .save(path)
+                .with_context(|| format!("checkpointing adapted policy to {}", path.display()))?;
+            report.checkpoints_written += 1;
+        }
+    }
+    *pending = PendingBatch::default();
+    Ok(())
+}
+
+/// The background learner loop: drain every shard's experience buffer,
+/// aggregate cross-shard batches, PPO-update + publish whenever
+/// `min_batch` transitions are pending, and checkpoint per the config.
+/// Returns when every sink has hung up (serving ended), after a final
+/// update over any sufficiently large tail and a final checkpoint.
+pub fn run_learner(
+    store: Arc<PolicyStore>,
+    receivers: Vec<Receiver<ExperienceBatch>>,
+    cfg: LearnerConfig,
+    dropped: Arc<AtomicU64>,
+) -> Result<LearnerReport> {
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x1ea2_ae0d_5c3e_d01e);
+    let mut open = vec![true; receivers.len()];
+    let mut pending = PendingBatch::default();
+    let mut report = LearnerReport::default();
+    let mut shard_batches: std::collections::BTreeMap<usize, u64> =
+        std::collections::BTreeMap::new();
+    let mut sessions: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    let min_batch = cfg.min_batch.max(1);
+
+    loop {
+        let mut drained = false;
+        for (i, rx) in receivers.iter().enumerate() {
+            if !open[i] {
+                continue;
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(batch) => {
+                        report.transitions_seen += batch.transitions.len();
+                        *shard_batches.entry(batch.shard).or_insert(0) += 1;
+                        sessions.insert(batch.session);
+                        pending.absorb(batch);
+                        drained = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open[i] = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.transitions.len() >= min_batch {
+            train_epoch(&store, &cfg, &mut rng, &mut pending, &mut report)?;
+        }
+        if open.iter().all(|o| !o) {
+            break;
+        }
+        if !drained {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    // Final partial epoch: don't waste the tail of a short run, but skip
+    // fragments too small for a meaningful gradient.
+    if pending.transitions.len() >= (min_batch / 2).max(8) {
+        train_epoch(&store, &cfg, &mut rng, &mut pending, &mut report)?;
+    }
+    if let Some(path) = &cfg.checkpoint {
+        store
+            .snapshot()
+            .policy
+            .save(path)
+            .with_context(|| format!("writing final adapted policy to {}", path.display()))?;
+        report.checkpoints_written += 1;
+    }
+    report.shard_batches = shard_batches.into_iter().collect();
+    report.sessions_contributing = sessions.len();
+    report.dropped_batches = dropped.load(Ordering::Relaxed);
+    report.adapted = Some(store.snapshot().policy.clone());
+    Ok(report)
+}
+
+/// Everything one adaptive session needs: the shared store, the mode,
+/// and (online only) its experience sink + exploration seed.
+#[derive(Clone)]
+pub struct SessionScheduler {
+    /// Shared epoch-versioned policy store.
+    pub store: Arc<PolicyStore>,
+    /// Frozen inference or online adaptation.
+    pub mode: AdaptMode,
+    /// Experience sink into the session's shard buffer (online only).
+    pub sink: Option<ExperienceSink>,
+    /// Exploration-RNG seed (online only; placement-independent).
+    pub explore_seed: u64,
+}
+
+impl std::fmt::Debug for SessionScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionScheduler")
+            .field("mode", &self.mode)
+            .field("epoch", &self.store.epoch())
+            .field("has_sink", &self.sink.is_some())
+            .finish()
+    }
+}
+
+impl SessionScheduler {
+    /// Frozen-mode scheduler around a private store (single-session
+    /// paths: `ts-dp episode`, tables, figures).
+    pub fn frozen(policy: SchedulerPolicy) -> Self {
+        Self {
+            store: Arc::new(PolicyStore::new(policy)),
+            mode: AdaptMode::Frozen,
+            sink: None,
+            explore_seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::features::FEAT_DIM;
+    use crate::scheduler::policy::ACT_N;
+    use crate::util::testing::TempDir;
+
+    fn transition(feat: f32, reward: f64, done: bool) -> Transition {
+        Transition {
+            feat: vec![feat; FEAT_DIM],
+            raw: vec![0.0; ACT_N],
+            logp: -1.0,
+            value: 0.0,
+            reward,
+            done,
+        }
+    }
+
+    #[test]
+    fn policy_store_versions_snapshots() {
+        let mut rng = Rng::seed_from_u64(0);
+        let store = PolicyStore::new(SchedulerPolicy::init(&mut rng));
+        assert_eq!(store.epoch(), 0);
+        let before = store.snapshot();
+        let e1 = store.publish(SchedulerPolicy::init(&mut rng));
+        assert_eq!(e1, 1);
+        assert_eq!(store.epoch(), 1);
+        // Snapshots are immutable: the pre-publish handle still reads
+        // epoch 0 (an in-flight decision never sees the swap).
+        assert_eq!(before.epoch, 0);
+        assert_eq!(store.publish(SchedulerPolicy::init(&mut rng)), 2);
+    }
+
+    #[test]
+    fn full_buffers_shed_instead_of_blocking() {
+        let (hub, _receivers) = ExperienceHub::new(1, 2);
+        let sink = hub.sink(0, 0);
+        for _ in 0..5 {
+            sink.offer(vec![transition(0.0, 1.0, true)], 10, 5);
+        }
+        // Capacity 2: three of five batches shed, none blocked.
+        assert_eq!(hub.dropped().load(Ordering::Relaxed), 3);
+        // Empty batches are ignored outright.
+        sink.offer(Vec::new(), 0, 0);
+        assert_eq!(hub.dropped().load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn sink_survives_a_dead_learner() {
+        let (hub, receivers) = ExperienceHub::new(2, 4);
+        drop(receivers);
+        let sink = hub.sink(1, 3);
+        sink.offer(vec![transition(0.0, 0.0, true)], 1, 1);
+        assert_eq!(hub.dropped().load(Ordering::Relaxed), 1);
+    }
+
+    /// End-to-end learner sanity on a bandit: reward = -(a0)², fed as
+    /// synthetic episode batches; the learner must publish epochs and
+    /// move the policy mean toward 0 (the same landscape as
+    /// `ppo::tests::ppo_improves_a_simple_bandit`, but through the
+    /// store/hub/learner plumbing).
+    #[test]
+    fn learner_publishes_epochs_and_improves_a_bandit() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut start = SchedulerPolicy::init(&mut rng);
+        for b in start.pi.layers.last_mut().unwrap().b.iter_mut() {
+            *b = 1.5;
+        }
+        let feat = vec![0.3; FEAT_DIM];
+        let store = Arc::new(PolicyStore::new(start));
+        let mean_before = store.snapshot().policy.act_mean(&feat)[0].abs();
+
+        let (hub, receivers) = ExperienceHub::new(2, 256);
+        let dropped = hub.dropped();
+        let cfg = LearnerConfig {
+            min_batch: 64,
+            ppo: PpoConfig { pi_lr: 3e-3, v_lr: 3e-3, ..Default::default() },
+            seed: 9,
+            ..Default::default()
+        };
+        let learner = {
+            let store = store.clone();
+            std::thread::spawn(move || run_learner(store, receivers, cfg, dropped))
+        };
+
+        // Two "shards" of sessions feeding the hub; each batch samples
+        // the *current* snapshot so later batches are on-policy.
+        let mut act_rng = Rng::seed_from_u64(17);
+        for round in 0..40usize {
+            let snap = store.snapshot();
+            let mut transitions = Vec::with_capacity(16);
+            for _ in 0..16 {
+                let (raw, logp) = snap.policy.act(&feat, &mut act_rng);
+                let reward = -(raw[0] as f64).powi(2);
+                transitions.push(Transition {
+                    feat: feat.clone(),
+                    raw,
+                    logp,
+                    value: snap.policy.value_of(&feat),
+                    reward,
+                    done: true,
+                });
+            }
+            hub.sink(round % 2, round).offer(transitions, 16, 8);
+            // Let the learner keep up (bounded buffers shed otherwise).
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(hub);
+        let report = learner.join().expect("learner panicked").unwrap();
+
+        assert!(!report.epochs.is_empty(), "no epoch ran");
+        assert_eq!(report.final_epoch(), report.epochs.len() as u64);
+        assert_eq!(store.epoch(), report.final_epoch());
+        assert!(report.transitions_seen > 0);
+        let mean_after = store.snapshot().policy.act_mean(&feat)[0].abs();
+        assert!(
+            mean_after < mean_before,
+            "bandit mean |a0| must shrink: {mean_before} -> {mean_after}"
+        );
+        // Accept tallies flow into the trajectory.
+        for e in &report.epochs {
+            assert!((e.accept_rate - 0.5).abs() < 1e-9);
+            assert!(e.transitions >= 64 || e.epoch == report.final_epoch());
+        }
+        assert!(report.adapted.is_some());
+        // Provenance: both feeding shards and many distinct sessions
+        // show up in the report.
+        assert_eq!(report.shard_batches.len(), 2, "{:?}", report.shard_batches);
+        assert_eq!(report.shard_batches.iter().map(|&(_, n)| n).sum::<u64>(), 40);
+        assert_eq!(report.sessions_contributing, 40);
+        assert!(report.summary().contains("epochs="));
+    }
+
+    #[test]
+    fn learner_checkpoints_periodically_and_at_exit() {
+        let dir = TempDir::new("online_ckpt");
+        let path = dir.path().join("adapted.json");
+        let mut rng = Rng::seed_from_u64(5);
+        let store = Arc::new(PolicyStore::new(SchedulerPolicy::init(&mut rng)));
+        let (hub, receivers) = ExperienceHub::new(1, 64);
+        let dropped = hub.dropped();
+        let cfg = LearnerConfig {
+            min_batch: 8,
+            checkpoint_every: 1,
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let sink = hub.sink(0, 0);
+        let mut batch = Vec::new();
+        for i in 0..8 {
+            batch.push(transition(i as f32 * 0.1, 0.5, i == 7));
+        }
+        sink.offer(batch, 8, 4);
+        drop(hub);
+        drop(sink);
+        let report = run_learner(store.clone(), receivers, cfg, dropped).unwrap();
+        assert!(report.checkpoints_written >= 2, "periodic + final");
+        // The checkpoint round-trips into the published snapshot.
+        let loaded = SchedulerPolicy::load(&path).unwrap();
+        let feat = vec![0.1; FEAT_DIM];
+        assert_eq!(loaded.act_mean(&feat), store.snapshot().policy.act_mean(&feat));
+    }
+}

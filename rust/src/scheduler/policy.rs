@@ -183,4 +183,65 @@ mod tests {
         assert_eq!(p.act_mean(&feat), q.act_mean(&feat));
         assert_eq!(p.value_of(&feat), q.value_of(&feat));
     }
+
+    /// Property: JSON save→load is bit-exact — `act_mean` (and the value
+    /// head) of the reloaded policy matches the original to the bit on
+    /// random feature vectors, for random policies. The online learner's
+    /// checkpoint/resume path and the frozen-serving golden traces both
+    /// depend on this (weights survive the f32→f64→text→f64→f32 trip
+    /// because the JSON writer emits shortest-round-trip floats).
+    #[test]
+    fn prop_save_load_act_mean_bit_identical() {
+        let dir = TempDir::new("sched_policy_prop");
+        crate::util::testing::check_property("policy_json_roundtrip", 10, |rng| {
+            let p = SchedulerPolicy::init(rng);
+            let path = dir.path().join(format!("policy_{}.json", rng.next_u64()));
+            p.save(&path).unwrap();
+            let q = SchedulerPolicy::load(&path).unwrap();
+            assert_eq!(p.log_std, q.log_std);
+            for _ in 0..8 {
+                let feat: Vec<f32> =
+                    (0..FEAT_DIM).map(|_| rng.uniform_range(-4.0, 4.0)).collect();
+                let (a, b) = (p.act_mean(&feat), q.act_mean(&feat));
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "act_mean must survive the JSON round-trip bit-for-bit"
+                );
+                assert_eq!(p.value_of(&feat).to_bits(), q.value_of(&feat).to_bits());
+            }
+        });
+    }
+
+    /// Property: `params_from_raw` clamps arbitrary (including wildly
+    /// out-of-distribution) raw actions into valid `SpecParams` bounds.
+    #[test]
+    fn prop_params_from_raw_always_in_bounds() {
+        let check = |raw: &[f32]| {
+            let p = SchedulerPolicy::params_from_raw(raw);
+            for k in [p.stages.k_early, p.stages.k_mid, p.stages.k_late] {
+                assert!((1..=K_MAX).contains(&k), "k {k} out of bounds for {raw:?}");
+            }
+            assert!(
+                p.lambda.is_finite() && (1e-4..=1.0).contains(&p.lambda),
+                "lambda {} for {raw:?}",
+                p.lambda
+            );
+            assert!(
+                p.sigma_scale.is_finite() && (0.5..=8.0).contains(&p.sigma_scale),
+                "sigma_scale {} for {raw:?}",
+                p.sigma_scale
+            );
+        };
+        crate::util::testing::check_property("params_clamp", 200, |rng| {
+            // Mix of in-distribution and extreme magnitudes.
+            let scale = [1.0f32, 10.0, 1e4, 1e30][rng.below(4)];
+            let raw: Vec<f32> = (0..ACT_N).map(|_| rng.uniform_range(-scale, scale)).collect();
+            check(&raw);
+        });
+        // Exact saturation corners.
+        check(&[f32::MAX; ACT_N]);
+        check(&[f32::MIN; ACT_N]);
+        check(&[1e30, -1e30, 0.0, 1e30, -1e30]);
+    }
 }

@@ -1,7 +1,8 @@
 //! Scheduler reward (paper Eq. 12–15): sparse final outcome + dense
 //! efficiency shaping.
 
-use crate::config::Task;
+use crate::config::{Task, DIFFUSION_STEPS, EXEC_STEPS};
+use crate::harness::episode::SegmentOutcome;
 
 /// Final-reward magnitude R_final (Eq. 12–13).
 pub const R_FINAL: f64 = 10.0;
@@ -54,6 +55,26 @@ pub fn process_reward(
     (a + b) * scale
 }
 
+/// The full per-decision reward for one served segment: Eq. 14 process
+/// reward from the segment's draft/accept tallies, plus the Eq. 12–13
+/// final reward when the episode ended with it. Returns `(reward,
+/// done)`. The single reward-assembly path shared by offline PPO
+/// training ([`crate::scheduler::train`]) and the online serving
+/// learner ([`crate::scheduler::online`]) — the two must never drift.
+pub fn segment_reward(outcome: &SegmentOutcome<'_>) -> (f64, bool) {
+    let scale = process_scale(outcome.t_max, EXEC_STEPS);
+    let mut r = process_reward(
+        outcome.meta.accepted,
+        outcome.meta.drafts,
+        DIFFUSION_STEPS,
+        scale,
+    );
+    if outcome.done {
+        r += final_reward(outcome.task, outcome.success, outcome.score);
+    }
+    (r, outcome.done)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +121,34 @@ mod tests {
     #[test]
     fn zero_drafts_zero_reward() {
         assert_eq!(process_reward(0, 0, 100, 1.0), 0.0);
+    }
+
+    #[test]
+    fn segment_reward_matches_its_parts() {
+        use crate::config::SpecParams;
+        use crate::harness::episode::SegmentMeta;
+        let meta = SegmentMeta {
+            env_step: 8,
+            phase: 0,
+            ee_speed: 0.0,
+            drafts: 100,
+            accepted: 80,
+            nfe: 20.0,
+            wall_secs: 0.0,
+            params: SpecParams::fixed_default(),
+        };
+        let mid = SegmentOutcome {
+            meta: &meta,
+            done: false,
+            success: false,
+            score: 0.0,
+            task: Task::Lift,
+            t_max: 200,
+        };
+        let scale = process_scale(200, EXEC_STEPS);
+        let expect = process_reward(80, 100, DIFFUSION_STEPS, scale);
+        assert_eq!(segment_reward(&mid), (expect, false));
+        let last = SegmentOutcome { done: true, success: true, ..mid };
+        assert_eq!(segment_reward(&last), (expect + R_FINAL, true));
     }
 }

@@ -6,7 +6,7 @@
 //! the last decision of the episode.
 
 use crate::baselines::TsDp;
-use crate::config::{DemoStyle, SpecParams, Task, DIFFUSION_STEPS, EXEC_STEPS};
+use crate::config::{DemoStyle, SpecParams, Task};
 use crate::envs::make_env;
 use crate::harness::episode::{run_episode, DecisionHook, SegmentOutcome};
 use crate::policy::Denoiser;
@@ -110,18 +110,20 @@ impl DecisionHook for CollectHook<'_> {
 
     fn post_segment(&mut self, outcome: &SegmentOutcome<'_>) {
         let t = self.pending.as_mut().expect("post_segment without decide");
-        let scale = reward::process_scale(outcome.t_max, EXEC_STEPS);
-        t.reward = reward::process_reward(
-            outcome.meta.accepted,
-            outcome.meta.drafts,
-            DIFFUSION_STEPS,
-            scale,
-        );
-        if outcome.done {
-            t.reward += reward::final_reward(outcome.task, outcome.success, outcome.score);
-            t.done = true;
-        }
+        // Same Eq. 12–15 assembly the online serving learner uses.
+        let (r, done) = reward::segment_reward(outcome);
+        t.reward = r;
+        t.done = done;
         self.episode_return += t.reward;
+    }
+
+    fn finish_episode(&mut self) {
+        self.flush();
+        // Close the episode even if the env hit its step limit
+        // mid-segment and never reported done.
+        if let Some(last) = self.transitions.last_mut() {
+            last.done = true;
+        }
     }
 }
 
@@ -157,12 +159,7 @@ pub fn train(
                 ep_seed,
                 Some(&mut hook),
             )?;
-            hook.flush();
-            // Safety: mark the episode's last transition done even if the
-            // env hit its step limit mid-segment.
-            if let Some(last) = hook.transitions.last_mut() {
-                last.done = true;
-            }
+            // run_episode already called finish_episode (flush + close).
             returns += hook.episode_return;
             successes += result.success as usize;
             nfe_sum += result.nfe;
@@ -188,6 +185,7 @@ pub fn train(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{DIFFUSION_STEPS, EXEC_STEPS};
     use crate::policy::mock::MockDenoiser;
 
     /// Short PPO run against the mock: must complete, produce finite

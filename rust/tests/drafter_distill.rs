@@ -137,6 +137,7 @@ fn run_distilled_fleet(model: DrafterModel, shards: usize, max_batch: usize) -> 
         seed: 4321,
         max_batch,
         batch_window: Duration::from_micros(200),
+        ..ServeOptions::default()
     };
     serve_with(
         move |_shard| {

@@ -1,0 +1,194 @@
+//! Golden-trace regression: session fingerprints (per-segment action
+//! digests + NFE) of a small deterministic mock serve run, pinned
+//! against a committed snapshot so future coordinator refactors cannot
+//! silently change served actions.
+//!
+//! Two runs are pinned:
+//! * `fixed`            — a heterogeneous mix with fixed SpecParams;
+//! * `frozen_adaptive`  — the same mix with a seeded `SchedulerPolicy`
+//!   deciding per segment in `--adapt frozen` mode (the determinism
+//!   contract online adaptation must not break).
+//!
+//! Snapshot lifecycle: the file is **bootstrapped on first run** (and
+//! the test then only asserts in-process reproducibility); once
+//! committed, every later run must match it bit-for-bit. After an
+//! *intentional* serving-semantics change, re-bless with
+//! `TSDP_BLESS_GOLDEN=1 cargo test --test golden_trace` and commit the
+//! diff — the point is that such diffs are loud and reviewed, never
+//! silent.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use ts_dp::config::{AdaptMode, DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::server::{serve_with, ServeOptions};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::scheduler::SchedulerPolicy;
+use ts_dp::util::Rng;
+
+/// (session id, per-segment digests, total NFE) fingerprints.
+type Fingerprints = Vec<(usize, Vec<u64>, f64)>;
+
+const GOLDEN_SEED: u64 = 24601;
+const POLICY_SEED: u64 = 0x901d_7ace;
+
+fn golden_workload() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+        .session(SessionSpec::new(Task::PushT, Method::TsDp).with_style(DemoStyle::Mh))
+        .session(SessionSpec::new(Task::PushT, Method::Vanilla))
+        .session(SessionSpec::new(Task::Kitchen, Method::TsDp))
+        .build()
+}
+
+fn run_golden(adaptive: bool) -> Fingerprints {
+    let scheduler = adaptive.then(|| {
+        let mut rng = Rng::seed_from_u64(POLICY_SEED);
+        SchedulerPolicy::init(&mut rng)
+    });
+    let opts = ServeOptions {
+        workload: golden_workload(),
+        shards: 1,
+        queue_capacity: 64,
+        policy: Policy::Fifo,
+        scheduler,
+        seed: GOLDEN_SEED,
+        max_batch: 1,
+        batch_window: std::time::Duration::from_micros(200),
+        adapt: AdaptMode::Frozen,
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts)
+        .expect("golden serve run failed")
+        .session_fingerprints()
+}
+
+/// Serialize fingerprints losslessly: NFE as f64 bit patterns, digests
+/// as hex (text floats would invite rounding drift in the snapshot).
+fn render(runs: &[(&str, &Fingerprints)]) -> String {
+    let mut out = String::from(
+        "# golden serve trace v1 — session fingerprints of the deterministic\n\
+         # mock serve runs in tests/golden_trace.rs. Re-bless after an\n\
+         # intentional change: TSDP_BLESS_GOLDEN=1 cargo test --test golden_trace\n",
+    );
+    for (name, fps) in runs {
+        for (session, digests, nfe) in fps.iter() {
+            let hex: Vec<String> = digests.iter().map(|d| format!("{d:016x}")).collect();
+            writeln!(
+                out,
+                "run={name} session={session} nfe_bits={:016x} digests={}",
+                nfe.to_bits(),
+                hex.join(",")
+            )
+            .expect("string write");
+        }
+    }
+    out
+}
+
+fn parse(text: &str) -> Vec<(String, Fingerprints)> {
+    let mut runs: Vec<(String, Fingerprints)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut name = None;
+        let mut session = None;
+        let mut nfe = None;
+        let mut digests = Vec::new();
+        for field in line.split_whitespace() {
+            let (key, value) = field
+                .split_once('=')
+                .unwrap_or_else(|| panic!("malformed golden line {}: {line}", lineno + 1));
+            match key {
+                "run" => name = Some(value.to_string()),
+                "session" => session = Some(value.parse::<usize>().expect("session id")),
+                "nfe_bits" => {
+                    nfe = Some(f64::from_bits(
+                        u64::from_str_radix(value, 16).expect("nfe bits"),
+                    ))
+                }
+                "digests" => {
+                    digests = value
+                        .split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| u64::from_str_radix(s, 16).expect("digest"))
+                        .collect()
+                }
+                other => panic!("unknown golden field '{other}' on line {}", lineno + 1),
+            }
+        }
+        let name = name.expect("run name");
+        let entry = (session.expect("session"), digests, nfe.expect("nfe"));
+        match runs.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, fps)) => fps.push(entry),
+            None => runs.push((name, vec![entry])),
+        }
+    }
+    runs
+}
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/serve_trace.txt")
+}
+
+#[test]
+fn golden_trace_pins_served_actions() {
+    let fixed = run_golden(false);
+    let adaptive = run_golden(true);
+    assert_eq!(fixed.len(), 5);
+    assert_eq!(adaptive.len(), 5);
+    for (_, digests, nfe) in fixed.iter().chain(adaptive.iter()) {
+        assert!(!digests.is_empty(), "every session must serve segments");
+        assert!(*nfe > 0.0);
+    }
+    // In-process reproducibility backs the snapshot: identical reruns
+    // must fingerprint identically even while bootstrapping.
+    assert_eq!(run_golden(false), fixed, "fixed-params serving must be deterministic");
+    assert_eq!(run_golden(true), adaptive, "frozen-adaptive serving must be deterministic");
+    // And the two runs must genuinely differ (the adaptive leg is not
+    // vacuously pinning the fixed one).
+    assert_ne!(fixed, adaptive, "scheduler decisions must reach the engine");
+
+    let rendered = render(&[("fixed", &fixed), ("frozen_adaptive", &adaptive)]);
+    // The rendered form itself round-trips (guards the parser).
+    let reparsed = parse(&rendered);
+    assert_eq!(reparsed.len(), 2);
+    assert_eq!(reparsed[0].1, fixed);
+    assert_eq!(reparsed[1].1, adaptive);
+
+    let path = snapshot_path();
+    let bless = std::env::var_os("TSDP_BLESS_GOLDEN").is_some();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir tests/golden");
+        std::fs::write(&path, rendered).expect("write golden snapshot");
+        println!(
+            "golden snapshot {} at {} — commit it to pin future runs",
+            if bless { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+
+    let committed = std::fs::read_to_string(&path).expect("read golden snapshot");
+    let golden = parse(&committed);
+    let got = [("fixed".to_string(), fixed), ("frozen_adaptive".to_string(), adaptive)];
+    assert_eq!(
+        golden.len(),
+        got.len(),
+        "snapshot run count drifted — re-bless if intentional"
+    );
+    for ((gname, gfps), (name, fps)) in golden.iter().zip(got.iter()) {
+        assert_eq!(gname, name, "snapshot run order drifted");
+        assert_eq!(
+            gfps, fps,
+            "served actions for run '{name}' no longer match {}.\n\
+             If this change is INTENTIONAL, re-bless with\n\
+             TSDP_BLESS_GOLDEN=1 cargo test --test golden_trace\n\
+             and commit the snapshot diff.",
+            path.display()
+        );
+    }
+}

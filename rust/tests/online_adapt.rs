@@ -1,0 +1,162 @@
+//! Seeded integration test for online scheduler adaptation: serving with
+//! `--adapt online` must *improve* the scheduler against a
+//! phase-dependent drafter, while `--adapt frozen` keeps today's
+//! bit-identical fingerprints across shard counts.
+//!
+//! Setup: the mock drafter disagrees strongly with the target in the
+//! early high-noise phase (t ≥ 80) and barely at all later — so a
+//! policy that drafts long early horizons wastes NFE on rejected drafts.
+//! The starting policy is deliberately biased toward exactly that
+//! (large k everywhere, strict λ). Frozen serving replays the bad
+//! policy forever; online serving must learn its way out: after a few
+//! adaptation rounds the *frozen* evaluation of the adapted policy
+//! (deterministic, `act_mean`) beats the frozen evaluation of the
+//! starting policy on accept-rate without spending more NFE per
+//! segment.
+
+use ts_dp::config::{AdaptMode, Method, Task};
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::harness::scenarios::{misadapted_scheduler, phase_biased_mock};
+use ts_dp::scheduler::ppo::PpoConfig;
+use ts_dp::scheduler::{LearnerConfig, SchedulerPolicy};
+
+/// Mixed evaluation workload (two tasks sharing the fleet).
+fn eval_mix() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+        .sessions(SessionSpec::new(Task::PushT, Method::TsDp), 2)
+        .build()
+}
+
+/// Bigger mixed workload for the adaptation rounds (more experience).
+fn train_mix() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp).with_episodes(2), 6)
+        .sessions(SessionSpec::new(Task::PushT, Method::TsDp).with_episodes(2), 2)
+        .build()
+}
+
+/// Deterministic frozen-mode evaluation of a policy.
+fn eval_frozen(policy: &SchedulerPolicy, shards: usize) -> ServeReport {
+    let opts = ServeOptions {
+        workload: eval_mix(),
+        shards,
+        scheduler: Some(policy.clone()),
+        seed: 777,
+        adapt: AdaptMode::Frozen,
+        ..ServeOptions::default()
+    };
+    serve_with(|_| phase_biased_mock(), &opts).unwrap()
+}
+
+fn accept_rate(r: &ServeReport) -> f64 {
+    r.metrics.acceptance_rate()
+}
+
+fn nfe_per_segment(r: &ServeReport) -> f64 {
+    r.metrics.total_nfe / r.metrics.requests.max(1) as f64
+}
+
+/// One online-adaptation round: serve the training mix with the learner
+/// on and return the adapted policy plus the learner trajectory length.
+fn adapt_round(policy: SchedulerPolicy, round: u64) -> (SchedulerPolicy, usize) {
+    let opts = ServeOptions {
+        workload: train_mix(),
+        shards: 2,
+        scheduler: Some(policy),
+        seed: 0x0115_0000 + round,
+        adapt: AdaptMode::Online,
+        learner: LearnerConfig {
+            min_batch: 96,
+            // Stronger-than-default updates so the test converges in a
+            // handful of rounds of mock traffic.
+            ppo: PpoConfig { pi_lr: 3e-3, v_lr: 3e-3, epochs: 6, ..Default::default() },
+            seed: round,
+            ..Default::default()
+        },
+        ..ServeOptions::default()
+    };
+    let report = serve_with(|_| phase_biased_mock(), &opts).unwrap();
+    let learner = report.learner.expect("online run must report its learner");
+    assert!(learner.transitions_seen > 0, "sessions must feed the learner");
+    assert!(
+        !learner.epochs.is_empty(),
+        "the training mix must clear the epoch threshold (saw {} transitions)",
+        learner.transitions_seen
+    );
+    // Policy-version labels climb as epochs publish mid-run (>= holds
+    // even if every epoch landed after the last admission).
+    assert!(report.metrics.policy_epoch_max <= learner.final_epoch());
+    (learner.adapted.expect("adapted policy"), learner.epochs.len())
+}
+
+#[test]
+fn frozen_adapt_mode_stays_bit_identical_across_shards() {
+    // Acceptance criterion (determinism half): --adapt frozen keeps
+    // fingerprints bit-identical across shard counts, with the bad
+    // start policy in the loop.
+    let policy = misadapted_scheduler();
+    let baseline = eval_frozen(&policy, 1).session_fingerprints();
+    assert_eq!(baseline.len(), 4);
+    for shards in [2usize, 4] {
+        assert_eq!(
+            eval_frozen(&policy, shards).session_fingerprints(),
+            baseline,
+            "frozen adaptive serving must be placement-invariant ({shards} shards)"
+        );
+    }
+    // And a repeat run reproduces it exactly (no hidden global state).
+    assert_eq!(eval_frozen(&policy, 1).session_fingerprints(), baseline);
+}
+
+#[test]
+fn online_adaptation_beats_the_frozen_policy() {
+    let start = misadapted_scheduler();
+    let before = eval_frozen(&start, 1);
+    let (accept_before, nfe_before) = (accept_rate(&before), nfe_per_segment(&before));
+    assert!(
+        accept_before < 0.9,
+        "start policy must leave learnable headroom (accept {accept_before:.3})"
+    );
+
+    // Adapt over live online-serving rounds (each round resumes from
+    // the previous round's adapted snapshot, exactly like a long-lived
+    // fleet); stop as soon as the frozen evaluation clearly improves.
+    // Timing caveat: which snapshot a session samples mid-round depends
+    // on learner-thread scheduling, so the *trajectory* is not bit-
+    // reproducible — the round budget is therefore generous and the
+    // NFE bar carries a small slack; the loop exits at the first round
+    // that clears the improvement bar.
+    let mut policy = start;
+    let mut epochs_total = 0;
+    let mut result = None;
+    for round in 0..8u64 {
+        let (adapted, epochs) = adapt_round(policy, round);
+        epochs_total += epochs;
+        policy = adapted;
+        let after = eval_frozen(&policy, 1);
+        let (accept_after, nfe_after) = (accept_rate(&after), nfe_per_segment(&after));
+        if accept_after >= accept_before + 0.03 && nfe_after <= nfe_before * 1.02 {
+            result = Some((accept_after, nfe_after, round));
+            break;
+        }
+    }
+    let (accept_after, nfe_after, rounds) = result.unwrap_or_else(|| {
+        let after = eval_frozen(&policy, 1);
+        panic!(
+            "online adaptation failed to beat the frozen policy after 8 rounds \
+             ({epochs_total} epochs): accept {accept_before:.3} -> {:.3}, \
+             nfe/seg {nfe_before:.1} -> {:.1}",
+            accept_rate(&after),
+            nfe_per_segment(&after)
+        )
+    });
+    assert!(epochs_total > 0);
+    println!(
+        "online adaptation: accept {accept_before:.3} -> {accept_after:.3}, \
+         nfe/seg {nfe_before:.1} -> {nfe_after:.1} after {} round(s), {} epoch(s)",
+        rounds + 1,
+        epochs_total
+    );
+}

@@ -8,11 +8,13 @@
 //! Runs entirely against the analytic `MockDenoiser` (no artifacts).
 
 use std::time::Duration;
-use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::config::{AdaptMode, DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
 use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
 use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::scheduler::SchedulerPolicy;
+use ts_dp::util::Rng;
 
 /// Serve `workload` on a fleet of `shards` shard workers, each building
 /// its own mock replica.
@@ -32,6 +34,7 @@ fn run_fleet(
         seed: 1234,
         max_batch,
         batch_window: Duration::from_micros(window_us),
+        ..ServeOptions::default()
     };
     serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
 }
@@ -101,6 +104,71 @@ fn heterogeneous_mix_is_lossless_across_shards() {
                 200,
             ));
             assert_eq!(fp, baseline, "shards {shards}, max_batch {max_batch}");
+        }
+    }
+}
+
+/// Serve an *adaptive frozen-policy* workload: every TS-DP session's
+/// SpecParams come from deterministic `act_mean` inference on a shared
+/// `SchedulerPolicy` snapshot.
+fn run_adaptive_fleet(
+    workload: Vec<SessionSpec>,
+    shards: usize,
+    max_batch: usize,
+    policy: Policy,
+) -> ServeReport {
+    let mut rng = Rng::seed_from_u64(0x5c4e_d01e);
+    let opts = ServeOptions {
+        workload,
+        shards,
+        queue_capacity: 64,
+        policy,
+        scheduler: Some(SchedulerPolicy::init(&mut rng)),
+        seed: 1234,
+        max_batch,
+        batch_window: Duration::from_micros(200),
+        adapt: AdaptMode::Frozen,
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
+}
+
+#[test]
+fn adaptive_frozen_sessions_are_lossless_across_shards() {
+    // Satellite: the shard-invariance contract must hold with a
+    // SchedulerPolicy in the decision loop, not just fixed parameters.
+    // Frozen decisions happen session-side from session-local features,
+    // so placement/batching must not leak into them: bit-identical
+    // segments and NFE across shards {1, 2, 4} × max_batch {1, 8}.
+    let mixed = || {
+        WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+            .sessions(SessionSpec::new(Task::PushT, Method::TsDp), 2)
+            .session(SessionSpec::new(Task::Kitchen, Method::TsDp).with_style(DemoStyle::Mh))
+            .build()
+    };
+    let baseline = fingerprint(&run_adaptive_fleet(mixed(), 1, 1, Policy::Fifo));
+    assert_eq!(baseline.len(), 5);
+    for (_, digests, nfe) in &baseline {
+        assert!(!digests.is_empty() && *nfe > 0.0);
+    }
+    // The frozen policy must actually differ from the fixed-parameter
+    // path (otherwise this test would not cover the scheduler at all).
+    let fixed = fingerprint(&run_fleet(mixed(), 1, 1, Policy::Fifo, 200));
+    assert_ne!(
+        baseline, fixed,
+        "a fresh policy's decisions should diverge from fixed params"
+    );
+    for shards in [1usize, 2, 4] {
+        for max_batch in [1usize, 8] {
+            for policy in [Policy::Fifo, Policy::Fair] {
+                let fp = fingerprint(&run_adaptive_fleet(mixed(), shards, max_batch, policy));
+                assert_eq!(
+                    fp, baseline,
+                    "adaptive frozen serving must be bit-identical \
+                     (policy {policy:?}, shards {shards}, max_batch {max_batch})"
+                );
+            }
         }
     }
 }
