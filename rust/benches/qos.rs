@@ -1,0 +1,97 @@
+//! QoS overload bench: the open-loop saturation sweep, FIFO baseline vs
+//! QoS (priority + deadline-aware shedding + degradation headroom),
+//! on the canned three-class scenario shared with `tests/qos_serving.rs`
+//! (the test *asserts* the ordering; this reports the curves).
+//!
+//! Emits `BENCH_qos.json` at the repo root (schema documented in
+//! `ts_dp::util::benchjson`) — one record per (mode, load multiple,
+//! class): latency percentiles of the class, its deadline-constrained
+//! goodput, NFE, and the sweep-wide draft accept rate. CI's perf-smoke
+//! job runs this with `TSDP_BENCH_FAST=1`, archives the JSON, and
+//! fails on coarse p95 regression against the committed baseline.
+
+use ts_dp::coordinator::workload::{
+    estimate_service_secs, record_mixed_pools, saturation_sweep, SessionSpec,
+};
+use ts_dp::harness::scenarios::overload_stream;
+use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::util::benchjson::{BenchRecord, BenchSink};
+
+fn main() {
+    let fast = std::env::var_os("TSDP_BENCH_FAST").is_some();
+    let n_requests = if fast { 36 } else { 90 };
+    let multiples: &[f64] = if fast { &[1.0, 2.0] } else { &[0.5, 1.0, 2.0, 4.0] };
+
+    let den = MockDenoiser::with_bias(0.05);
+    // Calibrate deadlines to this machine: 4x the unloaded service time
+    // for realtime, 16x for interactive (same recipe as the test suite,
+    // so the bench numbers measure scheduling, not host speed).
+    let probe = overload_stream(1_000, 4_000);
+    let pools = record_mixed_pools(&probe, 16, 11);
+    let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+        pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+    let service =
+        estimate_service_secs(&den, &probe, &pool_refs, 9, 12).expect("calibration");
+    let rt_ms = ((service * 4.0 * 1000.0).ceil() as u64).max(1);
+    let stream = overload_stream(rt_ms, rt_ms * 4);
+
+    println!(
+        "== QoS saturation sweep (mock backend; service≈{:.2}ms, rt deadline {}ms) ==",
+        service * 1000.0,
+        rt_ms
+    );
+    // The same calibration anchors both the deadlines above and the
+    // sweep's capacity multiples — one measurement, one anchor.
+    let mut sink = BenchSink::new("qos");
+    let sweep =
+        saturation_sweep(&den, &stream, &pool_refs, multiples, n_requests, 21, service)
+            .expect("saturation sweep");
+    for point in &sweep {
+        println!("-- offered {:.1}x capacity ({:.1} r/s) --", point.multiple, point.rate);
+        for p in [&point.fifo, &point.qos] {
+            let mode = if p.qos_enabled { "qos" } else { "fifo" };
+            println!(
+                "  {mode:<4} in-deadline-goodput={:>7.2}/s sheds={:<3} accept={:>5.1}%",
+                p.in_deadline_goodput(),
+                p.shed_total(),
+                p.accept_rate * 100.0
+            );
+            for s in &p.per_class {
+                println!(
+                    "    {:<12} offered={:<3} served={:<3} shed={:<3} hit={:>5.1}% \
+                     p95={:.4}s nfe={:.1}",
+                    s.class.name(),
+                    s.offered,
+                    s.served,
+                    s.shed,
+                    s.hit_rate() * 100.0,
+                    s.p95,
+                    s.nfe
+                );
+                sink.push(BenchRecord {
+                    name: format!(
+                        "saturate[mode={mode},mult={},class={}]",
+                        point.multiple,
+                        s.class.name()
+                    ),
+                    params: vec![
+                        ("mode".into(), mode.into()),
+                        ("mult".into(), format!("{}", point.multiple)),
+                        ("class".into(), s.class.name().into()),
+                        ("rate_rps".into(), format!("{:.2}", point.rate)),
+                        ("hit_rate".into(), format!("{:.4}", s.hit_rate())),
+                        ("shed".into(), format!("{}", s.shed)),
+                    ],
+                    p50_s: s.p50,
+                    p95_s: s.p95,
+                    p99_s: s.p99,
+                    nfe: s.nfe,
+                    accept_rate: p.accept_rate,
+                    goodput_rps: s.deadline_hits as f64 / p.makespan_secs,
+                });
+            }
+        }
+    }
+    let path = sink.write().expect("writing BENCH_qos.json");
+    println!("\nwrote {} ({} records)", path.display(), sink.len());
+}

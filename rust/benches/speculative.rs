@@ -17,6 +17,7 @@ use ts_dp::policy::mock::MockDenoiser;
 use ts_dp::runtime::ModelRuntime;
 use ts_dp::speculative::engine::SEG;
 use ts_dp::speculative::SegmentTrace;
+use ts_dp::util::benchjson::{BenchRecord, BenchSink};
 use ts_dp::util::benchtool::bench;
 use ts_dp::util::Rng;
 
@@ -73,7 +74,7 @@ fn bench_accept_scan_scratch() {
 /// micro-batch widens — cross-request verify fusion should raise
 /// occupancy well past 1 without changing served bits (the batching
 /// integration tests assert the bit-equality; this reports the rates).
-fn bench_batched_serving() {
+fn bench_batched_serving(sink: &mut BenchSink) {
     println!("== micro-batched serving (mock denoiser, 4 sessions, 1 shard) ==");
     for max_batch in [1usize, 4, 16] {
         let opts = ServeOptions {
@@ -97,6 +98,20 @@ fn bench_batched_serving() {
             report.metrics.latency_percentile(0.95),
             secs,
         );
+        sink.push(BenchRecord {
+            name: format!("serve_batched[max_batch={max_batch}]"),
+            params: vec![
+                ("max_batch".into(), format!("{max_batch}")),
+                ("sessions".into(), "4".into()),
+                ("shards".into(), "1".into()),
+            ],
+            p50_s: report.metrics.latency_percentile(0.50),
+            p95_s: report.metrics.latency_percentile(0.95),
+            p99_s: report.metrics.latency_percentile(0.99),
+            nfe: report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+            accept_rate: report.metrics.acceptance_rate(),
+            goodput_rps: report.metrics.requests as f64 / secs.max(1e-9),
+        });
     }
     println!();
 }
@@ -105,7 +120,7 @@ fn bench_batched_serving() {
 /// over 1 / 2 / 4 shards — each shard owns its own mock replica; the
 /// sharding tests assert bit-equality, this reports rate, per-shard
 /// occupancy, and imbalance.
-fn bench_sharded_serving() {
+fn bench_sharded_serving(sink: &mut BenchSink) {
     use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
     println!("== sharded mixed-task serving (mock denoiser, 12 sessions) ==");
     let workload = || {
@@ -145,6 +160,20 @@ fn bench_sharded_serving() {
             report.metrics.latency_percentile(0.95),
             secs,
         );
+        sink.push(BenchRecord {
+            name: format!("serve_sharded[shards={shards}]"),
+            params: vec![
+                ("shards".into(), format!("{shards}")),
+                ("sessions".into(), "12".into()),
+                ("max_batch".into(), "8".into()),
+            ],
+            p50_s: report.metrics.latency_percentile(0.50),
+            p95_s: report.metrics.latency_percentile(0.95),
+            p99_s: report.metrics.latency_percentile(0.99),
+            nfe: report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+            accept_rate: report.metrics.acceptance_rate(),
+            goodput_rps: report.metrics.requests as f64 / secs.max(1e-9),
+        });
     }
     println!();
 }
@@ -264,11 +293,26 @@ fn bench_online_adaptation() {
 }
 
 fn main() {
+    // TSDP_BENCH_FAST=1 (CI perf-smoke) runs only the quick,
+    // record-emitting sections; the slow distillation/adaptation probes
+    // are full-run only. The machine-readable record set is identical
+    // in both modes, so the committed regression baseline applies to
+    // either.
+    let fast = std::env::var_os("TSDP_BENCH_FAST").is_some();
+    let mut sink = BenchSink::new("speculative");
     bench_accept_scan_scratch();
-    bench_batched_serving();
-    bench_sharded_serving();
-    bench_online_adaptation();
-    bench_drafter_accept_rates();
+    bench_batched_serving(&mut sink);
+    bench_sharded_serving(&mut sink);
+    if !fast {
+        bench_online_adaptation();
+        bench_drafter_accept_rates();
+    }
+    // Write the machine-readable trajectory BEFORE the artifact-gated
+    // model sections (which early-return on mock-only checkouts).
+    match sink.write() {
+        Ok(path) => println!("wrote {} ({} records)", path.display(), sink.len()),
+        Err(e) => eprintln!("bench JSON emission failed: {e:#}"),
+    }
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

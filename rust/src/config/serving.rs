@@ -46,6 +46,16 @@ pub struct ServingConfig {
     /// Where the online learner writes adapted-policy checkpoints
     /// (None = keep the adapted policy in memory only).
     pub adapted_policy_out: Option<PathBuf>,
+    /// Deadline-aware QoS: admission control, typed load shedding, and
+    /// pressure-gated degradation (false = the pre-QoS fleet,
+    /// bit-identical serving).
+    pub qos_enabled: bool,
+    /// Pressure (estimated seconds of shard backlog) beyond which
+    /// admitted TS-DP requests degrade toward drafter-heavy operation.
+    pub qos_degrade_pressure: f64,
+    /// Starvation-freedom bound of the `priority` dispatch policy: a
+    /// bypassed non-empty class is served after this many pops.
+    pub qos_aging_limit: u64,
 }
 
 /// How the serving fleet treats the scheduler policy over time.
@@ -150,6 +160,9 @@ impl Default for ServingConfig {
             learner_buffer: 64,
             learner_checkpoint_every: 0,
             adapted_policy_out: None,
+            qos_enabled: false,
+            qos_degrade_pressure: 0.05,
+            qos_aging_limit: 8,
         }
     }
 }
@@ -185,6 +198,9 @@ impl ServingConfig {
                     None => Json::Null,
                 },
             ),
+            ("qos_enabled", Json::Bool(self.qos_enabled)),
+            ("qos_degrade_pressure", Json::Num(self.qos_degrade_pressure)),
+            ("qos_aging_limit", Json::Num(self.qos_aging_limit as f64)),
         ])
     }
 
@@ -251,6 +267,24 @@ impl ServingConfig {
                 .get_opt("adapted_policy_out")
                 .map(|p| Ok::<_, JsonError>(PathBuf::from(p.as_str()?)))
                 .transpose()?,
+            // QoS knobs postdate the online-adaptation config files;
+            // absent keys fall back to the disabled defaults.
+            qos_enabled: v
+                .get_opt("qos_enabled")
+                .map(|j| j.as_bool())
+                .transpose()?
+                .unwrap_or(defaults.qos_enabled),
+            qos_degrade_pressure: v
+                .get_opt("qos_degrade_pressure")
+                .map(|j| j.as_f64())
+                .transpose()?
+                .unwrap_or(defaults.qos_degrade_pressure),
+            qos_aging_limit: v
+                .get_opt("qos_aging_limit")
+                .map(|j| j.as_usize())
+                .transpose()?
+                .map(|n| n as u64)
+                .unwrap_or(defaults.qos_aging_limit),
         })
     }
 
@@ -348,6 +382,30 @@ mod tests {
         };
         let d = ServingConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn qos_knobs_roundtrip_and_default_off_for_legacy_files() {
+        let c = ServingConfig {
+            qos_enabled: true,
+            qos_degrade_pressure: 0.2,
+            qos_aging_limit: 4,
+            ..Default::default()
+        };
+        let d = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        // Config files written before the QoS layer lack every qos_*
+        // key; loading them must yield a disabled-QoS fleet.
+        let legacy = match ServingConfig::default().to_json() {
+            Json::Obj(pairs) => Json::Obj(
+                pairs.into_iter().filter(|(k, _)| !k.starts_with("qos_")).collect(),
+            ),
+            _ => unreachable!("to_json returns an object"),
+        };
+        let e = ServingConfig::from_json(&legacy).unwrap();
+        assert!(!e.qos_enabled);
+        assert_eq!(e.qos_aging_limit, 8);
+        assert_eq!(e, ServingConfig::default());
     }
 
     #[test]

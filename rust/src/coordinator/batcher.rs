@@ -12,8 +12,12 @@
 //! mix of tasks and methods flows through one queue untyped — the
 //! engine picks the generation path per request at admission.
 
+use crate::coordinator::qos::{QosClass, QosConfig};
 use crate::coordinator::request::SegmentRequest;
 use std::collections::{HashMap, VecDeque};
+
+/// Number of QoS classes (one priority queue each).
+const N_CLASSES: usize = QosClass::ALL.len();
 
 /// Dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +26,11 @@ pub enum Policy {
     Fifo,
     /// Round-robin across sessions (starvation-free under load).
     Fair,
+    /// Serve higher [`QosClass`]es first (FIFO within a class), with a
+    /// starvation-freedom aging rule: a non-empty class bypassed for
+    /// `aging_limit` consecutive pops is served next, so sustained
+    /// realtime load delays batch work but can never park it forever.
+    Priority,
 }
 
 /// In-engine request buffer with a dispatch policy.
@@ -38,19 +47,36 @@ pub struct Batcher {
     /// Position in `order` of the last-served session; the round-robin
     /// scan starts just after it (None before the first pop).
     last_pos: Option<usize>,
+    /// Per-class queues (Priority policy), indexed by `QosClass::rank`.
+    classes: [VecDeque<SegmentRequest>; N_CLASSES],
+    /// Consecutive pops that served some *other* class while this one
+    /// had work queued (Priority policy aging counters).
+    bypassed: [u64; N_CLASSES],
+    /// Aging bound: a class whose `bypassed` counter reaches this is
+    /// served next (most-starved-of-the-lowest first).
+    aging_limit: u64,
     /// Buffered request count across all queues.
     len: usize,
 }
 
 impl Batcher {
-    /// Empty batcher.
+    /// Empty batcher with the default aging bound.
     pub fn new(policy: Policy) -> Self {
+        Self::with_aging_limit(policy, QosConfig::default().aging_limit)
+    }
+
+    /// Empty batcher with an explicit aging bound (Priority policy
+    /// only; the bound is clamped to ≥ 1 so aging can always fire).
+    pub fn with_aging_limit(policy: Policy, aging_limit: u64) -> Self {
         Self {
             policy,
             fifo: VecDeque::new(),
             queues: HashMap::new(),
             order: Vec::new(),
             last_pos: None,
+            classes: std::array::from_fn(|_| VecDeque::new()),
+            bypassed: [0; N_CLASSES],
+            aging_limit: aging_limit.max(1),
             len: 0,
         }
     }
@@ -77,6 +103,7 @@ impl Batcher {
                 }
                 self.queues.get_mut(&req.session).expect("queue exists").push_back(req);
             }
+            Policy::Priority => self.classes[req.spec.qos.rank()].push_back(req),
         }
     }
 
@@ -95,8 +122,14 @@ impl Batcher {
     /// * `Fair` — round-robin cursor over per-session queues; busy or
     ///   empty sessions are skipped in O(#sessions), independent of
     ///   backlog depth.
+    /// * `Priority` — highest QoS class first (FIFO within a class,
+    ///   skipping busy sessions), except that any class bypassed for
+    ///   `aging_limit` consecutive pops while holding work is served
+    ///   first — the starvation-freedom bound the QoS property test
+    ///   pins.
     pub fn pop_next(&mut self, is_busy: &dyn Fn(usize) -> bool) -> Option<SegmentRequest> {
         match self.policy {
+            Policy::Priority => self.pop_priority(is_busy),
             Policy::Fifo => {
                 let head = self.fifo.front()?;
                 if is_busy(head.session) {
@@ -131,6 +164,55 @@ impl Batcher {
                 None
             }
         }
+    }
+
+    /// First dispatchable (non-busy) request of class queue `rank`,
+    /// preserving the relative order of what stays queued.
+    fn take_from_class(
+        &mut self,
+        rank: usize,
+        is_busy: &dyn Fn(usize) -> bool,
+    ) -> Option<SegmentRequest> {
+        let pos = self.classes[rank].iter().position(|r| !is_busy(r.session))?;
+        let req = self.classes[rank].remove(pos).expect("position just found");
+        self.len -= 1;
+        Some(req)
+    }
+
+    /// Priority dispatch with the aging rule. After any successful pop
+    /// of class `r`, every *other* class still holding work ages by one;
+    /// a class whose counter reaches `aging_limit` is served before the
+    /// normal priority order (checking the lowest-priority classes
+    /// first, since those are the ones strict priority starves).
+    fn pop_priority(&mut self, is_busy: &dyn Fn(usize) -> bool) -> Option<SegmentRequest> {
+        let mut served: Option<(usize, SegmentRequest)> = None;
+        // Aged classes first, most-starved-by-construction (lowest
+        // priority) first.
+        for rank in (0..N_CLASSES).rev() {
+            if self.bypassed[rank] >= self.aging_limit {
+                if let Some(req) = self.take_from_class(rank, is_busy) {
+                    served = Some((rank, req));
+                    break;
+                }
+            }
+        }
+        // Normal strict-priority order.
+        if served.is_none() {
+            for rank in 0..N_CLASSES {
+                if let Some(req) = self.take_from_class(rank, is_busy) {
+                    served = Some((rank, req));
+                    break;
+                }
+            }
+        }
+        let (rank, req) = served?;
+        self.bypassed[rank] = 0;
+        for other in 0..N_CLASSES {
+            if other != rank && !self.classes[other].is_empty() {
+                self.bypassed[other] += 1;
+            }
+        }
+        Some(req)
     }
 }
 
@@ -228,6 +310,110 @@ mod tests {
         assert!(fifo.pop_next(&|s| s == 1).is_none());
         assert_eq!(fifo.pop_next(&|_| false).unwrap().session, 1);
         assert_eq!(fifo.pop().unwrap().session, 2);
+    }
+
+    fn req_class(session: usize, qos: QosClass) -> SegmentRequest {
+        let mut r = req(session);
+        r.spec.qos = qos;
+        r
+    }
+
+    #[test]
+    fn priority_serves_higher_classes_first() {
+        let mut b = Batcher::new(Policy::Priority);
+        b.push(req_class(1, QosClass::Batch));
+        b.push(req_class(2, QosClass::Interactive));
+        b.push(req_class(3, QosClass::Realtime));
+        b.push(req_class(4, QosClass::Realtime));
+        assert_eq!(b.pop().unwrap().session, 3, "realtime first, FIFO within class");
+        assert_eq!(b.pop().unwrap().session, 4);
+        assert_eq!(b.pop().unwrap().session, 2);
+        assert_eq!(b.pop().unwrap().session, 1);
+        assert!(b.pop().is_none());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn priority_skips_busy_sessions_within_a_class() {
+        let mut b = Batcher::new(Policy::Priority);
+        b.push(req_class(1, QosClass::Realtime));
+        b.push(req_class(2, QosClass::Realtime));
+        b.push(req_class(3, QosClass::Batch));
+        // Busy rt head: the next rt request overtakes it; the batch
+        // request still waits behind the class.
+        assert_eq!(b.pop_next(&|s| s == 1).unwrap().session, 2);
+        // Whole rt class busy: dispatch falls through to batch.
+        assert_eq!(b.pop_next(&|s| s == 1).unwrap().session, 3);
+        assert_eq!(b.pop().unwrap().session, 1);
+    }
+
+    #[test]
+    fn aging_bounds_batch_starvation_under_realtime_flood() {
+        let limit = 4u64;
+        let mut b = Batcher::with_aging_limit(Policy::Priority, limit);
+        b.push(req_class(100, QosClass::Batch));
+        // Sustained realtime load: keep the rt queue non-empty forever.
+        for s in 0..20 {
+            b.push(req_class(s, QosClass::Realtime));
+        }
+        let mut pops_until_batch = 0u64;
+        loop {
+            let r = b.pop().expect("queue never drains in this test");
+            pops_until_batch += 1;
+            if r.spec.qos == QosClass::Batch {
+                break;
+            }
+        }
+        // Exactly `limit` bypasses, then the aged batch head is served.
+        assert_eq!(pops_until_batch, limit + 1);
+    }
+
+    /// Property (QoS satellite): under sustained realtime load with
+    /// randomly interleaved batch arrivals, every batch request is
+    /// served within the aging bound — `(aging_limit + 1)` pops per
+    /// batch request ahead of it (plus its own aging window). Seeded and
+    /// deterministic.
+    #[test]
+    fn prop_priority_aging_never_starves_batch() {
+        crate::util::testing::check_property("priority_aging", 30, |rng| {
+            let limit = 1 + rng.below(8) as u64;
+            let mut b = Batcher::with_aging_limit(Policy::Priority, limit);
+            let mut next_session = 0usize;
+            let mut pops = 0u64;
+            // (enqueue pop-count, batch requests ahead in queue) per
+            // outstanding batch request, FIFO order.
+            let mut outstanding: VecDeque<(u64, u64)> = VecDeque::new();
+            let mut worst_wait = 0u64;
+            for _round in 0..200 {
+                // Sustained realtime pressure plus occasional batch work.
+                for _ in 0..(1 + rng.below(3)) {
+                    b.push(req_class(next_session, QosClass::Realtime));
+                    next_session += 1;
+                }
+                if rng.coin(0.3) {
+                    b.push(req_class(next_session, QosClass::Batch));
+                    next_session += 1;
+                    outstanding.push_back((pops, outstanding.len() as u64));
+                }
+                for _ in 0..(1 + rng.below(2)) {
+                    let Some(r) = b.pop() else { break };
+                    pops += 1;
+                    if r.spec.qos == QosClass::Batch {
+                        let (enqueued_at, ahead) =
+                            outstanding.pop_front().expect("batch pops in FIFO order");
+                        let waited = pops - enqueued_at;
+                        worst_wait = worst_wait.max(waited);
+                        let bound = (limit + 1) * (ahead + 2);
+                        assert!(
+                            waited <= bound,
+                            "batch request waited {waited} pops \
+                             (ahead={ahead}, limit={limit}, bound={bound})"
+                        );
+                    }
+                }
+            }
+            assert!(worst_wait > 0, "the flood must actually delay batch work");
+        });
     }
 
     #[test]

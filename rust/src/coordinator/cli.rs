@@ -83,7 +83,11 @@ pub fn with_drafter(base: Box<dyn Denoiser>, model: &Option<DrafterModel>) -> Bo
 /// Entry point for `ts-dp load-sweep`: open-loop latency-under-load
 /// characterization (results feed EXPERIMENTS.md §Perf). With `--mix`,
 /// replays a heterogeneous arrival stream and reports per-task latency
-/// percentiles alongside the fleet aggregate.
+/// percentiles alongside the fleet aggregate. With `--saturate`, the
+/// sweep estimates the server's capacity and drives the stream at
+/// `--multiples` of it, replaying each point both FIFO and with QoS
+/// (priority + deadline-aware shedding) side by side — the overload
+/// story behind `BENCH_qos.json`.
 pub fn cmd_load_sweep(args: &Args) -> Result<()> {
     use crate::coordinator::workload::{mixed_load_sweep, record_mixed_pools, SessionSpec};
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
@@ -135,6 +139,62 @@ pub fn cmd_load_sweep(args: &Args) -> Result<()> {
     let pools = record_mixed_pools(&stream, 32, seed);
     let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
         pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+
+    if args.has_flag("saturate") {
+        use crate::coordinator::workload::{estimate_service_secs, saturation_sweep};
+        anyhow::ensure!(
+            scheduler.is_none(),
+            "--saturate replays fixed parameters; drop --scheduler-policy"
+        );
+        let multiples: Vec<f64> = args
+            .get_or("multiples", "0.5,1,2,4")
+            .split(',')
+            .map(|m| m.trim().parse::<f64>().context("bad --multiples"))
+            .collect::<Result<_>>()?;
+        // One calibration anchors the whole sweep (capacity = 1/service).
+        let service =
+            estimate_service_secs(den.as_ref(), &stream, &pool_refs, 8, seed ^ 0xca11)?;
+        println!(
+            "saturation sweep: FIFO baseline vs QoS (priority + deadline shedding); \
+             service≈{:.2}ms, capacity≈{:.1} r/s",
+            service * 1000.0,
+            1.0 / service
+        );
+        for point in
+            saturation_sweep(den.as_ref(), &stream, &pool_refs, &multiples, n, seed, service)?
+        {
+            println!(
+                "-- offered {:.2}x capacity ({:.1} r/s) --",
+                point.multiple, point.rate
+            );
+            for p in [&point.fifo, &point.qos] {
+                let label = if p.qos_enabled { "qos " } else { "fifo" };
+                println!(
+                    "  {label} in-deadline-goodput={:>7.2}/s sheds={:<4} accept={:>5.1}%",
+                    p.in_deadline_goodput(),
+                    p.shed_total(),
+                    p.accept_rate * 100.0
+                );
+                for s in &p.per_class {
+                    println!(
+                        "    {:<12} offered={:<4} served={:<4} shed={:<4} hit={:>5.1}% \
+                         p50={:.4}s p95={:.4}s p99={:.4}s nfe={:.1}",
+                        s.class.name(),
+                        s.offered,
+                        s.served,
+                        s.shed,
+                        s.hit_rate() * 100.0,
+                        s.p50,
+                        s.p95,
+                        s.p99,
+                        s.nfe
+                    );
+                }
+            }
+        }
+        return Ok(());
+    }
+
     println!(
         "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8}",
         "offered r/s", "goodput r/s", "p50 (s)", "p95 (s)", "p99 (s)", "nfe"
@@ -179,7 +239,33 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let policy = match args.get_or("policy", "fair").as_str() {
         "fifo" => Policy::Fifo,
         "fair" => Policy::Fair,
-        other => anyhow::bail!("--policy must be fifo|fair, got '{other}'"),
+        "priority" => Policy::Priority,
+        other => anyhow::bail!("--policy must be fifo|fair|priority, got '{other}'"),
+    };
+    // QoS/overload control: `--qos` switches on deadline-aware
+    // admission + shedding + degradation; knobs that would otherwise be
+    // silent no-ops are rejected (a no-op flag hides a misconfigured
+    // fleet). `--aging-limit` additionally governs plain `--policy
+    // priority` dispatch, which is valid without --qos.
+    let qos_enabled = args.has_flag("qos");
+    if !qos_enabled {
+        anyhow::ensure!(
+            args.get("degrade-pressure").is_none(),
+            "--degrade-pressure only takes effect with --qos"
+        );
+        anyhow::ensure!(
+            policy == Policy::Priority || args.get("aging-limit").is_none(),
+            "--aging-limit only takes effect with --qos or --policy priority"
+        );
+    }
+    let qos = crate::coordinator::qos::QosConfig {
+        enabled: qos_enabled,
+        degrade_pressure: args.get_f32(
+            "degrade-pressure",
+            crate::coordinator::qos::QosConfig::default().degrade_pressure as f32,
+        )? as f64,
+        aging_limit: args
+            .get_u64("aging-limit", crate::coordinator::qos::QosConfig::default().aging_limit)?,
     };
     // Scheduler adaptation: `--adapt frozen|online` (passing --adapt
     // implies adaptive serving; bare `--adaptive` keeps the legacy
@@ -267,17 +353,19 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         batch_window: std::time::Duration::from_micros(batch_window_us),
         adapt,
         learner,
+        qos,
     };
     // serve() clamps the shard count to the session count; print the
     // effective fleet shape, not the raw flag.
     println!(
         "serving {} sessions over {} shard(s), max_batch={}, drafter={}, \
-         scheduler={} (each shard compiles its own replica)",
+         scheduler={}, qos={} (each shard compiles its own replica)",
         opts.workload.len(),
         opts.effective_shards(),
         max_batch,
         drafter_kind.name(),
         if opts.scheduler.is_some() { adapt.name() } else { "fixed" },
+        if qos_enabled { "on" } else { "off" },
     );
     // Each shard worker builds and owns its own replica on its own
     // thread (PJRT handles are not Send); the drafter checkpoint is
@@ -316,7 +404,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     for s in &report.sessions {
         println!(
             "session {} [shard {}]: task={} method={} episodes={} success={}/{} \
-             score={:.2} segments={} latency={:.4}s nfe={:.0}",
+             score={:.2} segments={} latency={:.4}s nfe={:.0}{}",
             s.session,
             s.shard,
             s.task.name(),
@@ -327,7 +415,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             s.mean_score,
             s.segments,
             s.mean_latency,
-            s.nfe
+            s.nfe,
+            if s.sheds > 0 { format!(" sheds={}", s.sheds) } else { String::new() }
         );
     }
     println!("overall success rate: {:.1}%", report.success_rate() * 100.0);

@@ -13,12 +13,85 @@
 //! samples, so the metrics layer's memory is bounded no matter how many
 //! requests the fleet serves.
 
+use crate::coordinator::qos::{QosClass, ShedReason};
 use crate::util::stats::{OnlineStats, Reservoir};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Retained latency / queue-delay observations per reservoir.
 const RESERVOIR_CAP: usize = 4096;
+
+/// Per-QoS-class accounting (populated only on QoS-enabled runs; the
+/// legacy summary shape is untouched otherwise). The conservation law
+/// `offered == served + shed` holds per class at the end of a run —
+/// every offered request is either served (possibly degraded) or
+/// rejected with a typed [`ShedReason`], never silently dropped.
+#[derive(Debug, Clone)]
+pub struct QosClassMetrics {
+    /// Requests offered (arrived at a shard) in this class.
+    pub offered: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Requests shed by admission control, per typed reason.
+    pub shed: BTreeMap<&'static str, u64>,
+    /// Served requests that met their deadline (served requests without
+    /// a deadline always count as hits).
+    pub deadline_hits: u64,
+    /// Served requests that missed their deadline.
+    pub deadline_misses: u64,
+    /// Requests served with degraded (drafter-heavy) parameters.
+    pub degraded: u64,
+    /// End-to-end latency reservoir over served requests.
+    latencies: Reservoir,
+}
+
+impl Default for QosClassMetrics {
+    fn default() -> Self {
+        Self {
+            offered: 0,
+            served: 0,
+            shed: BTreeMap::new(),
+            deadline_hits: 0,
+            deadline_misses: 0,
+            degraded: 0,
+            latencies: Reservoir::new(RESERVOIR_CAP),
+        }
+    }
+}
+
+impl QosClassMetrics {
+    /// Total sheds across reasons.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.values().sum()
+    }
+
+    /// Deadline-hit rate over *offered* requests (sheds and late
+    /// completions both count against it; 0 when nothing was offered).
+    pub fn hit_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.deadline_hits as f64 / self.offered as f64
+        }
+    }
+
+    /// Latency percentile over served requests.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        self.latencies.percentile(q)
+    }
+
+    fn merge(&mut self, other: &QosClassMetrics) {
+        self.offered += other.offered;
+        self.served += other.served;
+        for (&reason, n) in &other.shed {
+            *self.shed.entry(reason).or_insert(0) += n;
+        }
+        self.deadline_hits += other.deadline_hits;
+        self.deadline_misses += other.deadline_misses;
+        self.degraded += other.degraded;
+        self.latencies.merge(&other.latencies);
+    }
+}
 
 /// Metrics accumulated by one shard worker (or merged fleet-wide).
 #[derive(Debug, Clone)]
@@ -74,6 +147,10 @@ pub struct ServerMetrics {
     /// by [`ServerMetrics::merge_fleet`]; empty on a single shard's own
     /// metrics.
     pub shard_breakdown: Vec<(usize, u64, f64)>,
+    /// Per-QoS-class deadline/shed/degradation accounting, keyed by
+    /// class name (`summary` renders it in priority order). Empty (and
+    /// absent from `summary`) unless the run served with QoS enabled.
+    pub qos_classes: BTreeMap<&'static str, QosClassMetrics>,
 }
 
 impl Default for ServerMetrics {
@@ -107,6 +184,7 @@ impl ServerMetrics {
             policy_epochs: OnlineStats::new(),
             policy_epoch_max: 0,
             shard_breakdown: Vec::new(),
+            qos_classes: BTreeMap::new(),
         }
     }
 
@@ -170,6 +248,77 @@ impl ServerMetrics {
         self.policy_epoch_max = self.policy_epoch_max.max(epoch);
     }
 
+    /// Record one offered request in its QoS class (QoS-enabled runs
+    /// only; call at shard ingest, before any admission decision).
+    pub fn record_offered(&mut self, class: QosClass) {
+        self.qos_classes.entry(class.name()).or_default().offered += 1;
+    }
+
+    /// Record one shed request (typed admission-control rejection).
+    pub fn record_shed(&mut self, class: QosClass, reason: ShedReason) {
+        let slot = self.qos_classes.entry(class.name()).or_default();
+        *slot.shed.entry(reason.name()).or_insert(0) += 1;
+    }
+
+    /// Record one request admitted with degraded (drafter-heavy)
+    /// parameters.
+    pub fn record_degraded(&mut self, class: QosClass) {
+        self.qos_classes.entry(class.name()).or_default().degraded += 1;
+    }
+
+    /// Record one served request's QoS outcome: end-to-end latency and
+    /// whether it met its deadline (`None` = no deadline = counts as a
+    /// hit — useful work is useful work).
+    pub fn record_qos_served(
+        &mut self,
+        class: QosClass,
+        latency_secs: f64,
+        deadline_ms: Option<u64>,
+    ) {
+        let slot = self.qos_classes.entry(class.name()).or_default();
+        slot.served += 1;
+        slot.latencies.push(latency_secs);
+        let hit = match deadline_ms {
+            Some(ms) => latency_secs <= ms as f64 / 1000.0,
+            None => true,
+        };
+        if hit {
+            slot.deadline_hits += 1;
+        } else {
+            slot.deadline_misses += 1;
+        }
+    }
+
+    /// Total sheds across classes (0 on non-QoS runs).
+    pub fn shed_total(&self) -> u64 {
+        self.qos_classes.values().map(|c| c.shed_total()).sum()
+    }
+
+    /// Total degraded admissions across classes.
+    pub fn degraded_total(&self) -> u64 {
+        self.qos_classes.values().map(|c| c.degraded).sum()
+    }
+
+    /// In-deadline goodput over the serving window: served requests
+    /// that met their deadline (or had none) per second. 0 on non-QoS
+    /// runs.
+    pub fn in_deadline_goodput(&self) -> f64 {
+        let hits: u64 = self.qos_classes.values().map(|c| c.deadline_hits).sum();
+        let end = self.stopped.unwrap_or_else(Instant::now);
+        let secs = end.saturating_duration_since(self.started).as_secs_f64();
+        if secs > 0.0 {
+            hits as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// The accounting for one class, if the run offered any requests in
+    /// it.
+    pub fn qos_class(&self, class: QosClass) -> Option<&QosClassMetrics> {
+        self.qos_classes.get(class.name())
+    }
+
     /// Record one fused verify call covering `fused` requests.
     pub fn record_verify_batch(&mut self, fused: usize) {
         self.verify_batches += 1;
@@ -221,6 +370,9 @@ impl ServerMetrics {
             }
             fleet.policy_epochs.merge(&m.policy_epochs);
             fleet.policy_epoch_max = fleet.policy_epoch_max.max(m.policy_epoch_max);
+            for (&class, qm) in &m.qos_classes {
+                fleet.qos_classes.entry(class).or_default().merge(qm);
+            }
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
                 m.requests,
@@ -348,6 +500,31 @@ impl ServerMetrics {
                 occ.join(" ")
             ));
         }
+        // QoS accounting (QoS-enabled runs only), classes in priority
+        // order: offered / shed / deadline-hit rate / degraded / p95.
+        if !self.qos_classes.is_empty() {
+            let parts: Vec<String> = QosClass::ALL
+                .iter()
+                .filter_map(|&c| self.qos_classes.get(c.name()).map(|m| (c, m)))
+                .map(|(c, m)| {
+                    format!(
+                        "{}: off={} srv={} shed={} hit={:.1}% degr={} p95={:.4}s",
+                        c.name(),
+                        m.offered,
+                        m.served,
+                        m.shed_total(),
+                        m.hit_rate() * 100.0,
+                        m.degraded,
+                        m.latency_percentile(0.95),
+                    )
+                })
+                .collect();
+            s.push_str(&format!(
+                " qos=[{}] in-deadline-goodput={:.2}/s",
+                parts.join(" | "),
+                self.in_deadline_goodput()
+            ));
+        }
         s
     }
 }
@@ -453,6 +630,56 @@ mod tests {
         let m = ServerMetrics::for_shard(3);
         assert!(m.summary().starts_with("shard=3 "));
         assert_eq!(ServerMetrics::new().shard, None);
+    }
+
+    #[test]
+    fn qos_counters_account_and_merge() {
+        let mut a = ServerMetrics::for_shard(0);
+        let mut b = ServerMetrics::for_shard(1);
+        for _ in 0..10 {
+            a.record_offered(QosClass::Realtime);
+        }
+        for _ in 0..7 {
+            a.record_qos_served(QosClass::Realtime, 0.020, Some(40));
+        }
+        a.record_qos_served(QosClass::Realtime, 0.090, Some(40)); // miss
+        a.record_shed(QosClass::Realtime, ShedReason::Expired);
+        a.record_shed(QosClass::Realtime, ShedReason::DeadlineUnmeetable);
+        a.record_degraded(QosClass::Realtime);
+        b.record_offered(QosClass::Batch);
+        b.record_qos_served(QosClass::Batch, 3.0, None); // no deadline = hit
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        let rt = fleet.qos_class(QosClass::Realtime).unwrap();
+        assert_eq!(rt.offered, 10);
+        assert_eq!(rt.served, 8);
+        assert_eq!(rt.shed_total(), 2);
+        assert_eq!(rt.shed["expired"], 1);
+        assert_eq!(rt.shed["unmeetable"], 1);
+        assert_eq!(rt.offered, rt.served + rt.shed_total(), "conservation law");
+        assert_eq!(rt.deadline_hits, 7);
+        assert_eq!(rt.deadline_misses, 1);
+        assert_eq!(rt.degraded, 1);
+        assert!((rt.hit_rate() - 0.7).abs() < 1e-12);
+        let batch = fleet.qos_class(QosClass::Batch).unwrap();
+        assert_eq!(batch.deadline_hits, 1, "deadline-free work counts as useful");
+        assert_eq!(fleet.shed_total(), 2);
+        assert_eq!(fleet.degraded_total(), 1);
+        let s = fleet.summary();
+        assert!(s.contains("qos=[rt: off=10 srv=8 shed=2 hit=70.0% degr=1"), "{s}");
+        assert!(s.contains("| batch: off=1"), "{s}");
+        assert!(s.contains("in-deadline-goodput="), "{s}");
+        // Priority order in the summary: rt before batch.
+        assert!(s.find("rt:").unwrap() < s.find("batch:").unwrap(), "{s}");
+    }
+
+    #[test]
+    fn non_qos_runs_keep_the_legacy_summary_shape() {
+        let mut m = ServerMetrics::new();
+        m.record(0.001, 0.01, 20.0, 8, 7);
+        assert!(!m.summary().contains("qos=["), "{}", m.summary());
+        assert_eq!(m.shed_total(), 0);
+        assert_eq!(m.in_deadline_goodput(), 0.0);
+        assert!(m.qos_class(QosClass::Realtime).is_none());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!
 //! ```text
 //! session drivers (one worker thread per controlled robot/env;
-//!   │            heterogeneous specs: kitchen ts_dp, push_t vanilla, …)
+//!   │            heterogeneous specs: kitchen ts_dp, push_t vanilla, …
+//!   │            each carrying a QoS class + optional deadline:
+//!   │            `--mix "lift:ts_dp*4@rt:40ms,…"`)
 //!   │  routed ONCE at admission: router.rs maps session → shard
 //!   │  (deterministic hash + least-loaded tiebreak)
 //!   ▼
@@ -24,9 +26,31 @@
 //!   │  checkpoint swaps a distilled Transformer drafter in
 //!   │  (workload::DrafterKind labels the swap in specs + metrics)
 //!   │
+//!   │  ADMISSION CONTROL (qos.rs, `--qos` runs only): each shard keeps
+//!   │  a pressure gauge — (queued + in-flight) × EWMA(compute secs) =
+//!   │  estimated seconds of backlog. A request whose deadline already
+//!   │  passed, or whose remaining budget is smaller than the backlog,
+//!   │  is rejected with a typed SegmentResponse::Shed{reason} instead
+//!   │  of queueing toward a guaranteed-late answer; the session holds
+//!   │  its previous plan (receding-horizon fallback) and every shed is
+//!   │  accounted per class (offered == served + shed)
+//!   │
 //!   │  batch former (batcher.rs): per-session queues + round-robin
-//!   │  cursor (Fair) or arrival order (Fifo); each shard admits up to
-//!   │  `max_batch` jobs, lingering `batch_window` for stragglers
+//!   │  cursor (Fair), arrival order (Fifo), or QoS classes (Priority:
+//!   │  realtime > interactive > batch, FIFO within a class, with an
+//!   │  aging rule — a class bypassed `aging_limit` consecutive pops is
+//!   │  served next, so batch work is delayed, never starved); each
+//!   │  shard admits up to `max_batch` jobs, lingering `batch_window`
+//!   │  for stragglers
+//!   │
+//!   │  GRACEFUL DEGRADATION (qos.rs): past `degrade_pressure` seconds
+//!   │  of backlog, admitted TS-DP segments blend toward drafter-heavy
+//!   │  operation (draft horizons → K_MAX, λ → accept-all, σ widened) —
+//!   │  per-segment compute shrinks so deadlines keep being met;
+//!   │  quality degrades last, in-deadline goodput first. The pressure
+//!   │  reading also rides each SegmentReply back to adaptive sessions as a
+//!   │  scheduler feature (scheduler::features), so an online-adapted
+//!   │  policy can learn the same trade
 //!   │
 //!   │  job table of resumable SegmentJobs (speculative::job):
 //!   │    1. draft   — each job rolls out its round's drafts (k/8 NFE)
@@ -38,10 +62,12 @@
 //!   │  (baseline-method requests run as blocking single-request
 //!   │   generations at admission — no verify stage to fuse)
 //!   ▼
-//! SegmentReply { actions, nfe, shard, … } back over the per-request
+//! SegmentResponse::Served(SegmentReply { actions, nfe, shard,
+//! pressure, … }) — or ::Shed{reason} — back over the per-request
 //! channel; per-shard ServerMetrics merge into one fleet view
 //! (metrics.rs: reservoir-merged percentiles, per-shard occupancy,
-//! imbalance gauge)
+//! imbalance gauge, and on `--qos` runs the per-class
+//! offered/shed/deadline-hit/degraded breakdown + in-deadline goodput)
 //! ```
 //!
 //! Scheduler inference (pure Rust, microseconds) runs *inside the
@@ -95,6 +121,20 @@
 //! with, its speculative rounds reproduce the target distribution
 //! exactly.
 //!
+//! **QoS determinism contract**: every overload behavior above sits
+//! behind `ServeOptions { qos: QosConfig { enabled: true, .. }, .. }`
+//! (CLI `--qos`). With QoS *disabled* — the default — no request is
+//! ever shed or degraded, replies report zero pressure, and the
+//! `Priority` policy is simply a third dispatch order (dispatch order
+//! never affects served bits), so the shard-invariance and golden-trace
+//! contracts hold unchanged. With QoS *enabled*, shedding and
+//! degradation depend on measured wall-clock pressure and are therefore
+//! intentionally not bit-reproducible — what is pinned instead is the
+//! accounting (`offered == served + shed`, per class) and the overload
+//! ordering asserted by `tests/qos_serving.rs`: at ≥2× capacity the
+//! QoS fleet's realtime deadline-hit rate and in-deadline goodput beat
+//! the FIFO baseline.
+//!
 //! Failure semantics: a shard that fails drains its queue and hangs up
 //! its sessions, so one bad replica fails the whole `serve()` call with
 //! a root-cause error instead of deadlocking; session-driver errors and
@@ -103,14 +143,16 @@
 pub mod batcher;
 pub mod cli;
 pub mod metrics;
+pub mod qos;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod session;
 pub mod workload;
 
-pub use metrics::ServerMetrics;
-pub use request::{SegmentReply, SegmentRequest};
+pub use metrics::{QosClassMetrics, ServerMetrics};
+pub use qos::{degrade_params, PressureGauge, QosClass, QosConfig, ShedReason};
+pub use request::{SegmentReply, SegmentRequest, SegmentResponse};
 pub use router::Router;
 pub use server::{serve, serve_with, ReplicaFactory, ServeOptions, ServeReport};
 pub use workload::{DrafterKind, SessionSpec, WorkloadMix};

@@ -1,0 +1,304 @@
+//! Deadline-aware QoS: priority classes, typed load shedding, and
+//! graceful degradation under measured pressure.
+//!
+//! TS-DP's premise is spending compute where task difficulty demands it;
+//! a fleet serving heavy traffic must make the same trade across
+//! *requests*. This module holds the request-level vocabulary:
+//!
+//! * [`QosClass`] — the three serving classes (realtime / interactive /
+//!   batch), in strict priority order. Classes and per-session latency
+//!   deadlines ride on [`crate::coordinator::workload::SessionSpec`]
+//!   (`--mix "lift:ts_dp*4@rt:40ms"`).
+//! * [`ShedReason`] — the typed outcome of admission control. A request
+//!   the fleet cannot serve in deadline is *rejected with a reason*
+//!   (`SegmentResponse::Shed`), never silently dropped: the session
+//!   driver observes the shed, falls back to its previous plan
+//!   (receding-horizon hold), and the per-class counters in
+//!   [`crate::coordinator::metrics::ServerMetrics`] account for every
+//!   offered request (`offered == served + shed`).
+//! * [`PressureGauge`] — the per-shard overload signal: estimated
+//!   seconds of backlog (queue depth × an EWMA of observed per-request
+//!   compute time). It drives admission control, is fed back to the
+//!   speculative scheduler as an observation feature
+//!   ([`crate::scheduler::features`]), and gates [`degrade_params`].
+//! * [`degrade_params`] — graceful degradation: under pressure, TS-DP
+//!   requests are pushed toward *drafter-heavy* operation (longer draft
+//!   horizons, permissive acceptance threshold, wider acceptance σ), so
+//!   per-segment compute shrinks and in-deadline goodput is preserved
+//!   while action quality degrades last — the request-level analogue of
+//!   the paper's per-step difficulty adaptation.
+//!
+//! Everything here is **off by default** ([`QosConfig::enabled`] =
+//! false): with QoS disabled no request is ever shed or degraded and no
+//! pressure is reported to sessions, so the serving fleet's bit-identity
+//! contracts (shard invariance, golden trace) hold unchanged.
+
+use crate::config::{SpecParams, K_MAX};
+
+/// Serving priority class of a session, in strict priority order.
+///
+/// The `Priority` dispatch policy serves higher classes first, with a
+/// starvation-freedom aging rule so sustained realtime load can delay
+/// batch work but never park it forever
+/// (see [`crate::coordinator::batcher::Batcher`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Hard-latency control loops (served first).
+    Realtime,
+    /// Ordinary interactive sessions (the default).
+    #[default]
+    Interactive,
+    /// Throughput work with no latency expectation (served last,
+    /// protected by the aging rule).
+    Batch,
+}
+
+impl QosClass {
+    /// All classes, priority order (highest first).
+    pub const ALL: [QosClass; 3] = [QosClass::Realtime, QosClass::Interactive, QosClass::Batch];
+
+    /// Stable lowercase name (metrics keys, `--mix` grammar).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Realtime => "rt",
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Priority rank: 0 = served first.
+    pub fn rank(self) -> usize {
+        match self {
+            QosClass::Realtime => 0,
+            QosClass::Interactive => 1,
+            QosClass::Batch => 2,
+        }
+    }
+
+    /// Class at the given rank (inverse of [`QosClass::rank`]).
+    pub fn from_rank(rank: usize) -> Option<Self> {
+        QosClass::ALL.get(rank).copied()
+    }
+
+    /// Parse a `--mix` class name (accepts the canonical names plus the
+    /// long/short aliases `realtime`, `int`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rt" | "realtime" => Some(QosClass::Realtime),
+            "interactive" | "int" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Why admission control rejected a request. Typed so sheds are
+/// accountable per reason in metrics — never a silent drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// The deadline had already passed when the fleet looked at the
+    /// request (expired while queued or in transit).
+    Expired,
+    /// The shard's measured backlog exceeded the request's remaining
+    /// deadline budget at admission — serving it would only produce a
+    /// late answer while delaying requests that can still make theirs.
+    DeadlineUnmeetable,
+}
+
+impl ShedReason {
+    /// Stable lowercase name (metrics keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::Expired => "expired",
+            ShedReason::DeadlineUnmeetable => "unmeetable",
+        }
+    }
+}
+
+/// QoS/overload-control configuration for a serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosConfig {
+    /// Master switch. Disabled (the default) means: no admission
+    /// control, no shedding, no degradation, no pressure feedback —
+    /// bit-identical serving to the pre-QoS fleet.
+    pub enabled: bool,
+    /// Pressure (estimated seconds of shard backlog) beyond which
+    /// admitted TS-DP requests are degraded toward drafter-heavy
+    /// operation. The degradation level ramps linearly from 0 at this
+    /// threshold to 1 at twice it.
+    pub degrade_pressure: f64,
+    /// Starvation-freedom bound for the `Priority` dispatch policy: a
+    /// non-empty lower class is served after being bypassed this many
+    /// consecutive pops.
+    pub aging_limit: u64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self { enabled: false, degrade_pressure: 0.05, aging_limit: 8 }
+    }
+}
+
+impl QosConfig {
+    /// Enabled with the default thresholds.
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+
+    /// Degradation level in [0, 1] for a measured pressure: 0 at or
+    /// below the threshold, ramping linearly to 1 at twice it.
+    pub fn degrade_level(&self, pressure_secs: f64) -> f64 {
+        if !self.enabled || self.degrade_pressure <= 0.0 {
+            return 0.0;
+        }
+        ((pressure_secs / self.degrade_pressure) - 1.0).clamp(0.0, 1.0)
+    }
+}
+
+/// Per-shard overload signal: estimated seconds of backlog, computed as
+/// (queued + in-flight requests) × an EWMA of observed per-request
+/// compute time. Monotone in both queue depth and how slow the shard
+/// has actually been — a deep queue of cheap requests and a short queue
+/// of expensive ones register the same urgency.
+#[derive(Debug, Clone, Default)]
+pub struct PressureGauge {
+    /// EWMA of per-request compute seconds (0 until the first request
+    /// completes, so a cold shard never sheds on a guess).
+    ewma_secs: f64,
+}
+
+/// EWMA smoothing factor for observed compute time: new observations
+/// carry 20% weight, so the gauge tracks load changes within a few
+/// requests without whipsawing on one outlier.
+const PRESSURE_ALPHA: f64 = 0.2;
+
+impl PressureGauge {
+    /// Fresh gauge (no observations; pressure reads 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request's compute seconds.
+    pub fn observe(&mut self, compute_secs: f64) {
+        self.ewma_secs = if self.ewma_secs == 0.0 {
+            compute_secs
+        } else {
+            (1.0 - PRESSURE_ALPHA) * self.ewma_secs + PRESSURE_ALPHA * compute_secs
+        };
+    }
+
+    /// Smoothed per-request compute estimate (seconds).
+    pub fn service_estimate(&self) -> f64 {
+        self.ewma_secs
+    }
+
+    /// Estimated backlog in seconds for `pending` queued + in-flight
+    /// requests.
+    pub fn pressure(&self, pending: usize) -> f64 {
+        pending as f64 * self.ewma_secs
+    }
+}
+
+/// Graceful degradation of speculative parameters: blend `params`
+/// toward drafter-heavy operation by `level` ∈ [0, 1].
+///
+/// Drafts cost `DRAFTER_NFE` (k/8) per step while every verify round
+/// costs a full target call, so the cheap end of the quality/compute
+/// trade is *longer* draft horizons with a *permissive* acceptance test:
+/// at level 1 the horizons reach `K_MAX`, λ collapses to its floor
+/// (accept essentially every draft) and the acceptance σ widens to its
+/// ceiling — approaching a pure drafter rollout whose compute is a small
+/// fraction of the nominal segment. Quality degrades last: level 0 is a
+/// no-op, and intermediate levels move every knob proportionally.
+pub fn degrade_params(params: SpecParams, level: f64) -> SpecParams {
+    let l = level.clamp(0.0, 1.0) as f32;
+    if l == 0.0 {
+        return params;
+    }
+    let stretch = |k: usize| k + ((K_MAX - k.min(K_MAX)) as f32 * l).round() as usize;
+    let mut p = params;
+    p.stages.k_early = stretch(p.stages.k_early);
+    p.stages.k_mid = stretch(p.stages.k_mid);
+    p.stages.k_late = stretch(p.stages.k_late);
+    // λ floor matches SpecParams::clamped's lower bound: accept-all.
+    p.lambda = p.lambda * (1.0 - l) + 1e-4 * l;
+    p.sigma_scale = p.sigma_scale * (1.0 - l) + 8.0 * l;
+    p.clamped()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StageParams;
+
+    #[test]
+    fn class_names_parse_and_rank() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.name()), Some(c));
+            assert_eq!(QosClass::from_rank(c.rank()), Some(c));
+        }
+        assert_eq!(QosClass::parse("realtime"), Some(QosClass::Realtime));
+        assert_eq!(QosClass::parse("int"), Some(QosClass::Interactive));
+        assert_eq!(QosClass::parse("best-effort"), None);
+        assert_eq!(QosClass::default(), QosClass::Interactive);
+        assert!(QosClass::Realtime.rank() < QosClass::Batch.rank());
+        assert_eq!(QosClass::from_rank(99), None);
+    }
+
+    #[test]
+    fn shed_reasons_have_stable_names() {
+        assert_eq!(ShedReason::Expired.name(), "expired");
+        assert_eq!(ShedReason::DeadlineUnmeetable.name(), "unmeetable");
+    }
+
+    #[test]
+    fn qos_defaults_to_disabled() {
+        let q = QosConfig::default();
+        assert!(!q.enabled);
+        assert!(QosConfig::on().enabled);
+        // Disabled configs never ask for degradation, no matter the
+        // pressure reading.
+        assert_eq!(q.degrade_level(1e9), 0.0);
+    }
+
+    #[test]
+    fn degrade_level_ramps_from_threshold_to_double() {
+        let q = QosConfig { enabled: true, degrade_pressure: 0.1, aging_limit: 8 };
+        assert_eq!(q.degrade_level(0.0), 0.0);
+        assert_eq!(q.degrade_level(0.1), 0.0);
+        assert!((q.degrade_level(0.15) - 0.5).abs() < 1e-12);
+        assert_eq!(q.degrade_level(0.2), 1.0);
+        assert_eq!(q.degrade_level(5.0), 1.0);
+    }
+
+    #[test]
+    fn pressure_gauge_is_cold_safe_and_tracks() {
+        let mut g = PressureGauge::new();
+        assert_eq!(g.pressure(100), 0.0, "cold gauge must never report backlog");
+        g.observe(0.010);
+        assert!((g.service_estimate() - 0.010).abs() < 1e-12);
+        g.observe(0.020);
+        // 0.8 * 0.010 + 0.2 * 0.020 = 0.012
+        assert!((g.service_estimate() - 0.012).abs() < 1e-12);
+        assert!((g.pressure(5) - 0.060).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degrade_is_identity_at_zero_and_drafter_heavy_at_one() {
+        let p = SpecParams::fixed_default();
+        assert_eq!(degrade_params(p, 0.0), p);
+        let full = degrade_params(p, 1.0);
+        assert_eq!(full.stages, StageParams::uniform(K_MAX), "horizons reach K_MAX");
+        assert!(full.lambda <= 1e-4 + 1e-6, "accept-all threshold");
+        assert!((full.sigma_scale - 8.0).abs() < 1e-4, "widest acceptance sigma");
+        // Intermediate levels move monotonically.
+        let half = degrade_params(p, 0.5);
+        assert!(half.stages.k_early > p.stages.k_early);
+        assert!(half.stages.k_early < full.stages.k_early || full.stages.k_early == K_MAX);
+        assert!(half.lambda < p.lambda);
+        assert!(half.sigma_scale > p.sigma_scale);
+        // Out-of-range levels clamp instead of exploding.
+        assert_eq!(degrade_params(p, -3.0), p);
+        assert_eq!(degrade_params(p, 7.0), full);
+    }
+}

@@ -1,9 +1,10 @@
 //! Request/response types between session drivers and shard workers.
 
 use crate::config::SpecParams;
+use crate::coordinator::qos::ShedReason;
 use crate::coordinator::workload::SessionSpec;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-segment reply from the engine.
 #[derive(Debug, Clone)]
@@ -20,15 +21,39 @@ pub struct SegmentReply {
     pub compute_secs: f64,
     /// Shard that served the request.
     pub shard: usize,
+    /// The serving shard's pressure reading (estimated seconds of
+    /// backlog) at completion — the overload feedback the session feeds
+    /// to its scheduler as an observation feature. Always 0.0 when QoS
+    /// is disabled, so frozen scheduler decisions stay bit-identical to
+    /// the pre-QoS fleet.
+    pub pressure: f64,
+}
+
+/// What the fleet did with one offered segment request: served it, or
+/// (QoS admission control only) rejected it with a typed reason. With
+/// QoS disabled every request is served — shedding can never occur.
+#[derive(Debug, Clone)]
+pub enum SegmentResponse {
+    /// The request was served.
+    Served(SegmentReply),
+    /// Admission control rejected the request (deadline-aware load
+    /// shedding). The session driver falls back to its previous plan.
+    Shed {
+        /// Why the request was rejected.
+        reason: ShedReason,
+        /// Shard that made the decision.
+        shard: usize,
+    },
 }
 
 /// An action-segment request submitted by a session driver.
 pub struct SegmentRequest {
     /// Stable session identifier (routing key).
     pub session: usize,
-    /// The session's workload spec (task / style / method / episodes);
-    /// the engine picks the generation path per request from this, so
-    /// one shard serves heterogeneous sessions side by side.
+    /// The session's workload spec (task / style / method / episodes /
+    /// QoS class / deadline); the engine picks the generation path per
+    /// request from this, so one shard serves heterogeneous sessions
+    /// side by side.
     pub spec: SessionSpec,
     /// Raw observation (length OBS_DIM).
     pub obs: Vec<f32>,
@@ -39,10 +64,26 @@ pub struct SegmentRequest {
     /// policy-version metrics; online adaptation makes this climb as
     /// the learner publishes new snapshots.
     pub policy_epoch: Option<u64>,
-    /// Submission timestamp (queue-delay accounting).
+    /// Submission timestamp (queue-delay and deadline accounting).
     pub submitted: Instant,
     /// Reply channel.
-    pub reply: mpsc::SyncSender<SegmentReply>,
+    pub reply: mpsc::SyncSender<SegmentResponse>,
+}
+
+impl SegmentRequest {
+    /// Remaining deadline budget at `now` (None when the session has no
+    /// deadline; zero when already expired).
+    pub fn remaining_budget(&self, now: Instant) -> Option<Duration> {
+        let deadline_ms = self.spec.deadline_ms?;
+        let deadline = self.submitted + Duration::from_millis(deadline_ms);
+        Some(deadline.saturating_duration_since(now))
+    }
+
+    /// True when the request's deadline has already passed at `now`
+    /// (false when it has no deadline).
+    pub fn expired(&self, now: Instant) -> bool {
+        matches!(self.remaining_budget(now), Some(d) if d.is_zero())
+    }
 }
 
 impl std::fmt::Debug for SegmentRequest {
@@ -54,5 +95,44 @@ impl std::fmt::Debug for SegmentRequest {
             .field("params", &self.params)
             .field("policy_epoch", &self.policy_epoch)
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::SessionSpec;
+
+    fn req(deadline_ms: Option<u64>) -> SegmentRequest {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        SegmentRequest {
+            session: 0,
+            spec: SessionSpec { deadline_ms, ..SessionSpec::default() },
+            obs: vec![],
+            params: None,
+            policy_epoch: None,
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn deadline_budget_counts_down_and_expires() {
+        let r = req(Some(1_000));
+        let now = r.submitted;
+        let left = r.remaining_budget(now).unwrap();
+        assert!(left <= Duration::from_millis(1_000));
+        assert!(left > Duration::from_millis(900));
+        assert!(!r.expired(now));
+        let later = now + Duration::from_millis(1_500);
+        assert!(r.expired(later));
+        assert_eq!(r.remaining_budget(later), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn no_deadline_never_expires() {
+        let r = req(None);
+        assert_eq!(r.remaining_budget(Instant::now()), None);
+        assert!(!r.expired(r.submitted + Duration::from_secs(3600)));
     }
 }

@@ -26,7 +26,8 @@ use crate::baselines::{make_generator, Generator};
 use crate::config::{AdaptMode, Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::request::{SegmentReply, SegmentRequest};
+use crate::coordinator::qos::{degrade_params, PressureGauge, QosConfig, ShedReason};
+use crate::coordinator::request::{SegmentReply, SegmentRequest, SegmentResponse};
 use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::coordinator::workload::{SessionSpec, WorkloadMix};
@@ -84,6 +85,12 @@ pub struct ServeOptions {
     /// Online-learner knobs (min batch, buffer bound, PPO config,
     /// checkpointing). Unused in frozen mode.
     pub learner: LearnerConfig,
+    /// QoS/overload control: deadline-aware admission, typed shedding,
+    /// and pressure-gated degradation. Disabled by default — a disabled
+    /// config serves bit-identically to the pre-QoS fleet (no request
+    /// is ever shed or degraded, and no pressure reaches the
+    /// scheduler's features).
+    pub qos: QosConfig,
 }
 
 impl Default for ServeOptions {
@@ -106,6 +113,7 @@ impl Default for ServeOptions {
             batch_window: Duration::from_micros(200),
             adapt: AdaptMode::Frozen,
             learner: LearnerConfig::default(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -193,12 +201,49 @@ struct ActiveJob<'e> {
     /// The resumable state machine.
     job: SegmentJob<'e>,
     /// Reply channel back to the session driver.
-    reply: mpsc::SyncSender<SegmentReply>,
+    reply: mpsc::SyncSender<SegmentResponse>,
     /// Queue delay observed at admission (seconds).
     queue_delay: f64,
     /// Admission time (compute-latency clock; includes time interleaved
     /// with other jobs — honest under batching).
     started: Instant,
+}
+
+/// Deadline-aware admission at the queue boundary: with QoS enabled,
+/// requests whose deadline has passed — or whose remaining budget is
+/// smaller than the shard's measured backlog — are rejected with a
+/// typed [`SegmentResponse::Shed`] instead of queueing toward a
+/// guaranteed-late answer. Everything else (and everything, when QoS is
+/// disabled) is buffered for batch formation.
+fn ingest_request(
+    req: SegmentRequest,
+    qos: &QosConfig,
+    pressure_secs: f64,
+    batcher: &mut Batcher,
+    metrics: &mut ServerMetrics,
+    shard: usize,
+) {
+    if qos.enabled {
+        metrics.record_offered(req.spec.qos);
+        let now = Instant::now();
+        let reason = if req.expired(now) {
+            Some(ShedReason::Expired)
+        } else {
+            match req.remaining_budget(now) {
+                Some(left) if pressure_secs > left.as_secs_f64() => {
+                    Some(ShedReason::DeadlineUnmeetable)
+                }
+                _ => None,
+            }
+        };
+        if let Some(reason) = reason {
+            metrics.record_shed(req.spec.qos, reason);
+            // A hung-up session (env finished mid-flight) is fine.
+            let _ = req.reply.send(SegmentResponse::Shed { reason, shard });
+            return;
+        }
+    }
+    batcher.push(req);
 }
 
 /// One shard worker's engine loop: owns the replica, a batcher, and a
@@ -229,6 +274,14 @@ fn run_shard(
     let mut rngs: HashMap<usize, Rng> = HashMap::new();
     let mut jobs: Vec<ActiveJob<'_>> = Vec::new();
 
+    // Overload signal: estimated seconds of backlog (pending requests ×
+    // an EWMA of observed compute time). Drives admission control and
+    // degradation, and rides replies back to adaptive sessions as a
+    // scheduler feature — but only when QoS is enabled; a disabled
+    // config reports 0.0 so served bits and frozen decisions stay
+    // identical to the pre-QoS fleet.
+    let mut gauge = PressureGauge::new();
+
     // Throughput measures serving only: the clock (re)starts when this
     // shard's first request lands, so neither this shard's replica
     // compile nor the readiness barrier (waiting on slower shards)
@@ -238,10 +291,13 @@ fn run_shard(
 
     let mut open = true;
     while open || !batcher.is_empty() || !jobs.is_empty() {
-        // --- 1. ingest ------------------------------------------
+        // --- 1. ingest (deadline-aware admission at the boundary) ---
         if open && jobs.is_empty() && batcher.is_empty() {
             match rx.recv() {
-                Ok(req) => batcher.push(req),
+                Ok(req) => {
+                    let pressure = gauge.pressure(batcher.len() + jobs.len());
+                    ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
+                }
                 Err(_) => {
                     open = false;
                     continue;
@@ -251,7 +307,8 @@ fn run_shard(
         if open {
             // Opportunistically drain whatever else is queued.
             while let Ok(req) = rx.try_recv() {
-                batcher.push(req);
+                let pressure = gauge.pressure(batcher.len() + jobs.len());
+                ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
             }
             // Wave formation: with no round in flight, linger briefly so
             // concurrent sessions land in the same first wave. Never
@@ -264,7 +321,10 @@ fn run_shard(
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(req) => batcher.push(req),
+                        Ok(req) => {
+                            let pressure = gauge.pressure(batcher.len() + jobs.len());
+                            ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
+                        }
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             open = false;
@@ -287,6 +347,15 @@ fn run_shard(
                 batcher.pop_next(&|s| busy.contains(&s))
             };
             let Some(req) = req else { break };
+            // Second deadline check: a request admitted while feasible
+            // may have expired waiting in the batcher — serving it now
+            // would burn a slot on a guaranteed-late answer.
+            if opts.qos.enabled && req.expired(Instant::now()) {
+                metrics.record_shed(req.spec.qos, ShedReason::Expired);
+                let _ =
+                    req.reply.send(SegmentResponse::Shed { reason: ShedReason::Expired, shard });
+                continue;
+            }
             let queue_delay = req.submitted.elapsed().as_secs_f64();
             if let Some(epoch) = req.policy_epoch {
                 metrics.record_policy_epoch(epoch);
@@ -296,7 +365,19 @@ fn run_shard(
                 .entry(req.session)
                 .or_insert_with(|| Rng::seed_from_u64(opts.seed ^ req.session as u64));
             if req.spec.method == Method::TsDp {
-                let params = req.params.unwrap_or_else(SpecParams::fixed_default);
+                let mut params = req.params.unwrap_or_else(SpecParams::fixed_default);
+                // Graceful degradation: under measured pressure, push
+                // the segment toward drafter-heavy operation (longer
+                // horizons, permissive acceptance) so per-segment
+                // compute shrinks and deadlines keep being met —
+                // quality degrades last, goodput first.
+                let level = opts
+                    .qos
+                    .degrade_level(gauge.pressure(batcher.len() + jobs.len() + 1));
+                if level > 0.0 {
+                    params = degrade_params(params, level);
+                    metrics.record_degraded(req.spec.qos);
+                }
                 let mut job = engine.start_job(cond, rng);
                 job.set_shard(shard);
                 jobs.push(ActiveJob {
@@ -321,6 +402,7 @@ fn run_shard(
                 let mut trace = SegmentTrace { shard, ..SegmentTrace::default() };
                 let actions = generator.generate(den, &cond, rng, &mut trace)?;
                 let compute = t0.elapsed().as_secs_f64();
+                gauge.observe(compute);
                 metrics.record(
                     queue_delay,
                     compute,
@@ -333,15 +415,26 @@ fn run_shard(
                     req.spec.method.name(),
                     req.spec.drafter.name(),
                 );
+                let pressure = if opts.qos.enabled {
+                    metrics.record_qos_served(
+                        req.spec.qos,
+                        queue_delay + compute,
+                        req.spec.deadline_ms,
+                    );
+                    gauge.pressure(batcher.len() + jobs.len())
+                } else {
+                    0.0
+                };
                 // A hung-up session (env finished mid-flight) is fine.
-                let _ = req.reply.send(SegmentReply {
+                let _ = req.reply.send(SegmentResponse::Served(SegmentReply {
                     actions,
                     nfe: trace.nfe,
                     drafts: trace.drafts(),
                     accepted: trace.accepted(),
                     compute_secs: compute,
                     shard,
-                });
+                    pressure,
+                }));
             }
         }
         if !jobs.is_empty() {
@@ -387,6 +480,7 @@ fn run_shard(
             if jobs[i].job.stage() == Stage::Done {
                 let done = jobs.remove(i);
                 let compute = done.started.elapsed().as_secs_f64();
+                gauge.observe(compute);
                 let job_shard = done.job.shard();
                 let (actions, rounds, nfe) = done.job.into_parts();
                 let trace =
@@ -403,17 +497,28 @@ fn run_shard(
                     done.spec.method.name(),
                     done.spec.drafter.name(),
                 );
+                let pressure = if opts.qos.enabled {
+                    metrics.record_qos_served(
+                        done.spec.qos,
+                        done.queue_delay + compute,
+                        done.spec.deadline_ms,
+                    );
+                    gauge.pressure(batcher.len() + jobs.len())
+                } else {
+                    0.0
+                };
                 // A hung-up session (env finished mid-flight) is fine.
                 // The reply's shard attribution flows job → trace →
                 // reply (the label set at admission).
-                let _ = done.reply.send(SegmentReply {
+                let _ = done.reply.send(SegmentResponse::Served(SegmentReply {
                     actions,
                     nfe,
                     drafts: trace.drafts(),
                     accepted: trace.accepted(),
                     compute_secs: compute,
                     shard: trace.shard,
-                });
+                    pressure,
+                }));
             } else {
                 i += 1;
             }
@@ -488,7 +593,8 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 let ready = ready_tx.clone();
                 workers.push(scope.spawn(move || -> (ServerMetrics, Result<()>) {
                     let mut metrics = ServerMetrics::for_shard(shard);
-                    let mut batcher = Batcher::new(opts_ref.policy);
+                    let mut batcher =
+                        Batcher::with_aging_limit(opts_ref.policy, opts_ref.qos.aging_limit);
                     // Build the replica on this thread (non-`Send`
                     // backends never cross threads), then run the engine
                     // loop in an inner closure so that on error we still

@@ -3,7 +3,7 @@
 
 use crate::config::{SpecParams, ACT_DIM, EXEC_STEPS, HORIZON};
 use crate::config::{Method, Task};
-use crate::coordinator::request::{SegmentReply, SegmentRequest};
+use crate::coordinator::request::{SegmentRequest, SegmentResponse};
 use crate::coordinator::workload::SessionSpec;
 use crate::envs::make_env;
 use crate::harness::episode::{DecisionHook, SegmentOutcome};
@@ -38,10 +38,16 @@ pub struct SessionReport {
     pub mean_latency: f64,
     /// Total NFE attributed to this session.
     pub nfe: f64,
+    /// Requests shed by QoS admission control (0 unless the run enabled
+    /// QoS). A shed segment is *not* silently dropped: the session
+    /// executes a receding-horizon hold on its previous plan and moves
+    /// on, so control keeps running while the fleet recovers.
+    pub sheds: usize,
     /// FNV-1a digest of each served segment's action bits, in order.
     /// Serving the same seeds must yield the same digests regardless of
     /// shard count, engine batching (`max_batch`), or dispatch policy —
-    /// the losslessness contract the sharding tests assert.
+    /// the losslessness contract the sharding tests assert. Shed
+    /// segments contribute no digest (nothing was served).
     pub segment_digests: Vec<u64>,
 }
 
@@ -96,12 +102,20 @@ pub fn run_session(
         segments: 0,
         mean_latency: 0.0,
         nfe: 0.0,
+        sheds: 0,
         segment_digests: Vec::new(),
     };
     let mut latency_sum = 0.0;
+    // Unexecuted tail of the most recently served plan: the
+    // receding-horizon fallback executed when QoS admission control
+    // sheds a request (run the remainder of the previous plan rather
+    // than stopping the control loop). Consumed by the first shed and
+    // reset at episode boundaries — a plan never crosses an env reset.
+    let mut last_plan: Option<Vec<f32>> = None;
     for ep in 0..cfg.spec.episodes {
         let mut rng = Rng::seed_from_u64(cfg.seed ^ ((ep as u64 + 1) << 16));
         env.reset(&mut rng);
+        last_plan = None;
         let mut feat_state = FeatureState::default();
         while !env.done() {
             let obs = env.observe();
@@ -112,7 +126,7 @@ pub fn run_session(
                 let feat = features(&obs, env.progress(), phase_frac, &feat_state);
                 h.decide(&feat)
             });
-            let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentReply>(1);
+            let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentResponse>(1);
             let submitted = Instant::now();
             tx.send(SegmentRequest {
                 session: cfg.session,
@@ -125,7 +139,33 @@ pub fn run_session(
             })
             .ok()
             .context("shard closed the request channel")?;
-            let reply = reply_rx.recv().context("shard dropped the reply")?;
+            let reply = match reply_rx.recv().context("shard dropped the reply")? {
+                SegmentResponse::Served(reply) => reply,
+                SegmentResponse::Shed { shard, .. } => {
+                    // Typed rejection from admission control: execute
+                    // the *unexecuted tail* of the previous plan (the
+                    // receding-horizon hold), standing still once it is
+                    // spent or before the first segment — the env's
+                    // step limit still advances either way, so a
+                    // saturated fleet can never wedge the session.
+                    debug_assert_eq!(shard, cfg.shard, "cross-shard shed");
+                    report.sheds += 1;
+                    let hold = last_plan.take().unwrap_or_default();
+                    let zeros = [0.0f32; ACT_DIM];
+                    for i in 0..EXEC_STEPS.min(HORIZON) {
+                        if env.done() {
+                            break;
+                        }
+                        let start = i * ACT_DIM;
+                        if start + ACT_DIM <= hold.len() {
+                            env.step(&hold[start..start + ACT_DIM]);
+                        } else {
+                            env.step(&zeros);
+                        }
+                    }
+                    continue;
+                }
+            };
             // Placement sanity: the reply must come from the shard the
             // router assigned this session to at admission.
             debug_assert_eq!(reply.shard, cfg.shard, "cross-shard reply");
@@ -149,6 +189,15 @@ pub fn run_session(
             };
             feat_state.recent_drafts = reply.drafts as f32;
             feat_state.recent_speed = env.ee_speed();
+            // Shard overload feedback (always 0.0 on QoS-disabled runs,
+            // so frozen decisions stay bit-identical to the pre-QoS
+            // fleet).
+            feat_state.queue_pressure = reply.pressure as f32;
+            // Keep the plan steps the loop above did NOT execute — the
+            // shed fallback continues from exactly where serving left
+            // off, never replaying actions the env already took.
+            last_plan =
+                Some(reply.actions[(EXEC_STEPS.min(HORIZON) * ACT_DIM).min(reply.actions.len())..].to_vec());
             if let Some(p) = params {
                 feat_state.last_params = p;
             }

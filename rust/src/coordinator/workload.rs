@@ -16,6 +16,7 @@
 
 use crate::baselines::{make_generator, Generator};
 use crate::config::{DemoStyle, Method, Task, OBS_DIM};
+use crate::coordinator::qos::{PressureGauge, QosClass};
 use crate::policy::Denoiser;
 use crate::scheduler::features::{features, FeatureState};
 use crate::scheduler::SchedulerPolicy;
@@ -74,11 +75,18 @@ pub struct SessionSpec {
     pub episodes: usize,
     /// Drafter identity label (see [`DrafterKind`]).
     pub drafter: DrafterKind,
+    /// Serving priority class (`@rt` / `@interactive` / `@batch` in the
+    /// mix grammar; interactive by default). Only acted on when the
+    /// serving run enables QoS.
+    pub qos: QosClass,
+    /// Per-segment latency deadline in milliseconds (`@rt:40ms`). None
+    /// = no deadline: the session's requests are never shed.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SessionSpec {
     /// Spec with the given task and method (PH style, one episode, base
-    /// drafter).
+    /// drafter, interactive class, no deadline).
     pub fn new(task: Task, method: Method) -> Self {
         Self {
             task,
@@ -86,6 +94,8 @@ impl SessionSpec {
             method,
             episodes: 1,
             drafter: DrafterKind::Base,
+            qos: QosClass::default(),
+            deadline_ms: None,
         }
     }
 
@@ -104,6 +114,18 @@ impl SessionSpec {
     /// Builder: set the drafter identity label.
     pub fn with_drafter(mut self, drafter: DrafterKind) -> Self {
         self.drafter = drafter;
+        self
+    }
+
+    /// Builder: set the QoS class.
+    pub fn with_qos(mut self, qos: QosClass) -> Self {
+        self.qos = qos;
+        self
+    }
+
+    /// Builder: set the per-segment latency deadline (milliseconds).
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms.max(1));
         self
     }
 }
@@ -186,9 +208,11 @@ impl WorkloadMix {
 
     /// Parse a mix string: comma-separated sessions of the form
     /// `task[:method[:style[:episodes]]]`, each optionally suffixed
-    /// `*N` to repeat it N times. Defaults: `ts_dp`, `ph`, 1 episode.
+    /// `*N` to repeat it N times and `@class[:deadline]` to set the QoS
+    /// class and per-segment latency deadline (e.g. `@rt:40ms`).
+    /// Defaults: `ts_dp`, `ph`, 1 episode, interactive, no deadline.
     ///
-    /// Example: `lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2`.
+    /// Example: `lift:ts_dp*4@rt:40ms,push_t:vanilla@batch,kitchen:ts_dp:mh:2`.
     pub fn parse(s: &str) -> Result<Self> {
         let mut mix = Self::new();
         for entry in s.split(',') {
@@ -196,11 +220,38 @@ impl WorkloadMix {
             if entry.is_empty() {
                 continue;
             }
-            let (spec_str, reps) = match entry.split_once('*') {
+            // QoS suffix first: `task:method*N@class:deadline` — the
+            // class annotates the whole (possibly repeated) entry.
+            let (entry_spec, qos_str) = match entry.split_once('@') {
+                Some((head, q)) => (head.trim(), Some(q.trim())),
+                None => (entry, None),
+            };
+            let (qos, deadline_ms) = match qos_str {
+                None => (QosClass::default(), None),
+                Some(q) => {
+                    let (class_str, dl_str) = match q.split_once(':') {
+                        Some((c, d)) => (c.trim(), Some(d.trim())),
+                        None => (q, None),
+                    };
+                    let class = QosClass::parse(class_str).with_context(|| {
+                        format!(
+                            "unknown QoS class '{class_str}' in mix entry '{entry}' \
+                             (expected rt|interactive|batch)"
+                        )
+                    })?;
+                    let deadline = dl_str
+                        .map(|d| parse_deadline_ms(d).with_context(|| {
+                            format!("bad deadline in mix entry '{entry}'")
+                        }))
+                        .transpose()?;
+                    (class, deadline)
+                }
+            };
+            let (spec_str, reps) = match entry_spec.split_once('*') {
                 Some((head, n)) => {
                     (head, n.trim().parse::<usize>().context("bad session repeat count")?)
                 }
-                None => (entry, 1),
+                None => (entry_spec, 1),
             };
             let mut parts = spec_str.split(':');
             let task = parts
@@ -231,6 +282,8 @@ impl WorkloadMix {
             if reps == 0 {
                 bail!("session repeat count must be positive in '{entry}'");
             }
+            spec.qos = qos;
+            spec.deadline_ms = deadline_ms;
             mix = mix.sessions(spec, reps);
         }
         if mix.specs.is_empty() {
@@ -265,10 +318,30 @@ impl WorkloadMix {
     }
 }
 
+/// Parse a `--mix` deadline: `40ms`, `2s`, or a bare millisecond count.
+fn parse_deadline_ms(s: &str) -> Result<u64> {
+    let (digits, scale) = if let Some(d) = s.strip_suffix("ms") {
+        (d, 1u64)
+    } else if let Some(d) = s.strip_suffix('s') {
+        (d, 1000u64)
+    } else {
+        (s, 1u64)
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("deadline '{s}' is not an integer (use e.g. 40ms or 2s)"))?;
+    let ms = n.saturating_mul(scale);
+    anyhow::ensure!(ms > 0, "deadline '{s}' must be positive");
+    Ok(ms)
+}
+
 /// Canonical mix-string form: run-length-grouped
-/// `task:method:style:episodes[*N]` entries, comma-separated — always
-/// parseable back by [`WorkloadMix::parse`] into the same session list
-/// (drafter identity is a serve-time flag, not part of the grammar).
+/// `task:method:style:episodes[*N][@class[:Dms]]` entries,
+/// comma-separated — always parseable back by [`WorkloadMix::parse`]
+/// into the same session list (drafter identity is a serve-time flag,
+/// not part of the grammar; the QoS suffix is emitted only when the
+/// entry departs from the interactive/no-deadline default).
 impl std::fmt::Display for WorkloadMix {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut i = 0;
@@ -293,6 +366,12 @@ impl std::fmt::Display for WorkloadMix {
             )?;
             if reps > 1 {
                 write!(f, "*{reps}")?;
+            }
+            if spec.qos != QosClass::default() || spec.deadline_ms.is_some() {
+                write!(f, "@{}", spec.qos.name())?;
+                if let Some(ms) = spec.deadline_ms {
+                    write!(f, ":{ms}ms")?;
+                }
             }
             i += reps;
         }
@@ -609,6 +688,354 @@ pub fn mixed_load_sweep(
         .collect()
 }
 
+/// Per-class slice of a QoS load point.
+#[derive(Debug, Clone)]
+pub struct ClassLoadSlice {
+    /// Serving class this slice aggregates.
+    pub class: QosClass,
+    /// Requests offered (arrived) in this class.
+    pub offered: usize,
+    /// Requests served to completion.
+    pub served: usize,
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// Served requests that met their deadline (served requests without
+    /// a deadline always count as hits).
+    pub deadline_hits: usize,
+    /// Latency percentiles over *served* requests (seconds; 0 when the
+    /// class served nothing).
+    pub p50: f64,
+    /// p95 latency.
+    pub p95: f64,
+    /// p99 latency.
+    pub p99: f64,
+    /// Mean NFE per served request.
+    pub nfe: f64,
+}
+
+impl ClassLoadSlice {
+    /// Deadline-hit rate over *offered* requests — sheds and late
+    /// completions both count against it.
+    pub fn hit_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.deadline_hits as f64 / self.offered as f64
+        }
+    }
+}
+
+/// One point of the QoS saturation sweep: the open-loop replay of a
+/// classed arrival stream through a single-server queue, either in FIFO
+/// order with no shedding (the baseline) or with strict-priority
+/// scheduling plus deadline-aware admission control (`qos = true`).
+#[derive(Debug, Clone)]
+pub struct QosLoadPoint {
+    /// Offered load (requests/second).
+    pub offered_rate: f64,
+    /// Whether QoS scheduling/shedding was active for this point.
+    pub qos_enabled: bool,
+    /// Simulated makespan: first arrival to last completion (seconds).
+    pub makespan_secs: f64,
+    /// Per-class slices, priority order (only classes present in the
+    /// stream).
+    pub per_class: Vec<ClassLoadSlice>,
+    /// Draft acceptance rate across served speculative requests.
+    pub accept_rate: f64,
+}
+
+impl QosLoadPoint {
+    /// The slice for `class`, if the stream offered any.
+    pub fn class(&self, class: QosClass) -> Option<&ClassLoadSlice> {
+        self.per_class.iter().find(|s| s.class == class)
+    }
+
+    /// In-deadline goodput (useful completions/second): served requests
+    /// that met their deadline — or had none — divided by the simulated
+    /// makespan. Late completions are *not* goodput; this is the number
+    /// overload control exists to protect.
+    pub fn in_deadline_goodput(&self) -> f64 {
+        let good: usize = self.per_class.iter().map(|s| s.deadline_hits).sum();
+        good as f64 / self.makespan_secs.max(1e-9)
+    }
+
+    /// Total sheds across classes.
+    pub fn shed_total(&self) -> usize {
+        self.per_class.iter().map(|s| s.shed).sum()
+    }
+}
+
+/// Mean unloaded service time (seconds/request) of the stream on this
+/// denoiser: replays `n_cal` requests back-to-back (no queueing) and
+/// averages. `1.0 / estimate` is the server's saturation capacity in
+/// requests/second — the anchor the saturation sweep multiplies.
+pub fn estimate_service_secs(
+    den: &dyn Denoiser,
+    stream: &[SessionSpec],
+    pools: &[(SessionSpec, &[Vec<f32>])],
+    n_cal: usize,
+    seed: u64,
+) -> Result<f64> {
+    // An effectively-infinite arrival rate makes every request wait
+    // only on service, so fleet p50 ≈ service time; reuse the replay so
+    // calibration and measurement share one code path.
+    let point = run_mixed_load_point(
+        den,
+        stream,
+        pools,
+        Arrivals::Uniform(1e9),
+        n_cal.max(1),
+        seed,
+        None,
+    )?;
+    // Mean service from the makespan-free identity: with back-to-back
+    // arrivals, Σ latency_i = Σ_i (n_cal - i) * service ≈ n(n+1)/2 * s̄
+    // is awkward; p50 of per-request *compute* is what we want, and the
+    // simulated queue already measured it — recover it from goodput.
+    Ok((1.0 / point.fleet.goodput.max(1e-9)).max(1e-9))
+}
+
+/// Replay a classed arrival stream through a single-server queue
+/// simulation with **measured** service times, either FIFO with no
+/// shedding (`qos = false`, the baseline every class rides today) or
+/// with strict-priority class scheduling plus deadline-aware admission
+/// control (`qos = true`: expired requests are shed, and a deadline'd
+/// request whose remaining budget is smaller than the measured backlog
+/// ahead of it is rejected at admission instead of serving a guaranteed-
+/// late answer). The closed-loop fleet's `Priority` batcher adds a
+/// starvation-freedom aging rule on top; the open-loop model is strict
+/// priority, which bounds what aging can cost the lower classes.
+///
+/// NOTE: the replay model (arrival sampling, per-(task, style) pool
+/// cursors, measured service times) deliberately mirrors
+/// [`run_mixed_load_point`] — the FIFO leg here must stay comparable to
+/// the plain load sweep. A change to either replay must be mirrored in
+/// the other.
+pub fn run_qos_load_point(
+    den: &dyn Denoiser,
+    stream: &[SessionSpec],
+    pools: &[(SessionSpec, &[Vec<f32>])],
+    arrivals: Arrivals,
+    n_requests: usize,
+    seed: u64,
+    qos: bool,
+) -> Result<QosLoadPoint> {
+    assert!(!stream.is_empty(), "QoS stream needs at least one spec");
+    let rate = match arrivals {
+        Arrivals::Poisson(r) | Arrivals::Uniform(r) => r,
+    };
+    let mut rng = Rng::seed_from_u64(seed);
+
+    // Arrival timeline.
+    let mut arrival_times = Vec::with_capacity(n_requests);
+    let mut t = 0.0f64;
+    for _ in 0..n_requests {
+        let gap = match arrivals {
+            Arrivals::Uniform(r) => 1.0 / r,
+            Arrivals::Poisson(r) => {
+                let u = (1.0 - rng.uniform_f64()).max(1e-12);
+                -u.ln() / r
+            }
+        };
+        t += gap;
+        arrival_times.push(t);
+    }
+
+    let mut generators: BTreeMap<(usize, &'static str), Box<dyn Generator>> = BTreeMap::new();
+    let mut obs_cursor: BTreeMap<(usize, &'static str), usize> = BTreeMap::new();
+    let mut gauge = PressureGauge::new();
+
+    #[derive(Default)]
+    struct ClassAcc {
+        offered: usize,
+        served: usize,
+        shed: usize,
+        hits: usize,
+        latencies: Vec<f64>,
+        nfe: f64,
+    }
+    let mut acc: BTreeMap<usize, ClassAcc> = BTreeMap::new();
+    for i in 0..n_requests {
+        acc.entry(stream[i % stream.len()].qos.rank()).or_default().offered += 1;
+    }
+
+    // Event-driven single-server queue over simulated time. `pending`
+    // holds indices of arrived-but-unserved requests.
+    let mut clock = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut pending: Vec<usize> = Vec::new();
+    let mut total_drafts = 0usize;
+    let mut total_accepted = 0usize;
+    let mut makespan_end = 0.0f64;
+    let spec_of = |i: usize| stream[i % stream.len()];
+    let deadline_of = |i: usize| spec_of(i).deadline_ms.map(|ms| ms as f64 / 1000.0);
+
+    while next_arrival < n_requests || !pending.is_empty() {
+        if pending.is_empty() {
+            clock = clock.max(arrival_times[next_arrival]);
+        }
+        while next_arrival < n_requests && arrival_times[next_arrival] <= clock {
+            pending.push(next_arrival);
+            next_arrival += 1;
+        }
+
+        if qos {
+            // Deadline-aware load shedding: expired requests, and
+            // requests whose remaining budget is smaller than the
+            // estimated backlog that priority scheduling would serve
+            // ahead of them.
+            let est = gauge.service_estimate();
+            let mut kept = Vec::with_capacity(pending.len());
+            for &i in &pending {
+                let Some(dl) = deadline_of(i) else {
+                    kept.push(i);
+                    continue;
+                };
+                let remaining = arrival_times[i] + dl - clock;
+                let my_rank = spec_of(i).qos.rank();
+                let ahead = pending
+                    .iter()
+                    .filter(|&&j| {
+                        j != i
+                            && (spec_of(j).qos.rank() < my_rank
+                                || (spec_of(j).qos.rank() == my_rank && j < i))
+                    })
+                    .count();
+                if remaining <= 0.0 || (ahead as f64 + 1.0) * est > remaining {
+                    acc.entry(my_rank).or_default().shed += 1;
+                } else {
+                    kept.push(i);
+                }
+            }
+            pending = kept;
+            if pending.is_empty() {
+                continue;
+            }
+        }
+
+        // Select: strict (class rank, arrival) under QoS, pure arrival
+        // order otherwise.
+        let pick_pos = if qos {
+            pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &i)| (spec_of(i).qos.rank(), i))
+                .map(|(p, _)| p)
+                .expect("pending non-empty")
+        } else {
+            0 // arrival order: pending is pushed in arrival order
+        };
+        let i = pending.remove(pick_pos);
+        let spec = spec_of(i);
+        let pool = pools
+            .iter()
+            .find(|(s, _)| s.task == spec.task && s.style == spec.style)
+            .with_context(|| format!("no observation pool for spec {spec:?}"))?
+            .1;
+        let cursor = obs_cursor.entry((spec.task.index(), spec.style.name())).or_insert(0);
+        let obs = &pool[*cursor % pool.len()];
+        *cursor += 1;
+        debug_assert_eq!(obs.len(), OBS_DIM);
+
+        let s0 = Instant::now();
+        let cond = den.encode(obs)?;
+        let generator = generators
+            .entry((spec.task.index(), spec.method.name()))
+            .or_insert_with(|| make_generator(spec.method));
+        let mut trace = SegmentTrace::default();
+        generator.generate(den, &cond, &mut rng, &mut trace)?;
+        let service = s0.elapsed().as_secs_f64();
+        gauge.observe(service);
+
+        clock += service;
+        makespan_end = clock;
+        let latency = clock - arrival_times[i];
+        let hit = match deadline_of(i) {
+            Some(dl) => latency <= dl,
+            None => true,
+        };
+        let slot = acc.entry(spec.qos.rank()).or_default();
+        slot.served += 1;
+        slot.hits += hit as usize;
+        slot.latencies.push(latency);
+        slot.nfe += trace.nfe;
+        total_drafts += trace.drafts();
+        total_accepted += trace.accepted();
+    }
+
+    let per_class = acc
+        .into_iter()
+        .map(|(rank, a)| ClassLoadSlice {
+            class: QosClass::from_rank(rank).expect("rank from a QosClass"),
+            offered: a.offered,
+            served: a.served,
+            shed: a.shed,
+            deadline_hits: a.hits,
+            p50: percentile(&a.latencies, 0.5),
+            p95: percentile(&a.latencies, 0.95),
+            p99: percentile(&a.latencies, 0.99),
+            nfe: a.nfe / a.served.max(1) as f64,
+        })
+        .collect();
+    Ok(QosLoadPoint {
+        offered_rate: rate,
+        qos_enabled: qos,
+        makespan_secs: makespan_end.max(1e-9),
+        per_class,
+        accept_rate: if total_drafts == 0 {
+            0.0
+        } else {
+            total_accepted as f64 / total_drafts as f64
+        },
+    })
+}
+
+/// One rung of the saturation sweep: the same offered load replayed
+/// FIFO (no QoS) and with QoS, side by side.
+#[derive(Debug, Clone)]
+pub struct SaturationPoint {
+    /// Offered load as a multiple of the estimated saturation capacity.
+    pub multiple: f64,
+    /// Offered load (requests/second).
+    pub rate: f64,
+    /// FIFO baseline (no priorities, no shedding).
+    pub fifo: QosLoadPoint,
+    /// QoS-enabled replay (priority + deadline-aware shedding).
+    pub qos: QosLoadPoint,
+}
+
+/// Open-loop saturation sweep (`ts-dp load-sweep --saturate`): drive
+/// the classed stream at the given multiples of the server's capacity
+/// (`1 / service_secs`, from one [`estimate_service_secs`] calibration
+/// the caller shares with its deadline choices — one measurement
+/// anchors both) — past 1.0 the queue grows without bound and the FIFO
+/// baseline's deadlines collapse; QoS must keep realtime hit rate and
+/// in-deadline goodput up by shedding and reordering instead.
+pub fn saturation_sweep(
+    den: &dyn Denoiser,
+    stream: &[SessionSpec],
+    pools: &[(SessionSpec, &[Vec<f32>])],
+    multiples: &[f64],
+    n_requests: usize,
+    seed: u64,
+    service_secs: f64,
+) -> Result<Vec<SaturationPoint>> {
+    let capacity = 1.0 / service_secs.max(1e-9);
+    multiples
+        .iter()
+        .map(|&m| {
+            let rate = capacity * m.max(1e-3);
+            let arr = Arrivals::Uniform(rate);
+            Ok(SaturationPoint {
+                multiple: m,
+                rate,
+                fifo: run_qos_load_point(den, stream, pools, arr, n_requests, seed, false)?,
+                qos: run_qos_load_point(den, stream, pools, arr, n_requests, seed, true)?,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -777,8 +1204,8 @@ mod tests {
     }
 
     /// Property: Display always parses back to the identical spec list,
-    /// for random mixes over every task/method/style and episode/repeat
-    /// counts.
+    /// for random mixes over every task/method/style/QoS-class and
+    /// episode/repeat/deadline counts.
     #[test]
     fn prop_mix_display_parse_roundtrip() {
         crate::util::testing::check_property("mix_roundtrip", 100, |rng| {
@@ -788,9 +1215,13 @@ mod tests {
                 let task = Task::ALL[rng.below(Task::ALL.len())];
                 let method = Method::ALL[rng.below(Method::ALL.len())];
                 let style = if rng.coin(0.5) { DemoStyle::Ph } else { DemoStyle::Mh };
-                let spec = SessionSpec::new(task, method)
+                let mut spec = SessionSpec::new(task, method)
                     .with_style(style)
-                    .with_episodes(1 + rng.below(3));
+                    .with_episodes(1 + rng.below(3))
+                    .with_qos(QosClass::ALL[rng.below(QosClass::ALL.len())]);
+                if rng.coin(0.5) {
+                    spec = spec.with_deadline_ms(1 + rng.below(500) as u64);
+                }
                 mix = mix.sessions(spec, 1 + rng.below(4));
             }
             let shown = mix.to_string();
@@ -798,6 +1229,96 @@ mod tests {
                 .unwrap_or_else(|e| panic!("'{shown}' failed to reparse: {e:#}"));
             assert_eq!(reparsed.build(), mix.build(), "mix string: {shown}");
         });
+    }
+
+    #[test]
+    fn qos_suffix_parses_with_aliases_and_deadlines() {
+        let specs = WorkloadMix::parse("lift:ts_dp*4@rt:40ms,push_t:vanilla@batch,can@int:2s")
+            .unwrap()
+            .build();
+        assert_eq!(specs.len(), 6);
+        assert!(specs[..4]
+            .iter()
+            .all(|s| s.qos == QosClass::Realtime && s.deadline_ms == Some(40)));
+        assert_eq!(specs[4].qos, QosClass::Batch);
+        assert_eq!(specs[4].deadline_ms, None);
+        assert_eq!(specs[5].qos, QosClass::Interactive);
+        assert_eq!(specs[5].deadline_ms, Some(2000));
+        // Bare millisecond counts work too.
+        let bare = WorkloadMix::parse("lift@rt:25").unwrap().build();
+        assert_eq!(bare[0].deadline_ms, Some(25));
+        // Errors are actionable.
+        let err = WorkloadMix::parse("lift@warp").unwrap_err();
+        assert!(err.to_string().contains("unknown QoS class"), "{err:#}");
+        let err = WorkloadMix::parse("lift@rt:soon").unwrap_err();
+        assert!(err.to_string().contains("bad deadline"), "{err:#}");
+        assert!(WorkloadMix::parse("lift@rt:0ms").is_err());
+    }
+
+    #[test]
+    fn qos_suffix_displays_canonically() {
+        let mix = WorkloadMix::new()
+            .sessions(
+                SessionSpec::new(Task::Lift, Method::TsDp)
+                    .with_qos(QosClass::Realtime)
+                    .with_deadline_ms(40),
+                4,
+            )
+            .session(SessionSpec::new(Task::PushT, Method::Vanilla).with_qos(QosClass::Batch))
+            .session(SessionSpec::new(Task::Can, Method::TsDp));
+        let s = mix.to_string();
+        assert_eq!(
+            s,
+            "lift:ts_dp:ph:1*4@rt:40ms,push_t:vanilla:ph:1@batch,can:ts_dp:ph:1"
+        );
+        assert_eq!(WorkloadMix::parse(&s).unwrap().build(), mix.build());
+    }
+
+    #[test]
+    fn saturation_sweep_compares_fifo_and_qos_per_class() {
+        // Small smoke of the open-loop machinery (the overload-control
+        // assertions live in tests/qos_serving.rs): both replays account
+        // for every offered request, per class.
+        let den = MockDenoiser::with_bias(0.05);
+        let stream = [
+            SessionSpec::new(Task::Lift, Method::TsDp)
+                .with_qos(QosClass::Realtime)
+                .with_deadline_ms(200),
+            SessionSpec::new(Task::Lift, Method::TsDp),
+            SessionSpec::new(Task::Lift, Method::Vanilla).with_qos(QosClass::Batch),
+        ];
+        let pools = record_mixed_pools(&stream, 8, 9);
+        let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+            pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+        let service =
+            estimate_service_secs(&den, &stream, &pool_refs, 6, 10).unwrap();
+        assert!(service > 0.0);
+        let sweep =
+            saturation_sweep(&den, &stream, &pool_refs, &[0.5, 2.0], 12, 10, service)
+                .unwrap();
+        assert_eq!(sweep.len(), 2);
+        for point in &sweep {
+            assert!(point.rate > 0.0);
+            for p in [&point.fifo, &point.qos] {
+                assert_eq!(p.per_class.len(), 3, "one slice per class present");
+                let offered: usize = p.per_class.iter().map(|s| s.offered).sum();
+                assert_eq!(offered, 12);
+                for s in &p.per_class {
+                    assert_eq!(
+                        s.offered,
+                        s.served + s.shed,
+                        "class {:?}: offered must equal served + shed",
+                        s.class
+                    );
+                }
+            }
+            // FIFO never sheds — that is the baseline's defining trait.
+            assert_eq!(point.fifo.shed_total(), 0);
+        }
+        // Priority order of the slices.
+        let ranks: Vec<usize> =
+            sweep[0].qos.per_class.iter().map(|s| s.class.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //! both from one constructor keeps the pinned test and the printed
 //! bench measuring the same thing.
 
+use crate::config::{Method, Task};
+use crate::coordinator::qos::QosClass;
+use crate::coordinator::workload::SessionSpec;
 use crate::policy::mock::MockDenoiser;
 use crate::scheduler::SchedulerPolicy;
 use crate::util::Rng;
@@ -33,11 +36,47 @@ pub fn misadapted_scheduler() -> SchedulerPolicy {
     p
 }
 
+/// The canned overload mix shared by `tests/qos_serving.rs` (which
+/// *asserts* that QoS beats the FIFO baseline past saturation) and
+/// `benches/qos.rs` (which *reports* it, into `BENCH_qos.json`): equal
+/// thirds of realtime TS-DP with a tight deadline, interactive TS-DP
+/// with a loose one, and deadline-free batch vanilla — three classes
+/// contending for one server.
+///
+/// Deadlines are parameters (not constants) because the right tightness
+/// depends on the measured service time of the machine running the
+/// scenario: callers calibrate with
+/// [`crate::coordinator::workload::estimate_service_secs`] and pass
+/// e.g. 4× the unloaded service time for realtime.
+pub fn overload_stream(rt_deadline_ms: u64, interactive_deadline_ms: u64) -> Vec<SessionSpec> {
+    vec![
+        SessionSpec::new(Task::Lift, Method::TsDp)
+            .with_qos(QosClass::Realtime)
+            .with_deadline_ms(rt_deadline_ms),
+        SessionSpec::new(Task::Lift, Method::TsDp)
+            .with_deadline_ms(interactive_deadline_ms),
+        SessionSpec::new(Task::Lift, Method::Vanilla).with_qos(QosClass::Batch),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::K_MAX;
     use crate::scheduler::features::FEAT_DIM;
+
+    #[test]
+    fn overload_stream_spans_the_three_classes() {
+        let stream = overload_stream(40, 160);
+        assert_eq!(stream.len(), 3);
+        let classes: Vec<QosClass> = stream.iter().map(|s| s.qos).collect();
+        assert!(classes.contains(&QosClass::Realtime));
+        assert!(classes.contains(&QosClass::Interactive));
+        assert!(classes.contains(&QosClass::Batch));
+        assert_eq!(stream[0].deadline_ms, Some(40));
+        assert_eq!(stream[1].deadline_ms, Some(160));
+        assert_eq!(stream[2].deadline_ms, None, "batch is deadline-free");
+    }
 
     #[test]
     fn misadapted_scheduler_means_what_it_says() {

@@ -53,15 +53,17 @@ USAGE: ts-dp <command> [options]
 COMMANDS:
   gen-demos        --out DIR [--episodes N] [--seed S]
   serve            --task T --style ph|mh [--method M] [--sessions N] [--episodes N]
-                   | --mix \"lift:ts_dp*4,push_t:vanilla,kitchen:ts_dp:mh:2\"
-                   [--shards N] [--policy fair|fifo] [--max-batch N]
+                   | --mix \"lift:ts_dp*4@rt:40ms,push_t:vanilla@batch\"
+                   [--shards N] [--policy fair|fifo|priority] [--max-batch N]
                    [--batch-window-us U] [--queue N] [--adaptive]
                    [--adapt frozen|online] [--learner-min-batch N]
                    [--learner-buffer N] [--checkpoint-every N]
                    [--adapted-policy-out FILE] [--drafter FILE]
+                   [--qos [--degrade-pressure S] [--aging-limit N]]
   load-sweep       --task T [--method M] | --mix SPEC
                    [--rates 1,5,20] [--requests N] [--drafter FILE]
                    [--scheduler-policy FILE]
+                   [--saturate [--multiples 0.5,1,2,4]]
   episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
                    [--drafter FILE]
   train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
@@ -72,9 +74,18 @@ COMMANDS:
   figure           --id 3|4|5|6 [--out-dir DIR]
 
 Workload mixes (--mix): comma-separated task[:method[:style[:episodes]]]
-entries, '*N' repeats a session; mutually exclusive with
---task/--style/--method/--sessions/--episodes. --shards N serves the
-mix over N engine shards, each owning its own model replica.
+entries, '*N' repeats a session, '@class[:deadline]' sets the QoS class
+(rt|interactive|batch) and per-segment latency deadline (e.g. @rt:40ms);
+mutually exclusive with --task/--style/--method/--sessions/--episodes.
+--shards N serves the mix over N engine shards, each owning its own
+model replica.
+
+QoS/overload control: `serve --qos` enables deadline-aware admission
+(typed load shedding, accounted per class: offered == served + shed)
+and pressure-gated degradation toward drafter-heavy operation;
+`--policy priority` serves rt > interactive > batch with an aging rule
+so batch is delayed, never starved. `load-sweep --saturate` drives the
+stream past measured capacity, FIFO vs QoS side by side.
 
 Drafter swapping: `distill-drafter` trains an in-crate Transformer
 drafter against the base model and saves a JSON checkpoint;

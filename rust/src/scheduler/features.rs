@@ -6,7 +6,7 @@
 use crate::config::{SpecParams, K_MAX, OBS_DIM};
 
 /// Feature vector length fed to the PPO policy/value nets.
-pub const FEAT_DIM: usize = OBS_DIM + 10;
+pub const FEAT_DIM: usize = OBS_DIM + 11;
 
 /// Rolling state the feature extractor keeps between decisions.
 #[derive(Debug, Clone)]
@@ -19,6 +19,11 @@ pub struct FeatureState {
     pub last_params: SpecParams,
     /// Mean |ee velocity| over the executed steps of the last segment.
     pub recent_speed: f32,
+    /// Serving-shard pressure (estimated seconds of backlog) reported
+    /// with the last reply — the overload signal that lets an adapted
+    /// scheduler trade quality for in-deadline goodput. Always 0.0 on
+    /// QoS-disabled runs, keeping frozen decisions bit-identical.
+    pub queue_pressure: f32,
 }
 
 impl Default for FeatureState {
@@ -28,6 +33,7 @@ impl Default for FeatureState {
             recent_drafts: 0.0,
             last_params: SpecParams::fixed_default(),
             recent_speed: 0.0,
+            queue_pressure: 0.0,
         }
     }
 }
@@ -51,6 +57,10 @@ pub fn features(obs: &[f32], progress: f32, phase_frac: f32, st: &FeatureState) 
     f.push(st.last_params.stages.k_late as f32 / K_MAX as f32);
     f.push(st.last_params.lambda);
     f.push(st.last_params.sigma_scale / 8.0);
+    // Backlog is open-ended; squash seconds-of-backlog to [0, 4]
+    // (saturating at extreme pressure under f32 rounding), with most
+    // resolution in the 0..250ms band control loops care about.
+    f.push(4.0 * st.queue_pressure.max(0.0) / (st.queue_pressure.max(0.0) + 0.25));
     debug_assert_eq!(f.len(), FEAT_DIM);
     f
 }
@@ -79,5 +89,23 @@ mod tests {
         let f = features(&obs, 0.0, 0.0, &st);
         assert!((f[OBS_DIM + 3] - 0.42).abs() < 1e-6);
         assert!((f[OBS_DIM + 4] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn queue_pressure_is_squashed_and_defaults_to_zero() {
+        let obs = vec![0.0; OBS_DIM];
+        let st = FeatureState::default();
+        let f = features(&obs, 0.0, 0.0, &st);
+        assert_eq!(f[FEAT_DIM - 1], 0.0, "no pressure reported = neutral feature");
+        let mut hot = FeatureState::default();
+        hot.queue_pressure = 0.25; // 250 ms of backlog = midpoint
+        let f = features(&obs, 0.0, 0.0, &hot);
+        assert!((f[FEAT_DIM - 1] - 2.0).abs() < 1e-6);
+        hot.queue_pressure = 1e3; // huge backlog: approaches the cap
+        let f = features(&obs, 0.0, 0.0, &hot);
+        assert!(f[FEAT_DIM - 1] > 3.9 && f[FEAT_DIM - 1] <= 4.0);
+        hot.queue_pressure = 1e9; // f32 saturation: exactly the cap
+        let f = features(&obs, 0.0, 0.0, &hot);
+        assert!(f[FEAT_DIM - 1] <= 4.0, "bounded even at absurd pressure");
     }
 }

@@ -103,6 +103,20 @@ impl SchedulerPolicy {
         let mut rng = Rng::seed_from_u64(0);
         let pi_sizes = v.get("pi_sizes")?.as_usize_vec()?;
         let value_sizes = v.get("value_sizes")?.as_usize_vec()?;
+        // The checkpoint must match this build's feature schema:
+        // serving feeds FEAT_DIM-long vectors, so a stale input width
+        // (e.g. a policy trained before the queue-pressure feature was
+        // added) must fail loudly here, not truncate silently at
+        // inference.
+        anyhow::ensure!(
+            pi_sizes.first() == Some(&FEAT_DIM) && value_sizes.first() == Some(&FEAT_DIM),
+            "scheduler checkpoint input dim (pi {:?}, value {:?}) != FEAT_DIM {} — \
+             the observation feature schema changed since this policy was trained; \
+             retrain it (`ts-dp train-scheduler`) or re-adapt (`serve --adapt online`)",
+            pi_sizes.first(),
+            value_sizes.first(),
+            FEAT_DIM
+        );
         let mut pi = Mlp::init(&pi_sizes, &mut rng);
         pi.unflatten(&v.get("pi")?.as_f32_vec()?);
         let mut value = Mlp::init(&value_sizes, &mut rng);
@@ -143,6 +157,24 @@ mod tests {
         assert_eq!(hi.stages.k_mid, K_MAX);
         assert!(lo.sigma_scale < 0.6 && hi.sigma_scale > 7.9);
         assert!(lo.lambda < 2e-3 && hi.lambda > 0.7);
+    }
+
+    #[test]
+    fn stale_feature_dim_checkpoints_are_rejected() {
+        // A checkpoint recorded under an older feature schema (e.g.
+        // before the queue-pressure feature) must fail to load with an
+        // actionable message, never truncate features silently.
+        let mut rng = Rng::seed_from_u64(9);
+        let p = SchedulerPolicy::init(&mut rng);
+        let mut v = p.to_json();
+        if let Json::Obj(ref mut map) = v {
+            map.insert(
+                "pi_sizes".into(),
+                Json::usizes(vec![FEAT_DIM - 1, 64, 64, ACT_N]),
+            );
+        }
+        let err = SchedulerPolicy::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("feature schema"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Machine-readable bench output: `BENCH_<name>.json` at the repo root.
+//!
+//! Benches used to print tables and nothing else, so the perf
+//! trajectory never accumulated. Every bench harness now also emits a
+//! JSON document CI can parse, archive, and diff against a committed
+//! baseline (`.github/workflows/ci.yml` perf-smoke job +
+//! `scripts/check_bench_regression.py`).
+//!
+//! Schema (`ts-dp-bench-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "ts-dp-bench-v1",
+//!   "bench": "qos",
+//!   "records": [
+//!     {
+//!       "name": "saturate[mode=qos,mult=2]",
+//!       "params": { "mode": "qos", "mult": "2" },
+//!       "p50_s": 0.0042, "p95_s": 0.0187, "p99_s": 0.0312,
+//!       "nfe": 24.8, "accept_rate": 0.91, "goodput_rps": 103.2
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `name` is unique per record (it embeds the distinguishing params) —
+//! the regression checker keys on `bench/name`. Latency fields are
+//! seconds; `goodput_rps` is completed useful requests per second (for
+//! QoS benches: completions that met their deadline); `accept_rate` is
+//! the draft acceptance rate in [0, 1] (0 when the measurement has no
+//! speculative leg).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One measurement row of a bench document.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Unique record name within the bench (embed the parameters, e.g.
+    /// `serve_batched[max_batch=8]`).
+    pub name: String,
+    /// The parameters as key/value strings (machine-filterable echo of
+    /// what `name` embeds).
+    pub params: Vec<(String, String)>,
+    /// p50 latency (seconds).
+    pub p50_s: f64,
+    /// p95 latency (seconds).
+    pub p95_s: f64,
+    /// p99 latency (seconds).
+    pub p99_s: f64,
+    /// Mean NFE per request/segment.
+    pub nfe: f64,
+    /// Draft acceptance rate in [0, 1] (0 = not speculative).
+    pub accept_rate: f64,
+    /// Useful completions per second.
+    pub goodput_rps: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "params",
+                Json::Obj(
+                    self.params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("nfe", Json::Num(self.nfe)),
+            ("accept_rate", Json::Num(self.accept_rate)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+        ])
+    }
+}
+
+/// Collects [`BenchRecord`]s for one bench binary and writes
+/// `BENCH_<bench>.json` at the repository root.
+#[derive(Debug)]
+pub struct BenchSink {
+    bench: String,
+    records: Vec<BenchRecord>,
+}
+
+impl BenchSink {
+    /// Empty sink for the named bench (`speculative`, `qos`, …).
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one record.
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    /// Recorded row count.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The bench document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("ts-dp-bench-v1".into())),
+            ("bench", Json::Str(self.bench.clone())),
+            ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Write the document to `dir/BENCH_<bench>.json` and return the
+    /// path.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        self.to_json()
+            .save(&path)
+            .with_context(|| format!("writing bench output {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Write the document at the repository root (the crate directory's
+    /// parent — benches run from the crate, the perf trajectory lives
+    /// at the top level where CI archives it).
+    pub fn write(&self) -> Result<PathBuf> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .context("crate directory has a parent")?
+            .to_path_buf();
+        self.write_to(&root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    fn record(name: &str, p95: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            params: vec![("max_batch".into(), "8".into())],
+            p50_s: p95 / 2.0,
+            p95_s: p95,
+            p99_s: p95 * 1.5,
+            nfe: 25.0,
+            accept_rate: 0.9,
+            goodput_rps: 120.0,
+        }
+    }
+
+    #[test]
+    fn bench_document_round_trips_through_the_json_layer() {
+        let mut sink = BenchSink::new("unit");
+        assert!(sink.is_empty());
+        sink.push(record("serve[max_batch=8]", 0.02));
+        sink.push(record("serve[max_batch=16]", 0.01));
+        assert_eq!(sink.len(), 2);
+        let dir = TempDir::new("benchjson");
+        let path = sink.write_to(dir.path()).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let doc = Json::load(&path).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "ts-dp-bench-v1");
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        let records = doc.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 2);
+        let r0 = &records[0];
+        assert_eq!(r0.get("name").unwrap().as_str().unwrap(), "serve[max_batch=8]");
+        assert!((r0.get("p95_s").unwrap().as_f64().unwrap() - 0.02).abs() < 1e-12);
+        assert!((r0.get("accept_rate").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(
+            r0.get("params").unwrap().get("max_batch").unwrap().as_str().unwrap(),
+            "8"
+        );
+    }
+}

@@ -28,15 +28,26 @@ pub enum Json {
 }
 
 /// Parse / access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
     /// Syntax error with byte offset.
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
     /// Missing key or wrong type during typed access.
-    #[error("json access error: {0}")]
     Access(String),
 }
+
+// Hand-rolled Display/Error (this build environment vendors no
+// `thiserror`; `anyhow` is the only external dependency).
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "json parse error at byte {at}: {msg}"),
+            JsonError::Access(msg) => write!(f, "json access error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------- constructors ----------

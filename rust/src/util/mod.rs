@@ -1,5 +1,6 @@
 //! Small shared utilities (deterministic RNG, math helpers, tensor I/O).
 
+pub mod benchjson;
 pub mod benchtool;
 pub mod cli;
 pub mod json;

@@ -16,6 +16,12 @@
 //! `TSDP_BLESS_GOLDEN=1 cargo test --test golden_trace` and commit the
 //! diff — the point is that such diffs are loud and reviewed, never
 //! silent.
+//!
+//! CI hardening: with `TSDP_REQUIRE_GOLDEN=1` (set in CI) a missing
+//! snapshot **fails** instead of bootstrapping, so the golden gate can
+//! never silently self-bless on a fresh checkout — the CI guard step
+//! bootstraps the file explicitly, uploads it as a workflow artifact,
+//! and fails the job with instructions to commit it.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -162,6 +168,21 @@ fn golden_trace_pins_served_actions() {
     let path = snapshot_path();
     let bless = std::env::var_os("TSDP_BLESS_GOLDEN").is_some();
     if bless || !path.exists() {
+        // Strict mode (CI): a missing snapshot is a FAILURE, never a
+        // silent self-bless — a gate that blesses whatever a fresh
+        // checkout produces pins nothing. Explicit blessing stays
+        // allowed (that is the reviewed re-bless flow).
+        let require = matches!(
+            std::env::var("TSDP_REQUIRE_GOLDEN"), Ok(v) if !v.is_empty() && v != "0"
+        );
+        assert!(
+            bless || !require,
+            "golden snapshot {} is missing and TSDP_REQUIRE_GOLDEN is set.\n\
+             Bootstrap it locally (plain `cargo test --test golden_trace`, or\n\
+             TSDP_BLESS_GOLDEN=1 to force) and COMMIT the file — the CI guard\n\
+             step uploads a bootstrapped copy as a workflow artifact.",
+            path.display()
+        );
         std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir tests/golden");
         std::fs::write(&path, rendered).expect("write golden snapshot");
         println!(

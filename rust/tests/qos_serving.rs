@@ -1,0 +1,272 @@
+//! Deadline-aware QoS acceptance suite.
+//!
+//! Three contracts, matching the overload-control design:
+//!
+//! 1. **Overload ordering** (open loop): at ≥2× the server's measured
+//!    capacity, the QoS replay (priority + deadline-aware shedding)
+//!    strictly beats the FIFO baseline on realtime deadline-hit rate
+//!    AND on in-deadline goodput, on the shared canned scenario from
+//!    `harness::scenarios::overload_stream`.
+//! 2. **Accounting** (open + closed loop): every offered request is
+//!    served or shed with a typed reason — `offered == served + shed`
+//!    per class — and sheds/degradations surface in
+//!    `ServerMetrics::summary()`.
+//! 3. **Inertness when disabled**: with QoS off, class/deadline
+//!    annotations and the `Priority` dispatch policy change *nothing* —
+//!    served bits, NFE, and summaries are identical to the pre-QoS
+//!    fleet (the shard-invariance and golden-trace contracts ride on
+//!    this).
+//!
+//! Runs entirely against the analytic `MockDenoiser` (no artifacts).
+
+use std::time::Duration;
+use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::qos::{QosClass, QosConfig};
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{
+    estimate_service_secs, record_mixed_pools, run_qos_load_point, Arrivals, SessionSpec,
+    WorkloadMix,
+};
+use ts_dp::harness::scenarios::overload_stream;
+use ts_dp::policy::mock::MockDenoiser;
+
+/// Calibrated overload scenario: deadlines scaled to this machine's
+/// measured unloaded service time (4× for realtime, 16× for
+/// interactive), so the "can the fleet meet deadlines?" question is
+/// about scheduling, not about the host's absolute speed.
+fn calibrated_scenario(
+    den: &MockDenoiser,
+) -> (Vec<SessionSpec>, Vec<(SessionSpec, Vec<Vec<f32>>)>, f64) {
+    let probe = overload_stream(1_000, 4_000);
+    let pools = record_mixed_pools(&probe, 16, 11);
+    let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+        pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+    let service = estimate_service_secs(den, &probe, &pool_refs, 9, 12).expect("calibration");
+    let rt_ms = ((service * 4.0 * 1000.0).ceil() as u64).max(1);
+    let stream = overload_stream(rt_ms, rt_ms * 4);
+    // Pools key on (task, style); deadlines don't change them.
+    (stream, pools, service)
+}
+
+#[test]
+fn qos_beats_fifo_past_saturation() {
+    // Acceptance criterion: with QoS enabled, realtime-class
+    // deadline-hit rate and in-deadline goodput strictly exceed the
+    // FIFO baseline at >= 2x capacity load.
+    let den = MockDenoiser::with_bias(0.05);
+    let (stream, pools, service) = calibrated_scenario(&den);
+    let pool_refs: Vec<(SessionSpec, &[Vec<f32>])> =
+        pools.iter().map(|(s, p)| (*s, p.as_slice())).collect();
+    let rate = 2.0 / service; // 2x the measured capacity
+    let n = 60;
+    let fifo =
+        run_qos_load_point(&den, &stream, &pool_refs, Arrivals::Uniform(rate), n, 21, false)
+            .expect("fifo replay");
+    let qos =
+        run_qos_load_point(&den, &stream, &pool_refs, Arrivals::Uniform(rate), n, 21, true)
+            .expect("qos replay");
+
+    let fifo_rt = fifo.class(QosClass::Realtime).expect("rt offered");
+    let qos_rt = qos.class(QosClass::Realtime).expect("rt offered");
+    assert!(
+        qos_rt.hit_rate() > fifo_rt.hit_rate(),
+        "realtime deadline-hit rate must improve under QoS: qos {:.3} vs fifo {:.3}",
+        qos_rt.hit_rate(),
+        fifo_rt.hit_rate()
+    );
+    assert!(
+        qos.in_deadline_goodput() > fifo.in_deadline_goodput(),
+        "in-deadline goodput must improve under QoS: qos {:.3}/s vs fifo {:.3}/s",
+        qos.in_deadline_goodput(),
+        fifo.in_deadline_goodput()
+    );
+    // The baseline's defining traits: arrival order, nothing shed.
+    assert_eq!(fifo.shed_total(), 0);
+    // Accounting holds on both replays, per class.
+    for p in [&fifo, &qos] {
+        let offered: usize = p.per_class.iter().map(|s| s.offered).sum();
+        assert_eq!(offered, n);
+        for s in &p.per_class {
+            assert_eq!(
+                s.offered,
+                s.served + s.shed,
+                "{:?} ({}): offered == served + shed",
+                s.class,
+                if p.qos_enabled { "qos" } else { "fifo" }
+            );
+            assert!(s.deadline_hits <= s.served, "hits only count served requests");
+        }
+    }
+    // Deadline-free batch work is never shed — delayed, not dropped.
+    let qos_batch = qos.class(QosClass::Batch).expect("batch offered");
+    assert_eq!(qos_batch.shed, 0, "no deadline = nothing to shed against");
+    assert_eq!(qos_batch.served, qos_batch.offered);
+}
+
+#[test]
+fn closed_loop_qos_sheds_are_typed_and_accounted() {
+    // Saturate a 1-slot shard with realtime sessions whose deadline is
+    // unmeetable once the queue has any depth: admission control must
+    // shed (typed), sessions must keep running on held plans, and the
+    // books must balance: offered == served + shed, fleet-wide and in
+    // every session's report.
+    let workload = WorkloadMix::new()
+        .sessions(
+            SessionSpec::new(Task::Lift, Method::TsDp)
+                .with_qos(QosClass::Realtime)
+                .with_deadline_ms(1),
+            4,
+        )
+        .build();
+    let opts = ServeOptions {
+        workload,
+        shards: 1,
+        max_batch: 1,
+        policy: Policy::Priority,
+        batch_window: Duration::from_micros(0),
+        seed: 5,
+        qos: QosConfig { enabled: true, ..QosConfig::default() },
+        ..ServeOptions::default()
+    };
+    let report = serve_with(|_| MockDenoiser::with_bias(0.05), &opts).unwrap();
+    let rt = report.metrics.qos_class(QosClass::Realtime).expect("rt class accounted");
+    assert_eq!(
+        rt.offered,
+        rt.served + rt.shed_total(),
+        "closed-loop conservation: offered == served + shed"
+    );
+    assert!(
+        report.metrics.shed_total() > 0,
+        "a 1ms deadline on a saturated shard must shed: {}",
+        report.metrics.summary()
+    );
+    // Session-side and shard-side books agree.
+    let session_sheds: usize = report.sessions.iter().map(|s| s.sheds).sum();
+    assert_eq!(session_sheds as u64, report.metrics.shed_total());
+    // Sessions kept controlling their envs on held plans.
+    for s in &report.sessions {
+        assert!(s.sheds > 0 || s.segments > 0, "session {} did nothing", s.session);
+    }
+    // Sheds and the per-class breakdown surface in the summary.
+    let summary = report.metrics.summary();
+    assert!(summary.contains("qos=[rt:"), "{summary}");
+    assert!(summary.contains("shed="), "{summary}");
+    assert!(summary.contains("in-deadline-goodput="), "{summary}");
+}
+
+#[test]
+fn degradation_engages_under_pressure_and_cuts_compute() {
+    // Deadline-free sessions under a microscopic degrade threshold:
+    // nothing sheds, but everything admitted after the gauge warms up
+    // runs drafter-heavy — degraded counters climb and NFE/segment
+    // drops strictly below the undegraded fleet's.
+    let mk_opts = |qos: QosConfig| ServeOptions {
+        workload: WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1).build(),
+        shards: 1,
+        max_batch: 8,
+        seed: 9,
+        qos,
+        ..ServeOptions::default()
+    };
+    let plain = serve_with(
+        |_| MockDenoiser::with_bias(0.05),
+        &mk_opts(QosConfig::default()),
+    )
+    .unwrap();
+    let degraded = serve_with(
+        |_| MockDenoiser::with_bias(0.05),
+        &mk_opts(QosConfig { enabled: true, degrade_pressure: 1e-9, aging_limit: 8 }),
+    )
+    .unwrap();
+    assert_eq!(plain.metrics.degraded_total(), 0);
+    assert!(
+        degraded.metrics.degraded_total() > 0,
+        "pressure above threshold must degrade admissions: {}",
+        degraded.metrics.summary()
+    );
+    assert_eq!(degraded.metrics.shed_total(), 0, "no deadlines = no sheds");
+    let nfe_per = |r: &ServeReport| r.metrics.total_nfe / r.metrics.requests.max(1) as f64;
+    assert!(
+        nfe_per(&degraded) < nfe_per(&plain),
+        "drafter-heavy degradation must cut NFE/segment: {} vs {}",
+        nfe_per(&degraded),
+        nfe_per(&plain)
+    );
+    assert!(degraded.metrics.summary().contains("degr="), "{}", degraded.metrics.summary());
+}
+
+#[test]
+fn disabled_qos_is_bit_identical_to_the_pre_qos_fleet() {
+    // Class/deadline annotations and the Priority policy must be inert
+    // without --qos: same digests, same NFE, no sheds, no QoS summary
+    // section — for any fleet shape. This is the contract that lets the
+    // shard-invariance and golden-trace suites stand unchanged.
+    let plain_workload = || {
+        WorkloadMix::new()
+            .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+            .session(SessionSpec::new(Task::PushT, Method::TsDp))
+            .session(SessionSpec::new(Task::PushT, Method::Vanilla))
+            .build()
+    };
+    // The same workload, annotated with classes and (inert) deadlines.
+    let annotated_workload = || {
+        WorkloadMix::new()
+            .sessions(
+                SessionSpec::new(Task::Lift, Method::TsDp)
+                    .with_qos(QosClass::Realtime)
+                    .with_deadline_ms(1),
+                2,
+            )
+            .session(
+                SessionSpec::new(Task::PushT, Method::TsDp).with_qos(QosClass::Batch),
+            )
+            .session(
+                SessionSpec::new(Task::PushT, Method::Vanilla).with_deadline_ms(1),
+            )
+            .build()
+    };
+    let baseline = serve_with(
+        |_| MockDenoiser::with_bias(0.05),
+        &ServeOptions {
+            workload: plain_workload(),
+            shards: 1,
+            max_batch: 1,
+            policy: Policy::Fifo,
+            seed: 1234,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    for (shards, max_batch, policy) in
+        [(1usize, 1usize, Policy::Priority), (2, 8, Policy::Priority), (2, 8, Policy::Fair)]
+    {
+        let report = serve_with(
+            |_| MockDenoiser::with_bias(0.05),
+            &ServeOptions {
+                workload: annotated_workload(),
+                shards,
+                max_batch,
+                policy,
+                seed: 1234,
+                qos: QosConfig::default(), // disabled
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            report.session_fingerprints(),
+            baseline.session_fingerprints(),
+            "disabled QoS must not change served bits \
+             (shards {shards}, max_batch {max_batch}, policy {policy:?})"
+        );
+        assert_eq!(report.metrics.shed_total(), 0);
+        assert_eq!(report.metrics.degraded_total(), 0);
+        assert!(report.sessions.iter().all(|s| s.sheds == 0));
+        assert!(
+            !report.metrics.summary().contains("qos=["),
+            "legacy summary shape must survive: {}",
+            report.metrics.summary()
+        );
+    }
+}

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Coarse perf-regression gate over the machine-readable bench output.
+
+Usage:
+    check_bench_regression.py --baseline scripts/bench_baseline.json \
+        BENCH_speculative.json BENCH_qos.json
+
+Each BENCH_*.json file follows the `ts-dp-bench-v1` schema (see
+rust/src/util/benchjson.rs): {"bench": <name>, "records": [{"name", ...,
+"p95_s", ...}]}. The baseline maps "<bench>/<record name>" to a
+reference p95 in seconds; the gate FAILS when a record's measured p95
+exceeds 2x its baseline entry (coarse on purpose — CI runners are
+noisy; this catches order-of-magnitude rot, not percent drift).
+
+Rules:
+  * a baselined key missing from the bench output fails (renames and
+    dropped measurements must be loud, and must update the baseline);
+  * a record with no baseline entry only warns (new measurements start
+    accumulating before they are gated);
+  * baseline values are provisional ceilings until re-measured — see
+    scripts/bench_baseline.json.
+"""
+
+import argparse
+import json
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_files", nargs="+", help="BENCH_*.json files to check")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)["p95_s"]
+
+    records = {}
+    for path in args.bench_files:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("schema") != "ts-dp-bench-v1":
+            print(f"ERROR: {path} is not a ts-dp-bench-v1 document", file=sys.stderr)
+            return 1
+        for rec in doc["records"]:
+            records[f"{doc['bench']}/{rec['name']}"] = rec
+
+    failures = []
+    for key, ref_p95 in sorted(baseline.items()):
+        rec = records.get(key)
+        if rec is None:
+            failures.append(f"{key}: baselined record missing from bench output")
+            continue
+        got = rec["p95_s"]
+        limit = REGRESSION_FACTOR * ref_p95
+        status = "FAIL" if got > limit else "ok"
+        print(f"[{status}] {key}: p95={got:.4f}s (baseline {ref_p95:.4f}s, limit {limit:.4f}s)")
+        if got > limit:
+            failures.append(f"{key}: p95 {got:.4f}s > {limit:.4f}s")
+
+    for key in sorted(set(records) - set(baseline)):
+        print(f"[warn] {key}: no baseline entry (p95={records[key]['p95_s']:.4f}s)")
+
+    if failures:
+        print("\nperf-smoke regression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print(f"\nperf-smoke gate passed: {len(baseline)} baselined records within "
+          f"{REGRESSION_FACTOR}x.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
