@@ -178,6 +178,110 @@ fn bench_sharded_serving(sink: &mut BenchSink) {
     println!();
 }
 
+/// Tentpole probe: continuous drafter batching. One wave-stepped
+/// `drafter_rollout_many` call over the shared KV arena vs the same
+/// fleet of rollouts served serially per-request, at fleet sizes
+/// 1 / 4 / 16 — the bit-identity suites pin batched == serial; this
+/// measures the throughput the batching buys. Records land in the
+/// perf-regression gate, including the `p95_ratio_min` entry that
+/// encodes the PR's ≥2x-at-fleet-16 acceptance bar.
+fn bench_drafter_batching(sink: &mut BenchSink) {
+    use ts_dp::drafter::{DistilledDrafter, DrafterModel};
+    use ts_dp::policy::{Denoiser, RolloutRequest};
+
+    println!("== continuous drafter batching: wave-stepped rollout_many vs serial ==");
+    let k = 8usize;
+    let t0 = 60usize;
+    let percentile = |sorted: &[f64], q: f64| -> f64 {
+        sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+    };
+    // Warmup + timed iters; percentiles hand-rolled over per-iter secs
+    // (benchtool::bench only reports mean/std/min).
+    let run = |f: &mut dyn FnMut()| -> (f64, f64, f64, f64) {
+        for _ in 0..5 {
+            f();
+        }
+        let iters = 60;
+        let mut secs = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            secs.push(t.elapsed().as_secs_f64());
+        }
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        (mean, percentile(&secs, 0.50), percentile(&secs, 0.95), percentile(&secs, 0.99))
+    };
+    for fleet in [1usize, 4, 16] {
+        let den = DistilledDrafter::new(
+            Box::new(MockDenoiser::with_bias(0.0)),
+            DrafterModel::init(&mut Rng::seed_from_u64(21)),
+        );
+        let mut rng = Rng::seed_from_u64(fleet as u64);
+        let conds: Vec<Vec<f32>> = (0..fleet)
+            .map(|_| den.encode(&rng.normal_vec(OBS_DIM)).unwrap())
+            .collect();
+        let xs: Vec<Vec<f32>> = (0..fleet).map(|_| rng.normal_vec(SEG)).collect();
+        let noises: Vec<Vec<f32>> = (0..fleet).map(|_| rng.normal_vec(k * SEG)).collect();
+
+        let mut serial = || {
+            for i in 0..fleet {
+                let out = den
+                    .drafter_rollout(k, &xs[i], t0, &conds[i], &noises[i])
+                    .unwrap()
+                    .unwrap();
+                std::hint::black_box(&out);
+            }
+        };
+        let (serial_mean, serial_p50, serial_p95, serial_p99) = run(&mut serial);
+
+        let mut batched = || {
+            let reqs: Vec<RolloutRequest<'_>> = (0..fleet)
+                .map(|i| RolloutRequest {
+                    k,
+                    x: &xs[i],
+                    t0,
+                    cond: &conds[i],
+                    noise: &noises[i],
+                })
+                .collect();
+            let out = den.drafter_rollout_many(&reqs).unwrap();
+            std::hint::black_box(&out);
+        };
+        let (batched_mean, batched_p50, batched_p95, batched_p99) = run(&mut batched);
+
+        println!(
+            "fleet={:<3} serial p50={:.6}s  batched p50={:.6}s  speedup={:.2}x  \
+             kv-blocks-peak={}",
+            fleet,
+            serial_p50,
+            batched_p50,
+            serial_p50 / batched_p50.max(1e-12),
+            den.arena_high_water(),
+        );
+        for (mode, mean, p50, p95, p99) in [
+            ("serial", serial_mean, serial_p50, serial_p95, serial_p99),
+            ("batched", batched_mean, batched_p50, batched_p95, batched_p99),
+        ] {
+            sink.push(BenchRecord {
+                name: format!("drafter_batching[fleet={fleet},mode={mode}]"),
+                params: vec![
+                    ("fleet".into(), format!("{fleet}")),
+                    ("mode".into(), mode.into()),
+                    ("k".into(), format!("{k}")),
+                ],
+                p50_s: p50,
+                p95_s: p95,
+                p99_s: p99,
+                nfe: k as f64 / 8.0,
+                accept_rate: 0.0,
+                goodput_rps: fleet as f64 / mean.max(1e-12),
+            });
+        }
+    }
+    println!();
+}
+
 /// Drafter-quality probe: accept rate and NFE of the mock's analytic
 /// drafter pair (two bias levels) vs the in-crate distilled Transformer
 /// drafter, untrained and after a quick distillation run — the
@@ -303,6 +407,7 @@ fn main() {
     bench_accept_scan_scratch();
     bench_batched_serving(&mut sink);
     bench_sharded_serving(&mut sink);
+    bench_drafter_batching(&mut sink);
     if !fast {
         bench_online_adaptation();
         bench_drafter_accept_rates();

@@ -1,6 +1,7 @@
 //! Server-side metrics: throughput, latency percentiles, NFE, queueing,
-//! micro-batching health (verify-batch occupancy, in-flight jobs), and
-//! fleet aggregation across shards.
+//! micro-batching health (verify-batch and draft-wave occupancy, KV-
+//! arena high-water mark, in-flight jobs), and fleet aggregation across
+//! shards.
 //!
 //! Each shard worker accumulates its own [`ServerMetrics`]; after the
 //! run, [`ServerMetrics::merge_fleet`] folds the per-shard metrics into
@@ -123,6 +124,15 @@ pub struct ServerMetrics {
     /// Requests fused per verify call (batch occupancy; >1 means
     /// cross-request fusion is engaging).
     pub verify_occupancy: OnlineStats,
+    /// Fused drafter waves issued by the engine
+    /// (`drafter_rollout_many` calls).
+    pub draft_waves: u64,
+    /// Requests fused per drafter wave (draft-wave occupancy; >1 means
+    /// continuous drafter batching is engaging).
+    pub draft_wave_occupancy: OnlineStats,
+    /// Peak KV-block demand of the drafter wave arena (0 when the
+    /// backend has no arena; max across shards on a fleet merge).
+    pub arena_blocks_peak: usize,
     /// In-flight job gauge, sampled once per engine iteration.
     pub inflight: OnlineStats,
     /// Peak concurrent in-flight jobs.
@@ -176,6 +186,9 @@ impl ServerMetrics {
             accepted: 0,
             verify_batches: 0,
             verify_occupancy: OnlineStats::new(),
+            draft_waves: 0,
+            draft_wave_occupancy: OnlineStats::new(),
+            arena_blocks_peak: 0,
             inflight: OnlineStats::new(),
             peak_inflight: 0,
             task_requests: BTreeMap::new(),
@@ -325,6 +338,23 @@ impl ServerMetrics {
         self.verify_occupancy.push(fused as f64);
     }
 
+    /// Record one fused drafter wave covering `fused` requests.
+    pub fn record_draft_wave(&mut self, fused: usize) {
+        self.draft_waves += 1;
+        self.draft_wave_occupancy.push(fused as f64);
+    }
+
+    /// Record the drafter arena's peak KV-block demand (monotone max —
+    /// polled at shard shutdown, merged as max fleet-wide).
+    pub fn record_arena_high_water(&mut self, blocks: usize) {
+        self.arena_blocks_peak = self.arena_blocks_peak.max(blocks);
+    }
+
+    /// Mean requests fused per drafter wave (0 when no waves ran).
+    pub fn mean_draft_wave_occupancy(&self) -> f64 {
+        self.draft_wave_occupancy.mean()
+    }
+
     /// Sample the in-flight job gauge (once per engine iteration).
     pub fn record_inflight(&mut self, jobs: usize) {
         self.inflight.push(jobs as f64);
@@ -357,6 +387,9 @@ impl ServerMetrics {
             fleet.accepted += m.accepted;
             fleet.verify_batches += m.verify_batches;
             fleet.verify_occupancy.merge(&m.verify_occupancy);
+            fleet.draft_waves += m.draft_waves;
+            fleet.draft_wave_occupancy.merge(&m.draft_wave_occupancy);
+            fleet.arena_blocks_peak = fleet.arena_blocks_peak.max(m.arena_blocks_peak);
             fleet.inflight.merge(&m.inflight);
             fleet.peak_inflight = fleet.peak_inflight.max(m.peak_inflight);
             for (task, n) in &m.task_requests {
@@ -460,6 +493,18 @@ impl ServerMetrics {
             self.inflight.mean(),
             self.peak_inflight,
         );
+        // Drafter-wave gauges: appended only when continuous drafter
+        // batching ran, so serial runs keep the legacy summary shape.
+        if self.draft_waves > 0 {
+            s.push_str(&format!(
+                " draft-waves={} draft-occ={:.2}",
+                self.draft_waves,
+                self.mean_draft_wave_occupancy()
+            ));
+            if self.arena_blocks_peak > 0 {
+                s.push_str(&format!(" kv-blocks-peak={}", self.arena_blocks_peak));
+            }
+        }
         if let Some(shard) = self.shard {
             s = format!("shard={shard} {s}");
         }
@@ -575,6 +620,32 @@ mod tests {
         assert_eq!(m.peak_inflight, 6);
         assert!((m.inflight.mean() - 11.0 / 3.0).abs() < 1e-12);
         assert!(m.summary().contains("verify-occ"));
+    }
+
+    #[test]
+    fn draft_wave_gauges_accumulate_and_merge() {
+        let mut a = ServerMetrics::for_shard(0);
+        let mut b = ServerMetrics::for_shard(1);
+        a.record_draft_wave(4);
+        a.record_draft_wave(2);
+        a.record_arena_high_water(10);
+        a.record_arena_high_water(7); // monotone max: stays 10
+        b.record_draft_wave(1);
+        b.record_arena_high_water(12);
+        assert_eq!(a.draft_waves, 2);
+        assert!((a.mean_draft_wave_occupancy() - 3.0).abs() < 1e-12);
+        assert_eq!(a.arena_blocks_peak, 10);
+        let s = a.summary();
+        assert!(s.contains("draft-waves=2 draft-occ=3.00"), "{s}");
+        assert!(s.contains("kv-blocks-peak=10"), "{s}");
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        assert_eq!(fleet.draft_waves, 3);
+        assert!((fleet.mean_draft_wave_occupancy() - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(fleet.arena_blocks_peak, 12, "fleet peak is the max across shards");
+        // Runs without drafter batching keep the legacy summary shape.
+        let plain = ServerMetrics::new();
+        assert!(!plain.summary().contains("draft-waves"), "{}", plain.summary());
+        assert!(!plain.summary().contains("kv-blocks-peak"), "{}", plain.summary());
     }
 
     #[test]

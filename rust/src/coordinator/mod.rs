@@ -53,14 +53,23 @@
 //!   │  policy can learn the same trade
 //!   │
 //!   │  job table of resumable SegmentJobs (speculative::job):
-//!   │    1. draft   — each job rolls out its round's drafts (k/8 NFE)
+//!   │    1. draft wave — every job needing a round draws its noise
+//!   │                 job-side from its own session RNG (begin_draft),
+//!   │                 then ONE fused drafter_rollout_many call advances
+//!   │                 the whole wave one denoising step at a time over
+//!   │                 a shared per-shard KV arena (drafter::arena:
+//!   │                 free-listed fixed-size blocks, per-session
+//!   │                 chains, round-end reclamation), sessions joining
+//!   │                 and leaving at draft-step granularity (k/8 NFE
+//!   │                 per request; backends without a fused path fall
+//!   │                 back to bit-identical serial rollouts)
 //!   │    2. verify  — ONE fused target_verify_many call covers every
 //!   │                 job with a round awaiting verification (1 NFE per
 //!   │                 request; fusion amortizes dispatch)
 //!   │    3. accept  — each job's MH scan + reflection coupling commits
 //!   │                 its prefix and advances (or finishes)
 //!   │  (baseline-method requests run as blocking single-request
-//!   │   generations at admission — no verify stage to fuse)
+//!   │   generations at admission — no draft or verify stage to fuse)
 //!   ▼
 //! SegmentResponse::Served(SegmentReply { actions, nfe, shard,
 //! pressure, … }) — or ::Shed{reason} — back over the per-request
@@ -103,9 +112,13 @@
 //!
 //! Losslessness under sharding and batching: each session draws from its
 //! own seeded RNG stream (seeded by session id only — never by
-//! placement) and every verify slice is computed independently per
-//! request, so served segments and NFE are bit-identical for any shard
-//! count, any `max_batch`, and either dispatch policy (asserted by
+//! placement), all of a round's randomness is consumed job-side
+//! *before* its draft wave forms (so wave composition never changes a
+//! session's bits: a wave row's arithmetic order equals the serial
+//! rollout's, and its attention reads only its own KV chain), and every
+//! verify slice is computed independently per request — so served
+//! segments and NFE are bit-identical for any shard count, any
+//! `max_batch`, and either dispatch policy (asserted by
 //! `tests/serve_batching.rs`). Routing and fusion buy throughput, never
 //! different actions.
 //!

@@ -7,9 +7,13 @@
 //! thread. Sessions are routed once at admission
 //! ([`crate::coordinator::router::Router`]: hash + least-loaded
 //! tiebreak) onto per-shard bounded queues; within a shard, TS-DP
-//! requests run as [`SegmentJob`] state machines whose verify stages
-//! fuse into **one** multi-request `target_verify_many` call per engine
-//! wave. Per-session RNG streams are independent of placement, so
+//! requests run as [`SegmentJob`] state machines whose draft rollouts
+//! fuse into **one** multi-request `drafter_rollout_many` wave (over
+//! the backend's shared KV arena, `crate::drafter::arena`) and whose
+//! verify stages fuse into **one** multi-request `target_verify_many`
+//! call per engine wave. Per-session RNG streams are independent of
+//! placement and all randomness is drawn job-side before a wave forms,
+//! so
 //! served segments and NFE are bit-identical for any shard count, any
 //! `max_batch`, and either dispatch policy — sharding and batching
 //! change wall-clock, never actions. Non-speculative baselines have no
@@ -31,7 +35,7 @@ use crate::coordinator::request::{SegmentReply, SegmentRequest, SegmentResponse}
 use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::coordinator::workload::{SessionSpec, WorkloadMix};
-use crate::policy::Denoiser;
+use crate::policy::{Denoiser, RolloutRequest};
 use crate::scheduler::online::{run_learner, ExperienceHub, PolicyStore};
 use crate::scheduler::{LearnerConfig, LearnerReport, SchedulerPolicy, SessionScheduler};
 use crate::speculative::engine::SEG;
@@ -441,11 +445,35 @@ fn run_shard(
             metrics.record_inflight(jobs.len());
         }
 
-        // --- 3. draft every job that needs a new round ----------
+        // --- 3. draft wave: fuse every job that needs a new round ---
+        // Each job first draws its round's noise from its own session
+        // RNG (begin_draft), then ONE drafter_rollout_many call advances
+        // the whole wave over the backend's shared KV arena — the
+        // drafter-side twin of the fused verify table below. Sessions
+        // join at admission and leave as rounds end, so wave membership
+        // changes at draft-step granularity; because all randomness is
+        // consumed job-side before the wave forms, wave composition can
+        // never change any session's bits. Backends without a fused
+        // path return per-request `None`s and finish_draft falls back
+        // to bit-identical serial drafter steps.
         for aj in jobs.iter_mut() {
             if aj.job.stage() == Stage::Draft {
                 let rng = rngs.get_mut(&aj.session).expect("rng created at admission");
-                aj.job.draft(den, aj.params, rng)?;
+                aj.job.begin_draft(aj.params, rng);
+            }
+        }
+        let wave: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].job.stage() == Stage::DraftWave)
+            .collect();
+        if !wave.is_empty() {
+            metrics.record_draft_wave(wave.len());
+            let mut rollouts = {
+                let reqs: Vec<RolloutRequest<'_>> =
+                    wave.iter().map(|&i| jobs[i].job.rollout_request()).collect();
+                den.drafter_rollout_many(&reqs)?
+            };
+            for (slot, &i) in wave.iter().enumerate() {
+                jobs[i].job.finish_draft(den, rollouts[slot].take())?;
             }
         }
 
@@ -523,6 +551,11 @@ fn run_shard(
                 i += 1;
             }
         }
+    }
+    // Arena accounting: peak KV-block demand of this shard's drafter
+    // wave arena, when the backend batches over one.
+    if let Some(blocks) = den.kv_arena_high_water() {
+        metrics.record_arena_high_water(blocks);
     }
     Ok(())
 }

@@ -1,0 +1,297 @@
+//! Shared drafter KV arena: slab/paged block storage for the
+//! wave-stepped batched rollout path (`drafter_rollout_many`).
+//!
+//! [`KvArena`] owns fixed-size KV blocks ([`BLOCK_TOKENS`] tokens ×
+//! `width` floats of K and of V) handed out from a free list to
+//! per-session **chains**. A chain lives for one speculative round —
+//! the drafter's causal context is round-local — and releasing it
+//! returns every block to the free list, so steady-state serving
+//! allocates nothing: capacity converges to the high-water mark of
+//! concurrent demand and is reused forever after. Chains are addressed
+//! by copyable [`ChainId`] handles (mistral.rs-style paged KV, scaled
+//! to this crate's one-block drafter).
+//!
+//! Attention only ever reads rows of one session's own chain, so
+//! arena-backed rollouts are bit-identical to rollouts over private
+//! per-session buffers — the arena moves allocations and locality,
+//! never bits (pinned by the property tests below and the wave-vs-
+//! serial suites in `drafter::model` / `drafter::backend`).
+
+/// Tokens per KV block. Small enough that a k = 1 round strands at
+/// most 3 slots; large enough that a K_MAX = 16 round chains only 4
+/// blocks.
+pub const BLOCK_TOKENS: usize = 4;
+
+/// Handle to one session's KV chain (valid until [`KvArena::release`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainId(usize);
+
+/// One fixed-size slab of K and V rows.
+#[derive(Debug)]
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Per-session block chain: the ordered blocks holding its KV rows.
+#[derive(Debug)]
+struct Chain {
+    blocks: Vec<usize>,
+    len: usize,
+    live: bool,
+}
+
+/// Slab allocator for drafter KV rows: free-listed fixed-size blocks,
+/// per-session chains, drop-on-round-end reclamation.
+#[derive(Debug)]
+pub struct KvArena {
+    /// Floats per K row (= per V row).
+    width: usize,
+    blocks: Vec<Block>,
+    free_blocks: Vec<usize>,
+    chains: Vec<Chain>,
+    free_chains: Vec<usize>,
+    in_use: usize,
+    high_water: usize,
+}
+
+impl KvArena {
+    /// Empty arena for `width`-float KV rows. No blocks are allocated
+    /// until a chain pushes rows.
+    pub fn new(width: usize) -> Self {
+        assert!(width > 0, "KV row width must be positive");
+        Self {
+            width,
+            blocks: Vec::new(),
+            free_blocks: Vec::new(),
+            chains: Vec::new(),
+            free_chains: Vec::new(),
+            in_use: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Floats per KV row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Open a fresh (empty) chain, reusing a released chain slot when
+    /// one is free.
+    pub fn new_chain(&mut self) -> ChainId {
+        match self.free_chains.pop() {
+            Some(id) => {
+                debug_assert!(!self.chains[id].live && self.chains[id].blocks.is_empty());
+                self.chains[id].live = true;
+                ChainId(id)
+            }
+            None => {
+                self.chains.push(Chain { blocks: Vec::new(), len: 0, live: true });
+                ChainId(self.chains.len() - 1)
+            }
+        }
+    }
+
+    /// Rows pushed into `chain` so far.
+    pub fn chain_len(&self, chain: ChainId) -> usize {
+        let c = &self.chains[chain.0];
+        debug_assert!(c.live, "chain_len of a released chain");
+        c.len
+    }
+
+    /// Append one KV row to `chain`, growing it by a block when the
+    /// last block is full (free list first, fresh allocation only past
+    /// the arena's high-water mark).
+    pub fn push_kv(&mut self, chain: ChainId, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.width);
+        debug_assert_eq!(v.len(), self.width);
+        assert!(self.chains[chain.0].live, "push_kv into a released chain");
+        let len = self.chains[chain.0].len;
+        if len % BLOCK_TOKENS == 0 {
+            let b = match self.free_blocks.pop() {
+                Some(b) => b,
+                None => {
+                    self.blocks.push(Block {
+                        k: vec![0.0; BLOCK_TOKENS * self.width],
+                        v: vec![0.0; BLOCK_TOKENS * self.width],
+                    });
+                    self.blocks.len() - 1
+                }
+            };
+            self.chains[chain.0].blocks.push(b);
+            self.in_use += 1;
+            self.high_water = self.high_water.max(self.in_use);
+        }
+        let b = *self.chains[chain.0].blocks.last().expect("block ensured above");
+        let at = (len % BLOCK_TOKENS) * self.width;
+        self.blocks[b].k[at..at + self.width].copy_from_slice(k);
+        self.blocks[b].v[at..at + self.width].copy_from_slice(v);
+        self.chains[chain.0].len = len + 1;
+    }
+
+    /// K row `i` of `chain` (0-based push order).
+    pub fn k_row(&self, chain: ChainId, i: usize) -> &[f32] {
+        let c = &self.chains[chain.0];
+        debug_assert!(c.live && i < c.len, "k_row({i}) of len-{} chain", c.len);
+        let at = (i % BLOCK_TOKENS) * self.width;
+        &self.blocks[c.blocks[i / BLOCK_TOKENS]].k[at..at + self.width]
+    }
+
+    /// V row `i` of `chain` (0-based push order).
+    pub fn v_row(&self, chain: ChainId, i: usize) -> &[f32] {
+        let c = &self.chains[chain.0];
+        debug_assert!(c.live && i < c.len, "v_row({i}) of len-{} chain", c.len);
+        let at = (i % BLOCK_TOKENS) * self.width;
+        &self.blocks[c.blocks[i / BLOCK_TOKENS]].v[at..at + self.width]
+    }
+
+    /// Close `chain`: every block returns to the free list and the
+    /// handle becomes invalid (round-end reclamation).
+    pub fn release(&mut self, chain: ChainId) {
+        assert!(self.chains[chain.0].live, "release of a dead chain");
+        let blocks = std::mem::take(&mut self.chains[chain.0].blocks);
+        self.chains[chain.0].len = 0;
+        self.chains[chain.0].live = false;
+        self.in_use -= blocks.len();
+        self.free_blocks.extend(blocks);
+        self.free_chains.push(chain.0);
+    }
+
+    /// Blocks currently held by live chains.
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Peak concurrent block demand over the arena's lifetime (the
+    /// metrics gauge; also exactly the number of blocks ever allocated,
+    /// since a block is only created when the free list is empty).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Total blocks backing the arena (free + in use).
+    pub fn capacity_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::check_property;
+
+    #[test]
+    fn rows_round_trip_bitwise() {
+        let mut arena = KvArena::new(8);
+        let a = arena.new_chain();
+        let b = arena.new_chain();
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..10)
+            .map(|i| {
+                let k: Vec<f32> = (0..8).map(|j| (i * 8 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                (k, v)
+            })
+            .collect();
+        // Interleave pushes so the two chains' blocks interleave in the
+        // slab — reads must still come back per-chain, in push order.
+        for (i, (k, v)) in rows.iter().enumerate() {
+            let chain = if i % 2 == 0 { a } else { b };
+            arena.push_kv(chain, k, v);
+        }
+        assert_eq!(arena.chain_len(a), 5);
+        assert_eq!(arena.chain_len(b), 5);
+        for (i, (k, v)) in rows.iter().enumerate() {
+            let (chain, at) = if i % 2 == 0 { (a, i / 2) } else { (b, i / 2) };
+            assert_eq!(arena.k_row(chain, at), &k[..], "k row {i}");
+            assert_eq!(arena.v_row(chain, at), &v[..], "v row {i}");
+        }
+    }
+
+    #[test]
+    fn chains_grow_block_granular() {
+        let mut arena = KvArena::new(4);
+        let c = arena.new_chain();
+        for len in 1..=(3 * BLOCK_TOKENS) {
+            arena.push_kv(c, &[len as f32; 4], &[0.0; 4]);
+            let want = len.div_ceil(BLOCK_TOKENS);
+            assert_eq!(arena.blocks_in_use(), want, "len {len}");
+        }
+        arena.release(c);
+        assert_eq!(arena.blocks_in_use(), 0);
+        assert_eq!(arena.high_water(), 3);
+    }
+
+    #[test]
+    fn released_blocks_are_reused_not_reallocated() {
+        let mut arena = KvArena::new(4);
+        for round in 0..5 {
+            let c = arena.new_chain();
+            for _ in 0..16 {
+                arena.push_kv(c, &[round as f32; 4], &[0.0; 4]);
+            }
+            arena.release(c);
+        }
+        // 16 tokens = 4 blocks per round; rounds reuse them, so capacity
+        // and high-water both stay at the single-round demand.
+        assert_eq!(arena.high_water(), 4);
+        assert_eq!(arena.capacity_blocks(), 4);
+        assert_eq!(arena.blocks_in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "released chain")]
+    fn pushing_into_a_released_chain_panics() {
+        let mut arena = KvArena::new(2);
+        let c = arena.new_chain();
+        arena.release(c);
+        arena.push_kv(c, &[0.0; 2], &[0.0; 2]);
+    }
+
+    /// Satellite acceptance: after N random session lifecycles no block
+    /// leaks, the bookkeeping matches an independent model at every
+    /// step, and the high-water mark is bounded by the peak modelled
+    /// demand (capacity never exceeds it either — blocks are only
+    /// minted when the free list runs dry).
+    #[test]
+    fn random_lifecycles_leak_nothing_and_bound_high_water() {
+        check_property("kv_arena_lifecycles", 50, |rng| {
+            let mut arena = KvArena::new(3);
+            // Model: (chain, tokens pushed) for every live chain.
+            let mut live: Vec<(ChainId, usize)> = Vec::new();
+            let mut peak_demand = 0usize;
+            for _ in 0..rng.below(200) + 20 {
+                match rng.below(4) {
+                    // Open a chain (bounded fleet).
+                    0 if live.len() < 12 => live.push((arena.new_chain(), 0)),
+                    // Push a row into a random live chain.
+                    1 | 2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        arena.push_kv(live[i].0, &[1.0; 3], &[2.0; 3]);
+                        live[i].1 += 1;
+                        assert_eq!(arena.chain_len(live[i].0), live[i].1);
+                    }
+                    // Release a random live chain (mid-wave leave).
+                    3 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        arena.release(live.swap_remove(i).0);
+                    }
+                    _ => {}
+                }
+                let demand: usize =
+                    live.iter().map(|&(_, n)| n.div_ceil(BLOCK_TOKENS)).sum();
+                assert_eq!(arena.blocks_in_use(), demand, "bookkeeping drift");
+                peak_demand = peak_demand.max(demand);
+            }
+            for (c, _) in live.drain(..) {
+                arena.release(c);
+            }
+            assert_eq!(arena.blocks_in_use(), 0, "blocks leaked");
+            assert_eq!(arena.high_water(), peak_demand, "high-water drift");
+            assert_eq!(
+                arena.capacity_blocks(),
+                peak_demand,
+                "arena over-allocated beyond peak demand"
+            );
+        });
+    }
+}

@@ -10,13 +10,21 @@
 //! round, `Some` for every k — no per-k AOT artifact required), and NFE
 //! accounting lands on the base backend's counter at the paper's 1/8
 //! rate per drafter token.
+//!
+//! Under the serving fleet, `drafter_rollout_many` additionally batches
+//! *across* requests: every in-flight draft advances one denoising step
+//! per [`WaveRollout`] wave over a shared per-shard KV arena
+//! (`drafter::arena`), bit-identical to per-request rollouts because
+//! each row's arithmetic order is unchanged and attention never leaves
+//! the row's own KV chain.
 
 use crate::config::{ACT_DIM, DIFFUSION_STEPS, HORIZON};
 use crate::diffusion::DdpmSchedule;
-use crate::drafter::model::{eps_from_x0, DrafterModel};
-use crate::policy::Denoiser;
+use crate::drafter::model::{eps_from_x0, DrafterModel, WaveInput, WaveRollout};
+use crate::policy::{Denoiser, RolloutRequest};
 use crate::runtime::NfeCounter;
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 
 /// Flattened segment size.
 const SEG: usize = HORIZON * ACT_DIM;
@@ -28,17 +36,32 @@ pub struct DistilledDrafter {
     base: Box<dyn Denoiser>,
     model: DrafterModel,
     sched: DdpmSchedule,
+    /// Shared KV arena + scratch for the wave-batched rollout path.
+    /// Interior mutability because [`Denoiser`] methods take `&self`;
+    /// denoisers are not `Send` and each shard owns its replica on one
+    /// thread, so a `RefCell` is sufficient (never contended).
+    wave: RefCell<WaveRollout>,
 }
 
 impl DistilledDrafter {
     /// Wrap `base`, serving drafter calls from `model`.
     pub fn new(base: Box<dyn Denoiser>, model: DrafterModel) -> Self {
-        Self { base, model, sched: DdpmSchedule::cosine(DIFFUSION_STEPS) }
+        Self {
+            base,
+            model,
+            sched: DdpmSchedule::cosine(DIFFUSION_STEPS),
+            wave: RefCell::new(WaveRollout::new()),
+        }
     }
 
     /// The distilled model serving the drafter calls.
     pub fn model(&self) -> &DrafterModel {
         &self.model
+    }
+
+    /// Peak KV-block demand of the wave arena since construction.
+    pub fn arena_high_water(&self) -> usize {
+        self.wave.borrow().arena().high_water()
     }
 }
 
@@ -109,6 +132,89 @@ impl Denoiser for DistilledDrafter {
         }
         self.base.nfe().count_drafter(k);
         Ok(Some((samples, means)))
+    }
+
+    /// Continuous-batched rollouts: every request advances one denoising
+    /// step per wave over the shared KV arena, requests leaving the wave
+    /// as their `k` is exhausted. Per-row arithmetic order is exactly
+    /// [`DistilledDrafter::drafter_rollout`]'s (same `WaveRollout` ==
+    /// `RolloutState` kernel, same DDPM step, same pre-drawn noise), so
+    /// the results are bit-identical to serial serving for any wave
+    /// composition.
+    fn drafter_rollout_many(
+        &self,
+        reqs: &[RolloutRequest<'_>],
+    ) -> Result<Vec<Option<(Vec<f32>, Vec<f32>)>>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for r in reqs {
+            ensure!(r.k >= 1, "drafter_rollout_many k must be >= 1");
+            ensure!(r.t0 >= r.k, "drafter_rollout_many needs t0 >= k (t0={}, k={})", r.t0, r.k);
+            ensure!(r.x.len() == SEG, "drafter_rollout_many x len {}", r.x.len());
+            ensure!(
+                r.noise.len() == r.k * SEG,
+                "drafter_rollout_many noise len {}",
+                r.noise.len()
+            );
+        }
+        let mut wave = self.wave.borrow_mut();
+        let n = reqs.len();
+        let chains: Vec<_> = reqs.iter().map(|_| wave.new_chain()).collect();
+        let mut samples: Vec<Vec<f32>> = reqs.iter().map(|r| vec![0.0f32; r.k * SEG]).collect();
+        let mut means: Vec<Vec<f32>> = reqs.iter().map(|r| vec![0.0f32; r.k * SEG]).collect();
+        let mut curs: Vec<Vec<f32>> = reqs.iter().map(|r| r.x.to_vec()).collect();
+        let max_k = reqs.iter().map(|r| r.k).max().unwrap_or(0);
+        let mut x0s = Vec::new();
+        let mut eps = vec![0.0f32; SEG];
+        let mut x0_scratch = vec![0.0f32; SEG];
+        let mut active: Vec<usize> = Vec::with_capacity(n);
+        for j in 0..max_k {
+            active.clear();
+            active.extend((0..n).filter(|&i| j < reqs[i].k));
+            {
+                // `rows` borrows `curs` immutably; scoped so the DDPM
+                // step below can write the next latents.
+                let rows: Vec<WaveInput<'_>> = active
+                    .iter()
+                    .map(|&i| WaveInput {
+                        chain: chains[i],
+                        x: &curs[i],
+                        t: reqs[i].t0 - j,
+                        cond: reqs[i].cond,
+                    })
+                    .collect();
+                wave.step(&self.model, &rows, &mut x0s);
+            }
+            for (slot, &i) in active.iter().enumerate() {
+                let t = reqs[i].t0 - j;
+                let x0 = &x0s[slot * SEG..(slot + 1) * SEG];
+                eps_from_x0(&self.sched, t, &curs[i], x0, &mut eps);
+                {
+                    let sample = &mut samples[i][j * SEG..(j + 1) * SEG];
+                    let mean = &mut means[i][j * SEG..(j + 1) * SEG];
+                    self.sched.step_into(
+                        t,
+                        &curs[i],
+                        &eps,
+                        &reqs[i].noise[j * SEG..(j + 1) * SEG],
+                        &mut x0_scratch,
+                        sample,
+                        mean,
+                    );
+                }
+                curs[i].copy_from_slice(&samples[i][j * SEG..(j + 1) * SEG]);
+            }
+        }
+        for c in chains {
+            wave.release(c);
+        }
+        self.base.nfe().count_drafter(reqs.iter().map(|r| r.k).sum::<usize>());
+        Ok(samples.into_iter().zip(means).map(|(s, m)| Some((s, m))).collect())
+    }
+
+    fn kv_arena_high_water(&self) -> Option<usize> {
+        Some(self.arena_high_water())
     }
 
     fn nfe(&self) -> &NfeCounter {
@@ -216,6 +322,106 @@ mod tests {
         let x = vec![0.0f32; SEG];
         assert!(den.drafter_rollout(4, &x, 60, &cond, &[0.0; 7]).is_err());
         assert!(den.drafter_rollout(8, &x, 4, &cond, &vec![0.0; 8 * SEG]).is_err());
+    }
+
+    /// Batch of heterogeneous-k rollout requests over `den`, with
+    /// per-request inputs derived from `seed`. Returns owned inputs so
+    /// callers can build `RolloutRequest` borrows from them.
+    fn wave_inputs(
+        den: &DistilledDrafter,
+        ks: &[usize],
+        seed: u64,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let conds: Vec<Vec<f32>> = ks
+            .iter()
+            .map(|_| den.encode(&rng.normal_vec(OBS_DIM)).unwrap())
+            .collect();
+        let xs: Vec<Vec<f32>> = ks.iter().map(|_| rng.normal_vec(SEG)).collect();
+        let noises: Vec<Vec<f32>> = ks.iter().map(|&k| rng.normal_vec(k * SEG)).collect();
+        (conds, xs, noises)
+    }
+
+    #[test]
+    fn rollout_many_matches_per_request_bitwise() {
+        // Tentpole acceptance: heterogeneous ks (sessions leave the wave
+        // at step granularity as their k is exhausted) must be
+        // bit-identical — samples AND means — to serial per-request
+        // rollouts, with identical NFE.
+        let ks = [1usize, 8, 16, 3];
+        let t0 = 60;
+        let batched = backend(20);
+        let serial = backend(20);
+        let (conds, xs, noises) = wave_inputs(&batched, &ks, 21);
+
+        let reqs: Vec<RolloutRequest<'_>> = ks
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| RolloutRequest {
+                k,
+                x: &xs[i],
+                t0,
+                cond: &conds[i],
+                noise: &noises[i],
+            })
+            .collect();
+        let got = batched.drafter_rollout_many(&reqs).unwrap();
+        assert_eq!(got.len(), ks.len());
+        for (i, &k) in ks.iter().enumerate() {
+            let want = serial
+                .drafter_rollout(k, &xs[i], t0, &conds[i], &noises[i])
+                .unwrap()
+                .unwrap();
+            let (gs, gm) = got[i].as_ref().expect("wave path must fuse every request");
+            assert_eq!(gs, &want.0, "request {i} samples");
+            assert_eq!(gm, &want.1, "request {i} means");
+        }
+        assert_eq!(batched.nfe().nfe(), serial.nfe().nfe(), "NFE accounting");
+        assert!(batched.arena_high_water() > 0, "arena really engaged");
+        assert_eq!(serial.arena_high_water(), 0, "serial path never touches the arena");
+    }
+
+    #[test]
+    fn wave_state_is_clean_across_rounds() {
+        // Round 2 over the same arena (blocks now reused from the free
+        // list) must still match serial exactly — no state can leak
+        // between rounds, and steady state allocates no new blocks.
+        let ks = [8usize, 8, 4];
+        let batched = backend(22);
+        let serial = backend(22);
+        for round in 0..3u64 {
+            let (conds, xs, noises) = wave_inputs(&batched, &ks, 30 + round);
+            let reqs: Vec<RolloutRequest<'_>> = ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| RolloutRequest {
+                    k,
+                    x: &xs[i],
+                    t0: 55,
+                    cond: &conds[i],
+                    noise: &noises[i],
+                })
+                .collect();
+            let got = batched.drafter_rollout_many(&reqs).unwrap();
+            for (i, &k) in ks.iter().enumerate() {
+                let want = serial
+                    .drafter_rollout(k, &xs[i], 55, &conds[i], &noises[i])
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(got[i].as_ref().unwrap().0, want.0, "round {round} request {i}");
+            }
+        }
+        // 8+8+4 tokens = 2+2+1 blocks of 4; demand peaks once and every
+        // later round reuses those blocks.
+        assert_eq!(batched.arena_high_water(), 5, "steady-state block demand");
+    }
+
+    #[test]
+    fn empty_wave_is_a_no_op() {
+        let den = backend(24);
+        assert!(den.drafter_rollout_many(&[]).unwrap().is_empty());
+        assert_eq!(den.nfe().nfe(), 0.0);
+        assert_eq!(den.arena_high_water(), 0);
     }
 
     #[test]

@@ -24,6 +24,10 @@
 //!   · target_* / encode delegate to base (losslessness untouched)
 //!   · drafter_step / natively fused drafter_rollout from the model
 //!     (Some for every k, KV-cached causal decode, k/8 NFE)
+//!   · drafter_rollout_many: continuous batching at draft-step
+//!     granularity — every in-flight draft advances one wave per step
+//!     over a shared per-shard KV arena (arena::KvArena), bit-identical
+//!     to per-request rollouts
 //! ```
 //!
 //! `ts-dp distill-drafter` drives the pipeline from the CLI; the serving
@@ -33,12 +37,14 @@
 //! [`crate::coordinator::workload::DrafterKind`] labels the swap in
 //! session specs and metrics summaries.
 
+pub mod arena;
 pub mod backend;
 pub mod cli;
 pub mod layers;
 pub mod model;
 pub mod train;
 
+pub use arena::{ChainId, KvArena};
 pub use backend::DistilledDrafter;
 pub use model::DrafterModel;
 pub use train::{

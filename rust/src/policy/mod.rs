@@ -22,6 +22,26 @@ use crate::runtime::executable::SEG;
 use crate::runtime::{ModelRuntime, NfeCounter};
 use anyhow::{ensure, Result};
 
+/// One request of a batched drafter wave: the borrowed per-session
+/// inputs [`Denoiser::drafter_rollout`] would take, bundled so
+/// [`Denoiser::drafter_rollout_many`] can advance many sessions per
+/// draft step. The noise is drawn job-side from the session's own RNG
+/// stream *before* the wave forms, so wave composition can never change
+/// a session's bits.
+#[derive(Debug)]
+pub struct RolloutRequest<'a> {
+    /// Draft steps requested (1..=K_MAX, already clamped by the job).
+    pub k: usize,
+    /// Current latent, SEG floats.
+    pub x: &'a [f32],
+    /// Starting timestep; the rollout covers `t0, t0-1, .., t0-k+1`.
+    pub t0: usize,
+    /// Conditioning vector, EMBED_DIM floats.
+    pub cond: &'a [f32],
+    /// Pre-drawn Gaussian noise, k×SEG floats.
+    pub noise: &'a [f32],
+}
+
 /// Model evaluations used by the denoising engines.
 ///
 /// All tensors are flat row-major `f32` slices; shapes are fixed by
@@ -89,6 +109,35 @@ pub trait Denoiser {
         _noise: &[f32],
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
         Ok(None)
+    }
+    /// Continuous-batched drafter rollouts: advance *every* request one
+    /// denoising step per wave, sessions joining and leaving the wave
+    /// at step granularity. Returns one `drafter_rollout`-shaped result
+    /// per request, in request order; `None` entries fall back to the
+    /// caller's serial drafter path. Costs `kᵢ`/8 NFE per request —
+    /// identical to serving them one at a time.
+    ///
+    /// The default loops per-request [`Denoiser::drafter_rollout`],
+    /// which is bit-identical to serial serving by construction.
+    /// [`crate::drafter::DistilledDrafter`] overrides it with a genuine
+    /// wave-stepped forward over a shared per-shard KV arena
+    /// ([`crate::drafter::KvArena`]); the override keeps every
+    /// request's arithmetic order equal to the serial path, so batched
+    /// and serial segments stay bitwise equal.
+    fn drafter_rollout_many(
+        &self,
+        reqs: &[RolloutRequest<'_>],
+    ) -> Result<Vec<Option<(Vec<f32>, Vec<f32>)>>> {
+        reqs.iter()
+            .map(|r| self.drafter_rollout(r.k, r.x, r.t0, r.cond, r.noise))
+            .collect()
+    }
+    /// Peak KV-arena block demand since this denoiser was built, when
+    /// the backend batches drafts over a [`crate::drafter::KvArena`]
+    /// (`None` for backends without one). Polled by the serving fleet's
+    /// metrics at shard shutdown.
+    fn kv_arena_high_water(&self) -> Option<usize> {
+        None
     }
     /// NFE accounting.
     fn nfe(&self) -> &NfeCounter;

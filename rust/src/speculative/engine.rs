@@ -96,6 +96,9 @@ impl SpecEngine {
                     let params = param_fn(job.t());
                     job.draft(den, params, rng)?;
                 }
+                // draft() runs begin/rollout/finish atomically, so the
+                // solo driver never parks a job mid-wave.
+                Stage::DraftWave => unreachable!("draft() is atomic"),
                 Stage::Verify => {
                     let eps = den.target_verify(job.verify_xs(), job.verify_ts(), cond)?;
                     job.accept(&eps, rng);

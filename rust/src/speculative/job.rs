@@ -27,6 +27,12 @@ use anyhow::Result;
 pub enum Stage {
     /// Next action: roll out the drafter for one round.
     Draft,
+    /// Round begun and noise drawn ([`SegmentJob::begin_draft`]);
+    /// waiting for the (possibly wave-batched) drafter rollout. The
+    /// coordinator fuses every job parked here into one
+    /// `Denoiser::drafter_rollout_many` call; the solo engine driver
+    /// never observes this stage ([`SegmentJob::draft`] is atomic).
+    DraftWave,
     /// Draft done; waiting for the (possibly fused) verify forward pass.
     Verify,
     /// t = 0 reached; needs the final deterministic target step.
@@ -167,8 +173,25 @@ impl<'s> SegmentJob<'s> {
     /// Stage 1 — draft rollout for one round at the current level.
     ///
     /// `params` is clamped here (as the monolithic loop did per round).
-    /// Consumes exactly k×SEG normal draws from `rng`.
+    /// Consumes exactly k×SEG normal draws from `rng`. Atomic
+    /// composition of [`Self::begin_draft`] → rollout →
+    /// [`Self::finish_draft`], so solo drivers never observe
+    /// [`Stage::DraftWave`].
     pub fn draft(&mut self, den: &dyn Denoiser, params: SpecParams, rng: &mut Rng) -> Result<()> {
+        self.begin_draft(params, rng);
+        let rollout =
+            den.drafter_rollout(self.k, &self.x, self.round_t, &self.cond, &self.noise)?;
+        self.finish_draft(den, rollout)
+    }
+
+    /// Stage 1a — open a draft round: clamp `params`, pick k, and draw
+    /// the round's noise from the *session's own* RNG stream (same draw
+    /// order as the monolithic [`Self::draft`]). Parks the job in
+    /// [`Stage::DraftWave`] so a coordinator can fuse its rollout with
+    /// other jobs' — all randomness is consumed here, before the wave
+    /// forms, which is why wave composition can never change this job's
+    /// bits.
+    pub fn begin_draft(&mut self, params: SpecParams, rng: &mut Rng) {
         debug_assert_eq!(self.stage, Stage::Draft);
         let params = params.clamped();
         let t = self.t;
@@ -183,11 +206,40 @@ impl<'s> SegmentJob<'s> {
         for _ in 0..k * SEG {
             self.noise.push(rng.normal());
         }
+        self.stage = Stage::DraftWave;
+    }
 
-        // Rollout: fused artifact when available, else serial drafter
+    /// This round's rollout request (valid in [`Stage::DraftWave`]):
+    /// what the coordinator hands to `Denoiser::drafter_rollout_many`.
+    pub fn rollout_request(&self) -> crate::policy::RolloutRequest<'_> {
+        debug_assert_eq!(self.stage, Stage::DraftWave);
+        crate::policy::RolloutRequest {
+            k: self.k,
+            x: &self.x,
+            t0: self.round_t,
+            cond: &self.cond,
+            noise: &self.noise,
+        }
+    }
+
+    /// Stage 1b — install this round's rollout result (`None` falls
+    /// back to serial drafter steps, bit-identical to the fused path's
+    /// contract) and build the padded verify batch. Identical arithmetic
+    /// to the monolithic [`Self::draft`] tail.
+    pub fn finish_draft(
+        &mut self,
+        den: &dyn Denoiser,
+        rollout: Option<(Vec<f32>, Vec<f32>)>,
+    ) -> Result<()> {
+        debug_assert_eq!(self.stage, Stage::DraftWave);
+        let (t, k) = (self.round_t, self.k);
+
+        // Rollout: fused result when available, else serial drafter
         // steps written straight into the reused sample/mean buffers.
-        match den.drafter_rollout(k, &self.x, t, &self.cond, &self.noise)? {
+        match rollout {
             Some((samples, means)) => {
+                debug_assert_eq!(samples.len(), k * SEG);
+                debug_assert_eq!(means.len(), k * SEG);
                 self.samples = samples;
                 self.means = means;
             }
@@ -353,6 +405,7 @@ mod tests {
         loop {
             match job.stage() {
                 Stage::Draft => job.draft(&m, params, &mut rng_b).unwrap(),
+                Stage::DraftWave => unreachable!("draft() is atomic"),
                 Stage::Verify => {
                     let eps = m
                         .target_verify(job.verify_xs(), job.verify_ts(), &cond)
@@ -374,6 +427,61 @@ mod tests {
         }
     }
 
+    /// Driving the draft stage split (begin_draft → rollout_request →
+    /// drafter_rollout_many → finish_draft, as the coordinator's draft-
+    /// wave table does) must be bit-identical to the monolithic draft()
+    /// — including through the serial fallback, which is what the mock
+    /// (no fused rollout) exercises.
+    #[test]
+    fn wave_split_draft_matches_monolithic_draft() {
+        let m = MockDenoiser::with_bias(0.12);
+        let cond = Denoiser::encode(&m, &vec![0.45; OBS_DIM]).unwrap();
+        let params = SpecParams::fixed_k(8);
+        let sched = DdpmSchedule::cosine(DIFFUSION_STEPS);
+
+        let run = |split: bool| {
+            let mut rng = Rng::seed_from_u64(123);
+            let mut job = SegmentJob::new(&sched, false, cond.clone(), &mut rng);
+            loop {
+                match job.stage() {
+                    Stage::Draft => {
+                        if split {
+                            job.begin_draft(params, &mut rng);
+                            let rollouts = {
+                                let reqs = [job.rollout_request()];
+                                m.drafter_rollout_many(&reqs).unwrap()
+                            };
+                            let [rollout] = <[_; 1]>::try_from(rollouts).unwrap();
+                            job.finish_draft(&m, rollout).unwrap();
+                        } else {
+                            job.draft(&m, params, &mut rng).unwrap();
+                        }
+                    }
+                    Stage::DraftWave => unreachable!("finish_draft always follows"),
+                    Stage::Verify => {
+                        let eps =
+                            m.target_verify(job.verify_xs(), job.verify_ts(), &cond).unwrap();
+                        job.accept(&eps, &mut rng);
+                    }
+                    Stage::Final => job.finalize(&m).unwrap(),
+                    Stage::Done => break,
+                }
+            }
+            job.into_parts()
+        };
+        let (seg_mono, rounds_mono, nfe_mono) = run(false);
+        let (seg_wave, rounds_wave, nfe_wave) = run(true);
+        assert_eq!(seg_wave, seg_mono, "split draft must be bit-identical");
+        assert_eq!(nfe_wave, nfe_mono);
+        assert_eq!(rounds_wave.len(), rounds_mono.len());
+        for (a, b) in rounds_wave.iter().zip(&rounds_mono) {
+            assert_eq!(a.t_start, b.t_start);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.accepted, b.accepted);
+            assert_eq!(a.committed, b.committed);
+        }
+    }
+
     /// Interleaving two jobs' stages (as the micro-batching engine does)
     /// must not change either job's output vs running it alone.
     #[test]
@@ -390,6 +498,7 @@ mod tests {
             loop {
                 match job.stage() {
                     Stage::Draft => job.draft(&m, params, &mut rng).unwrap(),
+                    Stage::DraftWave => unreachable!("draft() is atomic"),
                     Stage::Verify => {
                         let eps =
                             m.target_verify(job.verify_xs(), job.verify_ts(), cond).unwrap();

@@ -12,6 +12,7 @@ use ts_dp::config::{AdaptMode, DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
 use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::drafter::{DistilledDrafter, DrafterModel};
 use ts_dp::policy::mock::MockDenoiser;
 use ts_dp::scheduler::SchedulerPolicy;
 use ts_dp::util::Rng;
@@ -171,6 +172,107 @@ fn adaptive_frozen_sessions_are_lossless_across_shards() {
             }
         }
     }
+}
+
+/// Serve `workload` on a fleet whose replicas wrap the mock in a
+/// [`DistilledDrafter`] (identical weights on every shard), so drafter
+/// rollouts go through the **wave-batched** `drafter_rollout_many` path
+/// over the shared per-shard KV arena.
+fn run_distilled_wave_fleet(
+    workload: Vec<SessionSpec>,
+    shards: usize,
+    max_batch: usize,
+    policy: Policy,
+    window_us: u64,
+) -> ServeReport {
+    let opts = ServeOptions {
+        workload,
+        shards,
+        queue_capacity: 64,
+        policy,
+        scheduler: None,
+        seed: 1234,
+        max_batch,
+        batch_window: Duration::from_micros(window_us),
+        ..ServeOptions::default()
+    };
+    serve_with(
+        |_shard| {
+            DistilledDrafter::new(
+                Box::new(MockDenoiser::with_bias(0.05)),
+                DrafterModel::init(&mut Rng::seed_from_u64(0xd)),
+            )
+        },
+        &opts,
+    )
+    .unwrap()
+}
+
+#[test]
+fn drafter_wave_batching_is_lossless() {
+    // Tentpole acceptance: with a real wave-batched drafter backend,
+    // serving stays bit-identical (segments AND NFE) across batch
+    // {1,8} × shards {1,2,4} × both dispatch policies. max_batch = 1
+    // makes every wave a single-row wave, i.e. the serial composition,
+    // so this pins batched == serial through the whole serving stack.
+    let baseline =
+        fingerprint(&run_distilled_wave_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200));
+    assert_eq!(baseline.len(), 4);
+    for (_, digests, nfe) in &baseline {
+        assert!(!digests.is_empty(), "every session must serve segments");
+        assert!(*nfe > 0.0);
+    }
+    for policy in [Policy::Fifo, Policy::Fair] {
+        for shards in [1usize, 2, 4] {
+            for max_batch in [1usize, 8] {
+                let fp = fingerprint(&run_distilled_wave_fleet(
+                    uniform_workload(),
+                    shards,
+                    max_batch,
+                    policy,
+                    200,
+                ));
+                assert_eq!(
+                    fp, baseline,
+                    "wave-batched drafter serving must be bit-identical \
+                     (policy {policy:?}, shards {shards}, max_batch {max_batch})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn draft_wave_fusion_engages_under_concurrency() {
+    // The draft-wave table must actually fuse rollouts (occupancy > 1.5
+    // with 4 concurrent sessions), the KV arena must actually back them
+    // (nonzero block high-water, reported in the summary), and serial
+    // serving must never fuse.
+    let batched = run_distilled_wave_fleet(uniform_workload(), 1, 8, Policy::Fair, 500);
+    assert!(batched.metrics.draft_waves > 0);
+    assert!(
+        batched.metrics.mean_draft_wave_occupancy() > 1.5,
+        "mean draft-wave occupancy {} — continuous drafter batching not engaging",
+        batched.metrics.mean_draft_wave_occupancy()
+    );
+    assert!(
+        batched.metrics.arena_blocks_peak > 0,
+        "wave rollouts must run over the shared KV arena"
+    );
+    let s = batched.metrics.summary();
+    assert!(s.contains("draft-waves="), "{s}");
+    assert!(s.contains("kv-blocks-peak="), "{s}");
+
+    let serial = run_distilled_wave_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200);
+    assert!(serial.metrics.mean_draft_wave_occupancy() <= 1.0 + 1e-9);
+
+    // The mock backend has no fused rollout path and no arena: jobs
+    // still park in DraftWave (waves are counted) but every rollout
+    // falls back serially and no KV blocks are ever claimed.
+    let mock = run_fleet(uniform_workload(), 1, 8, Policy::Fair, 500);
+    assert!(mock.metrics.draft_waves > 0);
+    assert_eq!(mock.metrics.arena_blocks_peak, 0);
+    assert!(!mock.metrics.summary().contains("kv-blocks-peak"), "{}", mock.metrics.summary());
 }
 
 #[test]

@@ -12,9 +12,18 @@ reference p95 in seconds; the gate FAILS when a record's measured p95
 exceeds 2x its baseline entry (coarse on purpose — CI runners are
 noisy; this catches order-of-magnitude rot, not percent drift).
 
+The baseline may also carry a "p95_ratio_min" list of
+{"slow": key, "fast": key, "min": x} entries: both records must be
+present, and slow_p95 / fast_p95 must be >= min. Ratios compare two
+records from the SAME run, so they are immune to runner speed and gate
+relative wins (e.g. batched >= 2x serial drafter rollouts) rather than
+absolute wall-clock.
+
 Rules:
   * a baselined key missing from the bench output fails (renames and
     dropped measurements must be loud, and must update the baseline);
+  * a record named by a ratio entry missing from the output fails the
+    same way — a speedup gate that silently stops measuring is rot;
   * a record with no baseline entry only warns (new measurements start
     accumulating before they are gated);
   * baseline values are provisional ceilings until re-measured — see
@@ -35,7 +44,9 @@ def main() -> int:
     args = ap.parse_args()
 
     with open(args.baseline) as f:
-        baseline = json.load(f)["p95_s"]
+        doc = json.load(f)
+    baseline = doc["p95_s"]
+    ratios = doc.get("p95_ratio_min", [])
 
     records = {}
     for path in args.bench_files:
@@ -60,6 +71,19 @@ def main() -> int:
         if got > limit:
             failures.append(f"{key}: p95 {got:.4f}s > {limit:.4f}s")
 
+    for gate in ratios:
+        slow, fast, floor = gate["slow"], gate["fast"], gate["min"]
+        missing = [k for k in (slow, fast) if k not in records]
+        if missing:
+            for k in missing:
+                failures.append(f"ratio gate {slow} / {fast}: record {k} missing")
+            continue
+        ratio = records[slow]["p95_s"] / max(records[fast]["p95_s"], 1e-12)
+        status = "FAIL" if ratio < floor else "ok"
+        print(f"[{status}] ratio {slow} / {fast}: {ratio:.2f}x (min {floor:.2f}x)")
+        if ratio < floor:
+            failures.append(f"ratio {slow} / {fast}: {ratio:.2f}x < {floor:.2f}x")
+
     for key in sorted(set(records) - set(baseline)):
         print(f"[warn] {key}: no baseline entry (p95={records[key]['p95_s']:.4f}s)")
 
@@ -69,7 +93,7 @@ def main() -> int:
             print(f"  - {f_}", file=sys.stderr)
         return 1
     print(f"\nperf-smoke gate passed: {len(baseline)} baselined records within "
-          f"{REGRESSION_FACTOR}x.")
+          f"{REGRESSION_FACTOR}x, {len(ratios)} ratio gate(s) met.")
     return 0
 
 
