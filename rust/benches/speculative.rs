@@ -8,7 +8,7 @@
 
 use std::time::{Duration, Instant};
 use ts_dp::baselines::make_generator;
-use ts_dp::config::{DemoStyle, Method, Task, DIFFUSION_STEPS, EXEC_STEPS, OBS_DIM};
+use ts_dp::config::{DemoStyle, Method, Task, DIFFUSION_STEPS, EMBED_DIM, EXEC_STEPS, OBS_DIM};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve_with, ServeOptions};
 use ts_dp::diffusion::DdpmSchedule;
@@ -282,6 +282,192 @@ fn bench_drafter_batching(sink: &mut BenchSink) {
     println!();
 }
 
+/// Kernels-layer probe: the runtime-dispatched GEMV paths at the
+/// drafter's real shapes, then the full serial K=16 drafter rollout on
+/// each path (forced scalar, lanes, int8-quantized weights). The
+/// equivalence tests pin scalar == lanes to ULP and int8 wave == int8
+/// serial bitwise; this measures the speed the dispatch buys. The
+/// committed `p95_ratio_min` entries encode the acceptance bars:
+/// lanes must beat forced-scalar by >= 2x on both the raw matmul and
+/// the end-to-end rollout, compared within the same run.
+fn bench_kernels(sink: &mut BenchSink) {
+    use ts_dp::drafter::model::{DrafterModel, D_MODEL, IN_DIM};
+    use ts_dp::drafter::ServingDrafter;
+    use ts_dp::kernels::Kernels;
+
+    println!("== raw-speed kernels: scalar vs lanes vs int8 at drafter shapes ==");
+    let percentile = |sorted: &[f64], q: f64| -> f64 {
+        sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+    };
+    let run = |f: &mut dyn FnMut()| -> (f64, f64, f64, f64) {
+        for _ in 0..5 {
+            f();
+        }
+        let iters = 60;
+        let mut secs = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            secs.push(t.elapsed().as_secs_f64());
+        }
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+        (mean, percentile(&secs, 0.50), percentile(&secs, 0.95), percentile(&secs, 0.99))
+    };
+
+    // Raw batched GEMV at the drafter's embedding + head shapes (the
+    // two matrices that dominate the rollout's multiply count).
+    let rows = 16usize;
+    let reps = 50usize;
+    let mut rng = Rng::seed_from_u64(31);
+    let w_in: Vec<f32> = rng.normal_vec(IN_DIM * D_MODEL);
+    let b_in: Vec<f32> = rng.normal_vec(D_MODEL);
+    let w_out: Vec<f32> = rng.normal_vec(D_MODEL * SEG);
+    let b_out: Vec<f32> = rng.normal_vec(SEG);
+    let xs_in: Vec<f32> = rng.normal_vec(rows * IN_DIM);
+    let xs_mid: Vec<f32> = rng.normal_vec(rows * D_MODEL);
+    let mut ys_mid = vec![0.0f32; rows * D_MODEL];
+    let mut ys_out = vec![0.0f32; rows * SEG];
+    let mut matmul_p50 = Vec::new();
+    for kern in [Kernels::scalar(), Kernels::lanes()] {
+        let path = kern.path().name();
+        let mut work = || {
+            for _ in 0..reps {
+                kern.gemv_rows(&w_in, &b_in, IN_DIM, D_MODEL, &xs_in, &mut ys_mid);
+                kern.gemv_rows(&w_out, &b_out, D_MODEL, SEG, &xs_mid, &mut ys_out);
+            }
+            std::hint::black_box(&ys_out);
+        };
+        let (mean, p50, p95, p99) = run(&mut work);
+        matmul_p50.push(p50);
+        sink.push(BenchRecord {
+            name: format!("kernels_matmul[path={path}]"),
+            params: vec![
+                ("path".into(), path.into()),
+                ("rows".into(), format!("{rows}")),
+                ("reps".into(), format!("{reps}")),
+            ],
+            p50_s: p50,
+            p95_s: p95,
+            p99_s: p99,
+            nfe: 0.0,
+            accept_rate: 0.0,
+            goodput_rps: (reps * rows) as f64 / mean.max(1e-12),
+        });
+    }
+    println!(
+        "matmul  scalar p50={:.6}s  lanes p50={:.6}s  speedup={:.2}x",
+        matmul_p50[0],
+        matmul_p50[1],
+        matmul_p50[0] / matmul_p50[1].max(1e-12)
+    );
+
+    // End-to-end serial rollout (K=16 KV-cached tokens) per path — what
+    // the drafter hot path actually pays per speculative round.
+    let model = DrafterModel::init(&mut Rng::seed_from_u64(33));
+    let cond: Vec<f32> = rng.normal_vec(EMBED_DIM);
+    let k = 16usize;
+    let rollouts = 4usize;
+    let xs: Vec<f32> = rng.normal_vec(k * SEG);
+    let mut rollout_p50 = Vec::new();
+    for (path, serving) in [
+        ("scalar", ServingDrafter::from_model(&model, Kernels::scalar())),
+        ("lanes", ServingDrafter::from_model(&model, Kernels::lanes())),
+        ("int8", ServingDrafter::quantize(&model, Kernels::lanes())),
+    ] {
+        let mut work = || {
+            for _ in 0..rollouts {
+                let mut roll = serving.start_rollout();
+                for j in 0..k {
+                    let y = roll.push(&xs[j * SEG..(j + 1) * SEG], 60 - j, &cond);
+                    std::hint::black_box(&y);
+                }
+            }
+        };
+        let (mean, p50, p95, p99) = run(&mut work);
+        rollout_p50.push((path, p50));
+        sink.push(BenchRecord {
+            name: format!("drafter_rollout[path={path}]"),
+            params: vec![
+                ("path".into(), path.into()),
+                ("k".into(), format!("{k}")),
+                ("rollouts".into(), format!("{rollouts}")),
+            ],
+            p50_s: p50,
+            p95_s: p95,
+            p99_s: p99,
+            nfe: k as f64 / 8.0,
+            accept_rate: 0.0,
+            goodput_rps: (rollouts * k) as f64 / mean.max(1e-12),
+        });
+    }
+    let scalar = rollout_p50[0].1;
+    for (path, p50) in &rollout_p50 {
+        println!(
+            "rollout [{path:<6}] p50={:.6}s  vs forced-scalar {:.2}x",
+            p50,
+            scalar / p50.max(1e-12)
+        );
+    }
+    println!();
+}
+
+/// Int8 acceptance-parity probe: distill a quick drafter, then measure
+/// the accept rate serving speculative segments with the f32 weights vs
+/// the int8 per-channel quantization of the SAME weights. Losslessness
+/// is structural (the target verifies every draft); accept rate is the
+/// only thing quantization can move, and the committed `accept_parity`
+/// gate bounds the drift at 2 points.
+fn bench_accept_parity(sink: &mut BenchSink) {
+    use ts_dp::config::{SpecParams, StageParams};
+    use ts_dp::drafter::train::{accept_stats, distill, DistillConfig};
+    use ts_dp::drafter::DistilledDrafter;
+
+    println!("== int8 drafter: accept-rate parity vs f32 (the quantization gate) ==");
+    let cfg = DistillConfig {
+        tasks: vec![Task::Lift],
+        trajectories_per_task: 2,
+        steps: 200,
+        batch: 6,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let (model, report) =
+        distill(&MockDenoiser::with_bias(0.0), &cfg, |_| {}).expect("distill");
+    println!(
+        "  (distillation: {} steps in {:.2}s, final x0 mse {:.6})",
+        cfg.steps,
+        t0.elapsed().as_secs_f64(),
+        report.final_loss
+    );
+    let eval = SpecParams { stages: StageParams::uniform(8), lambda: 0.3, sigma_scale: 1.0 };
+    let tasks = [Task::Lift, Task::PushT];
+    for (dtype, den) in [
+        ("f32", DistilledDrafter::new(Box::new(MockDenoiser::with_bias(0.0)), model.clone())),
+        ("int8", DistilledDrafter::new_int8(Box::new(MockDenoiser::with_bias(0.0)), &model)),
+    ] {
+        let t = Instant::now();
+        let r = accept_stats(&den, &tasks, DemoStyle::Ph, 3, eval, 42).expect("accept_stats");
+        let secs = t.elapsed().as_secs_f64();
+        println!(
+            "{dtype:<5} accept={:>5.1}%  nfe/seg={:>6.1}  ({secs:.2}s)",
+            r.accept_rate * 100.0,
+            r.mean_nfe
+        );
+        sink.push(BenchRecord {
+            name: format!("drafter_accept[dtype={dtype}]"),
+            params: vec![("dtype".into(), dtype.into())],
+            p50_s: secs,
+            p95_s: secs,
+            p99_s: secs,
+            nfe: r.mean_nfe,
+            accept_rate: r.accept_rate,
+            goodput_rps: 0.0,
+        });
+    }
+    println!();
+}
+
 /// Drafter-quality probe: accept rate and NFE of the mock's analytic
 /// drafter pair (two bias levels) vs the in-crate distilled Transformer
 /// drafter, untrained and after a quick distillation run — the
@@ -408,6 +594,8 @@ fn main() {
     bench_batched_serving(&mut sink);
     bench_sharded_serving(&mut sink);
     bench_drafter_batching(&mut sink);
+    bench_kernels(&mut sink);
+    bench_accept_parity(&mut sink);
     if !fast {
         bench_online_adaptation();
         bench_drafter_accept_rates();

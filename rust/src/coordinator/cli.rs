@@ -13,7 +13,7 @@ use crate::coordinator::batcher::Policy;
 use crate::coordinator::server::{serve, ServeOptions};
 use crate::coordinator::workload::{DrafterKind, WorkloadMix};
 use crate::drafter::backend::DistilledDrafter;
-use crate::drafter::model::DrafterModel;
+use crate::drafter::serving::{DrafterCheckpoint, DrafterDtype};
 use crate::policy::mock::MockDenoiser;
 use crate::policy::Denoiser;
 use crate::runtime::ModelRuntime;
@@ -61,21 +61,52 @@ impl BackendChoice {
     }
 }
 
-/// Load the optional distilled-drafter checkpoint named by `--drafter`.
-pub fn drafter_from_args(args: &Args) -> Result<Option<DrafterModel>> {
+/// Load the optional distilled-drafter checkpoint named by `--drafter`,
+/// honoring `--drafter-dtype f32|int8` (default: the checkpoint's native
+/// dtype; `int8` quantizes a v1 checkpoint in-situ at load).
+pub fn drafter_from_args(args: &Args) -> Result<Option<DrafterCheckpoint>> {
+    let want = match args.get("drafter-dtype") {
+        Some(d) => Some(DrafterDtype::parse(d)?),
+        None => None,
+    };
     match args.get("drafter") {
-        Some(p) => Ok(Some(DrafterModel::load(Path::new(p)).with_context(|| {
-            format!("loading drafter checkpoint {p} (produce one with `ts-dp distill-drafter`)")
-        })?)),
-        None => Ok(None),
+        Some(p) => {
+            Ok(Some(DrafterCheckpoint::load(Path::new(p), want).with_context(|| {
+                format!(
+                    "loading drafter checkpoint {p} (produce one with `ts-dp distill-drafter`)"
+                )
+            })?))
+        }
+        None => {
+            anyhow::ensure!(
+                want.is_none(),
+                "--drafter-dtype only takes effect with --drafter CHECKPOINT"
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// Map a loaded drafter checkpoint (or its absence) to the identity
+/// label stamped into session specs and metrics summaries.
+pub fn drafter_kind(ckpt: &Option<DrafterCheckpoint>) -> DrafterKind {
+    match ckpt {
+        None => DrafterKind::Base,
+        Some(c) => match c.dtype() {
+            DrafterDtype::F32 => DrafterKind::Distilled,
+            DrafterDtype::Int8 => DrafterKind::Int8,
+        },
     }
 }
 
 /// Swap a distilled drafter under `base` when a checkpoint was loaded;
 /// otherwise serve the base backend's own drafter.
-pub fn with_drafter(base: Box<dyn Denoiser>, model: &Option<DrafterModel>) -> Box<dyn Denoiser> {
-    match model {
-        Some(m) => Box::new(DistilledDrafter::new(base, m.clone())),
+pub fn with_drafter(
+    base: Box<dyn Denoiser>,
+    ckpt: &Option<DrafterCheckpoint>,
+) -> Box<dyn Denoiser> {
+    match ckpt {
+        Some(c) => Box::new(DistilledDrafter::from_checkpoint(base, c)),
         None => base,
     }
 }
@@ -338,8 +369,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // Drafter swap: load the checkpoint ONCE, stamp the workload's
     // drafter identity, and wrap every shard replica below.
     let drafter = drafter_from_args(args)?;
-    let drafter_kind =
-        if drafter.is_some() { DrafterKind::Distilled } else { DrafterKind::Base };
+    let drafter_kind = drafter_kind(&drafter);
     let workload = mix.drafter(drafter_kind).build();
     let backend = backend_choice(args)?;
     let opts = ServeOptions {

@@ -23,8 +23,13 @@
 //!   │  drafter backend selection (cli.rs): the replica is the base
 //!   │  backend (AOT artifacts or mock) either serving its own drafter
 //!   │  head, or wrapped in drafter::DistilledDrafter when a --drafter
-//!   │  checkpoint swaps a distilled Transformer drafter in
-//!   │  (workload::DrafterKind labels the swap in specs + metrics)
+//!   │  checkpoint swaps a distilled Transformer drafter in — f32 (v1)
+//!   │  or int8 per-channel quantized (v2 / --drafter-dtype int8),
+//!   │  executed through the kernels layer (crate::kernels: runtime
+//!   │  TSDP_KERNELS=scalar|lanes dispatch; batched waves are bitwise
+//!   │  identical to serial rollouts on every path and either dtype)
+//!   │  (workload::DrafterKind labels the swap in specs + metrics:
+//!   │  base / distilled / int8)
 //!   │
 //!   │  ADMISSION CONTROL (qos.rs, `--qos` runs only): each shard keeps
 //!   │  a pressure gauge — (queued + in-flight) × EWMA(compute secs) =

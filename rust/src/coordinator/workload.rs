@@ -41,8 +41,11 @@ pub enum DrafterKind {
     /// The base backend's own drafter head (AOT artifact or mock pair).
     #[default]
     Base,
-    /// An in-crate distilled Transformer drafter checkpoint.
+    /// An in-crate distilled Transformer drafter checkpoint (f32).
     Distilled,
+    /// A distilled drafter served from int8 per-channel quantized
+    /// weights (`--drafter-dtype int8` or an int8 v2 checkpoint).
+    Int8,
 }
 
 impl DrafterKind {
@@ -51,6 +54,7 @@ impl DrafterKind {
         match self {
             DrafterKind::Base => "base",
             DrafterKind::Distilled => "distilled",
+            DrafterKind::Int8 => "int8",
         }
     }
 }
@@ -1326,6 +1330,7 @@ mod tests {
         assert_eq!(DrafterKind::default(), DrafterKind::Base);
         assert_eq!(DrafterKind::Base.name(), "base");
         assert_eq!(DrafterKind::Distilled.name(), "distilled");
+        assert_eq!(DrafterKind::Int8.name(), "int8");
         let specs = WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 3, 1)
             .drafter(DrafterKind::Distilled)
             .build();

@@ -20,7 +20,11 @@
 
 use crate::config::{ACT_DIM, DIFFUSION_STEPS, HORIZON};
 use crate::diffusion::DdpmSchedule;
-use crate::drafter::model::{eps_from_x0, DrafterModel, WaveInput, WaveRollout};
+use crate::drafter::model::{eps_from_x0, DrafterModel};
+use crate::drafter::serving::{
+    DrafterCheckpoint, DrafterDtype, ServingDrafter, WaveInput, WaveRollout,
+};
+use crate::kernels::Kernels;
 use crate::policy::{Denoiser, RolloutRequest};
 use crate::runtime::NfeCounter;
 use anyhow::{ensure, Result};
@@ -31,10 +35,15 @@ const SEG: usize = HORIZON * ACT_DIM;
 
 /// A base denoiser with its drafter head replaced by a distilled
 /// Transformer drafter (see `drafter::train` for how one is produced and
-/// `ts-dp distill-drafter` / `serve --drafter` for the CLI path).
+/// `ts-dp distill-drafter` / `serve --drafter` for the CLI path). The
+/// drafter executes through [`ServingDrafter`] — process-wide kernel
+/// dispatch, f32 or int8 per-channel quantized weights.
 pub struct DistilledDrafter {
     base: Box<dyn Denoiser>,
-    model: DrafterModel,
+    serving: ServingDrafter,
+    /// The trainable f32 model, retained when this wrapper was built
+    /// from one (int8 checkpoints have no trainable form).
+    model: Option<DrafterModel>,
     sched: DdpmSchedule,
     /// Shared KV arena + scratch for the wave-batched rollout path.
     /// Interior mutability because [`Denoiser`] methods take `&self`;
@@ -44,19 +53,58 @@ pub struct DistilledDrafter {
 }
 
 impl DistilledDrafter {
-    /// Wrap `base`, serving drafter calls from `model`.
+    /// Wrap `base`, serving drafter calls from `model` at full f32
+    /// precision (bit-exact with the pre-kernels serving path under
+    /// `TSDP_KERNELS=scalar`).
     pub fn new(base: Box<dyn Denoiser>, model: DrafterModel) -> Self {
+        let serving = ServingDrafter::from_model(&model, Kernels::global());
+        Self::assemble(base, serving, Some(model))
+    }
+
+    /// Wrap `base`, serving drafter calls from an int8 per-channel
+    /// quantization of `model`.
+    pub fn new_int8(base: Box<dyn Denoiser>, model: &DrafterModel) -> Self {
+        Self::assemble(base, ServingDrafter::quantize(model, Kernels::global()), None)
+    }
+
+    /// Wrap `base`, serving drafter calls from an already-built serving
+    /// drafter (e.g. one loaded from an int8 v2 checkpoint).
+    pub fn from_serving(base: Box<dyn Denoiser>, serving: ServingDrafter) -> Self {
+        Self::assemble(base, serving, None)
+    }
+
+    /// Wrap `base`, serving drafter calls from a loaded checkpoint of
+    /// either dtype.
+    pub fn from_checkpoint(base: Box<dyn Denoiser>, ckpt: &DrafterCheckpoint) -> Self {
+        match ckpt {
+            DrafterCheckpoint::F32(m) => Self::new(base, m.clone()),
+            DrafterCheckpoint::Int8(s) => Self::from_serving(base, s.clone()),
+        }
+    }
+
+    fn assemble(
+        base: Box<dyn Denoiser>,
+        serving: ServingDrafter,
+        model: Option<DrafterModel>,
+    ) -> Self {
         Self {
             base,
+            serving,
             model,
             sched: DdpmSchedule::cosine(DIFFUSION_STEPS),
             wave: RefCell::new(WaveRollout::new()),
         }
     }
 
-    /// The distilled model serving the drafter calls.
-    pub fn model(&self) -> &DrafterModel {
-        &self.model
+    /// The trainable f32 model, when this wrapper still has one (int8
+    /// checkpoints don't — quantization is one-way).
+    pub fn model(&self) -> Option<&DrafterModel> {
+        self.model.as_ref()
+    }
+
+    /// Weight dtype the drafter serves with.
+    pub fn dtype(&self) -> DrafterDtype {
+        self.serving.dtype()
     }
 
     /// Peak KV-block demand of the wave arena since construction.
@@ -85,7 +133,7 @@ impl Denoiser for DistilledDrafter {
     fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Result<Vec<f32>> {
         ensure!(x.len() == SEG, "drafter_step x len {}", x.len());
         self.base.nfe().count_drafter(1);
-        let x0 = self.model.infer_step(x, t, cond);
+        let x0 = self.serving.start_rollout().push(x, t, cond);
         let mut eps = vec![0.0f32; SEG];
         eps_from_x0(&self.sched, t, x, &x0, &mut eps);
         Ok(eps)
@@ -103,7 +151,7 @@ impl Denoiser for DistilledDrafter {
         ensure!(t0 >= k, "drafter_rollout needs t0 >= k (got t0={t0}, k={k})");
         ensure!(x.len() == SEG, "drafter_rollout x len {}", x.len());
         ensure!(noise.len() == k * SEG, "drafter_rollout noise len {}", noise.len());
-        let mut state = self.model.start_rollout();
+        let mut state = self.serving.start_rollout();
         let mut samples = vec![0.0f32; k * SEG];
         let mut means = vec![0.0f32; k * SEG];
         let mut cur = x.to_vec();
@@ -184,7 +232,7 @@ impl Denoiser for DistilledDrafter {
                         cond: reqs[i].cond,
                     })
                     .collect();
-                wave.step(&self.model, &rows, &mut x0s);
+                wave.step(&self.serving, &rows, &mut x0s);
             }
             for (slot, &i) in active.iter().enumerate() {
                 let t = reqs[i].t0 - j;
@@ -414,6 +462,43 @@ mod tests {
         // 8+8+4 tokens = 2+2+1 blocks of 4; demand peaks once and every
         // later round reuses those blocks.
         assert_eq!(batched.arena_high_water(), 5, "steady-state block demand");
+    }
+
+    #[test]
+    fn int8_backend_waves_match_int8_serial_bitwise() {
+        // The wave-vs-serial bit-identity contract must survive
+        // quantization: an int8 drafter's batched rollouts equal its own
+        // serial rollouts bitwise (int8 vs f32 parity is a separate,
+        // accept-rate-level question).
+        let mut rng = Rng::seed_from_u64(40);
+        let model = DrafterModel::init(&mut rng);
+        let batched =
+            DistilledDrafter::new_int8(Box::new(MockDenoiser::with_bias(0.0)), &model);
+        let serial =
+            DistilledDrafter::new_int8(Box::new(MockDenoiser::with_bias(0.0)), &model);
+        assert_eq!(batched.dtype(), crate::drafter::serving::DrafterDtype::Int8);
+        assert!(batched.model().is_none(), "int8 wrappers drop the trainable form");
+        let ks = [2usize, 8, 5];
+        let (conds, xs, noises) = wave_inputs(&batched, &ks, 41);
+        let reqs: Vec<RolloutRequest<'_>> = ks
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| RolloutRequest {
+                k,
+                x: &xs[i],
+                t0: 58,
+                cond: &conds[i],
+                noise: &noises[i],
+            })
+            .collect();
+        let got = batched.drafter_rollout_many(&reqs).unwrap();
+        for (i, &k) in ks.iter().enumerate() {
+            let want =
+                serial.drafter_rollout(k, &xs[i], 58, &conds[i], &noises[i]).unwrap().unwrap();
+            let (gs, gm) = got[i].as_ref().unwrap();
+            assert_eq!(gs, &want.0, "request {i} samples");
+            assert_eq!(gm, &want.1, "request {i} means");
+        }
     }
 
     #[test]

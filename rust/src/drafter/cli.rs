@@ -1,9 +1,14 @@
 //! `ts-dp distill-drafter` — distill a Transformer drafter from the base
-//! model over the env fleet and write a serve-time checkpoint.
+//! model over the env fleet and write a serve-time checkpoint — and
+//! `ts-dp quantize-drafter` — convert a v1 f32 checkpoint into the int8
+//! per-channel v2 format.
 
 use crate::config::{DemoStyle, SpecParams, Task};
 use crate::coordinator::cli::backend_choice;
+use crate::drafter::model::DrafterModel;
+use crate::drafter::serving::ServingDrafter;
 use crate::drafter::train::{accept_scorecard, collect_trajectories, train_on, DistillConfig};
+use crate::kernels::Kernels;
 use crate::util::cli::Args;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -89,5 +94,34 @@ pub fn cmd_distill(args: &Args) -> Result<()> {
 
     model.save(&out)?;
     println!("saved drafter checkpoint to {}", out.display());
+    Ok(())
+}
+
+/// Entry point for `ts-dp quantize-drafter --drafter IN --out OUT`.
+///
+/// Loads a v1 f32 drafter checkpoint, quantizes every projection to
+/// int8 per-output-channel (absmax scales; biases and LayerNorms stay
+/// f32), and writes the v2 checkpoint that `serve --drafter OUT` (or any
+/// `--drafter-dtype int8` run) serves. Quantization is one-way: keep the
+/// v1 checkpoint if you still need the trainable weights.
+pub fn cmd_quantize(args: &Args) -> Result<()> {
+    let input = PathBuf::from(
+        args.get("drafter")
+            .context("quantize-drafter needs --drafter CHECKPOINT (a v1 f32 checkpoint)")?,
+    );
+    let out = PathBuf::from(args.get_or("out", "artifacts/drafter_int8.json"));
+    let model = DrafterModel::load(&input)
+        .with_context(|| format!("loading f32 drafter checkpoint {}", input.display()))?;
+    let quantized = ServingDrafter::quantize(&model, Kernels::global());
+    quantized.save(&out)?;
+    let v1 = std::fs::metadata(&input).map(|m| m.len()).unwrap_or(0);
+    let v2 = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "quantized {} ({} params) -> {} ({:.1}% of the f32 checkpoint bytes)",
+        input.display(),
+        model.n_params(),
+        out.display(),
+        100.0 * v2 as f64 / v1.max(1) as f64
+    );
     Ok(())
 }

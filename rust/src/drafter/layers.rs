@@ -10,10 +10,12 @@
 //! in the tests below — the same discipline `scheduler::nn` uses.
 
 use crate::config::DIFFUSION_STEPS;
+use crate::kernels::Kernels;
 use crate::scheduler::nn::Linear;
 
-/// Numerical floor inside LayerNorm's inverse standard deviation.
-const LN_EPS: f32 = 1e-5;
+/// Numerical floor inside LayerNorm's inverse standard deviation
+/// (re-exported from the kernels layer, which owns the fused forward).
+pub const LN_EPS: f32 = crate::kernels::LN_EPS;
 
 /// Number of sinusoidal timestep features fed to the drafter.
 pub const TIME_FEATS: usize = 8;
@@ -34,18 +36,22 @@ impl LayerNorm {
     }
 
     /// y = γ·(x − μ)/√(σ² + ε) + β. Returns `(mean, rstd)`, which the
-    /// backward pass needs alongside the raw input.
+    /// backward pass needs alongside the raw input. Dispatched through
+    /// the process-wide kernels handle; the original loop is preserved
+    /// verbatim as the kernels layer's `Scalar` path.
     pub fn forward(&self, x: &[f32], y: &mut [f32]) -> (f32, f32) {
         debug_assert_eq!(x.len(), self.gamma.len());
         debug_assert_eq!(y.len(), self.gamma.len());
-        let n = x.len() as f32;
-        let mean = x.iter().sum::<f32>() / n;
-        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
-        let rstd = 1.0 / (var + LN_EPS).sqrt();
-        for i in 0..x.len() {
-            y[i] = self.gamma[i] * (x[i] - mean) * rstd + self.beta[i];
-        }
-        (mean, rstd)
+        Kernels::global().layernorm(&self.gamma, &self.beta, LN_EPS, x, y)
+    }
+
+    /// [`LayerNorm::forward`] with an explicit kernels handle (the
+    /// serving drafter threads its own handle so a forced-path rollout
+    /// never mixes arithmetic with the global path).
+    pub fn forward_with(&self, kern: Kernels, x: &[f32], y: &mut [f32]) -> (f32, f32) {
+        debug_assert_eq!(x.len(), self.gamma.len());
+        debug_assert_eq!(y.len(), self.gamma.len());
+        kern.layernorm(&self.gamma, &self.beta, LN_EPS, x, y)
     }
 
     /// Backward pass: accumulates dγ/dβ and **adds** dL/dx into `dx`
@@ -84,7 +90,9 @@ impl LayerNorm {
 }
 
 /// Backward of `y = W x + b` for a shared [`Linear`]: accumulates dW/db
-/// and (when `dx` is given) **adds** dL/dx into it.
+/// and (when `dx` is given) **adds** dL/dx into it. Routed through the
+/// kernels layer's gradient primitives, which are reduction-free and
+/// therefore bit-exact with the original loops on every kernel path.
 pub fn linear_backward(
     l: &Linear,
     x: &[f32],
@@ -95,20 +103,27 @@ pub fn linear_backward(
 ) {
     debug_assert_eq!(x.len(), l.in_dim);
     debug_assert_eq!(dy.len(), l.out_dim);
-    for o in 0..l.out_dim {
-        db[o] += dy[o];
-        let row = &mut dw[o * l.in_dim..(o + 1) * l.in_dim];
-        for (g, xv) in row.iter_mut().zip(x) {
-            *g += dy[o] * xv;
-        }
-    }
+    let kern = Kernels::global();
+    kern.outer_acc(x, dy, dw, db);
     if let Some(dx) = dx {
-        for o in 0..l.out_dim {
-            let row = &l.w[o * l.in_dim..(o + 1) * l.in_dim];
-            for (dxi, wv) in dx.iter_mut().zip(row) {
-                *dxi += dy[o] * wv;
-            }
-        }
+        kern.gemv_t_acc(&l.w, l.in_dim, l.out_dim, dy, dx);
+    }
+}
+
+/// Numerically-stable in-place softmax over one attention row. Shared
+/// by the training-side sequence forward and both serving rollout forms
+/// (moved here verbatim from `drafter::model`) so the three can never
+/// drift numerically.
+pub fn softmax_inplace(scores: &mut [f32]) {
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    let inv = 1.0 / sum.max(1e-20);
+    for s in scores.iter_mut() {
+        *s *= inv;
     }
 }
 

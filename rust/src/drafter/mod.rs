@@ -16,37 +16,49 @@
 //!        │                  rollout-consistency windows
 //!        │                              │
 //!        │                              ▼
-//!        │                  model::DrafterModel  ──save/load──▶ JSON
-//!        │                  (1-block causal Transformer         checkpoint
-//!        │                   over denoising-step tokens)            │
-//!        ▼                                                          ▼
-//! backend::DistilledDrafter::new(base, model)  ◀── serve --drafter PATH
+//!        │                  model::DrafterModel ──save/load──▶ v1 JSON
+//!        │                  (1-block causal Transformer        checkpoint
+//!        │                   over denoising-step tokens)           │
+//!        │                              │          ts-dp quantize-drafter
+//!        │                              ▼                          ▼
+//!        │                  serving::ServingDrafter ◀──────── int8 v2 JSON
+//!        │                  (inference-only: kernels-layer      checkpoint
+//!        │                   dispatch, f32 or int8 per-channel
+//!        │                   weights; owns RolloutState serial
+//!        │                   + WaveRollout batched decoding)
+//!        ▼                              ▼
+//! backend::DistilledDrafter  ◀── serve --drafter PATH [--drafter-dtype]
 //!   · target_* / encode delegate to base (losslessness untouched)
-//!   · drafter_step / natively fused drafter_rollout from the model
-//!     (Some for every k, KV-cached causal decode, k/8 NFE)
+//!   · drafter_step / natively fused drafter_rollout via
+//!     serving::RolloutState (Some for every k, KV-cached causal
+//!     decode, k/8 NFE)
 //!   · drafter_rollout_many: continuous batching at draft-step
 //!     granularity — every in-flight draft advances one wave per step
-//!     over a shared per-shard KV arena (arena::KvArena), bit-identical
-//!     to per-request rollouts
+//!     over a shared per-shard KV arena (arena::KvArena), projections
+//!     executed as blocked batched GEMVs, bit-identical to per-request
+//!     rollouts on every kernel path and either dtype
 //! ```
 //!
-//! `ts-dp distill-drafter` drives the pipeline from the CLI; the serving
-//! fleet (`serve --drafter`), the open-loop harness (`load-sweep
-//! --drafter`) and the episode evaluator (`episode --drafter`) all wrap
-//! their replicas through [`DistilledDrafter`], and
-//! [`crate::coordinator::workload::DrafterKind`] labels the swap in
-//! session specs and metrics summaries.
+//! `ts-dp distill-drafter` drives the pipeline from the CLI and `ts-dp
+//! quantize-drafter` converts a v1 checkpoint to int8; the serving fleet
+//! (`serve --drafter`), the open-loop harness (`load-sweep --drafter`)
+//! and the episode evaluator (`episode --drafter`) all wrap their
+//! replicas through [`DistilledDrafter`], and
+//! [`crate::coordinator::workload::DrafterKind`] labels the swap (and
+//! its dtype) in session specs and metrics summaries.
 
 pub mod arena;
 pub mod backend;
 pub mod cli;
 pub mod layers;
 pub mod model;
+pub mod serving;
 pub mod train;
 
 pub use arena::{ChainId, KvArena};
 pub use backend::DistilledDrafter;
 pub use model::DrafterModel;
+pub use serving::{DrafterCheckpoint, DrafterDtype, ServingDrafter};
 pub use train::{
     accept_scorecard, accept_stats, collect_trajectories, distill, train_on, DistillConfig,
 };

@@ -23,8 +23,10 @@
 
 use crate::config::{ACT_DIM, DIFFUSION_STEPS, EMBED_DIM, HORIZON};
 use crate::diffusion::DdpmSchedule;
-use crate::drafter::arena::{ChainId, KvArena};
-use crate::drafter::layers::{linear_backward, time_features, LayerNorm, TIME_FEATS};
+use crate::drafter::layers::{
+    linear_backward, softmax_inplace, time_features, LayerNorm, TIME_FEATS,
+};
+use crate::kernels::Kernels;
 use crate::scheduler::nn::Linear;
 use crate::util::json::Json;
 use crate::util::math::{add_scaled, dot};
@@ -228,20 +230,6 @@ impl DrafterGrads {
     }
 }
 
-/// Numerically-stable in-place softmax over one attention row.
-fn softmax_inplace(scores: &mut [f32]) {
-    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for s in scores.iter_mut() {
-        *s = (*s - max).exp();
-        sum += *s;
-    }
-    let inv = 1.0 / sum.max(1e-20);
-    for s in scores.iter_mut() {
-        *s *= inv;
-    }
-}
-
 impl DrafterModel {
     /// Xavier-initialized model.
     pub fn init(rng: &mut Rng) -> Self {
@@ -278,6 +266,10 @@ impl DrafterModel {
         let l = ts.len();
         debug_assert_eq!(xs.len(), l * SEG);
         let scale = 1.0 / (D_MODEL as f32).sqrt();
+        // Attention reductions go through the same global kernels handle
+        // the serving rollouts use, so training-forward == rollout stays
+        // bit-identical on whichever path the process runs.
+        let kern = Kernels::global();
         let mut cache = SeqCache {
             inputs: Vec::with_capacity(l),
             e: Vec::with_capacity(l),
@@ -315,12 +307,12 @@ impl DrafterModel {
 
             let mut attn = vec![0.0f32; j + 1];
             for i in 0..=j {
-                attn[i] = dot(&q, &cache.k[i]) * scale;
+                attn[i] = kern.dot(&q, &cache.k[i]) * scale;
             }
             softmax_inplace(&mut attn);
             let mut ctx = vec![0.0f32; D_MODEL];
             for i in 0..=j {
-                add_scaled(&mut ctx, &cache.v[i], attn[i]);
+                kern.add_scaled(&mut ctx, &cache.v[i], attn[i]);
             }
             let mut o = vec![0.0f32; D_MODEL];
             self.wo.forward(&ctx, &mut o);
@@ -522,17 +514,14 @@ impl DrafterModel {
         }
     }
 
-    /// Start an incremental rollout (KV-cached causal decoding) — the
-    /// fused-K-step serving path of
-    /// [`crate::drafter::backend::DistilledDrafter`].
-    pub fn start_rollout(&self) -> RolloutState<'_> {
-        RolloutState { model: self, ks: Vec::new(), vs: Vec::new() }
-    }
-
     /// Single-step x̂0 prediction with no rollout context (sequence
-    /// length 1) — what `drafter_step` serves.
+    /// length 1) — what `drafter_step` serves. Convenience wrapper that
+    /// builds a throwaway f32 [`crate::drafter::ServingDrafter`] on the
+    /// global kernel path; hot paths hold a `ServingDrafter` instead.
     pub fn infer_step(&self, x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
-        self.start_rollout().push(x, t, cond)
+        let serving = crate::drafter::serving::ServingDrafter::from_model(self, Kernels::global());
+        let mut roll = serving.start_rollout();
+        roll.push(x, t, cond)
     }
 
     fn flat_views(&self) -> [&[f32]; 22] {
@@ -673,262 +662,6 @@ impl DrafterModel {
     }
 }
 
-/// Incremental causal decoding state: keys/values of the rollout's
-/// earlier denoising-step tokens. `push` runs one token in O(context)
-/// attention cost — the fused rollout is one growing sequence, not K
-/// independent forwards.
-pub struct RolloutState<'m> {
-    model: &'m DrafterModel,
-    ks: Vec<Vec<f32>>,
-    vs: Vec<Vec<f32>>,
-}
-
-impl RolloutState<'_> {
-    /// Tokens pushed so far.
-    pub fn len(&self) -> usize {
-        self.ks.len()
-    }
-
-    /// True before the first token.
-    pub fn is_empty(&self) -> bool {
-        self.ks.is_empty()
-    }
-
-    /// Append the next denoising-step token and return its x̂0
-    /// prediction. Identical arithmetic (and arithmetic order) to
-    /// [`DrafterModel::forward_seq`], so a teacher-forced training
-    /// sequence and an incremental rollout over the same tokens are
-    /// bit-identical.
-    pub fn push(&mut self, x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
-        let m = self.model;
-        let scale = 1.0 / (D_MODEL as f32).sqrt();
-        let input = DrafterModel::token_input(x, t, cond);
-        let mut e = vec![0.0f32; D_MODEL];
-        m.w_in.forward(&input, &mut e);
-        let mut n1 = vec![0.0f32; D_MODEL];
-        m.ln1.forward(&e, &mut n1);
-        let mut q = vec![0.0f32; D_MODEL];
-        m.wq.forward(&n1, &mut q);
-        let mut k = vec![0.0f32; D_MODEL];
-        m.wk.forward(&n1, &mut k);
-        let mut v = vec![0.0f32; D_MODEL];
-        m.wv.forward(&n1, &mut v);
-        self.ks.push(k);
-        self.vs.push(v);
-        let j = self.ks.len() - 1;
-
-        let mut attn = vec![0.0f32; j + 1];
-        for i in 0..=j {
-            attn[i] = dot(&q, &self.ks[i]) * scale;
-        }
-        softmax_inplace(&mut attn);
-        let mut ctx = vec![0.0f32; D_MODEL];
-        for i in 0..=j {
-            add_scaled(&mut ctx, &self.vs[i], attn[i]);
-        }
-        let mut o = vec![0.0f32; D_MODEL];
-        m.wo.forward(&ctx, &mut o);
-        let mut h = vec![0.0f32; D_MODEL];
-        for i in 0..D_MODEL {
-            h[i] = e[i] + o[i];
-        }
-        let mut n2 = vec![0.0f32; D_MODEL];
-        m.ln2.forward(&h, &mut n2);
-        let mut f1 = vec![0.0f32; D_FF];
-        m.w1.forward(&n2, &mut f1);
-        for a in f1.iter_mut() {
-            *a = a.tanh();
-        }
-        let mut f2 = vec![0.0f32; D_MODEL];
-        m.w2.forward(&f1, &mut f2);
-        let mut z = vec![0.0f32; D_MODEL];
-        for i in 0..D_MODEL {
-            z[i] = h[i] + f2[i];
-        }
-        let mut nf = vec![0.0f32; D_MODEL];
-        m.lnf.forward(&z, &mut nf);
-        let mut y = vec![0.0f32; SEG];
-        m.w_out.forward(&nf, &mut y);
-        for a in y.iter_mut() {
-            *a = a.tanh();
-        }
-        y
-    }
-}
-
-/// One active row of a drafter wave: the session's KV chain in the
-/// shared arena plus the borrowed inputs for its next denoising-step
-/// token.
-#[derive(Debug)]
-pub struct WaveInput<'a> {
-    /// The session's chain in the wave's [`KvArena`].
-    pub chain: ChainId,
-    /// Current latent, SEG floats.
-    pub x: &'a [f32],
-    /// Timestep of this token.
-    pub t: usize,
-    /// Conditioning vector, EMBED_DIM floats.
-    pub cond: &'a [f32],
-}
-
-/// Reusable per-row activation scratch for [`WaveRollout::step`].
-/// Every buffer is fully overwritten each wave, so reuse across waves
-/// (and across rounds) cannot leak state between sessions.
-#[derive(Debug)]
-struct WaveSlot {
-    input: Vec<f32>,
-    e: Vec<f32>,
-    n1: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    attn: Vec<f32>,
-    ctx: Vec<f32>,
-    o: Vec<f32>,
-    h: Vec<f32>,
-    n2: Vec<f32>,
-    f1: Vec<f32>,
-    f2: Vec<f32>,
-    z: Vec<f32>,
-    nf: Vec<f32>,
-}
-
-impl WaveSlot {
-    fn new() -> Self {
-        Self {
-            input: Vec::with_capacity(IN_DIM),
-            e: vec![0.0; D_MODEL],
-            n1: vec![0.0; D_MODEL],
-            q: vec![0.0; D_MODEL],
-            k: vec![0.0; D_MODEL],
-            v: vec![0.0; D_MODEL],
-            attn: Vec::new(),
-            ctx: vec![0.0; D_MODEL],
-            o: vec![0.0; D_MODEL],
-            h: vec![0.0; D_MODEL],
-            n2: vec![0.0; D_MODEL],
-            f1: vec![0.0; D_FF],
-            f2: vec![0.0; D_MODEL],
-            z: vec![0.0; D_MODEL],
-            nf: vec![0.0; D_MODEL],
-        }
-    }
-}
-
-/// Continuous-batched drafter decoding: many sessions' rollouts advance
-/// one denoising-step token per [`WaveRollout::step`] wave, their KV
-/// rows living in one shared per-shard [`KvArena`] instead of private
-/// per-request buffers. Sessions join and leave the wave at step
-/// granularity — a row just stops appearing in `rows` and its chain is
-/// [`released`](WaveRollout::release).
-///
-/// Determinism contract: per-row arithmetic (and arithmetic order) is
-/// exactly [`RolloutState::push`]'s, and attention reads only the row's
-/// own chain, so a wave-stepped rollout is **bit-identical** to the
-/// serial per-request rollout no matter which sessions share its waves.
-/// Scratch and KV blocks are reused across waves, so steady-state
-/// serving allocates nothing in this path — that, plus K/V locality, is
-/// the whole speedup; the bits never change.
-#[derive(Debug)]
-pub struct WaveRollout {
-    arena: KvArena,
-    slots: Vec<WaveSlot>,
-}
-
-impl WaveRollout {
-    /// Empty wave state with a fresh [`KvArena`] of drafter-width rows.
-    pub fn new() -> Self {
-        Self { arena: KvArena::new(D_MODEL), slots: Vec::new() }
-    }
-
-    /// Open a KV chain for a session joining the wave.
-    pub fn new_chain(&mut self) -> ChainId {
-        self.arena.new_chain()
-    }
-
-    /// Reclaim a session's KV blocks when it leaves the wave.
-    pub fn release(&mut self, chain: ChainId) {
-        self.arena.release(chain)
-    }
-
-    /// The shared KV arena (metrics: high-water mark, blocks in use).
-    pub fn arena(&self) -> &KvArena {
-        &self.arena
-    }
-
-    /// Advance every row one denoising-step token. Writes the rows' x̂0
-    /// predictions into `out` (rows.len()×SEG, request order), growing
-    /// per-row scratch only up to the widest wave ever seen.
-    pub fn step(&mut self, model: &DrafterModel, rows: &[WaveInput<'_>], out: &mut Vec<f32>) {
-        let scale = 1.0 / (D_MODEL as f32).sqrt();
-        while self.slots.len() < rows.len() {
-            self.slots.push(WaveSlot::new());
-        }
-        out.clear();
-        out.resize(rows.len() * SEG, 0.0);
-        // Embed + QKV over the active row set, each row appending its
-        // KV to its own chain.
-        for (slot, row) in self.slots.iter_mut().zip(rows) {
-            debug_assert_eq!(row.x.len(), SEG);
-            debug_assert_eq!(row.cond.len(), EMBED_DIM);
-            slot.input.clear();
-            slot.input.extend_from_slice(row.x);
-            slot.input.extend_from_slice(&time_features(row.t));
-            slot.input.extend_from_slice(row.cond);
-            model.w_in.forward(&slot.input, &mut slot.e);
-            model.ln1.forward(&slot.e, &mut slot.n1);
-            model.wq.forward(&slot.n1, &mut slot.q);
-            model.wk.forward(&slot.n1, &mut slot.k);
-            model.wv.forward(&slot.n1, &mut slot.v);
-            self.arena.push_kv(row.chain, &slot.k, &slot.v);
-        }
-        // Causal attention: each row reads only its own chain, so wave
-        // composition cannot influence any row's context.
-        for (slot, row) in self.slots.iter_mut().zip(rows) {
-            let len = self.arena.chain_len(row.chain);
-            slot.attn.clear();
-            slot.attn.resize(len, 0.0);
-            for i in 0..len {
-                slot.attn[i] = dot(&slot.q, self.arena.k_row(row.chain, i)) * scale;
-            }
-            softmax_inplace(&mut slot.attn);
-            slot.ctx.fill(0.0);
-            for i in 0..len {
-                add_scaled(&mut slot.ctx, self.arena.v_row(row.chain, i), slot.attn[i]);
-            }
-        }
-        // Attention output + MLP + head, straight into the caller's
-        // output rows.
-        for (r, slot) in self.slots.iter_mut().take(rows.len()).enumerate() {
-            model.wo.forward(&slot.ctx, &mut slot.o);
-            for i in 0..D_MODEL {
-                slot.h[i] = slot.e[i] + slot.o[i];
-            }
-            model.ln2.forward(&slot.h, &mut slot.n2);
-            model.w1.forward(&slot.n2, &mut slot.f1);
-            for a in slot.f1.iter_mut() {
-                *a = a.tanh();
-            }
-            model.w2.forward(&slot.f1, &mut slot.f2);
-            for i in 0..D_MODEL {
-                slot.z[i] = slot.h[i] + slot.f2[i];
-            }
-            model.lnf.forward(&slot.z, &mut slot.nf);
-            let y = &mut out[r * SEG..(r + 1) * SEG];
-            model.w_out.forward(&slot.nf, y);
-            for a in y.iter_mut() {
-                *a = a.tanh();
-            }
-        }
-    }
-}
-
-impl Default for WaveRollout {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 /// Convert an x̂0 prediction into the ε the [`crate::policy::Denoiser`]
 /// contract expects: ε = (x_t − √ᾱ_t·x̂0)/√(1−ᾱ_t). Exactly inverts the
 /// schedule's `predict_x0` for |x̂0| ≤ 1 (which tanh guarantees), so the
@@ -953,96 +686,6 @@ mod tests {
         let ts: Vec<usize> = (0..l).map(|j| 60 - j).collect();
         let cond = rng.normal_vec(EMBED_DIM);
         (xs, ts, cond)
-    }
-
-    #[test]
-    fn wave_rollout_matches_rollout_state_bitwise() {
-        // Satellite acceptance: mid-wave join/leave bit-identity vs
-        // per-request rollouts. Three sessions share one arena —
-        // A spans waves 0..5, B leaves mid-wave after wave 2 (its k is
-        // exhausted), C joins mid-stream at wave 3 — and every token
-        // must equal the session's solo RolloutState rollout bitwise.
-        let mut rng = Rng::seed_from_u64(7);
-        let model = DrafterModel::init(&mut rng);
-        let (xs_a, ts_a, cond_a) = small_inputs(5, 11);
-        let (xs_b, ts_b, cond_b) = small_inputs(3, 12);
-        let (xs_c, ts_c, cond_c) = small_inputs(2, 13);
-
-        let solo = |xs: &[f32], ts: &[usize], cond: &[f32]| -> Vec<f32> {
-            let mut roll = model.start_rollout();
-            let mut out = Vec::new();
-            for j in 0..ts.len() {
-                out.extend(roll.push(&xs[j * SEG..(j + 1) * SEG], ts[j], cond));
-            }
-            out
-        };
-        let want_a = solo(&xs_a, &ts_a, &cond_a);
-        let want_b = solo(&xs_b, &ts_b, &cond_b);
-        let want_c = solo(&xs_c, &ts_c, &cond_c);
-
-        let mut wave = WaveRollout::new();
-        let ca = wave.new_chain();
-        let cb = wave.new_chain();
-        let mut cc = None;
-        let (mut got_a, mut got_b, mut got_c) = (Vec::new(), Vec::new(), Vec::new());
-        let mut out = Vec::new();
-        for j in 0..5 {
-            let mut rows = vec![WaveInput {
-                chain: ca,
-                x: &xs_a[j * SEG..(j + 1) * SEG],
-                t: ts_a[j],
-                cond: &cond_a,
-            }];
-            if j < 3 {
-                rows.push(WaveInput {
-                    chain: cb,
-                    x: &xs_b[j * SEG..(j + 1) * SEG],
-                    t: ts_b[j],
-                    cond: &cond_b,
-                });
-            }
-            if j >= 3 {
-                let chain = *cc.get_or_insert_with(|| wave.new_chain());
-                let jc = j - 3;
-                rows.push(WaveInput {
-                    chain,
-                    x: &xs_c[jc * SEG..(jc + 1) * SEG],
-                    t: ts_c[jc],
-                    cond: &cond_c,
-                });
-            }
-            wave.step(&model, &rows, &mut out);
-            got_a.extend_from_slice(&out[..SEG]);
-            if j < 3 {
-                got_b.extend_from_slice(&out[SEG..2 * SEG]);
-            } else {
-                got_c.extend_from_slice(&out[SEG..2 * SEG]);
-            }
-            if j == 2 {
-                wave.release(cb);
-            }
-        }
-        wave.release(ca);
-        wave.release(cc.unwrap());
-        assert_eq!(got_a, want_a, "session A bitwise");
-        assert_eq!(got_b, want_b, "session B bitwise");
-        assert_eq!(got_c, want_c, "session C bitwise");
-        assert_eq!(wave.arena().blocks_in_use(), 0, "round-end reclamation");
-        assert!(wave.arena().high_water() >= 2, "arena really was shared");
-    }
-
-    #[test]
-    fn rollout_state_matches_forward_seq_bitwise() {
-        let mut rng = Rng::seed_from_u64(0);
-        let model = DrafterModel::init(&mut rng);
-        let (xs, ts, cond) = small_inputs(5, 1);
-        let (seq_out, _) = model.forward_seq(&xs, &ts, &cond);
-        let mut roll = model.start_rollout();
-        for j in 0..5 {
-            let y = roll.push(&xs[j * SEG..(j + 1) * SEG], ts[j], &cond);
-            assert_eq!(&seq_out[j * SEG..(j + 1) * SEG], &y[..], "token {j}");
-        }
-        assert_eq!(roll.len(), 5);
     }
 
     #[test]

@@ -1,0 +1,924 @@
+//! Serve-time drafter execution: kernel-dispatched rollouts over f32 or
+//! int8 per-channel quantized weights.
+//!
+//! Training owns [`DrafterModel`] (f32 weights + backprop); serving owns
+//! [`ServingDrafter`] — an inference-only view that pins a
+//! [`Kernels`] handle and stores each projection as either the f32
+//! matrix or its int8 per-output-channel quantization
+//! ([`crate::kernels::QuantizedLinear`]). Both rollout forms live here:
+//!
+//! * [`RolloutState`] — serial KV-cached causal decoding, one session.
+//! * [`WaveRollout`] — continuous-batched decoding: every in-flight
+//!   session advances one denoising-step token per wave, KV rows in a
+//!   shared per-shard [`KvArena`], with the wave's projections executed
+//!   as **blocked batched GEMVs** ([`Kernels::gemv_rows`]) so each
+//!   weight row streams through cache once per wave instead of once per
+//!   session.
+//!
+//! Determinism contract (unchanged from the pre-kernels code): per-row
+//! arithmetic and arithmetic order are identical between the two forms —
+//! batched GEMV is bitwise equal to per-row GEMV by construction — so a
+//! wave-stepped rollout is **bit-identical** to the serial per-request
+//! rollout on every kernel path and either dtype, no matter which
+//! sessions share its waves. The tests below pin serial == wave for f32
+//! and int8, and serial == `forward_seq` (training forward) for f32.
+//!
+//! Quantized checkpoints are a distinct JSON format
+//! ([`CHECKPOINT_FORMAT_INT8`], "v2"): int8 weights + per-channel scales
+//! + f32 biases/LayerNorms, produced by `ts-dp quantize-drafter` (or
+//! in-situ from a v1 checkpoint at load). Quantizing only the drafter
+//! keeps served actions lossless — the target still verifies every
+//! draft; only the accept rate (the speedup) is at stake, and that is
+//! gated by accept-parity tests and the bench suite.
+
+use crate::config::{ACT_DIM, DIFFUSION_STEPS, EMBED_DIM, HORIZON};
+use crate::drafter::arena::{ChainId, KvArena};
+use crate::drafter::layers::{softmax_inplace, time_features, LayerNorm, TIME_FEATS};
+use crate::drafter::model::{DrafterModel, D_FF, D_MODEL, IN_DIM};
+use crate::kernels::{Kernels, QuantizedLinear};
+use crate::scheduler::nn::Linear;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Flattened segment size (one token's latent).
+const SEG: usize = HORIZON * ACT_DIM;
+
+/// Checkpoint format tag for int8 per-channel quantized drafters.
+pub const CHECKPOINT_FORMAT_INT8: &str = "ts-dp-drafter-int8-v2";
+
+/// Weight storage dtype of a serving drafter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrafterDtype {
+    /// Full-precision f32 weights (bit-exact with training).
+    F32,
+    /// Int8 per-output-channel quantized weights, f32 accumulate.
+    Int8,
+}
+
+impl DrafterDtype {
+    /// Stable label (`f32` / `int8`) for metrics and CLI round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrafterDtype::F32 => "f32",
+            DrafterDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `--drafter-dtype` flag value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DrafterDtype::F32),
+            "int8" => Ok(DrafterDtype::Int8),
+            other => bail!("unknown drafter dtype '{other}' (expected f32|int8)"),
+        }
+    }
+}
+
+/// One projection of the serving drafter: f32 or int8 storage, same
+/// GEMV contract either way.
+#[derive(Debug, Clone)]
+enum Proj {
+    F32(Linear),
+    Int8(QuantizedLinear),
+}
+
+impl Proj {
+    fn forward(&self, kern: Kernels, x: &[f32], y: &mut [f32]) {
+        match self {
+            Proj::F32(l) => kern.gemv(&l.w, &l.b, l.in_dim, l.out_dim, x, y),
+            Proj::Int8(q) => q.forward(kern, x, y),
+        }
+    }
+
+    fn forward_rows(&self, kern: Kernels, xs: &[f32], ys: &mut [f32]) {
+        match self {
+            Proj::F32(l) => kern.gemv_rows(&l.w, &l.b, l.in_dim, l.out_dim, xs, ys),
+            Proj::Int8(q) => q.forward_rows(kern, xs, ys),
+        }
+    }
+}
+
+/// Inference-only drafter: the [`DrafterModel`] architecture with a
+/// pinned kernel path and per-projection f32/int8 storage. Cheap to
+/// clone relative to serving traffic (one copy per shard), and the only
+/// type the rollout paths touch — training never sees it.
+#[derive(Debug, Clone)]
+pub struct ServingDrafter {
+    kern: Kernels,
+    w_in: Proj,
+    ln1: LayerNorm,
+    wq: Proj,
+    wk: Proj,
+    wv: Proj,
+    wo: Proj,
+    ln2: LayerNorm,
+    w1: Proj,
+    w2: Proj,
+    lnf: LayerNorm,
+    w_out: Proj,
+}
+
+/// `(name, in_dim, out_dim)` of every projection in canonical
+/// (checkpoint) order.
+const PROJ_DIMS: [(&str, usize, usize); 8] = [
+    ("w_in", IN_DIM, D_MODEL),
+    ("wq", D_MODEL, D_MODEL),
+    ("wk", D_MODEL, D_MODEL),
+    ("wv", D_MODEL, D_MODEL),
+    ("wo", D_MODEL, D_MODEL),
+    ("w1", D_MODEL, D_FF),
+    ("w2", D_FF, D_MODEL),
+    ("w_out", D_MODEL, SEG),
+];
+
+impl ServingDrafter {
+    /// Full-precision serving view of a trained model: projections are
+    /// cloned f32 weights, arithmetic is bit-exact with `m`'s own
+    /// forward on the same kernel path.
+    pub fn from_model(m: &DrafterModel, kern: Kernels) -> Self {
+        Self {
+            kern,
+            w_in: Proj::F32(m.w_in.clone()),
+            ln1: m.ln1.clone(),
+            wq: Proj::F32(m.wq.clone()),
+            wk: Proj::F32(m.wk.clone()),
+            wv: Proj::F32(m.wv.clone()),
+            wo: Proj::F32(m.wo.clone()),
+            ln2: m.ln2.clone(),
+            w1: Proj::F32(m.w1.clone()),
+            w2: Proj::F32(m.w2.clone()),
+            lnf: m.lnf.clone(),
+            w_out: Proj::F32(m.w_out.clone()),
+        }
+    }
+
+    /// Int8 per-output-channel quantization of a trained model: every
+    /// projection absmax-quantized per output row; biases and LayerNorms
+    /// stay f32 (they're O(width), the matrices are O(width²)).
+    pub fn quantize(m: &DrafterModel, kern: Kernels) -> Self {
+        let q = |l: &Linear| Proj::Int8(QuantizedLinear::quantize(&l.w, &l.b, l.in_dim, l.out_dim));
+        Self {
+            kern,
+            w_in: q(&m.w_in),
+            ln1: m.ln1.clone(),
+            wq: q(&m.wq),
+            wk: q(&m.wk),
+            wv: q(&m.wv),
+            wo: q(&m.wo),
+            ln2: m.ln2.clone(),
+            w1: q(&m.w1),
+            w2: q(&m.w2),
+            lnf: m.lnf.clone(),
+            w_out: q(&m.w_out),
+        }
+    }
+
+    /// Weight dtype (uniform across projections by construction).
+    pub fn dtype(&self) -> DrafterDtype {
+        match self.w_in {
+            Proj::F32(_) => DrafterDtype::F32,
+            Proj::Int8(_) => DrafterDtype::Int8,
+        }
+    }
+
+    /// The kernel handle every rollout through this drafter uses.
+    pub fn kernels(&self) -> Kernels {
+        self.kern
+    }
+
+    /// Start a serial KV-cached rollout.
+    pub fn start_rollout(&self) -> RolloutState<'_> {
+        RolloutState { d: self, ks: Vec::new(), vs: Vec::new() }
+    }
+
+    fn projs(&self) -> [&Proj; 8] {
+        [&self.w_in, &self.wq, &self.wk, &self.wv, &self.wo, &self.w1, &self.w2, &self.w_out]
+    }
+
+    /// Serialize an int8 drafter to the v2 checkpoint format. Errors on
+    /// an f32 drafter — full-precision checkpoints are the v1 format
+    /// owned by [`DrafterModel`].
+    pub fn to_json(&self) -> Result<Json> {
+        ensure!(
+            self.dtype() == DrafterDtype::Int8,
+            "only int8 drafters serialize as {CHECKPOINT_FORMAT_INT8}; save f32 models via DrafterModel"
+        );
+        let mut q_all: Vec<f64> = Vec::new();
+        let mut scales_all: Vec<f64> = Vec::new();
+        let mut biases_all: Vec<f64> = Vec::new();
+        for p in self.projs() {
+            let Proj::Int8(ql) = p else { unreachable!("dtype checked above") };
+            q_all.extend(ql.q.iter().map(|&v| v as f64));
+            scales_all.extend(ql.scales.iter().map(|&v| v as f64));
+            biases_all.extend(ql.b.iter().map(|&v| v as f64));
+        }
+        let mut ln_all: Vec<f64> = Vec::new();
+        for ln in [&self.ln1, &self.ln2, &self.lnf] {
+            ln_all.extend(ln.gamma.iter().map(|&v| v as f64));
+            ln_all.extend(ln.beta.iter().map(|&v| v as f64));
+        }
+        Ok(Json::obj(vec![
+            ("format", Json::Str(CHECKPOINT_FORMAT_INT8.into())),
+            ("d_model", Json::Num(D_MODEL as f64)),
+            ("d_ff", Json::Num(D_FF as f64)),
+            ("time_feats", Json::Num(TIME_FEATS as f64)),
+            ("seg", Json::Num(SEG as f64)),
+            ("embed_dim", Json::Num(EMBED_DIM as f64)),
+            ("diffusion_steps", Json::Num(DIFFUSION_STEPS as f64)),
+            ("q", Json::nums(q_all)),
+            ("scales", Json::nums(scales_all)),
+            ("biases", Json::nums(biases_all)),
+            ("ln", Json::nums(ln_all)),
+        ]))
+    }
+
+    /// Deserialize a v2 int8 checkpoint, cross-checking the format tag
+    /// and every architecture dimension (same fail-loudly policy as the
+    /// v1 loader).
+    pub fn from_json(v: &Json, kern: Kernels) -> Result<Self> {
+        let format = v.get("format")?.as_str()?.to_string();
+        ensure!(
+            format == CHECKPOINT_FORMAT_INT8,
+            "int8 drafter checkpoint format '{format}' != '{CHECKPOINT_FORMAT_INT8}'"
+        );
+        for (key, want) in [
+            ("d_model", D_MODEL),
+            ("d_ff", D_FF),
+            ("time_feats", TIME_FEATS),
+            ("seg", SEG),
+            ("embed_dim", EMBED_DIM),
+            ("diffusion_steps", DIFFUSION_STEPS),
+        ] {
+            let got = v.get(key)?.as_usize()?;
+            ensure!(got == want, "int8 drafter checkpoint {key}={got}, this build wants {want}");
+        }
+        let q_all = v.get("q")?.as_f32_vec()?;
+        let scales_all = v.get("scales")?.as_f32_vec()?;
+        let biases_all = v.get("biases")?.as_f32_vec()?;
+        let ln_all = v.get("ln")?.as_f32_vec()?;
+
+        let want_q: usize = PROJ_DIMS.iter().map(|(_, i, o)| i * o).sum();
+        let want_out: usize = PROJ_DIMS.iter().map(|(_, _, o)| o).sum();
+        ensure!(q_all.len() == want_q, "q has {} entries, want {want_q}", q_all.len());
+        ensure!(
+            scales_all.len() == want_out,
+            "scales has {} entries, want {want_out}",
+            scales_all.len()
+        );
+        ensure!(
+            biases_all.len() == want_out,
+            "biases has {} entries, want {want_out}",
+            biases_all.len()
+        );
+        ensure!(
+            ln_all.len() == 6 * D_MODEL,
+            "ln has {} entries, want {}",
+            ln_all.len(),
+            6 * D_MODEL
+        );
+
+        let mut qi = 0usize;
+        let mut oi = 0usize;
+        let mut take_proj = |in_dim: usize, out_dim: usize, name: &str| -> Result<Proj> {
+            let mut q = vec![0i8; in_dim * out_dim];
+            for (dst, &src) in q.iter_mut().zip(&q_all[qi..qi + in_dim * out_dim]) {
+                ensure!(
+                    src.fract() == 0.0 && (-127.0..=127.0).contains(&src),
+                    "{name}: quantized weight {src} is not an int8 value"
+                );
+                *dst = src as i8;
+            }
+            let scales = scales_all[oi..oi + out_dim].to_vec();
+            ensure!(
+                scales.iter().all(|s| s.is_finite() && *s > 0.0),
+                "{name}: non-positive quantization scale"
+            );
+            let b = biases_all[oi..oi + out_dim].to_vec();
+            qi += in_dim * out_dim;
+            oi += out_dim;
+            Ok(Proj::Int8(QuantizedLinear { q, scales, b, in_dim, out_dim }))
+        };
+        let w_in = take_proj(IN_DIM, D_MODEL, "w_in")?;
+        let wq = take_proj(D_MODEL, D_MODEL, "wq")?;
+        let wk = take_proj(D_MODEL, D_MODEL, "wk")?;
+        let wv = take_proj(D_MODEL, D_MODEL, "wv")?;
+        let wo = take_proj(D_MODEL, D_MODEL, "wo")?;
+        let w1 = take_proj(D_MODEL, D_FF, "w1")?;
+        let w2 = take_proj(D_FF, D_MODEL, "w2")?;
+        let w_out = take_proj(D_MODEL, SEG, "w_out")?;
+
+        let mut lns = Vec::with_capacity(3);
+        for i in 0..3 {
+            let base = i * 2 * D_MODEL;
+            lns.push(LayerNorm {
+                gamma: ln_all[base..base + D_MODEL].to_vec(),
+                beta: ln_all[base + D_MODEL..base + 2 * D_MODEL].to_vec(),
+            });
+        }
+        let lnf = lns.pop().unwrap();
+        let ln2 = lns.pop().unwrap();
+        let ln1 = lns.pop().unwrap();
+
+        Ok(Self { kern, w_in, ln1, wq, wk, wv, wo, ln2, w1, w2, lnf, w_out })
+    }
+
+    /// Save an int8 drafter checkpoint (v2 format).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json()?.save(path)
+    }
+
+    /// Load an int8 drafter checkpoint (v2 format).
+    pub fn load_int8(path: &Path, kern: Kernels) -> Result<Self> {
+        Self::from_json(&Json::load(path)?, kern)
+            .with_context(|| format!("loading int8 drafter checkpoint {}", path.display()))
+    }
+}
+
+/// A drafter checkpoint as selected at serve time: either the trainable
+/// f32 model (v1 format) or an int8 quantized serving drafter (v2).
+/// [`DrafterCheckpoint::load`] sniffs the format tag and honors an
+/// explicit `--drafter-dtype` request, quantizing a v1 checkpoint
+/// in-situ when int8 is asked for.
+#[derive(Debug, Clone)]
+pub enum DrafterCheckpoint {
+    /// Full-precision drafter (v1 checkpoint).
+    F32(DrafterModel),
+    /// Int8 per-channel quantized drafter (v2 checkpoint, or v1
+    /// quantized at load).
+    Int8(ServingDrafter),
+}
+
+impl DrafterCheckpoint {
+    /// Load a drafter checkpoint of either format. `want` is the
+    /// explicit `--drafter-dtype` request: `None` serves the
+    /// checkpoint's native dtype; `Some(Int8)` quantizes a v1 checkpoint
+    /// in-situ; `Some(F32)` on a v2 checkpoint fails loudly (int8
+    /// cannot be dequantized back to the trained weights).
+    pub fn load(path: &Path, want: Option<DrafterDtype>) -> Result<Self> {
+        let v = Json::load(path)?;
+        let format = v
+            .get("format")
+            .and_then(|f| Ok(f.as_str()?.to_string()))
+            .with_context(|| format!("drafter checkpoint {} has no format tag", path.display()))?;
+        if format == CHECKPOINT_FORMAT_INT8 {
+            ensure!(
+                want != Some(DrafterDtype::F32),
+                "{} is an int8 checkpoint; it cannot serve as --drafter-dtype f32",
+                path.display()
+            );
+            let s = ServingDrafter::from_json(&v, Kernels::global())
+                .with_context(|| format!("loading int8 drafter checkpoint {}", path.display()))?;
+            return Ok(DrafterCheckpoint::Int8(s));
+        }
+        let model = DrafterModel::from_json(&v)
+            .with_context(|| format!("loading drafter checkpoint {}", path.display()))?;
+        match want {
+            Some(DrafterDtype::Int8) => {
+                Ok(DrafterCheckpoint::Int8(ServingDrafter::quantize(&model, Kernels::global())))
+            }
+            _ => Ok(DrafterCheckpoint::F32(model)),
+        }
+    }
+
+    /// The dtype this checkpoint serves with.
+    pub fn dtype(&self) -> DrafterDtype {
+        match self {
+            DrafterCheckpoint::F32(_) => DrafterDtype::F32,
+            DrafterCheckpoint::Int8(_) => DrafterDtype::Int8,
+        }
+    }
+}
+
+/// Incremental causal decoding state: keys/values of the rollout's
+/// earlier denoising-step tokens. `push` runs one token in O(context)
+/// attention cost — the fused rollout is one growing sequence, not K
+/// independent forwards.
+pub struct RolloutState<'m> {
+    d: &'m ServingDrafter,
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+}
+
+impl RolloutState<'_> {
+    /// Tokens pushed so far.
+    pub fn len(&self) -> usize {
+        self.ks.len()
+    }
+
+    /// True before the first token.
+    pub fn is_empty(&self) -> bool {
+        self.ks.is_empty()
+    }
+
+    /// Append the next denoising-step token and return its x̂0
+    /// prediction. Identical arithmetic (and arithmetic order) to
+    /// [`DrafterModel::forward_seq`] on the same kernel path, so a
+    /// teacher-forced training sequence and an incremental rollout over
+    /// the same tokens are bit-identical.
+    pub fn push(&mut self, x: &[f32], t: usize, cond: &[f32]) -> Vec<f32> {
+        let d = self.d;
+        let kern = d.kern;
+        let scale = 1.0 / (D_MODEL as f32).sqrt();
+        let input = DrafterModel::token_input(x, t, cond);
+        let mut e = vec![0.0f32; D_MODEL];
+        d.w_in.forward(kern, &input, &mut e);
+        let mut n1 = vec![0.0f32; D_MODEL];
+        d.ln1.forward_with(kern, &e, &mut n1);
+        let mut q = vec![0.0f32; D_MODEL];
+        d.wq.forward(kern, &n1, &mut q);
+        let mut k = vec![0.0f32; D_MODEL];
+        d.wk.forward(kern, &n1, &mut k);
+        let mut v = vec![0.0f32; D_MODEL];
+        d.wv.forward(kern, &n1, &mut v);
+        self.ks.push(k);
+        self.vs.push(v);
+        let j = self.ks.len() - 1;
+
+        let mut attn = vec![0.0f32; j + 1];
+        for i in 0..=j {
+            attn[i] = kern.dot(&q, &self.ks[i]) * scale;
+        }
+        softmax_inplace(&mut attn);
+        let mut ctx = vec![0.0f32; D_MODEL];
+        for i in 0..=j {
+            kern.add_scaled(&mut ctx, &self.vs[i], attn[i]);
+        }
+        let mut o = vec![0.0f32; D_MODEL];
+        d.wo.forward(kern, &ctx, &mut o);
+        let mut h = vec![0.0f32; D_MODEL];
+        for i in 0..D_MODEL {
+            h[i] = e[i] + o[i];
+        }
+        let mut n2 = vec![0.0f32; D_MODEL];
+        d.ln2.forward_with(kern, &h, &mut n2);
+        let mut f1 = vec![0.0f32; D_FF];
+        d.w1.forward(kern, &n2, &mut f1);
+        for a in f1.iter_mut() {
+            *a = a.tanh();
+        }
+        let mut f2 = vec![0.0f32; D_MODEL];
+        d.w2.forward(kern, &f1, &mut f2);
+        let mut z = vec![0.0f32; D_MODEL];
+        for i in 0..D_MODEL {
+            z[i] = h[i] + f2[i];
+        }
+        let mut nf = vec![0.0f32; D_MODEL];
+        d.lnf.forward_with(kern, &z, &mut nf);
+        let mut y = vec![0.0f32; SEG];
+        d.w_out.forward(kern, &nf, &mut y);
+        for a in y.iter_mut() {
+            *a = a.tanh();
+        }
+        y
+    }
+}
+
+/// One active row of a drafter wave: the session's KV chain in the
+/// shared arena plus the borrowed inputs for its next denoising-step
+/// token.
+#[derive(Debug)]
+pub struct WaveInput<'a> {
+    /// The session's chain in the wave's [`KvArena`].
+    pub chain: ChainId,
+    /// Current latent, SEG floats.
+    pub x: &'a [f32],
+    /// Timestep of this token.
+    pub t: usize,
+    /// Conditioning vector, EMBED_DIM floats.
+    pub cond: &'a [f32],
+}
+
+/// Continuous-batched drafter decoding: many sessions' rollouts advance
+/// one denoising-step token per [`WaveRollout::step`] wave, their KV
+/// rows living in one shared per-shard [`KvArena`] instead of private
+/// per-request buffers. Sessions join and leave the wave at step
+/// granularity — a row just stops appearing in `rows` and its chain is
+/// [`released`](WaveRollout::release).
+///
+/// The wave's eight projections run as blocked batched GEMVs over flat
+/// row-major activation buffers ([`Kernels::gemv_rows`] /
+/// [`QuantizedLinear::forward_rows`]): each weight row is loaded once
+/// per wave and streamed against every session's activations, which is
+/// where continuous batching actually converts into memory-bandwidth
+/// savings. Scratch buffers are reused across waves (growing only to
+/// the widest wave seen), so steady-state serving allocates nothing in
+/// this path.
+///
+/// Determinism contract: batched GEMV is bitwise equal to the per-row
+/// GEMV of [`RolloutState::push`], attention reads only the row's own
+/// chain, and every per-row op (LayerNorm, softmax, tanh, residual
+/// adds) is shared — so a wave-stepped rollout is **bit-identical** to
+/// the serial per-request rollout no matter which sessions share its
+/// waves, on every kernel path and either dtype.
+#[derive(Debug)]
+pub struct WaveRollout {
+    arena: KvArena,
+    inputs: Vec<f32>,
+    e: Vec<f32>,
+    n1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    ctx: Vec<f32>,
+    o: Vec<f32>,
+    h: Vec<f32>,
+    n2: Vec<f32>,
+    f1: Vec<f32>,
+    f2: Vec<f32>,
+    z: Vec<f32>,
+    nf: Vec<f32>,
+}
+
+impl WaveRollout {
+    /// Empty wave state with a fresh [`KvArena`] of drafter-width rows.
+    pub fn new() -> Self {
+        Self {
+            arena: KvArena::new(D_MODEL),
+            inputs: Vec::new(),
+            e: Vec::new(),
+            n1: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            attn: Vec::new(),
+            ctx: Vec::new(),
+            o: Vec::new(),
+            h: Vec::new(),
+            n2: Vec::new(),
+            f1: Vec::new(),
+            f2: Vec::new(),
+            z: Vec::new(),
+            nf: Vec::new(),
+        }
+    }
+
+    /// Open a KV chain for a session joining the wave.
+    pub fn new_chain(&mut self) -> ChainId {
+        self.arena.new_chain()
+    }
+
+    /// Reclaim a session's KV blocks when it leaves the wave.
+    pub fn release(&mut self, chain: ChainId) {
+        self.arena.release(chain)
+    }
+
+    /// The shared KV arena (metrics: high-water mark, blocks in use).
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    /// Advance every row one denoising-step token. Writes the rows' x̂0
+    /// predictions into `out` (rows.len()×SEG, request order), growing
+    /// scratch only up to the widest wave ever seen.
+    pub fn step(&mut self, d: &ServingDrafter, rows: &[WaveInput<'_>], out: &mut Vec<f32>) {
+        let kern = d.kern;
+        let scale = 1.0 / (D_MODEL as f32).sqrt();
+        let n = rows.len();
+        out.clear();
+        out.resize(n * SEG, 0.0);
+        if n == 0 {
+            return;
+        }
+
+        // Phase 1 — assemble the wave's token inputs and run the
+        // embedding + Q/K/V projections as batched GEMVs, each row then
+        // appending its KV to its own chain.
+        self.inputs.clear();
+        for row in rows {
+            debug_assert_eq!(row.x.len(), SEG);
+            debug_assert_eq!(row.cond.len(), EMBED_DIM);
+            self.inputs.extend_from_slice(row.x);
+            self.inputs.extend_from_slice(&time_features(row.t));
+            self.inputs.extend_from_slice(row.cond);
+        }
+        self.e.clear();
+        self.e.resize(n * D_MODEL, 0.0);
+        d.w_in.forward_rows(kern, &self.inputs, &mut self.e);
+        self.n1.clear();
+        self.n1.resize(n * D_MODEL, 0.0);
+        for r in 0..n {
+            d.ln1.forward_with(
+                kern,
+                &self.e[r * D_MODEL..(r + 1) * D_MODEL],
+                &mut self.n1[r * D_MODEL..(r + 1) * D_MODEL],
+            );
+        }
+        self.q.clear();
+        self.q.resize(n * D_MODEL, 0.0);
+        self.k.clear();
+        self.k.resize(n * D_MODEL, 0.0);
+        self.v.clear();
+        self.v.resize(n * D_MODEL, 0.0);
+        d.wq.forward_rows(kern, &self.n1, &mut self.q);
+        d.wk.forward_rows(kern, &self.n1, &mut self.k);
+        d.wv.forward_rows(kern, &self.n1, &mut self.v);
+        for (r, row) in rows.iter().enumerate() {
+            self.arena.push_kv(
+                row.chain,
+                &self.k[r * D_MODEL..(r + 1) * D_MODEL],
+                &self.v[r * D_MODEL..(r + 1) * D_MODEL],
+            );
+        }
+
+        // Phase 2 — causal attention: each row reads only its own
+        // chain, so wave composition cannot influence any row's context.
+        self.ctx.clear();
+        self.ctx.resize(n * D_MODEL, 0.0);
+        for (r, row) in rows.iter().enumerate() {
+            let len = self.arena.chain_len(row.chain);
+            self.attn.clear();
+            self.attn.resize(len, 0.0);
+            let q = &self.q[r * D_MODEL..(r + 1) * D_MODEL];
+            for i in 0..len {
+                self.attn[i] = kern.dot(q, self.arena.k_row(row.chain, i)) * scale;
+            }
+            softmax_inplace(&mut self.attn);
+            let ctx = &mut self.ctx[r * D_MODEL..(r + 1) * D_MODEL];
+            for i in 0..len {
+                kern.add_scaled(ctx, self.arena.v_row(row.chain, i), self.attn[i]);
+            }
+        }
+
+        // Phase 3 — attention output + MLP + head as batched GEMVs,
+        // landing straight in the caller's output rows.
+        self.o.clear();
+        self.o.resize(n * D_MODEL, 0.0);
+        d.wo.forward_rows(kern, &self.ctx, &mut self.o);
+        self.h.clear();
+        self.h.resize(n * D_MODEL, 0.0);
+        for i in 0..n * D_MODEL {
+            self.h[i] = self.e[i] + self.o[i];
+        }
+        self.n2.clear();
+        self.n2.resize(n * D_MODEL, 0.0);
+        for r in 0..n {
+            d.ln2.forward_with(
+                kern,
+                &self.h[r * D_MODEL..(r + 1) * D_MODEL],
+                &mut self.n2[r * D_MODEL..(r + 1) * D_MODEL],
+            );
+        }
+        self.f1.clear();
+        self.f1.resize(n * D_FF, 0.0);
+        d.w1.forward_rows(kern, &self.n2, &mut self.f1);
+        for a in self.f1.iter_mut() {
+            *a = a.tanh();
+        }
+        self.f2.clear();
+        self.f2.resize(n * D_MODEL, 0.0);
+        d.w2.forward_rows(kern, &self.f1, &mut self.f2);
+        self.z.clear();
+        self.z.resize(n * D_MODEL, 0.0);
+        for i in 0..n * D_MODEL {
+            self.z[i] = self.h[i] + self.f2[i];
+        }
+        self.nf.clear();
+        self.nf.resize(n * D_MODEL, 0.0);
+        for r in 0..n {
+            d.lnf.forward_with(
+                kern,
+                &self.z[r * D_MODEL..(r + 1) * D_MODEL],
+                &mut self.nf[r * D_MODEL..(r + 1) * D_MODEL],
+            );
+        }
+        d.w_out.forward_rows(kern, &self.nf, out);
+        for a in out.iter_mut() {
+            *a = a.tanh();
+        }
+    }
+}
+
+impl Default for WaveRollout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+    use crate::util::Rng;
+
+    fn small_inputs(l: usize, seed: u64) -> (Vec<f32>, Vec<usize>, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let xs = rng.normal_vec(l * SEG);
+        let ts: Vec<usize> = (0..l).map(|j| 60 - j).collect();
+        let cond = rng.normal_vec(EMBED_DIM);
+        (xs, ts, cond)
+    }
+
+    fn solo(d: &ServingDrafter, xs: &[f32], ts: &[usize], cond: &[f32]) -> Vec<f32> {
+        let mut roll = d.start_rollout();
+        let mut out = Vec::new();
+        for j in 0..ts.len() {
+            out.extend(roll.push(&xs[j * SEG..(j + 1) * SEG], ts[j], cond));
+        }
+        out
+    }
+
+    #[test]
+    fn rollout_state_matches_forward_seq_bitwise() {
+        let mut rng = Rng::seed_from_u64(0);
+        let model = DrafterModel::init(&mut rng);
+        let serving = ServingDrafter::from_model(&model, Kernels::global());
+        let (xs, ts, cond) = small_inputs(5, 1);
+        let (seq_out, _) = model.forward_seq(&xs, &ts, &cond);
+        let mut roll = serving.start_rollout();
+        for j in 0..5 {
+            let y = roll.push(&xs[j * SEG..(j + 1) * SEG], ts[j], &cond);
+            assert_eq!(&seq_out[j * SEG..(j + 1) * SEG], &y[..], "token {j}");
+        }
+        assert_eq!(roll.len(), 5);
+        assert!(!roll.is_empty());
+    }
+
+    /// The wave-vs-serial bit-identity contract, exercised for a given
+    /// serving drafter (f32 on any path, or int8): three sessions share
+    /// one arena — A spans waves 0..5, B leaves mid-stream after wave 2,
+    /// C joins mid-stream at wave 3 — and every token must equal the
+    /// session's solo RolloutState rollout bitwise.
+    fn wave_matches_serial(serving: &ServingDrafter) {
+        let (xs_a, ts_a, cond_a) = small_inputs(5, 11);
+        let (xs_b, ts_b, cond_b) = small_inputs(3, 12);
+        let (xs_c, ts_c, cond_c) = small_inputs(2, 13);
+
+        let want_a = solo(serving, &xs_a, &ts_a, &cond_a);
+        let want_b = solo(serving, &xs_b, &ts_b, &cond_b);
+        let want_c = solo(serving, &xs_c, &ts_c, &cond_c);
+
+        let mut wave = WaveRollout::new();
+        let ca = wave.new_chain();
+        let cb = wave.new_chain();
+        let mut cc = None;
+        let (mut got_a, mut got_b, mut got_c) = (Vec::new(), Vec::new(), Vec::new());
+        let mut out = Vec::new();
+        for j in 0..5 {
+            let mut rows = vec![WaveInput {
+                chain: ca,
+                x: &xs_a[j * SEG..(j + 1) * SEG],
+                t: ts_a[j],
+                cond: &cond_a,
+            }];
+            if j < 3 {
+                rows.push(WaveInput {
+                    chain: cb,
+                    x: &xs_b[j * SEG..(j + 1) * SEG],
+                    t: ts_b[j],
+                    cond: &cond_b,
+                });
+            }
+            if j >= 3 {
+                let chain = *cc.get_or_insert_with(|| wave.new_chain());
+                let jc = j - 3;
+                rows.push(WaveInput {
+                    chain,
+                    x: &xs_c[jc * SEG..(jc + 1) * SEG],
+                    t: ts_c[jc],
+                    cond: &cond_c,
+                });
+            }
+            wave.step(serving, &rows, &mut out);
+            got_a.extend_from_slice(&out[..SEG]);
+            if j < 3 {
+                got_b.extend_from_slice(&out[SEG..2 * SEG]);
+            } else {
+                got_c.extend_from_slice(&out[SEG..2 * SEG]);
+            }
+            if j == 2 {
+                wave.release(cb);
+            }
+        }
+        wave.release(ca);
+        wave.release(cc.unwrap());
+        assert_eq!(got_a, want_a, "session A bitwise");
+        assert_eq!(got_b, want_b, "session B bitwise");
+        assert_eq!(got_c, want_c, "session C bitwise");
+        assert_eq!(wave.arena().blocks_in_use(), 0, "round-end reclamation");
+        assert!(wave.arena().high_water() >= 2, "arena really was shared");
+    }
+
+    #[test]
+    fn wave_rollout_matches_rollout_state_bitwise_on_both_paths() {
+        let mut rng = Rng::seed_from_u64(7);
+        let model = DrafterModel::init(&mut rng);
+        for kern in [Kernels::scalar(), Kernels::lanes()] {
+            wave_matches_serial(&ServingDrafter::from_model(&model, kern));
+        }
+    }
+
+    #[test]
+    fn int8_wave_rollout_matches_int8_serial_bitwise() {
+        let mut rng = Rng::seed_from_u64(8);
+        let model = DrafterModel::init(&mut rng);
+        for kern in [Kernels::scalar(), Kernels::lanes()] {
+            let quantized = ServingDrafter::quantize(&model, kern);
+            assert_eq!(quantized.dtype(), DrafterDtype::Int8);
+            wave_matches_serial(&quantized);
+        }
+    }
+
+    #[test]
+    fn int8_outputs_track_f32_outputs() {
+        // Not bit-identity (quantization is lossy by design) — but the
+        // tanh-bounded x̂0 predictions of the int8 drafter must stay
+        // close to the f32 drafter's on identical rollouts.
+        let mut rng = Rng::seed_from_u64(9);
+        let model = DrafterModel::init(&mut rng);
+        let kern = Kernels::lanes();
+        let f32d = ServingDrafter::from_model(&model, kern);
+        let i8d = ServingDrafter::quantize(&model, kern);
+        let (xs, ts, cond) = small_inputs(4, 10);
+        let yf = solo(&f32d, &xs, &ts, &cond);
+        let yq = solo(&i8d, &xs, &ts, &cond);
+        let max_err = yf.iter().zip(&yq).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 0.05, "int8 drifted {max_err} from f32 on an untrained model");
+    }
+
+    #[test]
+    fn int8_checkpoint_roundtrips_bitwise() {
+        let mut rng = Rng::seed_from_u64(21);
+        let model = DrafterModel::init(&mut rng);
+        let kern = Kernels::global();
+        let quantized = ServingDrafter::quantize(&model, kern);
+        let dir = TempDir::new("drafter_int8_ckpt");
+        let path = dir.path().join("drafter_int8.json");
+        quantized.save(&path).unwrap();
+        let loaded = ServingDrafter::load_int8(&path, kern).unwrap();
+        assert_eq!(loaded.dtype(), DrafterDtype::Int8);
+        let (xs, ts, cond) = small_inputs(4, 22);
+        assert_eq!(
+            solo(&quantized, &xs, &ts, &cond),
+            solo(&loaded, &xs, &ts, &cond),
+            "int8 JSON roundtrip must preserve every bit"
+        );
+    }
+
+    #[test]
+    fn f32_drafters_refuse_the_int8_checkpoint_format() {
+        let mut rng = Rng::seed_from_u64(23);
+        let model = DrafterModel::init(&mut rng);
+        let f32d = ServingDrafter::from_model(&model, Kernels::global());
+        assert!(f32d.to_json().is_err(), "f32 drafters must not claim the int8 format");
+    }
+
+    #[test]
+    fn int8_checkpoint_drift_fails_loudly() {
+        let mut rng = Rng::seed_from_u64(24);
+        let model = DrafterModel::init(&mut rng);
+        let kern = Kernels::global();
+        let quantized = ServingDrafter::quantize(&model, kern);
+        let good = quantized.to_json().unwrap();
+
+        let mut bad_dim = good.clone();
+        if let Json::Obj(m) = &mut bad_dim {
+            m.insert("d_model".into(), Json::Num((D_MODEL + 1) as f64));
+        }
+        let err = ServingDrafter::from_json(&bad_dim, kern).unwrap_err();
+        assert!(err.to_string().contains("d_model"), "{err:#}");
+
+        let mut bad_fmt = good.clone();
+        if let Json::Obj(m) = &mut bad_fmt {
+            m.insert("format".into(), Json::Str("bogus".into()));
+        }
+        assert!(ServingDrafter::from_json(&bad_fmt, kern).is_err());
+    }
+
+    #[test]
+    fn checkpoint_selector_honors_dtype_requests() {
+        let mut rng = Rng::seed_from_u64(25);
+        let model = DrafterModel::init(&mut rng);
+        let dir = TempDir::new("drafter_ckpt_select");
+        let v1 = dir.path().join("drafter_v1.json");
+        model.save(&v1).unwrap();
+        let v2 = dir.path().join("drafter_int8.json");
+        ServingDrafter::quantize(&model, Kernels::global()).save(&v2).unwrap();
+
+        // v1 native → f32; v1 + int8 request → quantized in-situ.
+        assert_eq!(DrafterCheckpoint::load(&v1, None).unwrap().dtype(), DrafterDtype::F32);
+        let q = DrafterCheckpoint::load(&v1, Some(DrafterDtype::Int8)).unwrap();
+        assert_eq!(q.dtype(), DrafterDtype::Int8);
+        // v2 native → int8; v2 + f32 request → loud error.
+        assert_eq!(DrafterCheckpoint::load(&v2, None).unwrap().dtype(), DrafterDtype::Int8);
+        assert!(DrafterCheckpoint::load(&v2, Some(DrafterDtype::F32)).is_err());
+
+        // In-situ quantization must equal quantize-then-load bitwise.
+        let (xs, ts, cond) = small_inputs(3, 26);
+        let (DrafterCheckpoint::Int8(a), DrafterCheckpoint::Int8(b)) =
+            (q, DrafterCheckpoint::load(&v2, Some(DrafterDtype::Int8)).unwrap())
+        else {
+            panic!("both must be int8");
+        };
+        assert_eq!(solo(&a, &xs, &ts, &cond), solo(&b, &xs, &ts, &cond));
+    }
+
+    #[test]
+    fn dtype_flags_parse_and_name_roundtrip() {
+        for d in [DrafterDtype::F32, DrafterDtype::Int8] {
+            assert_eq!(DrafterDtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(DrafterDtype::parse("fp16").is_err());
+    }
+}

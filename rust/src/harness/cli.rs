@@ -25,10 +25,10 @@ fn load_scheduler(args: &Args) -> Option<SchedulerPolicy> {
 }
 
 /// `ts-dp episode --task T --style ph|mh [--method M] [--adaptive]
-/// [--drafter FILE] [--backend artifacts|mock]`.
+/// [--drafter FILE [--drafter-dtype f32|int8]] [--backend
+/// artifacts|mock]`.
 pub fn cmd_episode(args: &Args) -> Result<()> {
-    use crate::coordinator::cli::{backend_choice, drafter_from_args, with_drafter};
-    use crate::coordinator::workload::DrafterKind;
+    use crate::coordinator::cli::{backend_choice, drafter_from_args, drafter_kind, with_drafter};
     let task = Task::parse(&args.get_or("task", "lift")).context("unknown --task")?;
     let style = DemoStyle::parse(&args.get_or("style", "ph")).context("bad --style")?;
     let method = Method::parse(&args.get_or("method", "ts_dp")).context("bad --method")?;
@@ -47,8 +47,7 @@ pub fn cmd_episode(args: &Args) -> Result<()> {
     } else {
         run_episode(den.as_ref(), env.as_mut(), generator.as_mut(), style, seed, None)?
     };
-    let drafter_kind =
-        if drafter.is_some() { DrafterKind::Distilled } else { DrafterKind::Base };
+    let drafter_kind = drafter_kind(&drafter);
     println!(
         "task={} style={} method={} drafter={}",
         task.name(),

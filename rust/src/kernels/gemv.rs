@@ -1,0 +1,435 @@
+//! f32 kernel implementations behind [`super::Kernels`].
+//!
+//! One rule governs this file: the `*_scalar` functions reproduce the
+//! legacy hand-rolled loops *expression for expression* (they are the
+//! bit-exact reference), and the `*_lanes` functions change **only** the
+//! association of reductions — blocked into [`LANES`] independent
+//! accumulators, reduced by a fixed pairwise tree, remainder folded in
+//! sequentially. Everything after the reduction (bias add, scale,
+//! normalize) is shared verbatim between paths.
+
+use super::{LANES, LN_EPS};
+
+/// Fixed pairwise reduction of the lane accumulators. Hardcoded for
+/// `LANES == 8`; the const assert below keeps the two in sync. The tree
+/// shape is part of the determinism contract — changing it changes
+/// low-order bits of every lanes-path output.
+#[inline]
+pub(crate) fn reduce_lanes(acc: [f32; LANES]) -> f32 {
+    const _: () = assert!(LANES == 8, "reduce_lanes is written for LANES == 8");
+    ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))
+}
+
+/// Legacy dot product: sequential left fold, bit-exact with
+/// `crate::util::math::dot` and the original `Linear::forward` inner loop.
+#[inline]
+pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Blocked dot product: [`LANES`] independent multiply-accumulate chains
+/// over the length-aligned head (auto-vectorizable — no loop-carried
+/// dependency between lanes), fixed pairwise reduction, then the tail
+/// folded sequentially. For `a.len() < LANES` the head is empty, every
+/// accumulator is `+0.0`, the tree reduces to `+0.0`, and the tail fold
+/// performs exactly the scalar left fold — bitwise equal to
+/// [`dot_scalar`] (`+0.0 + x == x` for every f32 `x`, including `-0.0`
+/// inputs which yield `+0.0 + -0.0 == +0.0`, same as an empty
+/// `sum::<f32>()` start).
+#[inline]
+pub(crate) fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let head_len = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at(head_len);
+    let (bh, bt) = b.split_at(head_len);
+    let mut acc = [0.0f32; LANES];
+    for (ca, cb) in ah.chunks_exact(LANES).zip(bh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for (x, y) in at.iter().zip(bt) {
+        s += x * y;
+    }
+    s
+}
+
+/// Legacy GEMV, preserved verbatim from `Linear::forward`:
+/// `y[o] = b[o] + Σ_i w[o][i]·x[i]` with a sequential fold per row.
+pub(crate) fn gemv_scalar(
+    w: &[f32],
+    b: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        y[o] = b[o] + row.iter().zip(x).map(|(w, v)| w * v).sum::<f32>();
+    }
+}
+
+/// Lanes GEMV: same structure as [`gemv_scalar`] with the per-row fold
+/// replaced by [`dot_lanes`]. The bias add stays outside the reduction
+/// (`b[o] + dot`), matching the scalar expression exactly.
+pub(crate) fn gemv_lanes(
+    w: &[f32],
+    b: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        y[o] = b[o] + dot_lanes(row, x);
+    }
+}
+
+/// Batched scalar GEMV, cache-tiled with the weight row outermost: each
+/// row of `W` is loaded once and streamed against every input row of the
+/// wave. Per-element arithmetic is identical to [`gemv_scalar`] — the
+/// outputs are independent dots, so the tiling order cannot change bits.
+pub(crate) fn gemv_rows_scalar(
+    w: &[f32],
+    b: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    xs: &[f32],
+    ys: &mut [f32],
+) {
+    let rows = xs.len() / in_dim;
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        for r in 0..rows {
+            let x = &xs[r * in_dim..(r + 1) * in_dim];
+            ys[r * out_dim + o] = b[o] + row.iter().zip(x).map(|(w, v)| w * v).sum::<f32>();
+        }
+    }
+}
+
+/// Batched lanes GEMV; see [`gemv_rows_scalar`] for the tiling and
+/// [`gemv_lanes`] for the per-element arithmetic.
+pub(crate) fn gemv_rows_lanes(
+    w: &[f32],
+    b: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    xs: &[f32],
+    ys: &mut [f32],
+) {
+    let rows = xs.len() / in_dim;
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        for r in 0..rows {
+            let x = &xs[r * in_dim..(r + 1) * in_dim];
+            ys[r * out_dim + o] = b[o] + dot_lanes(row, x);
+        }
+    }
+}
+
+/// Legacy fused LayerNorm, preserved verbatim from
+/// `drafter::layers::LayerNorm::forward`.
+pub(crate) fn layernorm_scalar(
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    x: &[f32],
+    y: &mut [f32],
+) -> (f32, f32) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let rstd = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        y[i] = gamma[i] * (x[i] - mean) * rstd + beta[i];
+    }
+    (mean, rstd)
+}
+
+/// Lanes fused LayerNorm: the mean and variance reductions use blocked
+/// accumulators; the normalization loop is shared verbatim with
+/// [`layernorm_scalar`].
+pub(crate) fn layernorm_lanes(
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    x: &[f32],
+    y: &mut [f32],
+) -> (f32, f32) {
+    let n = x.len() as f32;
+    let mean = sum_lanes(x) / n;
+    let var = sq_dev_sum_lanes(x, mean) / n;
+    let rstd = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        y[i] = gamma[i] * (x[i] - mean) * rstd + beta[i];
+    }
+    (mean, rstd)
+}
+
+/// Blocked `Σ x[i]` with the lanes reduction discipline.
+#[inline]
+fn sum_lanes(x: &[f32]) -> f32 {
+    let head_len = x.len() - x.len() % LANES;
+    let (h, t) = x.split_at(head_len);
+    let mut acc = [0.0f32; LANES];
+    for c in h.chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += c[l];
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for v in t {
+        s += v;
+    }
+    s
+}
+
+/// Blocked `Σ (x[i] − mean)²` with the lanes reduction discipline.
+#[inline]
+fn sq_dev_sum_lanes(x: &[f32], mean: f32) -> f32 {
+    let head_len = x.len() - x.len() % LANES;
+    let (h, t) = x.split_at(head_len);
+    let mut acc = [0.0f32; LANES];
+    for c in h.chunks_exact(LANES) {
+        for l in 0..LANES {
+            let d = c[l] - mean;
+            acc[l] += d * d;
+        }
+    }
+    let mut s = reduce_lanes(acc);
+    for v in t {
+        s += (v - mean) * (v - mean);
+    }
+    s
+}
+
+/// Keep `LN_EPS` referenced from this module so the constant and its
+/// docs stay anchored to the kernels that consume it.
+#[allow(dead_code)]
+const _LN_EPS_USED: f32 = LN_EPS;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernels;
+    use crate::util::Rng;
+
+    /// Shapes deliberately straddling the lane width: 0 and 1, just
+    /// under/on/over one block, a prime, two blocks ± 1, and the real
+    /// drafter dims (32, 64, 136).
+    const DIMS: &[usize] = &[0, 1, 3, 7, 8, 9, 13, 15, 16, 17, 31, 32, 33, 64, 136];
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect()
+    }
+
+    /// Relative closeness for reassociated f32 sums over ≤ a few hundred
+    /// terms: a handful of ULPs, expressed as a relative bound.
+    fn assert_close(a: f32, b: f32, what: &str) {
+        let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: scalar {a} vs lanes {b} differ by {}",
+            (a - b).abs()
+        );
+    }
+
+    #[test]
+    fn dot_scalar_matches_util_math_dot_bitwise() {
+        let mut rng = Rng::seed_from_u64(0xD07);
+        for &n in DIMS {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            assert_eq!(
+                dot_scalar(&a, &b).to_bits(),
+                crate::util::math::dot(&a, &b).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_lanes_degenerates_to_scalar_below_one_block() {
+        let mut rng = Rng::seed_from_u64(0xD08);
+        for n in 0..LANES {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            assert_eq!(
+                dot_scalar(&a, &b).to_bits(),
+                dot_lanes(&a, &b).to_bits(),
+                "n={n} must be bitwise equal (empty head)"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_paths_agree_within_ulps_across_shapes() {
+        let mut rng = Rng::seed_from_u64(0xD09);
+        for &n in DIMS {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            assert_close(dot_scalar(&a, &b), dot_lanes(&a, &b), &format!("dot n={n}"));
+        }
+    }
+
+    #[test]
+    fn dot_lanes_is_deterministic() {
+        let mut rng = Rng::seed_from_u64(0xD0A);
+        let a = randv(&mut rng, 136);
+        let b = randv(&mut rng, 136);
+        let first = dot_lanes(&a, &b).to_bits();
+        for _ in 0..8 {
+            assert_eq!(dot_lanes(&a, &b).to_bits(), first);
+        }
+    }
+
+    #[test]
+    fn gemv_paths_agree_and_scalar_matches_legacy_loop() {
+        let mut rng = Rng::seed_from_u64(0x6E3);
+        for &in_dim in DIMS {
+            for &out_dim in &[1usize, 3, 8, 32] {
+                let w = randv(&mut rng, in_dim * out_dim);
+                let b = randv(&mut rng, out_dim);
+                let x = randv(&mut rng, in_dim);
+                let mut ys = vec![0.0f32; out_dim];
+                let mut yl = vec![0.0f32; out_dim];
+                gemv_scalar(&w, &b, in_dim, out_dim, &x, &mut ys);
+                gemv_lanes(&w, &b, in_dim, out_dim, &x, &mut yl);
+                for o in 0..out_dim {
+                    // Legacy Linear::forward expression, written out.
+                    let row = &w[o * in_dim..(o + 1) * in_dim];
+                    let legacy = b[o] + row.iter().zip(&x).map(|(w, v)| w * v).sum::<f32>();
+                    assert_eq!(ys[o].to_bits(), legacy.to_bits(), "scalar must be verbatim");
+                    assert_close(ys[o], yl[o], &format!("gemv {in_dim}x{out_dim} o={o}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_rows_is_bitwise_equal_to_per_row_gemv_on_both_paths() {
+        let mut rng = Rng::seed_from_u64(0xBA7C);
+        for kern in [Kernels::scalar(), Kernels::lanes()] {
+            for &in_dim in &[7usize, 32, 136] {
+                for rows in [1usize, 2, 5, 16] {
+                    let out_dim = 32;
+                    let w = randv(&mut rng, in_dim * out_dim);
+                    let b = randv(&mut rng, out_dim);
+                    let xs = randv(&mut rng, rows * in_dim);
+                    let mut batched = vec![0.0f32; rows * out_dim];
+                    kern.gemv_rows(&w, &b, in_dim, out_dim, &xs, &mut batched);
+                    for r in 0..rows {
+                        let mut single = vec![0.0f32; out_dim];
+                        let x = &xs[r * in_dim..(r + 1) * in_dim];
+                        kern.gemv(&w, &b, in_dim, out_dim, x, &mut single);
+                        for o in 0..out_dim {
+                            assert_eq!(
+                                batched[r * out_dim + o].to_bits(),
+                                single[o].to_bits(),
+                                "path={:?} in={in_dim} rows={rows} r={r} o={o}",
+                                kern.path()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_paths_agree_and_return_matching_stats() {
+        let mut rng = Rng::seed_from_u64(0x1A7E);
+        for &n in &[1usize, 7, 8, 9, 31, 32, 33, 64] {
+            let gamma = randv(&mut rng, n);
+            let beta = randv(&mut rng, n);
+            let x = randv(&mut rng, n);
+            let mut ys = vec![0.0f32; n];
+            let mut yl = vec![0.0f32; n];
+            let (ms, rs) = layernorm_scalar(&gamma, &beta, LN_EPS, &x, &mut ys);
+            let (ml, rl) = layernorm_lanes(&gamma, &beta, LN_EPS, &x, &mut yl);
+            assert_close(ms, ml, &format!("ln mean n={n}"));
+            assert_close(rs, rl, &format!("ln rstd n={n}"));
+            for i in 0..n {
+                assert_close(ys[i], yl[i], &format!("ln y n={n} i={i}"));
+            }
+            if n < LANES {
+                // Sub-block inputs degenerate to the scalar order exactly.
+                assert_eq!(ms.to_bits(), ml.to_bits(), "mean bitwise n={n}");
+                assert_eq!(rs.to_bits(), rl.to_bits(), "rstd bitwise n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_are_path_independent() {
+        let mut rng = Rng::seed_from_u64(0xE1E);
+        let in_dim = 33;
+        let out_dim = 17;
+        let w = randv(&mut rng, in_dim * out_dim);
+        let x = randv(&mut rng, in_dim);
+        let dy = randv(&mut rng, out_dim);
+
+        for (ka, kb) in [(Kernels::scalar(), Kernels::lanes())] {
+            let mut dwa = vec![0.1f32; in_dim * out_dim];
+            let mut dwb = dwa.clone();
+            let mut dba = vec![0.2f32; out_dim];
+            let mut dbb = dba.clone();
+            ka.outer_acc(&x, &dy, &mut dwa, &mut dba);
+            kb.outer_acc(&x, &dy, &mut dwb, &mut dbb);
+            assert_eq!(dwa, dwb);
+            assert_eq!(dba, dbb);
+
+            let mut dxa = vec![0.3f32; in_dim];
+            let mut dxb = dxa.clone();
+            ka.gemv_t_acc(&w, in_dim, out_dim, &dy, &mut dxa);
+            kb.gemv_t_acc(&w, in_dim, out_dim, &dy, &mut dxb);
+            assert_eq!(dxa, dxb);
+
+            let mut oa = vec![0.4f32; in_dim];
+            let mut ob = oa.clone();
+            ka.add_scaled(&mut oa, &x, 1.5);
+            kb.add_scaled(&mut ob, &x, 1.5);
+            assert_eq!(oa, ob);
+        }
+    }
+
+    #[test]
+    fn outer_acc_and_gemv_t_acc_match_legacy_linear_backward_loops() {
+        let mut rng = Rng::seed_from_u64(0xBAC2);
+        let in_dim = 13;
+        let out_dim = 9;
+        let w = randv(&mut rng, in_dim * out_dim);
+        let x = randv(&mut rng, in_dim);
+        let dy = randv(&mut rng, out_dim);
+        let kern = Kernels::lanes();
+
+        let mut dw = vec![0.0f32; in_dim * out_dim];
+        let mut db = vec![0.0f32; out_dim];
+        let mut dx = vec![0.0f32; in_dim];
+        kern.outer_acc(&x, &dy, &mut dw, &mut db);
+        kern.gemv_t_acc(&w, in_dim, out_dim, &dy, &mut dx);
+
+        // The legacy drafter::layers::linear_backward loop, written out.
+        let mut dw_ref = vec![0.0f32; in_dim * out_dim];
+        let mut db_ref = vec![0.0f32; out_dim];
+        let mut dx_ref = vec![0.0f32; in_dim];
+        for o in 0..out_dim {
+            db_ref[o] += dy[o];
+            for i in 0..in_dim {
+                dw_ref[o * in_dim + i] += dy[o] * x[i];
+                dx_ref[i] += dy[o] * w[o * in_dim + i];
+            }
+        }
+        for (a, b) in dw.iter().zip(&dw_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in db.iter().zip(&db_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in dx.iter().zip(&dx_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

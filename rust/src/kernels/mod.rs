@@ -1,0 +1,286 @@
+//! Raw-speed compute kernels for the serving hot path, behind a
+//! runtime-dispatched [`Kernels`] handle.
+//!
+//! The drafter's attention/LayerNorm/linear layers and the scheduler MLP
+//! were hand-rolled scalar `f32` loops. Strict IEEE semantics forbid the
+//! compiler from vectorizing a sequential `iter().sum::<f32>()` (float
+//! addition is not associative), so those loops run one FMA per
+//! loop-carried dependency — latency-bound, not throughput-bound. This
+//! module provides two implementations of every hot primitive:
+//!
+//! * **`Scalar`** — the original loops, preserved *verbatim* (same
+//!   expressions, same accumulation order). This is the bit-exact
+//!   reference: golden traces and bit-identity tests blessed before this
+//!   module existed reproduce exactly under the scalar path.
+//! * **`Lanes`** — portable-SIMD-style explicit-width kernels: the inner
+//!   reduction is blocked into [`LANES`] *independent* accumulator
+//!   chains (which LLVM auto-vectorizes on any target — no `unsafe`, no
+//!   nightly `std::simd`, no `target_feature` gates), then reduced in a
+//!   **fixed pairwise tree** with the remainder folded in sequentially.
+//!   The blocking is fixed, so the accumulation order is fixed: the
+//!   lanes path is deterministic run-to-run and machine-to-machine, it
+//!   just reassociates the sum relative to the scalar path. For inputs
+//!   shorter than one block the lanes path degenerates to exactly the
+//!   scalar order, so the two paths are *bitwise* equal there (pinned by
+//!   tests).
+//!
+//! # Dispatch policy
+//!
+//! [`Kernels::global()`] resolves the process-wide path **once** from the
+//! `TSDP_KERNELS` environment variable (`scalar` | `lanes`/`simd` |
+//! `auto`, default `auto` = lanes) and every production call site —
+//! [`crate::scheduler::nn::Linear::forward`], the drafter layers, the
+//! serial and wave-stepped rollouts — goes through it, so one process
+//! serves with one consistent arithmetic. Anything that needs a *forced*
+//! path (the scalar-vs-lanes benches, the equivalence tests) constructs
+//! an explicit handle with [`Kernels::scalar()`] / [`Kernels::lanes()`]
+//! instead of mutating the environment.
+//!
+//! Determinism contract: for a fixed path, every kernel is a pure
+//! function of its inputs with a fixed evaluation order — batched
+//! ([`Kernels::gemv_rows`]) and per-row ([`Kernels::gemv`]) calls produce
+//! bitwise-identical values per row, which is what keeps the serving
+//! fleet's batched == serial bit-identity suites meaningful on *both*
+//! paths.
+//!
+//! Gradient-side primitives ([`Kernels::outer_acc`],
+//! [`Kernels::gemv_t_acc`], [`Kernels::add_scaled`]) contain no
+//! reductions — every output element has its own independent chain — so
+//! a single implementation serves both paths bit-identically (the
+//! compiler vectorizes them freely without reassociating anything).
+//!
+//! The int8 story lives in [`quant`]: per-output-channel absmax
+//! quantization with a dequant-free integer-weight GEMV (f32 accumulate),
+//! used by the quantized drafter checkpoints (`ts-dp quantize-drafter`,
+//! `serve --drafter ckpt --drafter-dtype int8`).
+
+mod gemv;
+pub mod quant;
+
+pub use quant::QuantizedLinear;
+
+use std::sync::OnceLock;
+
+/// Accumulator block width of the `Lanes` path. 8 × f32 = one AVX2
+/// register (two NEON registers); wider targets simply unroll the
+/// independent chains further. Fixed so the reduction order — and
+/// therefore every bit of the output — never depends on the machine.
+pub const LANES: usize = 8;
+
+/// Default ε inside LayerNorm's inverse standard deviation (the value
+/// the drafter has always used; callers pass it explicitly so the
+/// kernel itself stays parameter-free).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Which implementation a [`Kernels`] handle dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The original scalar loops, bit-exact with the pre-kernels crate.
+    Scalar,
+    /// Fixed-width independent-accumulator kernels (auto-vectorized).
+    Lanes,
+}
+
+impl KernelPath {
+    /// Stable label (`scalar` / `lanes`) for logs and bench records.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Lanes => "lanes",
+        }
+    }
+}
+
+fn resolved_global() -> KernelPath {
+    static PATH: OnceLock<KernelPath> = OnceLock::new();
+    *PATH.get_or_init(|| match std::env::var("TSDP_KERNELS") {
+        Ok(v) => match v.as_str() {
+            "scalar" => KernelPath::Scalar,
+            "lanes" | "simd" => KernelPath::Lanes,
+            "auto" | "" => KernelPath::Lanes,
+            other => panic!("TSDP_KERNELS must be scalar|lanes|auto, got '{other}'"),
+        },
+        Err(_) => KernelPath::Lanes,
+    })
+}
+
+/// Handle selecting one kernel implementation; `Copy`, so call sites
+/// pass it by value. Production code uses [`Kernels::global()`]; benches
+/// and equivalence tests force a path explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernels {
+    path: KernelPath,
+}
+
+impl Kernels {
+    /// Handle forced to the bit-exact scalar reference path.
+    pub fn scalar() -> Self {
+        Self { path: KernelPath::Scalar }
+    }
+
+    /// Handle forced to the vectorized lanes path.
+    pub fn lanes() -> Self {
+        Self { path: KernelPath::Lanes }
+    }
+
+    /// Handle for an explicit path choice.
+    pub fn with_path(path: KernelPath) -> Self {
+        Self { path }
+    }
+
+    /// The process-wide handle, resolved once from `TSDP_KERNELS`
+    /// (`scalar` | `lanes`/`simd` | `auto`; default/`auto` = lanes).
+    /// Unknown values fail loudly — a silently ignored kernel override
+    /// would invalidate any measurement made under it.
+    pub fn global() -> Self {
+        Self { path: resolved_global() }
+    }
+
+    /// The path this handle dispatches to.
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Dot product `Σ a·b`.
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self.path {
+            KernelPath::Scalar => gemv::dot_scalar(a, b),
+            KernelPath::Lanes => gemv::dot_lanes(a, b),
+        }
+    }
+
+    /// Dense GEMV `y = W x + b` over row-major `W[out_dim][in_dim]`.
+    pub fn gemv(
+        &self,
+        w: &[f32],
+        b: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        x: &[f32],
+        y: &mut [f32],
+    ) {
+        debug_assert_eq!(w.len(), in_dim * out_dim);
+        debug_assert_eq!(b.len(), out_dim);
+        debug_assert_eq!(x.len(), in_dim);
+        debug_assert_eq!(y.len(), out_dim);
+        match self.path {
+            KernelPath::Scalar => gemv::gemv_scalar(w, b, in_dim, out_dim, x, y),
+            KernelPath::Lanes => gemv::gemv_lanes(w, b, in_dim, out_dim, x, y),
+        }
+    }
+
+    /// Batched GEMV (a blocked matmul): `ys[r] = W xs[r] + b` for every
+    /// row of `xs` (row-major `rows × in_dim` in, `rows × out_dim` out).
+    /// Tiled with the weight row outermost, so each row of `W` streams
+    /// through cache once per wave while the batch's activations stay
+    /// hot. Every output element is computed with exactly the
+    /// accumulation order of [`Kernels::gemv`], so batched == per-row
+    /// bitwise on both paths.
+    pub fn gemv_rows(
+        &self,
+        w: &[f32],
+        b: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        xs: &[f32],
+        ys: &mut [f32],
+    ) {
+        debug_assert_eq!(w.len(), in_dim * out_dim);
+        debug_assert_eq!(b.len(), out_dim);
+        debug_assert_eq!(xs.len() % in_dim, 0);
+        debug_assert_eq!(ys.len() / out_dim, xs.len() / in_dim);
+        match self.path {
+            KernelPath::Scalar => gemv::gemv_rows_scalar(w, b, in_dim, out_dim, xs, ys),
+            KernelPath::Lanes => gemv::gemv_rows_lanes(w, b, in_dim, out_dim, xs, ys),
+        }
+    }
+
+    /// Fused LayerNorm `y = γ·(x − μ)/√(σ² + ε) + β`; returns
+    /// `(mean, rstd)` for the backward pass. The normalization loop is
+    /// identical on both paths; only the two reductions (mean, variance)
+    /// differ in association.
+    pub fn layernorm(
+        &self,
+        gamma: &[f32],
+        beta: &[f32],
+        eps: f32,
+        x: &[f32],
+        y: &mut [f32],
+    ) -> (f32, f32) {
+        debug_assert_eq!(x.len(), gamma.len());
+        debug_assert_eq!(y.len(), gamma.len());
+        debug_assert_eq!(beta.len(), gamma.len());
+        match self.path {
+            KernelPath::Scalar => gemv::layernorm_scalar(gamma, beta, eps, x, y),
+            KernelPath::Lanes => gemv::layernorm_lanes(gamma, beta, eps, x, y),
+        }
+    }
+
+    /// `out += s · a`. Elementwise (no reduction), so both paths share
+    /// one bit-identical implementation.
+    pub fn add_scaled(&self, out: &mut [f32], a: &[f32], s: f32) {
+        debug_assert_eq!(out.len(), a.len());
+        for (o, x) in out.iter_mut().zip(a) {
+            *o += s * x;
+        }
+    }
+
+    /// Gradient outer product: `dw[o][i] += dy[o]·x[i]`, `db[o] += dy[o]`
+    /// over row-major `dw[out_dim][in_dim]`. Elementwise per output —
+    /// path-independent and bit-exact with the legacy backward loops.
+    pub fn outer_acc(&self, x: &[f32], dy: &[f32], dw: &mut [f32], db: &mut [f32]) {
+        let in_dim = x.len();
+        debug_assert_eq!(dw.len(), in_dim * dy.len());
+        debug_assert_eq!(db.len(), dy.len());
+        for (o, d) in dy.iter().enumerate() {
+            db[o] += d;
+            let row = &mut dw[o * in_dim..(o + 1) * in_dim];
+            for (g, xv) in row.iter_mut().zip(x) {
+                *g += d * xv;
+            }
+        }
+    }
+
+    /// Transposed GEMV accumulate: `dx += Wᵀ dy` over row-major
+    /// `W[out_dim][in_dim]`. Accumulates row-by-row into independent
+    /// elements of `dx` — path-independent and bit-exact with the legacy
+    /// backward loops.
+    pub fn gemv_t_acc(&self, w: &[f32], in_dim: usize, out_dim: usize, dy: &[f32], dx: &mut [f32]) {
+        debug_assert_eq!(w.len(), in_dim * out_dim);
+        debug_assert_eq!(dy.len(), out_dim);
+        debug_assert_eq!(dx.len(), in_dim);
+        for o in 0..out_dim {
+            let row = &w[o * in_dim..(o + 1) * in_dim];
+            let d = dy[o];
+            for (dxi, wv) in dx.iter_mut().zip(row) {
+                *dxi += d * wv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_names_and_constructors_agree() {
+        assert_eq!(Kernels::scalar().path(), KernelPath::Scalar);
+        assert_eq!(Kernels::lanes().path(), KernelPath::Lanes);
+        assert_eq!(Kernels::with_path(KernelPath::Scalar), Kernels::scalar());
+        assert_eq!(KernelPath::Scalar.name(), "scalar");
+        assert_eq!(KernelPath::Lanes.name(), "lanes");
+    }
+
+    #[test]
+    fn global_resolves_to_a_valid_path() {
+        // The resolved path depends on the test environment's
+        // TSDP_KERNELS; either way it must resolve, cache, and stay
+        // stable across calls.
+        let a = Kernels::global();
+        let b = Kernels::global();
+        assert_eq!(a, b);
+        assert!(matches!(a.path(), KernelPath::Scalar | KernelPath::Lanes));
+    }
+}

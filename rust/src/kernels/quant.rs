@@ -1,0 +1,294 @@
+//! Int8 per-channel quantized linear layers with a dequant-free GEMV.
+//!
+//! Quantization scheme (the mistral.rs-style in-situ path, specialized
+//! to per-output-row granularity): each output channel `o` of a weight
+//! matrix gets one scale `s[o] = absmax(W[o]) / 127` and its row is
+//! stored as `q[o][i] = round(W[o][i] / s[o]) ∈ [-127, 127]`. The
+//! forward pass never materializes dequantized weights:
+//!
+//! ```text
+//! y[o] = b[o] + s[o] · Σ_i (q[o][i] as f32) · x[i]
+//! ```
+//!
+//! — an f32 accumulate over integer-valued weights, so the inner loop
+//! has the same shape (and the same lanes blocking) as the f32 GEMV but
+//! touches 4× less weight memory. Biases stay f32: they are `out_dim`
+//! floats against `in_dim × out_dim` weights, so quantizing them buys
+//! nothing and costs accuracy.
+//!
+//! The round-trip error is classically bounded: `|w − s·q| ≤ s/2`
+//! elementwise (absmax never clips — the extremal element maps to
+//! exactly ±127), which gives `|Δy[o]| ≤ s[o]/2 · Σ|x|` for the layer
+//! output. Those bounds are pinned by the property tests below; the
+//! end-to-end gate is accept-rate parity of the int8 drafter vs its f32
+//! parent (the target model verifies every draft either way, so served
+//! actions stay lossless by construction — only the accept rate, i.e.
+//! the speedup, is at stake).
+
+use super::{gemv, KernelPath, Kernels, LANES};
+
+/// A linear layer with int8 per-output-channel weights, f32 scales and
+/// bias. Built from f32 weights via [`QuantizedLinear::quantize`]; the
+/// forward paths accumulate in f32 and never dequantize the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedLinear {
+    /// Row-major `out_dim × in_dim` quantized weights in `[-127, 127]`.
+    pub q: Vec<i8>,
+    /// Per-output-row dequantization scales (`absmax/127`; `1.0` for an
+    /// all-zero row so the mapping stays invertible-at-zero).
+    pub scales: Vec<f32>,
+    /// f32 bias, length `out_dim`.
+    pub b: Vec<f32>,
+    /// Input width.
+    pub in_dim: usize,
+    /// Output width.
+    pub out_dim: usize,
+}
+
+impl QuantizedLinear {
+    /// Quantize row-major f32 weights (+ bias) with per-output-row
+    /// absmax scales.
+    pub fn quantize(w: &[f32], b: &[f32], in_dim: usize, out_dim: usize) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim, "weight shape mismatch");
+        assert_eq!(b.len(), out_dim, "bias shape mismatch");
+        let mut q = vec![0i8; w.len()];
+        let mut scales = vec![1.0f32; out_dim];
+        for o in 0..out_dim {
+            let row = &w[o * in_dim..(o + 1) * in_dim];
+            let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let s = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            scales[o] = s;
+            let qrow = &mut q[o * in_dim..(o + 1) * in_dim];
+            for (qi, wv) in qrow.iter_mut().zip(row) {
+                *qi = (wv / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self { q, scales, b: b.to_vec(), in_dim, out_dim }
+    }
+
+    /// Reconstruct the f32 weight matrix (`s[o]·q[o][i]`). Test/debug
+    /// helper — the serving path never calls this.
+    pub fn dequantized(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.q.len()];
+        for o in 0..self.out_dim {
+            let s = self.scales[o];
+            for i in 0..self.in_dim {
+                w[o * self.in_dim + i] = s * self.q[o * self.in_dim + i] as f32;
+            }
+        }
+        w
+    }
+
+    /// Dequant-free GEMV `y = s ⊙ (Q x) + b`, dispatched on `kern`'s
+    /// path with the same scalar/lanes reduction discipline as the f32
+    /// kernels (so the int8 path is equally deterministic).
+    pub fn forward(&self, kern: Kernels, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(y.len(), self.out_dim);
+        for o in 0..self.out_dim {
+            let qrow = &self.q[o * self.in_dim..(o + 1) * self.in_dim];
+            let acc = match kern.path() {
+                KernelPath::Scalar => dot_i8_scalar(qrow, x),
+                KernelPath::Lanes => dot_i8_lanes(qrow, x),
+            };
+            y[o] = self.b[o] + self.scales[o] * acc;
+        }
+    }
+
+    /// Batched [`QuantizedLinear::forward`] over row-major `xs`
+    /// (`rows × in_dim` in, `rows × out_dim` out), tiled weight-row
+    /// outermost like [`Kernels::gemv_rows`]; bitwise equal to per-row
+    /// `forward` calls on either path.
+    pub fn forward_rows(&self, kern: Kernels, xs: &[f32], ys: &mut [f32]) {
+        debug_assert_eq!(xs.len() % self.in_dim, 0);
+        debug_assert_eq!(ys.len() / self.out_dim, xs.len() / self.in_dim);
+        let rows = xs.len() / self.in_dim;
+        for o in 0..self.out_dim {
+            let qrow = &self.q[o * self.in_dim..(o + 1) * self.in_dim];
+            for r in 0..rows {
+                let x = &xs[r * self.in_dim..(r + 1) * self.in_dim];
+                let acc = match kern.path() {
+                    KernelPath::Scalar => dot_i8_scalar(qrow, x),
+                    KernelPath::Lanes => dot_i8_lanes(qrow, x),
+                };
+                ys[r * self.out_dim + o] = self.b[o] + self.scales[o] * acc;
+            }
+        }
+    }
+}
+
+/// Sequential-fold int8·f32 dot (the scalar reference order).
+#[inline]
+fn dot_i8_scalar(q: &[i8], x: &[f32]) -> f32 {
+    q.iter().zip(x).map(|(qv, v)| *qv as f32 * v).sum()
+}
+
+/// Blocked int8·f32 dot with the lanes reduction discipline (same
+/// fixed pairwise tree + sequential tail as the f32 kernels).
+#[inline]
+fn dot_i8_lanes(q: &[i8], x: &[f32]) -> f32 {
+    let head_len = q.len() - q.len() % LANES;
+    let (qh, qt) = q.split_at(head_len);
+    let (xh, xt) = x.split_at(head_len);
+    let mut acc = [0.0f32; LANES];
+    for (cq, cx) in qh.chunks_exact(LANES).zip(xh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += cq[l] as f32 * cx[l];
+        }
+    }
+    let mut s = gemv::reduce_lanes(acc);
+    for (qv, v) in qt.iter().zip(xt) {
+        s += *qv as f32 * v;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn round_trip_error_is_within_half_a_scale_step_per_element() {
+        let mut rng = Rng::seed_from_u64(0x0801);
+        for &(in_dim, out_dim) in &[(7usize, 3usize), (32, 32), (136, 32), (33, 17)] {
+            let w = randv(&mut rng, in_dim * out_dim);
+            let b = randv(&mut rng, out_dim);
+            let ql = QuantizedLinear::quantize(&w, &b, in_dim, out_dim);
+            let wd = ql.dequantized();
+            for o in 0..out_dim {
+                let s = ql.scales[o];
+                for i in 0..in_dim {
+                    let err = (w[o * in_dim + i] - wd[o * in_dim + i]).abs();
+                    // round() gives |w/s - q| <= 0.5, so |w - s q| <= s/2
+                    // (plus an f32 rounding hair).
+                    assert!(
+                        err <= s * 0.5 + s * 1e-5,
+                        "round-trip error {err} > s/2 = {} at ({o},{i})",
+                        s * 0.5
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_scales_are_absmax_over_127_and_never_clip() {
+        let mut rng = Rng::seed_from_u64(0x0802);
+        let in_dim = 31;
+        let out_dim = 9;
+        let w = randv(&mut rng, in_dim * out_dim);
+        let b = vec![0.0f32; out_dim];
+        let ql = QuantizedLinear::quantize(&w, &b, in_dim, out_dim);
+        for o in 0..out_dim {
+            let row = &w[o * in_dim..(o + 1) * in_dim];
+            let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert_eq!(ql.scales[o].to_bits(), (absmax / 127.0).to_bits());
+            // The extremal element maps to exactly ±127 — absmax
+            // scaling cannot clip.
+            let qrow = &ql.q[o * in_dim..(o + 1) * in_dim];
+            assert_eq!(qrow.iter().map(|q| q.unsigned_abs() as u32).max(), Some(127));
+        }
+    }
+
+    #[test]
+    fn zero_rows_quantize_to_unit_scale_and_pure_bias_output() {
+        let in_dim = 16;
+        let w = vec![0.0f32; in_dim * 2];
+        let b = vec![0.25f32, -0.75];
+        let ql = QuantizedLinear::quantize(&w, &b, in_dim, 2);
+        assert_eq!(ql.scales, vec![1.0, 1.0]);
+        assert!(ql.q.iter().all(|&q| q == 0));
+        let x = vec![3.0f32; in_dim];
+        let mut y = vec![0.0f32; 2];
+        ql.forward(Kernels::lanes(), &x, &mut y);
+        assert_eq!(y, b);
+    }
+
+    #[test]
+    fn int8_forward_paths_agree_within_ulps() {
+        let mut rng = Rng::seed_from_u64(0x0803);
+        for &in_dim in &[1usize, 7, 8, 9, 33, 136] {
+            let out_dim = 32;
+            let w = randv(&mut rng, in_dim * out_dim);
+            let b = randv(&mut rng, out_dim);
+            let x = randv(&mut rng, in_dim);
+            let ql = QuantizedLinear::quantize(&w, &b, in_dim, out_dim);
+            let mut ys = vec![0.0f32; out_dim];
+            let mut yl = vec![0.0f32; out_dim];
+            ql.forward(Kernels::scalar(), &x, &mut ys);
+            ql.forward(Kernels::lanes(), &x, &mut yl);
+            for o in 0..out_dim {
+                let tol = 1e-4 * ys[o].abs().max(yl[o].abs()).max(1.0);
+                assert!(
+                    (ys[o] - yl[o]).abs() <= tol,
+                    "in={in_dim} o={o}: {} vs {}",
+                    ys[o],
+                    yl[o]
+                );
+                if in_dim < LANES {
+                    assert_eq!(ys[o].to_bits(), yl[o].to_bits(), "sub-block must be bitwise");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_forward_rows_is_bitwise_equal_to_per_row_forward() {
+        let mut rng = Rng::seed_from_u64(0x0804);
+        let in_dim = 32;
+        let out_dim = 32;
+        let rows = 5;
+        let w = randv(&mut rng, in_dim * out_dim);
+        let b = randv(&mut rng, out_dim);
+        let xs = randv(&mut rng, rows * in_dim);
+        let ql = QuantizedLinear::quantize(&w, &b, in_dim, out_dim);
+        for kern in [Kernels::scalar(), Kernels::lanes()] {
+            let mut batched = vec![0.0f32; rows * out_dim];
+            ql.forward_rows(kern, &xs, &mut batched);
+            for r in 0..rows {
+                let mut single = vec![0.0f32; out_dim];
+                ql.forward(kern, &xs[r * in_dim..(r + 1) * in_dim], &mut single);
+                for o in 0..out_dim {
+                    assert_eq!(
+                        batched[r * out_dim + o].to_bits(),
+                        single[o].to_bits(),
+                        "path={:?} r={r} o={o}",
+                        kern.path()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_output_error_respects_the_analytic_bound() {
+        let mut rng = Rng::seed_from_u64(0x0805);
+        let in_dim = 136;
+        let out_dim = 32;
+        let w = randv(&mut rng, in_dim * out_dim);
+        let b = randv(&mut rng, out_dim);
+        let x = randv(&mut rng, in_dim);
+        let ql = QuantizedLinear::quantize(&w, &b, in_dim, out_dim);
+        let kern = Kernels::lanes();
+
+        let mut y_q = vec![0.0f32; out_dim];
+        ql.forward(kern, &x, &mut y_q);
+        let mut y_f = vec![0.0f32; out_dim];
+        kern.gemv(&w, &b, in_dim, out_dim, &x, &mut y_f);
+
+        let x_l1: f32 = x.iter().map(|v| v.abs()).sum();
+        for o in 0..out_dim {
+            // |Δy| ≤ (s/2)·Σ|x| by the triangle inequality over the
+            // elementwise round-trip bound (small slack for f32 roundoff
+            // in the accumulations themselves).
+            let bound = ql.scales[o] * 0.5 * x_l1 * 1.01 + 1e-5;
+            let err = (y_q[o] - y_f[o]).abs();
+            assert!(err <= bound, "o={o}: error {err} exceeds bound {bound}");
+        }
+    }
+}

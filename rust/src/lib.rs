@@ -15,6 +15,7 @@ pub mod diffusion;
 pub mod drafter;
 pub mod envs;
 pub mod harness;
+pub mod kernels;
 pub mod policy;
 pub mod runtime;
 pub mod scheduler;

@@ -6,6 +6,7 @@
 //! * `episode`         — run a single policy episode and print metrics
 //! * `train-scheduler` — PPO-train the temporal scheduler
 //! * `distill-drafter` — distill a Transformer drafter from the base model
+//! * `quantize-drafter` — convert a drafter checkpoint to int8 per-channel
 //! * `table`           — regenerate a paper table (1..5, s1..s3)
 //! * `figure`          — regenerate a paper figure (3..6) as CSV
 
@@ -25,6 +26,7 @@ fn main() {
         "episode" => ts_dp::harness::cli::cmd_episode(&args),
         "train-scheduler" => ts_dp::scheduler::cli::cmd_train(&args),
         "distill-drafter" => ts_dp::drafter::cli::cmd_distill(&args),
+        "quantize-drafter" => ts_dp::drafter::cli::cmd_quantize(&args),
         "table" => ts_dp::harness::cli::cmd_table(&args),
         "figure" => ts_dp::harness::cli::cmd_figure(&args),
         "serve" => ts_dp::coordinator::cli::cmd_serve(&args),
@@ -58,18 +60,21 @@ COMMANDS:
                    [--batch-window-us U] [--queue N] [--adaptive]
                    [--adapt frozen|online] [--learner-min-batch N]
                    [--learner-buffer N] [--checkpoint-every N]
-                   [--adapted-policy-out FILE] [--drafter FILE]
+                   [--adapted-policy-out FILE]
+                   [--drafter FILE [--drafter-dtype f32|int8]]
                    [--qos [--degrade-pressure S] [--aging-limit N]]
   load-sweep       --task T [--method M] | --mix SPEC
-                   [--rates 1,5,20] [--requests N] [--drafter FILE]
+                   [--rates 1,5,20] [--requests N]
+                   [--drafter FILE [--drafter-dtype f32|int8]]
                    [--scheduler-policy FILE]
                    [--saturate [--multiples 0.5,1,2,4]]
   episode          --task T --style ph|mh [--method M] [--seed S] [--adaptive]
-                   [--drafter FILE]
+                   [--drafter FILE [--drafter-dtype f32|int8]]
   train-scheduler  --out FILE [--iters N] [--tasks a,b,c]
   distill-drafter  --out FILE [--tasks a,b,c] [--style ph|mh]
                    [--trajectories N] [--steps N] [--window K]
                    [--batch N] [--lr F] [--single-frac F]
+  quantize-drafter --drafter FILE [--out FILE]
   table            --id 1|2|3|4|5|s1|s2|s3 [--episodes N] [--out FILE]
   figure           --id 3|4|5|6 [--out-dir DIR]
 
@@ -91,6 +96,10 @@ Drafter swapping: `distill-drafter` trains an in-crate Transformer
 drafter against the base model and saves a JSON checkpoint;
 `--drafter FILE` on serve/load-sweep/episode swaps it under every
 replica (target verification is untouched, so results stay lossless).
+`quantize-drafter` converts a checkpoint to int8 per-channel weights
+(v2 format); `--drafter-dtype int8` serves any checkpoint quantized
+(a v1 checkpoint is quantized in-situ at load). TSDP_KERNELS=
+scalar|lanes selects the kernels backend (default: lanes).
 
 Online adaptation: `serve --adapt online` keeps PPO-training the
 scheduler from live traffic (a background learner publishes

@@ -3,6 +3,7 @@
 //! are MLP-scale, so hand-rolled forward/backward with a finite-
 //! difference gradient check is the right tool).
 
+use crate::kernels::Kernels;
 use crate::util::Rng;
 
 /// Fully-connected layer (row-major weights `[out][in]`).
@@ -26,14 +27,14 @@ impl Linear {
         Self { w, b: vec![0.0; out_dim], in_dim, out_dim }
     }
 
-    /// y = W x + b.
+    /// y = W x + b, dispatched through the process-wide kernels handle
+    /// (the former inline scalar loop lives on verbatim as the kernels
+    /// layer's `Scalar` path, so `TSDP_KERNELS=scalar` reproduces the
+    /// pre-kernels outputs bit-for-bit).
     pub fn forward(&self, x: &[f32], y: &mut [f32]) {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(y.len(), self.out_dim);
-        for o in 0..self.out_dim {
-            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
-            y[o] = self.b[o] + row.iter().zip(x).map(|(w, v)| w * v).sum::<f32>();
-        }
+        Kernels::global().gemv(&self.w, &self.b, self.in_dim, self.out_dim, x, y);
     }
 }
 

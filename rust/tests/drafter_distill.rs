@@ -193,6 +193,72 @@ fn checkpoint_serves_bit_identically_across_shards() {
 }
 
 #[test]
+fn int8_accept_rate_within_two_points_of_f32() {
+    // Int8 acceptance gate: per-channel quantization may only move the
+    // accept rate — losslessness is structural (the target verifies
+    // every draft) — and it may move it by at most 2 points on the same
+    // serving workload. Uses the same trained model and eval setting as
+    // the f32 accept bar above.
+    let model = trained_model();
+    let f32_rate = accept_of(model);
+    let int8_den =
+        DistilledDrafter::new_int8(Box::new(MockDenoiser::with_bias(0.0)), model);
+    assert_eq!(int8_den.dtype(), ts_dp::drafter::DrafterDtype::Int8);
+    let int8_rate =
+        accept_stats(&int8_den, &[Task::Lift, Task::PushT], DemoStyle::Ph, 3, eval_params(), 0x99)
+            .unwrap()
+            .accept_rate;
+    assert!(
+        (f32_rate - int8_rate).abs() <= 0.02,
+        "int8 accept rate {int8_rate:.3} drifted more than 2 points from f32 {f32_rate:.3}"
+    );
+}
+
+#[test]
+fn int8_checkpoint_serves_and_is_attributed() {
+    // quantize-drafter → serve --drafter v2: the int8 checkpoint loads
+    // through the same selector the CLI uses, serves a fleet, and the
+    // metrics summary attributes the sessions to the int8 drafter kind.
+    use ts_dp::drafter::{DrafterCheckpoint, ServingDrafter};
+    use ts_dp::kernels::Kernels;
+    let dir = TempDir::new("drafter_int8_serve");
+    let path = dir.path().join("drafter_int8.json");
+    ServingDrafter::quantize(trained_model(), Kernels::global()).save(&path).unwrap();
+    let ckpt = DrafterCheckpoint::load(&path, None).unwrap();
+    assert_eq!(ckpt.dtype(), ts_dp::drafter::DrafterDtype::Int8);
+
+    let opts = ServeOptions {
+        workload: WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1)
+            .drafter(DrafterKind::Int8)
+            .build(),
+        shards: 2,
+        queue_capacity: 64,
+        policy: Policy::Fair,
+        scheduler: None,
+        seed: 4321,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        ..ServeOptions::default()
+    };
+    let report = serve_with(
+        move |_shard| {
+            DistilledDrafter::from_checkpoint(
+                Box::new(MockDenoiser::with_bias(0.0)),
+                &ckpt,
+            )
+        },
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(report.sessions.len(), 2);
+    for s in &report.sessions {
+        assert!(s.segments > 0, "int8 drafter must serve segments");
+    }
+    let summary = report.metrics.summary();
+    assert!(summary.contains("drafters=[int8:"), "{summary}");
+}
+
+#[test]
 fn distilled_segments_match_target_only_distribution() {
     // Losslessness: accepted prefixes pass the MH test against the
     // *target's* posterior and rejections are corrected by reflection

@@ -16,14 +16,19 @@ The baseline may also carry a "p95_ratio_min" list of
 {"slow": key, "fast": key, "min": x} entries: both records must be
 present, and slow_p95 / fast_p95 must be >= min. Ratios compare two
 records from the SAME run, so they are immune to runner speed and gate
-relative wins (e.g. batched >= 2x serial drafter rollouts) rather than
-absolute wall-clock.
+relative wins (e.g. batched >= 2x serial drafter rollouts, SIMD lanes
+>= 2x forced-scalar kernels) rather than absolute wall-clock.
+
+An "accept_parity" list of {"a": key, "b": key, "max_diff": d} entries
+gates quality instead of speed: |accept_rate(a) - accept_rate(b)| must
+be <= max_diff, both records measured in the same run (the int8
+quantized drafter must hold accept-rate parity with its f32 source).
 
 Rules:
   * a baselined key missing from the bench output fails (renames and
     dropped measurements must be loud, and must update the baseline);
-  * a record named by a ratio entry missing from the output fails the
-    same way — a speedup gate that silently stops measuring is rot;
+  * a record named by a ratio or parity entry missing from the output
+    fails the same way — a gate that silently stops measuring is rot;
   * a record with no baseline entry only warns (new measurements start
     accumulating before they are gated);
   * baseline values are provisional ceilings until re-measured — see
@@ -47,6 +52,7 @@ def main() -> int:
         doc = json.load(f)
     baseline = doc["p95_s"]
     ratios = doc.get("p95_ratio_min", [])
+    parities = doc.get("accept_parity", [])
 
     records = {}
     for path in args.bench_files:
@@ -84,6 +90,19 @@ def main() -> int:
         if ratio < floor:
             failures.append(f"ratio {slow} / {fast}: {ratio:.2f}x < {floor:.2f}x")
 
+    for gate in parities:
+        a, b, max_diff = gate["a"], gate["b"], gate["max_diff"]
+        missing = [k for k in (a, b) if k not in records]
+        if missing:
+            for k in missing:
+                failures.append(f"parity gate {a} ~ {b}: record {k} missing")
+            continue
+        diff = abs(records[a]["accept_rate"] - records[b]["accept_rate"])
+        status = "FAIL" if diff > max_diff else "ok"
+        print(f"[{status}] parity {a} ~ {b}: |diff|={diff:.4f} (max {max_diff:.4f})")
+        if diff > max_diff:
+            failures.append(f"parity {a} ~ {b}: |diff| {diff:.4f} > {max_diff:.4f}")
+
     for key in sorted(set(records) - set(baseline)):
         print(f"[warn] {key}: no baseline entry (p95={records[key]['p95_s']:.4f}s)")
 
@@ -93,7 +112,8 @@ def main() -> int:
             print(f"  - {f_}", file=sys.stderr)
         return 1
     print(f"\nperf-smoke gate passed: {len(baseline)} baselined records within "
-          f"{REGRESSION_FACTOR}x, {len(ratios)} ratio gate(s) met.")
+          f"{REGRESSION_FACTOR}x, {len(ratios)} ratio gate(s) and "
+          f"{len(parities)} parity gate(s) met.")
     return 0
 
 

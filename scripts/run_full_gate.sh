@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Turnkey tier-1 + perf gate: everything CI runs, in one local command.
+#
+#     scripts/run_full_gate.sh [--bless]
+#
+# Requires a Rust toolchain (rust-toolchain.toml pins 1.84.0) and
+# python3; several growth PRs were authored in containers without one,
+# so this script is the documented payoff path for ROADMAP Open item 0:
+#
+#   1. release build;
+#   2. full test suite on the default (lanes) kernel path;
+#   3. full test suite forced onto the scalar kernel path
+#      (TSDP_KERNELS=scalar), excluding the golden trace — the snapshot
+#      pins the default path's arithmetic and is path-dependent by
+#      design;
+#   4. golden serve-trace gate: strict if the committed snapshot exists,
+#      explicit bless (then strict re-run) when --bless is passed and it
+#      does not — it never self-blesses silently;
+#   5. fast-mode benches emitting BENCH_*.json at the repo root;
+#   6. scripts/check_bench_regression.py over those files: p95 ceilings,
+#      same-run ratio gates (batched >= 2x serial drafter rollouts,
+#      lanes >= 2x forced-scalar kernels), and the int8-vs-f32
+#      accept-parity gate.
+#
+# After a first successful run on real hardware: commit the blessed
+# rust/tests/golden/serve_trace.txt and the BENCH_*.json files, and copy
+# the observed p95_s values into scripts/bench_baseline.json (the
+# checker applies 2x headroom; the committed numbers are provisional
+# ceilings until then).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BLESS=0
+for arg in "$@"; do
+    case "$arg" in
+        --bless) BLESS=1 ;;
+        *) echo "usage: $0 [--bless]" >&2; exit 2 ;;
+    esac
+done
+
+command -v cargo >/dev/null || {
+    echo "error: no cargo in PATH — this gate needs the Rust toolchain" >&2
+    exit 1
+}
+command -v python3 >/dev/null || { echo "error: python3 not found" >&2; exit 1; }
+
+GOLDEN=rust/tests/golden/serve_trace.txt
+# Explicit test list for the scalar leg: every integration suite except
+# the path-dependent golden trace (mirrors .github/workflows/ci.yml).
+SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test online_adapt
+    --test qos_serving --test runtime_integration --test serve_batching)
+
+echo "==> [1/6] cargo build --release"
+(cd rust && cargo build --release)
+
+echo "==> [2/6] cargo test (default lanes kernel path)"
+if [ -f "$GOLDEN" ]; then
+    (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q)
+else
+    echo "    (golden snapshot absent — golden_trace deferred to step 4)"
+    (cd rust && cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
+fi
+
+echo "==> [3/6] cargo test (TSDP_KERNELS=scalar, golden trace excluded)"
+(cd rust && TSDP_KERNELS=scalar cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
+
+echo "==> [4/6] golden serve-trace gate"
+if [ -f "$GOLDEN" ]; then
+    (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q --test golden_trace)
+elif [ "$BLESS" = 1 ]; then
+    echo "    blessing $GOLDEN (explicit --bless)"
+    (cd rust && TSDP_BLESS_GOLDEN=1 cargo test -q --test golden_trace)
+    (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q --test golden_trace)
+    echo "    NOW COMMIT: git add $GOLDEN"
+else
+    echo "error: $GOLDEN is not committed; re-run with --bless to" >&2
+    echo "generate it explicitly (the gate never self-blesses)" >&2
+    exit 1
+fi
+
+echo "==> [5/6] fast-mode benches (BENCH_*.json at repo root)"
+(cd rust && TSDP_BENCH_FAST=1 cargo bench --bench speculative --bench qos)
+
+echo "==> [6/6] perf regression gate"
+python3 scripts/check_bench_regression.py \
+    --baseline scripts/bench_baseline.json \
+    BENCH_speculative.json BENCH_qos.json
+
+echo "full gate passed."
