@@ -412,6 +412,84 @@ fn bench_kernels(sink: &mut BenchSink) {
     println!();
 }
 
+/// Observability probe: the identical serve twice — recorders fully off
+/// (the default) and fully on (span tracing + 1 ms flight sampling) —
+/// plus the per-stage wall-time attribution the traced run produces.
+/// The committed `p95_ratio_max` baseline entry gates the overhead
+/// bound (traced p95 within 2× of untraced; the contract tests pin the
+/// stronger property that served bits are identical either way).
+fn bench_obs_overhead(sink: &mut BenchSink) {
+    use ts_dp::obs::ObsConfig;
+    println!("== observability overhead (mock denoiser, 4 sessions, tracing + flight) ==");
+    let dir = std::env::temp_dir().join(format!("tsdp_bench_obs_{}", std::process::id()));
+    let run = |obs: ObsConfig| {
+        let opts = ServeOptions {
+            policy: Policy::Fair,
+            seed: 3,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            obs,
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1)
+        };
+        let t0 = Instant::now();
+        let report = serve_with(|_| MockDenoiser::with_bias(0.05), &opts).expect("serving");
+        (report, t0.elapsed().as_secs_f64())
+    };
+    let obs_on = ObsConfig {
+        trace_out: Some(dir.join("trace.json")),
+        obs_interval: Some(Duration::from_millis(1)),
+        obs_out: Some(dir.join("flight.jsonl")),
+        ring_cap: 0,
+    };
+    for (mode, obs) in [("off", ObsConfig::default()), ("on", obs_on)] {
+        let (report, secs) = run(obs);
+        println!(
+            "obs={:<4} {:>7.1} seg/s  p95={:.4}s  wall={:.2}s",
+            mode,
+            report.metrics.requests as f64 / secs,
+            report.metrics.latency_percentile(0.95),
+            secs,
+        );
+        sink.push(BenchRecord {
+            name: format!("serve_obs[mode={mode}]"),
+            params: vec![("mode".into(), mode.into()), ("sessions".into(), "4".into())],
+            p50_s: report.metrics.latency_percentile(0.50),
+            p95_s: report.metrics.latency_percentile(0.95),
+            p99_s: report.metrics.latency_percentile(0.99),
+            nfe: report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+            accept_rate: report.metrics.acceptance_rate(),
+            goodput_rps: report.metrics.requests as f64 / secs.max(1e-9),
+        });
+        // Per-stage wall-time attribution from the traced run
+        // (unbaselined: stage split is informational, the ceiling above
+        // already bounds the total).
+        for (stage, dist) in &report.metrics.stage_times {
+            println!(
+                "  stage {:<12} n={:<6} p50={:.6}s p95={:.6}s",
+                stage,
+                dist.stats.count(),
+                dist.reservoir.percentile(0.50),
+                dist.reservoir.percentile(0.95),
+            );
+            sink.push(BenchRecord {
+                name: format!("serve_stage[stage={stage}]"),
+                params: vec![
+                    ("stage".into(), (*stage).into()),
+                    ("n".into(), format!("{}", dist.stats.count())),
+                ],
+                p50_s: dist.reservoir.percentile(0.50),
+                p95_s: dist.reservoir.percentile(0.95),
+                p99_s: dist.reservoir.percentile(0.99),
+                nfe: 0.0,
+                accept_rate: 0.0,
+                goodput_rps: 0.0,
+            });
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+}
+
 /// Int8 acceptance-parity probe: distill a quick drafter, then measure
 /// the accept rate serving speculative segments with the f32 weights vs
 /// the int8 per-channel quantization of the SAME weights. Losslessness
@@ -590,12 +668,19 @@ fn main() {
     // either.
     let fast = std::env::var_os("TSDP_BENCH_FAST").is_some();
     let mut sink = BenchSink::new("speculative");
+    // Build/run provenance rides in the document's `meta` key (crate
+    // version, kernel path, drafter dtype, fleet shape) so archived
+    // trajectories stay attributable to what produced them.
+    sink.set_meta(
+        ts_dp::obs::Provenance::collect(1, "base", "bench:speculative(mock+model)").to_json(),
+    );
     bench_accept_scan_scratch();
     bench_batched_serving(&mut sink);
     bench_sharded_serving(&mut sink);
     bench_drafter_batching(&mut sink);
     bench_kernels(&mut sink);
     bench_accept_parity(&mut sink);
+    bench_obs_overhead(&mut sink);
     if !fast {
         bench_online_adaptation();
         bench_drafter_accept_rates();

@@ -91,6 +91,34 @@ impl Batcher {
         self.len == 0
     }
 
+    /// Buffered request count per QoS class, indexed by
+    /// [`QosClass::rank`] — a flight-recorder gauge. Every policy
+    /// answers (Fifo/Fair bucket by each request's class tag), so the
+    /// gauge is meaningful even when dispatch ignores class.
+    pub fn depth_by_class(&self) -> [usize; N_CLASSES] {
+        let mut depth = [0usize; N_CLASSES];
+        match self.policy {
+            Policy::Fifo => {
+                for r in &self.fifo {
+                    depth[r.spec.qos.rank()] += 1;
+                }
+            }
+            Policy::Fair => {
+                for q in self.queues.values() {
+                    for r in q {
+                        depth[r.spec.qos.rank()] += 1;
+                    }
+                }
+            }
+            Policy::Priority => {
+                for (rank, q) in self.classes.iter().enumerate() {
+                    depth[rank] = q.len();
+                }
+            }
+        }
+        depth
+    }
+
     /// Admit a request.
     pub fn push(&mut self, req: SegmentRequest) {
         self.len += 1;
@@ -414,6 +442,23 @@ mod tests {
             }
             assert!(worst_wait > 0, "the flood must actually delay batch work");
         });
+    }
+
+    #[test]
+    fn depth_by_class_counts_under_every_policy() {
+        for policy in [Policy::Fifo, Policy::Fair, Policy::Priority] {
+            let mut b = Batcher::new(policy);
+            b.push(req_class(1, QosClass::Realtime));
+            b.push(req_class(2, QosClass::Batch));
+            b.push(req_class(3, QosClass::Batch));
+            let depth = b.depth_by_class();
+            assert_eq!(depth[QosClass::Realtime.rank()], 1, "{policy:?}");
+            assert_eq!(depth[QosClass::Interactive.rank()], 0, "{policy:?}");
+            assert_eq!(depth[QosClass::Batch.rank()], 2, "{policy:?}");
+            assert_eq!(depth.iter().sum::<usize>(), b.len(), "{policy:?}");
+            b.pop();
+            assert_eq!(b.depth_by_class().iter().sum::<usize>(), b.len(), "{policy:?}");
+        }
     }
 
     #[test]

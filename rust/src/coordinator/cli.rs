@@ -348,6 +348,27 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         seed,
         ..LearnerConfig::default()
     };
+    // Observability: `--trace-out FILE` switches on span tracing,
+    // `--obs-interval MS` the flight recorder. `--obs-out` without the
+    // interval would be a silent no-op — reject it, matching the QoS
+    // and learner knob handling above.
+    anyhow::ensure!(
+        args.get("obs-interval").is_some() || args.get("obs-out").is_none(),
+        "--obs-out only takes effect with --obs-interval"
+    );
+    let obs = crate::obs::ObsConfig {
+        trace_out: args.get("trace-out").map(PathBuf::from),
+        obs_interval: match args.get("obs-interval") {
+            Some(_) => {
+                let ms = args.get_u64("obs-interval", 0)?;
+                anyhow::ensure!(ms > 0, "--obs-interval must be a positive millisecond count");
+                Some(std::time::Duration::from_millis(ms))
+            }
+            None => None,
+        },
+        obs_out: args.get("obs-out").map(PathBuf::from),
+        ring_cap: 0,
+    };
 
     // Workload: heterogeneous `--mix` spec, or the uniform legacy shape
     // from --task/--style/--method/--sessions/--episodes. The two are
@@ -384,6 +405,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         adapt,
         learner,
         qos,
+        obs,
     };
     // serve() clamps the shard count to the session count; print the
     // effective fleet shape, not the raw flag.
@@ -450,5 +472,22 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("overall success rate: {:.1}%", report.success_rate() * 100.0);
+    if let Some(o) = &report.obs {
+        println!("--- observability ---");
+        if let Some(p) = &o.trace_path {
+            println!(
+                "trace: {} ({} spans, {} overwritten by ring overflow)",
+                p.display(),
+                o.spans,
+                o.spans_dropped
+            );
+        }
+        if let Some(p) = &o.flight_path {
+            println!("flight recorder: {} ({} samples)", p.display(), o.flight_samples);
+        }
+        if let Some(p) = &o.prom_path {
+            println!("prometheus exposition: {}", p.display());
+        }
+    }
     Ok(())
 }

@@ -15,6 +15,7 @@
 //! requests the fleet serves.
 
 use crate::coordinator::qos::{QosClass, ShedReason};
+use crate::obs::span::{SpanKind, StageDist};
 use crate::util::stats::{OnlineStats, Reservoir};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -161,6 +162,11 @@ pub struct ServerMetrics {
     /// class name (`summary` renders it in priority order). Empty (and
     /// absent from `summary`) unless the run served with QoS enabled.
     pub qos_classes: BTreeMap<&'static str, QosClassMetrics>,
+    /// Per-stage wall-time attribution (seconds), keyed by
+    /// [`SpanKind::name`], fed by the span recorders when tracing is on.
+    /// Empty (and absent from `summary`) on untraced runs, so the
+    /// legacy summary shape is untouched.
+    pub stage_times: BTreeMap<&'static str, StageDist>,
 }
 
 impl Default for ServerMetrics {
@@ -198,6 +204,7 @@ impl ServerMetrics {
             policy_epoch_max: 0,
             shard_breakdown: Vec::new(),
             qos_classes: BTreeMap::new(),
+            stage_times: BTreeMap::new(),
         }
     }
 
@@ -361,6 +368,18 @@ impl ServerMetrics {
         self.peak_inflight = self.peak_inflight.max(jobs);
     }
 
+    /// Fold one stage's observed wall-time distribution into the
+    /// attribution table (span-recorder handoff at shard exit, and
+    /// session/learner sink folding at fleet merge).
+    pub fn record_stage(&mut self, stage: &'static str, dist: &StageDist) {
+        self.stage_times.entry(stage).or_default().merge(dist);
+    }
+
+    /// Stage percentile in seconds (q in [0,1]; 0 for unknown stages).
+    pub fn stage_percentile(&self, stage: &str, q: f64) -> f64 {
+        self.stage_times.get(stage).map_or(0.0, |d| d.reservoir.percentile(q))
+    }
+
     /// Fold per-shard metrics into one fleet-wide view: counters sum,
     /// online stats merge (parallel Welford), latency/queue percentiles
     /// merge at the reservoir level, and the per-shard breakdown
@@ -405,6 +424,9 @@ impl ServerMetrics {
             fleet.policy_epoch_max = fleet.policy_epoch_max.max(m.policy_epoch_max);
             for (&class, qm) in &m.qos_classes {
                 fleet.qos_classes.entry(class).or_default().merge(qm);
+            }
+            for (&stage, dist) in &m.stage_times {
+                fleet.stage_times.entry(stage).or_default().merge(dist);
             }
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
@@ -569,6 +591,25 @@ impl ServerMetrics {
                 parts.join(" | "),
                 self.in_deadline_goodput()
             ));
+        }
+        // Per-stage wall-time attribution (traced runs only), stages in
+        // pipeline order; times in milliseconds.
+        if !self.stage_times.is_empty() {
+            let parts: Vec<String> = SpanKind::ALL
+                .iter()
+                .filter_map(|&k| self.stage_times.get(k.name()).map(|d| (k, d)))
+                .map(|(k, d)| {
+                    format!(
+                        "{} n={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                        k.name(),
+                        d.stats.count(),
+                        d.reservoir.percentile(0.50) * 1e3,
+                        d.reservoir.percentile(0.95) * 1e3,
+                        d.reservoir.percentile(0.99) * 1e3,
+                    )
+                })
+                .collect();
+            s.push_str(&format!(" stages=[{}]", parts.join(" | ")));
         }
         s
     }
@@ -770,5 +811,40 @@ mod tests {
         // Non-adaptive runs keep the legacy summary shape.
         let plain = ServerMetrics::new();
         assert!(!plain.summary().contains("policy-epoch"), "{}", plain.summary());
+    }
+
+    #[test]
+    fn stage_attribution_merges_and_renders_conditionally() {
+        // Untraced runs keep the legacy summary shape.
+        let plain = ServerMetrics::new();
+        assert!(!plain.summary().contains("stages=["), "{}", plain.summary());
+        // Shard-side attribution folds through the fleet merge.
+        let mut verify_a = StageDist::new();
+        for _ in 0..10 {
+            verify_a.push(0.002);
+        }
+        let mut verify_b = StageDist::new();
+        for _ in 0..30 {
+            verify_b.push(0.004);
+        }
+        let mut queue = StageDist::new();
+        queue.push(0.0005);
+        let mut a = ServerMetrics::for_shard(0);
+        a.record_stage(SpanKind::VerifyCall.name(), &verify_a);
+        a.record_stage(SpanKind::QueueWait.name(), &queue);
+        let mut b = ServerMetrics::for_shard(1);
+        b.record_stage(SpanKind::VerifyCall.name(), &verify_b);
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        let d = fleet.stage_times.get("verify").expect("verify stage merged");
+        assert_eq!(d.stats.count(), 40);
+        assert!((fleet.stage_percentile("verify", 0.95) - 0.004).abs() < 1e-9);
+        assert!((fleet.stage_percentile("queue_wait", 0.5) - 0.0005).abs() < 1e-12);
+        assert_eq!(fleet.stage_percentile("no_such_stage", 0.5), 0.0);
+        let s = fleet.summary();
+        assert!(s.contains("stages=["), "{s}");
+        // Pipeline order: queue_wait renders before verify.
+        let qpos = s.find("queue_wait n=1").expect("queue_wait rendered");
+        let vpos = s.find("verify n=40").expect("verify rendered");
+        assert!(qpos < vpos, "{s}");
     }
 }

@@ -139,6 +139,29 @@
 //! with, its speculative rounds reproduce the target distribution
 //! exactly.
 //!
+//! **Observability** (`ServeOptions { obs, .. }`; CLI `--trace-out` /
+//! `--obs-interval`, both off by default): the request path above is
+//! instrumented by `crate::obs` as a read-only tap. Each shard worker
+//! owns a bounded [`crate::obs::SpanRecorder`] ring — queue wait is
+//! recorded at admission from the request's submit timestamp (as
+//! overlapping intervals on a per-shard queue lane), admission,
+//! draft-wave (enclosing the fused GEMV call), verify, commit, and
+//! finalize spans bracket the corresponding steps of the job-table
+//! loop — while session drivers and the learner record scheduler
+//! decisions and PPO epochs through a shared mutex-guarded
+//! [`crate::obs::SpanSink`] on their own lanes. A per-shard
+//! [`crate::obs::FlightRecorder`] (interval-gated, at round
+//! granularity) snapshots queue depth per class, pressure, wave/verify
+//! occupancy, KV-arena blocks, accept EWMA, and shed counts. At run
+//! end `server.rs::export_obs` merges everything: Chrome trace JSON +
+//! flight JSONL/Prometheus files, per-stage latency distributions
+//! folded into [`ServerMetrics::stage_times`] (the `stages=[...]`
+//! summary section), and an [`crate::obs::ObsReport`] on the
+//! [`ServeReport`]. The contract — clocks are read, never branched on;
+//! disabled recorders read no clocks at all — means recording cannot
+//! perturb served bits; `tests/obs_trace.rs` pins traced-vs-untraced
+//! fingerprint identity on the golden workload.
+//!
 //! **QoS determinism contract**: every overload behavior above sits
 //! behind `ServeOptions { qos: QosConfig { enabled: true, .. }, .. }`
 //! (CLI `--qos`). With QoS *disabled* — the default — no request is

@@ -35,6 +35,11 @@ use crate::coordinator::request::{SegmentReply, SegmentRequest, SegmentResponse}
 use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::coordinator::workload::{SessionSpec, WorkloadMix};
+use crate::obs::span::{queue_lane, shard_lane, Attrs, SpanKind, SpanRecorder, SpanSink, NO_ATTR};
+use crate::obs::trace::{describe_workload, write_chrome_trace, Provenance};
+use crate::obs::{
+    flight, FlightGauges, FlightRecorder, FlightSample, ObsConfig, ObsReport, SpanEvent,
+};
 use crate::policy::{Denoiser, RolloutRequest};
 use crate::scheduler::online::{run_learner, ExperienceHub, PolicyStore};
 use crate::scheduler::{LearnerConfig, LearnerReport, SchedulerPolicy, SessionScheduler};
@@ -95,6 +100,11 @@ pub struct ServeOptions {
     /// is ever shed or degraded, and no pressure reaches the
     /// scheduler's features).
     pub qos: QosConfig,
+    /// Observability: span tracing (`--trace-out`) and the flight
+    /// recorder (`--obs-interval`). Off by default; recording never
+    /// changes serving behavior — clocks are read, never branched on,
+    /// so served bits are identical with observability on or off.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeOptions {
@@ -118,6 +128,7 @@ impl Default for ServeOptions {
             adapt: AdaptMode::Frozen,
             learner: LearnerConfig::default(),
             qos: QosConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -160,6 +171,9 @@ pub struct ServeReport {
     /// trajectory and the adapted policy (`None` unless the run served
     /// with `adapt: Online` and a scheduler).
     pub learner: Option<LearnerReport>,
+    /// What the observability layer exported (`None` unless the run
+    /// requested tracing or the flight recorder).
+    pub obs: Option<ObsReport>,
 }
 
 impl ServeReport {
@@ -261,6 +275,8 @@ fn run_shard(
     shard: usize,
     assigned_sessions: usize,
     opts: &ServeOptions,
+    rec: &mut SpanRecorder,
+    flight: &mut Option<FlightRecorder>,
 ) -> Result<()> {
     let max_batch = opts.max_batch.max(1);
     let engine = SpecEngine::new();
@@ -285,6 +301,11 @@ fn run_shard(
     // config reports 0.0 so served bits and frozen decisions stay
     // identical to the pre-QoS fleet.
     let mut gauge = PressureGauge::new();
+
+    // Flight-recorder occupancy gauges: sizes of the most recent fused
+    // draft wave and verify batch (0 until the first round executes).
+    let mut last_wave_occ = 0usize;
+    let mut last_verify_occ = 0usize;
 
     // Throughput measures serving only: the clock (re)starts when this
     // shard's first request lands, so neither this shard's replica
@@ -361,6 +382,19 @@ fn run_shard(
                 continue;
             }
             let queue_delay = req.submitted.elapsed().as_secs_f64();
+            // Observability (inert when tracing is off): the queue wait
+            // renders on the shard's dedicated queue lane — waits of
+            // co-buffered requests overlap, so they cannot nest — and
+            // the admission span opens here, closing after the job is
+            // tabled (or, for baselines, fully generated and replied).
+            let span_session = req.session as u32;
+            let span_epoch = req.policy_epoch.map_or(NO_ATTR, |e| e as u32);
+            rec.record(
+                SpanKind::QueueWait,
+                Some(req.submitted),
+                Attrs { session: span_session, lane: queue_lane(shard), ..Attrs::NONE },
+            );
+            let t_admit = rec.start();
             if let Some(epoch) = req.policy_epoch {
                 metrics.record_policy_epoch(epoch);
             }
@@ -439,7 +473,15 @@ fn run_shard(
                     shard,
                     pressure,
                 }));
+                if let Some(f) = flight.as_mut() {
+                    f.observe_accept(trace.drafts(), trace.accepted());
+                }
             }
+            rec.record(
+                SpanKind::Admission,
+                t_admit,
+                Attrs { session: span_session, policy_epoch: span_epoch, ..Attrs::NONE },
+            );
         }
         if !jobs.is_empty() {
             metrics.record_inflight(jobs.len());
@@ -456,6 +498,7 @@ fn run_shard(
         // never change any session's bits. Backends without a fused
         // path return per-request `None`s and finish_draft falls back
         // to bit-identical serial drafter steps.
+        let t_wave = if jobs.is_empty() { None } else { rec.start() };
         for aj in jobs.iter_mut() {
             if aj.job.stage() == Stage::Draft {
                 let rng = rngs.get_mut(&aj.session).expect("rng created at admission");
@@ -465,24 +508,34 @@ fn run_shard(
         let wave: Vec<usize> = (0..jobs.len())
             .filter(|&i| jobs[i].job.stage() == Stage::DraftWave)
             .collect();
+        last_wave_occ = wave.len();
         if !wave.is_empty() {
             metrics.record_draft_wave(wave.len());
+            let t_gemv = rec.start();
             let mut rollouts = {
                 let reqs: Vec<RolloutRequest<'_>> =
                     wave.iter().map(|&i| jobs[i].job.rollout_request()).collect();
                 den.drafter_rollout_many(&reqs)?
             };
+            rec.record(SpanKind::Gemv, t_gemv, Attrs { count: wave.len() as u32, ..Attrs::NONE });
             for (slot, &i) in wave.iter().enumerate() {
                 jobs[i].job.finish_draft(den, rollouts[slot].take())?;
             }
+            rec.record(
+                SpanKind::DraftWave,
+                t_wave,
+                Attrs { count: wave.len() as u32, ..Attrs::NONE },
+            );
         }
 
         // --- 4. fuse all pending verify stages into one call ----
         let pending: Vec<usize> = (0..jobs.len())
             .filter(|&i| jobs[i].job.stage() == Stage::Verify)
             .collect();
+        last_verify_occ = pending.len();
         if !pending.is_empty() {
             metrics.record_verify_batch(pending.len());
+            let t_verify = rec.start();
             let mut xs = Vec::with_capacity(pending.len() * VERIFY_BATCH * SEG);
             let mut ts = Vec::with_capacity(pending.len() * VERIFY_BATCH);
             let mut conds = Vec::with_capacity(pending.len() * EMBED_DIM);
@@ -492,17 +545,30 @@ fn run_shard(
                 conds.extend_from_slice(jobs[i].job.cond());
             }
             let eps = den.target_verify_many(&xs, &ts, &conds)?;
+            rec.record(
+                SpanKind::VerifyCall,
+                t_verify,
+                Attrs { count: pending.len() as u32, ..Attrs::NONE },
+            );
+            let t_commit = rec.start();
             for (slot, &i) in pending.iter().enumerate() {
                 let eps_i = &eps[slot * VERIFY_BATCH * SEG..(slot + 1) * VERIFY_BATCH * SEG];
                 let rng = rngs.get_mut(&jobs[i].session).expect("rng created at admission");
                 jobs[i].job.accept(eps_i, rng);
             }
+            rec.record(
+                SpanKind::Commit,
+                t_commit,
+                Attrs { count: pending.len() as u32, ..Attrs::NONE },
+            );
         }
 
         // --- 5. finalize finished jobs and reply ----------------
         let mut i = 0;
         while i < jobs.len() {
-            if jobs[i].job.stage() == Stage::Final {
+            let finalizing = jobs[i].job.stage() == Stage::Final;
+            let t_final = if finalizing { rec.start() } else { None };
+            if finalizing {
                 jobs[i].job.finalize(den)?;
             }
             if jobs[i].job.stage() == Stage::Done {
@@ -547,8 +613,39 @@ fn run_shard(
                     shard: trace.shard,
                     pressure,
                 }));
+                rec.record(
+                    SpanKind::Finalize,
+                    t_final,
+                    Attrs { session: done.session as u32, ..Attrs::NONE },
+                );
+                if let Some(f) = flight.as_mut() {
+                    f.observe_accept(trace.drafts(), trace.accepted());
+                }
             } else {
                 i += 1;
+            }
+        }
+
+        // --- 6. flight recorder: due-gated gauge snapshot --------
+        // Sampling sits at round granularity (after the wave/verify/
+        // finalize phases) so occupancy gauges describe the round that
+        // just executed; when the shard blocks idle in step 1 the
+        // gauges are static, so no samples are missed that would have
+        // carried information.
+        if let Some(f) = flight.as_mut() {
+            if f.due() {
+                f.sample(FlightGauges {
+                    queue_depth: batcher.len(),
+                    queue_by_class: batcher.depth_by_class(),
+                    inflight: jobs.len(),
+                    pressure_secs: gauge.pressure(batcher.len() + jobs.len()),
+                    draft_wave_occ: last_wave_occ,
+                    verify_occ: last_verify_occ,
+                    arena_blocks: den.kv_arena_high_water().unwrap_or(0),
+                    policy_epoch: metrics.policy_epoch_max,
+                    served: metrics.requests,
+                    sheds: metrics.shed_total(),
+                });
             }
         }
     }
@@ -559,6 +656,18 @@ fn run_shard(
     }
     Ok(())
 }
+
+/// What one shard worker thread returns to `serve` at join.
+type ShardJoin = (ServerMetrics, SpanRecorder, Vec<FlightSample>, Result<()>);
+
+/// What the scoped fleet returns to `serve` after every join.
+type FleetJoin = (
+    Vec<ServerMetrics>,
+    Vec<SessionReport>,
+    Option<LearnerReport>,
+    Vec<SpanRecorder>,
+    Vec<FlightSample>,
+);
 
 /// Format a `std::thread` join panic payload into an error.
 fn panic_to_error(role: &str, idx: usize, payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
@@ -610,8 +719,18 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
         (None, None)
     };
 
-    let (shard_metrics, reports, learner) = std::thread::scope(
-        |scope| -> Result<(Vec<ServerMetrics>, Vec<SessionReport>, Option<LearnerReport>)> {
+    // Observability: one shared monotonic epoch so every recorder's
+    // timestamps align in the exported trace, plus a shared sink for
+    // the low-rate producers (session drivers and the learner).
+    let obs_epoch = Instant::now();
+    let obs_sink = Arc::new(SpanSink::new(
+        obs_epoch,
+        opts.obs.effective_ring_cap(),
+        opts.obs.tracing(),
+    ));
+
+    let (shard_metrics, reports, learner, shard_recs, flight_samples) =
+        std::thread::scope(|scope| -> Result<FleetJoin> {
             // Readiness barrier: session drivers start only after every
             // shard's replica attempt has resolved, so queue-delay and
             // latency percentiles measure serving — never the (possibly
@@ -624,10 +743,20 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 let assigned = router.load(shard);
                 let opts_ref = &*opts;
                 let ready = ready_tx.clone();
-                workers.push(scope.spawn(move || -> (ServerMetrics, Result<()>) {
+                workers.push(scope.spawn(move || -> ShardJoin {
                     let mut metrics = ServerMetrics::for_shard(shard);
                     let mut batcher =
                         Batcher::with_aging_limit(opts_ref.policy, opts_ref.qos.aging_limit);
+                    let mut rec = SpanRecorder::new(
+                        obs_epoch,
+                        shard_lane(shard),
+                        opts_ref.obs.effective_ring_cap(),
+                        opts_ref.obs.tracing(),
+                    );
+                    let mut flight = opts_ref
+                        .obs
+                        .obs_interval
+                        .map(|iv| FlightRecorder::new(obs_epoch, shard, iv));
                     // Build the replica on this thread (non-`Send`
                     // backends never cross threads), then run the engine
                     // loop in an inner closure so that on error we still
@@ -650,6 +779,8 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                             shard,
                             assigned,
                             opts_ref,
+                            &mut rec,
+                            &mut flight,
                         )
                     });
                     // Shard done (or failed): freeze the serving window,
@@ -658,7 +789,14 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                     metrics.stop_clock();
                     while batcher.pop().is_some() {}
                     drop(rx);
-                    (metrics, result)
+                    // Fold this shard's span attribution into its own
+                    // metrics so merge_fleet aggregates it like any
+                    // other distribution.
+                    for (kind, dist) in rec.stage_dists() {
+                        metrics.record_stage(kind.name(), dist);
+                    }
+                    let samples = flight.map(FlightRecorder::into_samples).unwrap_or_default();
+                    (metrics, rec, samples, result)
                 }));
             }
             drop(ready_tx);
@@ -680,7 +818,8 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 let rx = learner_rx.take().expect("hub built for online mode");
                 let cfg = opts.learner.clone();
                 let dropped = hub.as_ref().expect("hub built for online mode").dropped();
-                Some(scope.spawn(move || run_learner(st, rx, cfg, dropped)))
+                let spans = Some(obs_sink.clone());
+                Some(scope.spawn(move || run_learner(st, rx, cfg, dropped, spans)))
             } else {
                 None
             };
@@ -705,6 +844,7 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                     shard: assignments[s],
                     seed: opts.seed ^ ((s as u64 + 1) << 32),
                     adaptive,
+                    obs: Some(obs_sink.clone()),
                 };
                 let tx = senders[assignments[s]].clone();
                 session_handles.push(scope.spawn(move || run_session(cfg, tx)));
@@ -745,11 +885,15 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
             };
 
             let mut shard_metrics = Vec::with_capacity(shards);
+            let mut shard_recs = Vec::with_capacity(shards);
+            let mut flight_samples: Vec<FlightSample> = Vec::new();
             let mut shard_err: Option<anyhow::Error> = None;
             for (shard, h) in workers.into_iter().enumerate() {
                 match h.join() {
-                    Ok((metrics, result)) => {
+                    Ok((metrics, rec, samples, result)) => {
                         shard_metrics.push(metrics);
+                        shard_recs.push(rec);
+                        flight_samples.extend(samples);
                         if let Err(e) = result {
                             if shard_err.is_none() {
                                 shard_err = Some(e);
@@ -777,12 +921,72 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
             if let Some(e) = learner_err {
                 return Err(e);
             }
-            Ok((shard_metrics, reports, learner_report))
-        },
-    )?;
+            Ok((shard_metrics, reports, learner_report, shard_recs, flight_samples))
+        })?;
 
-    let metrics = ServerMetrics::merge_fleet(&shard_metrics);
-    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner })
+    let mut metrics = ServerMetrics::merge_fleet(&shard_metrics);
+    let obs = export_obs(opts, shards, &obs_sink, &shard_recs, flight_samples, &mut metrics)?;
+    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner, obs })
+}
+
+/// Export the run's observability artifacts (Chrome trace JSON, flight
+/// JSONL + Prometheus text) and fold sink-side stage attribution into
+/// the fleet metrics. Returns `None` when no output was requested.
+fn export_obs(
+    opts: &ServeOptions,
+    shards: usize,
+    sink: &SpanSink,
+    shard_recs: &[SpanRecorder],
+    samples: Vec<FlightSample>,
+    fleet: &mut ServerMetrics,
+) -> Result<Option<ObsReport>> {
+    let cfg = &opts.obs;
+    if !cfg.any() {
+        return Ok(None);
+    }
+    let (sink_events, sink_dropped, sink_dists) = sink.drain();
+    for (kind, dist) in &sink_dists {
+        fleet.record_stage(kind.name(), dist);
+    }
+    let mut report = ObsReport::default();
+    if let Some(path) = &cfg.trace_out {
+        let mut events: Vec<SpanEvent> =
+            shard_recs.iter().flat_map(SpanRecorder::events).collect();
+        events.extend(sink_events);
+        report.spans = events.len();
+        report.spans_dropped =
+            shard_recs.iter().map(SpanRecorder::dropped).sum::<u64>() + sink_dropped;
+        let prov = Provenance::collect(
+            shards,
+            drafter_label(&opts.workload),
+            describe_workload(&opts.workload),
+        );
+        write_chrome_trace(path, &events, &prov)?;
+        report.trace_path = Some(path.clone());
+    }
+    if cfg.flight() {
+        let jsonl = cfg.flight_path();
+        let prom = cfg.prom_path();
+        flight::write_jsonl(&jsonl, &samples)?;
+        flight::write_prometheus(&prom, &samples)?;
+        report.flight_samples = samples.len();
+        report.flight_path = Some(jsonl);
+        report.prom_path = Some(prom);
+    }
+    Ok(Some(report))
+}
+
+/// Drafter provenance label: the single drafter kind the workload uses,
+/// or `"mixed"` when specs disagree (provenance metadata, not behavior).
+fn drafter_label(workload: &[SessionSpec]) -> String {
+    let mut names: Vec<&str> = workload.iter().map(|s| s.drafter.name()).collect();
+    names.sort_unstable();
+    names.dedup();
+    match names.as_slice() {
+        [] => "none".to_string(),
+        [one] => (*one).to_string(),
+        _ => "mixed".to_string(),
+    }
 }
 
 /// Convenience wrapper over [`serve`] for infallible factories: builds
@@ -846,6 +1050,47 @@ mod tests {
         let report = serve_with(mock_factory(0.05), &opts).unwrap();
         assert_eq!(report.sessions.len(), 4);
         assert!(report.metrics.requests > 0);
+    }
+
+    #[test]
+    fn observability_exports_trace_and_flight_artifacts() {
+        let dir = crate::util::testing::TempDir::new("serve_obs");
+        let trace = dir.path().join("trace.json");
+        let flight_jsonl = dir.path().join("flight.jsonl");
+        let opts = ServeOptions {
+            obs: crate::obs::ObsConfig {
+                trace_out: Some(trace.clone()),
+                obs_interval: Some(std::time::Duration::from_millis(1)),
+                obs_out: Some(flight_jsonl.clone()),
+                ring_cap: 0,
+            },
+            ..ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 3, 1)
+        };
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
+        let obs = report.obs.expect("obs was requested");
+        assert!(obs.spans > 0, "serving must record spans");
+        // The exported file is a valid Chrome trace.
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let stats = crate::obs::trace::validate(&doc).unwrap();
+        assert!(stats.spans > 0, "trace must carry B/E span pairs");
+        // Flight samples round-trip and the exposition landed.
+        let samples = crate::obs::flight::read_jsonl(&flight_jsonl).unwrap();
+        assert_eq!(samples.len(), obs.flight_samples);
+        assert!(flight_jsonl.with_extension("prom").exists());
+        // Per-stage attribution merged into the fleet metrics/summary.
+        assert!(report.metrics.summary().contains("stages=["));
+        assert!(report.metrics.stage_times.contains_key("verify"));
+        assert!(report.metrics.stage_times.contains_key("queue_wait"));
+    }
+
+    #[test]
+    fn untraced_runs_report_no_obs_and_legacy_summary_shape() {
+        let opts = ServeOptions::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 2, 1);
+        let report = serve_with(mock_factory(0.05), &opts).unwrap();
+        assert!(report.obs.is_none());
+        assert!(report.metrics.stage_times.is_empty());
+        assert!(!report.metrics.summary().contains("stages=["));
     }
 
     #[test]

@@ -7,10 +7,12 @@ use crate::coordinator::request::{SegmentRequest, SegmentResponse};
 use crate::coordinator::workload::SessionSpec;
 use crate::envs::make_env;
 use crate::harness::episode::{DecisionHook, SegmentOutcome};
+use crate::obs::span::{session_lane, Attrs, SpanKind, SpanSink};
 use crate::scheduler::features::{features, FeatureState};
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Summary of one session's episodes.
@@ -80,6 +82,10 @@ pub struct SessionConfig {
     /// online mode also samples exploration actions and feeds the
     /// experience sink.
     pub adaptive: Option<crate::scheduler::SessionScheduler>,
+    /// Shared span sink for scheduler-decision tracing (None or a
+    /// disabled sink = no recording; decisions are never branched on
+    /// it, so served bits are unaffected either way).
+    pub obs: Option<Arc<SpanSink>>,
 }
 
 /// Run a session: submit one segment request per control round, execute
@@ -121,11 +127,29 @@ pub fn run_session(
             let obs = env.observe();
             // Scheduler decision happens session-side (pure Rust) while
             // the request waits in the shard queue.
+            let t_decide = cfg.obs.as_ref().and_then(|s| s.start());
             let params: Option<SpecParams> = hook.as_mut().map(|h| {
                 let phase_frac = env.phase() as f32 / env.num_phases().max(1) as f32;
                 let feat = features(&obs, env.progress(), phase_frac, &feat_state);
                 h.decide(&feat)
             });
+            if params.is_some() {
+                if let Some(sink) = cfg.obs.as_ref() {
+                    sink.record(
+                        SpanKind::SchedulerDecision,
+                        t_decide,
+                        Attrs {
+                            session: cfg.session as u32,
+                            segment: report.segments as u32,
+                            policy_epoch: hook
+                                .as_ref()
+                                .map_or(crate::obs::span::NO_ATTR, |h| h.last_epoch() as u32),
+                            lane: session_lane(cfg.session),
+                            ..Attrs::NONE
+                        },
+                    );
+                }
+            }
             let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentResponse>(1);
             let submitted = Instant::now();
             tx.send(SegmentRequest {
@@ -196,8 +220,10 @@ pub fn run_session(
             // Keep the plan steps the loop above did NOT execute — the
             // shed fallback continues from exactly where serving left
             // off, never replaying actions the env already took.
-            last_plan =
-                Some(reply.actions[(EXEC_STEPS.min(HORIZON) * ACT_DIM).min(reply.actions.len())..].to_vec());
+            last_plan = Some(
+                reply.actions[(EXEC_STEPS.min(HORIZON) * ACT_DIM).min(reply.actions.len())..]
+                    .to_vec(),
+            );
             if let Some(p) = params {
                 feat_state.last_params = p;
             }

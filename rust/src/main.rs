@@ -63,6 +63,7 @@ COMMANDS:
                    [--adapted-policy-out FILE]
                    [--drafter FILE [--drafter-dtype f32|int8]]
                    [--qos [--degrade-pressure S] [--aging-limit N]]
+                   [--trace-out FILE] [--obs-interval MS [--obs-out FILE]]
   load-sweep       --task T [--method M] | --mix SPEC
                    [--rates 1,5,20] [--requests N]
                    [--drafter FILE [--drafter-dtype f32|int8]]
@@ -100,6 +101,16 @@ replica (target verification is untouched, so results stay lossless).
 (v2 format); `--drafter-dtype int8` serves any checkpoint quantized
 (a v1 checkpoint is quantized in-situ at load). TSDP_KERNELS=
 scalar|lanes selects the kernels backend (default: lanes).
+
+Observability: `serve --trace-out trace.json` records the segment
+lifecycle (queue wait, admission, draft wave, GEMV, verify, commit,
+finalize, scheduler, learner) as a Chrome trace-event file — open it
+in Perfetto or chrome://tracing — and folds per-stage p50/p95/p99
+wall-time attribution into the fleet summary. `--obs-interval MS`
+samples live gauges (queue depth per class, pressure, occupancy,
+KV-arena blocks, accept EWMA, sheds) into a JSONL flight record plus
+a Prometheus-style .prom exposition at shutdown (path: --obs-out,
+default flight.jsonl). Recording never changes served bits.
 
 Online adaptation: `serve --adapt online` keeps PPO-training the
 scheduler from live traffic (a background learner publishes

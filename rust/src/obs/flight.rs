@@ -1,0 +1,418 @@
+//! Flight recorder: periodic gauge snapshots of a live serving fleet.
+//!
+//! Each shard worker owns one [`FlightRecorder`] when `--obs-interval`
+//! is set; once per interval the shard loop snapshots its live gauges
+//! ([`FlightGauges`]) into an in-memory time series. At shutdown the
+//! coordinator merges every shard's samples into one JSONL file (one
+//! compact JSON object per line, timestamp-ordered) plus a
+//! Prometheus-style text exposition of the final sample per shard —
+//! the first time-resolved view of queue depth, pressure, occupancy,
+//! accept rate, and shedding, and the signal bus a future autoscaler
+//! (ROADMAP Open item 4) consumes.
+//!
+//! Like span tracing, sampling is read-only: gauges are copied, never
+//! branched on, so serving bits are identical with the recorder on or
+//! off.
+
+use crate::coordinator::qos::QosClass;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Number of QoS classes (one queue-depth gauge each).
+pub const N_CLASSES: usize = QosClass::ALL.len();
+
+/// EWMA smoothing factor for the accept-rate gauge.
+const ACCEPT_EWMA_ALPHA: f64 = 0.2;
+
+/// Live gauges a shard exposes to the sampler (copied, never mutated).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlightGauges {
+    /// Buffered requests across the shard's batcher queues.
+    pub queue_depth: usize,
+    /// Buffered requests per QoS class (`QosClass::ALL` order).
+    pub queue_by_class: [usize; N_CLASSES],
+    /// Jobs currently resident in the shard's job table.
+    pub inflight: usize,
+    /// Estimated seconds of backlog (QoS pressure gauge; 0 without QoS).
+    pub pressure_secs: f64,
+    /// Size of the most recent fused draft wave.
+    pub draft_wave_occ: usize,
+    /// Size of the most recent fused verify call.
+    pub verify_occ: usize,
+    /// KV-arena blocks in use (high water so far; 0 for backends
+    /// without an arena).
+    pub arena_blocks: usize,
+    /// Highest scheduler policy epoch seen on this shard.
+    pub policy_epoch: u64,
+    /// Requests served so far (cumulative counter).
+    pub served: u64,
+    /// Requests shed so far (cumulative counter; rates are first
+    /// differences between samples).
+    pub sheds: u64,
+}
+
+/// One timestamped gauge snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightSample {
+    /// Microseconds since the run's shared epoch.
+    pub t_us: u64,
+    /// Shard the snapshot came from.
+    pub shard: u32,
+    /// Accept-rate EWMA over served TS-DP segments (NaN-free; 0 until
+    /// the first observation).
+    pub accept_ewma: f64,
+    /// The gauges at snapshot time.
+    pub gauges: FlightGauges,
+}
+
+impl FlightSample {
+    /// JSON object form (one JSONL line).
+    pub fn to_json(&self) -> Json {
+        let g = &self.gauges;
+        Json::obj(vec![
+            ("t_us", Json::Num(self.t_us as f64)),
+            ("shard", Json::Num(self.shard as f64)),
+            ("queue_depth", Json::Num(g.queue_depth as f64)),
+            ("queue_by_class", Json::usizes(g.queue_by_class)),
+            ("inflight", Json::Num(g.inflight as f64)),
+            ("pressure_secs", Json::Num(g.pressure_secs)),
+            ("draft_wave_occ", Json::Num(g.draft_wave_occ as f64)),
+            ("verify_occ", Json::Num(g.verify_occ as f64)),
+            ("arena_blocks", Json::Num(g.arena_blocks as f64)),
+            ("accept_ewma", Json::Num(self.accept_ewma)),
+            ("policy_epoch", Json::Num(g.policy_epoch as f64)),
+            ("served", Json::Num(g.served as f64)),
+            ("sheds", Json::Num(g.sheds as f64)),
+        ])
+    }
+
+    /// Parse one JSONL line's object back into a sample.
+    pub fn from_json(j: &Json) -> Result<FlightSample> {
+        let classes = j.get("queue_by_class")?.as_usize_vec()?;
+        anyhow::ensure!(classes.len() == N_CLASSES, "expected {N_CLASSES} class depths");
+        let mut queue_by_class = [0usize; N_CLASSES];
+        queue_by_class.copy_from_slice(&classes);
+        Ok(FlightSample {
+            t_us: j.get("t_us")?.as_f64()? as u64,
+            shard: j.get("shard")?.as_usize()? as u32,
+            accept_ewma: j.get("accept_ewma")?.as_f64()?,
+            gauges: FlightGauges {
+                queue_depth: j.get("queue_depth")?.as_usize()?,
+                queue_by_class,
+                inflight: j.get("inflight")?.as_usize()?,
+                pressure_secs: j.get("pressure_secs")?.as_f64()?,
+                draft_wave_occ: j.get("draft_wave_occ")?.as_usize()?,
+                verify_occ: j.get("verify_occ")?.as_usize()?,
+                arena_blocks: j.get("arena_blocks")?.as_usize()?,
+                policy_epoch: j.get("policy_epoch")?.as_f64()? as u64,
+                served: j.get("served")?.as_f64()? as u64,
+                sheds: j.get("sheds")?.as_f64()? as u64,
+            },
+        })
+    }
+}
+
+/// Per-shard periodic sampler (see module docs).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    shard: u32,
+    interval: Duration,
+    last: Instant,
+    accept_ewma: f64,
+    seen_accept: bool,
+    samples: Vec<FlightSample>,
+}
+
+impl FlightRecorder {
+    /// Sampler for `shard`, timestamping against the run's `epoch`. The
+    /// first sample fires one `interval` after construction.
+    pub fn new(epoch: Instant, shard: usize, interval: Duration) -> Self {
+        Self {
+            epoch,
+            shard: shard as u32,
+            interval: interval.max(Duration::from_micros(100)),
+            last: Instant::now(),
+            accept_ewma: 0.0,
+            seen_accept: false,
+            samples: Vec::new(),
+        }
+    }
+
+    /// True when at least one interval elapsed since the last sample.
+    pub fn due(&self) -> bool {
+        self.last.elapsed() >= self.interval
+    }
+
+    /// Fold one served TS-DP segment into the accept-rate EWMA.
+    pub fn observe_accept(&mut self, drafts: usize, accepted: usize) {
+        if drafts == 0 {
+            return;
+        }
+        let rate = accepted as f64 / drafts as f64;
+        if self.seen_accept {
+            self.accept_ewma += ACCEPT_EWMA_ALPHA * (rate - self.accept_ewma);
+        } else {
+            self.accept_ewma = rate;
+            self.seen_accept = true;
+        }
+    }
+
+    /// Take one snapshot and reset the interval clock.
+    pub fn sample(&mut self, gauges: FlightGauges) {
+        let now = Instant::now();
+        let t_us = now.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.samples.push(FlightSample {
+            t_us,
+            shard: self.shard,
+            accept_ewma: self.accept_ewma,
+            gauges,
+        });
+        self.last = now;
+    }
+
+    /// Samples recorded so far.
+    pub fn samples(&self) -> &[FlightSample] {
+        &self.samples
+    }
+
+    /// Consume the recorder, yielding its samples.
+    pub fn into_samples(self) -> Vec<FlightSample> {
+        self.samples
+    }
+}
+
+/// Write samples as JSONL, timestamp-ordered (parent dirs created).
+pub fn write_jsonl(path: &Path, samples: &[FlightSample]) -> Result<()> {
+    let mut sorted: Vec<&FlightSample> = samples.iter().collect();
+    sorted.sort_by_key(|s| (s.t_us, s.shard));
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut out = String::new();
+    for s in sorted {
+        out.push_str(&format!("{}\n", s.to_json()));
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(out.as_bytes()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Parse a JSONL file written by [`write_jsonl`].
+pub fn read_jsonl(path: &Path) -> Result<Vec<FlightSample>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        out.push(FlightSample::from_json(&j).with_context(|| format!("line {}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Prometheus-style text exposition of the *final* sample per shard
+/// (the shutdown state of every gauge, plus cumulative counters).
+pub fn prometheus(samples: &[FlightSample]) -> String {
+    use std::collections::BTreeMap;
+    let mut last: BTreeMap<u32, &FlightSample> = BTreeMap::new();
+    for s in samples {
+        let e = last.entry(s.shard).or_insert(s);
+        if s.t_us >= e.t_us {
+            *e = s;
+        }
+    }
+    let mut out = String::new();
+    let mut gauge = |name: &str, help: &str, kind: &str, rows: &[(String, f64)]| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for (labels, v) in rows {
+            // Integer-valued gauges print without a trailing ".0".
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                out.push_str(&format!("{name}{{{labels}}} {}\n", *v as i64));
+            } else {
+                out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+            }
+        }
+    };
+    let per_shard = |f: &dyn Fn(&FlightSample) -> f64| -> Vec<(String, f64)> {
+        last.values().map(|s| (format!("shard=\"{}\"", s.shard), f(s))).collect()
+    };
+    gauge(
+        "tsdp_queue_depth",
+        "Buffered requests in the shard's batcher.",
+        "gauge",
+        &per_shard(&|s| s.gauges.queue_depth as f64),
+    );
+    let mut class_rows = Vec::new();
+    for s in last.values() {
+        for (i, class) in QosClass::ALL.iter().enumerate() {
+            class_rows.push((
+                format!("shard=\"{}\",class=\"{}\"", s.shard, class.name()),
+                s.gauges.queue_by_class[i] as f64,
+            ));
+        }
+    }
+    gauge(
+        "tsdp_queue_depth_class",
+        "Buffered requests per QoS class.",
+        "gauge",
+        &class_rows,
+    );
+    gauge(
+        "tsdp_inflight",
+        "Jobs resident in the shard's job table.",
+        "gauge",
+        &per_shard(&|s| s.gauges.inflight as f64),
+    );
+    gauge(
+        "tsdp_pressure_seconds",
+        "Estimated seconds of shard backlog (QoS pressure gauge).",
+        "gauge",
+        &per_shard(&|s| s.gauges.pressure_secs),
+    );
+    gauge(
+        "tsdp_draft_wave_occupancy",
+        "Size of the most recent fused draft wave.",
+        "gauge",
+        &per_shard(&|s| s.gauges.draft_wave_occ as f64),
+    );
+    gauge(
+        "tsdp_verify_occupancy",
+        "Size of the most recent fused verify call.",
+        "gauge",
+        &per_shard(&|s| s.gauges.verify_occ as f64),
+    );
+    gauge(
+        "tsdp_kv_arena_blocks",
+        "KV-arena blocks in use (high water).",
+        "gauge",
+        &per_shard(&|s| s.gauges.arena_blocks as f64),
+    );
+    gauge(
+        "tsdp_accept_rate_ewma",
+        "EWMA accept rate over served TS-DP segments.",
+        "gauge",
+        &per_shard(&|s| s.accept_ewma),
+    );
+    gauge(
+        "tsdp_policy_epoch",
+        "Highest scheduler policy epoch seen.",
+        "gauge",
+        &per_shard(&|s| s.gauges.policy_epoch as f64),
+    );
+    gauge(
+        "tsdp_requests_served_total",
+        "Requests served (cumulative).",
+        "counter",
+        &per_shard(&|s| s.gauges.served as f64),
+    );
+    gauge(
+        "tsdp_requests_shed_total",
+        "Requests shed (cumulative).",
+        "counter",
+        &per_shard(&|s| s.gauges.sheds as f64),
+    );
+    out
+}
+
+/// Write the Prometheus exposition to `path`.
+pub fn write_prometheus(path: &Path, samples: &[FlightSample]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, prometheus(samples))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_us: u64, shard: u32) -> FlightSample {
+        FlightSample {
+            t_us,
+            shard,
+            accept_ewma: 0.9375,
+            gauges: FlightGauges {
+                queue_depth: 4,
+                queue_by_class: [1, 2, 1],
+                inflight: 3,
+                pressure_secs: 0.125,
+                draft_wave_occ: 3,
+                verify_occ: 2,
+                arena_blocks: 5,
+                policy_epoch: 2,
+                served: 40,
+                sheds: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let dir = std::env::temp_dir().join(format!(
+            "tsdp_obs_flight_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join("flight.jsonl");
+        let samples = vec![sample(2_000, 1), sample(1_000, 0), sample(3_000, 0)];
+        write_jsonl(&path, &samples).expect("write");
+        let back = read_jsonl(&path).expect("parse back");
+        assert_eq!(back.len(), 3);
+        // Timestamp-ordered on disk.
+        let ts: Vec<u64> = back.iter().map(|s| s.t_us).collect();
+        assert_eq!(ts, vec![1_000, 2_000, 3_000]);
+        assert_eq!(back[0].shard, 0);
+        assert_eq!(back[0].gauges.queue_by_class, [1, 2, 1]);
+        assert!((back[0].accept_ewma - 0.9375).abs() < 1e-12);
+        assert_eq!(back[0].gauges.served, 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recorder_samples_and_ewma() {
+        let epoch = Instant::now();
+        let mut rec = FlightRecorder::new(epoch, 2, Duration::from_micros(100));
+        assert!(!rec.due(), "first interval has not elapsed yet");
+        rec.observe_accept(8, 8);
+        rec.observe_accept(8, 4); // EWMA moves toward 0.5
+        rec.observe_accept(0, 0); // no drafts: ignored
+        let ewma = 1.0 + ACCEPT_EWMA_ALPHA * (0.5 - 1.0);
+        rec.sample(FlightGauges { queue_depth: 1, ..FlightGauges::default() });
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(rec.due());
+        rec.sample(FlightGauges::default());
+        let samples = rec.into_samples();
+        assert_eq!(samples.len(), 2);
+        assert!(samples[1].t_us >= samples[0].t_us);
+        assert_eq!(samples[0].shard, 2);
+        assert_eq!(samples[0].gauges.queue_depth, 1);
+        assert!((samples[0].accept_ewma - ewma).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_exposes_last_sample_per_shard() {
+        let mut s_late = sample(5_000, 0);
+        s_late.gauges.queue_depth = 9;
+        let text = prometheus(&[sample(1_000, 0), s_late, sample(2_000, 1)]);
+        assert!(text.contains("# TYPE tsdp_queue_depth gauge"));
+        assert!(text.contains("tsdp_queue_depth{shard=\"0\"} 9"), "last sample wins:\n{text}");
+        assert!(text.contains("tsdp_queue_depth{shard=\"1\"} 4"));
+        assert!(text.contains("tsdp_queue_depth_class{shard=\"0\",class=\"rt\"} 1"));
+        assert!(text.contains("tsdp_requests_served_total{shard=\"0\"} 40"));
+        assert!(text.contains("tsdp_accept_rate_ewma{shard=\"0\"} 0.9375"));
+    }
+}

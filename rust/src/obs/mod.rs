@@ -1,0 +1,138 @@
+//! Observability for the serving fleet: span tracing + flight recorder.
+//!
+//! Dependency-free (std + the crate's own hand-rolled JSON), two layers:
+//!
+//! * **Span tracing** ([`span`], [`trace`]) — per-shard ring-buffered
+//!   recorders capture the full segment lifecycle (queue wait,
+//!   admission, draft wave, batched GEMV, fused verify, commit,
+//!   finalize, scheduler decision, learner epoch) as nested spans with
+//!   shard/session/segment/round/policy-epoch attributes, exported at
+//!   run end as Chrome trace-event JSON (`serve --trace-out trace.json`,
+//!   loadable in Perfetto or `chrome://tracing`). Per-stage wall-time
+//!   attribution (p50/p95/p99 via [`crate::util::stats::Reservoir`])
+//!   merges fleet-wide into `ServerMetrics::summary()` and the bench
+//!   JSON.
+//! * **Flight recorder** ([`flight`]) — a periodic sampler
+//!   (`--obs-interval MS`, off by default) snapshots live gauges
+//!   (per-class queue depth, pressure, wave occupancy, KV-arena blocks,
+//!   accept-rate EWMA, policy epoch, shed counters) into a JSONL time
+//!   series plus a Prometheus-style text exposition at shutdown.
+//!
+//! **Contract: observability never changes serving behavior.** Clocks
+//! are read, never branched on; with everything off (the default) the
+//! hot path performs no extra clock reads and no allocations, and the
+//! golden serve trace is bit-identical whether tracing is on, off, or
+//! absent (pinned by `tests/obs_trace.rs`; recorder overhead is gated
+//! by the `serve_obs` bench section).
+
+pub mod flight;
+pub mod span;
+pub mod trace;
+
+pub use flight::{FlightGauges, FlightRecorder, FlightSample};
+pub use span::{Attrs, SpanEvent, SpanKind, SpanRecorder, SpanSink, StageDist};
+pub use trace::{describe_workload, Provenance};
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Observability configuration for one serving run. Everything is off
+/// by default; `ServeOptions` embeds this with `Default`, so existing
+/// construction sites are untouched.
+#[derive(Debug, Clone, Default)]
+pub struct ObsConfig {
+    /// Write a Chrome trace-event JSON file here at run end (None =
+    /// span tracing disabled: zero-overhead no-op recorders).
+    pub trace_out: Option<PathBuf>,
+    /// Flight-recorder sampling interval (None = flight recorder off).
+    pub obs_interval: Option<Duration>,
+    /// Flight-recorder JSONL output path (defaults to `flight.jsonl`;
+    /// the Prometheus exposition lands next to it with a `.prom`
+    /// extension).
+    pub obs_out: Option<PathBuf>,
+    /// Span-ring capacity override per recorder (0 = default).
+    pub ring_cap: usize,
+}
+
+impl ObsConfig {
+    /// True when span tracing is active.
+    pub fn tracing(&self) -> bool {
+        self.trace_out.is_some()
+    }
+
+    /// True when the flight recorder is active.
+    pub fn flight(&self) -> bool {
+        self.obs_interval.is_some()
+    }
+
+    /// True when any observability output is requested.
+    pub fn any(&self) -> bool {
+        self.tracing() || self.flight()
+    }
+
+    /// Effective per-recorder ring capacity.
+    pub fn effective_ring_cap(&self) -> usize {
+        if self.ring_cap == 0 {
+            span::DEFAULT_RING_CAP
+        } else {
+            self.ring_cap
+        }
+    }
+
+    /// Flight-recorder JSONL path (the configured one or the default).
+    pub fn flight_path(&self) -> PathBuf {
+        self.obs_out.clone().unwrap_or_else(|| PathBuf::from("flight.jsonl"))
+    }
+
+    /// Prometheus exposition path derived from the JSONL path.
+    pub fn prom_path(&self) -> PathBuf {
+        self.flight_path().with_extension("prom")
+    }
+}
+
+/// What the observability layer produced during one serving run
+/// (attached to `ServeReport` when any output was requested).
+#[derive(Debug, Clone, Default)]
+pub struct ObsReport {
+    /// Span events exported to the trace file.
+    pub spans: usize,
+    /// Span events overwritten by ring overflow (fleet total).
+    pub spans_dropped: u64,
+    /// Flight samples written.
+    pub flight_samples: usize,
+    /// Where the Chrome trace landed, if tracing was on.
+    pub trace_path: Option<PathBuf>,
+    /// Where the flight JSONL landed, if the recorder was on.
+    pub flight_path: Option<PathBuf>,
+    /// Where the Prometheus exposition landed, if the recorder was on.
+    pub prom_path: Option<PathBuf>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_fully_off() {
+        let cfg = ObsConfig::default();
+        assert!(!cfg.tracing());
+        assert!(!cfg.flight());
+        assert!(!cfg.any());
+        assert_eq!(cfg.effective_ring_cap(), span::DEFAULT_RING_CAP);
+    }
+
+    #[test]
+    fn paths_derive_from_obs_out() {
+        let cfg = ObsConfig {
+            obs_interval: Some(Duration::from_millis(5)),
+            obs_out: Some(PathBuf::from("/tmp/run1/fleet.jsonl")),
+            ..ObsConfig::default()
+        };
+        assert!(cfg.flight() && cfg.any() && !cfg.tracing());
+        assert_eq!(cfg.flight_path(), PathBuf::from("/tmp/run1/fleet.jsonl"));
+        assert_eq!(cfg.prom_path(), PathBuf::from("/tmp/run1/fleet.prom"));
+        let bare = ObsConfig { obs_interval: Some(Duration::from_millis(5)), ..Default::default() };
+        assert_eq!(bare.flight_path(), PathBuf::from("flight.jsonl"));
+        assert_eq!(bare.prom_path(), PathBuf::from("flight.prom"));
+    }
+}

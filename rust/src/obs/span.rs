@@ -1,0 +1,485 @@
+//! Ring-buffered span recorder for the serving fleet.
+//!
+//! Each shard worker owns one [`SpanRecorder`]; session drivers and the
+//! background learner share one [`SpanSink`] (a mutex-wrapped recorder —
+//! their event rates are per-segment and per-epoch, so contention is
+//! negligible). Recording is bounded: a fixed-capacity ring overwrites
+//! the oldest event under overflow (counted in `dropped`), while the
+//! per-stage wall-time attribution ([`StageDist`]) keeps folding every
+//! observation in regardless, so attribution stays exact over the whole
+//! run even when the ring wraps.
+//!
+//! The recorder is behaviorally inert by contract: timestamps are read
+//! from a shared monotonic epoch ([`std::time::Instant`]) and *never*
+//! branched on by serving logic, and when disabled every method is an
+//! early-return that touches no clock and allocates nothing — the golden
+//! trace is bit-identical with tracing on, off, or absent.
+
+use crate::util::stats::{OnlineStats, Reservoir};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity per recorder (fixed memory bound; one event is
+/// a few dozen bytes, so the default is ~2 MB per shard at worst).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+/// Reservoir capacity backing each stage's percentile estimate.
+const STAGE_RESERVOIR_CAP: usize = 4096;
+
+/// Attribute value meaning "not applicable" on a [`SpanEvent`].
+pub const NO_ATTR: u32 = u32::MAX;
+
+/// Lane (exported as the Chrome-trace `tid`) of shard worker `shard`.
+pub fn shard_lane(shard: usize) -> u32 {
+    shard as u32
+}
+
+/// Lane carrying shard `shard`'s queue-wait intervals. Queue waits of
+/// concurrently buffered requests overlap, so they live on their own
+/// lane and export as complete (`ph:"X"`) events rather than B/E pairs.
+pub fn queue_lane(shard: usize) -> u32 {
+    1_000 + shard as u32
+}
+
+/// Lane of session driver `session`.
+pub fn session_lane(session: usize) -> u32 {
+    2_000 + session as u32
+}
+
+/// Lane of the background PPO learner thread.
+pub const LEARNER_LANE: u32 = 60_000;
+
+/// Human-readable lane name for trace thread metadata.
+pub fn lane_name(lane: u32) -> String {
+    match lane {
+        LEARNER_LANE => "learner".to_string(),
+        l if l < 1_000 => format!("shard {l}"),
+        l if l < 2_000 => format!("shard {} queue", l - 1_000),
+        l => format!("session {}", l - 2_000),
+    }
+}
+
+/// Instrumented stages of the segment lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Request submission → shard admission (time spent queued).
+    QueueWait,
+    /// Admission work on the shard: deadline checks, observation
+    /// encode, job start (or the whole blocking baseline generation).
+    Admission,
+    /// One draft-wave phase: per-job noise draws, the fused rollout,
+    /// and result distribution (encloses [`SpanKind::Gemv`]).
+    DraftWave,
+    /// The fused `drafter_rollout_many` call itself — the batched GEMV
+    /// advancing every in-flight draft one denoising step per wave.
+    Gemv,
+    /// The fused multi-request `target_verify_many` call plus the
+    /// per-job accept scans it feeds.
+    VerifyCall,
+    /// The accept/commit scan distributing verify output to jobs.
+    Commit,
+    /// ODE finalization + reply of a job whose plan fully committed.
+    Finalize,
+    /// Scheduler policy inference on the session thread.
+    SchedulerDecision,
+    /// One PPO epoch on the background learner thread.
+    LearnerEpoch,
+}
+
+impl SpanKind {
+    /// Every kind, export order.
+    pub const ALL: [SpanKind; 9] = [
+        SpanKind::QueueWait,
+        SpanKind::Admission,
+        SpanKind::DraftWave,
+        SpanKind::Gemv,
+        SpanKind::VerifyCall,
+        SpanKind::Commit,
+        SpanKind::Finalize,
+        SpanKind::SchedulerDecision,
+        SpanKind::LearnerEpoch,
+    ];
+
+    /// Stable snake_case name (trace events, attribution tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Admission => "admission",
+            SpanKind::DraftWave => "draft_wave",
+            SpanKind::Gemv => "gemv",
+            SpanKind::VerifyCall => "verify",
+            SpanKind::Commit => "commit",
+            SpanKind::Finalize => "finalize",
+            SpanKind::SchedulerDecision => "scheduler",
+            SpanKind::LearnerEpoch => "learner_epoch",
+        }
+    }
+
+    /// True when concurrent instances of this kind may overlap in time
+    /// on one lane (exported as `ph:"X"` instead of nested B/E pairs).
+    pub fn overlaps(self) -> bool {
+        matches!(self, SpanKind::QueueWait)
+    }
+}
+
+/// Optional attributes attached to a span (``NO_ATTR`` = absent).
+#[derive(Debug, Clone, Copy)]
+pub struct Attrs {
+    /// Session id.
+    pub session: u32,
+    /// Segment index within the session.
+    pub segment: u32,
+    /// Speculative round index (or learner epoch for `LearnerEpoch`).
+    pub round: u32,
+    /// Scheduler policy epoch the work ran under.
+    pub policy_epoch: u32,
+    /// Fused-call occupancy (wave size / verify batch size).
+    pub count: u32,
+    /// Lane override; ``NO_ATTR`` records on the recorder's own lane.
+    pub lane: u32,
+}
+
+impl Attrs {
+    /// All attributes absent.
+    pub const NONE: Attrs = Attrs {
+        session: NO_ATTR,
+        segment: NO_ATTR,
+        round: NO_ATTR,
+        policy_epoch: NO_ATTR,
+        count: NO_ATTR,
+        lane: NO_ATTR,
+    };
+}
+
+impl Default for Attrs {
+    fn default() -> Self {
+        Attrs::NONE
+    }
+}
+
+/// One recorded span: fixed-size, `Copy`, no heap.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// Which stage this span measured.
+    pub kind: SpanKind,
+    /// Start, microseconds since the run's shared epoch.
+    pub start_us: u64,
+    /// End, microseconds since the run's shared epoch (≥ `start_us`).
+    pub end_us: u64,
+    /// Lane (Chrome-trace `tid`) the span belongs to.
+    pub lane: u32,
+    /// Attributes ([`NO_ATTR`] = absent).
+    pub attrs: Attrs,
+}
+
+/// Wall-time distribution of one instrumented stage: streaming moments
+/// plus a bounded reservoir for percentiles. Units are seconds.
+#[derive(Debug, Clone)]
+pub struct StageDist {
+    /// Streaming count / mean / min / max.
+    pub stats: OnlineStats,
+    /// Bounded percentile sample.
+    pub reservoir: Reservoir,
+}
+
+impl StageDist {
+    /// Empty distribution.
+    pub fn new() -> Self {
+        Self { stats: OnlineStats::new(), reservoir: Reservoir::new(STAGE_RESERVOIR_CAP) }
+    }
+
+    /// Fold in one stage duration (seconds).
+    pub fn push(&mut self, secs: f64) {
+        self.stats.push(secs);
+        self.reservoir.push(secs);
+    }
+
+    /// Merge another distribution (fleet aggregation).
+    pub fn merge(&mut self, other: &StageDist) {
+        self.stats.merge(&other.stats);
+        self.reservoir.merge(&other.reservoir);
+    }
+}
+
+impl Default for StageDist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bounded per-thread span recorder (see module docs).
+#[derive(Debug)]
+pub struct SpanRecorder {
+    enabled: bool,
+    epoch: Instant,
+    lane: u32,
+    cap: usize,
+    /// Ring storage; grows to `cap` then wraps at `next`.
+    ring: Vec<SpanEvent>,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+    /// Per-kind attribution, indexed by position in [`SpanKind::ALL`].
+    stages: Vec<StageDist>,
+}
+
+impl SpanRecorder {
+    /// Recorder on `lane`, timestamping relative to `epoch`. When
+    /// `enabled` is false nothing is ever allocated or recorded.
+    pub fn new(epoch: Instant, lane: u32, cap: usize, enabled: bool) -> Self {
+        let cap = cap.max(1);
+        let stages = if enabled {
+            SpanKind::ALL.iter().map(|_| StageDist::new()).collect()
+        } else {
+            Vec::new()
+        };
+        Self { enabled, epoch, lane, cap, ring: Vec::new(), next: 0, dropped: 0, stages }
+    }
+
+    /// A permanently disabled recorder (every call is a no-op).
+    pub fn disabled() -> Self {
+        Self::new(Instant::now(), 0, 1, false)
+    }
+
+    /// Whether recording is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Start a span: reads the clock only when enabled. Call sites pair
+    /// this with [`SpanRecorder::record`]; a `None` start is ignored
+    /// there, so the disabled hot path performs no clock reads.
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`SpanRecorder::start`] at "now".
+    pub fn record(&mut self, kind: SpanKind, start: Option<Instant>, attrs: Attrs) {
+        let Some(start) = start else { return };
+        if !self.enabled {
+            return;
+        }
+        self.record_between(kind, start, Instant::now(), attrs);
+    }
+
+    /// Record a span with explicit endpoints (e.g. queue wait measured
+    /// from the request's submission instant to its admission).
+    pub fn record_between(&mut self, kind: SpanKind, start: Instant, end: Instant, attrs: Attrs) {
+        if !self.enabled {
+            return;
+        }
+        let start_us = self.micros(start);
+        let end_us = self.micros(end).max(start_us);
+        self.stages[kind_index(kind)].push((end_us - start_us) as f64 * 1e-6);
+        let lane = if attrs.lane == NO_ATTR { self.lane } else { attrs.lane };
+        let ev = SpanEvent { kind, start_us, end_us, lane, attrs };
+        if self.ring.len() < self.cap {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Microseconds since the shared epoch (saturating).
+    fn micros(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Retained events in record order (oldest first).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        out.extend_from_slice(&self.ring[self.next..]);
+        out.extend_from_slice(&self.ring[..self.next]);
+        out
+    }
+
+    /// Number of retained events (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Per-stage attribution observed by this recorder (kinds with at
+    /// least one sample).
+    pub fn stage_dists(&self) -> Vec<(SpanKind, &StageDist)> {
+        SpanKind::ALL
+            .iter()
+            .zip(self.stages.iter())
+            .filter(|(_, d)| d.stats.count() > 0)
+            .map(|(&k, d)| (k, d))
+            .collect()
+    }
+}
+
+fn kind_index(kind: SpanKind) -> usize {
+    SpanKind::ALL.iter().position(|&k| k == kind).expect("kind listed in ALL")
+}
+
+/// Shared recorder for low-rate producers (session drivers, learner).
+///
+/// The mutex is taken once per recorded span — session drivers record
+/// one scheduler decision per segment and the learner one span per
+/// epoch, so the lock is uncontended in practice. `enabled` is checked
+/// without locking.
+#[derive(Debug)]
+pub struct SpanSink {
+    enabled: bool,
+    inner: Mutex<SpanRecorder>,
+}
+
+impl SpanSink {
+    /// Shared sink timestamping against `epoch`.
+    pub fn new(epoch: Instant, cap: usize, enabled: bool) -> Self {
+        Self { enabled, inner: Mutex::new(SpanRecorder::new(epoch, LEARNER_LANE, cap, enabled)) }
+    }
+
+    /// Whether recording is active (lock-free).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Start a span (`None` when disabled — no clock read, no lock).
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`SpanSink::start`]. `attrs.lane` should
+    /// be set ([`session_lane`] / [`LEARNER_LANE`]) so concurrent
+    /// producers land on their own trace rows.
+    pub fn record(&self, kind: SpanKind, start: Option<Instant>, attrs: Attrs) {
+        let Some(start) = start else { return };
+        if !self.enabled {
+            return;
+        }
+        let end = Instant::now();
+        let mut rec = self.inner.lock().expect("span sink poisoned");
+        rec.record_between(kind, start, end, attrs);
+    }
+
+    /// Drain the sink: events, overwritten-count, and attribution.
+    pub fn drain(&self) -> (Vec<SpanEvent>, u64, Vec<(SpanKind, StageDist)>) {
+        let rec = self.inner.lock().expect("span sink poisoned");
+        let dists = rec.stage_dists().into_iter().map(|(k, d)| (k, d.clone())).collect();
+        (rec.events(), rec.dropped(), dists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut rec = SpanRecorder::disabled();
+        assert!(!rec.enabled());
+        assert!(rec.start().is_none());
+        rec.record(SpanKind::Admission, rec.start(), Attrs::NONE);
+        let epoch = Instant::now();
+        rec.record_between(SpanKind::Admission, epoch, epoch, Attrs::NONE);
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+        assert!(rec.stage_dists().is_empty());
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_counts_drops() {
+        let epoch = Instant::now();
+        let mut rec = SpanRecorder::new(epoch, 7, 8, true);
+        for i in 0..20u64 {
+            let t = epoch + Duration::from_micros(10 * i);
+            rec.record_between(SpanKind::Gemv, t, t + Duration::from_micros(5), Attrs::NONE);
+        }
+        assert_eq!(rec.len(), 8, "ring never exceeds capacity");
+        assert_eq!(rec.dropped(), 12);
+        // Oldest-first linearization: the 8 newest events survive.
+        let evs = rec.events();
+        assert_eq!(evs.len(), 8);
+        let starts: Vec<u64> = evs.iter().map(|e| e.start_us).collect();
+        let expect: Vec<u64> = (12..20).map(|i| 10 * i).collect();
+        assert_eq!(starts, expect);
+        // Attribution saw every observation, not just the retained ring.
+        let dists = rec.stage_dists();
+        assert_eq!(dists.len(), 1);
+        assert_eq!(dists[0].0, SpanKind::Gemv);
+        assert_eq!(dists[0].1.stats.count(), 20);
+        assert!((dists[0].1.stats.mean() - 5e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn explicit_interval_and_attrs_round_trip() {
+        let epoch = Instant::now();
+        let mut rec = SpanRecorder::new(epoch, 3, 16, true);
+        let s = epoch + Duration::from_micros(100);
+        let e = epoch + Duration::from_micros(350);
+        rec.record_between(
+            SpanKind::QueueWait,
+            s,
+            e,
+            Attrs { session: 4, segment: 2, lane: queue_lane(3), ..Attrs::NONE },
+        );
+        let ev = rec.events()[0];
+        assert_eq!(ev.kind, SpanKind::QueueWait);
+        assert_eq!(ev.start_us, 100);
+        assert_eq!(ev.end_us, 350);
+        assert_eq!(ev.lane, queue_lane(3));
+        assert_eq!(ev.attrs.session, 4);
+        assert_eq!(ev.attrs.segment, 2);
+        assert_eq!(ev.attrs.round, NO_ATTR);
+        // End before start saturates to a zero-length span, never panics.
+        rec.record_between(SpanKind::Admission, e, s, Attrs::NONE);
+        let ev = rec.events()[1];
+        assert_eq!(ev.start_us, ev.end_us);
+    }
+
+    #[test]
+    fn sink_is_shared_and_drains() {
+        let sink = SpanSink::new(Instant::now(), 16, true);
+        let t = sink.start();
+        assert!(t.is_some());
+        sink.record(
+            SpanKind::SchedulerDecision,
+            t,
+            Attrs { session: 1, lane: session_lane(1), ..Attrs::NONE },
+        );
+        sink.record(SpanKind::LearnerEpoch, sink.start(), Attrs { round: 7, ..Attrs::NONE });
+        let (evs, dropped, dists) = sink.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(dropped, 0);
+        assert_eq!(dists.len(), 2);
+        assert_eq!(evs[0].lane, session_lane(1));
+        assert_eq!(evs[1].lane, LEARNER_LANE);
+        let disabled = SpanSink::new(Instant::now(), 16, false);
+        assert!(disabled.start().is_none());
+        disabled.record(SpanKind::LearnerEpoch, disabled.start(), Attrs::NONE);
+        assert!(disabled.drain().0.is_empty());
+    }
+
+    #[test]
+    fn lane_names_cover_ranges() {
+        assert_eq!(lane_name(shard_lane(2)), "shard 2");
+        assert_eq!(lane_name(queue_lane(0)), "shard 0 queue");
+        assert_eq!(lane_name(session_lane(5)), "session 5");
+        assert_eq!(lane_name(LEARNER_LANE), "learner");
+    }
+}

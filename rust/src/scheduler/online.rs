@@ -22,6 +22,7 @@
 //! simply trains on a subsample of the stream.
 
 use crate::config::AdaptMode;
+use crate::obs::span::{Attrs, SpanKind, SpanSink, NO_ATTR};
 use crate::scheduler::policy::SchedulerPolicy;
 use crate::scheduler::ppo::{update, PpoConfig, Transition, UpdateStats};
 use crate::util::Rng;
@@ -330,6 +331,7 @@ pub fn run_learner(
     receivers: Vec<Receiver<ExperienceBatch>>,
     cfg: LearnerConfig,
     dropped: Arc<AtomicU64>,
+    spans: Option<Arc<SpanSink>>,
 ) -> Result<LearnerReport> {
     let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x1ea2_ae0d_5c3e_d01e);
     let mut open = vec![true; receivers.len()];
@@ -364,7 +366,9 @@ pub fn run_learner(
             }
         }
         if pending.transitions.len() >= min_batch {
+            let t_epoch = spans.as_ref().and_then(|s| s.start());
             train_epoch(&store, &cfg, &mut rng, &mut pending, &mut report)?;
+            record_epoch_span(spans.as_deref(), t_epoch, &report);
         }
         if open.iter().all(|o| !o) {
             break;
@@ -377,7 +381,9 @@ pub fn run_learner(
     // Final partial epoch: don't waste the tail of a short run, but skip
     // fragments too small for a meaningful gradient.
     if pending.transitions.len() >= (min_batch / 2).max(8) {
+        let t_epoch = spans.as_ref().and_then(|s| s.start());
         train_epoch(&store, &cfg, &mut rng, &mut pending, &mut report)?;
+        record_epoch_span(spans.as_deref(), t_epoch, &report);
     }
     if let Some(path) = &cfg.checkpoint {
         store
@@ -392,6 +398,19 @@ pub fn run_learner(
     report.dropped_batches = dropped.load(Ordering::Relaxed);
     report.adapted = Some(store.snapshot().policy.clone());
     Ok(report)
+}
+
+/// Record one `LearnerEpoch` span (a no-op when tracing is off). The
+/// just-published epoch index rides in the span's `round` attribute.
+fn record_epoch_span(
+    spans: Option<&SpanSink>,
+    start: Option<std::time::Instant>,
+    report: &LearnerReport,
+) {
+    if let Some(sink) = spans {
+        let round = report.epochs.last().map_or(NO_ATTR, |e| e.epoch as u32);
+        sink.record(SpanKind::LearnerEpoch, start, Attrs { round, ..Attrs::NONE });
+    }
 }
 
 /// Everything one adaptive session needs: the shared store, the mode,
@@ -513,7 +532,7 @@ mod tests {
         };
         let learner = {
             let store = store.clone();
-            std::thread::spawn(move || run_learner(store, receivers, cfg, dropped))
+            std::thread::spawn(move || run_learner(store, receivers, cfg, dropped, None))
         };
 
         // Two "shards" of sessions feeding the hub; each batch samples
@@ -586,7 +605,7 @@ mod tests {
         sink.offer(batch, 8, 4);
         drop(hub);
         drop(sink);
-        let report = run_learner(store.clone(), receivers, cfg, dropped).unwrap();
+        let report = run_learner(store.clone(), receivers, cfg, dropped, None).unwrap();
         assert!(report.checkpoints_written >= 2, "periodic + final");
         // The checkpoint round-trips into the published snapshot.
         let loaded = SchedulerPolicy::load(&path).unwrap();

@@ -86,12 +86,21 @@ impl BenchRecord {
 pub struct BenchSink {
     bench: String,
     records: Vec<BenchRecord>,
+    /// Optional provenance metadata (crate version, kernel path, …),
+    /// emitted under a top-level `meta` key. The regression checker
+    /// reads only `schema`/`bench`/`records`, so `meta` is free-form.
+    meta: Option<Json>,
 }
 
 impl BenchSink {
     /// Empty sink for the named bench (`speculative`, `qos`, …).
     pub fn new(bench: &str) -> Self {
-        Self { bench: bench.to_string(), records: Vec::new() }
+        Self { bench: bench.to_string(), records: Vec::new(), meta: None }
+    }
+
+    /// Attach provenance metadata to the document.
+    pub fn set_meta(&mut self, meta: Json) {
+        self.meta = Some(meta);
     }
 
     /// Append one record.
@@ -111,11 +120,15 @@ impl BenchSink {
 
     /// The bench document.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str("ts-dp-bench-v1".into())),
             ("bench", Json::Str(self.bench.clone())),
             ("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect())),
-        ])
+        ];
+        if let Some(meta) = &self.meta {
+            fields.push(("meta", meta.clone()));
+        }
+        Json::obj(fields)
     }
 
     /// Write the document to `dir/BENCH_<bench>.json` and return the
@@ -180,6 +193,20 @@ mod tests {
         assert_eq!(
             r0.get("params").unwrap().get("max_batch").unwrap().as_str().unwrap(),
             "8"
+        );
+        // No meta attached — the key must be absent (legacy shape).
+        assert!(doc.get_opt("meta").is_none());
+    }
+
+    #[test]
+    fn meta_rides_in_the_document_when_attached() {
+        let mut sink = BenchSink::new("unit");
+        sink.push(record("serve[max_batch=8]", 0.02));
+        sink.set_meta(Json::obj(vec![("kernel_path", Json::Str("lanes".into()))]));
+        let doc = sink.to_json();
+        assert_eq!(
+            doc.get("meta").unwrap().get("kernel_path").unwrap().as_str().unwrap(),
+            "lanes"
         );
     }
 }

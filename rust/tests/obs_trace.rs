@@ -1,0 +1,120 @@
+//! Observability non-interference contract: recording is strictly
+//! read-only with respect to serving.
+//!
+//! The golden workload from `tests/golden_trace.rs` is served three
+//! times — observability off, fully on (span tracing + flight
+//! recorder), and on with a deliberately tiny span ring — and the
+//! session fingerprints (per-segment action digests + NFE) must be
+//! bit-identical across all three. Clocks are read, never branched on,
+//! so a traced run serves the exact same bits as an untraced one; a
+//! wrapped ring drops history, never accuracy.
+//!
+//! The exported artifacts are validated structurally on the way out:
+//! the Chrome trace passes `obs::trace::validate` (balanced/nested
+//! B/E, monotone per-lane timestamps), the flight JSONL parses back
+//! into the same number of samples the report counted, and the
+//! Prometheus exposition names the expected metric families.
+
+use std::time::Duration;
+use ts_dp::config::{AdaptMode, DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::obs::ObsConfig;
+use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::util::json::Json;
+use ts_dp::util::testing::TempDir;
+
+const GOLDEN_SEED: u64 = 24601;
+
+fn golden_workload() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(SessionSpec::new(Task::Lift, Method::TsDp), 2)
+        .session(SessionSpec::new(Task::PushT, Method::TsDp).with_style(DemoStyle::Mh))
+        .session(SessionSpec::new(Task::PushT, Method::Vanilla))
+        .session(SessionSpec::new(Task::Kitchen, Method::TsDp))
+        .build()
+}
+
+fn run_golden(obs: ObsConfig) -> ServeReport {
+    let opts = ServeOptions {
+        workload: golden_workload(),
+        shards: 1,
+        queue_capacity: 64,
+        policy: Policy::Fifo,
+        seed: GOLDEN_SEED,
+        max_batch: 1,
+        batch_window: Duration::from_micros(200),
+        adapt: AdaptMode::Frozen,
+        obs,
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).expect("golden serve run failed")
+}
+
+#[test]
+fn tracing_never_changes_served_bits() {
+    let dir = TempDir::new("obs_trace");
+    let trace_path = dir.path().join("trace.json");
+    let flight_path = dir.path().join("flight.jsonl");
+
+    let off = run_golden(ObsConfig::default());
+    let on = run_golden(ObsConfig {
+        trace_out: Some(trace_path.clone()),
+        obs_interval: Some(Duration::from_millis(1)),
+        obs_out: Some(flight_path.clone()),
+        ring_cap: 0,
+    });
+    // A wrapped ring must drop history, never change behavior.
+    let tiny = run_golden(ObsConfig {
+        trace_out: Some(dir.path().join("trace_tiny.json")),
+        obs_interval: None,
+        obs_out: None,
+        ring_cap: 32,
+    });
+
+    // The contract: observability is invisible to the served actions.
+    let golden = off.session_fingerprints();
+    assert!(!golden.is_empty());
+    assert_eq!(
+        on.session_fingerprints(),
+        golden,
+        "tracing + flight recording changed served actions"
+    );
+    assert_eq!(tiny.session_fingerprints(), golden, "a wrapped span ring changed served actions");
+    // NFE accounting is part of the fingerprint, but assert the fleet
+    // aggregate explicitly too — the metrics path must also be clean.
+    assert_eq!(on.metrics.requests, off.metrics.requests);
+    assert_eq!(on.metrics.total_nfe.to_bits(), off.metrics.total_nfe.to_bits());
+
+    // Untraced runs keep the legacy report/summary shape.
+    assert!(off.obs.is_none(), "obs report must be absent when recording is off");
+    assert!(off.metrics.stage_times.is_empty());
+    assert!(!off.metrics.summary().contains("stages=["));
+
+    // Traced runs export structurally valid artifacts.
+    let obs = on.obs.as_ref().expect("traced run reports obs");
+    assert!(obs.spans > 0, "golden workload must record spans");
+    let doc = Json::load(&trace_path).expect("trace file parses");
+    let stats = ts_dp::obs::trace::validate(&doc).expect("exported trace validates");
+    assert!(stats.spans > 0);
+    assert!(stats.lanes >= 2, "shard + queue lanes at minimum, got {}", stats.lanes);
+    assert!(on.metrics.summary().contains("stages=["));
+
+    let samples = ts_dp::obs::flight::read_jsonl(&flight_path).expect("flight JSONL parses back");
+    assert_eq!(samples.len(), obs.flight_samples);
+    assert!(!samples.is_empty(), "1ms interval must fire during the run");
+    let prom = std::fs::read_to_string(flight_path.with_extension("prom"))
+        .expect("prometheus exposition exists");
+    assert!(prom.contains("tsdp_queue_depth"));
+    assert!(prom.contains("tsdp_requests_served_total"));
+
+    // The tiny ring really wrapped (the bounding is exercised, not
+    // vacuous) and still exported a valid trace.
+    let tiny_obs = tiny.obs.as_ref().expect("tiny-ring run reports obs");
+    assert!(tiny_obs.spans_dropped > 0, "32-slot ring must wrap on the golden workload");
+    // Ring + sink each hold at most ring_cap events.
+    assert!(tiny_obs.spans <= 64, "retained spans bounded by ring + sink caps");
+    let tiny_doc = Json::load(&dir.path().join("trace_tiny.json")).expect("tiny trace parses");
+    ts_dp::obs::trace::validate(&tiny_doc).expect("wrapped ring still exports a valid trace");
+}

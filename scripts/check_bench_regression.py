@@ -19,6 +19,11 @@ records from the SAME run, so they are immune to runner speed and gate
 relative wins (e.g. batched >= 2x serial drafter rollouts, SIMD lanes
 >= 2x forced-scalar kernels) rather than absolute wall-clock.
 
+A "p95_ratio_max" list of {"num": key, "den": key, "max": x} entries is
+the overhead-bound mirror of p95_ratio_min: num_p95 / den_p95 must be
+<= max. Used to gate that an opt-in feature measured in the same run
+stays cheap (e.g. serving with observability on within 2x of off).
+
 An "accept_parity" list of {"a": key, "b": key, "max_diff": d} entries
 gates quality instead of speed: |accept_rate(a) - accept_rate(b)| must
 be <= max_diff, both records measured in the same run (the int8
@@ -52,6 +57,7 @@ def main() -> int:
         doc = json.load(f)
     baseline = doc["p95_s"]
     ratios = doc.get("p95_ratio_min", [])
+    ratio_maxes = doc.get("p95_ratio_max", [])
     parities = doc.get("accept_parity", [])
 
     records = {}
@@ -90,6 +96,19 @@ def main() -> int:
         if ratio < floor:
             failures.append(f"ratio {slow} / {fast}: {ratio:.2f}x < {floor:.2f}x")
 
+    for gate in ratio_maxes:
+        num, den, ceil = gate["num"], gate["den"], gate["max"]
+        missing = [k for k in (num, den) if k not in records]
+        if missing:
+            for k in missing:
+                failures.append(f"ratio-max gate {num} / {den}: record {k} missing")
+            continue
+        ratio = records[num]["p95_s"] / max(records[den]["p95_s"], 1e-12)
+        status = "FAIL" if ratio > ceil else "ok"
+        print(f"[{status}] ratio {num} / {den}: {ratio:.2f}x (max {ceil:.2f}x)")
+        if ratio > ceil:
+            failures.append(f"ratio {num} / {den}: {ratio:.2f}x > {ceil:.2f}x")
+
     for gate in parities:
         a, b, max_diff = gate["a"], gate["b"], gate["max_diff"]
         missing = [k for k in (a, b) if k not in records]
@@ -112,7 +131,7 @@ def main() -> int:
             print(f"  - {f_}", file=sys.stderr)
         return 1
     print(f"\nperf-smoke gate passed: {len(baseline)} baselined records within "
-          f"{REGRESSION_FACTOR}x, {len(ratios)} ratio gate(s) and "
+          f"{REGRESSION_FACTOR}x, {len(ratios) + len(ratio_maxes)} ratio gate(s) and "
           f"{len(parities)} parity gate(s) met.")
     return 0
 

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Validate observability artifacts from a `ts-dp serve` run.
+
+Usage:
+    check_trace.py trace.json [--flight flight.jsonl] [--prom flight.prom] \
+        [--min-spans N]
+
+Mirrors the structural checks of `rust/src/obs/trace.rs::validate` for
+CI smoke runs, where the artifacts are produced by the release binary
+rather than an in-process test:
+
+  * the trace is well-formed JSON with a `traceEvents` array;
+  * every event carries `ph`/`pid`/`tid`/`ts`/`name`;
+  * per lane (tid), timestamps are monotone non-decreasing (metadata
+    `M` events exempt);
+  * `B`/`E` pairs are balanced and properly nested per lane, and `X`
+    complete events have non-negative `dur`;
+  * the `otherData` header carries build/run provenance (crate version,
+    kernel path, drafter, shard count, workload);
+  * optionally, the flight JSONL parses line-by-line with monotone
+    per-shard timestamps, and the Prometheus exposition contains the
+    expected `tsdp_*` metric families.
+
+Exit code 0 when everything holds, 1 with a diagnostic otherwise.
+"""
+
+import argparse
+import json
+import sys
+
+PROVENANCE_KEYS = ("crate_version", "kernel_path", "drafter", "shards", "workload")
+FLIGHT_KEYS = (
+    "t_us",
+    "shard",
+    "queue_depth",
+    "queue_by_class",
+    "inflight",
+    "pressure_secs",
+    "accept_ewma",
+    "policy_epoch",
+    "served",
+    "sheds",
+)
+PROM_FAMILIES = ("tsdp_queue_depth", "tsdp_accept_rate_ewma", "tsdp_requests_served_total")
+
+
+def fail(msg: str) -> int:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def check_trace(path: str, min_spans: int) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return fail(f"{path}: traceEvents missing or not an array")
+
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        return fail(f"{path}: otherData provenance header missing")
+    missing = [k for k in PROVENANCE_KEYS if k not in other]
+    if missing:
+        return fail(f"{path}: provenance keys missing: {missing}")
+
+    last_ts = {}
+    stacks = {}
+    spans = complete = 0
+    for i, ev in enumerate(events):
+        for key in ("ph", "pid", "tid", "ts", "name"):
+            if key not in ev:
+                return fail(f"{path}: event {i} missing {key!r}: {ev}")
+        ph, tid, ts, name = ev["ph"], ev["tid"], ev["ts"], ev["name"]
+        if ph == "M":
+            continue
+        if ts < last_ts.get(tid, float("-inf")):
+            return fail(f"{path}: lane {tid}: ts {ts} goes backwards at {name}")
+        last_ts[tid] = ts
+        if ph == "B":
+            stacks.setdefault(tid, []).append(name)
+        elif ph == "E":
+            stack = stacks.setdefault(tid, [])
+            if not stack:
+                return fail(f"{path}: lane {tid}: E {name} without open B")
+            top = stack.pop()
+            if top != name:
+                return fail(f"{path}: lane {tid}: E {name} closes B {top}")
+            spans += 1
+        elif ph == "X":
+            if ev.get("dur", -1) < 0:
+                return fail(f"{path}: lane {tid}: X {name} with missing/negative dur")
+            complete += 1
+        else:
+            return fail(f"{path}: lane {tid}: unsupported ph {ph!r}")
+    for tid, stack in stacks.items():
+        if stack:
+            return fail(f"{path}: lane {tid}: {len(stack)} unclosed B event(s)")
+
+    total = spans + complete
+    if total < min_spans:
+        return fail(f"{path}: only {total} span(s), expected >= {min_spans}")
+    print(
+        f"check_trace: {path}: ok — {spans} B/E span(s), {complete} X event(s), "
+        f"{len(last_ts)} lane(s), provenance {other['crate_version']}"
+        f"/{other['kernel_path']} shards={other['shards']}"
+    )
+    return 0
+
+
+def check_flight(path: str) -> int:
+    last_by_shard = {}
+    n = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                sample = json.loads(line)
+            except json.JSONDecodeError as e:
+                return fail(f"{path}:{lineno}: not valid JSON: {e}")
+            missing = [k for k in FLIGHT_KEYS if k not in sample]
+            if missing:
+                return fail(f"{path}:{lineno}: keys missing: {missing}")
+            shard, t_us = sample["shard"], sample["t_us"]
+            if t_us < last_by_shard.get(shard, float("-inf")):
+                return fail(f"{path}:{lineno}: shard {shard} t_us goes backwards")
+            last_by_shard[shard] = t_us
+            n += 1
+    if n == 0:
+        return fail(f"{path}: no flight samples recorded")
+    print(f"check_trace: {path}: ok — {n} sample(s) over {len(last_by_shard)} shard(s)")
+    return 0
+
+
+def check_prom(path: str) -> int:
+    with open(path) as f:
+        text = f.read()
+    missing = [fam for fam in PROM_FAMILIES if fam not in text]
+    if missing:
+        return fail(f"{path}: metric families missing: {missing}")
+    samples = [
+        ln for ln in text.splitlines() if ln and not ln.startswith("#")
+    ]
+    if not samples:
+        return fail(f"{path}: no metric samples")
+    print(f"check_trace: {path}: ok — {len(samples)} metric sample(s)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file to validate")
+    ap.add_argument("--flight", help="flight-recorder JSONL to validate")
+    ap.add_argument("--prom", help="Prometheus exposition file to validate")
+    ap.add_argument(
+        "--min-spans",
+        type=int,
+        default=1,
+        help="minimum total span/complete events expected in the trace",
+    )
+    args = ap.parse_args()
+
+    rc = check_trace(args.trace, args.min_spans)
+    if rc == 0 and args.flight:
+        rc = check_flight(args.flight)
+    if rc == 0 and args.prom:
+        rc = check_prom(args.prom)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,8 +47,9 @@ command -v python3 >/dev/null || { echo "error: python3 not found" >&2; exit 1; 
 GOLDEN=rust/tests/golden/serve_trace.txt
 # Explicit test list for the scalar leg: every integration suite except
 # the path-dependent golden trace (mirrors .github/workflows/ci.yml).
-SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test online_adapt
-    --test qos_serving --test runtime_integration --test serve_batching)
+SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test obs_trace
+    --test online_adapt --test qos_serving --test runtime_integration
+    --test serve_batching)
 
 echo "==> [1/6] cargo build --release"
 (cd rust && cargo build --release)
