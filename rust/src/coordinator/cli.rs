@@ -10,7 +10,7 @@
 
 use crate::config::{AdaptMode, DemoStyle, Method, Task};
 use crate::coordinator::batcher::Policy;
-use crate::coordinator::server::{serve, ServeOptions};
+use crate::coordinator::server::{serve, ServeOptions, ServeReport};
 use crate::coordinator::workload::{DrafterKind, WorkloadMix};
 use crate::drafter::backend::DistilledDrafter;
 use crate::drafter::serving::{DrafterCheckpoint, DrafterDtype};
@@ -370,6 +370,79 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         ring_cap: 0,
     };
 
+    // HTTP frontend: `--http ADDR` serves sessions opened over the wire
+    // instead of a CLI-declared workload; the two workload sources are
+    // mutually exclusive (same rejection style as --mix below).
+    if let Some(addr) = args.get("http").map(str::to_string) {
+        for conflicting in ["mix", "task", "style", "method", "sessions", "episodes"] {
+            anyhow::ensure!(
+                args.get(conflicting).is_none(),
+                "--http serves sessions opened over the wire; drop --{conflicting} \
+                 (open sessions with `ts-dp client --mix …` or POST /v1/sessions)"
+            );
+        }
+        anyhow::ensure!(
+            adapt != AdaptMode::Online,
+            "--adapt online is not supported with --http (the HTTP gateway spawns \
+             no learner); serve `--adapt frozen` and train offline"
+        );
+        let max_sessions = match args.get("http-sessions") {
+            Some(_) => {
+                let n = args.get_usize("http-sessions", 0)?;
+                anyhow::ensure!(n > 0, "--http-sessions must be positive");
+                Some(n)
+            }
+            None => None,
+        };
+        let drafter = drafter_from_args(args)?;
+        let drafter_kind = drafter_kind(&drafter);
+        let backend = backend_choice(args)?;
+        let opts = ServeOptions {
+            workload: Vec::new(),
+            shards,
+            queue_capacity: queue,
+            policy,
+            scheduler,
+            seed,
+            max_batch,
+            batch_window: std::time::Duration::from_micros(batch_window_us),
+            adapt,
+            learner,
+            qos,
+            obs,
+        };
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("binding HTTP listener on {addr}"))?;
+        println!(
+            "serving HTTP on {} over {} shard(s), max_batch={}, drafter={}, \
+             scheduler={}, qos={}, sessions={}",
+            listener.local_addr()?,
+            shards.max(1),
+            max_batch,
+            drafter_kind.name(),
+            if opts.scheduler.is_some() { adapt.name() } else { "fixed" },
+            if qos_enabled { "on" } else { "off" },
+            match max_sessions {
+                Some(n) => format!("{n} then exit"),
+                None => "unbounded".to_string(),
+            },
+        );
+        let http = crate::net::HttpOptions { max_sessions };
+        let report = crate::net::serve_http(
+            listener,
+            &|shard| {
+                let base = backend
+                    .build()
+                    .with_context(|| format!("building replica for shard {shard}"))?;
+                Ok(with_drafter(base, &drafter))
+            },
+            &opts,
+            &http,
+        )?;
+        print_serve_report(&report);
+        return Ok(());
+    }
+
     // Workload: heterogeneous `--mix` spec, or the uniform legacy shape
     // from --task/--style/--method/--sessions/--episodes. The two are
     // mutually exclusive — rejecting the combination beats silently
@@ -431,6 +504,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         },
         &opts,
     )?;
+    print_serve_report(&report);
+    Ok(())
+}
+
+/// Print a [`ServeReport`] the way `ts-dp serve` always has — shared by
+/// the in-process and `--http` serving paths.
+fn print_serve_report(report: &ServeReport) {
     println!("--- fleet ---");
     println!("{}", report.metrics.summary());
     if let Some(l) = &report.learner {
@@ -488,6 +568,30 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = &o.prom_path {
             println!("prometheus exposition: {}", p.display());
         }
+    }
+}
+
+/// Entry point for `ts-dp client`: closed-loop load generator against a
+/// `ts-dp serve --http` frontend. Replays `--mix` one session at a time
+/// over one keep-alive connection, streaming every segment (and
+/// printing how many per-round chunks arrived), honoring `Retry-After`
+/// on sheds, and cross-checking streamed digests against each session's
+/// close-time report.
+pub fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8077");
+    let mix = args.get_or("mix", "lift:ts_dp");
+    let report = crate::net::run_closed_loop(&addr, &mix)
+        .with_context(|| format!("closed loop against {addr}"))?;
+    println!(
+        "client done: sessions={} segments={} streamed_rounds={} sheds={}",
+        report.sessions, report.segments, report.rounds, report.sheds
+    );
+    for (id, digests) in &report.digests {
+        println!(
+            "session {id}: {} segment(s), digests [{}]",
+            digests.len(),
+            digests.iter().map(|d| format!("{d:016x}")).collect::<Vec<_>>().join(" ")
+        );
     }
     Ok(())
 }

@@ -167,6 +167,10 @@ pub struct ServerMetrics {
     /// Empty (and absent from `summary`) on untraced runs, so the
     /// legacy summary shape is untouched.
     pub stage_times: BTreeMap<&'static str, StageDist>,
+    /// HTTP responses by status code, fed by the network frontend
+    /// (`crate::net`). Empty (and absent from `summary`) on in-process
+    /// runs, so the legacy summary shape is untouched.
+    pub http_status: BTreeMap<u16, u64>,
 }
 
 impl Default for ServerMetrics {
@@ -205,6 +209,7 @@ impl ServerMetrics {
             shard_breakdown: Vec::new(),
             qos_classes: BTreeMap::new(),
             stage_times: BTreeMap::new(),
+            http_status: BTreeMap::new(),
         }
     }
 
@@ -375,6 +380,11 @@ impl ServerMetrics {
         self.stage_times.entry(stage).or_default().merge(dist);
     }
 
+    /// Count one HTTP response by status code (network frontend only).
+    pub fn record_http_status(&mut self, status: u16) {
+        *self.http_status.entry(status).or_insert(0) += 1;
+    }
+
     /// Stage percentile in seconds (q in [0,1]; 0 for unknown stages).
     pub fn stage_percentile(&self, stage: &str, q: f64) -> f64 {
         self.stage_times.get(stage).map_or(0.0, |d| d.reservoir.percentile(q))
@@ -427,6 +437,9 @@ impl ServerMetrics {
             }
             for (&stage, dist) in &m.stage_times {
                 fleet.stage_times.entry(stage).or_default().merge(dist);
+            }
+            for (&status, n) in &m.http_status {
+                *fleet.http_status.entry(status).or_insert(0) += n;
             }
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
@@ -610,6 +623,13 @@ impl ServerMetrics {
                 })
                 .collect();
             s.push_str(&format!(" stages=[{}]", parts.join(" | ")));
+        }
+        // HTTP status breakdown (network-frontend runs only), ascending
+        // status order (BTreeMap iteration).
+        if !self.http_status.is_empty() {
+            let parts: Vec<String> =
+                self.http_status.iter().map(|(code, n)| format!("{code}:{n}")).collect();
+            s.push_str(&format!(" http=[{}]", parts.join(" ")));
         }
         s
     }
@@ -846,5 +866,26 @@ mod tests {
         let qpos = s.find("queue_wait n=1").expect("queue_wait rendered");
         let vpos = s.find("verify n=40").expect("verify rendered");
         assert!(qpos < vpos, "{s}");
+    }
+
+    #[test]
+    fn http_status_counters_merge_and_render_conditionally() {
+        // In-process runs keep the legacy summary shape.
+        let plain = ServerMetrics::new();
+        assert!(!plain.summary().contains("http=["), "{}", plain.summary());
+        let mut a = ServerMetrics::for_shard(0);
+        a.record_http_status(200);
+        a.record_http_status(200);
+        a.record_http_status(429);
+        let mut b = ServerMetrics::for_shard(1);
+        b.record_http_status(200);
+        b.record_http_status(503);
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        assert_eq!(fleet.http_status.get(&200), Some(&3));
+        assert_eq!(fleet.http_status.get(&429), Some(&1));
+        assert_eq!(fleet.http_status.get(&503), Some(&1));
+        let s = fleet.summary();
+        // Ascending status order (BTreeMap iteration).
+        assert!(s.contains("http=[200:3 429:1 503:1]"), "{s}");
     }
 }

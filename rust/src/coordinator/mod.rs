@@ -180,6 +180,23 @@
 //! its sessions, so one bad replica fails the whole `serve()` call with
 //! a root-cause error instead of deadlocking; session-driver errors and
 //! panics are propagated the same way.
+//!
+//! **HTTP frontend** (`crate::net`, CLI `serve --http ADDR`): the same
+//! shard workers can be fronted by a hand-rolled HTTP/1.1 gateway
+//! instead of CLI-declared session drivers. `net::serve_http` spawns
+//! the identical `server.rs::shard_worker` threads over the identical
+//! bounded queues; each `POST /v1/sessions` builds a
+//! [`session::SessionDriver`] from one mix-grammar spec (QoS class /
+//! deadline overridable via `X-TSDP-Class` / `X-TSDP-Deadline-Ms`),
+//! each `GET .../segments` runs one `SessionDriver::step` and streams
+//! its committed verify rounds as chunked NDJSON, and `DELETE` returns
+//! the finished [`session::SessionReport`]. Sessions are numbered in
+//! open order and seeded exactly as `serve()` seeds workload index
+//! `s`, so an HTTP run is bit-identical to an in-process run of the
+//! same mix (pinned by `tests/http_frontend.rs`); QoS sheds map to
+//! 429/503 with `Retry-After`. The streaming tap observes a round only
+//! *after* its accept step — all RNG is already consumed — so the tap
+//! can never perturb served bits.
 
 pub mod batcher;
 pub mod cli;
@@ -193,7 +210,7 @@ pub mod workload;
 
 pub use metrics::{QosClassMetrics, ServerMetrics};
 pub use qos::{degrade_params, PressureGauge, QosClass, QosConfig, ShedReason};
-pub use request::{SegmentReply, SegmentRequest, SegmentResponse};
+pub use request::{SegmentProgress, SegmentReply, SegmentRequest, SegmentResponse};
 pub use router::Router;
 pub use server::{serve, serve_with, ReplicaFactory, ServeOptions, ServeReport};
 pub use workload::{DrafterKind, SessionSpec, WorkloadMix};

@@ -197,6 +197,17 @@ impl PressureGauge {
     pub fn pressure(&self, pending: usize) -> f64 {
         pending as f64 * self.ewma_secs
     }
+
+    /// Backpressure hint for a shed reply: milliseconds until the
+    /// current backlog is expected to drain (at least one service time,
+    /// so a cold or idle gauge still tells the client to back off
+    /// briefly rather than hot-loop). Rides
+    /// `SegmentResponse::Shed { retry_after_ms }` and the HTTP
+    /// `Retry-After` header.
+    pub fn retry_after_ms(&self, pending: usize) -> u64 {
+        let secs = self.pressure(pending).max(self.service_estimate());
+        ((secs * 1_000.0).ceil() as u64).max(1)
+    }
 }
 
 /// Graceful degradation of speculative parameters: blend `params`
@@ -281,6 +292,20 @@ mod tests {
         // 0.8 * 0.010 + 0.2 * 0.020 = 0.012
         assert!((g.service_estimate() - 0.012).abs() < 1e-12);
         assert!((g.pressure(5) - 0.060).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retry_after_is_backlog_drain_with_floor() {
+        let mut g = PressureGauge::new();
+        // Cold gauge: no estimate at all, but the hint still floors at
+        // 1ms so in-process retriers and HTTP clients never hot-loop.
+        assert_eq!(g.retry_after_ms(0), 1);
+        assert_eq!(g.retry_after_ms(10), 1);
+        g.observe(0.010);
+        // Idle shard (pending = 0): one service time, rounded up.
+        assert_eq!(g.retry_after_ms(0), 10);
+        // Backlogged shard: pending × EWMA, rounded up.
+        assert_eq!(g.retry_after_ms(5), 50);
     }
 
     #[test]

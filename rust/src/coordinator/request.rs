@@ -43,7 +43,49 @@ pub enum SegmentResponse {
         reason: ShedReason,
         /// Shard that made the decision.
         shard: usize,
+        /// Backpressure hint from the shard's
+        /// [`PressureGauge`](crate::coordinator::qos::PressureGauge): how
+        /// many milliseconds the client should wait before retrying
+        /// (estimated time for the backlog to drain). `None` only when
+        /// QoS is disabled — which also means sheds never happen — so
+        /// the QoS-off bit-identity contract is unaffected by the
+        /// field. Surfaced as the HTTP `Retry-After` header by the
+        /// network frontend.
+        retry_after_ms: Option<u64>,
     },
+}
+
+/// Streaming progress from one in-flight speculative segment: emitted
+/// once per committed verify round, carrying the round's acceptance
+/// stats and the **current partially-denoised plan** (flat
+/// HORIZON×ACT_DIM latent at the round's new noise level). This is the
+/// Real-Time Iteration view of diffusion planning: the plan is usable
+/// (if noisy) before denoising completes, so a streaming client can act
+/// on — or display — each refinement as its verify round clears instead
+/// of waiting for the finished segment.
+///
+/// Progress taps are **observation only**: the engine sends them after
+/// the round's acceptance scan has already consumed its randomness, and
+/// sessions without a tap take the exact same code path, so served bits
+/// are bit-identical with or without streaming (the contract
+/// `tests/http_frontend.rs` pins).
+#[derive(Debug, Clone)]
+pub struct SegmentProgress {
+    /// Verify round index within the segment (0-based).
+    pub round: usize,
+    /// Draft steps proposed this round.
+    pub drafts: usize,
+    /// Draft steps the acceptance scan kept this round.
+    pub accepted: usize,
+    /// Denoising steps committed this round (accepted prefix + the one
+    /// corrected step).
+    pub committed: usize,
+    /// Denoising steps still remaining after this round (0 = the next
+    /// message is the finished segment).
+    pub t_remaining: usize,
+    /// The current plan latent (flat HORIZON×ACT_DIM f32), partially
+    /// denoised to `t_remaining` steps from clean.
+    pub plan: Vec<f32>,
 }
 
 /// An action-segment request submitted by a session driver.
@@ -68,6 +110,12 @@ pub struct SegmentRequest {
     pub submitted: Instant,
     /// Reply channel.
     pub reply: mpsc::SyncSender<SegmentResponse>,
+    /// Optional streaming tap: when present, the engine sends one
+    /// [`SegmentProgress`] per committed verify round (non-blocking —
+    /// a slow or hung consumer drops rounds, never stalls the shard).
+    /// `None` for the in-process path; the HTTP frontend installs one
+    /// per `GET …/segments` to flush accepted chunks as they clear.
+    pub progress: Option<mpsc::Sender<SegmentProgress>>,
 }
 
 impl SegmentRequest {
@@ -94,6 +142,7 @@ impl std::fmt::Debug for SegmentRequest {
             .field("obs_len", &self.obs.len())
             .field("params", &self.params)
             .field("policy_epoch", &self.policy_epoch)
+            .field("streaming", &self.progress.is_some())
             .finish()
     }
 }
@@ -113,6 +162,7 @@ mod tests {
             policy_epoch: None,
             submitted: Instant::now(),
             reply: tx,
+            progress: None,
         }
     }
 

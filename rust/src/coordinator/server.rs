@@ -31,7 +31,7 @@ use crate::config::{AdaptMode, Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::qos::{degrade_params, PressureGauge, QosConfig, ShedReason};
-use crate::coordinator::request::{SegmentReply, SegmentRequest, SegmentResponse};
+use crate::coordinator::request::{SegmentProgress, SegmentReply, SegmentRequest, SegmentResponse};
 use crate::coordinator::router::Router;
 use crate::coordinator::session::{run_session, SessionConfig, SessionReport};
 use crate::coordinator::workload::{SessionSpec, WorkloadMix};
@@ -225,6 +225,11 @@ struct ActiveJob<'e> {
     /// Admission time (compute-latency clock; includes time interleaved
     /// with other jobs — honest under batching).
     started: Instant,
+    /// Streaming tap: when present, one [`SegmentProgress`] is sent per
+    /// committed verify round (after the round's randomness is fully
+    /// consumed, and non-blocking — so streaming can never change
+    /// served bits or stall the shard).
+    progress: Option<mpsc::Sender<SegmentProgress>>,
 }
 
 /// Deadline-aware admission at the queue boundary: with QoS enabled,
@@ -236,7 +241,8 @@ struct ActiveJob<'e> {
 fn ingest_request(
     req: SegmentRequest,
     qos: &QosConfig,
-    pressure_secs: f64,
+    gauge: &PressureGauge,
+    pending: usize,
     batcher: &mut Batcher,
     metrics: &mut ServerMetrics,
     shard: usize,
@@ -244,6 +250,7 @@ fn ingest_request(
     if qos.enabled {
         metrics.record_offered(req.spec.qos);
         let now = Instant::now();
+        let pressure_secs = gauge.pressure(pending);
         let reason = if req.expired(now) {
             Some(ShedReason::Expired)
         } else {
@@ -256,8 +263,14 @@ fn ingest_request(
         };
         if let Some(reason) = reason {
             metrics.record_shed(req.spec.qos, reason);
-            // A hung-up session (env finished mid-flight) is fine.
-            let _ = req.reply.send(SegmentResponse::Shed { reason, shard });
+            // A hung-up session (env finished mid-flight) is fine. The
+            // retry hint tells the client how long the measured backlog
+            // needs to drain (HTTP surfaces it as `Retry-After`).
+            let _ = req.reply.send(SegmentResponse::Shed {
+                reason,
+                shard,
+                retry_after_ms: Some(gauge.retry_after_ms(pending)),
+            });
             return;
         }
     }
@@ -320,8 +333,8 @@ fn run_shard(
         if open && jobs.is_empty() && batcher.is_empty() {
             match rx.recv() {
                 Ok(req) => {
-                    let pressure = gauge.pressure(batcher.len() + jobs.len());
-                    ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
+                    let pending = batcher.len() + jobs.len();
+                    ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
                 }
                 Err(_) => {
                     open = false;
@@ -332,8 +345,8 @@ fn run_shard(
         if open {
             // Opportunistically drain whatever else is queued.
             while let Ok(req) = rx.try_recv() {
-                let pressure = gauge.pressure(batcher.len() + jobs.len());
-                ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
+                let pending = batcher.len() + jobs.len();
+                ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
             }
             // Wave formation: with no round in flight, linger briefly so
             // concurrent sessions land in the same first wave. Never
@@ -347,8 +360,8 @@ fn run_shard(
                     }
                     match rx.recv_timeout(deadline - now) {
                         Ok(req) => {
-                            let pressure = gauge.pressure(batcher.len() + jobs.len());
-                            ingest_request(req, &opts.qos, pressure, batcher, metrics, shard);
+                            let pending = batcher.len() + jobs.len();
+                            ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -377,8 +390,11 @@ fn run_shard(
             // would burn a slot on a guaranteed-late answer.
             if opts.qos.enabled && req.expired(Instant::now()) {
                 metrics.record_shed(req.spec.qos, ShedReason::Expired);
-                let _ =
-                    req.reply.send(SegmentResponse::Shed { reason: ShedReason::Expired, shard });
+                let _ = req.reply.send(SegmentResponse::Shed {
+                    reason: ShedReason::Expired,
+                    shard,
+                    retry_after_ms: Some(gauge.retry_after_ms(batcher.len() + jobs.len())),
+                });
                 continue;
             }
             let queue_delay = req.submitted.elapsed().as_secs_f64();
@@ -426,6 +442,7 @@ fn run_shard(
                     reply: req.reply,
                     queue_delay,
                     started: Instant::now(),
+                    progress: req.progress,
                 });
             } else {
                 // Baselines have no resumable rounds: blocking
@@ -555,6 +572,23 @@ fn run_shard(
                 let eps_i = &eps[slot * VERIFY_BATCH * SEG..(slot + 1) * VERIFY_BATCH * SEG];
                 let rng = rngs.get_mut(&jobs[i].session).expect("rng created at admission");
                 jobs[i].job.accept(eps_i, rng);
+                // Streaming tap: flush the committed round — acceptance
+                // stats plus the current partially-denoised plan — to
+                // the session's progress channel. The round's RNG is
+                // already fully consumed and the send never blocks, so
+                // streamed and unstreamed sessions serve identical bits.
+                if let Some(tap) = jobs[i].progress.as_ref() {
+                    let aj = &jobs[i];
+                    let round = aj.job.rounds().last().expect("accept() recorded a round");
+                    let _ = tap.send(SegmentProgress {
+                        round: aj.job.rounds().len() - 1,
+                        drafts: round.k,
+                        accepted: round.accepted,
+                        committed: round.committed,
+                        t_remaining: aj.job.t(),
+                        plan: aj.job.plan().to_vec(),
+                    });
+                }
             }
             rec.record(
                 SpanKind::Commit,
@@ -658,7 +692,75 @@ fn run_shard(
 }
 
 /// What one shard worker thread returns to `serve` at join.
-type ShardJoin = (ServerMetrics, SpanRecorder, Vec<FlightSample>, Result<()>);
+pub(crate) type ShardJoin = (ServerMetrics, SpanRecorder, Vec<FlightSample>, Result<()>);
+
+/// The complete body of one shard worker thread: build the replica
+/// locally (non-`Send` backends never cross threads), signal readiness,
+/// run the engine loop until every sender hangs up, then drain and
+/// report. Shared by the in-process fleet ([`serve`]) and the HTTP
+/// frontend ([`crate::net::serve_http`]) so both paths serve through
+/// the exact same engine — the anchor of the HTTP bit-identity
+/// contract.
+///
+/// `assigned` is the wave-formation hint (how many sessions can
+/// structurally share a first wave); frontends that learn about
+/// sessions dynamically pass `opts.max_batch`.
+pub(crate) fn shard_worker(
+    make_replica: &ReplicaFactory<'_>,
+    shard: usize,
+    rx: mpsc::Receiver<SegmentRequest>,
+    assigned: usize,
+    opts: &ServeOptions,
+    obs_epoch: Instant,
+    ready: Option<mpsc::Sender<()>>,
+) -> ShardJoin {
+    let mut metrics = ServerMetrics::for_shard(shard);
+    let mut batcher = Batcher::with_aging_limit(opts.policy, opts.qos.aging_limit);
+    let mut rec = SpanRecorder::new(
+        obs_epoch,
+        shard_lane(shard),
+        opts.obs.effective_ring_cap(),
+        opts.obs.tracing(),
+    );
+    let mut flight = opts.obs.obs_interval.map(|iv| FlightRecorder::new(obs_epoch, shard, iv));
+    // Build the replica on this thread, then run the engine loop in an
+    // inner expression so that on error we still drop every buffered
+    // request and in-flight job before exiting: blocked sessions then
+    // observe a hangup instead of deadlocking the fleet forever.
+    let replica = make_replica(shard);
+    if let Some(ready) = ready {
+        let _ = ready.send(());
+        // Release the barrier sender NOW: if another worker panics
+        // before signalling, the main thread must see a disconnect, not
+        // block on senders parked in long-running engine loops.
+        drop(ready);
+    }
+    let result = replica.and_then(|den| {
+        run_shard(
+            den.as_ref(),
+            &rx,
+            &mut batcher,
+            &mut metrics,
+            shard,
+            assigned,
+            opts,
+            &mut rec,
+            &mut flight,
+        )
+    });
+    // Shard done (or failed): freeze the serving window, drain buffered
+    // requests, and drop the receiver so senders see the hangup.
+    metrics.stop_clock();
+    while batcher.pop().is_some() {}
+    drop(rx);
+    // Fold this shard's span attribution into its own metrics so
+    // merge_fleet aggregates it like any other distribution.
+    for (kind, dist) in rec.stage_dists() {
+        metrics.record_stage(kind.name(), dist);
+    }
+    let samples = flight.map(FlightRecorder::into_samples).unwrap_or_default();
+    (metrics, rec, samples, result)
+}
 
 /// What the scoped fleet returns to `serve` after every join.
 type FleetJoin = (
@@ -744,59 +846,7 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 let opts_ref = &*opts;
                 let ready = ready_tx.clone();
                 workers.push(scope.spawn(move || -> ShardJoin {
-                    let mut metrics = ServerMetrics::for_shard(shard);
-                    let mut batcher =
-                        Batcher::with_aging_limit(opts_ref.policy, opts_ref.qos.aging_limit);
-                    let mut rec = SpanRecorder::new(
-                        obs_epoch,
-                        shard_lane(shard),
-                        opts_ref.obs.effective_ring_cap(),
-                        opts_ref.obs.tracing(),
-                    );
-                    let mut flight = opts_ref
-                        .obs
-                        .obs_interval
-                        .map(|iv| FlightRecorder::new(obs_epoch, shard, iv));
-                    // Build the replica on this thread (non-`Send`
-                    // backends never cross threads), then run the engine
-                    // loop in an inner closure so that on error we still
-                    // drop every buffered request and in-flight job
-                    // before exiting: blocked sessions then observe a
-                    // hangup instead of deadlocking serve() forever.
-                    let replica = make_replica(shard);
-                    let _ = ready.send(());
-                    // Release the barrier sender NOW: if another worker
-                    // panics before signalling, the main thread must see
-                    // a disconnect, not block on senders parked in
-                    // long-running engine loops.
-                    drop(ready);
-                    let result = replica.and_then(|den| {
-                        run_shard(
-                            den.as_ref(),
-                            &rx,
-                            &mut batcher,
-                            &mut metrics,
-                            shard,
-                            assigned,
-                            opts_ref,
-                            &mut rec,
-                            &mut flight,
-                        )
-                    });
-                    // Shard done (or failed): freeze the serving window,
-                    // drain buffered requests, and drop the receiver so
-                    // senders see the hangup.
-                    metrics.stop_clock();
-                    while batcher.pop().is_some() {}
-                    drop(rx);
-                    // Fold this shard's span attribution into its own
-                    // metrics so merge_fleet aggregates it like any
-                    // other distribution.
-                    for (kind, dist) in rec.stage_dists() {
-                        metrics.record_stage(kind.name(), dist);
-                    }
-                    let samples = flight.map(FlightRecorder::into_samples).unwrap_or_default();
-                    (metrics, rec, samples, result)
+                    shard_worker(make_replica, shard, rx, assigned, opts_ref, obs_epoch, Some(ready))
                 }));
             }
             drop(ready_tx);
@@ -932,7 +982,9 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
 /// Export the run's observability artifacts (Chrome trace JSON, flight
 /// JSONL + Prometheus text) and fold sink-side stage attribution into
 /// the fleet metrics. Returns `None` when no output was requested.
-fn export_obs(
+/// Shared with the HTTP frontend (`crate::net`), whose workload list is
+/// discovered dynamically and may be empty.
+pub(crate) fn export_obs(
     opts: &ServeOptions,
     shards: usize,
     sink: &SpanSink,

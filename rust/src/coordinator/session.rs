@@ -1,11 +1,27 @@
 //! Session driver: one controlled environment, running on a worker
 //! thread, talking to its assigned shard worker over channels.
+//!
+//! Two frontends drive sessions through the same state machine:
+//!
+//! * the **in-process** path ([`run_session`]) — one worker thread per
+//!   session, stepping the driver to completion, as `serve()` spawns;
+//! * the **network** path (`crate::net`) — an HTTP handler steps the
+//!   driver once per `GET /v1/sessions/{id}/segments`, threading a
+//!   streaming progress tap through so accepted chunks flush to the
+//!   client as each verify round clears.
+//!
+//! Both are thin loops over [`SessionDriver::step`], so the env
+//! stepping, RNG stream, scheduler decisions, and digest accounting are
+//! literally the same code — which is what makes the HTTP path's
+//! bit-identity contract (`tests/http_frontend.rs`) hold by
+//! construction rather than by parallel maintenance.
 
 use crate::config::{SpecParams, ACT_DIM, EXEC_STEPS, HORIZON};
 use crate::config::{Method, Task};
-use crate::coordinator::request::{SegmentRequest, SegmentResponse};
+use crate::coordinator::qos::ShedReason;
+use crate::coordinator::request::{SegmentProgress, SegmentRequest, SegmentResponse};
 use crate::coordinator::workload::SessionSpec;
-use crate::envs::make_env;
+use crate::envs::{make_env, Env};
 use crate::harness::episode::{DecisionHook, SegmentOutcome};
 use crate::obs::span::{session_lane, Attrs, SpanKind, SpanSink};
 use crate::scheduler::features::{features, FeatureState};
@@ -54,7 +70,7 @@ pub struct SessionReport {
 }
 
 /// FNV-1a over the raw bit pattern of an f32 slice (order-sensitive).
-fn fnv1a_f32(xs: &[f32]) -> u64 {
+pub(crate) fn fnv1a_f32(xs: &[f32]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for x in xs {
         for b in x.to_bits().to_le_bytes() {
@@ -88,174 +104,338 @@ pub struct SessionConfig {
     pub obs: Option<Arc<SpanSink>>,
 }
 
-/// Run a session: submit one segment request per control round, execute
-/// EXEC_STEPS actions per reply. Returns the session report.
+/// What one [`SessionDriver::step`] did with its segment request.
+#[derive(Debug, Clone)]
+pub enum SegmentEventKind {
+    /// The request was served and its actions executed against the env.
+    Served {
+        /// The served action segment (flat HORIZON×ACT_DIM).
+        actions: Vec<f32>,
+        /// FNV-1a digest of the action bits (the fingerprint unit).
+        digest: u64,
+        /// NFE the segment consumed.
+        nfe: f64,
+        /// Draft steps proposed (speculative methods).
+        drafts: usize,
+        /// Draft steps accepted.
+        accepted: usize,
+        /// End-to-end latency in seconds (queue + compute).
+        latency_secs: f64,
+    },
+    /// Admission control shed the request; the driver executed the
+    /// receding-horizon hold on its previous plan tail before
+    /// returning, so control never stalls.
+    Shed {
+        /// Typed rejection reason.
+        reason: ShedReason,
+        /// Backpressure hint from the shard's pressure gauge (None only
+        /// on QoS-off fleets, which never shed).
+        retry_after_ms: Option<u64>,
+    },
+}
+
+/// One completed driver step: which episode it happened in, the served
+/// segment count at that point, and what the fleet did.
+#[derive(Debug, Clone)]
+pub struct SegmentEvent {
+    /// Episode index (0-based) the segment belongs to.
+    pub episode: usize,
+    /// Served-segment index: for [`SegmentEventKind::Served`] the index
+    /// of this segment in `SessionReport::segment_digests`; for a shed,
+    /// the count of segments served so far (sheds take no index).
+    pub segment: usize,
+    /// What happened.
+    pub kind: SegmentEventKind,
+}
+
+/// Resumable session state machine: owns the env, the scheduler hook,
+/// and the in-progress report, advancing one segment request per
+/// [`SessionDriver::step`] call. Episode boundaries (env resets, hook
+/// flushes, success accounting) are handled internally, so callers just
+/// step until `None`.
+pub struct SessionDriver {
+    cfg: SessionConfig,
+    tx: mpsc::SyncSender<SegmentRequest>,
+    env: Box<dyn Env>,
+    hook: Option<crate::scheduler::ServingHook>,
+    report: SessionReport,
+    latency_sum: f64,
+    /// Unexecuted tail of the most recently served plan: the
+    /// receding-horizon fallback executed when QoS admission control
+    /// sheds a request (run the remainder of the previous plan rather
+    /// than stopping the control loop). Consumed by the first shed and
+    /// reset at episode boundaries — a plan never crosses an env reset.
+    last_plan: Option<Vec<f32>>,
+    feat_state: FeatureState,
+    /// Next episode to start (== episodes when all are done).
+    ep: usize,
+    /// True while an episode is mid-flight (env reset, not yet done).
+    ep_active: bool,
+}
+
+impl SessionDriver {
+    /// Build the driver: constructs the env and scheduler hook; nothing
+    /// runs until the first [`SessionDriver::step`].
+    pub fn new(cfg: SessionConfig, tx: mpsc::SyncSender<SegmentRequest>) -> Self {
+        let mut cfg = cfg;
+        let env = make_env(cfg.spec.task, cfg.spec.style);
+        // Move the scheduler handle into the hook (it is not reused from
+        // the stored cfg, and moving keeps experience sinks single-owner).
+        let hook = cfg.adaptive.take().map(crate::scheduler::ServingHook::with_scheduler);
+        let report = SessionReport {
+            session: cfg.session,
+            task: cfg.spec.task,
+            style: cfg.spec.style,
+            method: cfg.spec.method,
+            shard: cfg.shard,
+            episodes: cfg.spec.episodes,
+            successes: 0,
+            mean_score: 0.0,
+            segments: 0,
+            mean_latency: 0.0,
+            nfe: 0.0,
+            sheds: 0,
+            segment_digests: Vec::new(),
+        };
+        Self {
+            cfg,
+            tx,
+            env,
+            hook,
+            report,
+            latency_sum: 0.0,
+            last_plan: None,
+            feat_state: FeatureState::default(),
+            ep: 0,
+            ep_active: false,
+        }
+    }
+
+    /// Session id this driver reports as.
+    pub fn session(&self) -> usize {
+        self.report.session
+    }
+
+    /// Shard the session was routed to.
+    pub fn shard(&self) -> usize {
+        self.report.shard
+    }
+
+    /// The in-progress report (finalized by [`SessionDriver::finish`]).
+    pub fn report(&self) -> &SessionReport {
+        &self.report
+    }
+
+    /// Advance by one segment: submit the next request, wait for the
+    /// reply, execute the served actions (or the shed hold) against the
+    /// env, and return the event. Episode boundaries are crossed
+    /// transparently; returns `Ok(None)` once every episode completed.
+    ///
+    /// `progress` (None on the in-process path) is attached to the
+    /// request so the engine streams one [`SegmentProgress`] per
+    /// committed verify round — observation-only, so stepping with or
+    /// without a tap serves bit-identical segments.
+    pub fn step(
+        &mut self,
+        progress: Option<mpsc::Sender<SegmentProgress>>,
+    ) -> Result<Option<SegmentEvent>> {
+        loop {
+            if !self.ep_active {
+                if self.ep >= self.cfg.spec.episodes {
+                    return Ok(None);
+                }
+                let mut rng = Rng::seed_from_u64(self.cfg.seed ^ ((self.ep as u64 + 1) << 16));
+                self.env.reset(&mut rng);
+                self.last_plan = None;
+                self.feat_state = FeatureState::default();
+                self.ep_active = true;
+            }
+            if self.env.done() {
+                // Episode boundary: online hooks flush the episode's
+                // experience to the learner here (frozen: no-op).
+                if let Some(h) = self.hook.as_mut() {
+                    h.finish_episode();
+                }
+                self.report.successes += self.env.success() as usize;
+                self.report.mean_score +=
+                    self.env.score() as f64 / self.cfg.spec.episodes as f64;
+                self.ep += 1;
+                self.ep_active = false;
+                continue;
+            }
+            return self.run_segment(progress).map(Some);
+        }
+    }
+
+    /// Finalize: derived means are computed here, after the last step.
+    pub fn finish(mut self) -> SessionReport {
+        self.report.mean_latency = self.latency_sum / self.report.segments.max(1) as f64;
+        self.report
+    }
+
+    /// One segment round-trip against the shard (the body of the legacy
+    /// per-session serving loop, verbatim in order and RNG usage).
+    fn run_segment(
+        &mut self,
+        progress: Option<mpsc::Sender<SegmentProgress>>,
+    ) -> Result<SegmentEvent> {
+        let obs = self.env.observe();
+        // Scheduler decision happens session-side (pure Rust) while the
+        // request waits in the shard queue.
+        let t_decide = self.cfg.obs.as_ref().and_then(|s| s.start());
+        let params: Option<SpecParams> = match self.hook.as_mut() {
+            Some(h) => {
+                let phase_frac = self.env.phase() as f32 / self.env.num_phases().max(1) as f32;
+                let feat = features(&obs, self.env.progress(), phase_frac, &self.feat_state);
+                Some(h.decide(&feat))
+            }
+            None => None,
+        };
+        if params.is_some() {
+            if let Some(sink) = self.cfg.obs.as_ref() {
+                sink.record(
+                    SpanKind::SchedulerDecision,
+                    t_decide,
+                    Attrs {
+                        session: self.cfg.session as u32,
+                        segment: self.report.segments as u32,
+                        policy_epoch: self
+                            .hook
+                            .as_ref()
+                            .map_or(crate::obs::span::NO_ATTR, |h| h.last_epoch() as u32),
+                        lane: session_lane(self.cfg.session),
+                        ..Attrs::NONE
+                    },
+                );
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentResponse>(1);
+        let submitted = Instant::now();
+        self.tx
+            .send(SegmentRequest {
+                session: self.cfg.session,
+                spec: self.cfg.spec,
+                obs,
+                params,
+                policy_epoch: self.hook.as_ref().map(|h| h.last_epoch()),
+                submitted,
+                reply: reply_tx,
+                progress,
+            })
+            .ok()
+            .context("shard closed the request channel")?;
+        let reply = match reply_rx.recv().context("shard dropped the reply")? {
+            SegmentResponse::Served(reply) => reply,
+            SegmentResponse::Shed { shard, reason, retry_after_ms } => {
+                // Typed rejection from admission control: execute the
+                // *unexecuted tail* of the previous plan (the
+                // receding-horizon hold), standing still once it is
+                // spent or before the first segment — the env's step
+                // limit still advances either way, so a saturated fleet
+                // can never wedge the session.
+                debug_assert_eq!(shard, self.cfg.shard, "cross-shard shed");
+                self.report.sheds += 1;
+                let hold = self.last_plan.take().unwrap_or_default();
+                let zeros = [0.0f32; ACT_DIM];
+                for i in 0..EXEC_STEPS.min(HORIZON) {
+                    if self.env.done() {
+                        break;
+                    }
+                    let start = i * ACT_DIM;
+                    if start + ACT_DIM <= hold.len() {
+                        self.env.step(&hold[start..start + ACT_DIM]);
+                    } else {
+                        self.env.step(&zeros);
+                    }
+                }
+                return Ok(SegmentEvent {
+                    episode: self.ep,
+                    segment: self.report.segments,
+                    kind: SegmentEventKind::Shed { reason, retry_after_ms },
+                });
+            }
+        };
+        // Placement sanity: the reply must come from the shard the
+        // router assigned this session to at admission.
+        debug_assert_eq!(reply.shard, self.cfg.shard, "cross-shard reply");
+        let latency = submitted.elapsed().as_secs_f64();
+        self.latency_sum += latency;
+        self.report.segments += 1;
+        self.report.nfe += reply.nfe;
+        let digest = fnv1a_f32(&reply.actions);
+        self.report.segment_digests.push(digest);
+
+        for i in 0..EXEC_STEPS.min(HORIZON) {
+            if self.env.done() {
+                break;
+            }
+            self.env.step(&reply.actions[i * ACT_DIM..(i + 1) * ACT_DIM]);
+        }
+        // Feature/scheduler feedback.
+        self.feat_state.recent_acceptance = if reply.drafts > 0 {
+            reply.accepted as f32 / reply.drafts as f32
+        } else {
+            1.0
+        };
+        self.feat_state.recent_drafts = reply.drafts as f32;
+        self.feat_state.recent_speed = self.env.ee_speed();
+        // Shard overload feedback (always 0.0 on QoS-disabled runs, so
+        // frozen decisions stay bit-identical to the pre-QoS fleet).
+        self.feat_state.queue_pressure = reply.pressure as f32;
+        // Keep the plan steps the loop above did NOT execute — the shed
+        // fallback continues from exactly where serving left off, never
+        // replaying actions the env already took.
+        self.last_plan = Some(
+            reply.actions[(EXEC_STEPS.min(HORIZON) * ACT_DIM).min(reply.actions.len())..]
+                .to_vec(),
+        );
+        if let Some(p) = params {
+            self.feat_state.last_params = p;
+        }
+        if let Some(h) = self.hook.as_mut() {
+            let meta = crate::harness::episode::SegmentMeta {
+                env_step: self.env.steps(),
+                phase: self.env.phase(),
+                ee_speed: self.env.ee_speed(),
+                drafts: reply.drafts,
+                accepted: reply.accepted,
+                nfe: reply.nfe,
+                wall_secs: reply.compute_secs,
+                params: params.unwrap_or_default(),
+            };
+            h.post_segment(&SegmentOutcome {
+                meta: &meta,
+                done: self.env.done(),
+                success: self.env.success(),
+                score: self.env.score(),
+                task: self.cfg.spec.task,
+                t_max: self.env.max_steps(),
+            });
+        }
+        Ok(SegmentEvent {
+            episode: self.ep,
+            segment: self.report.segments - 1,
+            kind: SegmentEventKind::Served {
+                digest,
+                nfe: reply.nfe,
+                drafts: reply.drafts,
+                accepted: reply.accepted,
+                latency_secs: latency,
+                actions: reply.actions,
+            },
+        })
+    }
+}
+
+/// Run a session to completion: submit one segment request per control
+/// round, execute EXEC_STEPS actions per reply. Returns the session
+/// report. (A thin loop over [`SessionDriver`]; the HTTP frontend steps
+/// the same driver one segment at a time instead.)
 pub fn run_session(
     cfg: SessionConfig,
     tx: mpsc::SyncSender<SegmentRequest>,
 ) -> Result<SessionReport> {
-    let mut env = make_env(cfg.spec.task, cfg.spec.style);
-    let mut hook = cfg.adaptive.map(crate::scheduler::ServingHook::with_scheduler);
-    let mut report = SessionReport {
-        session: cfg.session,
-        task: cfg.spec.task,
-        style: cfg.spec.style,
-        method: cfg.spec.method,
-        shard: cfg.shard,
-        episodes: cfg.spec.episodes,
-        successes: 0,
-        mean_score: 0.0,
-        segments: 0,
-        mean_latency: 0.0,
-        nfe: 0.0,
-        sheds: 0,
-        segment_digests: Vec::new(),
-    };
-    let mut latency_sum = 0.0;
-    // Unexecuted tail of the most recently served plan: the
-    // receding-horizon fallback executed when QoS admission control
-    // sheds a request (run the remainder of the previous plan rather
-    // than stopping the control loop). Consumed by the first shed and
-    // reset at episode boundaries — a plan never crosses an env reset.
-    let mut last_plan: Option<Vec<f32>> = None;
-    for ep in 0..cfg.spec.episodes {
-        let mut rng = Rng::seed_from_u64(cfg.seed ^ ((ep as u64 + 1) << 16));
-        env.reset(&mut rng);
-        last_plan = None;
-        let mut feat_state = FeatureState::default();
-        while !env.done() {
-            let obs = env.observe();
-            // Scheduler decision happens session-side (pure Rust) while
-            // the request waits in the shard queue.
-            let t_decide = cfg.obs.as_ref().and_then(|s| s.start());
-            let params: Option<SpecParams> = hook.as_mut().map(|h| {
-                let phase_frac = env.phase() as f32 / env.num_phases().max(1) as f32;
-                let feat = features(&obs, env.progress(), phase_frac, &feat_state);
-                h.decide(&feat)
-            });
-            if params.is_some() {
-                if let Some(sink) = cfg.obs.as_ref() {
-                    sink.record(
-                        SpanKind::SchedulerDecision,
-                        t_decide,
-                        Attrs {
-                            session: cfg.session as u32,
-                            segment: report.segments as u32,
-                            policy_epoch: hook
-                                .as_ref()
-                                .map_or(crate::obs::span::NO_ATTR, |h| h.last_epoch() as u32),
-                            lane: session_lane(cfg.session),
-                            ..Attrs::NONE
-                        },
-                    );
-                }
-            }
-            let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentResponse>(1);
-            let submitted = Instant::now();
-            tx.send(SegmentRequest {
-                session: cfg.session,
-                spec: cfg.spec,
-                obs,
-                params,
-                policy_epoch: hook.as_ref().map(|h| h.last_epoch()),
-                submitted,
-                reply: reply_tx,
-            })
-            .ok()
-            .context("shard closed the request channel")?;
-            let reply = match reply_rx.recv().context("shard dropped the reply")? {
-                SegmentResponse::Served(reply) => reply,
-                SegmentResponse::Shed { shard, .. } => {
-                    // Typed rejection from admission control: execute
-                    // the *unexecuted tail* of the previous plan (the
-                    // receding-horizon hold), standing still once it is
-                    // spent or before the first segment — the env's
-                    // step limit still advances either way, so a
-                    // saturated fleet can never wedge the session.
-                    debug_assert_eq!(shard, cfg.shard, "cross-shard shed");
-                    report.sheds += 1;
-                    let hold = last_plan.take().unwrap_or_default();
-                    let zeros = [0.0f32; ACT_DIM];
-                    for i in 0..EXEC_STEPS.min(HORIZON) {
-                        if env.done() {
-                            break;
-                        }
-                        let start = i * ACT_DIM;
-                        if start + ACT_DIM <= hold.len() {
-                            env.step(&hold[start..start + ACT_DIM]);
-                        } else {
-                            env.step(&zeros);
-                        }
-                    }
-                    continue;
-                }
-            };
-            // Placement sanity: the reply must come from the shard the
-            // router assigned this session to at admission.
-            debug_assert_eq!(reply.shard, cfg.shard, "cross-shard reply");
-            let latency = submitted.elapsed().as_secs_f64();
-            latency_sum += latency;
-            report.segments += 1;
-            report.nfe += reply.nfe;
-            report.segment_digests.push(fnv1a_f32(&reply.actions));
-
-            for i in 0..EXEC_STEPS.min(HORIZON) {
-                if env.done() {
-                    break;
-                }
-                env.step(&reply.actions[i * ACT_DIM..(i + 1) * ACT_DIM]);
-            }
-            // Feature/scheduler feedback.
-            feat_state.recent_acceptance = if reply.drafts > 0 {
-                reply.accepted as f32 / reply.drafts as f32
-            } else {
-                1.0
-            };
-            feat_state.recent_drafts = reply.drafts as f32;
-            feat_state.recent_speed = env.ee_speed();
-            // Shard overload feedback (always 0.0 on QoS-disabled runs,
-            // so frozen decisions stay bit-identical to the pre-QoS
-            // fleet).
-            feat_state.queue_pressure = reply.pressure as f32;
-            // Keep the plan steps the loop above did NOT execute — the
-            // shed fallback continues from exactly where serving left
-            // off, never replaying actions the env already took.
-            last_plan = Some(
-                reply.actions[(EXEC_STEPS.min(HORIZON) * ACT_DIM).min(reply.actions.len())..]
-                    .to_vec(),
-            );
-            if let Some(p) = params {
-                feat_state.last_params = p;
-            }
-            if let Some(h) = hook.as_mut() {
-                let meta = crate::harness::episode::SegmentMeta {
-                    env_step: env.steps(),
-                    phase: env.phase(),
-                    ee_speed: env.ee_speed(),
-                    drafts: reply.drafts,
-                    accepted: reply.accepted,
-                    nfe: reply.nfe,
-                    wall_secs: reply.compute_secs,
-                    params: params.unwrap_or_default(),
-                };
-                h.post_segment(&SegmentOutcome {
-                    meta: &meta,
-                    done: env.done(),
-                    success: env.success(),
-                    score: env.score(),
-                    task: cfg.spec.task,
-                    t_max: env.max_steps(),
-                });
-            }
-        }
-        // Episode boundary: online hooks flush the episode's experience
-        // to the learner here (frozen hooks are a no-op).
-        if let Some(h) = hook.as_mut() {
-            h.finish_episode();
-        }
-        report.successes += env.success() as usize;
-        report.mean_score += env.score() as f64 / cfg.spec.episodes as f64;
-    }
-    report.mean_latency = latency_sum / report.segments.max(1) as f64;
-    Ok(report)
+    let mut driver = SessionDriver::new(cfg, tx);
+    while driver.step(None)?.is_some() {}
+    Ok(driver.finish())
 }

@@ -16,6 +16,7 @@ pub mod drafter;
 pub mod envs;
 pub mod harness;
 pub mod kernels;
+pub mod net;
 pub mod obs;
 pub mod policy;
 pub mod runtime;

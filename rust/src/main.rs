@@ -3,6 +3,8 @@
 //! Subcommands (see `ts-dp help`):
 //! * `gen-demos`       — generate PH/MH demonstration datasets (build path)
 //! * `serve`           — run the serving coordinator over env sessions
+//!                       (`--http ADDR` exposes it as an HTTP frontend)
+//! * `client`          — closed-loop load generator for `serve --http`
 //! * `episode`         — run a single policy episode and print metrics
 //! * `train-scheduler` — PPO-train the temporal scheduler
 //! * `distill-drafter` — distill a Transformer drafter from the base model
@@ -30,6 +32,7 @@ fn main() {
         "table" => ts_dp::harness::cli::cmd_table(&args),
         "figure" => ts_dp::harness::cli::cmd_figure(&args),
         "serve" => ts_dp::coordinator::cli::cmd_serve(&args),
+        "client" => ts_dp::coordinator::cli::cmd_client(&args),
         "load-sweep" => ts_dp::coordinator::cli::cmd_load_sweep(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -64,6 +67,8 @@ COMMANDS:
                    [--drafter FILE [--drafter-dtype f32|int8]]
                    [--qos [--degrade-pressure S] [--aging-limit N]]
                    [--trace-out FILE] [--obs-interval MS [--obs-out FILE]]
+                   [--http ADDR [--http-sessions N]]
+  client           [--addr HOST:PORT] [--mix SPEC]
   load-sweep       --task T [--method M] | --mix SPEC
                    [--rates 1,5,20] [--requests N]
                    [--drafter FILE [--drafter-dtype f32|int8]]
@@ -111,6 +116,17 @@ samples live gauges (queue depth per class, pressure, occupancy,
 KV-arena blocks, accept EWMA, sheds) into a JSONL flight record plus
 a Prometheus-style .prom exposition at shutdown (path: --obs-out,
 default flight.jsonl). Recording never changes served bits.
+
+HTTP serving: `serve --http ADDR` exposes the fleet over a hand-rolled
+HTTP/1.1 frontend instead of a CLI-declared workload — POST /v1/sessions
+opens a session from a --mix-grammar spec (X-TSDP-Class /
+X-TSDP-Deadline-Ms headers override QoS), GET /v1/sessions/{{id}}/segments
+streams each segment as chunked NDJSON (one chunk per accepted verify
+round), DELETE returns the session report; QoS sheds map to 429/503
+with Retry-After. `--http-sessions N` exits after N sessions close
+(smoke/CI mode). `ts-dp client --addr HOST:PORT --mix SPEC` replays a
+whole mix through that API and cross-checks streamed digests against
+each close report.
 
 Online adaptation: `serve --adapt online` keeps PPO-training the
 scheduler from live traffic (a background learner publishes

@@ -1,0 +1,231 @@
+//! Chunked transfer-encoding: the streaming writer the segment endpoint
+//! flushes accepted rounds through, and the bounded decoder shared by
+//! request-body parsing and the client.
+//!
+//! The writer is what makes "streamed action chunks" real at the socket
+//! level: each committed verify round becomes one HTTP chunk, flushed
+//! immediately, so a client sees the partially-denoised plan refine in
+//! real time instead of waiting for the finished segment. The decoder
+//! enforces a total-size cap *before* allocating for any chunk, keeping
+//! the no-attacker-proportional-allocation property of
+//! [`crate::net::http`].
+
+use crate::net::http::HttpError;
+use std::io::{BufRead, Read, Write};
+
+/// Longest accepted chunk-size line (hex digits + optional extension —
+/// which we reject — + CRLF). 16 hex digits already cover u64.
+const MAX_SIZE_LINE: usize = 18;
+
+/// Streaming chunked-body writer. Every [`ChunkedWriter::write_chunk`]
+/// flushes, so a chunk is on the wire before the next verify round
+/// runs; [`ChunkedWriter::finish`] terminates the body.
+pub struct ChunkedWriter<W: Write> {
+    inner: W,
+    finished: bool,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Wrap a writer whose chunked head
+    /// ([`crate::net::http::write_chunked_head`]) was already written.
+    pub fn new(inner: W) -> Self {
+        Self { inner, finished: false }
+    }
+
+    /// Write one chunk and flush it to the wire. Empty payloads are
+    /// skipped (an empty chunk would terminate the body).
+    pub fn write_chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        debug_assert!(!self.finished, "write after finish");
+        write_chunk_to(&mut self.inner, data)
+    }
+
+    /// Terminate the body (`0\r\n\r\n`) and flush.
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        write_terminator(&mut self.inner)
+    }
+}
+
+/// Stateless form of [`ChunkedWriter::write_chunk`] for call sites that
+/// cannot park a long-lived borrow in a wrapper (the segment handler
+/// writes its response head lazily on the same stream). Empty payloads
+/// are skipped.
+pub fn write_chunk_to<W: Write>(w: &mut W, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Stateless body terminator (`0\r\n\r\n` + flush); pairs with
+/// [`write_chunk_to`].
+pub fn write_terminator<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Read one CRLF-terminated chunk-size line (bounded).
+fn read_size_line<R: BufRead>(r: &mut R) -> Result<usize, HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut limited = r.take(MAX_SIZE_LINE as u64 + 1);
+    limited
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new(400, format!("chunk size read failed: {e}")))?;
+    if buf.last() != Some(&b'\n') {
+        return Err(HttpError::new(400, "truncated or oversized chunk-size line"));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    let line = std::str::from_utf8(&buf)
+        .map_err(|_| HttpError::new(400, "non-UTF-8 chunk-size line"))?;
+    if line.is_empty() || !line.bytes().all(|b| b.is_ascii_hexdigit()) {
+        // Chunk extensions (`;name=value`) are deliberately rejected.
+        return Err(HttpError::new(400, format!("bad chunk size '{line}'")));
+    }
+    usize::from_str_radix(line, 16)
+        .map_err(|_| HttpError::new(400, format!("chunk size '{line}' overflows")))
+}
+
+/// Decode a complete chunked body, enforcing `cap` on the total decoded
+/// size before any chunk is buffered. Used for request bodies
+/// (server side) and non-streamed response bodies (client side).
+pub fn read_chunked<R: BufRead>(r: &mut R, cap: usize) -> Result<Vec<u8>, HttpError> {
+    let mut body: Vec<u8> = Vec::new();
+    loop {
+        let size = read_size_line(r)?;
+        if size == 0 {
+            break;
+        }
+        if body.len() + size > cap {
+            return Err(HttpError::new(413, format!("chunked body exceeds {cap} bytes")));
+        }
+        let start = body.len();
+        body.resize(start + size, 0);
+        r.read_exact(&mut body[start..])
+            .map_err(|e| HttpError::new(400, format!("truncated chunk: {e}")))?;
+        expect_crlf(r)?;
+    }
+    // Terminal chunk: no trailers supported — the next two bytes must
+    // close the body.
+    expect_crlf(r)?;
+    Ok(body)
+}
+
+/// Streaming decode: invoke `on_chunk` per data chunk as it arrives
+/// (the client side of the segment stream), still enforcing `cap` on
+/// the total. Returns the number of chunks seen.
+pub fn read_chunked_stream<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    on_chunk: &mut dyn FnMut(&[u8]),
+) -> Result<usize, HttpError> {
+    let mut total = 0usize;
+    let mut chunks = 0usize;
+    loop {
+        let size = read_size_line(r)?;
+        if size == 0 {
+            break;
+        }
+        if total + size > cap {
+            return Err(HttpError::new(413, format!("chunked body exceeds {cap} bytes")));
+        }
+        total += size;
+        let mut chunk = vec![0u8; size];
+        r.read_exact(&mut chunk)
+            .map_err(|e| HttpError::new(400, format!("truncated chunk: {e}")))?;
+        expect_crlf(r)?;
+        on_chunk(&chunk);
+        chunks += 1;
+    }
+    expect_crlf(r)?;
+    Ok(chunks)
+}
+
+/// Consume the CRLF that terminates a chunk (or the body).
+fn expect_crlf<R: Read>(r: &mut R) -> Result<(), HttpError> {
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)
+        .map_err(|e| HttpError::new(400, format!("missing chunk terminator: {e}")))?;
+    if &crlf != b"\r\n" {
+        return Err(HttpError::new(400, "chunk not terminated by CRLF"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn writer_frames_and_terminates() {
+        let mut out = Vec::new();
+        let mut w = ChunkedWriter::new(&mut out);
+        w.write_chunk(b"hello").unwrap();
+        w.write_chunk(b"").unwrap(); // skipped, not a terminator
+        w.write_chunk(b"world!").unwrap();
+        w.finish().unwrap();
+        w.finish().unwrap(); // idempotent
+        assert_eq!(out, b"5\r\nhello\r\n6\r\nworld!\r\n0\r\n\r\n");
+    }
+
+    #[test]
+    fn decoder_roundtrips_writer_output() {
+        let mut out = Vec::new();
+        let mut w = ChunkedWriter::new(&mut out);
+        w.write_chunk(b"abc").unwrap();
+        w.write_chunk(&[0u8; 300]).unwrap();
+        w.finish().unwrap();
+        let body = read_chunked(&mut BufReader::new(out.as_slice()), 4096).unwrap();
+        assert_eq!(body.len(), 303);
+        assert_eq!(&body[..3], b"abc");
+    }
+
+    #[test]
+    fn stream_decoder_sees_each_chunk() {
+        let wire = b"3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n";
+        let mut seen: Vec<Vec<u8>> = Vec::new();
+        let n = read_chunked_stream(&mut BufReader::new(wire.as_slice()), 4096, &mut |c| {
+            seen.push(c.to_vec())
+        })
+        .unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(seen, vec![b"abc".to_vec(), b"de".to_vec()]);
+    }
+
+    #[test]
+    fn cap_is_enforced_before_allocation() {
+        // Claims one enormous chunk; must be rejected at the size line,
+        // never allocated.
+        let wire = b"ffffffff\r\n";
+        let err = read_chunked(&mut BufReader::new(wire.as_slice()), 1024).unwrap_err();
+        assert_eq!(err.status, 413);
+        // And across chunks.
+        let wire = b"300\r\n";
+        let err = read_chunked(&mut BufReader::new(wire.as_slice()), 256).unwrap_err();
+        assert_eq!(err.status, 413);
+    }
+
+    #[test]
+    fn malformed_chunks_are_400() {
+        for wire in [
+            &b"zz\r\nabc"[..],                   // non-hex size
+            &b"3;ext=1\r\nabc\r\n0\r\n\r\n"[..], // extensions rejected
+            &b"3\r\nab"[..],                     // truncated data
+            &b"3\r\nabcXX0\r\n\r\n"[..],         // missing CRLF after data
+            &b"3\r\nabc\r\n0\r\n"[..],           // missing final CRLF
+            &b""[..],                            // empty
+        ] {
+            let err = read_chunked(&mut BufReader::new(wire), 4096).unwrap_err();
+            assert_eq!(err.status, 400, "wire {:?}", String::from_utf8_lossy(wire));
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! Minimal HTTP/1.1 client for the TS-DP serving frontend: the driver
+//! behind `ts-dp client`, the CI http-smoke leg, and the e2e tests.
+//!
+//! One keep-alive connection, blocking I/O, and just enough response
+//! parsing for this API: status line + headers, `Content-Length` or
+//! chunked bodies, and streamed segment consumption where every chunk
+//! is surfaced to a callback as it arrives (so a caller observes the
+//! per-round refinement, not just the finished segment).
+//!
+//! [`run_closed_loop`] is the closed-loop load generator: it replays a
+//! full `--mix` workload through the HTTP API one session at a time,
+//! honors `Retry-After` on sheds, and cross-checks the digests it saw
+//! on the stream against the server's close-time [`report`] — a live
+//! end-to-end integrity check of the wire path.
+//!
+//! [`report`]: crate::coordinator::session::SessionReport
+
+use crate::coordinator::workload::WorkloadMix;
+use crate::net::chunked::read_chunked_stream;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Bound on any single response line (status or header) the client will
+/// buffer — the server is trusted, but the bound keeps the client
+/// honest about allocation too.
+const MAX_LINE: usize = 4096;
+/// Bound on any response body the client will buffer.
+const MAX_RESP_BODY: usize = 4 * 1024 * 1024;
+
+/// A parsed (non-streamed) HTTP response.
+#[derive(Debug)]
+pub struct Response {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Headers in arrival order, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Complete body (already de-chunked when the server streamed).
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// First header value with the given (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 text.
+    pub fn text(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("response body is not UTF-8")
+    }
+}
+
+/// Outcome of one `GET …/segments` exchange.
+#[derive(Debug)]
+pub enum SegmentFetch {
+    /// A segment was served; `rounds` chunks were streamed before the
+    /// final event.
+    Served {
+        /// Digest from the final `segment` event.
+        digest: u64,
+        /// Streamed `round` events observed before the final event.
+        rounds: usize,
+    },
+    /// The request was shed (`429` deadline-unmeetable or `503`
+    /// expired).
+    Shed {
+        /// The HTTP status the shed mapped to.
+        status: u16,
+        /// Backoff hint from `X-TSDP-Retry-After-Ms`.
+        retry_after_ms: u64,
+    },
+    /// `204` — the session has no segments left.
+    Done,
+}
+
+/// One keep-alive connection to the serving frontend.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:8077`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(Self { reader, writer: stream })
+    }
+
+    /// `GET /healthz` — true when the server answers 200.
+    pub fn health(&mut self) -> Result<bool> {
+        self.send_request("GET", "/healthz", &[], b"")?;
+        Ok(self.read_response()?.status == 200)
+    }
+
+    /// Open a session from a single-spec `--mix`-grammar string, with
+    /// optional QoS header overrides. Returns the session id.
+    pub fn open_session(
+        &mut self,
+        spec: &str,
+        class: Option<&str>,
+        deadline_ms: Option<u64>,
+    ) -> Result<u64> {
+        let mut headers: Vec<(String, String)> = Vec::new();
+        if let Some(c) = class {
+            headers.push(("X-TSDP-Class".into(), c.into()));
+        }
+        if let Some(ms) = deadline_ms {
+            headers.push(("X-TSDP-Deadline-Ms".into(), ms.to_string()));
+        }
+        let hdrs: Vec<(&str, &str)> =
+            headers.iter().map(|(n, v)| (n.as_str(), v.as_str())).collect();
+        self.send_request("POST", "/v1/sessions", &hdrs, spec.as_bytes())?;
+        let resp = self.read_response()?;
+        ensure!(resp.status == 201, "open '{spec}' failed: {} {}", resp.status, resp.text()?);
+        let doc = Json::parse(resp.text()?).context("parse open response")?;
+        Ok(doc.get("id")?.as_usize()? as u64)
+    }
+
+    /// Serve the session's next segment, invoking `on_round` for every
+    /// streamed `round` event as its chunk arrives.
+    pub fn next_segment(
+        &mut self,
+        id: u64,
+        on_round: &mut dyn FnMut(&Json),
+    ) -> Result<SegmentFetch> {
+        let target = format!("/v1/sessions/{id}/segments");
+        self.send_request("GET", &target, &[], b"")?;
+        let (status, headers) = self.read_head()?;
+        let chunked = header_of(&headers, "transfer-encoding")
+            .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+        if !chunked {
+            // Non-streamed outcome: done, shed, or an error.
+            let body = self.read_sized_body(&headers)?;
+            return match status {
+                204 => Ok(SegmentFetch::Done),
+                429 | 503 => {
+                    // The server contract says every shed carries both
+                    // Retry-After forms; a shed without one is a bug.
+                    let ms = header_of(&headers, "x-tsdp-retry-after-ms")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .or_else(|| {
+                            header_of(&headers, "retry-after")
+                                .and_then(|v| v.parse::<u64>().ok())
+                                .map(|s| s * 1_000)
+                        })
+                        .ok_or_else(|| {
+                            anyhow!("shed response ({status}) without a Retry-After header")
+                        })?;
+                    Ok(SegmentFetch::Shed { status, retry_after_ms: ms })
+                }
+                _ => bail!(
+                    "segment fetch for session {id} failed: {status} {}",
+                    String::from_utf8_lossy(&body)
+                ),
+            };
+        }
+        ensure!(status == 200, "streamed segment response with status {status}");
+        // Each chunk is one (or more) NDJSON lines; buffer partial lines
+        // across chunks anyway, for robustness against re-framing.
+        let mut pending = String::new();
+        let mut rounds = 0usize;
+        let mut digest: Option<u64> = None;
+        let mut parse_err: Option<anyhow::Error> = None;
+        read_chunked_stream(&mut self.reader, MAX_RESP_BODY, &mut |chunk| {
+            if parse_err.is_some() {
+                return;
+            }
+            match std::str::from_utf8(chunk) {
+                Ok(text) => pending.push_str(text),
+                Err(e) => {
+                    parse_err = Some(anyhow!("non-UTF-8 segment chunk: {e}"));
+                    return;
+                }
+            }
+            while let Some(nl) = pending.find('\n') {
+                let line: String = pending.drain(..=nl).collect();
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match consume_event(line, on_round, &mut rounds, &mut digest) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        parse_err = Some(e);
+                        return;
+                    }
+                }
+            }
+        })
+        .map_err(|e| anyhow!("segment stream for session {id} broke: {e}"))?;
+        if let Some(e) = parse_err {
+            return Err(e);
+        }
+        let digest =
+            digest.ok_or_else(|| anyhow!("segment stream ended without a segment event"))?;
+        Ok(SegmentFetch::Served { digest, rounds })
+    }
+
+    /// Close the session; returns the server's final report as JSON.
+    pub fn close_session(&mut self, id: u64) -> Result<Json> {
+        let target = format!("/v1/sessions/{id}");
+        self.send_request("DELETE", &target, &[], b"")?;
+        let resp = self.read_response()?;
+        ensure!(resp.status == 200, "close {id} failed: {} {}", resp.status, resp.text()?);
+        Json::parse(resp.text()?).context("parse close report")
+    }
+
+    // -- wire helpers -------------------------------------------------
+
+    fn send_request(
+        &mut self,
+        method: &str,
+        target: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<()> {
+        let w = &mut self.writer;
+        write!(w, "{method} {target} HTTP/1.1\r\nHost: ts-dp\r\n")?;
+        for (name, value) in headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        if body.is_empty() {
+            write!(w, "\r\n")?;
+        } else {
+            write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+            w.write_all(body)?;
+        }
+        w.flush().context("send request")
+    }
+
+    /// Read status line + headers.
+    fn read_head(&mut self) -> Result<(u16, Vec<(String, String)>)> {
+        let line = read_line(&mut self.reader)?.context("connection closed before response")?;
+        // "HTTP/1.1 204 No Content" — the reason phrase may be absent.
+        let mut parts = line.splitn(3, ' ');
+        let (proto, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+        ensure!(proto.starts_with("HTTP/1."), "bad status line '{line}'");
+        let status: u16 = code.parse().with_context(|| format!("bad status line '{line}'"))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = read_line(&mut self.reader)?
+                .ok_or_else(|| anyhow!("connection closed inside response headers"))?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) =
+                line.split_once(':').ok_or_else(|| anyhow!("bad response header '{line}'"))?;
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        Ok((status, headers))
+    }
+
+    /// Read a `Content-Length` body (no body when the header is
+    /// absent).
+    fn read_sized_body(&mut self, headers: &[(String, String)]) -> Result<Vec<u8>> {
+        let Some(cl) = header_of(headers, "content-length") else {
+            return Ok(Vec::new());
+        };
+        let len: usize = cl.parse().with_context(|| format!("bad content-length '{cl}'"))?;
+        ensure!(len <= MAX_RESP_BODY, "response body of {len} bytes exceeds {MAX_RESP_BODY}");
+        let mut body = vec![0u8; len];
+        std::io::Read::read_exact(&mut self.reader, &mut body).context("read response body")?;
+        Ok(body)
+    }
+
+    /// Read a complete non-streamed response.
+    fn read_response(&mut self) -> Result<Response> {
+        let (status, headers) = self.read_head()?;
+        let body = if header_of(&headers, "transfer-encoding")
+            .is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+        {
+            let mut body = Vec::new();
+            read_chunked_stream(&mut self.reader, MAX_RESP_BODY, &mut |c| {
+                body.extend_from_slice(c)
+            })
+            .map_err(|e| anyhow!("chunked response body broke: {e}"))?;
+            body
+        } else {
+            self.read_sized_body(&headers)?
+        };
+        Ok(Response { status, headers, body })
+    }
+}
+
+/// Classify one NDJSON event line from the segment stream.
+fn consume_event(
+    line: &str,
+    on_round: &mut dyn FnMut(&Json),
+    rounds: &mut usize,
+    digest: &mut Option<u64>,
+) -> Result<()> {
+    let doc = Json::parse(line).with_context(|| format!("bad stream event '{line}'"))?;
+    match doc.get("event")?.as_str()? {
+        "round" => {
+            *rounds += 1;
+            on_round(&doc);
+            Ok(())
+        }
+        "segment" => {
+            let hex = doc.get("digest")?.as_str()?.to_string();
+            *digest = Some(
+                u64::from_str_radix(&hex, 16)
+                    .with_context(|| format!("bad digest '{hex}'"))?,
+            );
+            Ok(())
+        }
+        other => bail!("unknown stream event '{other}'"),
+    }
+}
+
+fn header_of<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+/// Bounded CRLF line read (returns `None` on clean EOF).
+fn read_line<R: BufRead>(r: &mut R) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    r.take(MAX_LINE as u64 + 1).read_until(b'\n', &mut buf).context("read line")?;
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    ensure!(buf.last() == Some(&b'\n') && buf.len() <= MAX_LINE, "response line too long");
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).context("non-UTF-8 response line")
+}
+
+/// What [`run_closed_loop`] saw.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Sessions opened and closed.
+    pub sessions: usize,
+    /// Segments served.
+    pub segments: usize,
+    /// Streamed `round` chunks observed across all segments.
+    pub rounds: usize,
+    /// Requests shed (429/503).
+    pub sheds: usize,
+    /// Per-session `(id, served segment digests in order)`.
+    pub digests: Vec<(u64, Vec<u64>)>,
+}
+
+/// Closed-loop load generator: replay a full `--mix` workload through
+/// the HTTP API, one session at a time on one keep-alive connection.
+/// Sheds are honored by sleeping the server's `Retry-After` hint
+/// (capped at one second) before the next request. For every session
+/// the digests observed on the stream are cross-checked against the
+/// close-time report — any mismatch is an error, making this a live
+/// integrity probe of the whole wire path.
+pub fn run_closed_loop(addr: &str, mix: &str) -> Result<LoadReport> {
+    let specs = WorkloadMix::parse(mix)?.build();
+    let mut client = Client::connect(addr)?;
+    ensure!(client.health()?, "server at {addr} is not healthy");
+    let mut out = LoadReport::default();
+    for spec in specs {
+        // Re-render the spec through the same grammar the server parses;
+        // Display ↔ parse round-trips by contract.
+        let spec_str = WorkloadMix::new().session(spec).to_string();
+        let id = client.open_session(&spec_str, None, None)?;
+        let mut digests: Vec<u64> = Vec::new();
+        loop {
+            match client.next_segment(id, &mut |_| {})? {
+                SegmentFetch::Served { digest, rounds } => {
+                    out.segments += 1;
+                    out.rounds += rounds;
+                    digests.push(digest);
+                }
+                SegmentFetch::Shed { retry_after_ms, .. } => {
+                    out.sheds += 1;
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.min(1_000)));
+                }
+                SegmentFetch::Done => break,
+            }
+        }
+        let report = client.close_session(id)?;
+        let reported: Vec<u64> = report
+            .get("segment_digests")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                let hex = d.as_str()?;
+                u64::from_str_radix(hex, 16).map_err(|_| {
+                    crate::util::json::JsonError::Access(format!("bad digest '{hex}'"))
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        ensure!(
+            reported == digests,
+            "session {id}: streamed digests diverge from the close report \
+             ({} streamed vs {} reported)",
+            digests.len(),
+            reported.len()
+        );
+        out.sessions += 1;
+        out.digests.push((id, digests));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_events_classify_and_roundtrip() {
+        let mut rounds = 0usize;
+        let mut digest = None;
+        let mut seen = Vec::new();
+        let mut on_round = |doc: &Json| {
+            seen.push(doc.get("round").unwrap().as_usize().unwrap());
+        };
+        consume_event(
+            r#"{"event":"round","round":0,"drafts":4,"accepted":3,"committed":4,"t_remaining":2,"plan_bits":[0]}"#,
+            &mut on_round,
+            &mut rounds,
+            &mut digest,
+        )
+        .unwrap();
+        consume_event(
+            r#"{"event":"segment","digest":"00000000deadbeef","nfe":8}"#,
+            &mut on_round,
+            &mut rounds,
+            &mut digest,
+        )
+        .unwrap();
+        assert_eq!(rounds, 1);
+        assert_eq!(seen, vec![0]);
+        assert_eq!(digest, Some(0xdead_beef));
+        assert!(consume_event(r#"{"event":"mystery"}"#, &mut on_round, &mut rounds, &mut digest)
+            .is_err());
+    }
+
+    #[test]
+    fn bounded_line_reader_rejects_oversize() {
+        let long = format!("{}\r\n", "x".repeat(2 * MAX_LINE));
+        let mut r = std::io::BufReader::new(long.as_bytes());
+        assert!(read_line(&mut r).is_err());
+        let mut r = std::io::BufReader::new(&b"ok\r\nrest"[..]);
+        assert_eq!(read_line(&mut r).unwrap().as_deref(), Some("ok"));
+        let mut r = std::io::BufReader::new(&b""[..]);
+        assert!(read_line(&mut r).unwrap().is_none());
+    }
+}

@@ -1,0 +1,413 @@
+//! Hardened hand-rolled HTTP/1.1 request parser and response writers.
+//!
+//! Dependency-light by policy (std + `anyhow` only — this build
+//! environment vendors no hyper/axum), and written for a hostile
+//! network: every read is bounded by an explicit limit *before* any
+//! byte is buffered, so no request — however long its request line,
+//! however many headers it claims, whatever its `Content-Length` says —
+//! can make the server allocate memory proportional to attacker input.
+//! Violations surface as a typed [`HttpError`] carrying the 4xx status
+//! the connection loop writes back before closing.
+//!
+//! Scope: exactly what the TS-DP serving frontend needs. `GET`/`POST`/
+//! `DELETE`, `Content-Length` and `chunked` request bodies, header
+//! lookup, and status-line/header/body response writing (streaming
+//! chunked responses live in [`crate::net::chunked`]). No TLS, no
+//! HTTP/2, no multipart — by design.
+
+use std::io::{BufRead, Read, Write};
+
+/// Maximum request-line length in bytes (method + target + version).
+/// Longer lines are rejected with 414 before being buffered.
+pub const MAX_REQUEST_LINE: usize = 1024;
+/// Maximum single header line length in bytes (431 beyond).
+pub const MAX_HEADER_LINE: usize = 1024;
+/// Maximum number of request headers (431 beyond).
+pub const MAX_HEADERS: usize = 32;
+/// Maximum request body size in bytes, whether declared by
+/// `Content-Length` or accumulated across `chunked` chunks (413 beyond).
+pub const MAX_BODY: usize = 64 * 1024;
+
+/// A parse/protocol failure with the HTTP status the server should
+/// answer before closing the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    /// Response status code (4xx for malformed input).
+    pub status: u16,
+    /// Human-readable reason (lands in the response body).
+    pub msg: String,
+}
+
+impl HttpError {
+    /// Build an error with the given status and message.
+    pub fn new(status: u16, msg: impl Into<String>) -> Self {
+        Self { status, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, status_reason(self.status), self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Request methods the frontend serves. Anything else is answered 405
+/// (recognizable tokens) or 400 (garbage) without being dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// `GET`
+    Get,
+    /// `POST`
+    Post,
+    /// `DELETE`
+    Delete,
+}
+
+impl Method {
+    /// The method's wire token.
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Delete => "DELETE",
+        }
+    }
+}
+
+/// One parsed HTTP/1.1 request.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method.
+    pub method: Method,
+    /// Request target (origin-form path, e.g. `/v1/sessions/3/segments`).
+    pub target: String,
+    /// Headers in arrival order, names lowercased (values trimmed).
+    pub headers: Vec<(String, String)>,
+    /// Decoded request body (empty unless `Content-Length` or chunked
+    /// framing supplied one; bounded by [`MAX_BODY`]).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value with the given name (case-insensitive — names
+    /// are lowercased at parse time, so pass lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// True when the client asked to close the connection after this
+    /// exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, rejecting lines longer
+/// than `cap` *before* buffering past the cap — the allocation bound
+/// every higher-level limit builds on. Returns the line without its
+/// terminator. `None` means clean EOF before any byte (keep-alive close
+/// between requests).
+fn read_line_limited<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    too_long: HttpError,
+) -> Result<Option<String>, HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    // `take` bounds how much `read_until` can pull — and therefore
+    // allocate — regardless of how much the peer sends.
+    let mut limited = r.take(cap as u64 + 1);
+    limited
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new(408, format!("read failed: {e}")))?;
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        // Either the peer hit EOF mid-line or the line exceeded the cap.
+        if buf.len() > cap {
+            return Err(too_long);
+        }
+        return Err(HttpError::new(400, "truncated line (connection closed mid-request)"));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    if buf.len() > cap {
+        return Err(too_long);
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| HttpError::new(400, "non-UTF-8 bytes in line"))
+}
+
+/// Parse one request off the connection. `Ok(None)` is a clean EOF
+/// between requests (the keep-alive peer hung up); every malformed
+/// input maps to a 4xx [`HttpError`] the connection loop answers before
+/// closing.
+pub fn parse_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, HttpError> {
+    // --- request line ------------------------------------------------
+    let line = match read_line_limited(
+        r,
+        MAX_REQUEST_LINE,
+        HttpError::new(414, format!("request line exceeds {MAX_REQUEST_LINE} bytes")),
+    )? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split(' ');
+    let (method_str, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+            _ => return Err(HttpError::new(400, format!("malformed request line '{line}'"))),
+        };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::new(400, format!("unsupported protocol '{version}'")));
+    }
+    let method = match method_str {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        "DELETE" => Method::Delete,
+        m if m.bytes().all(|b| b.is_ascii_uppercase()) && !m.is_empty() => {
+            return Err(HttpError::new(405, format!("method {m} not supported")))
+        }
+        m => return Err(HttpError::new(400, format!("unrecognizable method '{m}'"))),
+    };
+    if !target.starts_with('/') {
+        return Err(HttpError::new(400, format!("target '{target}' is not origin-form")));
+    }
+
+    // --- headers -----------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_line_limited(
+            r,
+            MAX_HEADER_LINE,
+            HttpError::new(431, format!("header line exceeds {MAX_HEADER_LINE} bytes")),
+        )?
+        .ok_or_else(|| HttpError::new(400, "connection closed inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::new(431, format!("more than {MAX_HEADERS} headers")));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("header without ':' — '{line}'")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::new(400, format!("malformed header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // --- body --------------------------------------------------------
+    let req = Request { method, target: target.to_string(), headers, body: Vec::new() };
+    let body = read_body(r, &req)?;
+    Ok(Some(Request { body, ..req }))
+}
+
+/// Decode the request body per its framing headers, bounded by
+/// [`MAX_BODY`] in every path.
+fn read_body<R: BufRead>(r: &mut R, req: &Request) -> Result<Vec<u8>, HttpError> {
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("chunked") {
+            return Err(HttpError::new(501, format!("transfer-encoding '{te}' not supported")));
+        }
+        return crate::net::chunked::read_chunked(r, MAX_BODY);
+    }
+    let Some(cl) = req.header("content-length") else {
+        return Ok(Vec::new());
+    };
+    let len: usize = cl
+        .parse()
+        .map_err(|_| HttpError::new(400, format!("bad content-length '{cl}'")))?;
+    if len > MAX_BODY {
+        return Err(HttpError::new(413, format!("body of {len} bytes exceeds {MAX_BODY}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| HttpError::new(400, format!("body shorter than content-length: {e}")))?;
+    Ok(body)
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete (non-chunked) response: status line, the given
+/// headers, `Content-Length`, and the body.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+    for (name, value) in headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the head of a streaming response: status line + headers +
+/// `Transfer-Encoding: chunked`. The caller streams the body through a
+/// [`crate::net::chunked::ChunkedWriter`] afterwards.
+pub fn write_chunked_head<W: Write>(
+    w: &mut W,
+    status: u16,
+    headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+    for (name, value) in headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "Transfer-Encoding: chunked\r\n\r\n")?;
+    w.flush()
+}
+
+/// Write a plain-text error response for a parse failure, marking the
+/// connection for close.
+pub fn write_error<W: Write>(w: &mut W, err: &HttpError) -> std::io::Result<()> {
+    write_response(
+        w,
+        err.status,
+        &[("Content-Type", "text/plain"), ("Connection", "close")],
+        err.msg.as_bytes(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(s: &str) -> Result<Option<Request>, HttpError> {
+        parse_request(&mut BufReader::new(s.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let req = parse(
+            "GET /v1/sessions/3/segments HTTP/1.1\r\nHost: x\r\nX-TSDP-Class: rt\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, Method::Get);
+        assert_eq!(req.target, "/v1/sessions/3/segments");
+        assert_eq!(req.header("x-tsdp-class"), Some("rt"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let req = parse("POST /v1/sessions HTTP/1.1\r\nContent-Length: 11\r\n\r\nlift:ts_dp*1")
+            .map(|r| r.unwrap());
+        // 11 bytes of the 12-byte payload — exactly content-length.
+        let req = req.unwrap();
+        assert_eq!(req.method, Method::Post);
+        assert_eq!(req.body, b"lift:ts_dp*");
+    }
+
+    #[test]
+    fn parses_chunked_body() {
+        let req = parse(
+            "POST /v1/sessions HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+             4\r\nlift\r\n7\r\n:ts_dp*\r\n1\r\n2\r\n0\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"lift:ts_dp*2");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_request_line_is_414_without_buffering() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(10 * MAX_REQUEST_LINE));
+        assert_eq!(parse(&long).unwrap_err().status, 414);
+    }
+
+    #[test]
+    fn oversized_header_line_is_431() {
+        let long = format!("GET / HTTP/1.1\r\nX-A: {}\r\n\r\n", "b".repeat(10 * MAX_HEADER_LINE));
+        assert_eq!(parse(&long).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut s = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            s.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        s.push_str("\r\n");
+        assert_eq!(parse(&s).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let s = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(parse(&s).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn unknown_method_token_is_405_garbage_is_400() {
+        assert_eq!(parse("PATCH / HTTP/1.1\r\n\r\n").unwrap_err().status, 405);
+        assert_eq!(parse("p@tch / HTTP/1.1\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse("GET relative HTTP/1.1\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse("GET / SPDY/99\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse("GET / HTTP/1.1 extra\r\n\r\n").unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn truncated_body_and_headers_are_400() {
+        let e = parse("POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").unwrap_err();
+        assert_eq!(e.status, 400);
+        let e = parse("GET / HTTP/1.1\r\nHost: x\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn error_responses_render_and_mark_close() {
+        let mut out = Vec::new();
+        write_error(&mut out, &HttpError::new(414, "too long")).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 414 URI Too Long\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("too long"));
+    }
+
+    #[test]
+    fn chunked_head_renders() {
+        let mut out = Vec::new();
+        write_chunked_head(&mut out, 200, &[("Content-Type", "application/x-ndjson")]).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.ends_with("Transfer-Encoding: chunked\r\n\r\n"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Hand-rolled HTTP/1.1 serving frontend (std + `anyhow` only).
+//!
+//! Exposes the sharded TS-DP fleet over the wire without adding a
+//! single dependency: a hardened request parser whose every read is
+//! bounded before any byte is buffered ([`http`]), chunked
+//! transfer-encoding with per-verify-round flushing ([`chunked`]),
+//! strict route dispatch ([`router`]), the session gateway
+//! ([`server`]), and a minimal client + closed-loop load generator
+//! ([`client`]) used by `ts-dp client`, the e2e tests, and the CI
+//! http-smoke leg.
+//!
+//! ## API
+//!
+//! | Verb + path | Meaning |
+//! |---|---|
+//! | `POST /v1/sessions` | open a session (body: one `--mix` spec) |
+//! | `GET /v1/sessions/{id}/segments` | next segment, streamed per accepted round |
+//! | `DELETE /v1/sessions/{id}` | close; final [`SessionReport`] as JSON |
+//! | `GET /healthz` | liveness |
+//!
+//! `X-TSDP-Class` / `X-TSDP-Deadline-Ms` headers override the spec's
+//! QoS annotations. QoS sheds map to `429` (deadline unmeetable) and
+//! `503` (expired), both carrying `Retry-After` (whole seconds) and
+//! `X-TSDP-Retry-After-Ms` (exact hint from the shard's pressure
+//! gauge).
+//!
+//! The gateway reuses the in-process fleet's shard workers and session
+//! drivers verbatim, with all seeds derived from the session id alone —
+//! so an HTTP workload is bit-identical (same segment digests) to the
+//! same workload served in-process. See [`server`] for the full
+//! contract.
+//!
+//! [`SessionReport`]: crate::coordinator::session::SessionReport
+
+pub mod chunked;
+pub mod client;
+pub mod http;
+pub mod router;
+pub mod server;
+
+pub use chunked::{read_chunked, read_chunked_stream, ChunkedWriter};
+pub use client::{run_closed_loop, Client, LoadReport, Response, SegmentFetch};
+pub use http::{parse_request, write_response, HttpError, Method, Request};
+pub use router::{route, Route};
+pub use server::{serve_http, HttpOptions};

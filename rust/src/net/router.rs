@@ -1,0 +1,131 @@
+//! Request routing for the serving frontend: a strict, allocation-free
+//! match from `(method, target)` to the typed [`Route`] the gateway
+//! dispatches on.
+//!
+//! Strictness is deliberate: session ids are decimal-only (no sign, no
+//! leading `+`, bounded length) so an id can never parse differently
+//! than it prints, and unknown paths/methods map to 404/405 without
+//! touching any session state.
+
+use crate::net::http::{HttpError, Method};
+
+/// Longest accepted session-id token: u64::MAX has 20 digits.
+const MAX_ID_DIGITS: usize = 20;
+
+/// The endpoints the serving frontend exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /v1/sessions` — open a session from a `--mix`-grammar spec
+    /// in the body.
+    OpenSession,
+    /// `GET /v1/sessions/{id}/segments` — serve the session's next
+    /// segment, streaming accepted chunks.
+    NextSegment {
+        /// Session id from the path.
+        id: u64,
+    },
+    /// `DELETE /v1/sessions/{id}` — close the session and return its
+    /// final report.
+    CloseSession {
+        /// Session id from the path.
+        id: u64,
+    },
+    /// `GET /healthz` — liveness probe.
+    Health,
+}
+
+/// Strict decimal session-id parse: ASCII digits only, bounded length,
+/// must round-trip (rejects overflow and `+`/`-`/whitespace forms
+/// `str::parse` would accept for other integer types).
+fn parse_id(s: &str) -> Result<u64, HttpError> {
+    if s.is_empty() || s.len() > MAX_ID_DIGITS || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(HttpError::new(404, format!("bad session id '{s}'")));
+    }
+    s.parse::<u64>().map_err(|_| HttpError::new(404, format!("session id '{s}' overflows")))
+}
+
+/// Map a parsed request line to a [`Route`]. Unknown paths are 404;
+/// known paths with the wrong method are 405.
+pub fn route(method: Method, target: &str) -> Result<Route, HttpError> {
+    // Query strings are not part of the API; reject rather than ignore.
+    if target.contains('?') {
+        return Err(HttpError::new(404, format!("no such resource '{target}'")));
+    }
+    if target == "/healthz" {
+        return match method {
+            Method::Get => Ok(Route::Health),
+            _ => Err(HttpError::new(405, "healthz supports GET only")),
+        };
+    }
+    if target == "/v1/sessions" {
+        return match method {
+            Method::Post => Ok(Route::OpenSession),
+            _ => Err(HttpError::new(405, "/v1/sessions supports POST only")),
+        };
+    }
+    if let Some(rest) = target.strip_prefix("/v1/sessions/") {
+        if let Some(id_str) = rest.strip_suffix("/segments") {
+            let id = parse_id(id_str)?;
+            return match method {
+                Method::Get => Ok(Route::NextSegment { id }),
+                _ => Err(HttpError::new(405, "segments supports GET only")),
+            };
+        }
+        let id = parse_id(rest)?;
+        return match method {
+            Method::Delete => Ok(Route::CloseSession { id }),
+            _ => Err(HttpError::new(405, "session resource supports DELETE only")),
+        };
+    }
+    Err(HttpError::new(404, format!("no such resource '{target}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_the_api_surface() {
+        assert_eq!(route(Method::Post, "/v1/sessions").unwrap(), Route::OpenSession);
+        assert_eq!(
+            route(Method::Get, "/v1/sessions/7/segments").unwrap(),
+            Route::NextSegment { id: 7 }
+        );
+        assert_eq!(route(Method::Delete, "/v1/sessions/0").unwrap(), Route::CloseSession { id: 0 });
+        assert_eq!(route(Method::Get, "/healthz").unwrap(), Route::Health);
+    }
+
+    #[test]
+    fn wrong_method_is_405() {
+        assert_eq!(route(Method::Get, "/v1/sessions").unwrap_err().status, 405);
+        assert_eq!(route(Method::Post, "/v1/sessions/3/segments").unwrap_err().status, 405);
+        assert_eq!(route(Method::Get, "/v1/sessions/3").unwrap_err().status, 405);
+        assert_eq!(route(Method::Delete, "/healthz").unwrap_err().status, 405);
+    }
+
+    #[test]
+    fn unknown_paths_are_404() {
+        for target in ["/", "/v1", "/v1/session", "/v1/sessions/", "/v2/sessions", "/healthz/x"] {
+            assert_eq!(route(Method::Get, target).unwrap_err().status, 404, "{target}");
+        }
+        assert_eq!(route(Method::Get, "/v1/sessions/3/segments?x=1").unwrap_err().status, 404);
+    }
+
+    #[test]
+    fn session_ids_parse_strictly() {
+        for bad in ["", "-1", "+1", " 3", "3 ", "0x3", "3.0", "99999999999999999999999"] {
+            let target = format!("/v1/sessions/{bad}");
+            assert_eq!(route(Method::Delete, &target).unwrap_err().status, 404, "{bad}");
+        }
+        // u64::MAX round-trips; one past it overflows.
+        let max = u64::MAX.to_string();
+        assert_eq!(
+            route(Method::Delete, &format!("/v1/sessions/{max}")).unwrap(),
+            Route::CloseSession { id: u64::MAX }
+        );
+        assert_eq!(
+            route(Method::Delete, "/v1/sessions/18446744073709551616").unwrap_err().status,
+            404
+        );
+    }
+}

@@ -1,0 +1,771 @@
+//! The HTTP serving gateway: sessions over the wire, segments streamed
+//! as accepted chunks, on top of the exact same shard engine as the
+//! in-process fleet.
+//!
+//! ## Architecture
+//!
+//! [`serve_http`] spawns the same shard workers as
+//! [`crate::coordinator::server::serve`] (literally
+//! `coordinator::server::shard_worker` — one thread per shard, each
+//! owning its replica, batcher, and job table) and then, instead of
+//! spawning one driver thread per workload entry, accepts TCP
+//! connections and lets HTTP requests drive [`SessionDriver`]s stored
+//! in a gateway table:
+//!
+//! * `POST /v1/sessions` — body is **one** session spec in the `--mix`
+//!   grammar (e.g. `lift:ts_dp@rt:40ms`); `X-TSDP-Class` /
+//!   `X-TSDP-Deadline-Ms` headers override the spec's QoS annotations.
+//!   Creates the driver (routed to its shard at open, like the
+//!   in-process path) and answers `201` with `{"id":N,"shard":S}`.
+//! * `GET /v1/sessions/{id}/segments` — steps the driver by one
+//!   segment. The response is `Transfer-Encoding: chunked`
+//!   `application/x-ndjson`: one `round` event per committed verify
+//!   round — flushed to the socket as the round clears, carrying the
+//!   partially-denoised plan — then one final `segment` event with the
+//!   served actions and digest. QoS sheds answer `429`
+//!   (deadline unmeetable) or `503` (expired) with `Retry-After`;
+//!   a session whose episodes are all done answers `204`.
+//! * `DELETE /v1/sessions/{id}` — finalizes the driver and returns its
+//!   [`SessionReport`] as JSON.
+//! * `GET /healthz` — liveness.
+//!
+//! ## Bit-identity contract
+//!
+//! Sessions are numbered in open order (0, 1, 2, …) and every seed is
+//! derived exactly as the in-process fleet derives it (same
+//! session-id-only formulas, see the `seed` expressions in
+//! `coordinator::server::serve`). Segment requests flow through the
+//! same queues into the same engine, and the streaming tap is
+//! observation-only. Opening N sessions over HTTP and serving them to
+//! completion therefore yields byte-identical
+//! [`crate::coordinator::ServeReport::session_fingerprints`] to an
+//! in-process run of the same specs on the same seed — the contract
+//! `tests/http_frontend.rs` pins.
+//!
+//! Online scheduler adaptation is rejected at startup: the HTTP path
+//! spawns no learner, so `--adapt online` would silently freeze.
+//!
+//! ## Shutdown
+//!
+//! With [`HttpOptions::max_sessions`] set, the gateway stops accepting
+//! once that many sessions have been closed, joins in-flight
+//! connections, hangs up the shard queues, and returns the merged
+//! [`ServeReport`] exactly like the in-process fleet (gateway-level
+//! per-status-code counters land in `ServerMetrics::http_status`).
+//! With `None` it serves until the process dies.
+
+use crate::config::{AdaptMode, Method};
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::qos::{QosClass, ShedReason};
+use crate::coordinator::request::{SegmentProgress, SegmentRequest};
+use crate::coordinator::router::Router;
+use crate::coordinator::server::{
+    export_obs, shard_worker, ReplicaFactory, ServeOptions, ServeReport, ShardJoin,
+};
+use crate::coordinator::session::{
+    SegmentEvent, SegmentEventKind, SessionConfig, SessionDriver, SessionReport,
+};
+use crate::coordinator::workload::WorkloadMix;
+use crate::net::chunked::{write_chunk_to, write_terminator};
+use crate::net::http::{
+    parse_request, write_chunked_head, write_error, write_response, HttpError, Request,
+};
+use crate::net::router::{route, Route};
+use crate::obs::span::{http_lane, Attrs, SpanKind, SpanSink};
+use crate::scheduler::online::PolicyStore;
+use crate::scheduler::SessionScheduler;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Idle keep-alive read timeout: a connection that sends nothing for
+/// this long is answered 408 and closed, which also bounds how long
+/// shutdown waits for parked keep-alive peers.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Headers of the streamed segment response.
+const STREAM_HEADERS: &[(&str, &str)] = &[("Content-Type", "application/x-ndjson")];
+
+/// HTTP-frontend-specific options (everything engine-side rides on
+/// [`ServeOptions`]).
+#[derive(Debug, Clone, Default)]
+pub struct HttpOptions {
+    /// Shut the server down (and return the [`ServeReport`]) after this
+    /// many sessions have been opened and closed. `None` = serve until
+    /// the process dies (the long-running daemon mode; [`serve_http`]
+    /// then never returns).
+    pub max_sessions: Option<usize>,
+}
+
+/// One session's slot in the gateway table.
+enum Slot {
+    /// Parked between requests; claimed by the next `GET …/segments`.
+    Idle(Box<SessionDriver>),
+    /// A `GET …/segments` is mid-step; concurrent claims answer 409.
+    Busy,
+}
+
+/// Mutable gateway state behind one mutex (low contention: touched at
+/// session open/claim/return/close, never per chunk).
+#[derive(Default)]
+struct GatewayState {
+    slots: HashMap<u64, Slot>,
+    reports: Vec<SessionReport>,
+    /// Sessions opened so far == the next session id (open order is the
+    /// id order, which is what aligns HTTP seeds with in-process runs).
+    opened: usize,
+    closed: usize,
+}
+
+/// Everything connection handlers share.
+struct Gateway<'a> {
+    opts: &'a ServeOptions,
+    http: &'a HttpOptions,
+    /// Per-shard request senders. Cleared at shutdown so shard workers
+    /// observe the hangup (interior mutability because scoped handler
+    /// threads still borrow the gateway at that point).
+    senders: Mutex<Vec<mpsc::SyncSender<SegmentRequest>>>,
+    router: Mutex<Router>,
+    store: Option<Arc<PolicyStore>>,
+    obs_sink: Arc<SpanSink>,
+    state: Mutex<GatewayState>,
+    stop: AtomicBool,
+    local_addr: SocketAddr,
+    /// Per-status-code response counters (folded into the fleet
+    /// metrics' `http_status` at shutdown).
+    http_status: Mutex<BTreeMap<u16, u64>>,
+}
+
+impl Gateway<'_> {
+    fn count_status(&self, status: u16) {
+        *self.http_status.lock().expect("status lock").entry(status).or_insert(0) += 1;
+    }
+
+    /// Flip the stop flag and wake the accept loop with a throwaway
+    /// self-connection (accept has no timeout; this is the portable
+    /// dependency-free wakeup).
+    fn begin_shutdown(&self) {
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            let _ = TcpStream::connect(self.local_addr);
+        }
+    }
+}
+
+/// Serve the TS-DP fleet over HTTP on an already-bound listener (bind
+/// to port 0 and read `listener.local_addr()` for tests). Blocks until
+/// [`HttpOptions::max_sessions`] sessions were served and closed — or
+/// forever when unset — then returns the same merged [`ServeReport`]
+/// as the in-process [`crate::coordinator::server::serve`], with
+/// `learner: None` and session reports sorted by id.
+pub fn serve_http(
+    listener: TcpListener,
+    make_replica: &ReplicaFactory<'_>,
+    opts: &ServeOptions,
+    http: &HttpOptions,
+) -> Result<ServeReport> {
+    anyhow::ensure!(
+        opts.adapt == AdaptMode::Frozen || opts.scheduler.is_none(),
+        "online scheduler adaptation is not supported over the HTTP frontend \
+         (no learner is spawned); serve with --adapt frozen"
+    );
+    // NOT effective_shards(): the HTTP workload is discovered
+    // dynamically, so `opts.workload` (typically empty here) must not
+    // clamp the fleet to one shard.
+    let shards = opts.shards.max(1);
+    let local_addr = listener.local_addr()?;
+
+    let mut senders = Vec::with_capacity(shards);
+    let mut receivers = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let obs_epoch = Instant::now();
+    let obs_sink = Arc::new(SpanSink::new(
+        obs_epoch,
+        opts.obs.effective_ring_cap(),
+        opts.obs.tracing(),
+    ));
+    let gw = Gateway {
+        opts,
+        http,
+        senders: Mutex::new(senders),
+        router: Mutex::new(Router::new(shards)),
+        store: opts.scheduler.clone().map(|p| Arc::new(PolicyStore::new(p))),
+        obs_sink: obs_sink.clone(),
+        state: Mutex::new(GatewayState::default()),
+        stop: AtomicBool::new(false),
+        local_addr,
+        http_status: Mutex::new(BTreeMap::new()),
+    };
+
+    let (shard_metrics, shard_recs, flight_samples, mut reports) =
+        std::thread::scope(|scope| -> Result<_> {
+            // Same readiness barrier as the in-process fleet: accept no
+            // traffic until every replica attempt resolved.
+            let (ready_tx, ready_rx) = mpsc::channel::<()>();
+            let mut workers = Vec::with_capacity(shards);
+            for (shard, rx) in receivers.into_iter().enumerate() {
+                let ready = ready_tx.clone();
+                let opts_ref = opts;
+                // Wave-formation hint: sessions arrive dynamically, so
+                // up to max_batch of them can share a first wave.
+                workers.push(scope.spawn(move || -> ShardJoin {
+                    shard_worker(
+                        make_replica,
+                        shard,
+                        rx,
+                        opts_ref.max_batch.max(1),
+                        opts_ref,
+                        obs_epoch,
+                        Some(ready),
+                    )
+                }));
+            }
+            drop(ready_tx);
+            for _ in 0..shards {
+                if ready_rx.recv().is_err() {
+                    break;
+                }
+            }
+
+            // Accept loop: one scoped handler thread per connection.
+            let gw_ref = &gw;
+            let mut handlers = Vec::new();
+            let mut conn_id = 0usize;
+            for stream in listener.incoming() {
+                if gw_ref.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let id = conn_id;
+                conn_id += 1;
+                handlers.retain(|h: &std::thread::ScopedJoinHandle<'_, ()>| !h.is_finished());
+                handlers.push(scope.spawn(move || handle_connection(gw_ref, stream, id)));
+            }
+
+            // Shutdown: finish in-flight exchanges, drop any leaked
+            // (never-closed) drivers so their queue senders release,
+            // then hang up the shard queues and join the workers.
+            for h in handlers {
+                let _ = h.join();
+            }
+            gw.state.lock().expect("state lock").slots.clear();
+            gw.senders.lock().expect("senders lock").clear();
+
+            let mut shard_metrics = Vec::with_capacity(shards);
+            let mut shard_recs = Vec::with_capacity(shards);
+            let mut flight_samples = Vec::new();
+            let mut shard_err: Option<anyhow::Error> = None;
+            for (shard, h) in workers.into_iter().enumerate() {
+                match h.join() {
+                    Ok((metrics, rec, samples, result)) => {
+                        shard_metrics.push(metrics);
+                        shard_recs.push(rec);
+                        flight_samples.extend(samples);
+                        if let Err(e) = result {
+                            if shard_err.is_none() {
+                                shard_err = Some(e);
+                            }
+                        }
+                    }
+                    Err(payload) => {
+                        if shard_err.is_none() {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "<non-string panic payload>".into());
+                            shard_err = Some(anyhow!("shard {shard} panicked: {msg}"));
+                        }
+                    }
+                }
+            }
+            if let Some(e) = shard_err {
+                return Err(e);
+            }
+            let reports = std::mem::take(&mut gw.state.lock().expect("state lock").reports);
+            Ok((shard_metrics, shard_recs, flight_samples, reports))
+        })?;
+
+    reports.sort_by_key(|r| r.session);
+    let mut metrics = ServerMetrics::merge_fleet(&shard_metrics);
+    for (&status, &n) in gw.http_status.lock().expect("status lock").iter() {
+        *metrics.http_status.entry(status).or_insert(0) += n;
+    }
+    let obs = export_obs(opts, shards, &obs_sink, &shard_recs, flight_samples, &mut metrics)?;
+    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner: None, obs })
+}
+
+/// One connection's keep-alive loop: parse → route → handle → repeat
+/// until the peer closes, errors, or asks to close.
+fn handle_connection(gw: &Gateway<'_>, stream: TcpStream, conn: usize) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if gw.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // The parse span covers request read time (including the wait
+        // for its first byte on a keep-alive connection).
+        let t_parse = gw.obs_sink.start();
+        let req = match parse_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return,
+            Err(err) => {
+                gw.count_status(err.status);
+                let _ = write_error(&mut writer, &err);
+                return;
+            }
+        };
+        gw.obs_sink.record(
+            SpanKind::HttpParse,
+            t_parse,
+            Attrs { lane: http_lane(conn), ..Attrs::NONE },
+        );
+        let close = req.wants_close();
+        let t_write = gw.obs_sink.start();
+        let outcome = handle_request(gw, &req, &mut writer);
+        gw.obs_sink.record(
+            SpanKind::HttpWrite,
+            t_write,
+            Attrs { lane: http_lane(conn), ..Attrs::NONE },
+        );
+        match outcome {
+            Ok(status) => gw.count_status(status),
+            // The socket died mid-response; nothing more can be said.
+            Err(_) => return,
+        }
+        if close {
+            return;
+        }
+    }
+}
+
+/// Dispatch one parsed request. Returns the response status (counted by
+/// the caller) or the I/O error that killed the connection.
+fn handle_request(gw: &Gateway<'_>, req: &Request, w: &mut TcpStream) -> std::io::Result<u16> {
+    match route(req.method, &req.target) {
+        Ok(Route::Health) => {
+            write_response(w, 200, &[("Content-Type", "text/plain")], b"ok")?;
+            Ok(200)
+        }
+        Ok(Route::OpenSession) => open_session(gw, req, w),
+        Ok(Route::NextSegment { id }) => next_segment(gw, id, w),
+        Ok(Route::CloseSession { id }) => close_session(gw, id, w),
+        Err(err) => respond_error(w, &err),
+    }
+}
+
+/// Answer an [`HttpError`] without closing the connection (routing and
+/// handler-level rejections are per-request; only *parse* failures
+/// poison the stream).
+fn respond_error(w: &mut TcpStream, err: &HttpError) -> std::io::Result<u16> {
+    write_response(w, err.status, &[("Content-Type", "text/plain")], err.msg.as_bytes())?;
+    Ok(err.status)
+}
+
+fn respond_json(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<u16> {
+    write_response(w, status, &[("Content-Type", "application/json")], body.as_bytes())?;
+    Ok(status)
+}
+
+// ---------------------------------------------------------------------
+// POST /v1/sessions
+// ---------------------------------------------------------------------
+
+fn open_session(gw: &Gateway<'_>, req: &Request, w: &mut TcpStream) -> std::io::Result<u16> {
+    match try_open(gw, req) {
+        Ok((id, shard)) => {
+            let body = Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("shard", Json::Num(shard as f64)),
+            ])
+            .to_string();
+            respond_json(w, 201, &body)
+        }
+        Err(err) => respond_error(w, &err),
+    }
+}
+
+/// Parse the spec, apply header overrides, assign the next session id
+/// and shard, and park a fresh driver in the table.
+fn try_open(gw: &Gateway<'_>, req: &Request) -> Result<(u64, usize), HttpError> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| HttpError::new(400, "session spec must be UTF-8"))?;
+    let specs = WorkloadMix::parse(text.trim())
+        .map_err(|e| HttpError::new(400, format!("bad session spec: {e:#}")))?
+        .build();
+    if specs.len() != 1 {
+        return Err(HttpError::new(
+            400,
+            format!("expected exactly one session spec, got {}", specs.len()),
+        ));
+    }
+    let mut spec = specs[0];
+    if let Some(class) = req.header("x-tsdp-class") {
+        spec.qos = QosClass::parse(class)
+            .ok_or_else(|| HttpError::new(400, format!("unknown QoS class '{class}'")))?;
+    }
+    if let Some(dl) = req.header("x-tsdp-deadline-ms") {
+        let ms: u64 = dl
+            .parse()
+            .map_err(|_| HttpError::new(400, format!("bad deadline '{dl}' (integer ms)")))?;
+        if ms == 0 {
+            return Err(HttpError::new(400, "deadline must be positive"));
+        }
+        spec.deadline_ms = Some(ms);
+    }
+
+    let mut state = gw.state.lock().expect("state lock");
+    if let Some(max) = gw.http.max_sessions {
+        if state.opened >= max {
+            return Err(HttpError::new(503, format!("session limit {max} reached")));
+        }
+    }
+    let s = state.opened;
+    let shard = gw.router.lock().expect("router lock").assign(s);
+    // The scheduler handle and every seed below MUST match the formulas
+    // in coordinator::server::serve exactly — they are what makes an
+    // HTTP fleet bit-identical to an in-process fleet of the same specs
+    // in the same open order.
+    let adaptive = if spec.method == Method::TsDp {
+        gw.store.as_ref().map(|st| SessionScheduler {
+            store: st.clone(),
+            mode: gw.opts.adapt,
+            sink: None,
+            explore_seed: gw.opts.seed ^ ((s as u64 + 1) << 40) ^ 0x9e37_79b9,
+        })
+    } else {
+        None
+    };
+    let cfg = SessionConfig {
+        session: s,
+        spec,
+        shard,
+        seed: gw.opts.seed ^ ((s as u64 + 1) << 32),
+        adaptive,
+        obs: Some(gw.obs_sink.clone()),
+    };
+    let tx = gw.senders.lock().expect("senders lock")[shard].clone();
+    state.slots.insert(s as u64, Slot::Idle(Box::new(SessionDriver::new(cfg, tx))));
+    state.opened += 1;
+    Ok((s as u64, shard))
+}
+
+// ---------------------------------------------------------------------
+// GET /v1/sessions/{id}/segments
+// ---------------------------------------------------------------------
+
+/// Claim the session's driver (marking the slot busy) or explain why
+/// not.
+fn claim(gw: &Gateway<'_>, id: u64) -> Result<Box<SessionDriver>, HttpError> {
+    let mut state = gw.state.lock().expect("state lock");
+    let slot = state
+        .slots
+        .get_mut(&id)
+        .ok_or_else(|| HttpError::new(404, format!("no session {id}")))?;
+    if matches!(slot, Slot::Busy) {
+        return Err(HttpError::new(409, format!("session {id} is busy serving a segment")));
+    }
+    match std::mem::replace(slot, Slot::Busy) {
+        Slot::Idle(driver) => Ok(driver),
+        Slot::Busy => unreachable!("checked above"),
+    }
+}
+
+/// One `round` event as an NDJSON line. Plan floats travel as their u32
+/// bit patterns (exact — every u32 is exactly representable as the f64
+/// our JSON numbers are).
+fn round_json(p: &SegmentProgress) -> String {
+    let mut line = Json::obj(vec![
+        ("event", Json::Str("round".into())),
+        ("round", Json::Num(p.round as f64)),
+        ("drafts", Json::Num(p.drafts as f64)),
+        ("accepted", Json::Num(p.accepted as f64)),
+        ("committed", Json::Num(p.committed as f64)),
+        ("t_remaining", Json::Num(p.t_remaining as f64)),
+        ("plan_bits", Json::nums(p.plan.iter().map(|x| x.to_bits() as f64))),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// The final `segment` event of a served step (digests are u64, which
+/// f64 JSON numbers cannot carry — they travel as 16-hex-digit
+/// strings).
+fn served_json(ev: &SegmentEvent) -> String {
+    let SegmentEventKind::Served { actions, digest, nfe, drafts, accepted, latency_secs } =
+        &ev.kind
+    else {
+        unreachable!("served_json on a non-served event")
+    };
+    let mut line = Json::obj(vec![
+        ("event", Json::Str("segment".into())),
+        ("episode", Json::Num(ev.episode as f64)),
+        ("segment", Json::Num(ev.segment as f64)),
+        ("digest", Json::Str(format!("{digest:016x}"))),
+        ("nfe", Json::Num(*nfe)),
+        ("drafts", Json::Num(*drafts as f64)),
+        ("accepted", Json::Num(*accepted as f64)),
+        ("latency_ms", Json::Num(latency_secs * 1_000.0)),
+        ("actions_bits", Json::nums(actions.iter().map(|x| x.to_bits() as f64))),
+    ])
+    .to_string();
+    line.push('\n');
+    line
+}
+
+/// `Retry-After` is whole seconds by spec; round the millisecond hint
+/// up so "retry after" is never an undershoot.
+fn retry_after_secs(ms: u64) -> u64 {
+    ms.div_ceil(1_000).max(1)
+}
+
+/// Stream one `round` chunk, writing the lazy 200 + chunked head first
+/// if this is the segment's first event.
+fn send_round(w: &mut TcpStream, headers_sent: &mut bool, line: &str) -> std::io::Result<()> {
+    if !*headers_sent {
+        write_chunked_head(w, 200, STREAM_HEADERS)?;
+        *headers_sent = true;
+    }
+    write_chunk_to(w, line.as_bytes())
+}
+
+fn next_segment(gw: &Gateway<'_>, id: u64, w: &mut TcpStream) -> std::io::Result<u16> {
+    let mut driver = match claim(gw, id) {
+        Ok(d) => d,
+        Err(e) => return respond_error(w, &e),
+    };
+    // Step the driver on a helper thread while this thread pumps its
+    // progress events onto the wire: each committed verify round is one
+    // chunk, flushed as it clears. The 200 + chunked head is written
+    // lazily on the first event, so shed/done outcomes (which produce
+    // no events) still get their proper status line.
+    let (ptx, prx) = mpsc::channel::<SegmentProgress>();
+    let mut headers_sent = false;
+    let mut io_err: Option<std::io::Error> = None;
+    let stepped: Result<Option<SegmentEvent>> = std::thread::scope(|scope| {
+        let dref: &mut SessionDriver = &mut driver;
+        let h = scope.spawn(move || dref.step(Some(ptx)));
+        for p in prx.iter() {
+            if io_err.is_some() {
+                continue; // keep draining so the engine's sends stay cheap
+            }
+            if let Err(e) = send_round(w, &mut headers_sent, &round_json(&p)) {
+                io_err = Some(e);
+            }
+        }
+        match h.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("session {id} driver panicked")),
+        }
+    });
+    // Park the driver again before answering — whatever happened, the
+    // session stays claimable (a DELETE can still fetch its report).
+    gw.state.lock().expect("state lock").slots.insert(id, Slot::Idle(driver));
+
+    match stepped {
+        Err(e) => {
+            if headers_sent {
+                // Mid-stream failure: the only honest signal left is an
+                // aborted (unterminated) body.
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    format!("segment step failed: {e:#}"),
+                ));
+            }
+            respond_error(w, &HttpError::new(500, format!("segment step failed: {e:#}")))
+        }
+        // Every episode already served — no more segments.
+        Ok(None) => {
+            write_response(w, 204, &[], b"")?;
+            Ok(204)
+        }
+        Ok(Some(ev)) => match &ev.kind {
+            SegmentEventKind::Shed { reason, retry_after_ms } => {
+                // Sheds are decided at admission, before any verify
+                // round — no chunk was streamed, so the status line is
+                // still ours to write.
+                debug_assert!(!headers_sent, "shed after streamed rounds");
+                let status = match reason {
+                    ShedReason::DeadlineUnmeetable => 429,
+                    ShedReason::Expired => 503,
+                };
+                let ms = retry_after_ms.unwrap_or(1);
+                let body = Json::obj(vec![
+                    ("event", Json::Str("shed".into())),
+                    ("reason", Json::Str(reason.name().into())),
+                    ("retry_after_ms", Json::Num(ms as f64)),
+                ])
+                .to_string();
+                write_response(
+                    w,
+                    status,
+                    &[
+                        ("Content-Type", "application/json"),
+                        ("Retry-After", &retry_after_secs(ms).to_string()),
+                        ("X-TSDP-Retry-After-Ms", &ms.to_string()),
+                    ],
+                    body.as_bytes(),
+                )?;
+                Ok(status)
+            }
+            SegmentEventKind::Served { .. } => {
+                if let Some(e) = io_err {
+                    return Err(e);
+                }
+                if !headers_sent {
+                    // Baseline methods stream no rounds; the whole
+                    // response is the final event.
+                    write_chunked_head(w, 200, STREAM_HEADERS)?;
+                }
+                write_chunk_to(w, served_json(&ev).as_bytes())?;
+                write_terminator(w)?;
+                Ok(200)
+            }
+        },
+    }
+}
+
+// ---------------------------------------------------------------------
+// DELETE /v1/sessions/{id}
+// ---------------------------------------------------------------------
+
+/// A [`SessionReport`] as JSON (digests as 16-hex-digit strings — u64
+/// does not fit an f64 JSON number).
+fn report_json(r: &SessionReport) -> Json {
+    Json::obj(vec![
+        ("session", Json::Num(r.session as f64)),
+        ("task", Json::Str(r.task.name().into())),
+        ("style", Json::Str(r.style.name().into())),
+        ("method", Json::Str(r.method.name().into())),
+        ("shard", Json::Num(r.shard as f64)),
+        ("episodes", Json::Num(r.episodes as f64)),
+        ("successes", Json::Num(r.successes as f64)),
+        ("mean_score", Json::Num(r.mean_score)),
+        ("segments", Json::Num(r.segments as f64)),
+        ("mean_latency", Json::Num(r.mean_latency)),
+        ("nfe", Json::Num(r.nfe)),
+        ("sheds", Json::Num(r.sheds as f64)),
+        (
+            "segment_digests",
+            Json::Arr(r.segment_digests.iter().map(|d| Json::Str(format!("{d:016x}"))).collect()),
+        ),
+    ])
+}
+
+fn close_session(gw: &Gateway<'_>, id: u64, w: &mut TcpStream) -> std::io::Result<u16> {
+    let driver = {
+        let mut state = gw.state.lock().expect("state lock");
+        match state.slots.get(&id) {
+            None => {
+                drop(state);
+                return respond_error(w, &HttpError::new(404, format!("no session {id}")));
+            }
+            Some(Slot::Busy) => {
+                drop(state);
+                return respond_error(
+                    w,
+                    &HttpError::new(409, format!("session {id} is busy serving a segment")),
+                );
+            }
+            Some(Slot::Idle(_)) => {}
+        }
+        match state.slots.remove(&id) {
+            Some(Slot::Idle(driver)) => driver,
+            _ => unreachable!("checked above"),
+        }
+    };
+    let report = driver.finish();
+    let body = report_json(&report).to_string();
+    let all_served = {
+        let mut state = gw.state.lock().expect("state lock");
+        state.reports.push(report);
+        state.closed += 1;
+        gw.http.max_sessions.is_some_and(|max| state.closed >= max)
+    };
+    if all_served {
+        gw.begin_shutdown();
+    }
+    respond_json(w, 200, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_reasons_map_to_the_documented_statuses() {
+        // The mapping is part of the wire API; pin it where it lives.
+        let status = |r: ShedReason| match r {
+            ShedReason::DeadlineUnmeetable => 429u16,
+            ShedReason::Expired => 503,
+        };
+        assert_eq!(status(ShedReason::DeadlineUnmeetable), 429);
+        assert_eq!(status(ShedReason::Expired), 503);
+    }
+
+    #[test]
+    fn retry_after_rounds_up_to_whole_seconds() {
+        assert_eq!(retry_after_secs(1), 1);
+        assert_eq!(retry_after_secs(999), 1);
+        assert_eq!(retry_after_secs(1_000), 1);
+        assert_eq!(retry_after_secs(1_001), 2);
+        assert_eq!(retry_after_secs(40), 1);
+    }
+
+    #[test]
+    fn round_and_report_json_are_parseable_and_exact() {
+        let p = SegmentProgress {
+            round: 2,
+            drafts: 8,
+            accepted: 6,
+            committed: 7,
+            t_remaining: 1,
+            plan: vec![1.5, -0.25, f32::MIN_POSITIVE],
+        };
+        let line = round_json(&p);
+        assert!(line.ends_with('\n'));
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.get("event").unwrap().as_str().unwrap(), "round");
+        assert_eq!(doc.get("t_remaining").unwrap().as_usize().unwrap(), 1);
+        let bits = doc.get("plan_bits").unwrap().as_arr().unwrap();
+        let back: Vec<f32> = bits
+            .iter()
+            .map(|b| f32::from_bits(b.as_f64().unwrap() as u32))
+            .collect();
+        assert_eq!(back, p.plan, "bit-pattern round trip must be exact");
+
+        let report = SessionReport {
+            session: 3,
+            task: crate::config::Task::Lift,
+            style: crate::config::DemoStyle::Ph,
+            method: Method::TsDp,
+            shard: 1,
+            episodes: 1,
+            successes: 1,
+            mean_score: 0.5,
+            segments: 2,
+            mean_latency: 0.01,
+            nfe: 24.0,
+            sheds: 0,
+            segment_digests: vec![u64::MAX, 0x1234],
+        };
+        let doc = report_json(&report);
+        let digests = doc.get("segment_digests").unwrap().as_arr().unwrap();
+        assert_eq!(digests[0].as_str().unwrap(), "ffffffffffffffff");
+        assert_eq!(digests[1].as_str().unwrap(), "0000000000001234");
+        assert_eq!(doc.get("task").unwrap().as_str().unwrap(), "lift");
+    }
+}

@@ -49,12 +49,24 @@ pub fn session_lane(session: usize) -> u32 {
 /// Lane of the background PPO learner thread.
 pub const LEARNER_LANE: u32 = 60_000;
 
+/// First lane of the HTTP frontend's connection handlers.
+pub const HTTP_LANE_BASE: u32 = 50_000;
+
+/// Lane of HTTP connection handler `conn` (connections are numbered in
+/// accept order by the frontend).
+pub fn http_lane(conn: usize) -> u32 {
+    HTTP_LANE_BASE + (conn as u32 % (LEARNER_LANE - HTTP_LANE_BASE))
+}
+
 /// Human-readable lane name for trace thread metadata.
 pub fn lane_name(lane: u32) -> String {
     match lane {
         LEARNER_LANE => "learner".to_string(),
         l if l < 1_000 => format!("shard {l}"),
         l if l < 2_000 => format!("shard {} queue", l - 1_000),
+        l if (HTTP_LANE_BASE..LEARNER_LANE).contains(&l) => {
+            format!("http conn {}", l - HTTP_LANE_BASE)
+        }
         l => format!("session {}", l - 2_000),
     }
 }
@@ -84,11 +96,18 @@ pub enum SpanKind {
     SchedulerDecision,
     /// One PPO epoch on the background learner thread.
     LearnerEpoch,
+    /// HTTP request parse on a frontend connection handler (read +
+    /// validate the request line, headers, and body).
+    HttpParse,
+    /// HTTP response write on a frontend connection handler (headers
+    /// through final byte — for streamed segments this spans every
+    /// flushed chunk, so wire overhead shows up in stage attribution).
+    HttpWrite,
 }
 
 impl SpanKind {
     /// Every kind, export order.
-    pub const ALL: [SpanKind; 9] = [
+    pub const ALL: [SpanKind; 11] = [
         SpanKind::QueueWait,
         SpanKind::Admission,
         SpanKind::DraftWave,
@@ -98,6 +117,8 @@ impl SpanKind {
         SpanKind::Finalize,
         SpanKind::SchedulerDecision,
         SpanKind::LearnerEpoch,
+        SpanKind::HttpParse,
+        SpanKind::HttpWrite,
     ];
 
     /// Stable snake_case name (trace events, attribution tables).
@@ -112,6 +133,8 @@ impl SpanKind {
             SpanKind::Finalize => "finalize",
             SpanKind::SchedulerDecision => "scheduler",
             SpanKind::LearnerEpoch => "learner_epoch",
+            SpanKind::HttpParse => "http_parse",
+            SpanKind::HttpWrite => "http_write",
         }
     }
 
@@ -481,5 +504,19 @@ mod tests {
         assert_eq!(lane_name(queue_lane(0)), "shard 0 queue");
         assert_eq!(lane_name(session_lane(5)), "session 5");
         assert_eq!(lane_name(LEARNER_LANE), "learner");
+        assert_eq!(lane_name(http_lane(3)), "http conn 3");
+    }
+
+    #[test]
+    fn every_kind_is_listed_and_named() {
+        // kind_index relies on ALL being exhaustive; a variant missing
+        // from ALL would panic the recorder on first use.
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(kind_index(*k), i);
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::HttpParse.name(), "http_parse");
+        assert_eq!(SpanKind::HttpWrite.name(), "http_write");
+        assert!(!SpanKind::HttpParse.overlaps());
     }
 }

@@ -142,6 +142,14 @@ impl<'s> SegmentJob<'s> {
         self.t
     }
 
+    /// The in-progress plan latent (flat HORIZON×ACT_DIM), partially
+    /// denoised to level [`Self::t`]. Read-only: streamed to clients
+    /// after each committed round as an anytime plan (Real-Time
+    /// Iteration style), becoming the finished segment at t = 0.
+    pub fn plan(&self) -> &[f32] {
+        &self.x
+    }
+
     /// Conditioning vector (one per request; the fused verify concatenates
     /// these across jobs).
     pub fn cond(&self) -> &[f32] {

@@ -1,0 +1,352 @@
+//! End-to-end tests for the HTTP/1.1 serving frontend.
+//!
+//! Four contracts, matching the frontend's design:
+//!
+//! 1. **Bit-identity**: a workload served through `POST/GET/DELETE
+//!    /v1/sessions` produces the exact same per-session segment digests
+//!    and NFE as the same workload served in-process on the same seed —
+//!    the HTTP layer is observation and transport only.
+//! 2. **QoS over the wire**: deadline sheds surface as `429`
+//!    (unmeetable) / `503` (expired) with `Retry-After` and
+//!    `X-TSDP-Retry-After-Ms`, and a shed session still terminates and
+//!    reports cleanly.
+//! 3. **Hostile input**: a corpus of malformed requests each gets a
+//!    4xx answer, never a panic, and the server keeps serving
+//!    afterwards (per-status counters land in the fleet metrics).
+//! 4. **Parser properties**: seeded random fuzz over the request parser
+//!    (never panics, errors stay in the documented status range) and
+//!    chunked-framing round-trips.
+//!
+//! Runs entirely against the analytic `MockDenoiser` (no artifacts).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+use ts_dp::coordinator::qos::QosConfig;
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::WorkloadMix;
+use ts_dp::net::{run_closed_loop, serve_http, Client, HttpOptions, SegmentFetch};
+use ts_dp::policy::mock::MockDenoiser;
+use ts_dp::policy::Denoiser;
+use ts_dp::runtime::NfeCounter;
+use ts_dp::util::testing::check_property;
+use ts_dp::util::Rng;
+
+fn base_opts(seed: u64) -> ServeOptions {
+    ServeOptions {
+        workload: Vec::new(),
+        shards: 1,
+        queue_capacity: 64,
+        seed,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        ..ServeOptions::default()
+    }
+}
+
+/// Bind on an ephemeral port and run the gateway on a background
+/// thread; returns the address and the join handle for the final
+/// report.
+fn spawn_server<F, D>(
+    opts: ServeOptions,
+    max_sessions: usize,
+    make: F,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<ServeReport>>)
+where
+    F: Fn(usize) -> D + Sync + Send + 'static,
+    D: Denoiser + 'static,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || {
+        serve_http(
+            listener,
+            &|shard| Ok(Box::new(make(shard)) as Box<dyn Denoiser>),
+            &opts,
+            &HttpOptions { max_sessions: Some(max_sessions) },
+        )
+    });
+    (addr, handle)
+}
+
+#[test]
+fn http_sessions_are_bit_identical_to_in_process() {
+    const MIX: &str = "lift:ts_dp*2";
+    const SEED: u64 = 77;
+
+    // In-process reference fleet: same specs, same seed, one shard.
+    let mut in_proc_opts = base_opts(SEED);
+    in_proc_opts.workload = WorkloadMix::parse(MIX).unwrap().build();
+    let reference = serve_with(|_| MockDenoiser::with_bias(0.05), &in_proc_opts).unwrap();
+
+    // HTTP fleet: the same two sessions opened over the wire in the
+    // same order, driven by the closed-loop client (which already
+    // cross-checks streamed digests against each close report).
+    let (addr, server) = spawn_server(base_opts(SEED), 2, |_| MockDenoiser::with_bias(0.05));
+    let client_report = run_closed_loop(&addr.to_string(), MIX).expect("closed loop");
+    let http = server.join().expect("server thread").expect("serve_http");
+
+    assert_eq!(client_report.sessions, 2);
+    assert!(
+        client_report.rounds >= client_report.segments,
+        "ts_dp segments must stream at least one verify-round chunk each \
+         ({} rounds over {} segments)",
+        client_report.rounds,
+        client_report.segments
+    );
+    assert_eq!(client_report.sheds, 0, "no QoS configured, nothing may shed");
+
+    // The tentpole contract: fingerprints (per-session digests + NFE)
+    // are byte-identical across the two transports.
+    assert_eq!(
+        http.session_fingerprints(),
+        reference.session_fingerprints(),
+        "HTTP serving must be bit-identical to in-process serving"
+    );
+
+    // And the digests the client saw on the wire are the same bits.
+    for (id, digests) in &client_report.digests {
+        let session = &http.sessions[*id as usize];
+        assert_eq!(&session.segment_digests, digests, "session {id} wire digests");
+    }
+}
+
+/// A denoiser whose target calls take real wall time, making tight
+/// deadlines physically unmeetable (bits unchanged — only latency).
+struct SleepyDenoiser {
+    inner: MockDenoiser,
+    delay: Duration,
+}
+
+impl Denoiser for SleepyDenoiser {
+    fn encode(&self, obs: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.encode(obs)
+    }
+    fn target_step(&self, x: &[f32], t: usize, cond: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.target_step(x, t, cond)
+    }
+    fn target_verify(&self, xs: &[f32], ts: &[f32], cond: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.target_verify(xs, ts, cond)
+    }
+    fn drafter_step(&self, x: &[f32], t: usize, cond: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.drafter_step(x, t, cond)
+    }
+    fn nfe(&self) -> &NfeCounter {
+        self.inner.nfe()
+    }
+}
+
+#[test]
+fn qos_sheds_surface_as_429_or_503_with_retry_after() {
+    let mut opts = base_opts(11);
+    opts.qos = QosConfig { enabled: true, ..QosConfig::default() };
+    let (addr, server) = spawn_server(opts, 1, |_| SleepyDenoiser {
+        inner: MockDenoiser::with_bias(0.05),
+        delay: Duration::from_millis(5),
+    });
+
+    // A realtime session whose 2ms deadline the sleepy denoiser cannot
+    // meet: the first segment seeds the shard's service estimate, after
+    // which admission sheds (DeadlineUnmeetable→429); queue-expired
+    // sheds (503) can also occur. Every shed must carry Retry-After.
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+    let id = client.open_session("lift:ts_dp@rt:2ms", None, None).expect("open");
+    let mut sheds: Vec<(u16, u64)> = Vec::new();
+    let mut served = 0usize;
+    loop {
+        match client.next_segment(id, &mut |_| {}).expect("next segment") {
+            SegmentFetch::Served { .. } => served += 1,
+            SegmentFetch::Shed { status, retry_after_ms } => {
+                sheds.push((status, retry_after_ms))
+            }
+            SegmentFetch::Done => break,
+        }
+    }
+    let report = client.close_session(id).expect("close");
+    server.join().expect("server thread").expect("serve_http");
+
+    assert!(
+        !sheds.is_empty(),
+        "a 2ms realtime deadline against a 5ms-per-step denoiser must shed \
+         (served {served} segments, shed none)"
+    );
+    for (status, retry_after_ms) in &sheds {
+        assert!(
+            *status == 429 || *status == 503,
+            "sheds must map to 429 (unmeetable) or 503 (expired), got {status}"
+        );
+        assert!(*retry_after_ms >= 1, "Retry-After hint must be positive");
+    }
+    // The shed session still terminated and reported cleanly, with the
+    // shed count visible in its close report.
+    assert_eq!(report.get("sheds").unwrap().as_usize().unwrap(), sheds.len());
+    assert_eq!(
+        report.get("segment_digests").unwrap().as_arr().unwrap().len(),
+        served,
+        "shed segments contribute no digest"
+    );
+}
+
+/// Write raw bytes at the server and return the status code of the
+/// first response line (the malformed-request path).
+fn raw_status(addr: SocketAddr, payload: &[u8]) -> u16 {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    stream.write_all(payload).expect("write");
+    stream.flush().ok();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read status line");
+    let code = line.split(' ').nth(1).unwrap_or_else(|| panic!("bad status line '{line}'"));
+    code.parse().unwrap_or_else(|_| panic!("bad status code in '{line}'"))
+}
+
+#[test]
+fn malformed_request_corpus_gets_4xx_and_server_survives() {
+    let (addr, server) = spawn_server(base_opts(3), 1, |_| MockDenoiser::with_bias(0.05));
+
+    let long_target = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(8192));
+    let long_header = format!("GET /healthz HTTP/1.1\r\nX-A: {}\r\n\r\n", "b".repeat(8192));
+    let corpus: Vec<(&[u8], u16)> = vec![
+        (long_target.as_bytes(), 414),
+        (long_header.as_bytes(), 431),
+        (b"PATCH /v1/sessions HTTP/1.1\r\n\r\n", 405),
+        (b"GET /v1/sessions HTTP/1.1\r\n\r\n", 405),
+        (b"complete garbage\r\n\r\n", 400),
+        (b"GET / HTTP/2.0\r\n\r\n", 400),
+        (b"GET /nope HTTP/1.1\r\n\r\n", 404),
+        (b"GET /v1/sessions/abc/segments HTTP/1.1\r\n\r\n", 404),
+        (b"DELETE /v1/sessions/999 HTTP/1.1\r\n\r\n", 404),
+        (b"GET /v1/sessions/3/segments?x=1 HTTP/1.1\r\n\r\n", 404),
+        (b"POST /v1/sessions HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n", 413),
+        (b"POST /v1/sessions HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n", 400),
+        (b"POST /v1/sessions HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n", 501),
+        (b"POST /v1/sessions HTTP/1.1\r\nContent-Length: 9\r\n\r\nnot a mix", 400),
+        (b"POST /v1/sessions HTTP/1.1\r\nContent-Length: 12\r\n\r\nlift:ts_dp*2", 400),
+    ];
+    for (payload, want) in &corpus {
+        let got = raw_status(addr, payload);
+        assert_eq!(
+            got,
+            *want,
+            "corpus entry {:?}",
+            String::from_utf8_lossy(&payload[..payload.len().min(60)])
+        );
+    }
+
+    // The server survived the whole corpus and still serves: health
+    // answers, and a real session runs end-to-end.
+    let mut client = Client::connect(&addr.to_string()).expect("connect after corpus");
+    assert!(client.health().expect("healthz"), "server must stay healthy after the corpus");
+    drop(client);
+    let load = run_closed_loop(&addr.to_string(), "lift:ts_dp").expect("session after corpus");
+    assert_eq!(load.sessions, 1);
+
+    let report = server.join().expect("server thread").expect("serve_http");
+    assert_eq!(report.sessions.len(), 1);
+    // Gateway-level per-status counters reached the fleet metrics.
+    for status in [400u16, 404, 405, 413, 414, 431, 201, 200, 204] {
+        assert!(
+            report.metrics.http_status.contains_key(&status),
+            "http_status must count {status}: {:?}",
+            report.metrics.http_status
+        );
+    }
+}
+
+#[test]
+fn prop_parser_never_panics_on_fuzzed_input() {
+    use ts_dp::net::parse_request;
+    let methods = ["GET", "POST", "DELETE", "PATCH", "get", "", "P@TCH", "OPTIONS"];
+    let targets = ["/", "/v1/sessions", "/v1/sessions/0/segments", "nope", "/a?b=c", ""];
+    let versions = ["HTTP/1.1", "HTTP/1.0", "HTTP/2.0", "SPDY", ""];
+    check_property("http_parser_fuzz", 300, |rng: &mut Rng| {
+        // Half the cases are pure byte noise; half are structured
+        // near-misses (valid-ish lines with random mutations), which
+        // reach deeper into the parser.
+        let mut payload: Vec<u8> = if rng.below(2) == 0 {
+            let n = rng.below(512);
+            (0..n).map(|_| rng.below(256) as u8).collect()
+        } else {
+            let mut s = format!(
+                "{} {} {}\r\n",
+                methods[rng.below(methods.len())],
+                targets[rng.below(targets.len())],
+                versions[rng.below(versions.len())]
+            );
+            for _ in 0..rng.below(5) {
+                s.push_str(&format!("X-H{}: {}\r\n", rng.below(10), "v".repeat(rng.below(64))));
+            }
+            if rng.below(2) == 0 {
+                s.push_str(&format!("Content-Length: {}\r\n", rng.below(1 << 30)));
+            }
+            if rng.below(4) == 0 {
+                s.push_str("Transfer-Encoding: chunked\r\n");
+            }
+            s.push_str("\r\n");
+            let mut bytes = s.into_bytes();
+            // Random mutations: truncate and/or flip bytes.
+            if rng.below(2) == 0 {
+                bytes.truncate(rng.below(bytes.len() + 1));
+            }
+            for _ in 0..rng.below(4) {
+                if !bytes.is_empty() {
+                    let i = rng.below(bytes.len());
+                    bytes[i] = rng.below(256) as u8;
+                }
+            }
+            bytes
+        };
+        // Some trailing body noise.
+        for _ in 0..rng.below(64) {
+            payload.push(rng.below(256) as u8);
+        }
+        match parse_request(&mut BufReader::new(payload.as_slice())) {
+            Ok(_) => {}
+            Err(e) => assert!(
+                (400..=501).contains(&e.status),
+                "parser error status {} outside the documented range",
+                e.status
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_framing_roundtrips() {
+    use ts_dp::net::{read_chunked, read_chunked_stream, ChunkedWriter};
+    check_property("chunked_roundtrip", 100, |rng: &mut Rng| {
+        let n_chunks = rng.below(8);
+        let chunks: Vec<Vec<u8>> = (0..n_chunks)
+            .map(|_| (0..rng.below(200)).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let mut wire = Vec::new();
+        let mut w = ChunkedWriter::new(&mut wire);
+        for c in &chunks {
+            w.write_chunk(c).unwrap();
+        }
+        w.finish().unwrap();
+
+        let total: usize = chunks.iter().map(Vec::len).sum();
+        let body = read_chunked(&mut BufReader::new(wire.as_slice()), total.max(1)).unwrap();
+        let expect: Vec<u8> = chunks.iter().flatten().copied().collect();
+        assert_eq!(body, expect, "decode(encode(x)) == x");
+
+        // The streaming decoder sees exactly the non-empty chunks, in
+        // order (empty payloads are skipped by the writer — an empty
+        // chunk would terminate the body).
+        let mut seen: Vec<Vec<u8>> = Vec::new();
+        let n = read_chunked_stream(&mut BufReader::new(wire.as_slice()), total.max(1), &mut |c| {
+            seen.push(c.to_vec())
+        })
+        .unwrap();
+        let nonempty: Vec<&Vec<u8>> = chunks.iter().filter(|c| !c.is_empty()).collect();
+        assert_eq!(n, nonempty.len());
+        assert_eq!(seen.len(), nonempty.len());
+        for (s, c) in seen.iter().zip(nonempty) {
+            assert_eq!(s, c);
+        }
+    });
+}

@@ -16,8 +16,11 @@
 #   4. golden serve-trace gate: strict if the committed snapshot exists,
 #      explicit bless (then strict re-run) when --bless is passed and it
 #      does not — it never self-blesses silently;
-#   5. fast-mode benches emitting BENCH_*.json at the repo root;
-#   6. scripts/check_bench_regression.py over those files: p95 ceilings,
+#   5. http-smoke: the release binary serving `--http` on a loopback
+#      port, driven end-to-end by `ts-dp client` (which cross-checks
+#      streamed digests against each session's close report);
+#   6. fast-mode benches emitting BENCH_*.json at the repo root;
+#   7. scripts/check_bench_regression.py over those files: p95 ceilings,
 #      same-run ratio gates (batched >= 2x serial drafter rollouts,
 #      lanes >= 2x forced-scalar kernels), and the int8-vs-f32
 #      accept-parity gate.
@@ -47,14 +50,14 @@ command -v python3 >/dev/null || { echo "error: python3 not found" >&2; exit 1; 
 GOLDEN=rust/tests/golden/serve_trace.txt
 # Explicit test list for the scalar leg: every integration suite except
 # the path-dependent golden trace (mirrors .github/workflows/ci.yml).
-SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test obs_trace
-    --test online_adapt --test qos_serving --test runtime_integration
-    --test serve_batching)
+SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test http_frontend
+    --test obs_trace --test online_adapt --test qos_serving
+    --test runtime_integration --test serve_batching)
 
-echo "==> [1/6] cargo build --release"
+echo "==> [1/7] cargo build --release"
 (cd rust && cargo build --release)
 
-echo "==> [2/6] cargo test (default lanes kernel path)"
+echo "==> [2/7] cargo test (default lanes kernel path)"
 if [ -f "$GOLDEN" ]; then
     (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q)
 else
@@ -62,10 +65,10 @@ else
     (cd rust && cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
 fi
 
-echo "==> [3/6] cargo test (TSDP_KERNELS=scalar, golden trace excluded)"
+echo "==> [3/7] cargo test (TSDP_KERNELS=scalar, golden trace excluded)"
 (cd rust && TSDP_KERNELS=scalar cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
 
-echo "==> [4/6] golden serve-trace gate"
+echo "==> [4/7] golden serve-trace gate"
 if [ -f "$GOLDEN" ]; then
     (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q --test golden_trace)
 elif [ "$BLESS" = 1 ]; then
@@ -79,10 +82,44 @@ else
     exit 1
 fi
 
-echo "==> [5/6] fast-mode benches (BENCH_*.json at repo root)"
+echo "==> [5/7] http-smoke: release binary serving --http, driven by ts-dp client"
+TSDP_BIN=rust/target/release/ts-dp
+HTTP_PORT=$((18000 + RANDOM % 2000))
+HTTP_LOG=$(mktemp)
+"$TSDP_BIN" serve --backend mock --http "127.0.0.1:$HTTP_PORT" --http-sessions 3 \
+    --shards 2 >"$HTTP_LOG" 2>&1 &
+HTTP_PID=$!
+trap 'kill "$HTTP_PID" 2>/dev/null || true' EXIT
+# The listener binds before serve prints anything; poll until the
+# port answers (replica build time), then drive three sessions.
+for _ in $(seq 1 50); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/$HTTP_PORT") 2>/dev/null; then break; fi
+    sleep 0.2
+done
+CLIENT_OUT=$("$TSDP_BIN" client --addr "127.0.0.1:$HTTP_PORT" \
+    --mix "lift:ts_dp*2,push_t:ts_dp") || {
+        echo "error: http-smoke client run failed" >&2
+        cat "$HTTP_LOG" >&2
+        exit 1
+    }
+echo "$CLIENT_OUT"
+grep -q "sessions=3 " <<<"$CLIENT_OUT" || {
+    echo "error: client did not report 3 served sessions" >&2
+    cat "$HTTP_LOG" >&2
+    exit 1
+}
+wait "$HTTP_PID" || { echo "error: http server exited nonzero" >&2; cat "$HTTP_LOG" >&2; exit 1; }
+trap - EXIT
+grep -q -- "--- fleet ---" "$HTTP_LOG" || {
+    echo "error: http server printed no fleet report" >&2; cat "$HTTP_LOG" >&2; exit 1
+}
+rm -f "$HTTP_LOG"
+echo "    http-smoke passed (3 sessions streamed over the wire)"
+
+echo "==> [6/7] fast-mode benches (BENCH_*.json at repo root)"
 (cd rust && TSDP_BENCH_FAST=1 cargo bench --bench speculative --bench qos)
 
-echo "==> [6/6] perf regression gate"
+echo "==> [7/7] perf regression gate"
 python3 scripts/check_bench_regression.py \
     --baseline scripts/bench_baseline.json \
     BENCH_speculative.json BENCH_qos.json
