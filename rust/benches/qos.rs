@@ -10,12 +10,66 @@
 //! job runs this with `TSDP_BENCH_FAST=1`, archives the JSON, and
 //! fails on coarse p95 regression against the committed baseline.
 
+use std::time::Duration;
+use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::qos::{QosClass, QosConfig};
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
 use ts_dp::coordinator::workload::{
-    estimate_service_secs, record_mixed_pools, saturation_sweep, SessionSpec,
+    estimate_service_secs, record_mixed_pools, saturation_sweep, SessionSpec, WorkloadMix,
 };
+use ts_dp::coordinator::AutoscaleConfig;
 use ts_dp::harness::scenarios::overload_stream;
 use ts_dp::policy::mock::MockDenoiser;
 use ts_dp::util::benchjson::{BenchRecord, BenchSink};
+
+/// Closed-loop realtime burst + batch tail (the `tests/autoscale.rs`
+/// scenario at bench scale): `rt_sessions` realtime sessions saturate
+/// the fleet, one long batch session keeps it alive afterwards.
+fn autoscale_workload(rt_sessions: usize, tail_episodes: usize) -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(
+            SessionSpec::new(Task::Lift, Method::TsDp).with_qos(QosClass::Realtime),
+            rt_sessions,
+        )
+        .session(
+            SessionSpec::new(Task::Lift, Method::TsDp)
+                .with_style(DemoStyle::Ph)
+                .with_qos(QosClass::Batch)
+                .with_episodes(tail_episodes),
+        )
+        .build()
+}
+
+/// One autoscale bench point: serve the burst on a frozen 1-shard fleet
+/// or an elastic min=1/max=4 fleet (thresholds calibrated off
+/// `service`, the measured unloaded per-request compute time).
+fn run_autoscale_point(
+    workload: Vec<SessionSpec>,
+    elastic: bool,
+    service: f64,
+) -> ServeReport {
+    let opts = ServeOptions {
+        workload,
+        shards: 1,
+        queue_capacity: 64,
+        policy: Policy::Fifo,
+        seed: 77,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        qos: QosConfig { enabled: true, degrade_pressure: f64::INFINITY, ..QosConfig::default() },
+        autoscale: elastic.then(|| AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            scale_up_pressure: service * 4.0,
+            scale_down_pressure: service,
+            dwell: Duration::from_millis(1),
+            script: Vec::new(),
+        }),
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).expect("autoscale point")
+}
 
 fn main() {
     let fast = std::env::var_os("TSDP_BENCH_FAST").is_some();
@@ -92,6 +146,54 @@ fn main() {
             }
         }
     }
+    // ---- elastic autoscale: the same burst, frozen vs elastic fleet ----
+    // Calibration reuses `service` from the sweep above, so the
+    // hysteresis band scales with this host exactly as in
+    // `tests/autoscale.rs`.
+    let (rt_sessions, tail_episodes) = if fast { (8, 3) } else { (16, 6) };
+    println!(
+        "\n== autoscale burst ({rt_sessions} rt sessions + batch tail; \
+         frozen 1 shard vs elastic 1..4) =="
+    );
+    for elastic in [false, true] {
+        let mode = if elastic { "elastic" } else { "frozen" };
+        let report =
+            run_autoscale_point(autoscale_workload(rt_sessions, tail_episodes), elastic, service);
+        let rt = report.metrics.qos_class(QosClass::Realtime).expect("rt class");
+        let (p50, p95, p99) = (
+            rt.latency_percentile(0.50),
+            rt.latency_percentile(0.95),
+            rt.latency_percentile(0.99),
+        );
+        let e = report.elastic.as_ref();
+        println!(
+            "  {mode:<7} rt p50={p50:.4}s p95={p95:.4}s p99={p99:.4}s \
+             goodput={:>7.2}/s ups={} downs={} migrations={} peak={}",
+            report.metrics.in_deadline_goodput(),
+            e.map_or(0, |e| e.scale_ups),
+            e.map_or(0, |e| e.scale_downs),
+            e.map_or(0, |e| e.migrations),
+            e.map_or(1, |e| e.peak_shards),
+        );
+        sink.push(BenchRecord {
+            name: format!("autoscale[mode={mode},class=rt]"),
+            params: vec![
+                ("mode".into(), mode.into()),
+                ("rt_sessions".into(), format!("{rt_sessions}")),
+                ("scale_ups".into(), format!("{}", e.map_or(0, |e| e.scale_ups))),
+                ("scale_downs".into(), format!("{}", e.map_or(0, |e| e.scale_downs))),
+                ("migrations".into(), format!("{}", e.map_or(0, |e| e.migrations))),
+                ("peak_shards".into(), format!("{}", e.map_or(1, |e| e.peak_shards))),
+            ],
+            p50_s: p50,
+            p95_s: p95,
+            p99_s: p99,
+            nfe: report.metrics.total_nfe / report.metrics.requests.max(1) as f64,
+            accept_rate: report.metrics.accepted as f64 / report.metrics.drafts.max(1) as f64,
+            goodput_rps: report.metrics.in_deadline_goodput(),
+        });
+    }
+
     let path = sink.write().expect("writing BENCH_qos.json");
     println!("\nwrote {} ({} records)", path.display(), sink.len());
 }

@@ -369,6 +369,57 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         obs_out: args.get("obs-out").map(PathBuf::from),
         ring_cap: 0,
     };
+    // Elastic fleet: `--autoscale` replaces the fixed shard count with a
+    // pressure-governed min/max band. Its knobs are rejected without the
+    // flag (a silent no-op hides a misconfigured fleet), and --shards
+    // conflicts with it — the fleet sizes itself.
+    let autoscale = if args.has_flag("autoscale") {
+        anyhow::ensure!(
+            args.get("shards").is_none(),
+            "--shards conflicts with --autoscale (the fleet sizes itself between \
+             --min-shards and --max-shards)"
+        );
+        anyhow::ensure!(
+            adapt != AdaptMode::Online,
+            "--adapt online is not supported with --autoscale (the experience hub \
+             sizes its per-shard buffers at start and cannot follow a resizing fleet)"
+        );
+        let dflt = crate::coordinator::fleet::AutoscaleConfig::default();
+        let cfg = crate::coordinator::fleet::AutoscaleConfig {
+            min_shards: args.get_usize("min-shards", dflt.min_shards)?,
+            max_shards: args.get_usize("max-shards", dflt.max_shards)?,
+            scale_up_pressure: args.get_f32("scale-up-pressure", dflt.scale_up_pressure as f32)?
+                as f64,
+            scale_down_pressure: args
+                .get_f32("scale-down-pressure", dflt.scale_down_pressure as f32)?
+                as f64,
+            dwell: std::time::Duration::from_millis(
+                args.get_u64("scale-dwell-ms", dflt.dwell.as_millis() as u64)?,
+            ),
+            script: Vec::new(),
+        };
+        cfg.validate()?;
+        Some(cfg)
+    } else {
+        for flag in [
+            "min-shards",
+            "max-shards",
+            "scale-dwell-ms",
+            "scale-up-pressure",
+            "scale-down-pressure",
+        ] {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--{flag} only takes effect with --autoscale"
+            );
+        }
+        None
+    };
+    // Fleet-shape banner fragment shared by both serving paths.
+    let fleet_desc = |fixed: usize| match &autoscale {
+        Some(a) => format!("elastic {}..{} shard(s)", a.min_shards, a.max_shards),
+        None => format!("{fixed} shard(s)"),
+    };
 
     // HTTP frontend: `--http ADDR` serves sessions opened over the wire
     // instead of a CLI-declared workload; the two workload sources are
@@ -410,14 +461,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             learner,
             qos,
             obs,
+            autoscale: autoscale.clone(),
         };
         let listener = std::net::TcpListener::bind(&addr)
             .with_context(|| format!("binding HTTP listener on {addr}"))?;
         println!(
-            "serving HTTP on {} over {} shard(s), max_batch={}, drafter={}, \
+            "serving HTTP on {} over {}, max_batch={}, drafter={}, \
              scheduler={}, qos={}, sessions={}",
             listener.local_addr()?,
-            shards.max(1),
+            fleet_desc(shards.max(1)),
             max_batch,
             drafter_kind.name(),
             if opts.scheduler.is_some() { adapt.name() } else { "fixed" },
@@ -479,14 +531,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         learner,
         qos,
         obs,
+        autoscale: autoscale.clone(),
     };
     // serve() clamps the shard count to the session count; print the
     // effective fleet shape, not the raw flag.
     println!(
-        "serving {} sessions over {} shard(s), max_batch={}, drafter={}, \
+        "serving {} sessions over {}, max_batch={}, drafter={}, \
          scheduler={}, qos={} (each shard compiles its own replica)",
         opts.workload.len(),
-        opts.effective_shards(),
+        fleet_desc(opts.effective_shards()),
         max_batch,
         drafter_kind.name(),
         if opts.scheduler.is_some() { adapt.name() } else { "fixed" },
@@ -513,6 +566,20 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 fn print_serve_report(report: &ServeReport) {
     println!("--- fleet ---");
     println!("{}", report.metrics.summary());
+    if let Some(e) = &report.elastic {
+        println!("--- elastic fleet ---");
+        println!(
+            "scale-ups={} scale-downs={} migrations={} peak-shards={} final-shards={} \
+             spawned={} events={}",
+            e.scale_ups,
+            e.scale_downs,
+            e.migrations,
+            e.peak_shards,
+            e.final_shards,
+            e.spawned,
+            e.events.len()
+        );
+    }
     if let Some(l) = &report.learner {
         println!("--- online learner ---");
         println!("{}", l.summary());

@@ -1,0 +1,684 @@
+//! Elastic fleet: runtime shard scaling with bit-identical session
+//! migration.
+//!
+//! The static fleet ([`super::server::serve`]) fixes its shard count at
+//! start; this module lets the coordinator **spawn and retire shard
+//! workers while sessions are live**, driven by the QoS pressure signal
+//! ([`super::qos::PressureGauge`]) or by a scripted [`ScaleEvent`]
+//! schedule (so every autoscale decision is replayable in tests).
+//!
+//! ## Topology
+//!
+//! Session drivers no longer hold a shard's queue directly — they send
+//! every [`ShardMsg`] to one **dispatcher** ([`ElasticFleet`]), which
+//! owns the dynamic routing table ([`super::router::FleetRouter`]), the
+//! per-shard queues, and the worker join handles. Shard workers are the
+//! *same* engine loop as the static fleet ([`super::server`]'s
+//! `shard_worker`); only who feeds their queues changes.
+//!
+//! ## Deterministic migration
+//!
+//! The whole design leans on one structural fact: **all engine-side
+//! per-session state is the session's RNG stream and (for baselines)
+//! its generator** — two map entries inside the shard loop. Everything
+//! else is either round-local (KV-arena chains are released when a
+//! round ends, before a migration can be observed) or driver-side (the
+//! receding-horizon plan tail, env RNG, scheduler state live in the
+//! session driver, which never moves). A session has at most one
+//! request in flight, so migration happens only at request boundaries:
+//! the dispatcher asks the old shard for a [`SessionSnapshot`]
+//! (`Snapshot` → reply), installs it on the target (`Install`), reroutes,
+//! and only then forwards the pending request. Because the moved RNG is
+//! byte-for-byte the stream the old shard would have kept drawing from,
+//! the served bits are identical to a never-migrated run — not within a
+//! tolerance, identical. `tests/serve_batching.rs` and
+//! `tests/autoscale.rs` pin this; `docs/ARCHITECTURE.md` documents the
+//! full contract.
+//!
+//! ## Scale policy
+//!
+//! Pressure-driven mode: when the mean published backlog estimate over
+//! active shards stays above [`AutoscaleConfig::scale_up_pressure`] for
+//! a full dwell window, one shard is added (up to `max_shards`); when
+//! it stays below `scale_down_pressure` for a dwell window, the
+//! highest-numbered active shard is drained — it stops admitting, its
+//! residents migrate away lazily (on their next request) or close, and
+//! the worker retires once empty. The fleet never drains below
+//! `min_shards`. Scripted mode replaces the gauge with an explicit
+//! request-count-keyed schedule.
+
+use crate::baselines::Generator;
+use crate::coordinator::request::SegmentRequest;
+use crate::coordinator::router::FleetRouter;
+use crate::coordinator::server::{shard_worker, ReplicaFactory, ServeOptions, ShardJoin};
+use crate::obs::span::{Attrs, SpanKind, SpanSink, FLEET_LANE};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Everything a shard's engine holds for one session, packaged for a
+/// hand-off. The receding-horizon plan tail, env RNG, scheduler state,
+/// and QoS class/deadline stay in the session driver (which never
+/// moves) and ride each [`SegmentRequest`]; KV-arena chains are
+/// round-local and always released before a boundary — so the snapshot
+/// is exactly the state whose loss would change served bits.
+pub struct SessionSnapshot {
+    /// Session id the snapshot belongs to.
+    pub session: usize,
+    /// The session's engine RNG stream, mid-sequence. `None` when the
+    /// shard never admitted this session (migration before first
+    /// request): the target lazily seeds it from the session id, which
+    /// is exactly what the source would have done.
+    pub rng: Option<Rng>,
+    /// Baseline generator state (non-TS-DP methods). `None` for TS-DP
+    /// sessions, which keep no generator.
+    pub generator: Option<Box<dyn Generator>>,
+}
+
+impl std::fmt::Debug for SessionSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionSnapshot")
+            .field("session", &self.session)
+            .field("rng", &self.rng.is_some())
+            .field("generator", &self.generator.is_some())
+            .finish()
+    }
+}
+
+/// The message type on every shard queue (and the dispatcher's inbound
+/// queue). `Segment` is the serving path — identical in meaning to the
+/// bare [`SegmentRequest`] the static fleet queued before the elastic
+/// refactor; the control variants implement the migration protocol and
+/// session-close accounting. In-order queue delivery is what makes the
+/// protocol race-free: an `Install` enqueued before a `Segment` is
+/// observed before it.
+pub enum ShardMsg {
+    /// Serve one segment (the pre-elastic request, unchanged).
+    Segment(SegmentRequest),
+    /// Migration step 1: extract the session's engine state and reply
+    /// with it. The shard forgets the session.
+    Snapshot { session: usize, reply: mpsc::Sender<SessionSnapshot> },
+    /// Migration step 2: adopt a session's engine state.
+    Install(SessionSnapshot),
+    /// The session driver finished: drop any engine state and (in the
+    /// dispatcher) release the routing-table slot so a draining shard
+    /// can retire.
+    Close { session: usize },
+}
+
+impl std::fmt::Debug for ShardMsg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardMsg::Segment(req) => f.debug_tuple("Segment").field(req).finish(),
+            ShardMsg::Snapshot { session, .. } => {
+                f.debug_struct("Snapshot").field("session", session).finish()
+            }
+            ShardMsg::Install(snap) => f.debug_tuple("Install").field(snap).finish(),
+            ShardMsg::Close { session } => {
+                f.debug_struct("Close").field("session", session).finish()
+            }
+        }
+    }
+}
+
+/// Per-shard gauges a worker publishes for the autoscale supervisor:
+/// lock-free, written once per engine-loop iteration, read at dwell
+/// granularity. Also carries the fleet-wide active-shard gauge the
+/// flight recorder samples ([`crate::obs::FlightGauges::fleet_shards`]).
+pub struct ShardShared {
+    /// Published backlog estimate, microseconds (pressure × 1e6).
+    pressure_us: AtomicU64,
+    /// Requests buffered + in flight on this shard.
+    pending: AtomicUsize,
+    /// Active shards in the fleet (shared across all workers; the
+    /// supervisor stores, workers only load for flight samples).
+    fleet: Arc<AtomicUsize>,
+}
+
+impl ShardShared {
+    /// Gauges for a fixed-size fleet (static path): the fleet gauge is
+    /// a constant.
+    pub fn fixed(shards: usize) -> Arc<Self> {
+        Self::with_gauge(Arc::new(AtomicUsize::new(shards.max(1))))
+    }
+
+    /// Gauges wired to a shared fleet-size counter (elastic path).
+    pub fn with_gauge(fleet: Arc<AtomicUsize>) -> Arc<Self> {
+        Arc::new(Self { pressure_us: AtomicU64::new(0), pending: AtomicUsize::new(0), fleet })
+    }
+
+    /// Publish this shard's current backlog estimate.
+    pub fn publish(&self, pressure_secs: f64, pending: usize) {
+        let us = (pressure_secs.max(0.0) * 1e6).min(u64::MAX as f64) as u64;
+        self.pressure_us.store(us, Ordering::Relaxed);
+        self.pending.store(pending, Ordering::Relaxed);
+    }
+
+    /// Last published backlog estimate, seconds.
+    pub fn pressure_secs(&self) -> f64 {
+        self.pressure_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Last published pending-request count.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    /// Currently active shards in the fleet.
+    pub fn fleet_shards(&self) -> usize {
+        self.fleet.load(Ordering::Relaxed)
+    }
+}
+
+/// One entry of a scripted autoscale schedule: after the dispatcher has
+/// forwarded `after_requests` segment requests, resize the active fleet
+/// to exactly `shards`. Scripts make every scale decision replayable —
+/// the invariance tests drive migration deterministically with them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// Fire once this many segment requests have been forwarded.
+    pub after_requests: u64,
+    /// Target active shard count (clamped to `[min_shards, max_shards]`
+    /// by validation).
+    pub shards: usize,
+}
+
+/// Elastic-fleet configuration (`--autoscale` and friends).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many active shards (also the initial
+    /// fleet size).
+    pub min_shards: usize,
+    /// Never scale above this many active shards.
+    pub max_shards: usize,
+    /// Scale up when mean active-shard pressure (seconds of estimated
+    /// backlog) stays above this for a full dwell window.
+    pub scale_up_pressure: f64,
+    /// Drain the highest shard when mean pressure stays below this for
+    /// a full dwell window. Must be below `scale_up_pressure`
+    /// (hysteresis band).
+    pub scale_down_pressure: f64,
+    /// How long a pressure excursion must persist before acting.
+    pub dwell: Duration,
+    /// Scripted schedule; non-empty disables the pressure policy.
+    pub script: Vec<ScaleEvent>,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min_shards: 1,
+            max_shards: 4,
+            scale_up_pressure: 0.25,
+            scale_down_pressure: 0.05,
+            dwell: Duration::from_millis(250),
+            script: Vec::new(),
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Reject configurations that would silently no-op or oscillate.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.min_shards >= 1, "--min-shards must be at least 1");
+        anyhow::ensure!(
+            self.max_shards >= self.min_shards,
+            "--max-shards ({}) must be >= --min-shards ({})",
+            self.max_shards,
+            self.min_shards
+        );
+        anyhow::ensure!(
+            self.scale_down_pressure < self.scale_up_pressure,
+            "scale-down pressure ({}) must sit strictly below scale-up pressure ({}) \
+             — an inverted or empty hysteresis band would thrash",
+            self.scale_down_pressure,
+            self.scale_up_pressure
+        );
+        let mut last = 0u64;
+        for (i, ev) in self.script.iter().enumerate() {
+            anyhow::ensure!(
+                ev.shards >= self.min_shards && ev.shards <= self.max_shards,
+                "scale script event {i} targets {} shards, outside [{}, {}]",
+                ev.shards,
+                self.min_shards,
+                self.max_shards
+            );
+            anyhow::ensure!(
+                i == 0 || ev.after_requests >= last,
+                "scale script must be ordered by after_requests"
+            );
+            last = ev.after_requests;
+        }
+        Ok(())
+    }
+}
+
+/// What kind of scale decision a [`ScaleRecord`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// A fresh shard slot was spawned.
+    Up,
+    /// An active shard began draining (retires once empty).
+    Drain,
+}
+
+/// One committed scale decision, timestamped against the run's
+/// observability epoch (microseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleRecord {
+    /// Microseconds since the serve epoch.
+    pub t_us: u64,
+    /// Decision kind.
+    pub kind: ScaleKind,
+    /// The shard spawned or drained.
+    pub shard: usize,
+    /// Active shard count after the decision.
+    pub active: usize,
+}
+
+/// What the elastic run did, attached to the serve report.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticReport {
+    /// Shards spawned after start.
+    pub scale_ups: u64,
+    /// Drain decisions committed.
+    pub scale_downs: u64,
+    /// Sessions handed between shards.
+    pub migrations: u64,
+    /// Maximum concurrently active shards.
+    pub peak_shards: usize,
+    /// Active shards when the run ended.
+    pub final_shards: usize,
+    /// Total worker threads spawned over the run's lifetime.
+    pub spawned: usize,
+    /// The full decision log, in order.
+    pub events: Vec<ScaleRecord>,
+}
+
+/// The elastic-fleet dispatcher: owns the dynamic router, the shard
+/// queues, and the worker handles; forwards session traffic; executes
+/// the migration protocol; applies the scale policy.
+///
+/// Lives inside a [`std::thread::scope`] (`'s` is the scope, `'a` the
+/// environment borrowed by workers) so dynamically spawned workers get
+/// the same structured-concurrency guarantees as the static fleet.
+pub(crate) struct ElasticFleet<'s, 'a> {
+    scope: &'s std::thread::Scope<'s, 'a>,
+    factory: &'a ReplicaFactory<'a>,
+    opts: &'a ServeOptions,
+    auto: AutoscaleConfig,
+    obs_epoch: Instant,
+    sink: Arc<SpanSink>,
+    fleet_gauge: Arc<AtomicUsize>,
+    router: FleetRouter,
+    /// Per-slot queue sender; `None` once the slot's worker has been
+    /// released to drain out (drained shard emptied, or teardown).
+    senders: Vec<Option<mpsc::SyncSender<ShardMsg>>>,
+    shared: Vec<Arc<ShardShared>>,
+    workers: Vec<Option<std::thread::ScopedJoinHandle<'s, ShardJoin>>>,
+    forwarded: u64,
+    cursor: usize,
+    high_since: Option<Instant>,
+    low_since: Option<Instant>,
+    report: ElasticReport,
+}
+
+impl<'s, 'a: 's> ElasticFleet<'s, 'a> {
+    /// Spawn the initial `min_shards` workers and wait until each has
+    /// resolved its replica build (success or failure — a failed worker
+    /// surfaces through its join result and the first forward to it).
+    pub fn new(
+        scope: &'s std::thread::Scope<'s, 'a>,
+        factory: &'a ReplicaFactory<'a>,
+        opts: &'a ServeOptions,
+        auto: AutoscaleConfig,
+        obs_epoch: Instant,
+        sink: Arc<SpanSink>,
+    ) -> Self {
+        let initial = auto.min_shards.max(1);
+        let mut fleet = Self {
+            scope,
+            factory,
+            opts,
+            auto,
+            obs_epoch,
+            sink,
+            fleet_gauge: Arc::new(AtomicUsize::new(initial)),
+            router: FleetRouter::new(initial),
+            senders: Vec::new(),
+            shared: Vec::new(),
+            workers: Vec::new(),
+            forwarded: 0,
+            cursor: 0,
+            high_since: None,
+            low_since: None,
+            report: ElasticReport { peak_shards: initial, ..ElasticReport::default() },
+        };
+        for _ in 0..initial {
+            fleet.spawn_worker();
+        }
+        fleet
+    }
+
+    /// Route a session before its driver starts (in-process path: the
+    /// workload is known up front, so placement is deterministic and
+    /// reportable). Returns the shard for the session report.
+    pub fn preassign(&mut self, session: usize) -> usize {
+        self.router.assign(session)
+    }
+
+    /// Spawn one worker on the next slot id; blocks until its replica
+    /// build resolves so scale-ups never route onto a cold queue.
+    fn spawn_worker(&mut self) {
+        let shard = self.senders.len();
+        debug_assert_eq!(shard, self.workers.len());
+        let (tx, rx) = mpsc::sync_channel::<ShardMsg>(self.opts.queue_capacity.max(1));
+        let shared = ShardShared::with_gauge(self.fleet_gauge.clone());
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        let factory = self.factory;
+        let opts = self.opts;
+        let obs_epoch = self.obs_epoch;
+        let worker_shared = shared.clone();
+        let handle = self.scope.spawn(move || {
+            shard_worker(
+                factory,
+                shard,
+                rx,
+                opts.max_batch.max(1),
+                opts,
+                obs_epoch,
+                Some(ready_tx),
+                &worker_shared,
+            )
+        });
+        // A worker that dies in the factory drops the sender; its error
+        // surfaces at join and on the first failed forward.
+        let _ = ready_rx.recv();
+        self.senders.push(Some(tx));
+        self.shared.push(shared);
+        self.workers.push(Some(handle));
+        self.report.spawned += 1;
+    }
+
+    fn record_event(&mut self, kind: ScaleKind, shard: usize) {
+        let active = self.router.active_count();
+        self.fleet_gauge.store(active, Ordering::Relaxed);
+        self.report.events.push(ScaleRecord {
+            t_us: self.obs_epoch.elapsed().as_micros() as u64,
+            kind,
+            shard,
+            active,
+        });
+        self.report.peak_shards = self.report.peak_shards.max(active);
+    }
+
+    /// Add one active shard (spawns a fresh slot; slot ids are
+    /// append-only so metrics/trace lanes stay stable).
+    fn scale_up(&mut self) {
+        if self.router.active_count() >= self.auto.max_shards {
+            return;
+        }
+        let shard = self.router.add_shard();
+        if shard >= self.senders.len() {
+            self.spawn_worker();
+        }
+        self.report.scale_ups += 1;
+        self.record_event(ScaleKind::Up, shard);
+    }
+
+    /// Begin draining the highest-numbered active shard (never below
+    /// `min_shards`). Residents migrate lazily; an already-empty shard
+    /// retires immediately.
+    fn scale_down(&mut self) {
+        if self.router.active_count() <= self.auto.min_shards {
+            return;
+        }
+        let Some(shard) = self.router.highest_active() else { return };
+        if !self.router.drain(shard) {
+            return;
+        }
+        self.report.scale_downs += 1;
+        self.record_event(ScaleKind::Drain, shard);
+        self.maybe_retire(shard);
+    }
+
+    /// Drop a drained-and-empty shard's sender so its worker drains out
+    /// and exits (joined at teardown). Reclaims the thread — the
+    /// "drain-to-min reclaims workers" half of the acceptance contract.
+    fn maybe_retire(&mut self, shard: usize) {
+        if !self.router.is_active(shard) && self.router.load(shard) == 0 {
+            self.senders[shard] = None;
+        }
+    }
+
+    /// Execute the snapshot → install handshake moving `session` from
+    /// `from` to `to`, then commit the reroute. Returns false when a
+    /// queue is gone (shard died) — the caller aborts dispatch and lets
+    /// the shard's own error surface at join.
+    fn migrate(&mut self, session: usize, from: usize, to: usize) -> bool {
+        let t0 = self.sink.start();
+        let (reply_tx, reply_rx) = mpsc::channel::<SessionSnapshot>();
+        let Some(from_tx) = self.senders[from].as_ref() else { return false };
+        if from_tx.send(ShardMsg::Snapshot { session, reply: reply_tx }).is_err() {
+            return false;
+        }
+        let Ok(snapshot) = reply_rx.recv() else { return false };
+        let Some(to_tx) = self.senders[to].as_ref() else { return false };
+        if to_tx.send(ShardMsg::Install(snapshot)).is_err() {
+            return false;
+        }
+        self.router.reroute(session, to);
+        self.report.migrations += 1;
+        self.sink.record(
+            SpanKind::Migration,
+            t0,
+            Attrs {
+                session: session as u32,
+                count: to as u32,
+                lane: FLEET_LANE,
+                ..Attrs::NONE
+            },
+        );
+        self.maybe_retire(from);
+        true
+    }
+
+    /// Dispatch one inbound message. Returns false on a dead shard
+    /// queue (fatal: teardown surfaces the root cause).
+    fn handle(&mut self, msg: ShardMsg) -> bool {
+        match msg {
+            ShardMsg::Segment(req) => {
+                let session = req.session;
+                let mut owner = match self.router.shard_of(session) {
+                    Some(s) => s,
+                    None => self.router.assign(session),
+                };
+                if let Some(target) = self.router.migration_target(session) {
+                    if target != owner {
+                        if !self.migrate(session, owner, target) {
+                            return false;
+                        }
+                        owner = target;
+                    }
+                }
+                self.forwarded += 1;
+                let Some(tx) = self.senders[owner].as_ref() else { return false };
+                if tx.send(ShardMsg::Segment(req)).is_err() {
+                    return false;
+                }
+                self.apply_script();
+                true
+            }
+            ShardMsg::Close { session } => {
+                if let Some(shard) = self.router.release(session) {
+                    if let Some(tx) = self.senders[shard].as_ref() {
+                        let _ = tx.send(ShardMsg::Close { session });
+                    }
+                    self.maybe_retire(shard);
+                }
+                true
+            }
+            // Snapshot/Install only travel dispatcher → shard.
+            other => {
+                debug_assert!(false, "unexpected inbound control message: {other:?}");
+                true
+            }
+        }
+    }
+
+    /// Scripted mode: apply every event whose request threshold has
+    /// been reached.
+    fn apply_script(&mut self) {
+        while self.cursor < self.auto.script.len()
+            && self.forwarded >= self.auto.script[self.cursor].after_requests
+        {
+            let target = self.auto.script[self.cursor].shards;
+            self.cursor += 1;
+            while self.router.active_count() < target {
+                let before = self.router.active_count();
+                self.scale_up();
+                if self.router.active_count() == before {
+                    break;
+                }
+            }
+            while self.router.active_count() > target {
+                let before = self.router.active_count();
+                self.scale_down();
+                if self.router.active_count() == before {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Pressure mode: act when the mean published pressure over active
+    /// shards stays outside the hysteresis band for a dwell window.
+    fn evaluate_pressure(&mut self) {
+        if !self.auto.script.is_empty() {
+            return;
+        }
+        let active: Vec<usize> =
+            (0..self.shared.len()).filter(|&s| self.router.is_active(s)).collect();
+        if active.is_empty() {
+            return;
+        }
+        let pressures: Vec<f64> =
+            active.iter().map(|&s| self.shared[s].pressure_secs()).collect();
+        let mean = crate::coordinator::qos::fleet_pressure(&pressures);
+        let now = Instant::now();
+        if mean > self.auto.scale_up_pressure {
+            self.low_since = None;
+            let since = *self.high_since.get_or_insert(now);
+            if now.duration_since(since) >= self.auto.dwell {
+                self.scale_up();
+                self.high_since = None;
+            }
+        } else if mean < self.auto.scale_down_pressure {
+            self.high_since = None;
+            let since = *self.low_since.get_or_insert(now);
+            if now.duration_since(since) >= self.auto.dwell {
+                self.scale_down();
+                self.low_since = None;
+            }
+        } else {
+            self.high_since = None;
+            self.low_since = None;
+        }
+    }
+
+    /// The dispatcher loop: forward until every inbound sender hangs
+    /// up, then tear down (drop queues, join workers) and report.
+    pub fn run(mut self, inbound: mpsc::Receiver<ShardMsg>) -> (Vec<ShardJoin>, ElasticReport) {
+        // Tick fast enough to observe the dwell window, bounded so idle
+        // fleets don't spin.
+        let tick = (self.auto.dwell / 4)
+            .clamp(Duration::from_millis(1), Duration::from_millis(50));
+        loop {
+            match inbound.recv_timeout(tick) {
+                Ok(msg) => {
+                    if !self.handle(msg) {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            self.evaluate_pressure();
+        }
+        self.finish()
+    }
+
+    fn finish(mut self) -> (Vec<ShardJoin>, ElasticReport) {
+        self.report.final_shards = self.router.active_count();
+        for slot in self.senders.iter_mut() {
+            *slot = None;
+        }
+        let mut joins = Vec::with_capacity(self.workers.len());
+        for (shard, slot) in self.workers.iter_mut().enumerate() {
+            let handle = slot.take().expect("worker joined once");
+            joins.push(handle.join().unwrap_or_else(|payload| {
+                (
+                    crate::coordinator::metrics::ServerMetrics::for_shard(shard),
+                    crate::obs::span::SpanRecorder::disabled(),
+                    Vec::new(),
+                    Err(crate::coordinator::server::panic_to_error("shard", shard, payload)),
+                )
+            }));
+        }
+        (joins, self.report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_shared_round_trips_gauges() {
+        let shared = ShardShared::fixed(3);
+        assert_eq!(shared.fleet_shards(), 3);
+        shared.publish(0.0125, 7);
+        assert!((shared.pressure_secs() - 0.0125).abs() < 1e-9);
+        assert_eq!(shared.pending(), 7);
+        shared.publish(0.0, 0);
+        assert_eq!(shared.pressure_secs(), 0.0);
+    }
+
+    #[test]
+    fn autoscale_config_validation_rejects_nonsense() {
+        assert!(AutoscaleConfig::default().validate().is_ok());
+        let zero_min = AutoscaleConfig { min_shards: 0, ..Default::default() };
+        assert!(zero_min.validate().is_err());
+        let inverted = AutoscaleConfig { max_shards: 1, min_shards: 2, ..Default::default() };
+        assert!(inverted.validate().is_err());
+        let no_band = AutoscaleConfig {
+            scale_up_pressure: 0.1,
+            scale_down_pressure: 0.1,
+            ..Default::default()
+        };
+        assert!(no_band.validate().is_err());
+        let out_of_range = AutoscaleConfig {
+            max_shards: 2,
+            script: vec![ScaleEvent { after_requests: 0, shards: 5 }],
+            ..Default::default()
+        };
+        assert!(out_of_range.validate().is_err());
+        let unordered = AutoscaleConfig {
+            script: vec![
+                ScaleEvent { after_requests: 10, shards: 2 },
+                ScaleEvent { after_requests: 5, shards: 1 },
+            ],
+            ..Default::default()
+        };
+        assert!(unordered.validate().is_err());
+        let ordered = AutoscaleConfig {
+            script: vec![
+                ScaleEvent { after_requests: 5, shards: 2 },
+                ScaleEvent { after_requests: 10, shards: 1 },
+            ],
+            ..Default::default()
+        };
+        assert!(ordered.validate().is_ok());
+    }
+}

@@ -171,6 +171,13 @@ pub struct ServerMetrics {
     /// (`crate::net`). Empty (and absent from `summary`) on in-process
     /// runs, so the legacy summary shape is untouched.
     pub http_status: BTreeMap<u16, u64>,
+    /// Shard workers spawned by the autoscaler (0 — and absent from
+    /// `summary` — on fixed-fleet runs).
+    pub scale_ups: u64,
+    /// Shards drained and retired by the autoscaler.
+    pub scale_downs: u64,
+    /// Deterministic session migrations performed by the dispatcher.
+    pub migrations: u64,
 }
 
 impl Default for ServerMetrics {
@@ -210,6 +217,9 @@ impl ServerMetrics {
             qos_classes: BTreeMap::new(),
             stage_times: BTreeMap::new(),
             http_status: BTreeMap::new(),
+            scale_ups: 0,
+            scale_downs: 0,
+            migrations: 0,
         }
     }
 
@@ -441,6 +451,9 @@ impl ServerMetrics {
             for (&status, n) in &m.http_status {
                 *fleet.http_status.entry(status).or_insert(0) += n;
             }
+            fleet.scale_ups += m.scale_ups;
+            fleet.scale_downs += m.scale_downs;
+            fleet.migrations += m.migrations;
             fleet.shard_breakdown.push((
                 m.shard.unwrap_or(fleet.shard_breakdown.len()),
                 m.requests,
@@ -630,6 +643,14 @@ impl ServerMetrics {
             let parts: Vec<String> =
                 self.http_status.iter().map(|(code, n)| format!("{code}:{n}")).collect();
             s.push_str(&format!(" http=[{}]", parts.join(" ")));
+        }
+        // Elastic-fleet accounting (autoscaled runs only): fixed fleets
+        // keep the legacy summary shape.
+        if self.scale_ups > 0 || self.scale_downs > 0 || self.migrations > 0 {
+            s.push_str(&format!(
+                " elastic=[ups={} downs={} migrations={}]",
+                self.scale_ups, self.scale_downs, self.migrations
+            ));
         }
         s
     }
@@ -866,6 +887,25 @@ mod tests {
         let qpos = s.find("queue_wait n=1").expect("queue_wait rendered");
         let vpos = s.find("verify n=40").expect("verify rendered");
         assert!(qpos < vpos, "{s}");
+    }
+
+    #[test]
+    fn elastic_counters_merge_and_render_conditionally() {
+        // Fixed-fleet runs keep the legacy summary shape.
+        let plain = ServerMetrics::new();
+        assert!(!plain.summary().contains("elastic=["), "{}", plain.summary());
+        let mut a = ServerMetrics::for_shard(0);
+        a.scale_ups = 2;
+        a.migrations = 3;
+        let mut b = ServerMetrics::for_shard(1);
+        b.scale_downs = 1;
+        b.migrations = 1;
+        let fleet = ServerMetrics::merge_fleet(&[a, b]);
+        assert_eq!(fleet.scale_ups, 2);
+        assert_eq!(fleet.scale_downs, 1);
+        assert_eq!(fleet.migrations, 4);
+        let s = fleet.summary();
+        assert!(s.contains("elastic=[ups=2 downs=1 migrations=4]"), "{s}");
     }
 
     #[test]

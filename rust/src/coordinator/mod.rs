@@ -176,10 +176,27 @@
 //! QoS fleet's realtime deadline-hit rate and in-deadline goodput beat
 //! the FIFO baseline.
 //!
+//! **Elastic fleet** (`ServeOptions { autoscale: Some(..), .. }`, CLI
+//! `--autoscale`): the shard count above stops being fixed. A
+//! dispatcher thread ([`fleet::ElasticFleet`]) sits between the session
+//! drivers and the per-shard queues, spawns workers when smoothed fleet
+//! pressure stays above a threshold for a dwell window, and
+//! drains-and-retires the highest-numbered shard when pressure stays
+//! low. Live sessions move between shards via deterministic
+//! [`fleet::SessionSnapshot`] migration — the session's RNG stream and
+//! baseline generator are physically moved at a request boundary, so
+//! served bits are identical to a never-migrated run
+//! (`tests/serve_batching.rs` live-resharding leg, `tests/autoscale.rs`).
+//!
 //! Failure semantics: a shard that fails drains its queue and hangs up
 //! its sessions, so one bad replica fails the whole `serve()` call with
 //! a root-cause error instead of deadlocking; session-driver errors and
 //! panics are propagated the same way.
+//!
+//! The end-to-end dataflow and the full determinism contract, including
+//! what migration must preserve, are documented in `docs/ARCHITECTURE.md`
+//! at the repo root; operator knobs and the gate workflow live in
+//! `docs/OPERATIONS.md`.
 //!
 //! **HTTP frontend** (`crate::net`, CLI `serve --http ADDR`): the same
 //! shard workers can be fronted by a hand-rolled HTTP/1.1 gateway
@@ -200,6 +217,7 @@
 
 pub mod batcher;
 pub mod cli;
+pub mod fleet;
 pub mod metrics;
 pub mod qos;
 pub mod request;
@@ -208,9 +226,10 @@ pub mod server;
 pub mod session;
 pub mod workload;
 
+pub use fleet::{AutoscaleConfig, ElasticReport, ScaleEvent, SessionSnapshot, ShardMsg};
 pub use metrics::{QosClassMetrics, ServerMetrics};
 pub use qos::{degrade_params, PressureGauge, QosClass, QosConfig, ShedReason};
 pub use request::{SegmentProgress, SegmentReply, SegmentRequest, SegmentResponse};
-pub use router::Router;
+pub use router::{FleetRouter, Router};
 pub use server::{serve, serve_with, ReplicaFactory, ServeOptions, ServeReport};
 pub use workload::{DrafterKind, SessionSpec, WorkloadMix};

@@ -21,6 +21,11 @@
 //!   compute time). It drives admission control, is fed back to the
 //!   speculative scheduler as an observation feature
 //!   ([`crate::scheduler::features`]), and gates [`degrade_params`].
+//! * [`fleet_pressure`] — the *fleet-level* scale signal: the mean of
+//!   the per-shard [`PressureGauge`] readings. The elastic fleet
+//!   ([`crate::coordinator::fleet`]) compares it against a hysteresis
+//!   band over a dwell window to decide when to spawn or drain shards
+//!   (`--autoscale`).
 //! * [`degrade_params`] — graceful degradation: under pressure, TS-DP
 //!   requests are pushed toward *drafter-heavy* operation (longer draft
 //!   horizons, permissive acceptance threshold, wider acceptance σ), so
@@ -210,6 +215,23 @@ impl PressureGauge {
     }
 }
 
+/// Fleet-level scale signal: the mean of per-shard backlog estimates
+/// (seconds), as published by each shard's [`PressureGauge`]. The
+/// elastic fleet ([`crate::coordinator::fleet`]) compares this against
+/// its hysteresis band (`scale_up_pressure` / `scale_down_pressure`)
+/// over a dwell window. The mean — not the max — is the right signal
+/// for *sizing*: one hot shard is a routing problem (migration handles
+/// it), while a hot mean means the whole fleet is under-provisioned.
+/// An empty slice reads 0 (an idle fleet never scales on a guess, the
+/// same cold-safety rule as [`PressureGauge::pressure`]).
+pub fn fleet_pressure(per_shard_secs: &[f64]) -> f64 {
+    if per_shard_secs.is_empty() {
+        0.0
+    } else {
+        per_shard_secs.iter().sum::<f64>() / per_shard_secs.len() as f64
+    }
+}
+
 /// Graceful degradation of speculative parameters: blend `params`
 /// toward drafter-heavy operation by `level` ∈ [0, 1].
 ///
@@ -306,6 +328,16 @@ mod tests {
         assert_eq!(g.retry_after_ms(0), 10);
         // Backlogged shard: pending × EWMA, rounded up.
         assert_eq!(g.retry_after_ms(5), 50);
+    }
+
+    #[test]
+    fn fleet_pressure_is_the_mean_and_cold_safe() {
+        assert_eq!(fleet_pressure(&[]), 0.0, "empty fleet must never scale on a guess");
+        assert_eq!(fleet_pressure(&[0.3]), 0.3);
+        assert!((fleet_pressure(&[0.1, 0.2, 0.3]) - 0.2).abs() < 1e-12);
+        // One hot shard dilutes into the mean — that's migration's
+        // problem, not the autoscaler's.
+        assert!((fleet_pressure(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
     }
 
     #[test]

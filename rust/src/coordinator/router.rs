@@ -87,6 +87,171 @@ impl Router {
     }
 }
 
+/// Epoch-versioned router for the **elastic** fleet: shard slots can be
+/// added and drained at runtime, and sessions can be rerouted between
+/// shards while their streams stay live.
+///
+/// Slots are append-only — a drained shard keeps its id forever (the
+/// supervisor retires its worker thread once the last resident session
+/// has migrated away or closed), and a scale-up always appends a fresh
+/// slot. That keeps shard ids stable in metrics, spans, and the flight
+/// recorder across the whole run.
+///
+/// The `epoch` counter increments on every *topology* change (slot
+/// added, slot drained, session rerouted). It is the handoff fence the
+/// dispatcher relies on: a request routed under epoch `e` lands on the
+/// session's owner **as of `e`** — migration happens only between
+/// requests (a session has at most one segment in flight), so an
+/// in-flight request never races its own handoff. Placement is
+/// load-bearing for latency only; served bits never depend on it (see
+/// `docs/ARCHITECTURE.md`).
+#[derive(Debug, Clone)]
+pub struct FleetRouter {
+    /// Sessions resident per shard slot (drained slots drain to 0).
+    loads: Vec<usize>,
+    /// Whether each slot accepts new/migrated sessions.
+    active: Vec<bool>,
+    /// Session id → owning shard slot.
+    table: HashMap<usize, usize>,
+    /// Topology version; bumped on add/drain/reroute.
+    epoch: u64,
+}
+
+impl FleetRouter {
+    /// Router with `initial` active shard slots (clamped to ≥ 1).
+    pub fn new(initial: usize) -> Self {
+        let n = initial.max(1);
+        Self { loads: vec![0; n], active: vec![true; n], table: HashMap::new(), epoch: 0 }
+    }
+
+    /// Total slots ever created (active + drained).
+    pub fn slots(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Currently active (admitting) shards.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Whether a slot still admits sessions.
+    pub fn is_active(&self, shard: usize) -> bool {
+        self.active.get(shard).copied().unwrap_or(false)
+    }
+
+    /// Current topology epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Append a fresh active slot (scale-up); returns its shard id.
+    pub fn add_shard(&mut self) -> usize {
+        let shard = self.loads.len();
+        self.loads.push(0);
+        self.active.push(true);
+        self.epoch += 1;
+        shard
+    }
+
+    /// Mark a slot draining (scale-down): it stops admitting sessions
+    /// and its residents become migration candidates. Returns false for
+    /// out-of-range or already-drained slots.
+    pub fn drain(&mut self, shard: usize) -> bool {
+        if !self.is_active(shard) {
+            return false;
+        }
+        self.active[shard] = false;
+        self.epoch += 1;
+        true
+    }
+
+    /// Highest-numbered active slot — the drain candidate ("last hired,
+    /// first retired" keeps low slot ids long-lived).
+    pub fn highest_active(&self) -> Option<usize> {
+        (0..self.active.len()).rev().find(|&s| self.active[s])
+    }
+
+    /// Lowest-id active slot at minimum load, with that load.
+    fn least_loaded_active(&self) -> Option<(usize, usize)> {
+        (0..self.loads.len())
+            .filter(|&s| self.active[s])
+            .map(|s| (s, self.loads[s]))
+            .min_by_key(|&(s, l)| (l, s))
+    }
+
+    /// Assign a session to an active shard (idempotent — an already
+    /// routed session keeps its owner even if that slot has since
+    /// drained; migration is the supervisor's explicit decision, via
+    /// [`FleetRouter::migration_target`] + [`FleetRouter::reroute`]).
+    ///
+    /// Same policy as [`Router::assign`], restricted to active slots:
+    /// hash-preferred, demoted to the lowest-id least-loaded active
+    /// shard when the preferred slot is inactive or strictly busier.
+    pub fn assign(&mut self, session: usize) -> usize {
+        if let Some(&shard) = self.table.get(&session) {
+            return shard;
+        }
+        let preferred = (session_hash(session) % self.loads.len() as u64) as usize;
+        let (min_shard, min_load) =
+            self.least_loaded_active().expect("at least one active shard");
+        let shard = if self.active[preferred] && self.loads[preferred] <= min_load {
+            preferred
+        } else {
+            min_shard
+        };
+        self.loads[shard] += 1;
+        self.table.insert(session, shard);
+        shard
+    }
+
+    /// Shard currently owning a session, if routed.
+    pub fn shard_of(&self, session: usize) -> Option<usize> {
+        self.table.get(&session).copied()
+    }
+
+    /// Sessions resident on a slot.
+    pub fn load(&self, shard: usize) -> usize {
+        self.loads.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Where a session *should* move, if anywhere: always off a drained
+    /// owner, and off an active owner only when the move strictly
+    /// improves balance (owner load exceeds the fleet minimum by more
+    /// than one) — so rebalancing after a scale-up converges instead of
+    /// thrashing. `None` means "stay put".
+    pub fn migration_target(&self, session: usize) -> Option<usize> {
+        let owner = *self.table.get(&session)?;
+        let (best, best_load) = self.least_loaded_active()?;
+        if !self.active[owner] {
+            return Some(best);
+        }
+        if self.loads[owner] > best_load + 1 { Some(best) } else { None }
+    }
+
+    /// Move a routed session to another slot (the dispatcher calls this
+    /// after the snapshot/install handshake commits). Bumps the epoch.
+    pub fn reroute(&mut self, session: usize, to: usize) {
+        let Some(&from) = self.table.get(&session) else { return };
+        if from == to || to >= self.loads.len() {
+            return;
+        }
+        self.loads[from] = self.loads[from].saturating_sub(1);
+        self.loads[to] += 1;
+        self.table.insert(session, to);
+        self.epoch += 1;
+    }
+
+    /// Remove a closed session from the table (also the mid-migration
+    /// close path: a session that terminates while its owner drains
+    /// simply leaves, letting the empty slot retire). Returns the shard
+    /// it was resident on.
+    pub fn release(&mut self, session: usize) -> Option<usize> {
+        let shard = self.table.remove(&session)?;
+        self.loads[shard] = self.loads[shard].saturating_sub(1);
+        Some(shard)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +312,103 @@ mod tests {
         let prefs: std::collections::BTreeSet<u64> =
             (0..16usize).map(|s| session_hash(s) % 4).collect();
         assert!(prefs.len() > 1, "session hash collapsed to one shard");
+    }
+
+    #[test]
+    fn fleet_router_matches_static_router_when_topology_is_fixed() {
+        // With no scale events the elastic router must place sessions
+        // exactly like the static one — placement reports stay stable
+        // when --autoscale is turned on but never triggers.
+        for shards in [1usize, 2, 4] {
+            let mut fixed = Router::new(shards);
+            let mut fleet = FleetRouter::new(shards);
+            for s in 0..23 {
+                assert_eq!(fleet.assign(s), fixed.assign(s), "{shards} shards, session {s}");
+            }
+            assert_eq!(fleet.epoch(), 0, "no topology change, no epoch bump");
+        }
+    }
+
+    #[test]
+    fn request_in_flight_during_handoff_lands_on_the_owner() {
+        // A scale-up bumps the epoch but must NOT silently move routed
+        // sessions: the request already queued for session 3 still
+        // resolves to its pre-handoff owner until the dispatcher
+        // explicitly reroutes after the snapshot/install handshake.
+        let mut r = FleetRouter::new(1);
+        for s in 0..4 {
+            r.assign(s);
+        }
+        let owner = r.shard_of(3).unwrap();
+        let e0 = r.epoch();
+        let fresh = r.add_shard();
+        assert!(r.epoch() > e0, "scale-up must bump the epoch");
+        assert_eq!(r.shard_of(3), Some(owner), "handoff must not teleport sessions");
+        // Rebalance converges: 4-vs-0 migrates until the gap is ≤ 1.
+        let mut moved = 0;
+        while let Some(target) = r.migration_target(3 - moved) {
+            assert_eq!(target, fresh);
+            r.reroute(3 - moved, target);
+            moved += 1;
+        }
+        assert_eq!(moved, 2, "4:0 split rebalances to 2:2, then stops");
+        assert_eq!((r.load(0), r.load(fresh)), (2, 2));
+    }
+
+    #[test]
+    fn session_closed_mid_migration_releases_and_unblocks_retire() {
+        let mut r = FleetRouter::new(2);
+        for s in 0..4 {
+            r.assign(s);
+        }
+        let victim = r.highest_active().unwrap();
+        assert!(r.drain(victim));
+        assert!(!r.drain(victim), "double drain is a no-op");
+        // Every resident of the drained shard is a migration candidate…
+        let resident: Vec<usize> =
+            (0..4).filter(|&s| r.shard_of(s) == Some(victim)).collect();
+        assert!(!resident.is_empty());
+        for &s in &resident {
+            assert!(r.migration_target(s).is_some(), "session {s} must want out");
+            // …but closing mid-migration just releases it: no reroute,
+            // no dangling load on either side.
+            assert_eq!(r.release(s), Some(victim));
+            assert_eq!(r.migration_target(s), None, "closed session has no target");
+        }
+        assert_eq!(r.load(victim), 0, "drained shard empties → worker can retire");
+        assert_eq!(r.active_count(), 1);
+    }
+
+    #[test]
+    fn tie_break_after_retire_prefers_lowest_active_id() {
+        let mut r = FleetRouter::new(3);
+        assert!(r.drain(1));
+        // Slots 0 and 2 are tied at load 0; new sessions must land on
+        // the lowest ACTIVE id first (never the drained slot 1), and
+        // migration targets obey the same order.
+        let first = (0..6).map(|s| r.assign(s)).collect::<Vec<_>>();
+        assert!(first.iter().all(|&s| s != 1), "drained slot admitted a session");
+        assert!(first.contains(&0) && first.contains(&2), "both active slots used");
+        assert!(r.load(0).abs_diff(r.load(2)) <= 1, "active slots stay balanced");
+        assert_eq!(r.highest_active(), Some(2));
+    }
+
+    #[test]
+    fn fleet_epoch_is_monotone_across_topology_changes() {
+        let mut r = FleetRouter::new(1);
+        let mut last = r.epoch();
+        r.assign(0);
+        r.assign(1);
+        assert_eq!(r.epoch(), last, "assignment alone is not a topology change");
+        for _ in 0..3 {
+            r.add_shard();
+            assert!(r.epoch() > last);
+            last = r.epoch();
+        }
+        r.reroute(0, 1);
+        assert!(r.epoch() > last);
+        last = r.epoch();
+        r.drain(3);
+        assert!(r.epoch() > last);
     }
 }

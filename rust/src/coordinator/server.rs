@@ -29,6 +29,9 @@
 use crate::baselines::{make_generator, Generator};
 use crate::config::{AdaptMode, Method, SpecParams, EMBED_DIM, VERIFY_BATCH};
 use crate::coordinator::batcher::{Batcher, Policy};
+use crate::coordinator::fleet::{
+    AutoscaleConfig, ElasticFleet, ElasticReport, SessionSnapshot, ShardMsg, ShardShared,
+};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::qos::{degrade_params, PressureGauge, QosConfig, ShedReason};
 use crate::coordinator::request::{SegmentProgress, SegmentReply, SegmentRequest, SegmentResponse};
@@ -105,6 +108,13 @@ pub struct ServeOptions {
     /// changes serving behavior — clocks are read, never branched on,
     /// so served bits are identical with observability on or off.
     pub obs: ObsConfig,
+    /// Elastic fleet (`--autoscale`): spawn/retire shard workers at
+    /// runtime, with bit-identical session migration. `None` (the
+    /// default) serves on the fixed fleet exactly as before; when set,
+    /// `shards` is ignored — the fleet starts at
+    /// [`AutoscaleConfig::min_shards`] and breathes between `min` and
+    /// `max`. See [`crate::coordinator::fleet`].
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for ServeOptions {
@@ -129,6 +139,7 @@ impl Default for ServeOptions {
             learner: LearnerConfig::default(),
             qos: QosConfig::default(),
             obs: ObsConfig::default(),
+            autoscale: None,
         }
     }
 }
@@ -174,6 +185,10 @@ pub struct ServeReport {
     /// What the observability layer exported (`None` unless the run
     /// requested tracing or the flight recorder).
     pub obs: Option<ObsReport>,
+    /// What the elastic fleet did (`None` unless the run served with
+    /// `autoscale`): scale decisions, migrations, peak/final shard
+    /// counts.
+    pub elastic: Option<ElasticReport>,
 }
 
 impl ServeReport {
@@ -277,12 +292,65 @@ fn ingest_request(
     batcher.push(req);
 }
 
+/// Handle one queue message. Serving requests (`Segment`) pass through
+/// to deadline-aware admission; control messages execute the migration
+/// protocol against this shard's per-session engine state (the RNG
+/// stream and, for baselines, the generator — the *only* engine-side
+/// state that outlives a request; everything else is round-local or
+/// driver-side, see `crate::coordinator::fleet`).
+#[allow(clippy::too_many_arguments)]
+fn ingest_msg(
+    msg: ShardMsg,
+    rngs: &mut HashMap<usize, Rng>,
+    generators: &mut HashMap<usize, Box<dyn Generator>>,
+    qos: &QosConfig,
+    gauge: &PressureGauge,
+    pending: usize,
+    batcher: &mut Batcher,
+    metrics: &mut ServerMetrics,
+    shard: usize,
+) {
+    match msg {
+        ShardMsg::Segment(req) => {
+            ingest_request(req, qos, gauge, pending, batcher, metrics, shard)
+        }
+        ShardMsg::Snapshot { session, reply } => {
+            // Migration step 1: surrender the session's engine state.
+            // `None` entries mean this shard never admitted the session
+            // (or it runs TS-DP and keeps no generator) — the target
+            // then lazily rebuilds exactly what this shard would have.
+            // A hung-up dispatcher (teardown) makes the send moot.
+            let _ = reply.send(SessionSnapshot {
+                session,
+                rng: rngs.remove(&session),
+                generator: generators.remove(&session),
+            });
+        }
+        ShardMsg::Install(snap) => {
+            // Migration step 2: adopt the state verbatim. The moved RNG
+            // resumes mid-stream, so the next request draws the exact
+            // bytes the source shard would have drawn.
+            if let Some(rng) = snap.rng {
+                rngs.insert(snap.session, rng);
+            }
+            if let Some(generator) = snap.generator {
+                generators.insert(snap.session, generator);
+            }
+        }
+        ShardMsg::Close { session } => {
+            rngs.remove(&session);
+            generators.remove(&session);
+        }
+    }
+}
+
 /// One shard worker's engine loop: owns the replica, a batcher, and a
 /// job table; runs until every sender to its queue hangs up. On error
 /// the caller drains the queue so blocked sessions observe a hangup.
+#[allow(clippy::too_many_arguments)]
 fn run_shard(
     den: &dyn Denoiser,
-    rx: &mpsc::Receiver<SegmentRequest>,
+    rx: &mpsc::Receiver<ShardMsg>,
     batcher: &mut Batcher,
     metrics: &mut ServerMetrics,
     shard: usize,
@@ -290,6 +358,7 @@ fn run_shard(
     opts: &ServeOptions,
     rec: &mut SpanRecorder,
     flight: &mut Option<FlightRecorder>,
+    shared: &ShardShared,
 ) -> Result<()> {
     let max_batch = opts.max_batch.max(1);
     let engine = SpecEngine::new();
@@ -332,9 +401,12 @@ fn run_shard(
         // --- 1. ingest (deadline-aware admission at the boundary) ---
         if open && jobs.is_empty() && batcher.is_empty() {
             match rx.recv() {
-                Ok(req) => {
+                Ok(msg) => {
                     let pending = batcher.len() + jobs.len();
-                    ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
+                    ingest_msg(
+                        msg, &mut rngs, &mut generators, &opts.qos, &gauge, pending, batcher,
+                        metrics, shard,
+                    );
                 }
                 Err(_) => {
                     open = false;
@@ -344,13 +416,17 @@ fn run_shard(
         }
         if open {
             // Opportunistically drain whatever else is queued.
-            while let Ok(req) = rx.try_recv() {
+            while let Ok(msg) = rx.try_recv() {
                 let pending = batcher.len() + jobs.len();
-                ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
+                ingest_msg(
+                    msg, &mut rngs, &mut generators, &opts.qos, &gauge, pending, batcher,
+                    metrics, shard,
+                );
             }
             // Wave formation: with no round in flight, linger briefly so
             // concurrent sessions land in the same first wave. Never
-            // delays jobs already mid-round.
+            // delays jobs already mid-round. (Control messages never
+            // extend the batcher, so they cannot prolong the linger.)
             if jobs.is_empty() && !opts.batch_window.is_zero() {
                 let deadline = Instant::now() + opts.batch_window;
                 while batcher.len() < wave_target {
@@ -359,9 +435,12 @@ fn run_shard(
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(req) => {
+                        Ok(msg) => {
                             let pending = batcher.len() + jobs.len();
-                            ingest_request(req, &opts.qos, &gauge, pending, batcher, metrics, shard);
+                            ingest_msg(
+                                msg, &mut rngs, &mut generators, &opts.qos, &gauge, pending,
+                                batcher, metrics, shard,
+                            );
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -372,6 +451,9 @@ fn run_shard(
                 }
             }
         }
+        // Publish the autoscale signal (lock-free; read by the elastic
+        // supervisor at dwell granularity, a constant on static fleets).
+        shared.publish(gauge.pressure(batcher.len() + jobs.len()), batcher.len() + jobs.len());
 
         if !clock_armed && !batcher.is_empty() {
             metrics.restart_clock();
@@ -679,10 +761,14 @@ fn run_shard(
                     policy_epoch: metrics.policy_epoch_max,
                     served: metrics.requests,
                     sheds: metrics.shed_total(),
+                    fleet_shards: shared.fleet_shards(),
                 });
             }
         }
     }
+    // Hung up: nothing pending here anymore; zero the published signal
+    // so a draining supervisor never reads stale pressure.
+    shared.publish(0.0, 0);
     // Arena accounting: peak KV-block demand of this shard's drafter
     // wave arena, when the backend batches over one.
     if let Some(blocks) = den.kv_arena_high_water() {
@@ -704,15 +790,20 @@ pub(crate) type ShardJoin = (ServerMetrics, SpanRecorder, Vec<FlightSample>, Res
 ///
 /// `assigned` is the wave-formation hint (how many sessions can
 /// structurally share a first wave); frontends that learn about
-/// sessions dynamically pass `opts.max_batch`.
+/// sessions dynamically pass `opts.max_batch`. `shared` is the
+/// lock-free gauge block the worker publishes its backlog estimate
+/// through (the elastic supervisor's scale signal; a constant-fleet
+/// block on static fleets).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn shard_worker(
     make_replica: &ReplicaFactory<'_>,
     shard: usize,
-    rx: mpsc::Receiver<SegmentRequest>,
+    rx: mpsc::Receiver<ShardMsg>,
     assigned: usize,
     opts: &ServeOptions,
     obs_epoch: Instant,
     ready: Option<mpsc::Sender<()>>,
+    shared: &ShardShared,
 ) -> ShardJoin {
     let mut metrics = ServerMetrics::for_shard(shard);
     let mut batcher = Batcher::with_aging_limit(opts.policy, opts.qos.aging_limit);
@@ -746,6 +837,7 @@ pub(crate) fn shard_worker(
             opts,
             &mut rec,
             &mut flight,
+            shared,
         )
     });
     // Shard done (or failed): freeze the serving window, drain buffered
@@ -772,7 +864,11 @@ type FleetJoin = (
 );
 
 /// Format a `std::thread` join panic payload into an error.
-fn panic_to_error(role: &str, idx: usize, payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+pub(crate) fn panic_to_error(
+    role: &str,
+    idx: usize,
+    payload: Box<dyn std::any::Any + Send>,
+) -> anyhow::Error {
     let msg = payload
         .downcast_ref::<&str>()
         .map(|s| s.to_string())
@@ -791,6 +887,9 @@ fn panic_to_error(role: &str, idx: usize, payload: Box<dyn std::any::Any + Send>
 /// errors *and panics* also fail the call instead of being swallowed.
 pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<ServeReport> {
     anyhow::ensure!(!opts.workload.is_empty(), "serve() needs at least one session spec");
+    if opts.autoscale.is_some() {
+        return serve_elastic(make_replica, opts);
+    }
     // Never run more shards than sessions: with balance-within-one
     // routing this guarantees every worker hosts at least one session,
     // so no replica is compiled for a shard that would sit idle.
@@ -803,7 +902,7 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
     let mut senders = Vec::with_capacity(shards);
     let mut receivers = Vec::with_capacity(shards);
     for _ in 0..shards {
-        let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
+        let (tx, rx) = mpsc::sync_channel::<ShardMsg>(opts.queue_capacity);
         senders.push(tx);
         receivers.push(rx);
     }
@@ -845,8 +944,20 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
                 let assigned = router.load(shard);
                 let opts_ref = &*opts;
                 let ready = ready_tx.clone();
+                // Fixed fleet: the gauge block is still published (the
+                // flight recorder samples it) but no supervisor reads it.
+                let shared = ShardShared::fixed(shards);
                 workers.push(scope.spawn(move || -> ShardJoin {
-                    shard_worker(make_replica, shard, rx, assigned, opts_ref, obs_epoch, Some(ready))
+                    shard_worker(
+                        make_replica,
+                        shard,
+                        rx,
+                        assigned,
+                        opts_ref,
+                        obs_epoch,
+                        Some(ready),
+                        &shared,
+                    )
                 }));
             }
             drop(ready_tx);
@@ -976,7 +1087,140 @@ pub fn serve(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<S
 
     let mut metrics = ServerMetrics::merge_fleet(&shard_metrics);
     let obs = export_obs(opts, shards, &obs_sink, &shard_recs, flight_samples, &mut metrics)?;
-    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner, obs })
+    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner, obs, elastic: None })
+}
+
+/// Serve on the **elastic** fleet: session drivers feed one dispatcher
+/// ([`ElasticFleet`]) instead of fixed per-shard queues; the dispatcher
+/// routes, migrates, and applies the scale policy while shard workers
+/// run the exact same engine loop as the static fleet. Served bits are
+/// identical to a static run of the same workload and seed — migration
+/// physically moves each session's RNG stream (and baseline generator)
+/// between shards at request boundaries, so no draw is ever skipped or
+/// replayed. See `crate::coordinator::fleet` for the protocol and
+/// `docs/ARCHITECTURE.md` for the full determinism contract.
+fn serve_elastic(make_replica: &ReplicaFactory<'_>, opts: &ServeOptions) -> Result<ServeReport> {
+    let auto = opts.autoscale.clone().expect("serve_elastic requires autoscale options");
+    auto.validate()?;
+    anyhow::ensure!(
+        !(opts.adapt == AdaptMode::Online && opts.scheduler.is_some()),
+        "--adapt online is not supported with --autoscale: the experience hub sizes its \
+         per-shard buffers at serve() start and cannot follow a resizing fleet — run \
+         online adaptation on a fixed fleet, or autoscale with a frozen policy"
+    );
+    let store: Option<Arc<PolicyStore>> =
+        opts.scheduler.clone().map(|p| Arc::new(PolicyStore::new(p)));
+    let obs_epoch = Instant::now();
+    let obs_sink = Arc::new(SpanSink::new(
+        obs_epoch,
+        opts.obs.effective_ring_cap(),
+        opts.obs.tracing(),
+    ));
+    // One inbound queue: every session driver sends here; the
+    // dispatcher fans out to the (breathing) per-shard queues.
+    let (in_tx, in_rx) = mpsc::sync_channel::<ShardMsg>(opts.queue_capacity.max(1));
+
+    type ElasticJoin =
+        (Vec<ShardJoin>, ElasticReport, Vec<SessionReport>, Option<anyhow::Error>);
+    let (joins, ereport, reports, session_err) =
+        std::thread::scope(|scope| -> ElasticJoin {
+            let mut fleet = ElasticFleet::new(
+                scope,
+                make_replica,
+                opts,
+                auto.clone(),
+                obs_epoch,
+                obs_sink.clone(),
+            );
+            // Known-up-front workload: place sessions in id order so the
+            // initial assignment is deterministic and reportable (the
+            // HTTP frontend, which learns sessions dynamically, skips
+            // this and assigns on first request).
+            let placements: Vec<usize> =
+                (0..opts.workload.len()).map(|s| fleet.preassign(s)).collect();
+            let mut session_handles = Vec::with_capacity(opts.workload.len());
+            for (s, spec) in opts.workload.iter().enumerate() {
+                let adaptive = if spec.method == Method::TsDp {
+                    store.as_ref().map(|st| SessionScheduler {
+                        store: st.clone(),
+                        mode: opts.adapt,
+                        sink: None,
+                        explore_seed: opts.seed ^ ((s as u64 + 1) << 40) ^ 0x9e37_79b9,
+                    })
+                } else {
+                    None
+                };
+                let cfg = SessionConfig {
+                    session: s,
+                    spec: *spec,
+                    shard: placements[s],
+                    seed: opts.seed ^ ((s as u64 + 1) << 32),
+                    adaptive,
+                    obs: Some(obs_sink.clone()),
+                };
+                let tx = in_tx.clone();
+                session_handles.push(scope.spawn(move || run_session(cfg, tx)));
+            }
+            drop(in_tx);
+            // The dispatcher runs inline on the scope's thread; it
+            // returns once every driver has hung up, with all shard
+            // workers already joined.
+            let (joins, ereport) = fleet.run(in_rx);
+            let mut reports = Vec::new();
+            let mut session_err: Option<anyhow::Error> = None;
+            for (s, h) in session_handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(r)) => reports.push(r),
+                    Ok(Err(e)) => session_err = Some(e),
+                    Err(payload) => session_err = Some(panic_to_error("session", s, payload)),
+                }
+            }
+            (joins, ereport, reports, session_err)
+        });
+
+    // Same precedence as the static fleet: a shard error is the root
+    // cause (session errors are usually its fallout).
+    let mut shard_metrics = Vec::with_capacity(joins.len());
+    let mut shard_recs = Vec::with_capacity(joins.len());
+    let mut flight_samples: Vec<FlightSample> = Vec::new();
+    let mut shard_err: Option<anyhow::Error> = None;
+    for (m, rec, samples, result) in joins {
+        shard_metrics.push(m);
+        shard_recs.push(rec);
+        flight_samples.extend(samples);
+        if let Err(e) = result {
+            if shard_err.is_none() {
+                shard_err = Some(e);
+            }
+        }
+    }
+    if let Some(e) = shard_err {
+        return Err(e);
+    }
+    if let Some(e) = session_err {
+        return Err(e);
+    }
+
+    let mut metrics = ServerMetrics::merge_fleet(&shard_metrics);
+    metrics.scale_ups = ereport.scale_ups;
+    metrics.scale_downs = ereport.scale_downs;
+    metrics.migrations = ereport.migrations;
+    let obs = export_obs(
+        opts,
+        shard_metrics.len(),
+        &obs_sink,
+        &shard_recs,
+        flight_samples,
+        &mut metrics,
+    )?;
+    Ok(ServeReport {
+        metrics,
+        shard_metrics,
+        sessions: reports,
+        learner: None,
+        obs,
+        elastic: Some(ereport),
+    })
 }
 
 /// Export the run's observability artifacts (Chrome trace JSON, flight

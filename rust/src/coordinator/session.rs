@@ -18,6 +18,7 @@
 
 use crate::config::{SpecParams, ACT_DIM, EXEC_STEPS, HORIZON};
 use crate::config::{Method, Task};
+use crate::coordinator::fleet::ShardMsg;
 use crate::coordinator::qos::ShedReason;
 use crate::coordinator::request::{SegmentProgress, SegmentRequest, SegmentResponse};
 use crate::coordinator::workload::SessionSpec;
@@ -155,7 +156,7 @@ pub struct SegmentEvent {
 /// step until `None`.
 pub struct SessionDriver {
     cfg: SessionConfig,
-    tx: mpsc::SyncSender<SegmentRequest>,
+    tx: mpsc::SyncSender<ShardMsg>,
     env: Box<dyn Env>,
     hook: Option<crate::scheduler::ServingHook>,
     report: SessionReport,
@@ -176,7 +177,7 @@ pub struct SessionDriver {
 impl SessionDriver {
     /// Build the driver: constructs the env and scheduler hook; nothing
     /// runs until the first [`SessionDriver::step`].
-    pub fn new(cfg: SessionConfig, tx: mpsc::SyncSender<SegmentRequest>) -> Self {
+    pub fn new(cfg: SessionConfig, tx: mpsc::SyncSender<ShardMsg>) -> Self {
         let mut cfg = cfg;
         let env = make_env(cfg.spec.task, cfg.spec.style);
         // Move the scheduler handle into the hook (it is not reused from
@@ -268,7 +269,14 @@ impl SessionDriver {
     }
 
     /// Finalize: derived means are computed here, after the last step.
+    ///
+    /// Also announces the close to the serving side (best-effort): the
+    /// static fleet's shard drops the session's engine state, and the
+    /// elastic dispatcher additionally releases the routing slot — the
+    /// signal that lets a draining shard retire once it empties. A
+    /// hung-up channel is fine (the fleet is already tearing down).
     pub fn finish(mut self) -> SessionReport {
+        let _ = self.tx.send(ShardMsg::Close { session: self.cfg.session });
         self.report.mean_latency = self.latency_sum / self.report.segments.max(1) as f64;
         self.report
     }
@@ -312,7 +320,7 @@ impl SessionDriver {
         let (reply_tx, reply_rx) = mpsc::sync_channel::<SegmentResponse>(1);
         let submitted = Instant::now();
         self.tx
-            .send(SegmentRequest {
+            .send(ShardMsg::Segment(SegmentRequest {
                 session: self.cfg.session,
                 spec: self.cfg.spec,
                 obs,
@@ -321,19 +329,21 @@ impl SessionDriver {
                 submitted,
                 reply: reply_tx,
                 progress,
-            })
+            }))
             .ok()
             .context("shard closed the request channel")?;
         let reply = match reply_rx.recv().context("shard dropped the reply")? {
             SegmentResponse::Served(reply) => reply,
-            SegmentResponse::Shed { shard, reason, retry_after_ms } => {
+            SegmentResponse::Shed { shard: _, reason, retry_after_ms } => {
                 // Typed rejection from admission control: execute the
                 // *unexecuted tail* of the previous plan (the
                 // receding-horizon hold), standing still once it is
                 // spent or before the first segment — the env's step
                 // limit still advances either way, so a saturated fleet
-                // can never wedge the session.
-                debug_assert_eq!(shard, self.cfg.shard, "cross-shard shed");
+                // can never wedge the session. (The replying shard may
+                // legitimately differ from `cfg.shard` on elastic
+                // fleets: `cfg.shard` records admission-time placement,
+                // and migration can move the session afterwards.)
                 self.report.sheds += 1;
                 let hold = self.last_plan.take().unwrap_or_default();
                 let zeros = [0.0f32; ACT_DIM];
@@ -355,9 +365,10 @@ impl SessionDriver {
                 });
             }
         };
-        // Placement sanity: the reply must come from the shard the
-        // router assigned this session to at admission.
-        debug_assert_eq!(reply.shard, self.cfg.shard, "cross-shard reply");
+        // `reply.shard` attributes the serving shard. On the static
+        // fleet it always equals `cfg.shard`; on elastic fleets it can
+        // differ after a migration (placement is reporting, never a
+        // correctness anchor — served bits are placement-independent).
         let latency = submitted.elapsed().as_secs_f64();
         self.latency_sum += latency;
         self.report.segments += 1;
@@ -433,7 +444,7 @@ impl SessionDriver {
 /// the same driver one segment at a time instead.)
 pub fn run_session(
     cfg: SessionConfig,
-    tx: mpsc::SyncSender<SegmentRequest>,
+    tx: mpsc::SyncSender<ShardMsg>,
 ) -> Result<SessionReport> {
     let mut driver = SessionDriver::new(cfg, tx);
     while driver.step(None)?.is_some() {}

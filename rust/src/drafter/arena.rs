@@ -16,6 +16,13 @@
 //! per-session buffers — the arena moves allocations and locality,
 //! never bits (pinned by the property tests below and the wave-vs-
 //! serial suites in `drafter::model` / `drafter::backend`).
+//!
+//! Round-locality is also what makes elastic-fleet session migration
+//! cheap: because every chain is released at the end of its speculative
+//! round, a session that moves shards at a request boundary leaves
+//! **nothing** behind in the source shard's arena and needs nothing
+//! pre-warmed in the destination's — the arena is deliberately absent
+//! from `SessionSnapshot` (see [`crate::coordinator::fleet`]).
 
 /// Tokens per KV block. Small enough that a k = 1 round strands at
 /// most 3 slots; large enough that a K_MAX = 16 round chains only 4

@@ -45,6 +45,17 @@
 //! Online scheduler adaptation is rejected at startup: the HTTP path
 //! spawns no learner, so `--adapt online` would silently freeze.
 //!
+//! ## Elastic fleets
+//!
+//! With [`ServeOptions::autoscale`] set, the per-shard queues above are
+//! replaced by the elastic dispatcher's single inbound queue
+//! ([`crate::coordinator::fleet`]): the dispatcher spawns and retires
+//! shard workers at runtime, and HTTP sessions survive live resharding
+//! because each session's RNG stream migrates between shards
+//! deterministically at request boundaries — the bit-identity contract
+//! above holds verbatim (pinned by the elastic leg of
+//! `tests/http_frontend.rs`).
+//!
 //! ## Shutdown
 //!
 //! With [`HttpOptions::max_sessions`] set, the gateway stops accepting
@@ -55,12 +66,14 @@
 //! With `None` it serves until the process dies.
 
 use crate::config::{AdaptMode, Method};
+use crate::coordinator::fleet::{ElasticFleet, ElasticReport, ShardMsg, ShardShared};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::qos::{QosClass, ShedReason};
-use crate::coordinator::request::{SegmentProgress, SegmentRequest};
+use crate::coordinator::request::SegmentProgress;
 use crate::coordinator::router::Router;
 use crate::coordinator::server::{
-    export_obs, shard_worker, ReplicaFactory, ServeOptions, ServeReport, ShardJoin,
+    export_obs, panic_to_error, shard_worker, ReplicaFactory, ServeOptions, ServeReport,
+    ShardJoin,
 };
 use crate::coordinator::session::{
     SegmentEvent, SegmentEventKind, SessionConfig, SessionDriver, SessionReport,
@@ -126,10 +139,16 @@ struct GatewayState {
 struct Gateway<'a> {
     opts: &'a ServeOptions,
     http: &'a HttpOptions,
-    /// Per-shard request senders. Cleared at shutdown so shard workers
-    /// observe the hangup (interior mutability because scoped handler
-    /// threads still borrow the gateway at that point).
-    senders: Mutex<Vec<mpsc::SyncSender<SegmentRequest>>>,
+    /// Per-shard request senders (fixed fleet), or the single inbound
+    /// queue of the elastic dispatcher. Cleared at shutdown so shard
+    /// workers observe the hangup (interior mutability because scoped
+    /// handler threads still borrow the gateway at that point).
+    senders: Mutex<Vec<mpsc::SyncSender<ShardMsg>>>,
+    /// True on autoscaled runs: every session sends to `senders[0]`
+    /// (the dispatcher's inbound queue) and the `router` below is
+    /// reporting-only — real placement (and migration) is the
+    /// dispatcher's job.
+    dispatch: bool,
     router: Mutex<Router>,
     store: Option<Arc<PolicyStore>>,
     obs_sink: Arc<SpanSink>,
@@ -173,18 +192,35 @@ pub fn serve_http(
         "online scheduler adaptation is not supported over the HTTP frontend \
          (no learner is spawned); serve with --adapt frozen"
     );
+    let auto = opts.autoscale.clone();
+    if let Some(a) = &auto {
+        a.validate()?;
+    }
     // NOT effective_shards(): the HTTP workload is discovered
     // dynamically, so `opts.workload` (typically empty here) must not
-    // clamp the fleet to one shard.
-    let shards = opts.shards.max(1);
+    // clamp the fleet to one shard. Elastic fleets start at min_shards
+    // and let the dispatcher breathe the count from there.
+    let shards = match &auto {
+        Some(a) => a.min_shards.max(1),
+        None => opts.shards.max(1),
+    };
     let local_addr = listener.local_addr()?;
 
     let mut senders = Vec::with_capacity(shards);
     let mut receivers = Vec::with_capacity(shards);
-    for _ in 0..shards {
-        let (tx, rx) = mpsc::sync_channel::<SegmentRequest>(opts.queue_capacity);
+    let mut elastic_rx: Option<mpsc::Receiver<ShardMsg>> = None;
+    if auto.is_some() {
+        // One inbound queue: every HTTP session sends here; the
+        // dispatcher fans out to the per-shard queues it owns.
+        let (tx, rx) = mpsc::sync_channel::<ShardMsg>(opts.queue_capacity.max(1));
         senders.push(tx);
-        receivers.push(rx);
+        elastic_rx = Some(rx);
+    } else {
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(opts.queue_capacity);
+            senders.push(tx);
+            receivers.push(rx);
+        }
     }
     let obs_epoch = Instant::now();
     let obs_sink = Arc::new(SpanSink::new(
@@ -196,6 +232,7 @@ pub fn serve_http(
         opts,
         http,
         senders: Mutex::new(senders),
+        dispatch: auto.is_some(),
         router: Mutex::new(Router::new(shards)),
         store: opts.scheduler.clone().map(|p| Arc::new(PolicyStore::new(p))),
         obs_sink: obs_sink.clone(),
@@ -205,33 +242,50 @@ pub fn serve_http(
         http_status: Mutex::new(BTreeMap::new()),
     };
 
-    let (shard_metrics, shard_recs, flight_samples, mut reports) =
+    let (shard_metrics, shard_recs, flight_samples, mut reports, ereport) =
         std::thread::scope(|scope| -> Result<_> {
-            // Same readiness barrier as the in-process fleet: accept no
-            // traffic until every replica attempt resolved.
-            let (ready_tx, ready_rx) = mpsc::channel::<()>();
             let mut workers = Vec::with_capacity(shards);
-            for (shard, rx) in receivers.into_iter().enumerate() {
-                let ready = ready_tx.clone();
-                let opts_ref = opts;
-                // Wave-formation hint: sessions arrive dynamically, so
-                // up to max_batch of them can share a first wave.
-                workers.push(scope.spawn(move || -> ShardJoin {
-                    shard_worker(
-                        make_replica,
-                        shard,
-                        rx,
-                        opts_ref.max_batch.max(1),
-                        opts_ref,
-                        obs_epoch,
-                        Some(ready),
-                    )
+            let mut supervisor = None;
+            if let Some(a) = auto.clone() {
+                let rx = elastic_rx.take().expect("elastic inbound receiver");
+                let sink = obs_sink.clone();
+                // The dispatcher owns worker lifecycle (spawn, drain,
+                // retire, join). Its constructor blocks until every
+                // initial replica is ready, so the readiness barrier is
+                // internal; early HTTP requests just queue on the
+                // inbound channel meanwhile.
+                supervisor = Some(scope.spawn(move || {
+                    ElasticFleet::new(scope, make_replica, opts, a, obs_epoch, sink).run(rx)
                 }));
-            }
-            drop(ready_tx);
-            for _ in 0..shards {
-                if ready_rx.recv().is_err() {
-                    break;
+            } else {
+                // Same readiness barrier as the in-process fleet:
+                // accept no traffic until every replica attempt
+                // resolved.
+                let (ready_tx, ready_rx) = mpsc::channel::<()>();
+                for (shard, rx) in receivers.into_iter().enumerate() {
+                    let ready = ready_tx.clone();
+                    let opts_ref = opts;
+                    let shared = ShardShared::fixed(shards);
+                    // Wave-formation hint: sessions arrive dynamically,
+                    // so up to max_batch of them can share a first wave.
+                    workers.push(scope.spawn(move || -> ShardJoin {
+                        shard_worker(
+                            make_replica,
+                            shard,
+                            rx,
+                            opts_ref.max_batch.max(1),
+                            opts_ref,
+                            obs_epoch,
+                            Some(ready),
+                            &shared,
+                        )
+                    }));
+                }
+                drop(ready_tx);
+                for _ in 0..shards {
+                    if ready_rx.recv().is_err() {
+                        break;
+                    }
                 }
             }
 
@@ -259,31 +313,42 @@ pub fn serve_http(
             gw.state.lock().expect("state lock").slots.clear();
             gw.senders.lock().expect("senders lock").clear();
 
-            let mut shard_metrics = Vec::with_capacity(shards);
-            let mut shard_recs = Vec::with_capacity(shards);
-            let mut flight_samples = Vec::new();
+            // Collect every shard's join — from our own worker handles
+            // on a fixed fleet, or from the dispatcher (which joined
+            // them already) on an elastic one.
+            let mut joins: Vec<ShardJoin> = Vec::new();
+            let mut ereport: Option<ElasticReport> = None;
             let mut shard_err: Option<anyhow::Error> = None;
-            for (shard, h) in workers.into_iter().enumerate() {
-                match h.join() {
-                    Ok((metrics, rec, samples, result)) => {
-                        shard_metrics.push(metrics);
-                        shard_recs.push(rec);
-                        flight_samples.extend(samples);
-                        if let Err(e) = result {
+            if let Some(sup) = supervisor {
+                match sup.join() {
+                    Ok((j, rep)) => {
+                        joins = j;
+                        ereport = Some(rep);
+                    }
+                    Err(payload) => shard_err = Some(panic_to_error("dispatcher", 0, payload)),
+                }
+            } else {
+                for (shard, h) in workers.into_iter().enumerate() {
+                    match h.join() {
+                        Ok(join) => joins.push(join),
+                        Err(payload) => {
                             if shard_err.is_none() {
-                                shard_err = Some(e);
+                                shard_err = Some(panic_to_error("shard", shard, payload));
                             }
                         }
                     }
-                    Err(payload) => {
-                        if shard_err.is_none() {
-                            let msg = payload
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                                .or_else(|| payload.downcast_ref::<String>().cloned())
-                                .unwrap_or_else(|| "<non-string panic payload>".into());
-                            shard_err = Some(anyhow!("shard {shard} panicked: {msg}"));
-                        }
+                }
+            }
+            let mut shard_metrics = Vec::with_capacity(joins.len());
+            let mut shard_recs = Vec::with_capacity(joins.len());
+            let mut flight_samples = Vec::new();
+            for (metrics, rec, samples, result) in joins {
+                shard_metrics.push(metrics);
+                shard_recs.push(rec);
+                flight_samples.extend(samples);
+                if let Err(e) = result {
+                    if shard_err.is_none() {
+                        shard_err = Some(e);
                     }
                 }
             }
@@ -291,7 +356,7 @@ pub fn serve_http(
                 return Err(e);
             }
             let reports = std::mem::take(&mut gw.state.lock().expect("state lock").reports);
-            Ok((shard_metrics, shard_recs, flight_samples, reports))
+            Ok((shard_metrics, shard_recs, flight_samples, reports, ereport))
         })?;
 
     reports.sort_by_key(|r| r.session);
@@ -299,8 +364,27 @@ pub fn serve_http(
     for (&status, &n) in gw.http_status.lock().expect("status lock").iter() {
         *metrics.http_status.entry(status).or_insert(0) += n;
     }
-    let obs = export_obs(opts, shards, &obs_sink, &shard_recs, flight_samples, &mut metrics)?;
-    Ok(ServeReport { metrics, shard_metrics, sessions: reports, learner: None, obs })
+    if let Some(rep) = &ereport {
+        metrics.scale_ups = rep.scale_ups;
+        metrics.scale_downs = rep.scale_downs;
+        metrics.migrations = rep.migrations;
+    }
+    let obs = export_obs(
+        opts,
+        shard_metrics.len(),
+        &obs_sink,
+        &shard_recs,
+        flight_samples,
+        &mut metrics,
+    )?;
+    Ok(ServeReport {
+        metrics,
+        shard_metrics,
+        sessions: reports,
+        learner: None,
+        obs,
+        elastic: ereport,
+    })
 }
 
 /// One connection's keep-alive loop: parse → route → handle → repeat
@@ -456,7 +540,18 @@ fn try_open(gw: &Gateway<'_>, req: &Request) -> Result<(u64, usize), HttpError> 
         adaptive,
         obs: Some(gw.obs_sink.clone()),
     };
-    let tx = gw.senders.lock().expect("senders lock")[shard].clone();
+    let tx = {
+        let senders = gw.senders.lock().expect("senders lock");
+        // Elastic fleets have one inbound queue (the dispatcher's);
+        // `shard` is then only the gateway's placement *estimate* for
+        // the open response — the dispatcher assigns (and migrates)
+        // for real, and placement is never a correctness anchor.
+        if gw.dispatch {
+            senders[0].clone()
+        } else {
+            senders[shard].clone()
+        }
+    };
     state.slots.insert(s as u64, Slot::Idle(Box::new(SessionDriver::new(cfg, tx))));
     state.opened += 1;
     Ok((s as u64, shard))

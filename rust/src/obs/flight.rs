@@ -52,6 +52,9 @@ pub struct FlightGauges {
     /// Requests shed so far (cumulative counter; rates are first
     /// differences between samples).
     pub sheds: u64,
+    /// Active shard workers in the fleet at snapshot time (constant on
+    /// a fixed fleet; breathes between min and max under `--autoscale`).
+    pub fleet_shards: usize,
 }
 
 /// One timestamped gauge snapshot.
@@ -86,6 +89,7 @@ impl FlightSample {
             ("policy_epoch", Json::Num(g.policy_epoch as f64)),
             ("served", Json::Num(g.served as f64)),
             ("sheds", Json::Num(g.sheds as f64)),
+            ("fleet_shards", Json::Num(g.fleet_shards as f64)),
         ])
     }
 
@@ -110,6 +114,12 @@ impl FlightSample {
                 policy_epoch: j.get("policy_epoch")?.as_f64()? as u64,
                 served: j.get("served")?.as_f64()? as u64,
                 sheds: j.get("sheds")?.as_f64()? as u64,
+                // Absent in recordings from before the elastic fleet:
+                // default to 0 rather than failing the whole parse.
+                fleet_shards: match j.get("fleet_shards") {
+                    Ok(v) => v.as_usize()?,
+                    Err(_) => 0,
+                },
             },
         })
     }
@@ -321,6 +331,12 @@ pub fn prometheus(samples: &[FlightSample]) -> String {
         "counter",
         &per_shard(&|s| s.gauges.sheds as f64),
     );
+    gauge(
+        "tsdp_fleet_shards",
+        "Active shard workers in the fleet.",
+        "gauge",
+        &per_shard(&|s| s.gauges.fleet_shards as f64),
+    );
     out
 }
 
@@ -356,6 +372,7 @@ mod tests {
                 policy_epoch: 2,
                 served: 40,
                 sheds: 1,
+                fleet_shards: 2,
             },
         }
     }
@@ -379,6 +396,7 @@ mod tests {
         assert_eq!(back[0].gauges.queue_by_class, [1, 2, 1]);
         assert!((back[0].accept_ewma - 0.9375).abs() < 1e-12);
         assert_eq!(back[0].gauges.served, 40);
+        assert_eq!(back[0].gauges.fleet_shards, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -49,6 +49,9 @@ pub fn session_lane(session: usize) -> u32 {
 /// Lane of the background PPO learner thread.
 pub const LEARNER_LANE: u32 = 60_000;
 
+/// Lane of the elastic-fleet dispatcher (scale decisions + migrations).
+pub const FLEET_LANE: u32 = 61_000;
+
 /// First lane of the HTTP frontend's connection handlers.
 pub const HTTP_LANE_BASE: u32 = 50_000;
 
@@ -62,6 +65,7 @@ pub fn http_lane(conn: usize) -> u32 {
 pub fn lane_name(lane: u32) -> String {
     match lane {
         LEARNER_LANE => "learner".to_string(),
+        FLEET_LANE => "fleet".to_string(),
         l if l < 1_000 => format!("shard {l}"),
         l if l < 2_000 => format!("shard {} queue", l - 1_000),
         l if (HTTP_LANE_BASE..LEARNER_LANE).contains(&l) => {
@@ -103,11 +107,16 @@ pub enum SpanKind {
     /// through final byte — for streamed segments this spans every
     /// flushed chunk, so wire overhead shows up in stage attribution).
     HttpWrite,
+    /// One deterministic session migration on the elastic fleet:
+    /// snapshot request → snapshot received → installed on the target
+    /// shard (`attrs.session` = moved session, `attrs.count` = target
+    /// shard, recorded on [`FLEET_LANE`]).
+    Migration,
 }
 
 impl SpanKind {
     /// Every kind, export order.
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 12] = [
         SpanKind::QueueWait,
         SpanKind::Admission,
         SpanKind::DraftWave,
@@ -119,6 +128,7 @@ impl SpanKind {
         SpanKind::LearnerEpoch,
         SpanKind::HttpParse,
         SpanKind::HttpWrite,
+        SpanKind::Migration,
     ];
 
     /// Stable snake_case name (trace events, attribution tables).
@@ -135,6 +145,7 @@ impl SpanKind {
             SpanKind::LearnerEpoch => "learner_epoch",
             SpanKind::HttpParse => "http_parse",
             SpanKind::HttpWrite => "http_write",
+            SpanKind::Migration => "migration",
         }
     }
 
@@ -504,6 +515,7 @@ mod tests {
         assert_eq!(lane_name(queue_lane(0)), "shard 0 queue");
         assert_eq!(lane_name(session_lane(5)), "session 5");
         assert_eq!(lane_name(LEARNER_LANE), "learner");
+        assert_eq!(lane_name(FLEET_LANE), "fleet");
         assert_eq!(lane_name(http_lane(3)), "http conn 3");
     }
 

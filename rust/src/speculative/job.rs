@@ -13,6 +13,15 @@
 //! posterior means, and noise: the accept scan performs **zero heap
 //! allocations per draft** (see `benches/speculative.rs` for the measured
 //! delta vs the per-draft `vec![0.0; SEG]` churn it replaced).
+//!
+//! **Migration contract.** A `SegmentJob` itself never crosses shards:
+//! under an elastic fleet ([`crate::coordinator::fleet`]) a session
+//! moves only at request boundaries, when it has no job in flight. The
+//! state that migrates is exactly the session's RNG and generator
+//! (wrapped in a `SessionSnapshot`); every draw a job consumes comes
+//! from that RNG in [`SegmentJob::begin_draft`], before wave batching
+//! groups jobs — which is why moving the RNG between shards preserves
+//! bit-identity without the job ever being serialized.
 
 use crate::config::{SpecParams, DIFFUSION_STEPS, DRAFTER_NFE, K_MAX, VERIFY_BATCH};
 use crate::diffusion::{acceptance, coupling, DdpmSchedule};

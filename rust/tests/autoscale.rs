@@ -1,0 +1,216 @@
+//! Elastic-fleet acceptance suite: the autoscaler must *move the
+//! needle* without moving a single bit.
+//!
+//! * **Scripted resharding is lossless and reclaims workers**: a
+//!   [`ScaleEvent`] schedule that scales up mid-load and drains
+//!   mid-session yields bit-identical fingerprints to a fixed fleet,
+//!   ends at `min_shards`, and leaves every retired worker joined.
+//! * **Pressure-driven scale-up helps**: under a realtime burst that
+//!   saturates one shard, an elastic min=1/max=4 fleet must spawn
+//!   shards and beat the frozen 1-shard fleet on realtime-class p95
+//!   latency.
+//! * **Pressure-driven drain engages**: once the burst passes, the
+//!   fleet must start giving shards back.
+//!
+//! Thresholds self-calibrate from the frozen run's measured mean
+//! compute time, so the assertions are about *policy*, not about this
+//! host's absolute speed. Runs entirely against the analytic
+//! `MockDenoiser` (no artifacts).
+
+use std::time::Duration;
+use ts_dp::config::{DemoStyle, Method, Task};
+use ts_dp::coordinator::batcher::Policy;
+use ts_dp::coordinator::qos::{QosClass, QosConfig};
+use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
+use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::coordinator::{AutoscaleConfig, ScaleEvent};
+use ts_dp::policy::mock::MockDenoiser;
+
+/// 16 realtime sessions (the burst) plus one long batch session (the
+/// tail that keeps the fleet alive after the burst passes).
+fn burst_workload() -> Vec<SessionSpec> {
+    WorkloadMix::new()
+        .sessions(
+            SessionSpec::new(Task::Lift, Method::TsDp).with_qos(QosClass::Realtime),
+            16,
+        )
+        .session(
+            SessionSpec::new(Task::Lift, Method::TsDp)
+                .with_style(DemoStyle::Ph)
+                .with_qos(QosClass::Batch)
+                .with_episodes(6),
+        )
+        .build()
+}
+
+/// QoS accounting on (per-class latency reservoirs), every *behavioral*
+/// QoS feature off: no deadlines are set so nothing sheds, and the
+/// degrade threshold is unreachable so nothing degrades. The runs
+/// differ only in fleet shape.
+fn accounting_qos() -> QosConfig {
+    QosConfig { enabled: true, degrade_pressure: f64::INFINITY, ..QosConfig::default() }
+}
+
+fn run_frozen(workload: Vec<SessionSpec>, seed: u64) -> ServeReport {
+    let opts = ServeOptions {
+        workload,
+        shards: 1,
+        queue_capacity: 64,
+        policy: Policy::Fifo,
+        seed,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        qos: accounting_qos(),
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
+}
+
+fn run_elastic(workload: Vec<SessionSpec>, seed: u64, auto: AutoscaleConfig) -> ServeReport {
+    let opts = ServeOptions {
+        workload,
+        queue_capacity: 64,
+        policy: Policy::Fifo,
+        seed,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        qos: accounting_qos(),
+        autoscale: Some(auto),
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
+}
+
+fn rt_p95(report: &ServeReport) -> f64 {
+    report
+        .metrics
+        .qos_class(QosClass::Realtime)
+        .expect("realtime class accounted")
+        .latency_percentile(0.95)
+}
+
+#[test]
+fn scripted_scale_and_drain_preserve_bits_and_reclaim_workers() {
+    // Scale 1 -> 3 while the burst is hot, drain 3 -> 1 while sessions
+    // are still mid-episode: fingerprints and NFE must equal a fixed
+    // single-shard fleet's, and the drained workers must actually be
+    // retired (spawned > final, fleet back at min).
+    let workload = || WorkloadMix::uniform(Task::Lift, DemoStyle::Ph, Method::TsDp, 4, 1).build();
+    let frozen = serve_with(
+        |_shard| MockDenoiser::with_bias(0.05),
+        &ServeOptions {
+            workload: workload(),
+            shards: 1,
+            max_batch: 1,
+            policy: Policy::Fifo,
+            seed: 1234,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let elastic = serve_with(
+        |_shard| MockDenoiser::with_bias(0.05),
+        &ServeOptions {
+            workload: workload(),
+            max_batch: 8,
+            policy: Policy::Fair,
+            seed: 1234,
+            batch_window: Duration::from_micros(200),
+            queue_capacity: 64,
+            autoscale: Some(AutoscaleConfig {
+                min_shards: 1,
+                max_shards: 4,
+                script: vec![
+                    ScaleEvent { after_requests: 5, shards: 3 },
+                    ScaleEvent { after_requests: 20, shards: 1 },
+                ],
+                ..AutoscaleConfig::default()
+            }),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(elastic.session_fingerprints(), frozen.session_fingerprints());
+    let e = elastic.elastic.as_ref().expect("elastic report");
+    assert_eq!(e.peak_shards, 3, "{e:?}");
+    assert_eq!(e.final_shards, 1, "drain-to-min must complete: {e:?}");
+    assert_eq!(e.spawned, 3, "slot ids are append-only: one worker per slot ever");
+    assert!(e.migrations >= 1, "draining resident shards must migrate: {e:?}");
+    assert!(!e.events.is_empty(), "the decision log must record every event");
+    // The decision log is ordered and ends back at min_shards.
+    assert!(e.events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    assert_eq!(e.events.last().unwrap().active, 1);
+    // Counters surface in the fleet summary (legacy shape preserved:
+    // the section exists only because the counters are nonzero).
+    let s = elastic.metrics.summary();
+    assert!(s.contains("elastic=["), "{s}");
+    assert!(!frozen.metrics.summary().contains("elastic=["), "{}", frozen.metrics.summary());
+}
+
+#[test]
+fn pressure_scale_up_beats_the_frozen_fleet_on_rt_p95() {
+    // Acceptance criterion: autoscale must move the needle. Under a
+    // 16-session realtime burst a frozen 1-shard fleet queues ~15 deep;
+    // the elastic fleet must notice (mean pressure >> per-request
+    // service time), spawn shards, and serve the burst with a strictly
+    // better realtime p95.
+    let frozen = run_frozen(burst_workload(), 77);
+    let service = frozen.metrics.compute.mean();
+    assert!(service > 0.0, "calibration run must serve requests");
+    let elastic = run_elastic(
+        burst_workload(),
+        77,
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            // A saturated shard's backlog is ~15x service; a drained
+            // fleet's mean is <= service/4. 4x/1x split the difference
+            // with margin on both sides, whatever this host's speed.
+            scale_up_pressure: service * 4.0,
+            scale_down_pressure: service,
+            dwell: Duration::from_millis(1),
+            script: Vec::new(),
+        },
+    );
+    let e = elastic.elastic.as_ref().expect("elastic report");
+    assert!(e.scale_ups >= 1, "sustained saturation must trigger scale-up: {e:?}");
+    assert!(e.peak_shards >= 2, "{e:?}");
+    assert!(
+        rt_p95(&elastic) < rt_p95(&frozen),
+        "scale-up must cut realtime p95: elastic {:.6}s vs frozen {:.6}s ({e:?})",
+        rt_p95(&elastic),
+        rt_p95(&frozen)
+    );
+    // Elasticity never costs bits: same fingerprints as the frozen run.
+    assert_eq!(elastic.session_fingerprints(), frozen.session_fingerprints());
+}
+
+#[test]
+fn pressure_drain_gives_shards_back_after_the_burst() {
+    // Same burst-then-tail load: once the 16 realtime sessions finish,
+    // the lone batch tail cannot hold 4 shards' worth of pressure, so
+    // the dispatcher must start draining (and every drained worker is
+    // joined by teardown — the run returning at all pins that).
+    let frozen = run_frozen(burst_workload(), 78);
+    let service = frozen.metrics.compute.mean();
+    let elastic = run_elastic(
+        burst_workload(),
+        78,
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            scale_up_pressure: service * 4.0,
+            scale_down_pressure: service,
+            dwell: Duration::from_millis(1),
+            script: Vec::new(),
+        },
+    );
+    let e = elastic.elastic.as_ref().expect("elastic report");
+    assert!(e.scale_ups >= 1, "{e:?}");
+    assert!(e.scale_downs >= 1, "the post-burst tail must trigger a drain: {e:?}");
+    assert!(
+        e.final_shards < e.peak_shards,
+        "draining must actually shrink the fleet: {e:?}"
+    );
+    assert_eq!(elastic.metrics.scale_downs, e.scale_downs);
+}

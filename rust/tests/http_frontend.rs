@@ -25,6 +25,7 @@ use std::time::Duration;
 use ts_dp::coordinator::qos::QosConfig;
 use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
 use ts_dp::coordinator::workload::WorkloadMix;
+use ts_dp::coordinator::{AutoscaleConfig, ScaleEvent};
 use ts_dp::net::{run_closed_loop, serve_http, Client, HttpOptions, SegmentFetch};
 use ts_dp::policy::mock::MockDenoiser;
 use ts_dp::policy::Denoiser;
@@ -109,6 +110,76 @@ fn http_sessions_are_bit_identical_to_in_process() {
         let session = &http.sessions[*id as usize];
         assert_eq!(&session.segment_digests, digests, "session {id} wire digests");
     }
+}
+
+#[test]
+fn http_sessions_survive_live_resharding_bit_identically() {
+    // Elastic tentpole over the wire: the gateway funnels requests to
+    // the dispatcher, which scales 1 -> 3 mid-load and drains back to 1
+    // mid-session — while four concurrent HTTP clients stream segments.
+    // Served bits must equal the in-process single-shard reference.
+    const SEED: u64 = 901;
+    let sessions = 4usize;
+
+    // In-process reference fleet (static, one shard). All four specs
+    // are identical, so fingerprints depend only on session id — which
+    // makes the racy open order of concurrent clients immaterial.
+    let mut in_proc_opts = base_opts(SEED);
+    in_proc_opts.workload = WorkloadMix::parse("lift:ts_dp*4").unwrap().build();
+    let reference = serve_with(|_| MockDenoiser::with_bias(0.05), &in_proc_opts).unwrap();
+
+    let mut opts = base_opts(SEED);
+    opts.autoscale = Some(AutoscaleConfig {
+        min_shards: 1,
+        max_shards: 3,
+        script: vec![
+            ScaleEvent { after_requests: 6, shards: 3 },
+            ScaleEvent { after_requests: 20, shards: 1 },
+        ],
+        ..AutoscaleConfig::default()
+    });
+    let (addr, server) = spawn_server(opts, sessions, |_| MockDenoiser::with_bias(0.05));
+
+    // Four concurrent closed-loop clients, one session each, so the
+    // fleet holds live HTTP sessions across both scale events.
+    let drivers: Vec<_> = (0..sessions)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> anyhow::Result<usize> {
+                let mut client = Client::connect(&addr)?;
+                let id = client.open_session("lift:ts_dp", None, None)?;
+                let mut served = 0usize;
+                loop {
+                    match client.next_segment(id, &mut |_| {})? {
+                        SegmentFetch::Served { .. } => served += 1,
+                        SegmentFetch::Shed { .. } => {
+                            anyhow::bail!("no QoS configured, nothing may shed")
+                        }
+                        SegmentFetch::Done => break,
+                    }
+                }
+                client.close_session(id)?;
+                Ok(served)
+            })
+        })
+        .collect();
+    for d in drivers {
+        let served = d.join().expect("client thread").expect("closed loop");
+        assert!(served > 0, "every session must stream segments");
+    }
+    let http = server.join().expect("server thread").expect("serve_http");
+
+    assert_eq!(
+        http.session_fingerprints(),
+        reference.session_fingerprints(),
+        "HTTP serving must be bit-identical across live resharding"
+    );
+    let e = http.elastic.as_ref().expect("elastic fleet must report");
+    assert!(e.scale_ups >= 2, "script scales 1 -> 3: {e:?}");
+    assert!(e.scale_downs >= 2, "script drains 3 -> 1: {e:?}");
+    assert!(e.migrations >= 1, "concurrent residents must migrate: {e:?}");
+    assert_eq!(e.final_shards, 1, "{e:?}");
+    assert_eq!(http.metrics.migrations, e.migrations);
 }
 
 /// A denoiser whose target calls take real wall time, making tight

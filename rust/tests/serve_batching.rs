@@ -12,6 +12,7 @@ use ts_dp::config::{AdaptMode, DemoStyle, Method, Task};
 use ts_dp::coordinator::batcher::Policy;
 use ts_dp::coordinator::server::{serve_with, ServeOptions, ServeReport};
 use ts_dp::coordinator::workload::{SessionSpec, WorkloadMix};
+use ts_dp::coordinator::{AutoscaleConfig, ScaleEvent};
 use ts_dp::drafter::{DistilledDrafter, DrafterModel};
 use ts_dp::policy::mock::MockDenoiser;
 use ts_dp::scheduler::SchedulerPolicy;
@@ -346,6 +347,115 @@ fn mixed_fleet_fuses_on_every_shard() {
     let shard_set: std::collections::BTreeSet<usize> =
         report.sessions.iter().map(|s| s.shard).collect();
     assert_eq!(shard_set.len(), 2, "router must use both shards");
+}
+
+/// Serve `workload` on an **elastic** fleet that reshapes itself live
+/// according to `script` ([`ScaleEvent`]s keyed on forwarded request
+/// count), migrating resident sessions as shards drain.
+fn run_elastic_fleet(
+    workload: Vec<SessionSpec>,
+    script: Vec<ScaleEvent>,
+    max_batch: usize,
+    policy: Policy,
+) -> ServeReport {
+    let opts = ServeOptions {
+        workload,
+        queue_capacity: 64,
+        policy,
+        scheduler: None,
+        seed: 1234,
+        max_batch,
+        batch_window: Duration::from_micros(200),
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            script,
+            ..AutoscaleConfig::default()
+        }),
+        ..ServeOptions::default()
+    };
+    serve_with(|_shard| MockDenoiser::with_bias(0.05), &opts).unwrap()
+}
+
+#[test]
+fn live_resharding_is_lossless() {
+    // Tentpole acceptance: shard invariance extends to *live
+    // resharding*. A scripted schedule scales the fleet up mid-load and
+    // then drains it back down mid-session (forcing migrations), and
+    // served bits + NFE must equal a never-resharded fixed fleet's —
+    // across both dispatch policies.
+    let baseline = fingerprint(&run_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200));
+    assert_eq!(baseline.len(), 4);
+    // ~13 segments per episode per session => ~50 requests total, so
+    // both events fire well inside the run.
+    let script = || {
+        vec![
+            ScaleEvent { after_requests: 6, shards: 3 },
+            ScaleEvent { after_requests: 24, shards: 1 },
+        ]
+    };
+    for policy in [Policy::Fifo, Policy::Fair] {
+        for max_batch in [1usize, 8] {
+            let report = run_elastic_fleet(uniform_workload(), script(), max_batch, policy);
+            assert_eq!(
+                fingerprint(&report),
+                baseline,
+                "live resharding must be bit-identical \
+                 (policy {policy:?}, max_batch {max_batch})"
+            );
+            let e = report.elastic.as_ref().expect("elastic fleet must report");
+            assert!(e.scale_ups >= 2, "script scales 1 -> 3: {e:?}");
+            assert!(e.scale_downs >= 2, "script drains 3 -> 1: {e:?}");
+            assert!(e.migrations >= 1, "draining occupied shards must migrate: {e:?}");
+            assert_eq!(e.peak_shards, 3, "{e:?}");
+            assert_eq!(e.final_shards, 1, "{e:?}");
+            assert_eq!(
+                report.metrics.migrations, e.migrations,
+                "fleet metrics must mirror the elastic report"
+            );
+        }
+    }
+}
+
+#[test]
+fn live_resharding_is_lossless_for_wave_batched_drafters() {
+    // Same invariance through the wave-batched drafter path: migrated
+    // sessions leave nothing behind in the source shard's KV arena
+    // (chains are round-local), so resharding cannot leak into bits.
+    let baseline =
+        fingerprint(&run_distilled_wave_fleet(uniform_workload(), 1, 1, Policy::Fifo, 200));
+    let opts = ServeOptions {
+        workload: uniform_workload(),
+        queue_capacity: 64,
+        policy: Policy::Fair,
+        scheduler: None,
+        seed: 1234,
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            script: vec![
+                ScaleEvent { after_requests: 6, shards: 2 },
+                ScaleEvent { after_requests: 20, shards: 1 },
+            ],
+            ..AutoscaleConfig::default()
+        }),
+        ..ServeOptions::default()
+    };
+    let report = serve_with(
+        |_shard| {
+            DistilledDrafter::new(
+                Box::new(MockDenoiser::with_bias(0.05)),
+                DrafterModel::init(&mut Rng::seed_from_u64(0xd)),
+            )
+        },
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(fingerprint(&report), baseline);
+    let e = report.elastic.as_ref().unwrap();
+    assert!(e.scale_ups >= 1 && e.scale_downs >= 1, "{e:?}");
 }
 
 #[test]

@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Markdown hygiene gate: link and anchor checking for the repo docs.
+
+Usage:
+    check_docs.py [--root DIR]
+
+Checks `README.md`, `ROADMAP.md`, and `docs/*.md`:
+
+  * every relative link target resolves to a real file or directory
+    inside the repository (no dead paths, no escapes above the root);
+  * every `#anchor` — same-file or cross-file — matches a heading in
+    its target document, using GitHub's slugification (lowercase,
+    punctuation stripped, spaces to hyphens, `-N` suffixes for
+    duplicate headings);
+  * links inside fenced code blocks and inline code spans are ignored
+    (they are examples, not navigation);
+  * external schemes (`http:`, `https:`, `mailto:`) are skipped — CI
+    has no network and availability of other people's servers is not a
+    property of this repo.
+
+Exit code 0 when every link holds, 1 with one diagnostic per broken
+link otherwise.
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# Inline links and images: [text](target) / ![alt](target), with an
+# optional "title". Angle-bracketed targets (<...>) are unwrapped.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.+?)\s*$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp:")
+
+
+def strip_code(text):
+    """Blank out fenced code blocks and inline code spans, preserving
+    line numbers so diagnostics stay accurate."""
+    out = []
+    in_fence = False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        if in_fence:
+            out.append("")
+        else:
+            # Inline spans: `...` cannot contain backticks, so a lazy
+            # pairwise strip is exact.
+            out.append(re.sub(r"`[^`]*`", "``", line))
+    return "\n".join(out)
+
+
+def github_slug(heading, seen):
+    """GitHub's anchor algorithm: drop markdown emphasis/code markers,
+    lowercase, strip everything but word chars / spaces / hyphens,
+    spaces to hyphens, then -1/-2/... for duplicates."""
+    text = re.sub(r"[`*_]", "", heading)
+    # Inline links in headings anchor on their text, not their target.
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    slug = re.sub(r"[^\w\- ]", "", text.lower()).replace(" ", "-")
+    if slug in seen:
+        seen[slug] += 1
+        return f"{slug}-{seen[slug]}"
+    seen[slug] = 0
+    return slug
+
+
+def heading_slugs(path, cache):
+    if path in cache:
+        return cache[path]
+    slugs, seen = set(), {}
+    body = strip_code(path.read_text(encoding="utf-8"))
+    for line in body.splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            slugs.add(github_slug(m.group(2), seen))
+    cache[path] = slugs
+    return slugs
+
+
+def check_file(md, root, cache, errors):
+    text = md.read_text(encoding="utf-8")
+    clean = strip_code(text)
+    for lineno, line in enumerate(clean.splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("//"):
+                continue
+            where = f"{md.relative_to(root)}:{lineno}"
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                try:
+                    dest.relative_to(root)
+                except ValueError:
+                    errors.append(f"{where}: link escapes the repo: {target}")
+                    continue
+                if not dest.exists():
+                    errors.append(f"{where}: dead link: {target}")
+                    continue
+            else:
+                dest = md
+            if anchor:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    errors.append(
+                        f"{where}: anchor on a non-markdown target: {target}"
+                    )
+                    continue
+                if anchor.lower() not in heading_slugs(dest, cache):
+                    errors.append(
+                        f"{where}: missing anchor "
+                        f"#{anchor} in {dest.relative_to(root)}"
+                    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repository root (default: the parent of scripts/)",
+    )
+    args = ap.parse_args()
+    root = args.root.resolve()
+
+    files = []
+    for name in ("README.md", "ROADMAP.md"):
+        p = root / name
+        if not p.exists():
+            print(f"FAIL: required doc missing: {name}", file=sys.stderr)
+            return 1
+        files.append(p)
+    files.extend(sorted((root / "docs").glob("*.md")))
+
+    cache, errors = {}, []
+    for md in files:
+        check_file(md, root, cache, errors)
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        print(f"\n{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"docs ok: {len(files)} files link-checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

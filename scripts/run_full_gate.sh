@@ -22,8 +22,10 @@
 #   6. fast-mode benches emitting BENCH_*.json at the repo root;
 #   7. scripts/check_bench_regression.py over those files: p95 ceilings,
 #      same-run ratio gates (batched >= 2x serial drafter rollouts,
-#      lanes >= 2x forced-scalar kernels), and the int8-vs-f32
-#      accept-parity gate.
+#      lanes >= 2x forced-scalar kernels, elastic autoscale rt-p95 <=
+#      frozen), and the int8-vs-f32 accept-parity gate;
+#   8. scripts/check_docs.py over the Markdown: every relative link
+#      resolves and every #anchor matches a real heading.
 #
 # After a first successful run on real hardware: commit the blessed
 # rust/tests/golden/serve_trace.txt and the BENCH_*.json files, and copy
@@ -50,14 +52,14 @@ command -v python3 >/dev/null || { echo "error: python3 not found" >&2; exit 1; 
 GOLDEN=rust/tests/golden/serve_trace.txt
 # Explicit test list for the scalar leg: every integration suite except
 # the path-dependent golden trace (mirrors .github/workflows/ci.yml).
-SCALAR_TESTS=(--test ddpm_parity --test drafter_distill --test http_frontend
-    --test obs_trace --test online_adapt --test qos_serving
-    --test runtime_integration --test serve_batching)
+SCALAR_TESTS=(--test autoscale --test ddpm_parity --test drafter_distill
+    --test http_frontend --test obs_trace --test online_adapt
+    --test qos_serving --test runtime_integration --test serve_batching)
 
-echo "==> [1/7] cargo build --release"
+echo "==> [1/8] cargo build --release"
 (cd rust && cargo build --release)
 
-echo "==> [2/7] cargo test (default lanes kernel path)"
+echo "==> [2/8] cargo test (default lanes kernel path)"
 if [ -f "$GOLDEN" ]; then
     (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q)
 else
@@ -65,10 +67,10 @@ else
     (cd rust && cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
 fi
 
-echo "==> [3/7] cargo test (TSDP_KERNELS=scalar, golden trace excluded)"
+echo "==> [3/8] cargo test (TSDP_KERNELS=scalar, golden trace excluded)"
 (cd rust && TSDP_KERNELS=scalar cargo test -q --lib --bins "${SCALAR_TESTS[@]}")
 
-echo "==> [4/7] golden serve-trace gate"
+echo "==> [4/8] golden serve-trace gate"
 if [ -f "$GOLDEN" ]; then
     (cd rust && TSDP_REQUIRE_GOLDEN=1 cargo test -q --test golden_trace)
 elif [ "$BLESS" = 1 ]; then
@@ -82,7 +84,7 @@ else
     exit 1
 fi
 
-echo "==> [5/7] http-smoke: release binary serving --http, driven by ts-dp client"
+echo "==> [5/8] http-smoke: release binary serving --http, driven by ts-dp client"
 TSDP_BIN=rust/target/release/ts-dp
 HTTP_PORT=$((18000 + RANDOM % 2000))
 HTTP_LOG=$(mktemp)
@@ -116,12 +118,15 @@ grep -q -- "--- fleet ---" "$HTTP_LOG" || {
 rm -f "$HTTP_LOG"
 echo "    http-smoke passed (3 sessions streamed over the wire)"
 
-echo "==> [6/7] fast-mode benches (BENCH_*.json at repo root)"
+echo "==> [6/8] fast-mode benches (BENCH_*.json at repo root)"
 (cd rust && TSDP_BENCH_FAST=1 cargo bench --bench speculative --bench qos)
 
-echo "==> [7/7] perf regression gate"
+echo "==> [7/8] perf regression gate"
 python3 scripts/check_bench_regression.py \
     --baseline scripts/bench_baseline.json \
     BENCH_speculative.json BENCH_qos.json
+
+echo "==> [8/8] docs link + anchor hygiene"
+python3 scripts/check_docs.py
 
 echo "full gate passed."
